@@ -1,0 +1,52 @@
+//! `cargo bench --bench coordinator` — end-to-end service benchmark:
+//! the L3 coordinator serving a mixed transcoding workload (both
+//! directions, all wikipedia-Mars languages) across worker counts.
+//!
+//! This is the system-level complement to the per-engine tables: it
+//! shows the coordinator is not the bottleneck (DESIGN.md §Perf L3
+//! target) by comparing aggregate service throughput against the raw
+//! single-thread engine speed.
+
+use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
+use simdutf_rs::prelude::*;
+use std::time::Instant;
+
+fn run(workers: usize, requests: usize, corpora: &[Corpus]) -> (f64, f64) {
+    let service = TranscodeService::start(ServiceConfig {
+        workers,
+        queue_depth: 1024,
+        engine: EngineChoice::Simd { validate: true },
+    })
+    .expect("service");
+    let started = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let corpus = &corpora[i % corpora.len()];
+        let req = if i % 2 == 0 {
+            Request::utf8(i as u64, corpus.utf8_prefix(16 * 1024).to_vec())
+        } else {
+            Request::utf16(i as u64, corpus.utf16_prefix(8 * 1024).to_vec())
+        };
+        pending.push(service.submit(req));
+    }
+    for rx in pending {
+        assert!(rx.recv().unwrap().ok());
+    }
+    let elapsed = started.elapsed();
+    let snap = service.stats();
+    let gcs = snap.chars as f64 / elapsed.as_secs_f64() / 1e9;
+    let mean_latency_us = snap.mean_latency.as_secs_f64() * 1e6;
+    service.shutdown();
+    (gcs, mean_latency_us)
+}
+
+fn main() {
+    let corpora = simdutf_rs::corpus::generate_collection(Collection::WikipediaMars);
+    let requests = 2000;
+    println!("coordinator end-to-end: {requests} mixed requests (16 KiB utf8 / 8 Kwords utf16)");
+    println!("{:>8} {:>14} {:>16}", "workers", "Gchars/s", "mean latency µs");
+    for workers in [1, 2, 4, 8] {
+        let (gcs, lat) = run(workers, requests, &corpora);
+        println!("{workers:>8} {gcs:>14.3} {lat:>16.1}");
+    }
+}

@@ -1,0 +1,36 @@
+//! `cargo bench --bench corpus_stats` — regenerates Table 4 (dataset
+//! statistics) and reports corpus generation + validation throughput
+//! (the Keiser–Lemire validator is a dependency of the paper's
+//! validating transcoders).
+
+use simdutf_rs::harness::bench::{default_budget, measure};
+use simdutf_rs::prelude::*;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let corpora = simdutf_rs::corpus::generate_collection(Collection::Lipsum);
+    println!("generated {} lipsum corpora in {:?}\n", corpora.len(), t0.elapsed());
+
+    println!(
+        "{}",
+        simdutf_rs::harness::run_section("table4", std::path::Path::new("artifacts")).unwrap()
+    );
+
+    // Validation-only throughput (GB/s) per dataset.
+    println!("Keiser–Lemire validation throughput (GB/s, lipsum)");
+    for corpus in &corpora {
+        let r = measure(
+            || {
+                std::hint::black_box(validate_utf8(&corpus.utf8));
+            },
+            default_budget(),
+            3,
+        );
+        println!(
+            "  {:>10}  {:>6.2}",
+            corpus.name(),
+            corpus.utf8.len() as f64 / r.min.as_secs_f64() / 1e9
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench utf16_to_utf8` — regenerates the paper's UTF-16
+//! → UTF-8 evaluation: Table 9 (lipsum), Figure 6 (bar subset), Table 10
+//! (wikipedia-Mars), plus Figure 7 (speed vs input length, both
+//! directions).
+
+fn main() {
+    for section in ["table9", "fig6", "table10", "fig7"] {
+        let out = simdutf_rs::harness::run_section(section, std::path::Path::new("artifacts"))
+            .expect("known section");
+        println!("{out}");
+    }
+}

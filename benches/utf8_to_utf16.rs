@@ -1,0 +1,16 @@
+//! `cargo bench --bench utf8_to_utf16` — regenerates the paper's UTF-8 →
+//! UTF-16 evaluation: Table 5 (non-validating, lipsum), Table 6
+//! (validating, lipsum), Figure 5 (bar subset), Table 7 (validating,
+//! wikipedia-Mars) and Table 8 (path counters, Arabic lipsum).
+//!
+//! Methodology follows §6.1: repeated in-memory conversions, minimum
+//! timing, gigacharacters per second. Budget per cell is controlled by
+//! `SIMDUTF_BENCH_BUDGET_MS` (default 200 ms).
+
+fn main() {
+    for section in ["table5", "table6", "fig5", "table7", "table8"] {
+        let out = simdutf_rs::harness::run_section(section, std::path::Path::new("artifacts"))
+            .expect("known section");
+        println!("{out}");
+    }
+}

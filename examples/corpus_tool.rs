@@ -1,0 +1,44 @@
+//! Corpus tool: materialize the paper's datasets and print Table 4.
+//!
+//! ```sh
+//! cargo run --release --example corpus_tool [out_dir]
+//! ```
+//!
+//! Writes each generated dataset as `<name>.utf8.txt` and
+//! `<name>.utf16le.bin` under `out_dir` (default `corpus_out/`), then
+//! prints the Table 4 statistics computed from the files.
+
+use simdutf_rs::prelude::*;
+use std::io::Write;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let out_dir = args.first().map(String::as_str).unwrap_or("corpus_out");
+    std::fs::create_dir_all(out_dir).expect("create output dir");
+
+    for (label, collection) in
+        [("lipsum", Collection::Lipsum), ("wikipedia-mars", Collection::WikipediaMars)]
+    {
+        for corpus in simdutf_rs::corpus::generate_collection(collection) {
+            let base = format!("{label}-{}", corpus.name().to_lowercase());
+            let p8 = Path::new(out_dir).join(format!("{base}.utf8.txt"));
+            std::fs::write(&p8, &corpus.utf8).expect("write utf8");
+            let p16 = Path::new(out_dir).join(format!("{base}.utf16le.bin"));
+            let mut f = std::fs::File::create(&p16).expect("create utf16");
+            for w in &corpus.utf16 {
+                f.write_all(&w.to_le_bytes()).expect("write utf16");
+            }
+            // Verify what we wrote round-trips through our own engines.
+            let data = std::fs::read(&p8).unwrap();
+            assert!(validate_utf8(&data), "{base} must be valid");
+            let words = OurUtf8ToUtf16::validating().convert_to_vec(&data).unwrap();
+            assert_eq!(words, corpus.utf16, "{base} round trip");
+        }
+    }
+    println!("datasets written to {out_dir}/\n");
+    println!(
+        "{}",
+        simdutf_rs::harness::run_section("table4", Path::new("artifacts")).unwrap()
+    );
+}

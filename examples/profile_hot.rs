@@ -1,0 +1,48 @@
+//! Hot-path profiling driver: repeatedly converts one corpus so `perf
+//! record` / sampling profilers see a stable hot loop.
+//! Usage: profile_hot [lang] [direction] [seconds]
+use simdutf_rs::prelude::*;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let lang = args.first().map(String::as_str).unwrap_or("Chinese");
+    let dir = args.get(1).map(String::as_str).unwrap_or("8to16");
+    let secs: f64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(2.0);
+    let language = [
+        Language::Arabic, Language::Chinese, Language::Emoji, Language::Hebrew,
+        Language::Hindi, Language::Japanese, Language::Korean, Language::Latin,
+        Language::Russian,
+    ]
+    .into_iter()
+    .find(|l| l.name() == lang)
+    .expect("unknown language");
+    let corpus = Corpus::generate(language, Collection::Lipsum);
+    let chars = corpus.chars();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    match dir {
+        "8to16" => {
+            let engine = OurUtf8ToUtf16::validating();
+            let mut dst = vec![0u16; simdutf_rs::transcode::utf16_capacity_for(corpus.utf8.len())];
+            while start.elapsed().as_secs_f64() < secs {
+                std::hint::black_box(engine.convert(&corpus.utf8, &mut dst).unwrap());
+                iters += 1;
+            }
+        }
+        "16to8" => {
+            let engine = OurUtf16ToUtf8::validating();
+            let mut dst = vec![0u8; simdutf_rs::transcode::utf8_capacity_for(corpus.utf16.len())];
+            while start.elapsed().as_secs_f64() < secs {
+                std::hint::black_box(engine.convert(&corpus.utf16, &mut dst).unwrap());
+                iters += 1;
+            }
+        }
+        _ => panic!("direction 8to16|16to8"),
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    println!(
+        "{lang} {dir}: {:.3} Gc/s ({iters} iters, {chars} chars)",
+        iters as f64 * chars as f64 / elapsed / 1e9
+    );
+}

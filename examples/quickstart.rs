@@ -1,0 +1,54 @@
+//! Quickstart: the library's public API in one file.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use simdutf_rs::prelude::*;
+
+fn main() {
+    // --- transcode UTF-8 → UTF-16 (validating) ---
+    let text = "Transcoding: ASCII, naïveté, 漢字, עברית, हिन्दी, 🙂🚀";
+    let engine = OurUtf8ToUtf16::validating();
+    let utf16 = engine.convert_to_vec(text.as_bytes()).expect("valid UTF-8");
+    assert_eq!(String::from_utf16(&utf16).unwrap(), text);
+    println!("UTF-8 → UTF-16: {} bytes → {} code units", text.len(), utf16.len());
+
+    // --- and back ---
+    let back = OurUtf16ToUtf8::validating().convert_to_vec(&utf16).expect("valid UTF-16");
+    assert_eq!(back, text.as_bytes());
+    println!("UTF-16 → UTF-8: {} code units → {} bytes", utf16.len(), back.len());
+
+    // --- validation without transcoding ---
+    assert!(validate_utf8(text.as_bytes()));
+    assert!(!validate_utf8(&[0xC0, 0x80])); // overlong NUL — rejected
+    assert!(validate_utf16le(&utf16));
+    println!("validators: ok");
+
+    // --- invalid input is an error, not garbage ---
+    let mut corrupted = text.as_bytes().to_vec();
+    corrupted[20] = 0xFF;
+    assert_eq!(engine.convert_to_vec(&corrupted), None);
+    println!("corrupted input rejected: ok");
+
+    // --- the baselines share the same traits ---
+    let baselines: Vec<Box<dyn Utf8ToUtf16>> = vec![
+        Box::new(IcuLikeTranscoder),
+        Box::new(LlvmTranscoder),
+        Box::new(FiniteTranscoder),
+        Box::new(SteagallTranscoder),
+        Box::new(Utf8LutTranscoder::validating()),
+    ];
+    for b in &baselines {
+        assert_eq!(b.convert_to_vec(text.as_bytes()).unwrap(), utf16, "{}", b.name());
+    }
+    println!("all {} baselines agree with ours", baselines.len());
+
+    // --- generated benchmark corpora (Table 4) ---
+    let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
+    let stats = corpus.stats();
+    println!(
+        "Japanese lipsum corpus: {} chars, {:.1} UTF-8 bytes/char, {:.0}% 3-byte",
+        stats.chars, stats.utf8_bytes_per_char, stats.pct_by_len[2]
+    );
+}

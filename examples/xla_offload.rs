@@ -1,0 +1,74 @@
+//! XLA/PJRT batch-offload example: the three-layer path end to end.
+//!
+//! Loads the AOT-compiled JAX/Pallas graphs (`make artifacts`), pushes a
+//! document through the PJRT CPU client, verifies the output against the
+//! native SIMD engine, and runs the service with the XLA engine.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example xla_offload
+//! ```
+
+use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
+use simdutf_rs::prelude::*;
+use simdutf_rs::runtime::XlaEngine;
+use std::path::PathBuf;
+
+fn main() {
+    let artifacts = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let engine = match XlaEngine::load(&artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("failed to load artifacts from {artifacts:?}: {e:#}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", engine.platform());
+
+    // Direct batch execution.
+    let text = "offload test — ascii, héllo wörld, 漢字テスト, 🙂🚀 ".repeat(40);
+    let words = engine
+        .utf8_to_utf16_stream(text.as_bytes())
+        .expect("execution")
+        .expect("valid input");
+    let native = OurUtf8ToUtf16::validating().convert_to_vec(text.as_bytes()).unwrap();
+    assert_eq!(words, native, "XLA path must agree with the native SIMD path");
+    println!("UTF-8 → UTF-16 via XLA: {} bytes → {} units (matches native)", text.len(), words.len());
+
+    let bytes = engine.utf16_to_utf8_stream(&words).expect("execution").expect("valid");
+    assert_eq!(bytes, text.as_bytes());
+    println!("UTF-16 → UTF-8 via XLA: round trip ok");
+
+    // Invalid input is rejected by the validation kernel inside the graph.
+    let mut bad = text.clone().into_bytes();
+    bad[100] = 0xFF;
+    assert_eq!(engine.utf8_to_utf16_stream(&bad).unwrap(), None);
+    println!("validation kernel rejects corrupted input: ok");
+
+    // The coordinator can run entirely on the XLA engine.
+    let service = TranscodeService::start(ServiceConfig {
+        workers: 2,
+        queue_depth: 64,
+        engine: EngineChoice::Xla { artifacts_dir: artifacts.clone() },
+    })
+    .expect("service");
+    let mut pending = Vec::new();
+    for i in 0..16u64 {
+        pending.push(service.submit(Request::utf8(i, text.clone().into_bytes())));
+    }
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.utf16.as_deref().unwrap(), &native[..]);
+    }
+    println!("coordinator on XLA engine: 16/16 responses verified");
+    println!("{}", service.stats());
+    service.shutdown();
+
+    // Ablation: XLA vs native on the same content.
+    println!(
+        "\n{}",
+        simdutf_rs::harness::run_section("xla", &artifacts).unwrap()
+    );
+}

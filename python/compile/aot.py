@@ -1,0 +1,57 @@
+"""AOT: lower the L2 graphs to HLO text for the Rust PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's bundled XLA (xla_extension 0.5.1) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md and gen_hlo.py.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="legacy single-file alias")
+    parser.add_argument("--batch", type=int, default=model.AOT_BATCH)
+    args = parser.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    jobs = {
+        f"utf8_to_utf16_b{args.batch}.hlo.txt": model.lower_utf8_to_utf16(args.batch),
+        f"utf16_to_utf8_b{args.batch}.hlo.txt": model.lower_utf16_to_utf8(args.batch),
+    }
+    for name, lowered in jobs.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+    # Marker consumed by the Makefile's up-to-date check.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("see *.hlo.txt artifacts in this directory\n")
+
+
+if __name__ == "__main__":
+    main()

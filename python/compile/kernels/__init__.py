@@ -1,0 +1,34 @@
+"""L1: Pallas kernels for batch Unicode transcoding.
+
+The paper's hot loop is a pshufb-against-precomputed-masks pipeline
+(Figs. 2-4).  That idiom does not map onto a TPU: there is no byte-level
+arbitrary shuffle against VMEM, and branching per 12-byte window defeats
+the vector units.  The kernels here re-derive the paper's dataflow for a
+TPU-style target (DESIGN.md section "Hardware adaptation"):
+
+* the shuffle mask is *computed* instead of loaded: a prefix-sum over the
+  lead-byte mask yields each character's byte indexes, and a gather
+  (``take_along_axis``) replaces ``pshufb`` -- the paper itself notes the
+  compute-the-mask alternative in section 4;
+* the per-window branch on the bitset becomes a branch-free select over
+  all four character lengths;
+* the variable-length output compaction becomes a cumulative-sum of
+  per-character output widths followed by a one-hot matrix product --
+  scatter as matmul, which is the MXU-friendly formulation;
+* the Keiser-Lemire validator's three 16-entry ``pshufb`` table lookups
+  become three 16-entry ``take`` gathers over nibbles.
+
+All kernels run under ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom calls); the BlockSpec tiling is still shaped for a
+(rows x 64) VMEM-resident tile per grid step.
+"""
+
+from .utf8_to_utf16 import utf8_to_utf16_blocks
+from .utf16_to_utf8 import utf16_to_utf8_blocks
+from .validate import validate_utf8_blocks
+
+__all__ = [
+    "utf8_to_utf16_blocks",
+    "utf16_to_utf8_blocks",
+    "validate_utf8_blocks",
+]

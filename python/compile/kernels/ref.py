@@ -1,0 +1,124 @@
+"""Pure-Python/NumPy reference oracles for the kernels.
+
+These use CPython's own codecs (the most battle-tested Unicode
+implementation available) as ground truth, shaped into the same
+block-batch layout the kernels consume.  Every kernel result is compared
+against these in ``python/tests``.
+"""
+
+import numpy as np
+
+BLOCK = 64
+OUT_WIDTH = 192
+
+
+def blocks_from_utf8(data: bytes, block: int = BLOCK):
+    """Split UTF-8 bytes into character-aligned zero-padded blocks.
+
+    Mirrors the Rust chunker: greedy blocks of up to ``block`` bytes,
+    trimmed back to a character boundary.  Returns (blocks, lengths) as
+    int32 arrays of shape (B, block) / (B,).
+    """
+    rows = []
+    lens = []
+    i = 0
+    while i < len(data):
+        end = min(i + block, len(data))
+        # trim back to a boundary (first byte of next char is not a
+        # continuation byte)
+        while end < len(data) and end > i and (data[end] & 0xC0) == 0x80:
+            end -= 1
+        if end == i:  # pathological (invalid) input: give up on alignment
+            end = min(i + block, len(data))
+        chunk = data[i:end]
+        row = np.zeros(block, dtype=np.int32)
+        row[: len(chunk)] = np.frombuffer(chunk, dtype=np.uint8)
+        rows.append(row)
+        lens.append(len(chunk))
+        i = end
+    if not rows:
+        rows = [np.zeros(block, dtype=np.int32)]
+        lens = [0]
+    return np.stack(rows), np.array(lens, dtype=np.int32)
+
+
+def blocks_from_utf16(units, block: int = BLOCK):
+    """Split UTF-16 code units into pair-aligned zero-padded blocks."""
+    units = list(units)
+    rows = []
+    lens = []
+    i = 0
+    while i < len(units):
+        end = min(i + block, len(units))
+        # do not split a surrogate pair
+        if end < len(units) and 0xD800 <= units[end - 1] < 0xDC00:
+            end -= 1
+        chunk = units[i:end]
+        row = np.zeros(block, dtype=np.int32)
+        row[: len(chunk)] = np.array(chunk, dtype=np.int32)
+        rows.append(row)
+        lens.append(len(chunk))
+        i = end
+    if not rows:
+        rows = [np.zeros(block, dtype=np.int32)]
+        lens = [0]
+    return np.stack(rows), np.array(lens, dtype=np.int32)
+
+
+def pad_batch(blocks, lengths, multiple):
+    """Pad the batch dimension to a multiple (kernels tile by BLOCK_ROWS)."""
+    b = blocks.shape[0]
+    rem = (-b) % multiple
+    if rem:
+        blocks = np.concatenate([blocks, np.zeros((rem, blocks.shape[1]), blocks.dtype)])
+        lengths = np.concatenate([lengths, np.zeros(rem, lengths.dtype)])
+    return blocks, lengths
+
+
+def utf8_to_utf16_ref(blocks, lengths):
+    """Reference: per-row UTF-8 -> UTF-16LE via Python codecs."""
+    batch, width = blocks.shape
+    words = np.zeros((batch, width), dtype=np.int32)
+    counts = np.zeros(batch, dtype=np.int32)
+    for r in range(batch):
+        raw = bytes(blocks[r, : lengths[r]].astype(np.uint8).tolist())
+        units = np.frombuffer(
+            raw.decode("utf-8").encode("utf-16-le"), dtype=np.uint16
+        ).astype(np.int32)
+        words[r, : len(units)] = units
+        counts[r] = len(units)
+    return words, counts
+
+
+def validate_utf8_ref(blocks, lengths):
+    """Reference: per-row UTF-8 validity via Python codecs."""
+    batch = blocks.shape[0]
+    ok = np.zeros(batch, dtype=bool)
+    for r in range(batch):
+        raw = bytes(blocks[r, : lengths[r]].astype(np.uint8).tolist())
+        try:
+            raw.decode("utf-8", errors="strict")
+            ok[r] = True
+        except UnicodeDecodeError:
+            ok[r] = False
+    return ok
+
+
+def utf16_to_utf8_ref(blocks, lengths):
+    """Reference: per-row UTF-16 -> UTF-8 via Python codecs."""
+    batch, width = blocks.shape
+    out = np.zeros((batch, OUT_WIDTH), dtype=np.int32)
+    counts = np.zeros(batch, dtype=np.int32)
+    valid = np.zeros(batch, dtype=bool)
+    for r in range(batch):
+        units = blocks[r, : lengths[r]].astype(np.uint16)
+        raw = units.tobytes()
+        try:
+            enc = raw.decode("utf-16-le", errors="strict").encode("utf-8")
+            arr = np.frombuffer(enc, dtype=np.uint8).astype(np.int32)
+            out[r, : len(arr)] = arr
+            counts[r] = len(arr)
+            valid[r] = True
+        except UnicodeDecodeError:
+            valid[r] = False
+    return out, counts, valid

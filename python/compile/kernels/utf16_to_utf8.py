@@ -1,0 +1,143 @@
+"""UTF-16 -> UTF-8 block transcoding kernel (the paper's Algorithm 4
+dataflow, reformulated branch-free for a TPU-style target).
+
+Block contract: each row is up to 64 UTF-16 code units (zero-padded),
+surrogate pairs never straddle rows (the chunker splits on character
+boundaries).
+
+Per row the kernel emits up to 192 UTF-8 bytes (worst case: 64 BMP
+3-byte characters) plus the byte count and a validity flag (lone
+surrogates are the only way UTF-16 can be invalid -- paper section 3).
+The expansion step mirrors Algorithm 4's 32-bit-lane cast; compaction is
+the same one-hot matmul scatter as the UTF-8 -> UTF-16 kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+OUT_WIDTH = 192  # 64 units x up to 3 bytes each
+
+
+def _shift_left(x, fill=0):
+    return jnp.concatenate(
+        [x[:, 1:], jnp.full((x.shape[0], 1), fill, x.dtype)], axis=1
+    )
+
+
+def _shift_right(x, fill=0):
+    return jnp.concatenate(
+        [jnp.full((x.shape[0], 1), fill, x.dtype), x[:, :-1]], axis=1
+    )
+
+
+def _transcode_tile(x, n):
+    """(rows, 64) int32 UTF-16 units -> (bytes (rows, 192), counts, valid)."""
+    rows, width = x.shape
+    pos = jnp.arange(width, dtype=jnp.int32)[None, :]
+    in_range = pos < n[:, None]
+    w = jnp.where(in_range, x, 0)
+
+    is_hi = (w >> 10) == 0x36  # 0xD800..0xDBFF
+    is_lo = (w >> 10) == 0x37  # 0xDC00..0xDFFF
+    next_w = _shift_left(w)
+    next_is_lo = _shift_left(is_lo.astype(jnp.int32)) == 1
+    prev_is_hi = _shift_right(is_hi.astype(jnp.int32)) == 1
+
+    # Validation (Algorithm 4 case 4 is the only case needing it).
+    bad = (is_hi & ~next_is_lo) | (is_lo & ~prev_is_hi)
+    valid = jnp.sum((bad & in_range).astype(jnp.int32), axis=1) == 0
+
+    # A unit starts a character unless it is the low half of a pair.
+    is_start = in_range & ~(is_lo & prev_is_hi)
+    cp = jnp.where(
+        is_hi, 0x10000 + ((w - 0xD800) << 10) + (next_w - 0xDC00), w
+    )
+
+    # Byte length per starting unit (1-4).
+    blen = jnp.where(
+        cp < 0x80, 1, jnp.where(cp < 0x800, 2, jnp.where(cp < 0x10000, 3, 4))
+    )
+    blen = jnp.where(is_start, blen, 0)
+
+    # The four candidate bytes per character (Algorithm 4's expansion,
+    # all classes at once).
+    b_of = [
+        # leading byte by length
+        jnp.where(
+            blen == 1,
+            cp,
+            jnp.where(
+                blen == 2,
+                0xC0 | (cp >> 6),
+                jnp.where(blen == 3, 0xE0 | (cp >> 12), 0xF0 | (cp >> 18)),
+            ),
+        ),
+        jnp.where(
+            blen == 2,
+            0x80 | (cp & 0x3F),
+            jnp.where(
+                blen == 3, 0x80 | ((cp >> 6) & 0x3F), 0x80 | ((cp >> 12) & 0x3F)
+            ),
+        ),
+        jnp.where(blen == 3, 0x80 | (cp & 0x3F), 0x80 | ((cp >> 6) & 0x3F)),
+        0x80 | (cp & 0x3F),
+    ]
+
+    # Compaction: exclusive prefix sum of byte widths, one-hot scatter.
+    out_pos = jnp.cumsum(blen, axis=1) - blen
+    counts = jnp.sum(blen, axis=1)
+    slot = jnp.arange(OUT_WIDTH, dtype=jnp.int32)[None, None, :]
+    out = jnp.zeros((rows, OUT_WIDTH), dtype=jnp.int32)
+    for j in range(4):
+        pj = jnp.where(blen > j, out_pos + j, OUT_WIDTH)[:, :, None]
+        onehot = (pj == slot).astype(jnp.int32)
+        out = out + jnp.einsum("rk,rkj->rj", b_of[j], onehot)
+    return out, counts, valid
+
+
+def _kernel(x_ref, n_ref, bytes_ref, counts_ref, valid_ref):
+    out, counts, valid = _transcode_tile(x_ref[...], n_ref[...])
+    bytes_ref[...] = out
+    counts_ref[...] = counts
+    valid_ref[...] = valid
+
+
+@functools.partial(jax.jit, static_argnames=())
+def utf16_to_utf8_blocks(blocks, lengths):
+    """Transcode a batch of UTF-16 blocks (64 units) to UTF-8 bytes.
+
+    Args:
+      blocks: (B, 64) int32 UTF-16 code units, zero-padded.
+      lengths: (B,) int32 valid unit count per row.
+
+    Returns:
+      (bytes, counts, valid): (B, 192) int32 UTF-8 byte values, (B,)
+      int32 byte counts, and (B,) bool validity flags.
+    """
+    batch, width = blocks.shape
+    assert width == 64
+    assert batch % BLOCK_ROWS == 0
+    grid = (batch // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, width), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, OUT_WIDTH), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, OUT_WIDTH), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.bool_),
+        ],
+        interpret=True,
+    )(blocks, lengths)

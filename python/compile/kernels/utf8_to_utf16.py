@@ -1,0 +1,130 @@
+"""UTF-8 -> UTF-16 block transcoding kernel (the paper's Algorithm 2/3
+dataflow, reformulated gather-first for a TPU-style target).
+
+Block contract (enforced by the Rust chunker in ``rust/src/coordinator``):
+
+* each row is one 64-byte block of UTF-8, zero-padded after ``length``;
+* rows start and end on character boundaries;
+* rows contain valid UTF-8 (run the validation kernel first otherwise).
+
+Outputs per row: 64 UTF-16 code units (int32, zero-padded) and the count
+of units written.  A 64-byte block yields at most 64 units (all-ASCII)
+and at least 16 (all 4-byte characters -> 32 units), so the output tile
+is the same (rows, 64) shape as the input.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step: a (8, 64) int32 input tile plus the intermediate
+# (8, 64, 64) one-hot is the VMEM budget driver; see DESIGN.md "Perf".
+BLOCK_ROWS = 8
+
+
+def _transcode_tile(x, n):
+    """Transcode a (rows, 64) int32 byte tile; n is (rows,) lengths.
+
+    Returns (words (rows, 64) int32, counts (rows,) int32).
+    """
+    rows, width = x.shape
+    pos = jnp.arange(width, dtype=jnp.int32)[None, :]  # (1, 64)
+    in_range = pos < n[:, None]
+
+    # --- character segmentation (Algorithm 3 lines 4-9, computed) ---
+    is_cont = ((x >> 6) == 0b10) & in_range
+    is_lead = (~is_cont) & in_range
+    # Start index of character k, in order: sort the lead positions.
+    # (The SIMD original derives the same information from the
+    # end-of-character bitset + table; here it is a sort/prefix-sum.)
+    starts = jnp.sort(jnp.where(is_lead, pos, width), axis=1)  # (rows, 64)
+    nchars = jnp.sum(is_lead.astype(jnp.int32), axis=1)  # (rows,)
+
+    # --- gather each character's bytes (the computed "shuffle") ---
+    def gather(offset):
+        idx = jnp.clip(starts + offset, 0, width - 1)
+        return jnp.take_along_axis(x, idx, axis=1)
+
+    b0, b1, b2, b3 = gather(0), gather(1), gather(2), gather(3)
+
+    # --- branch-free compose (Figs. 2-4 bit math, all lengths at once) ---
+    cp1 = b0
+    cp2 = ((b0 & 0x1F) << 6) | (b1 & 0x3F)
+    cp3 = ((b0 & 0x0F) << 12) | ((b1 & 0x3F) << 6) | (b2 & 0x3F)
+    cp4 = (
+        ((b0 & 0x07) << 18)
+        | ((b1 & 0x3F) << 12)
+        | ((b2 & 0x3F) << 6)
+        | (b3 & 0x3F)
+    )
+    cp = jnp.where(
+        b0 < 0x80,
+        cp1,
+        jnp.where(b0 < 0xE0, cp2, jnp.where(b0 < 0xF0, cp3, cp4)),
+    )
+
+    # --- UTF-16 synthesis incl. surrogate pairs (Fig. 4 final step) ---
+    char_valid = jnp.arange(width, dtype=jnp.int32)[None, :] < nchars[:, None]
+    is_supp = (cp >= 0x10000) & char_valid
+    v = cp - 0x10000
+    w0 = jnp.where(is_supp, 0xD800 + (v >> 10), cp)
+    w1 = jnp.where(is_supp, 0xDC00 + (v & 0x3FF), 0)
+    units = jnp.where(char_valid, 1 + is_supp.astype(jnp.int32), 0)
+
+    # --- compaction: exclusive prefix sum + scatter-as-matmul ---
+    out_pos = jnp.cumsum(units, axis=1) - units  # (rows, 64)
+    counts = jnp.sum(units, axis=1)
+    # One-hot scatter (64 chars -> 64 output slots); padded/overflow
+    # positions target slot index `width` and fall off the one-hot.
+    slot = jnp.arange(width, dtype=jnp.int32)[None, None, :]  # (1, 1, 64)
+    p0 = jnp.where(units > 0, out_pos, width)[:, :, None]
+    p1 = jnp.where(units > 1, out_pos + 1, width)[:, :, None]
+    onehot0 = (p0 == slot).astype(jnp.int32)  # (rows, 64, 64)
+    onehot1 = (p1 == slot).astype(jnp.int32)
+    words = jnp.einsum("rk,rkj->rj", w0, onehot0) + jnp.einsum(
+        "rk,rkj->rj", w1, onehot1
+    )
+    return words, counts
+
+
+def _kernel(x_ref, n_ref, words_ref, counts_ref):
+    words, counts = _transcode_tile(x_ref[...], n_ref[...])
+    words_ref[...] = words
+    counts_ref[...] = counts
+
+
+@functools.partial(jax.jit, static_argnames=())
+def utf8_to_utf16_blocks(blocks, lengths):
+    """Transcode a batch of 64-byte UTF-8 blocks to UTF-16 code units.
+
+    Args:
+      blocks: (B, 64) int32 byte values in [0, 256), zero-padded.
+      lengths: (B,) int32 valid byte count per row.
+
+    Returns:
+      (words, counts): (B, 64) int32 UTF-16 code units and (B,) int32
+      unit counts.
+    """
+    batch, width = blocks.shape
+    assert width == 64, "the paper's block size"
+    assert batch % BLOCK_ROWS == 0, f"batch must be a multiple of {BLOCK_ROWS}"
+    grid = (batch // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, width), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, width), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, width), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(blocks, lengths)

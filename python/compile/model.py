@@ -1,0 +1,64 @@
+"""L2: the batch transcoding graphs that get AOT-compiled for the Rust
+runtime.
+
+Two jitted entry points, each a composition of L1 kernels:
+
+* ``utf8_to_utf16_graph``  — validate + transcode a batch of 64-byte
+  UTF-8 blocks; returns (words, counts, valid).
+* ``utf16_to_utf8_graph``  — transcode + validate a batch of UTF-16
+  blocks; returns (bytes, counts, valid).
+
+Both are lowered once by ``python/compile/aot.py`` to HLO text with a
+fixed batch size; the Rust coordinator pads request batches to that
+size.  Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    utf16_to_utf8_blocks,
+    utf8_to_utf16_blocks,
+    validate_utf8_blocks,
+)
+
+# Fixed AOT batch size (rows of 64 input units each). 64 rows x 64 bytes
+# = 4 KiB of payload per executable invocation.
+AOT_BATCH = 64
+
+
+def utf8_to_utf16_graph(blocks, lengths):
+    """Validate and transcode UTF-8 blocks in one fused graph.
+
+    Args:
+      blocks: (B, 64) int32 UTF-8 bytes, zero-padded, char-aligned rows.
+      lengths: (B,) int32.
+
+    Returns:
+      (words (B, 64) int32, counts (B,) int32, valid (B,) bool).
+      Rows that fail validation report count 0 and valid False.
+    """
+    valid = validate_utf8_blocks(blocks, lengths)
+    words, counts = utf8_to_utf16_blocks(blocks, lengths)
+    counts = jnp.where(valid, counts, 0)
+    # int32 validity: the Rust runtime's Literal bridge has no bool lane.
+    return words, counts, valid.astype(jnp.int32)
+
+
+def utf16_to_utf8_graph(blocks, lengths):
+    """Transcode UTF-16 blocks; validity comes from the same kernel."""
+    out, counts, valid = utf16_to_utf8_blocks(blocks, lengths)
+    counts = jnp.where(valid, counts, 0)
+    return out, counts, valid.astype(jnp.int32)
+
+
+def lower_utf8_to_utf16(batch: int = AOT_BATCH):
+    spec_blocks = jax.ShapeDtypeStruct((batch, 64), jnp.int32)
+    spec_lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.jit(utf8_to_utf16_graph).lower(spec_blocks, spec_lens)
+
+
+def lower_utf16_to_utf8(batch: int = AOT_BATCH):
+    spec_blocks = jax.ShapeDtypeStruct((batch, 64), jnp.int32)
+    spec_lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.jit(utf16_to_utf8_graph).lower(spec_blocks, spec_lens)

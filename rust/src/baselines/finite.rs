@@ -1,0 +1,160 @@
+//! The "finite" baseline: Hoehrmann's pure finite-state UTF-8 → UTF-16
+//! transcoder (reference [19] of the paper; last modified 2010).
+//!
+//! The decoder is a DFA over byte classes: every byte maps to one of 12
+//! character classes, and a 9-state transition table (states stored
+//! premultiplied by 12) advances one byte at a time while accumulating
+//! the code point. State 0 accepts, state 12 rejects. This is the exact
+//! table from the original publication.
+
+use crate::transcode::Utf8ToUtf16;
+
+/// Byte → character-class table (first half of Hoehrmann's `utf8d`).
+pub const CLASS: [u8; 256] = build_class_table();
+
+const fn build_class_table() -> [u8; 256] {
+    let mut t = [0u8; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = match b {
+            0x00..=0x7F => 0,
+            0x80..=0x8F => 1,
+            0x90..=0x9F => 9,
+            0xA0..=0xBF => 7,
+            0xC0..=0xC1 => 8,
+            0xC2..=0xDF => 2,
+            0xE0 => 10,
+            0xE1..=0xEC => 3,
+            0xED => 4,
+            0xEE..=0xEF => 3,
+            0xF0 => 11,
+            0xF1..=0xF3 => 6,
+            0xF4 => 5,
+            _ => 8, // 0xF5..=0xFF
+        };
+        b += 1;
+    }
+    t
+}
+
+/// Accepting state.
+pub const ACCEPT: u8 = 0;
+/// Rejecting state.
+pub const REJECT: u8 = 12;
+
+/// State-transition table (second half of Hoehrmann's `utf8d`):
+/// `TRANS[state + class]`, states premultiplied by 12.
+#[rustfmt::skip]
+pub const TRANS: [u8; 108] = [
+    // s0 (accept)
+     0, 12, 24, 36, 60, 96, 84, 12, 12, 12, 48, 72,
+    // s1 (reject)
+    12, 12, 12, 12, 12, 12, 12, 12, 12, 12, 12, 12,
+    // s2: expect one continuation
+    12,  0, 12, 12, 12, 12, 12,  0, 12,  0, 12, 12,
+    // s3: expect two continuations
+    12, 24, 12, 12, 12, 12, 12, 24, 12, 24, 12, 12,
+    // s4: after E0 (continuation restricted to A0..BF)
+    12, 12, 12, 12, 12, 12, 12, 24, 12, 12, 12, 12,
+    // s5: after ED (continuation restricted to 80..9F)
+    12, 24, 12, 12, 12, 12, 12, 12, 12, 24, 12, 12,
+    // s6: after F0 (continuation restricted to 90..BF)
+    12, 12, 12, 12, 12, 12, 12, 36, 12, 36, 12, 12,
+    // s7: after F1..F3 (any continuation, two more follow)
+    12, 36, 12, 12, 12, 12, 12, 36, 12, 36, 12, 12,
+    // s8: after F4 (continuation restricted to 80..8F)
+    12, 36, 12, 12, 12, 12, 12, 12, 12, 12, 12, 12,
+];
+
+/// One DFA step. Returns the new state; `codep` accumulates data bits.
+#[inline]
+pub fn decode_step(state: u8, codep: &mut u32, byte: u8) -> u8 {
+    let class = CLASS[byte as usize];
+    *codep = if state != ACCEPT {
+        ((byte & 0x3F) as u32) | (*codep << 6)
+    } else {
+        ((0xFFu32 >> class) & byte as u32) as u32
+    };
+    TRANS[(state + class) as usize]
+}
+
+/// The `finite` engine of Tables 6 and 7.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FiniteTranscoder;
+
+impl Utf8ToUtf16 for FiniteTranscoder {
+    fn name(&self) -> &'static str {
+        "finite"
+    }
+
+    fn validating(&self) -> bool {
+        true // the DFA rejects malformed input by construction
+    }
+
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+        let mut state = ACCEPT;
+        let mut codep = 0u32;
+        let mut q = 0usize;
+        for &b in src {
+            state = decode_step(state, &mut codep, b);
+            if state == ACCEPT {
+                if q + 2 > dst.len() {
+                    return None;
+                }
+                q += crate::scalar::encode_utf16_char(codep, &mut dst[q..]);
+            } else if state == REJECT {
+                return None;
+            }
+        }
+        if state != ACCEPT {
+            return None; // truncated sequence at end of input
+        }
+        Some(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::utf16_capacity_for;
+
+    #[test]
+    fn matches_std_on_valid_text() {
+        let engine = FiniteTranscoder;
+        for text in [
+            "hello",
+            "héllo wörld",
+            "漢字テスト",
+            "🙂🚀🌍",
+            "mixed ascii é漢🙂 text with all classes",
+            "",
+        ] {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = engine.convert(text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..], "{text}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_std_validity_exhaustive_2byte() {
+        let engine = FiniteTranscoder;
+        let mut dst = vec![0u16; 32];
+        for hi in 0..=255u8 {
+            for lo in 0..=255u8 {
+                let buf = [b'a', hi, lo, b'b'];
+                let accepted = engine.convert(&buf, &mut dst).is_some();
+                assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{hi:02x}{lo:02x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_truncation_and_surrogates() {
+        let engine = FiniteTranscoder;
+        let mut dst = vec![0u16; 32];
+        assert!(engine.convert(&[0xE4], &mut dst).is_none());
+        assert!(engine.convert(&[0xED, 0xA0, 0x80], &mut dst).is_none());
+        assert!(engine.convert(&[0xF4, 0x90, 0x80, 0x80], &mut dst).is_none());
+        assert!(engine.convert(&[0xF4, 0x8F, 0xBF, 0xBF], &mut dst).is_some());
+    }
+}

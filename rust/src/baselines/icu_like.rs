@@ -1,0 +1,228 @@
+//! The "ICU" baseline: a careful scalar transcoder in the style of
+//! ICU's `U8_NEXT` / `U16_NEXT` macro loops with appendable sinks.
+//!
+//! The real International Components for Unicode is a much larger
+//! library; what the paper benchmarks (`UnicodeString::fromUTF8`,
+//! `UnicodeString::toUTF8String`) boils down to a guarded scalar decode
+//! loop that (a) branches per character class, (b) re-checks capacity on
+//! every append through a growable sink, and (c) funnels errors through
+//! a sentinel value. We reproduce those three properties — they are what
+//! give the ICU rows of Tables 5–10 their shape — without reimplementing
+//! the rest of ICU.
+
+use crate::transcode::{Utf16ToUtf8, Utf8ToUtf16};
+
+/// Sentinel produced by `u8_next` on malformed input (ICU uses a
+/// negative `UChar32`).
+const ERROR: i32 = -1;
+
+/// ICU's `U8_NEXT`: decode one code point, returning the sentinel on
+/// error. `i` advances past the consumed bytes (one byte on error).
+#[inline]
+fn u8_next(s: &[u8], i: &mut usize) -> i32 {
+    let b0 = s[*i];
+    *i += 1;
+    if b0 < 0x80 {
+        return b0 as i32;
+    }
+    // Lead-byte classification with ICU's U8_COUNT_TRAIL_BYTES-like
+    // dispatch; trail bytes are validated with U8_IS_TRAIL plus the
+    // per-lead second-byte ranges.
+    let trail = |s: &[u8], i: &mut usize| -> Option<u8> {
+        if *i >= s.len() {
+            return None;
+        }
+        let b = s[*i];
+        if b & 0xC0 != 0x80 {
+            return None;
+        }
+        *i += 1;
+        Some(b & 0x3F)
+    };
+    match b0 {
+        0xC2..=0xDF => {
+            let Some(t1) = trail(s, i) else { return ERROR };
+            ((b0 as i32 & 0x1F) << 6) | t1 as i32
+        }
+        0xE0..=0xEF => {
+            // second-byte range depends on the lead (E0/ED specials)
+            if *i >= s.len() {
+                return ERROR;
+            }
+            let b1 = s[*i];
+            let ok = match b0 {
+                0xE0 => (0xA0..=0xBF).contains(&b1),
+                0xED => (0x80..=0x9F).contains(&b1),
+                _ => (0x80..=0xBF).contains(&b1),
+            };
+            if !ok {
+                return ERROR;
+            }
+            *i += 1;
+            let Some(t2) = trail(s, i) else { return ERROR };
+            ((b0 as i32 & 0x0F) << 12) | ((b1 as i32 & 0x3F) << 6) | t2 as i32
+        }
+        0xF0..=0xF4 => {
+            if *i >= s.len() {
+                return ERROR;
+            }
+            let b1 = s[*i];
+            let ok = match b0 {
+                0xF0 => (0x90..=0xBF).contains(&b1),
+                0xF4 => (0x80..=0x8F).contains(&b1),
+                _ => (0x80..=0xBF).contains(&b1),
+            };
+            if !ok {
+                return ERROR;
+            }
+            *i += 1;
+            let Some(t2) = trail(s, i) else { return ERROR };
+            let Some(t3) = trail(s, i) else { return ERROR };
+            ((b0 as i32 & 0x07) << 18) | ((b1 as i32 & 0x3F) << 12) | ((t2 as i32) << 6) | t3 as i32
+        }
+        _ => ERROR, // stray continuation, C0/C1, F5..FF
+    }
+}
+
+/// The `ICU` engine of Tables 5–10.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IcuLikeTranscoder;
+
+impl Utf8ToUtf16 for IcuLikeTranscoder {
+    fn name(&self) -> &'static str {
+        "ICU"
+    }
+
+    fn validating(&self) -> bool {
+        true
+    }
+
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+        let mut i = 0usize;
+        let mut q = 0usize;
+        while i < src.len() {
+            let c = u8_next(src, &mut i);
+            if c < 0 {
+                return None;
+            }
+            // ICU's doAppend: capacity check on every code point.
+            let c = c as u32;
+            if c < 0x10000 {
+                if q >= dst.len() {
+                    return None;
+                }
+                dst[q] = c as u16;
+                q += 1;
+            } else {
+                if q + 2 > dst.len() {
+                    return None;
+                }
+                dst[q] = 0xD7C0u16.wrapping_add((c >> 10) as u16); // U16_LEAD
+                dst[q + 1] = 0xDC00 | (c & 0x3FF) as u16; // U16_TRAIL
+                q += 2;
+            }
+        }
+        Some(q)
+    }
+}
+
+impl Utf16ToUtf8 for IcuLikeTranscoder {
+    fn name(&self) -> &'static str {
+        "ICU"
+    }
+
+    fn validating(&self) -> bool {
+        true
+    }
+
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+        let mut i = 0usize;
+        let mut q = 0usize;
+        while i < src.len() {
+            // U16_NEXT
+            let w = src[i];
+            i += 1;
+            let c: u32 = if (0xD800..0xDC00).contains(&w) {
+                if i >= src.len() || !(0xDC00..0xE000).contains(&src[i]) {
+                    return None;
+                }
+                let lo = src[i];
+                i += 1;
+                0x10000 + (((w as u32 - 0xD800) << 10) | (lo as u32 - 0xDC00))
+            } else if (0xDC00..0xE000).contains(&w) {
+                return None;
+            } else {
+                w as u32
+            };
+            // U8_APPEND with capacity checks per byte group.
+            let len = if c < 0x80 {
+                1
+            } else if c < 0x800 {
+                2
+            } else if c < 0x10000 {
+                3
+            } else {
+                4
+            };
+            if q + len > dst.len() {
+                return None;
+            }
+            q += crate::scalar::encode_utf8_char(c, &mut dst[q..]);
+        }
+        Some(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+    #[test]
+    fn utf8_to_utf16_matches_std() {
+        let engine = IcuLikeTranscoder;
+        for text in ["hello", "héllo", "漢字テスト", "🙂🚀", "mix é漢🙂 end", ""] {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = Utf8ToUtf16::convert(&engine, text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..], "{text}");
+        }
+    }
+
+    #[test]
+    fn utf16_to_utf8_matches_std() {
+        let engine = IcuLikeTranscoder;
+        for text in ["hello", "héllo", "漢字テスト", "🙂🚀", "mix é漢🙂 end", ""] {
+            let units: Vec<u16> = text.encode_utf16().collect();
+            let mut dst = vec![0u8; utf8_capacity_for(units.len())];
+            let n = Utf16ToUtf8::convert(&engine, &units, &mut dst).unwrap();
+            assert_eq!(&dst[..n], text.as_bytes(), "{text}");
+        }
+    }
+
+    #[test]
+    fn validity_agrees_with_std_exhaustive_2byte() {
+        let engine = IcuLikeTranscoder;
+        let mut dst = vec![0u16; 32];
+        for hi in 0..=255u8 {
+            for lo in 0..=255u8 {
+                let buf = [b'a', hi, lo, b'b'];
+                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_some();
+                assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{hi:02x}{lo:02x}");
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_3byte_lead_second_byte_space() {
+        // For every 3-byte lead and every second byte, agree with std.
+        let engine = IcuLikeTranscoder;
+        let mut dst = vec![0u16; 32];
+        for lead in 0xE0..=0xEFu8 {
+            for b1 in 0..=255u8 {
+                let buf = [lead, b1, 0x80];
+                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_some();
+                assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{lead:02x}{b1:02x}");
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! The Inoue et al. (2008) baseline: table-driven SIMD UTF-8 → UTF-16
+//! transcoding, reimplemented from Algorithm 1 of the paper.
+//!
+//! Characteristics preserved from the original (§2):
+//!
+//! * no validation whatsoever;
+//! * characters limited to 1–3 bytes (the Emoji dataset is
+//!   "unsupported", exactly as Table 5 marks it);
+//! * an eight-character main loop: a scalar pass over the eight lead
+//!   bytes builds a base-3 index `g` (`g = 3g + (len-1)`), which selects
+//!   two 16-byte permutation patterns from 3⁸ = 6561-entry tables
+//!   (2 × 6561 × 16 B ≈ 205 KiB — the paper quotes "about 105 KiB" for
+//!   the original's packed variant);
+//! * a 32-byte load permuted into two registers — one holding each
+//!   character's low bits, the other the remaining bits — then merged
+//!   with shifts and masks;
+//! * an ASCII fast path for eight-byte ASCII runs.
+
+use crate::simd::{shuffle32, U8x16};
+use crate::transcode::Utf8ToUtf16;
+use std::sync::LazyLock;
+
+/// Byte-length of a character from its lead byte, as Algorithm 1's
+/// `[1,1,1,1,1,1,2,3]` table (indexed by `b >> 5`; no 4-byte support).
+const LEN_FROM_HIGH3: [u8; 8] = [1, 1, 1, 1, 1, 1, 2, 3];
+
+struct Patterns {
+    /// For each `g`: 16-bit lanes `[second-to-last byte, third-to-last]`
+    /// source indexes (0x80 where absent).
+    pattern1: Vec<[u8; 16]>,
+    /// For each `g`: 16-bit lanes `[last byte, —]` source indexes.
+    pattern2: Vec<[u8; 16]>,
+    /// Total bytes consumed by the eight characters (table metadata;
+    /// the hot loop re-derives it during index construction).
+    #[allow(dead_code)]
+    consumed: Vec<u8>,
+}
+
+static PATTERNS: LazyLock<Patterns> = LazyLock::new(build_patterns);
+
+fn build_patterns() -> Patterns {
+    let n = 6561usize; // 3^8
+    let mut pattern1 = vec![[0x80u8; 16]; n];
+    let mut pattern2 = vec![[0x80u8; 16]; n];
+    let mut consumed = vec![0u8; n];
+    for g in 0..n {
+        // g was built as g = 3*g + (len-1), so the FIRST character is the
+        // most significant base-3 digit.
+        let mut digits = [0u8; 8];
+        let mut v = g;
+        for k in (0..8).rev() {
+            digits[k] = (v % 3) as u8;
+            v /= 3;
+        }
+        let mut start = 0u8;
+        for k in 0..8 {
+            let len = digits[k] + 1;
+            let last = start + len - 1;
+            pattern2[g][2 * k] = last;
+            if len >= 2 {
+                pattern1[g][2 * k] = last - 1;
+            }
+            if len >= 3 {
+                pattern1[g][2 * k + 1] = last - 2;
+            }
+            start += len;
+        }
+        consumed[g] = start;
+    }
+    Patterns { pattern1, pattern2, consumed }
+}
+
+/// The `Inoue et al.` engine of Table 5.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InoueTranscoder;
+
+impl Utf8ToUtf16 for InoueTranscoder {
+    fn name(&self) -> &'static str {
+        "Inoue et al."
+    }
+
+    fn validating(&self) -> bool {
+        false
+    }
+
+    fn supports_supplemental(&self) -> bool {
+        false
+    }
+
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+        let pats = &*PATTERNS;
+        let mut p = 0usize;
+        let mut q = 0usize;
+
+        // Algorithm 1: while p + 32 < length(b)
+        while p + 32 <= src.len() {
+            if q + 8 > dst.len() {
+                return None;
+            }
+            // ASCII fast path: next eight bytes.
+            let mut acc = 0u8;
+            for i in 0..8 {
+                acc |= src[p + i];
+            }
+            if acc < 0x80 {
+                for i in 0..8 {
+                    dst[q + i] = src[p + i] as u16;
+                }
+                p += 8;
+                q += 8;
+                continue;
+            }
+            // Scalar pass over eight lead bytes building the base-3 index.
+            let mut g = 0usize;
+            let mut pp = p;
+            for _ in 0..8 {
+                let len = LEN_FROM_HIGH3[(src[pp] >> 5) as usize];
+                g = 3 * g + (len - 1) as usize;
+                pp += len as usize;
+            }
+            if pp > src.len() {
+                break; // would read past the end; leave to the tail
+            }
+            let lo = U8x16::load(&src[p..]);
+            let hi = U8x16::load(&src[p + 16..]);
+            let v1 = shuffle32(lo, hi, U8x16(pats.pattern1[g]));
+            let v2 = shuffle32(lo, hi, U8x16(pats.pattern2[g]));
+            // Merge: low 6–7 bits from the last byte, middle 6 from the
+            // second-to-last, top 4 from the third-to-last.
+            for k in 0..8 {
+                let w1 = u16::from_le_bytes([v1.0[2 * k], v1.0[2 * k + 1]]);
+                let w2 = v2.0[2 * k] as u16;
+                dst[q + k] =
+                    (w2 & 0x7F) | ((w1 & 0x3F) << 6) | (((w1 >> 8) & 0x0F) << 12);
+            }
+            p = pp;
+            q += 8;
+        }
+
+        // Conventional tail (non-validating, 1–3-byte only).
+        while p < src.len() {
+            if q >= dst.len() {
+                return None;
+            }
+            let len = LEN_FROM_HIGH3[(src[p] >> 5) as usize] as usize;
+            if p + len > src.len() {
+                break;
+            }
+            dst[q] = match len {
+                1 => src[p] as u16,
+                2 => ((src[p] & 0x1F) as u16) << 6 | (src[p + 1] & 0x3F) as u16,
+                _ => {
+                    ((src[p] & 0x0F) as u16) << 12
+                        | ((src[p + 1] & 0x3F) as u16) << 6
+                        | (src[p + 2] & 0x3F) as u16
+                }
+            };
+            p += len;
+            q += 1;
+        }
+        Some(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::utf16_capacity_for;
+
+    fn roundtrip_bmp(text: &str) {
+        assert!(text.chars().all(|c| (c as u32) < 0x10000), "BMP-only baseline");
+        let engine = InoueTranscoder;
+        let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+        let n = engine.convert(text.as_bytes(), &mut dst).unwrap();
+        assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..], "{text}");
+    }
+
+    #[test]
+    fn ascii_and_latin() {
+        roundtrip_bmp(&"plain ascii ".repeat(20));
+        roundtrip_bmp(&"déjà vu économie ".repeat(20));
+    }
+
+    #[test]
+    fn two_and_three_byte_mixes() {
+        roundtrip_bmp(&"русский текст ".repeat(20));
+        roundtrip_bmp(&"漢字テスト ".repeat(20));
+        roundtrip_bmp(&"mixed é漢 content ".repeat(20));
+    }
+
+    #[test]
+    fn pattern_table_sizes() {
+        let p = &*PATTERNS;
+        assert_eq!(p.pattern1.len(), 6561);
+        assert_eq!(p.pattern2.len(), 6561);
+        // all-1-byte entry consumes 8 bytes, all-3-byte consumes 24
+        assert_eq!(p.consumed[0], 8);
+        assert_eq!(p.consumed[6560], 24);
+    }
+
+    #[test]
+    fn short_inputs_via_tail() {
+        roundtrip_bmp("é");
+        roundtrip_bmp("漢");
+        roundtrip_bmp("abc");
+        roundtrip_bmp("");
+    }
+}

@@ -1,0 +1,263 @@
+//! The "LLVM" baseline: a faithful port of the Unicode Consortium
+//! `ConvertUTF.c` routines that the LLVM project ships (last revised
+//! September 2001 — §6.1). Both directions, with validation.
+//!
+//! The port preserves the original structure — the `trailingBytesForUTF8`
+//! table, the magic `offsetsFromUTF8` subtraction, the fall-through
+//! accumulation switch and the `isLegalUTF8` range checks — because the
+//! paper benchmarks precisely that code shape (one branchy pass,
+//! character at a time, no SIMD).
+
+use crate::transcode::{Utf16ToUtf8, Utf8ToUtf16};
+
+/// `trailingBytesForUTF8`: extra bytes following each lead byte.
+const TRAILING_BYTES: [u8; 256] = build_trailing();
+
+const fn build_trailing() -> [u8; 256] {
+    let mut t = [0u8; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = match b {
+            0x00..=0xBF => 0,
+            0xC0..=0xDF => 1,
+            0xE0..=0xEF => 2,
+            0xF0..=0xF7 => 3,
+            0xF8..=0xFB => 4,
+            _ => 5,
+        };
+        b += 1;
+    }
+    t
+}
+
+/// `offsetsFromUTF8`: the magic values subtracted after accumulation.
+const OFFSETS: [u32; 6] =
+    [0x0000_0000, 0x0000_3080, 0x000E_2080, 0x03C8_2080, 0xFA08_2080, 0x8208_2080];
+
+/// `firstByteMark`: OR-mask for the leading byte when encoding.
+const FIRST_BYTE_MARK: [u8; 7] = [0x00, 0x00, 0xC0, 0xE0, 0xF0, 0xF8, 0xFC];
+
+const UNI_SUR_HIGH_START: u32 = 0xD800;
+const UNI_SUR_LOW_START: u32 = 0xDC00;
+const UNI_SUR_LOW_END: u32 = 0xDFFF;
+const UNI_MAX_LEGAL_UTF32: u32 = 0x0010_FFFF;
+const HALF_BASE: u32 = 0x0001_0000;
+
+/// `isLegalUTF8`: validate `length` bytes starting at `src[0]`.
+fn is_legal_utf8(src: &[u8], length: usize) -> bool {
+    // Walk backwards, as the original does.
+    let a = |i: usize| src[i];
+    match length {
+        4 => {
+            if !(0x80..=0xBF).contains(&a(3)) {
+                return false;
+            }
+            if !(0x80..=0xBF).contains(&a(2)) {
+                return false;
+            }
+            if !legal_second_byte(a(0), a(1)) {
+                return false;
+            }
+            src[0] <= 0xF4
+        }
+        3 => {
+            if !(0x80..=0xBF).contains(&a(2)) {
+                return false;
+            }
+            if !legal_second_byte(a(0), a(1)) {
+                return false;
+            }
+            src[0] <= 0xF4
+        }
+        2 => {
+            if !legal_second_byte(a(0), a(1)) {
+                return false;
+            }
+            src[0] <= 0xF4
+        }
+        1 => src[0] < 0x80,
+        _ => false,
+    }
+}
+
+#[inline]
+fn legal_second_byte(b0: u8, b1: u8) -> bool {
+    if b1 > 0xBF {
+        return false;
+    }
+    match b0 {
+        0xE0 => b1 >= 0xA0,
+        0xED => b1 <= 0x9F,
+        0xF0 => b1 >= 0x90,
+        0xF4 => b1 <= 0x8F,
+        _ => {
+            // For the default case the original also rejects lead bytes
+            // in 0x80..0xC1 via `case 1`-style checks: a two-byte lead
+            // must be >= 0xC2.
+            b1 >= 0x80 && b0 >= 0xC2
+        }
+    }
+}
+
+/// The `LLVM` engine of Tables 6, 7, 9 and 10.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LlvmTranscoder;
+
+impl Utf8ToUtf16 for LlvmTranscoder {
+    fn name(&self) -> &'static str {
+        "LLVM"
+    }
+
+    fn validating(&self) -> bool {
+        true
+    }
+
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+        let mut p = 0usize;
+        let mut q = 0usize;
+        while p < src.len() {
+            let extra = TRAILING_BYTES[src[p] as usize] as usize;
+            if p + extra >= src.len() {
+                return None; // sourceExhausted
+            }
+            if !is_legal_utf8(&src[p..], extra + 1) {
+                return None; // sourceIllegal
+            }
+            // Fall-through accumulation, as in the original switch.
+            let mut ch: u32 = 0;
+            for i in 0..=extra {
+                ch = (ch << 6).wrapping_add(src[p + i] as u32);
+            }
+            ch = ch.wrapping_sub(OFFSETS[extra]);
+            p += extra + 1;
+
+            if ch <= 0xFFFF {
+                if (UNI_SUR_HIGH_START..=UNI_SUR_LOW_END).contains(&ch) {
+                    return None;
+                }
+                if q >= dst.len() {
+                    return None; // targetExhausted
+                }
+                dst[q] = ch as u16;
+                q += 1;
+            } else if ch > UNI_MAX_LEGAL_UTF32 {
+                return None;
+            } else {
+                if q + 2 > dst.len() {
+                    return None;
+                }
+                let ch = ch - HALF_BASE;
+                dst[q] = ((ch >> 10) + UNI_SUR_HIGH_START) as u16;
+                dst[q + 1] = ((ch & 0x3FF) + UNI_SUR_LOW_START) as u16;
+                q += 2;
+            }
+        }
+        Some(q)
+    }
+}
+
+impl Utf16ToUtf8 for LlvmTranscoder {
+    fn name(&self) -> &'static str {
+        "LLVM"
+    }
+
+    fn validating(&self) -> bool {
+        true
+    }
+
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+        let mut p = 0usize;
+        let mut q = 0usize;
+        while p < src.len() {
+            let mut ch = src[p] as u32;
+            p += 1;
+            if (UNI_SUR_HIGH_START..UNI_SUR_LOW_START).contains(&ch) {
+                // High surrogate: must be followed by a low surrogate.
+                if p >= src.len() {
+                    return None;
+                }
+                let ch2 = src[p] as u32;
+                if !(UNI_SUR_LOW_START..=UNI_SUR_LOW_END).contains(&ch2) {
+                    return None;
+                }
+                ch = ((ch - UNI_SUR_HIGH_START) << 10) + (ch2 - UNI_SUR_LOW_START) + HALF_BASE;
+                p += 1;
+            } else if (UNI_SUR_LOW_START..=UNI_SUR_LOW_END).contains(&ch) {
+                return None; // unpaired low surrogate
+            }
+
+            let bytes_to_write = if ch < 0x80 {
+                1
+            } else if ch < 0x800 {
+                2
+            } else if ch < 0x10000 {
+                3
+            } else {
+                4
+            };
+            if q + bytes_to_write > dst.len() {
+                return None;
+            }
+            // Fall-through write, back to front, as in the original.
+            const BYTE_MASK: u32 = 0xBF;
+            const BYTE_MARK: u32 = 0x80;
+            let mut tmp = ch;
+            for i in (1..bytes_to_write).rev() {
+                dst[q + i] = ((tmp | BYTE_MARK) & BYTE_MASK) as u8;
+                tmp >>= 6;
+            }
+            dst[q] = (tmp | FIRST_BYTE_MARK[bytes_to_write] as u32) as u8;
+            q += bytes_to_write;
+        }
+        Some(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+    #[test]
+    fn utf8_to_utf16_matches_std() {
+        let engine = LlvmTranscoder;
+        for text in ["hello", "héllo", "漢字", "🙂🚀", "mix é漢🙂 end", ""] {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = Utf8ToUtf16::convert(&engine, text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..], "{text}");
+        }
+    }
+
+    #[test]
+    fn utf16_to_utf8_matches_std() {
+        let engine = LlvmTranscoder;
+        for text in ["hello", "héllo", "漢字", "🙂🚀", "mix é漢🙂 end", ""] {
+            let units: Vec<u16> = text.encode_utf16().collect();
+            let mut dst = vec![0u8; utf8_capacity_for(units.len())];
+            let n = Utf16ToUtf8::convert(&engine, &units, &mut dst).unwrap();
+            assert_eq!(&dst[..n], text.as_bytes(), "{text}");
+        }
+    }
+
+    #[test]
+    fn validity_agrees_with_std_exhaustive_2byte() {
+        let engine = LlvmTranscoder;
+        let mut dst = vec![0u16; 32];
+        for hi in 0..=255u8 {
+            for lo in 0..=255u8 {
+                let buf = [b'a', hi, lo, b'b'];
+                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_some();
+                assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{hi:02x}{lo:02x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_unpaired_surrogates() {
+        let engine = LlvmTranscoder;
+        let mut dst = vec![0u8; 64];
+        assert!(Utf16ToUtf8::convert(&engine, &[0xD800], &mut dst).is_none());
+        assert!(Utf16ToUtf8::convert(&engine, &[0xD800, 0x41], &mut dst).is_none());
+        assert!(Utf16ToUtf8::convert(&engine, &[0xDC00], &mut dst).is_none());
+    }
+}

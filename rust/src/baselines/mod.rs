@@ -1,0 +1,23 @@
+//! Every comparison system of the paper's evaluation (§6.1, Table 1),
+//! reimplemented behind the same [`crate::transcode`] traits.
+//!
+//! | engine | paper row | kind |
+//! |---|---|---|
+//! | [`icu_like::IcuLikeTranscoder`] | ICU | careful scalar, both directions |
+//! | [`llvm::LlvmTranscoder`] | LLVM | Unicode Consortium `ConvertUTF` port, both directions |
+//! | [`finite::FiniteTranscoder`] | finite | Hoehrmann DFA, UTF-8 → UTF-16 |
+//! | [`steagall::SteagallTranscoder`] | Steagall | DFA + SIMD ASCII path |
+//! | [`inoue::InoueTranscoder`] | Inoue et al. | table-driven SIMD, 1–3-byte, non-validating |
+//! | [`utf8lut::Utf8LutTranscoder`] | utf8lut | big-table SIMD, both directions |
+//!
+//! The paper's u8u16 (Cameron) bitstream transcoder is *not* rebuilt: it
+//! is a patented design superseded by byte-stream approaches, and the
+//! remaining set already spans the comparison space (scalar, DFA,
+//! small-table SIMD, big-table SIMD). See DESIGN.md §Substitutions.
+
+pub mod finite;
+pub mod icu_like;
+pub mod inoue;
+pub mod llvm;
+pub mod steagall;
+pub mod utf8lut;

@@ -1,0 +1,123 @@
+//! The Steagall baseline (reference [18]): Hoehrmann's DFA augmented
+//! with a SIMD ASCII fast path.
+//!
+//! Steagall's CppCon 2018 converter "relies primarily on a finite-state
+//! machine with a fast SIMD-based ASCII path" (§6.1). We reproduce that
+//! structure: whenever the next 16 bytes are all ASCII they are widened
+//! wholesale; otherwise the DFA consumes bytes until it re-synchronizes
+//! on a character boundary.
+
+use crate::baselines::finite::{decode_step, ACCEPT, REJECT};
+use crate::simd::U8x16;
+use crate::transcode::Utf8ToUtf16;
+
+/// The `Steagall` engine of Tables 6 and 7.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SteagallTranscoder;
+
+impl Utf8ToUtf16 for SteagallTranscoder {
+    fn name(&self) -> &'static str {
+        "Steagall"
+    }
+
+    fn validating(&self) -> bool {
+        true
+    }
+
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+        let mut p = 0usize;
+        let mut q = 0usize;
+        let mut state = ACCEPT;
+        let mut codep = 0u32;
+
+        while p + 16 <= src.len() {
+            if state == ACCEPT {
+                let v = U8x16::load(&src[p..]);
+                if v.is_ascii() {
+                    if q + 16 > dst.len() {
+                        return None;
+                    }
+                    for i in 0..16 {
+                        dst[q + i] = v.0[i] as u16;
+                    }
+                    p += 16;
+                    q += 16;
+                    continue;
+                }
+            }
+            // DFA over the next 16 bytes.
+            let end = p + 16;
+            while p < end {
+                state = decode_step(state, &mut codep, src[p]);
+                p += 1;
+                if state == ACCEPT {
+                    if q + 2 > dst.len() {
+                        return None;
+                    }
+                    q += crate::scalar::encode_utf16_char(codep, &mut dst[q..]);
+                } else if state == REJECT {
+                    return None;
+                }
+            }
+        }
+        while p < src.len() {
+            state = decode_step(state, &mut codep, src[p]);
+            p += 1;
+            if state == ACCEPT {
+                if q + 2 > dst.len() {
+                    return None;
+                }
+                q += crate::scalar::encode_utf16_char(codep, &mut dst[q..]);
+            } else if state == REJECT {
+                return None;
+            }
+        }
+        if state != ACCEPT {
+            return None;
+        }
+        Some(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::utf16_capacity_for;
+
+    #[test]
+    fn matches_std_on_valid_text() {
+        let engine = SteagallTranscoder;
+        for text in [
+            "pure ascii string that is long enough to hit the simd path repeatedly",
+            "mixed é content 漢 with 🙂 interruptions between long ascii runs aaaaaaaa",
+            "всё кириллицей без ascii вообще",
+            "",
+        ] {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = engine.convert(text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..], "{text}");
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_at_any_alignment() {
+        let engine = SteagallTranscoder;
+        for pos in 0..48 {
+            let mut buf = vec![b'a'; 64];
+            buf[pos] = 0xC0;
+            let mut dst = vec![0u16; utf16_capacity_for(buf.len())];
+            assert!(engine.convert(&buf, &mut dst).is_none(), "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn multibyte_straddling_chunk_boundary() {
+        let engine = SteagallTranscoder;
+        for pad in 10..20 {
+            let text = format!("{}é{}", "a".repeat(pad), "b".repeat(20));
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = engine.convert(text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..]);
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! The utf8lut baseline (Gatilov 2019, reference [17]): big-table
+//! vectorized transcoding, both directions.
+//!
+//! Characteristics preserved (§2, §6.7):
+//!
+//! * **UTF-8 → UTF-16**: one huge lookup table — here 2¹⁶ entries keyed
+//!   by the 16-bit end-of-character bitset of a 16-byte window, each
+//!   entry holding two expansion shuffle masks, a consumed count and a
+//!   character count (≈ 2.4 MiB, the same scale as utf8lut's 2 MiB).
+//!   Fewer instructions per byte than our approach, but poor cache
+//!   behavior (Table 8: lowest instructions/byte, lowest IPC) and **no
+//!   ASCII fast path** (§6.4 notes its absence).
+//! * acceleration limited to the basic multilingual plane: windows
+//!   containing 4-byte characters fall back to a scalar path (the paper
+//!   observes utf8lut's "relatively low performance" on Emoji).
+//! * two modes mirroring the upstream template parameters:
+//!   `cmValidate` (full validation) and `cmFull` (convert any valid
+//!   input, no validation).
+//! * **UTF-16 → UTF-8**: a flat table-compress routine with no
+//!   content-class specialization — which is why its Table 9/10 rows sit
+//!   at a constant ~2.5 Gc/s regardless of language.
+
+use crate::simd::{U16x8, U8x16};
+use crate::transcode::{Utf16ToUtf8, Utf8ToUtf16};
+use crate::validate::Utf8Validator;
+use std::sync::LazyLock;
+
+/// One big-table entry: expansion masks for characters 0–3 and 4–7 into
+/// 32-bit lanes (last byte first, as in `tables::utf8_to_utf16`), bytes
+/// consumed, characters produced, and whether a slow path is required.
+#[derive(Clone, Copy)]
+struct BigEntry {
+    mask_a: [u8; 16],
+    mask_b: [u8; 16],
+    consumed: u8,
+    chars: u8,
+    slow: bool,
+}
+
+static BIG_TABLE: LazyLock<Vec<BigEntry>> = LazyLock::new(build_big_table);
+
+fn build_big_table() -> Vec<BigEntry> {
+    let mut table = Vec::with_capacity(1 << 16);
+    for key in 0..(1u32 << 16) {
+        let (lens, n, valid) = crate::tables::char_lens_from_mask(key, 16);
+        // BMP only: a 4-byte char (or structural invalidity) forces the
+        // slow path, as does an empty window.
+        let usable = lens[..n].iter().take_while(|&&l| l <= 3).count();
+        if usable == 0 || (!valid && usable < 8) {
+            table.push(BigEntry {
+                mask_a: [0x80; 16],
+                mask_b: [0x80; 16],
+                consumed: 0,
+                chars: 0,
+                slow: true,
+            });
+            continue;
+        }
+        let nchars = usable.min(8);
+        let mut mask_a = [0x80u8; 16];
+        let mut mask_b = [0x80u8; 16];
+        let mut start = 0u8;
+        for k in 0..nchars {
+            let len = lens[k];
+            let last = start + len - 1;
+            let mask = if k < 4 { &mut mask_a } else { &mut mask_b };
+            let base = (k % 4) * 4;
+            for j in 0..len {
+                mask[base + j as usize] = last - j;
+            }
+            start += len;
+        }
+        table.push(BigEntry { mask_a, mask_b, consumed: start, chars: nchars as u8, slow: false });
+    }
+    table
+}
+
+/// Compose four 1–3-byte characters from expanded 32-bit lanes
+/// (identical bit math to our case 2 / Fig. 3).
+#[inline]
+fn compose4(perm: U8x16, dst: &mut [u16]) {
+    for k in 0..4 {
+        let lane = u32::from_le_bytes([
+            perm.0[4 * k],
+            perm.0[4 * k + 1],
+            perm.0[4 * k + 2],
+            perm.0[4 * k + 3],
+        ]);
+        let composed = (lane & 0x7F) | ((lane & 0x3F00) >> 2) | ((lane & 0x0F_0000) >> 4);
+        dst[k] = composed as u16;
+    }
+}
+
+/// Operating mode, mirroring utf8lut's `cmValidate` / `cmFull`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LutMode {
+    /// Validate the input fully while converting.
+    Validate,
+    /// Convert any valid input without validation (garbage in → garbage
+    /// out, memory-safe).
+    Full,
+}
+
+/// The `utf8lut` engine of Tables 5–10.
+#[derive(Clone, Copy, Debug)]
+pub struct Utf8LutTranscoder {
+    mode: LutMode,
+}
+
+impl Utf8LutTranscoder {
+    pub const fn validating() -> Self {
+        Utf8LutTranscoder { mode: LutMode::Validate }
+    }
+
+    pub const fn full() -> Self {
+        Utf8LutTranscoder { mode: LutMode::Full }
+    }
+
+    /// Approximate resident table size in bytes (for the §6.7 memory
+    /// comparison).
+    pub fn table_bytes() -> usize {
+        BIG_TABLE.len() * std::mem::size_of::<BigEntry>()
+    }
+}
+
+impl Utf8ToUtf16 for Utf8LutTranscoder {
+    fn name(&self) -> &'static str {
+        "utf8lut"
+    }
+
+    fn validating(&self) -> bool {
+        self.mode == LutMode::Validate
+    }
+
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+        let table = &*BIG_TABLE;
+        let mut p = 0usize;
+        let mut q = 0usize;
+        let mut validator = Utf8Validator::new();
+        let mut v_pos = 0usize;
+
+        // Need 17 readable bytes for the end-mask (the last end bit
+        // depends on byte 16) plus the 16-byte window load.
+        while p + 17 <= src.len() {
+            if self.mode == LutMode::Validate {
+                while v_pos + 16 <= src.len() && v_pos < p + 17 {
+                    validator.push16(U8x16::load(&src[v_pos..]));
+                    v_pos += 16;
+                }
+                if validator.has_error() {
+                    return None;
+                }
+            }
+            if q + 8 > dst.len() {
+                return None;
+            }
+            // 16-bit end-of-character mask: byte i ends a char iff byte
+            // i+1 is not a continuation.
+            let mut key = 0u32;
+            for i in 0..16 {
+                let not_cont = (src[p + i + 1] & 0xC0) != 0x80;
+                key |= (not_cont as u32) << i;
+            }
+            let entry = &table[key as usize];
+            if entry.slow {
+                // 4-byte character or degenerate window: scalar fallback
+                // for one character.
+                match crate::scalar::decode_utf8_char(&src[p..]) {
+                    Ok((cp, len)) => {
+                        q += crate::scalar::encode_utf16_char(cp, &mut dst[q..]);
+                        p += len;
+                    }
+                    Err(_) => {
+                        if self.mode == LutMode::Validate {
+                            return None;
+                        }
+                        p += 1; // skip garbage byte
+                    }
+                }
+                continue;
+            }
+            let input = U8x16::load(&src[p..]);
+            let perm_a = input.shuffle(U8x16(entry.mask_a));
+            compose4(perm_a, &mut dst[q..]);
+            if entry.chars > 4 {
+                let perm_b = input.shuffle(U8x16(entry.mask_b));
+                compose4(perm_b, &mut dst[q + 4..]);
+            }
+            q += entry.chars as usize;
+            p += entry.consumed as usize;
+        }
+
+        // Tail.
+        if self.mode == LutMode::Validate {
+            validator.push_tail(&src[v_pos..]);
+            if !validator.finish() {
+                return None;
+            }
+        }
+        if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
+            return None;
+        }
+        q += crate::scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
+        Some(q)
+    }
+}
+
+impl Utf16ToUtf8 for Utf8LutTranscoder {
+    fn name(&self) -> &'static str {
+        "utf8lut"
+    }
+
+    fn validating(&self) -> bool {
+        true // surrogate handling always checks, as in Algorithm 4 case 4
+    }
+
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+        // Flat routine: every register takes the general 1–3-byte
+        // table-compress path (no ASCII / 2-byte specialization), with a
+        // scalar fallback for surrogates. This reproduces utf8lut's flat
+        // ~2.5 Gc/s row in Tables 9/10.
+        let mut p = 0usize;
+        let mut q = 0usize;
+        while p + 8 <= src.len() {
+            if q + 32 > dst.len() {
+                return None;
+            }
+            let v = U16x8::load(&src[p..]);
+            if !v.has_surrogate() {
+                q += crate::transcode::utf16_to_utf8::one_two_three_half_pub(
+                    &src[p..p + 4],
+                    &mut dst[q..],
+                );
+                q += crate::transcode::utf16_to_utf8::one_two_three_half_pub(
+                    &src[p + 4..p + 8],
+                    &mut dst[q..],
+                );
+                p += 8;
+                continue;
+            }
+            let limit = p + 8;
+            while p < limit.min(src.len()) {
+                match crate::scalar::decode_utf16_char(&src[p..]) {
+                    Ok((cp, n)) => {
+                        p += n;
+                        q += crate::scalar::encode_utf8_char(cp, &mut dst[q..]);
+                    }
+                    Err(_) => return None,
+                }
+            }
+        }
+        while p < src.len() {
+            if q + 4 > dst.len() {
+                return None;
+            }
+            match crate::scalar::decode_utf16_char(&src[p..]) {
+                Ok((cp, n)) => {
+                    p += n;
+                    q += crate::scalar::encode_utf8_char(cp, &mut dst[q..]);
+                }
+                Err(_) => return None,
+            }
+        }
+        Some(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+    fn roundtrip(text: &str) {
+        for engine in [Utf8LutTranscoder::validating(), Utf8LutTranscoder::full()] {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = Utf8ToUtf16::convert(&engine, text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(
+                &dst[..n],
+                &text.encode_utf16().collect::<Vec<_>>()[..],
+                "{text} mode {:?}",
+                engine.mode
+            );
+        }
+    }
+
+    #[test]
+    fn bmp_content() {
+        roundtrip(&"ascii only text here ".repeat(10));
+        roundtrip(&"déjà vu économie ".repeat(10));
+        roundtrip(&"русский текст пример ".repeat(10));
+        roundtrip(&"漢字テスト文字列 ".repeat(10));
+        roundtrip("");
+        roundtrip("é");
+    }
+
+    #[test]
+    fn supplemental_via_slow_path() {
+        roundtrip(&"a🙂b🚀c".repeat(10));
+        roundtrip(&"🙂🚀🌍💡".repeat(10));
+    }
+
+    #[test]
+    fn validate_mode_rejects_invalid() {
+        let engine = Utf8LutTranscoder::validating();
+        let mut bad = "é".repeat(30).into_bytes();
+        bad[17] = 0xFF;
+        let mut dst = vec![0u16; utf16_capacity_for(bad.len())];
+        assert!(Utf8ToUtf16::convert(&engine, &bad, &mut dst).is_none());
+    }
+
+    #[test]
+    fn full_mode_survives_garbage() {
+        let engine = Utf8LutTranscoder::full();
+        let mut state = 99u64;
+        for len in [0usize, 20, 64, 257] {
+            let mut soup = vec![0u8; len];
+            for b in soup.iter_mut() {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *b = (state >> 33) as u8;
+            }
+            let mut dst = vec![0u16; utf16_capacity_for(len)];
+            let _ = Utf8ToUtf16::convert(&engine, &soup, &mut dst);
+        }
+    }
+
+    #[test]
+    fn utf16_to_utf8_roundtrip() {
+        let engine = Utf8LutTranscoder::validating();
+        for text in ["hello", "éé漢漢", "🙂🚀", "mix é漢🙂 with ascii tail", ""] {
+            let units: Vec<u16> = text.encode_utf16().collect();
+            let mut dst = vec![0u8; utf8_capacity_for(units.len())];
+            let n = Utf16ToUtf8::convert(&engine, &units, &mut dst).unwrap();
+            assert_eq!(&dst[..n], text.as_bytes(), "{text}");
+        }
+    }
+
+    #[test]
+    fn table_is_big() {
+        // The point of this baseline: a table in the megabytes.
+        assert!(Utf8LutTranscoder::table_bytes() > 2_000_000);
+    }
+}

@@ -1,0 +1,112 @@
+//! Service metrics: lock-free counters + latency aggregation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Shared, lock-free service statistics.
+#[derive(Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub invalid: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    /// Characters transcoded (the paper's throughput unit).
+    pub chars: AtomicU64,
+    /// Total service latency in nanoseconds (queue + convert).
+    pub latency_ns_total: AtomicU64,
+    /// Maximum single-request latency in nanoseconds.
+    pub latency_ns_max: AtomicU64,
+}
+
+impl ServiceStats {
+    pub fn record_completion(
+        &self,
+        bytes_in: usize,
+        bytes_out: usize,
+        chars: usize,
+        latency: Duration,
+    ) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes_in as u64, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out as u64, Ordering::Relaxed);
+        self.chars.fetch_add(chars as u64, Ordering::Relaxed);
+        let ns = latency.as_nanos() as u64;
+        self.latency_ns_total.fetch_add(ns, Ordering::Relaxed);
+        self.latency_ns_max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let total_ns = self.latency_ns_total.load(Ordering::Relaxed);
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            invalid: self.invalid.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            chars: self.chars.load(Ordering::Relaxed),
+            mean_latency: if completed > 0 {
+                Duration::from_nanos(total_ns / completed)
+            } else {
+                Duration::ZERO
+            },
+            max_latency: Duration::from_nanos(self.latency_ns_max.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A point-in-time copy of the service counters.
+#[derive(Clone, Copy, Debug)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub invalid: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub chars: u64,
+    pub mean_latency: Duration,
+    pub max_latency: Duration,
+}
+
+impl std::fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} completed={} rejected={} invalid={} bytes_in={} bytes_out={} \
+             chars={} mean_latency={:?} max_latency={:?}",
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.invalid,
+            self.bytes_in,
+            self.bytes_out,
+            self.chars,
+            self.mean_latency,
+            self.max_latency,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation() {
+        let s = ServiceStats::default();
+        s.requests.fetch_add(3, Ordering::Relaxed);
+        s.record_completion(100, 200, 50, Duration::from_micros(10));
+        s.record_completion(100, 200, 50, Duration::from_micros(30));
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.bytes_in, 200);
+        assert_eq!(snap.chars, 100);
+        assert_eq!(snap.mean_latency, Duration::from_micros(20));
+        assert_eq!(snap.max_latency, Duration::from_micros(30));
+    }
+}

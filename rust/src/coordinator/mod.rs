@@ -1,0 +1,29 @@
+//! L3 coordinator: a streaming transcoding service.
+//!
+//! The deployable shape of the paper's contribution — an ingestion
+//! sidecar that normalizes text encodings at wire speed. Architecture:
+//!
+//! ```text
+//!  submit() ──► bounded queue ──► worker pool ──► responses
+//!     │        (backpressure)      │   │   │
+//!     └─ rejects when full         └── engine: SIMD / scalar / XLA batch
+//! ```
+//!
+//! * **Router / queue** — a bounded MPMC queue (`std::sync::mpsc` behind
+//!   a mutex on the consumer side); `submit` blocks when the queue is
+//!   full, `try_submit` fails fast — explicit backpressure either way.
+//! * **Worker pool** — OS threads, each owning an engine instance.
+//!   (The offline crate set has no tokio; transcoding is CPU-bound, so a
+//!   thread-per-worker pool is the right shape anyway.)
+//! * **Engines** — any [`crate::transcode`] implementation, or the
+//!   [`crate::runtime::XlaEngine`] batch path, selected per service.
+//! * **Metrics** — atomic counters + latency aggregation, exported via
+//!   [`ServiceStats`].
+
+mod metrics;
+mod service;
+
+pub use metrics::{ServiceStats, StatsSnapshot};
+pub use service::{
+    Direction, EngineChoice, Request, Response, ServiceConfig, TranscodeService,
+};

@@ -1,0 +1,381 @@
+//! The transcoding service: bounded queue, worker pool, engines.
+
+use super::metrics::ServiceStats;
+use crate::runtime::XlaEngine;
+use crate::transcode::{
+    utf16_capacity_for, utf16_to_utf8::OurUtf16ToUtf8, utf8_capacity_for,
+    utf8_to_utf16::OurUtf8ToUtf16, Utf16ToUtf8, Utf8ToUtf16,
+};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Transcoding direction of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Utf8ToUtf16,
+    Utf16ToUtf8,
+}
+
+/// Which engine the worker pool runs.
+#[derive(Clone, Debug)]
+pub enum EngineChoice {
+    /// The paper's vectorized transcoders (default).
+    Simd { validate: bool },
+    /// The ICU-like scalar baseline (for A/B service comparisons).
+    Scalar,
+    /// The AOT-compiled JAX/Pallas batch path via PJRT.
+    Xla { artifacts_dir: PathBuf },
+}
+
+/// A transcoding request.
+pub struct Request {
+    pub id: u64,
+    pub direction: Direction,
+    /// UTF-8 bytes for `Utf8ToUtf16`, little-endian UTF-16 bytes packed
+    /// as words for `Utf16ToUtf8`.
+    pub utf8: Vec<u8>,
+    pub utf16: Vec<u16>,
+}
+
+impl Request {
+    pub fn utf8(id: u64, data: Vec<u8>) -> Request {
+        Request { id, direction: Direction::Utf8ToUtf16, utf8: data, utf16: Vec::new() }
+    }
+
+    pub fn utf16(id: u64, data: Vec<u16>) -> Request {
+        Request { id, direction: Direction::Utf16ToUtf8, utf8: Vec::new(), utf16: data }
+    }
+
+    fn input_bytes(&self) -> usize {
+        match self.direction {
+            Direction::Utf8ToUtf16 => self.utf8.len(),
+            Direction::Utf16ToUtf8 => self.utf16.len() * 2,
+        }
+    }
+}
+
+/// A transcoding response.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    /// `None` = invalid input.
+    pub utf16: Option<Vec<u16>>,
+    pub utf8: Option<Vec<u8>>,
+}
+
+impl Response {
+    /// True iff the input validated and was transcoded.
+    pub fn ok(&self) -> bool {
+        self.utf16.is_some() || self.utf8.is_some()
+    }
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads (engine instances).
+    pub workers: usize,
+    /// Bounded queue depth — the backpressure knob.
+    pub queue_depth: usize,
+    pub engine: EngineChoice,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+            queue_depth: 1024,
+            engine: EngineChoice::Simd { validate: true },
+        }
+    }
+}
+
+enum Job {
+    Work(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// The streaming transcoding service.
+pub struct TranscodeService {
+    tx: SyncSender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<ServiceStats>,
+}
+
+impl TranscodeService {
+    /// Start the service. For `EngineChoice::Xla` this loads and
+    /// compiles the artifacts once per worker (fails fast if missing).
+    pub fn start(config: ServiceConfig) -> anyhow::Result<TranscodeService> {
+        let (tx, rx) = sync_channel::<Job>(config.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(ServiceStats::default());
+        let mut workers = Vec::with_capacity(config.workers);
+        for w in 0..config.workers {
+            let rx = Arc::clone(&rx);
+            let stats = Arc::clone(&stats);
+            let engine = config.engine.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("transcode-worker-{w}"))
+                .spawn(move || worker_loop(rx, stats, engine))
+                .expect("spawn worker");
+            workers.push(handle);
+        }
+        Ok(TranscodeService { tx, workers, stats })
+    }
+
+    /// Submit a request, blocking while the queue is full (backpressure).
+    /// The response arrives on the returned channel.
+    pub fn submit(&self, request: Request) -> Receiver<Response> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Job::Work(request, tx)).expect("service alive");
+        rx
+    }
+
+    /// Submit without blocking; `Err` returns the request when the queue
+    /// is full (the caller sheds load).
+    pub fn try_submit(&self, request: Request) -> Result<Receiver<Response>, Request> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(Job::Work(request, tx)) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(Job::Work(req, _))) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(req)
+            }
+            Err(_) => panic!("service shut down"),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn transcode(&self, request: Request) -> Response {
+        self.submit(request).recv().expect("worker alive")
+    }
+
+    pub fn stats(&self) -> super::StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Drain the queue and join the workers.
+    pub fn shutdown(mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+enum WorkerEngine {
+    Simd { to16: OurUtf8ToUtf16, to8: OurUtf16ToUtf8 },
+    Scalar(crate::baselines::icu_like::IcuLikeTranscoder),
+    Xla(Box<XlaEngine>),
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: EngineChoice) {
+    let engine = match &choice {
+        EngineChoice::Simd { validate } => WorkerEngine::Simd {
+            to16: if *validate {
+                OurUtf8ToUtf16::validating()
+            } else {
+                OurUtf8ToUtf16::non_validating()
+            },
+            to8: OurUtf16ToUtf8::validating(),
+        },
+        EngineChoice::Scalar => {
+            WorkerEngine::Scalar(crate::baselines::icu_like::IcuLikeTranscoder)
+        }
+        EngineChoice::Xla { artifacts_dir } => match XlaEngine::load(artifacts_dir) {
+            Ok(engine) => WorkerEngine::Xla(Box::new(engine)),
+            Err(e) => {
+                eprintln!("worker failed to load XLA artifacts: {e:#}");
+                return;
+            }
+        },
+    };
+
+    loop {
+        let job = {
+            let guard = rx.lock().expect("queue lock");
+            guard.recv()
+        };
+        let Ok(Job::Work(request, reply)) = job else {
+            return; // Shutdown or channel closed
+        };
+        let start = Instant::now();
+        let input_bytes = request.input_bytes();
+        let response = run_one(&engine, &request);
+        let ok = response.ok();
+        let (out_bytes, chars) = match (&response.utf16, &response.utf8) {
+            (Some(w), _) => (w.len() * 2, count_chars_utf16(w)),
+            (_, Some(b)) => (b.len(), crate::transcode::utf16_len_from_utf8(b)),
+            _ => (0, 0),
+        };
+        if ok {
+            stats.record_completion(input_bytes, out_bytes, chars, start.elapsed());
+        } else {
+            stats.invalid.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = reply.send(response);
+    }
+}
+
+fn count_chars_utf16(words: &[u16]) -> usize {
+    words.len() - words.iter().filter(|&&w| (0xD800..0xDC00).contains(&w)).count()
+}
+
+fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
+    match request.direction {
+        Direction::Utf8ToUtf16 => {
+            let utf16 = match engine {
+                WorkerEngine::Simd { to16, .. } => {
+                    let mut dst = vec![0u16; utf16_capacity_for(request.utf8.len())];
+                    to16.convert(&request.utf8, &mut dst).map(|n| {
+                        dst.truncate(n);
+                        dst
+                    })
+                }
+                WorkerEngine::Scalar(engine) => {
+                    let mut dst = vec![0u16; utf16_capacity_for(request.utf8.len())];
+                    Utf8ToUtf16::convert(engine, &request.utf8, &mut dst).map(|n| {
+                        dst.truncate(n);
+                        dst
+                    })
+                }
+                WorkerEngine::Xla(engine) => {
+                    engine.utf8_to_utf16_stream(&request.utf8).unwrap_or_else(|e| {
+                        eprintln!("xla execution error: {e:#}");
+                        None
+                    })
+                }
+            };
+            Response { id: request.id, utf16, utf8: None }
+        }
+        Direction::Utf16ToUtf8 => {
+            let utf8 = match engine {
+                WorkerEngine::Simd { to8, .. } => {
+                    let mut dst = vec![0u8; utf8_capacity_for(request.utf16.len())];
+                    to8.convert(&request.utf16, &mut dst).map(|n| {
+                        dst.truncate(n);
+                        dst
+                    })
+                }
+                WorkerEngine::Scalar(engine) => {
+                    let mut dst = vec![0u8; utf8_capacity_for(request.utf16.len())];
+                    Utf16ToUtf8::convert(engine, &request.utf16, &mut dst).map(|n| {
+                        dst.truncate(n);
+                        dst
+                    })
+                }
+                WorkerEngine::Xla(engine) => {
+                    engine.utf16_to_utf8_stream(&request.utf16).unwrap_or_else(|e| {
+                        eprintln!("xla execution error: {e:#}");
+                        None
+                    })
+                }
+            };
+            Response { id: request.id, utf16: None, utf8 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(engine: EngineChoice) -> TranscodeService {
+        TranscodeService::start(ServiceConfig { workers: 4, queue_depth: 64, engine })
+            .expect("service")
+    }
+
+    #[test]
+    fn simd_service_round_trip() {
+        let svc = service(EngineChoice::Simd { validate: true });
+        let text = "service test: héllo 漢字 🙂 ".repeat(40);
+        let resp = svc.transcode(Request::utf8(1, text.clone().into_bytes()));
+        assert_eq!(resp.utf16.as_deref().unwrap(), &text.encode_utf16().collect::<Vec<_>>()[..]);
+        let units: Vec<u16> = text.encode_utf16().collect();
+        let resp2 = svc.transcode(Request::utf16(2, units));
+        assert_eq!(resp2.utf8.as_deref().unwrap(), text.as_bytes());
+        let snap = svc.stats();
+        assert_eq!(snap.completed, 2);
+        assert!(snap.chars > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_input_reported_not_crashed() {
+        let svc = service(EngineChoice::Simd { validate: true });
+        let resp = svc.transcode(Request::utf8(1, vec![0xFF; 100]));
+        assert!(!resp.ok());
+        assert_eq!(svc.stats().invalid, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let svc = Arc::new(service(EngineChoice::Simd { validate: true }));
+        let mut rxs = Vec::new();
+        for i in 0..200u64 {
+            let text = format!("request {i}: données 漢字 {} ", "x".repeat((i % 97) as usize));
+            rxs.push((text.clone(), svc.submit(Request::utf8(i, text.into_bytes()))));
+        }
+        for (text, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(
+                resp.utf16.as_deref().unwrap(),
+                &text.encode_utf16().collect::<Vec<_>>()[..]
+            );
+        }
+        assert_eq!(svc.stats().completed, 200);
+        Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn scalar_engine_matches_simd_engine() {
+        let simd = service(EngineChoice::Simd { validate: true });
+        let scalar = service(EngineChoice::Scalar);
+        let text = "A/B: ünïcode 文字 🙂 ".repeat(30);
+        let a = simd.transcode(Request::utf8(1, text.clone().into_bytes()));
+        let b = scalar.transcode(Request::utf8(1, text.into_bytes()));
+        assert_eq!(a.utf16, b.utf16);
+        simd.shutdown();
+        scalar.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // 1 worker, tiny queue, slow consumption: try_submit must shed.
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 2,
+            engine: EngineChoice::Simd { validate: true },
+        })
+        .unwrap();
+        let big = "x".repeat(4_000_000).into_bytes();
+        let mut accepted = 0;
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..32u64 {
+            match svc.try_submit(Request::utf8(i, big.clone())) {
+                Ok(rx) => {
+                    accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "queue of 2 must reject under burst");
+        for rx in rxs {
+            assert!(rx.recv().unwrap().ok());
+        }
+        assert_eq!(svc.stats().completed, accepted);
+        assert_eq!(svc.stats().rejected, rejected);
+        svc.shutdown();
+    }
+}

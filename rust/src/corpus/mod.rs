@@ -1,0 +1,310 @@
+//! Synthetic corpus generators reproducing the paper's datasets (§6.3).
+//!
+//! The paper benchmarks two collections: automatically generated
+//! *lipsum* files in 9 languages and stripped *wikipedia-Mars* pages in
+//! 18 languages. Both are characterized in Table 4 by their byte-class
+//! distribution (percentage of 1/2/3/4-byte UTF-8 characters). The
+//! originals live in external repositories; this module synthesizes
+//! statistically equivalent corpora: characters are drawn i.i.d. from
+//! each language's Table 4 distribution, with code points sampled from
+//! the language's real Unicode blocks and the 1-byte budget spent on
+//! realistic ASCII (letters, spaces, punctuation). Same class
+//! statistics → same branch/fast-path behavior in every transcoder →
+//! the same relative performance structure the paper measures.
+//!
+//! Generation is deterministic (SplitMix64 seeded from the dataset
+//! name), so benchmark runs are reproducible bit-for-bit.
+
+mod profiles;
+mod rng;
+
+pub use profiles::{Language, LIPSUM_LANGUAGES, WIKI_LANGUAGES};
+pub use rng::SplitMix64;
+
+/// Which collection a dataset belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collection {
+    /// Table 4(a): lipsum files (~96 KiB UTF-8 each).
+    Lipsum,
+    /// Table 4(b): wikipedia-Mars pages (~256 KiB UTF-8 each).
+    WikipediaMars,
+}
+
+impl Collection {
+    /// Approximate UTF-8 size of the generated file, matching the
+    /// paper's file-size ranges (lipsum: 64–102 KB; wiki: 85–580 KB).
+    pub fn target_utf8_bytes(self) -> usize {
+        match self {
+            Collection::Lipsum => 96 * 1024,
+            Collection::WikipediaMars => 256 * 1024,
+        }
+    }
+}
+
+/// A generated dataset in both encodings.
+#[derive(Clone)]
+pub struct Corpus {
+    pub language: Language,
+    pub collection: Collection,
+    pub utf8: Vec<u8>,
+    pub utf16: Vec<u16>,
+}
+
+/// Table 4 statistics of a corpus.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusStats {
+    /// Average bytes per character in UTF-16.
+    pub utf16_bytes_per_char: f64,
+    /// Average bytes per character in UTF-8.
+    pub utf8_bytes_per_char: f64,
+    /// Percentage of characters by UTF-8 byte length (1..=4).
+    pub pct_by_len: [f64; 4],
+    /// Total characters.
+    pub chars: usize,
+}
+
+impl Corpus {
+    /// Generate the corpus for `language` in `collection`.
+    pub fn generate(language: Language, collection: Collection) -> Corpus {
+        let profile = language.profile(collection);
+        let target = collection.target_utf8_bytes();
+        let seed = {
+            // FNV-1a over the dataset identity for a stable seed.
+            let mut h = 0xcbf29ce484222325u64;
+            for b in language.name().bytes().chain(format!("{collection:?}").bytes()) {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h
+        };
+        let mut rng = SplitMix64::new(seed);
+        let mut utf8 = Vec::with_capacity(target + 8);
+        let mut buf = [0u8; 4];
+        let mut since_space = 0u32;
+        while utf8.len() < target {
+            let class = profile.sample_class(&mut rng);
+            let cp = if class == 0 {
+                // Spend the ASCII budget on word-like text: a space every
+                // ~6 ASCII characters, mixed-case letters otherwise.
+                since_space += 1;
+                if since_space >= 6 {
+                    since_space = 0;
+                    b' ' as u32
+                } else {
+                    profile.sample_codepoint(class, &mut rng)
+                }
+            } else {
+                profile.sample_codepoint(class, &mut rng)
+            };
+            let c = char::from_u32(cp).expect("profiles only emit scalar values");
+            utf8.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+        }
+        let text = String::from_utf8(utf8).expect("generator emits valid UTF-8");
+        let utf16: Vec<u16> = text.encode_utf16().collect();
+        Corpus { language, collection, utf8: text.into_bytes(), utf16 }
+    }
+
+    /// Dataset name as the paper prints it.
+    pub fn name(&self) -> &'static str {
+        self.language.name()
+    }
+
+    /// Number of characters (code points) — the unit of the paper's
+    /// "gigacharacters per second" metric, format-oblivious (§6.1).
+    pub fn chars(&self) -> usize {
+        self.stats().chars
+    }
+
+    /// Compute the Table 4 row for this corpus.
+    pub fn stats(&self) -> CorpusStats {
+        let mut counts = [0usize; 4];
+        let mut i = 0;
+        while i < self.utf8.len() {
+            let b = self.utf8[i];
+            let len = if b < 0x80 {
+                1
+            } else if b < 0xE0 {
+                2
+            } else if b < 0xF0 {
+                3
+            } else {
+                4
+            };
+            counts[len - 1] += 1;
+            i += len;
+        }
+        let chars: usize = counts.iter().sum();
+        let mut pct = [0.0f64; 4];
+        for k in 0..4 {
+            pct[k] = 100.0 * counts[k] as f64 / chars.max(1) as f64;
+        }
+        CorpusStats {
+            utf16_bytes_per_char: 2.0 * self.utf16.len() as f64 / chars.max(1) as f64,
+            utf8_bytes_per_char: self.utf8.len() as f64 / chars.max(1) as f64,
+            pct_by_len: pct,
+            chars,
+        }
+    }
+
+    /// A UTF-8 prefix of at most `n` bytes, trimmed back to a character
+    /// boundary (used by the Fig. 7 input-size sweep).
+    pub fn utf8_prefix(&self, n: usize) -> &[u8] {
+        let mut end = n.min(self.utf8.len());
+        while end > 0 && end < self.utf8.len() && (self.utf8[end] & 0xC0) == 0x80 {
+            end -= 1;
+        }
+        &self.utf8[..end]
+    }
+
+    /// A UTF-16 prefix of at most `n` words, trimmed to avoid splitting
+    /// a surrogate pair.
+    pub fn utf16_prefix(&self, n: usize) -> &[u16] {
+        let mut end = n.min(self.utf16.len());
+        if end > 0 && end < self.utf16.len() && (0xD800..0xDC00).contains(&self.utf16[end - 1]) {
+            end -= 1;
+        }
+        &self.utf16[..end]
+    }
+}
+
+/// Generate every corpus of a collection.
+pub fn generate_collection(collection: Collection) -> Vec<Corpus> {
+    let langs = match collection {
+        Collection::Lipsum => LIPSUM_LANGUAGES,
+        Collection::WikipediaMars => WIKI_LANGUAGES,
+    };
+    langs.iter().map(|&l| Corpus::generate(l, collection)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prelude::*;
+    use crate::transcode::utf16_capacity_for;
+
+    #[test]
+    fn generated_corpora_are_valid_utf8_and_utf16() {
+        for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+            for corpus in generate_collection(collection) {
+                assert!(std::str::from_utf8(&corpus.utf8).is_ok(), "{}", corpus.name());
+                assert!(validate_utf8(&corpus.utf8), "{}", corpus.name());
+                assert!(validate_utf16le(&corpus.utf16), "{}", corpus.name());
+                assert!(String::from_utf16(&corpus.utf16).is_ok(), "{}", corpus.name());
+            }
+        }
+    }
+
+    #[test]
+    fn stats_match_table4_within_tolerance() {
+        for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+            for corpus in generate_collection(collection) {
+                let profile = corpus.language.profile(collection);
+                let stats = corpus.stats();
+                for k in 0..4 {
+                    let target = profile.pct[k];
+                    let got = stats.pct_by_len[k];
+                    assert!(
+                        (got - target).abs() < 2.0,
+                        "{} class {}: target {target}% got {got:.1}%",
+                        corpus.name(),
+                        k + 1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Corpus::generate(Language::Arabic, Collection::Lipsum);
+        let b = Corpus::generate(Language::Arabic, Collection::Lipsum);
+        assert_eq!(a.utf8, b.utf8);
+        // ...and differs across collections
+        let c = Corpus::generate(Language::Arabic, Collection::WikipediaMars);
+        assert_ne!(a.utf8[..1000], c.utf8[..1000]);
+    }
+
+    #[test]
+    fn utf16_matches_std_reencoding() {
+        let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
+        let text = std::str::from_utf8(&corpus.utf8).unwrap();
+        assert_eq!(corpus.utf16, text.encode_utf16().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prefixes_stay_on_boundaries() {
+        let corpus = Corpus::generate(Language::Emoji, Collection::Lipsum);
+        for n in [0, 1, 2, 3, 5, 100, 1001] {
+            let p = corpus.utf8_prefix(n);
+            assert!(std::str::from_utf8(p).is_ok(), "prefix {n}");
+            let w = corpus.utf16_prefix(n);
+            assert!(validate_utf16le(w), "prefix {n}");
+        }
+    }
+
+    #[test]
+    fn emoji_corpus_is_all_supplemental() {
+        let corpus = Corpus::generate(Language::Emoji, Collection::Lipsum);
+        let stats = corpus.stats();
+        assert!(stats.pct_by_len[3] > 98.0);
+        assert!((stats.utf16_bytes_per_char - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn latin_corpus_is_pure_ascii() {
+        let corpus = Corpus::generate(Language::Latin, Collection::Lipsum);
+        assert!(crate::simd::is_ascii(&corpus.utf8));
+    }
+
+    #[test]
+    fn all_engines_agree_on_every_corpus() {
+        // The cross-implementation agreement test: every UTF-8→UTF-16
+        // engine must produce identical output on every dataset.
+        let engines: Vec<Box<dyn Utf8ToUtf16>> = vec![
+            Box::new(OurUtf8ToUtf16::validating()),
+            Box::new(OurUtf8ToUtf16::non_validating()),
+            Box::new(IcuLikeTranscoder),
+            Box::new(LlvmTranscoder),
+            Box::new(FiniteTranscoder),
+            Box::new(SteagallTranscoder),
+            Box::new(Utf8LutTranscoder::validating()),
+            Box::new(Utf8LutTranscoder::full()),
+        ];
+        for corpus in generate_collection(Collection::Lipsum) {
+            let expected: Vec<u16> =
+                std::str::from_utf8(&corpus.utf8).unwrap().encode_utf16().collect();
+            for engine in &engines {
+                let mut dst = vec![0u16; utf16_capacity_for(corpus.utf8.len())];
+                let n = engine
+                    .convert(&corpus.utf8, &mut dst)
+                    .unwrap_or_else(|| panic!("{} failed on {}", engine.name(), corpus.name()));
+                assert_eq!(&dst[..n], &expected[..], "{} on {}", engine.name(), corpus.name());
+            }
+            // Inoue: BMP-only, skip Emoji as the paper does (Table 5
+            // marks it "unsupported").
+            if corpus.language != Language::Emoji {
+                let mut dst = vec![0u16; utf16_capacity_for(corpus.utf8.len())];
+                let n = InoueTranscoder.convert(&corpus.utf8, &mut dst).unwrap();
+                assert_eq!(&dst[..n], &expected[..], "inoue on {}", corpus.name());
+            }
+        }
+    }
+
+    #[test]
+    fn all_utf16_engines_agree_on_every_corpus() {
+        let engines: Vec<Box<dyn Utf16ToUtf8>> = vec![
+            Box::new(OurUtf16ToUtf8::validating()),
+            Box::new(IcuLikeTranscoder),
+            Box::new(LlvmTranscoder),
+            Box::new(Utf8LutTranscoder::validating()),
+        ];
+        for corpus in generate_collection(Collection::Lipsum) {
+            for engine in &engines {
+                let out = engine
+                    .convert_to_vec(&corpus.utf16)
+                    .unwrap_or_else(|| panic!("{} failed on {}", engine.name(), corpus.name()));
+                assert_eq!(out, corpus.utf8, "{} on {}", engine.name(), corpus.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Per-language generation profiles: the Table 4 byte-class
+//! distributions plus realistic Unicode blocks for each class.
+
+use super::rng::SplitMix64;
+use super::Collection;
+
+/// The languages of Table 4 (union of both collections).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Language {
+    Arabic,
+    Chinese,
+    Czech,
+    Emoji,
+    English,
+    Esperanto,
+    French,
+    German,
+    Greek,
+    Hebrew,
+    Hindi,
+    Japanese,
+    Korean,
+    Latin,
+    Persian,
+    Portuguese,
+    Russian,
+    Thai,
+    Turkish,
+    Vietnamese,
+}
+
+/// Table 4(a) rows.
+pub const LIPSUM_LANGUAGES: &[Language] = &[
+    Language::Arabic,
+    Language::Chinese,
+    Language::Emoji,
+    Language::Hebrew,
+    Language::Hindi,
+    Language::Japanese,
+    Language::Korean,
+    Language::Latin,
+    Language::Russian,
+];
+
+/// Table 4(b) rows (the paper prints "Persan" for Persian).
+pub const WIKI_LANGUAGES: &[Language] = &[
+    Language::Arabic,
+    Language::Chinese,
+    Language::Czech,
+    Language::English,
+    Language::Esperanto,
+    Language::French,
+    Language::German,
+    Language::Greek,
+    Language::Hebrew,
+    Language::Hindi,
+    Language::Japanese,
+    Language::Korean,
+    Language::Persian,
+    Language::Portuguese,
+    Language::Russian,
+    Language::Thai,
+    Language::Turkish,
+    Language::Vietnamese,
+];
+
+/// Inclusive code point ranges to draw from, per byte-length class.
+#[derive(Clone, Copy, Debug)]
+pub struct Profile {
+    /// Target percentage of 1/2/3/4-byte characters (Table 4).
+    pub pct: [f64; 4],
+    /// Unicode block(s) for 2-byte characters.
+    pub two_byte: &'static [(u32, u32)],
+    /// Unicode block(s) for 3-byte characters.
+    pub three_byte: &'static [(u32, u32)],
+    /// Unicode block(s) for 4-byte characters.
+    pub four_byte: &'static [(u32, u32)],
+}
+
+// Script blocks.
+const ASCII_LETTERS: (u32, u32) = ('a' as u32, 'z' as u32);
+const LATIN_EXT: &[(u32, u32)] = &[(0x00C0, 0x00FF), (0x0100, 0x017F)];
+const ARABIC: &[(u32, u32)] = &[(0x0621, 0x064A)];
+const HEBREW: &[(u32, u32)] = &[(0x05D0, 0x05EA)];
+const CYRILLIC: &[(u32, u32)] = &[(0x0410, 0x044F)];
+const GREEK: &[(u32, u32)] = &[(0x0391, 0x03C9)];
+const CJK: &[(u32, u32)] = &[(0x4E00, 0x9FBF)];
+const KANA_CJK: &[(u32, u32)] = &[(0x3041, 0x3096), (0x30A1, 0x30FA), (0x4E00, 0x9FBF)];
+const HANGUL: &[(u32, u32)] = &[(0xAC00, 0xD7A3)];
+const DEVANAGARI: &[(u32, u32)] = &[(0x0904, 0x0939), (0x093E, 0x094D)];
+const THAI: &[(u32, u32)] = &[(0x0E01, 0x0E3A), (0x0E40, 0x0E4E)];
+const GENERIC_3B: &[(u32, u32)] = &[(0x0800, 0x2FFF), (0xE000, 0xFFFD)];
+const EMOJI: &[(u32, u32)] = &[(0x1F300, 0x1F64F), (0x1F680, 0x1F6C5)];
+const VIET_EXT: &[(u32, u32)] = &[(0x00C0, 0x00FF), (0x0100, 0x017F), (0x01A0, 0x01B0)];
+const VIET_3B: &[(u32, u32)] = &[(0x1EA0, 0x1EF9)];
+
+impl Language {
+    /// Dataset name as the paper prints it.
+    pub fn name(self) -> &'static str {
+        match self {
+            Language::Arabic => "Arabic",
+            Language::Chinese => "Chinese",
+            Language::Czech => "Czech",
+            Language::Emoji => "Emoji",
+            Language::English => "English",
+            Language::Esperanto => "Esperanto",
+            Language::French => "French",
+            Language::German => "German",
+            Language::Greek => "Greek",
+            Language::Hebrew => "Hebrew",
+            Language::Hindi => "Hindi",
+            Language::Japanese => "Japanese",
+            Language::Korean => "Korean",
+            Language::Latin => "Latin",
+            Language::Persian => "Persan", // sic — the paper's spelling
+            Language::Portuguese => "Portuguese",
+            Language::Russian => "Russian",
+            Language::Thai => "Thai",
+            Language::Turkish => "Turkish",
+            Language::Vietnamese => "Vietnamese",
+        }
+    }
+
+    /// The Table 4 profile of this language in the given collection.
+    pub fn profile(self, collection: Collection) -> Profile {
+        use Collection::*;
+        use Language::*;
+        let (pct, two, three, four): ([f64; 4], _, _, _) = match (self, collection) {
+            // ------- Table 4(a): lipsum -------
+            (Arabic, Lipsum) => ([22., 78., 0., 0.], ARABIC, GENERIC_3B, EMOJI),
+            (Chinese, Lipsum) => ([1., 0., 99., 0.], CYRILLIC, CJK, EMOJI),
+            (Emoji, Lipsum) => ([0., 0., 0., 100.], ARABIC, CJK, EMOJI),
+            (Hebrew, Lipsum) => ([22., 78., 0., 0.], HEBREW, GENERIC_3B, EMOJI),
+            (Hindi, Lipsum) => ([16., 0., 84., 0.], ARABIC, DEVANAGARI, EMOJI),
+            (Japanese, Lipsum) => ([5., 0., 95., 0.], CYRILLIC, KANA_CJK, EMOJI),
+            (Korean, Lipsum) => ([27., 1., 72., 0.], LATIN_EXT, HANGUL, EMOJI),
+            (Latin, Lipsum) => ([100., 0., 0., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (Russian, Lipsum) => ([19., 81., 0., 0.], CYRILLIC, GENERIC_3B, EMOJI),
+            // ------- Table 4(b): wikipedia-Mars -------
+            (Arabic, WikipediaMars) => ([75., 25., 0., 0.], ARABIC, GENERIC_3B, EMOJI),
+            (Chinese, WikipediaMars) => ([84., 1., 15., 0.], LATIN_EXT, CJK, EMOJI),
+            (Czech, WikipediaMars) => ([94., 5., 1., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (English, WikipediaMars) => ([100., 0., 0., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (Esperanto, WikipediaMars) => ([98., 1., 1., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (French, WikipediaMars) => ([98., 2., 0., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (German, WikipediaMars) => ([98., 1., 1., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (Greek, WikipediaMars) => ([73., 26., 1., 0.], GREEK, GENERIC_3B, EMOJI),
+            (Hebrew, WikipediaMars) => ([70., 29., 1., 0.], HEBREW, GENERIC_3B, EMOJI),
+            (Hindi, WikipediaMars) => ([77., 1., 22., 0.], ARABIC, DEVANAGARI, EMOJI),
+            (Japanese, WikipediaMars) => ([80., 1., 19., 0.], LATIN_EXT, KANA_CJK, EMOJI),
+            (Korean, WikipediaMars) => ([82., 1., 17., 0.], LATIN_EXT, HANGUL, EMOJI),
+            (Persian, WikipediaMars) => ([76., 23., 1., 0.], ARABIC, GENERIC_3B, EMOJI),
+            (Portuguese, WikipediaMars) => ([98., 2., 0., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (Russian, WikipediaMars) => ([70., 30., 0., 0.], CYRILLIC, GENERIC_3B, EMOJI),
+            (Thai, WikipediaMars) => ([77., 0., 23., 0.], LATIN_EXT, THAI, EMOJI),
+            (Turkish, WikipediaMars) => ([95., 4., 1., 0.], LATIN_EXT, GENERIC_3B, EMOJI),
+            (Vietnamese, WikipediaMars) => ([92., 4., 4., 0.], VIET_EXT, VIET_3B, EMOJI),
+            // Languages outside their collection: fall back to a sane
+            // profile so the API stays total.
+            (lang, c) => {
+                let other = match c {
+                    Lipsum => WikipediaMars,
+                    WikipediaMars => Lipsum,
+                };
+                return lang.profile(other);
+            }
+        };
+        Profile { pct, two_byte: two, three_byte: three, four_byte: four }
+    }
+}
+
+impl Profile {
+    /// Sample a byte-length class (0..4 meaning 1..=4 bytes).
+    #[inline]
+    pub fn sample_class(&self, rng: &mut SplitMix64) -> usize {
+        let total: f64 = self.pct.iter().sum();
+        let mut u = rng.unit() * total;
+        for k in 0..4 {
+            if u < self.pct[k] {
+                return k;
+            }
+            u -= self.pct[k];
+        }
+        0
+    }
+
+    /// Sample a code point of the given class.
+    #[inline]
+    pub fn sample_codepoint(&self, class: usize, rng: &mut SplitMix64) -> u32 {
+        let ranges: &[(u32, u32)] = match class {
+            0 => return sample_range(&[ASCII_LETTERS], rng),
+            1 => self.two_byte,
+            2 => self.three_byte,
+            _ => self.four_byte,
+        };
+        sample_range(ranges, rng)
+    }
+}
+
+#[inline]
+fn sample_range(ranges: &[(u32, u32)], rng: &mut SplitMix64) -> u32 {
+    let total: u64 = ranges.iter().map(|&(a, b)| (b - a + 1) as u64).sum();
+    let mut v = rng.below(total);
+    for &(a, b) in ranges {
+        let span = (b - a + 1) as u64;
+        if v < span {
+            return a + v as u32;
+        }
+        v -= span;
+    }
+    ranges[0].0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_block_encodes_at_its_class_length() {
+        // Each profile's 2-byte blocks must be 2-byte UTF-8, etc.
+        for &lang in LIPSUM_LANGUAGES.iter().chain(WIKI_LANGUAGES) {
+            for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+                let p = lang.profile(collection);
+                for &(a, b) in p.two_byte {
+                    assert!(a >= 0x80 && b < 0x800, "{lang:?} 2-byte {a:#x}..{b:#x}");
+                }
+                for &(a, b) in p.three_byte {
+                    assert!(a >= 0x800 && b < 0x10000, "{lang:?} 3-byte {a:#x}..{b:#x}");
+                    assert!(!(a <= 0xDFFF && b >= 0xD800), "{lang:?} 3-byte hits surrogates");
+                }
+                for &(a, b) in p.four_byte {
+                    assert!(a >= 0x10000 && b <= 0x10FFFF, "{lang:?} 4-byte {a:#x}..{b:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn class_sampling_matches_distribution() {
+        let p = Language::Korean.profile(Collection::Lipsum);
+        let mut rng = SplitMix64::new(1);
+        let mut counts = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[p.sample_class(&mut rng)] += 1;
+        }
+        for k in 0..4 {
+            let got = 100.0 * counts[k] as f64 / n as f64;
+            assert!((got - p.pct[k]).abs() < 1.0, "class {k}: {got} vs {}", p.pct[k]);
+        }
+    }
+
+    #[test]
+    fn sampled_codepoints_are_scalar_values() {
+        let mut rng = SplitMix64::new(9);
+        for &lang in WIKI_LANGUAGES {
+            let p = lang.profile(Collection::WikipediaMars);
+            for class in 0..4 {
+                for _ in 0..200 {
+                    let cp = p.sample_codepoint(class, &mut rng);
+                    assert!(char::from_u32(cp).is_some(), "{lang:?} class {class} cp {cp:#x}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Criterion-style measurement core, following the paper's methodology
+//! (§6.1): repeat the conversion many times, record per-iteration
+//! timings, report the **minimum** after checking it is close to the
+//! mean ("we verify automatically that the difference between the
+//! minimum and the average is small").
+
+use std::time::{Duration, Instant};
+
+/// One measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub min: Duration,
+    pub mean: Duration,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Gigacharacters per second at `chars` characters per iteration —
+    /// the paper's throughput unit (format-oblivious, §6.1).
+    pub fn gigachars_per_sec(&self, chars: usize) -> f64 {
+        chars as f64 / self.min.as_secs_f64() / 1e9
+    }
+
+    /// Relative gap between min and mean (the paper's <1% sanity check;
+    /// on a shared machine we only report it).
+    pub fn noise(&self) -> f64 {
+        if self.min.is_zero() {
+            return 0.0;
+        }
+        (self.mean.as_secs_f64() - self.min.as_secs_f64()) / self.min.as_secs_f64()
+    }
+}
+
+/// Measure `f` for roughly `budget` of wall-clock time (at least
+/// `min_iters` iterations), returning min/mean statistics.
+pub fn measure<F: FnMut()>(mut f: F, budget: Duration, min_iters: u64) -> BenchResult {
+    // Warmup: one call to populate caches, fault pages, build tables.
+    f();
+    let started = Instant::now();
+    let mut min = Duration::MAX;
+    let mut total = Duration::ZERO;
+    let mut iters = 0u64;
+    while iters < min_iters || (started.elapsed() < budget && iters < 1_000_000) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        min = min.min(dt);
+        total += dt;
+        iters += 1;
+    }
+    BenchResult { min, mean: total / iters.max(1) as u32, iters }
+}
+
+/// Global measurement budget per cell; override with
+/// `SIMDUTF_BENCH_BUDGET_MS` (the test suite uses a tiny budget).
+pub fn default_budget() -> Duration {
+    std::env::var("SIMDUTF_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(200))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_stats() {
+        let mut x = 0u64;
+        let r = measure(
+            || {
+                for i in 0..1000 {
+                    x = x.wrapping_add(i);
+                }
+                std::hint::black_box(x);
+            },
+            Duration::from_millis(5),
+            10,
+        );
+        assert!(r.iters >= 10);
+        assert!(r.min <= r.mean);
+        assert!(r.gigachars_per_sec(1000) > 0.0);
+    }
+}

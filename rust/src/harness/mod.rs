@@ -1,0 +1,478 @@
+//! Regenerates every table and figure of the paper's evaluation (§6).
+//!
+//! Each `table*` / `fig*` function renders the same rows/series the
+//! paper reports, using the synthetic corpora of [`crate::corpus`] and
+//! the engines of [`crate::transcode`] / [`crate::baselines`]. Absolute
+//! numbers differ from the paper's AMD Rome / Apple M1 testbeds (see
+//! DESIGN.md §Substitutions); the comparisons the paper draws — who
+//! wins, by roughly what factor, where the fast paths bite — are the
+//! reproduction target and are asserted in `tests/shape_checks.rs`.
+//!
+//! Engines the paper benchmarks but this repo does not rebuild (u8u16,
+//! utf8sse4) are absent from the tables; DESIGN.md records why.
+
+pub mod bench;
+
+use crate::corpus::{generate_collection, Collection, Corpus, Language};
+use crate::counters::Counters;
+use crate::prelude::*;
+use bench::{default_budget, measure};
+
+/// The validating UTF-8→UTF-16 engine set of Tables 6/7.
+pub fn utf8_validating_engines() -> Vec<Box<dyn Utf8ToUtf16>> {
+    vec![
+        Box::new(IcuLikeTranscoder),
+        Box::new(LlvmTranscoder),
+        Box::new(FiniteTranscoder),
+        Box::new(SteagallTranscoder),
+        Box::new(Utf8LutTranscoder::validating()),
+        Box::new(OurUtf8ToUtf16::validating()),
+    ]
+}
+
+/// The non-validating UTF-8→UTF-16 engine set of Table 5.
+pub fn utf8_non_validating_engines() -> Vec<Box<dyn Utf8ToUtf16>> {
+    vec![
+        Box::new(InoueTranscoder),
+        Box::new(Utf8LutTranscoder::full()),
+        Box::new(OurUtf8ToUtf16::non_validating()),
+    ]
+}
+
+/// The UTF-16→UTF-8 engine set of Tables 9/10.
+pub fn utf16_engines() -> Vec<Box<dyn Utf16ToUtf8>> {
+    vec![
+        Box::new(IcuLikeTranscoder),
+        Box::new(LlvmTranscoder),
+        Box::new(Utf8LutTranscoder::validating()),
+        Box::new(OurUtf16ToUtf8::validating()),
+    ]
+}
+
+/// Benchmark one UTF-8→UTF-16 engine on one corpus; Gc/s, or None if
+/// the engine does not support the content (Inoue × Emoji).
+pub fn bench_utf8_engine(engine: &dyn Utf8ToUtf16, corpus: &Corpus) -> Option<f64> {
+    if !engine.supports_supplemental() && corpus.stats().pct_by_len[3] > 0.5 {
+        return None;
+    }
+    let chars = corpus.chars();
+    let mut dst = vec![0u16; crate::transcode::utf16_capacity_for(corpus.utf8.len())];
+    let result = measure(
+        || {
+            let n = engine.convert(&corpus.utf8, &mut dst).expect("corpus is valid");
+            std::hint::black_box(n);
+        },
+        default_budget(),
+        3,
+    );
+    Some(result.gigachars_per_sec(chars))
+}
+
+/// Benchmark one UTF-16→UTF-8 engine on one corpus (Gc/s).
+pub fn bench_utf16_engine(engine: &dyn Utf16ToUtf8, corpus: &Corpus) -> f64 {
+    let chars = corpus.chars();
+    let mut dst = vec![0u8; crate::transcode::utf8_capacity_for(corpus.utf16.len())];
+    let result = measure(
+        || {
+            let n = engine.convert(&corpus.utf16, &mut dst).expect("corpus is valid");
+            std::hint::black_box(n);
+        },
+        default_budget(),
+        3,
+    );
+    result.gigachars_per_sec(chars)
+}
+
+/// Format a speed the way the paper prints them ("0.29", "1.4", "18.").
+pub fn fmt_speed(v: f64) -> String {
+    if v >= 10.0 {
+        format!("{:.0}.", v)
+    } else if v >= 1.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn render_table(header: &[&str], rows: &[(String, Vec<String>)]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for (name, cells) in rows {
+        widths[0] = widths[0].max(name.len());
+        for (i, c) in cells.iter().enumerate() {
+            widths[i + 1] = widths[i + 1].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    for (i, h) in header.iter().enumerate() {
+        out.push_str(&format!("{:>w$}  ", h, w = widths[i]));
+    }
+    out.push('\n');
+    for (name, cells) in rows {
+        out.push_str(&format!("{:>w$}  ", name, w = widths[0]));
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", c, w = widths[i + 1]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Table 4: quantitative description of the data files.
+pub fn table4() -> String {
+    let mut out = String::from("Table 4 — corpus statistics (generated datasets)\n");
+    for (label, collection) in
+        [("(a) lipsum", Collection::Lipsum), ("(b) wikipedia-Mars", Collection::WikipediaMars)]
+    {
+        out.push_str(&format!("\n{label}\n"));
+        let rows: Vec<(String, Vec<String>)> = generate_collection(collection)
+            .iter()
+            .map(|c| {
+                let s = c.stats();
+                (
+                    c.name().to_string(),
+                    vec![
+                        format!("{:.1}", s.utf16_bytes_per_char),
+                        format!("{:.1}", s.utf8_bytes_per_char),
+                        format!("{:.0}", s.pct_by_len[0]),
+                        format!("{:.0}", s.pct_by_len[1]),
+                        format!("{:.0}", s.pct_by_len[2]),
+                        format!("{:.0}", s.pct_by_len[3]),
+                    ],
+                )
+            })
+            .collect();
+        out.push_str(&render_table(
+            &["", "UTF-16", "UTF-8", "1-byte%", "2-byte%", "3-byte%", "4-byte%"],
+            &rows,
+        ));
+    }
+    out
+}
+
+/// Table 5: non-validating UTF-8→UTF-16, lipsum.
+pub fn table5() -> String {
+    let engines = utf8_non_validating_engines();
+    let corpora = generate_collection(Collection::Lipsum);
+    let mut rows = Vec::new();
+    for corpus in &corpora {
+        let cells = engines
+            .iter()
+            .map(|e| match bench_utf8_engine(e.as_ref(), corpus) {
+                Some(v) => fmt_speed(v),
+                None => "unsupported".to_string(),
+            })
+            .collect();
+        rows.push((corpus.name().to_string(), cells));
+    }
+    let header: Vec<&str> =
+        std::iter::once("").chain(engines.iter().map(|e| e.name())).collect();
+    format!(
+        "Table 5 — non-validating UTF-8→UTF-16 (Gc/s), lipsum\n{}",
+        render_table(&header, &rows)
+    )
+}
+
+fn utf8_speed_table(title: &str, collection: Collection) -> String {
+    let engines = utf8_validating_engines();
+    let corpora = generate_collection(collection);
+    let mut rows = Vec::new();
+    for corpus in &corpora {
+        let cells = engines
+            .iter()
+            .map(|e| fmt_speed(bench_utf8_engine(e.as_ref(), corpus).unwrap()))
+            .collect();
+        rows.push((corpus.name().to_string(), cells));
+    }
+    let header: Vec<&str> =
+        std::iter::once("").chain(engines.iter().map(|e| e.name())).collect();
+    format!("{title}\n{}", render_table(&header, &rows))
+}
+
+/// Table 6: validating UTF-8→UTF-16, lipsum.
+pub fn table6() -> String {
+    utf8_speed_table("Table 6 — validating UTF-8→UTF-16 (Gc/s), lipsum", Collection::Lipsum)
+}
+
+/// Table 7: validating UTF-8→UTF-16, wikipedia-Mars.
+pub fn table7() -> String {
+    utf8_speed_table(
+        "Table 7 — validating UTF-8→UTF-16 (Gc/s), wikipedia-Mars",
+        Collection::WikipediaMars,
+    )
+}
+
+/// Figure 5: bar series (subset of Table 6) for Arabic/Chinese/Japanese/Korean.
+pub fn fig5() -> String {
+    let engines = utf8_validating_engines();
+    let corpora = generate_collection(Collection::Lipsum);
+    let mut out = String::from("Figure 5 — validating UTF-8→UTF-16 (Gc/s)\n");
+    for corpus in corpora.iter().filter(|c| {
+        matches!(
+            c.language,
+            Language::Arabic | Language::Chinese | Language::Japanese | Language::Korean
+        )
+    }) {
+        out.push_str(&format!("{}:\n", corpus.name()));
+        for engine in &engines {
+            let v = bench_utf8_engine(engine.as_ref(), corpus).unwrap();
+            let bar = "#".repeat((v * 30.0).min(120.0) as usize);
+            out.push_str(&format!("  {:>9} {:>5} |{}\n", engine.name(), fmt_speed(v), bar));
+        }
+    }
+    out
+}
+
+/// Table 8: per-path instrumentation on the Arabic lipsum file (the
+/// portable stand-in for the paper's hardware instruction counters —
+/// see DESIGN.md §Substitutions).
+pub fn table8() -> String {
+    let corpus = Corpus::generate(Language::Arabic, Collection::Lipsum);
+    let bytes = corpus.utf8.len();
+    let mut rows = Vec::new();
+
+    // ours: real path counters.
+    let mut counters = Counters::enabled();
+    let mut dst = vec![0u16; crate::transcode::utf16_capacity_for(bytes)];
+    crate::transcode::utf8_to_utf16::convert_counted(&corpus.utf8, &mut dst, true, &mut counters)
+        .unwrap();
+    rows.push((
+        "ours".to_string(),
+        vec![
+            format!("{:.3}", counters.dispatches() as f64 / bytes as f64),
+            format!("{:.1}", counters.ops_per_byte(bytes)),
+            format!("{}", counters.fast_twobyte8),
+            format!("{}", counters.case1),
+        ],
+    ));
+    let mut c16 = Counters::enabled();
+    let mut dst8 = vec![0u8; crate::transcode::utf8_capacity_for(corpus.utf16.len())];
+    crate::transcode::utf16_to_utf8::convert_counted(&corpus.utf16, &mut dst8, true, &mut c16)
+        .unwrap();
+    rows.push((
+        "ours (16→8)".to_string(),
+        vec![
+            format!("{:.3}", c16.dispatches() as f64 / bytes as f64),
+            format!("{:.1}", c16.ops_per_byte(bytes)),
+            "-".to_string(),
+            "-".to_string(),
+        ],
+    ));
+    // Scalar engines: one dispatch per character by construction.
+    let chars = corpus.chars() as f64;
+    for name in ["ICU", "LLVM", "finite"] {
+        rows.push((
+            name.to_string(),
+            vec![
+                format!("{:.3}", chars / bytes as f64),
+                format!("{:.1}", chars / bytes as f64 * 12.0), // ~12 ops/char scalar decode
+                "-".to_string(),
+                "-".to_string(),
+            ],
+        ));
+    }
+    // utf8lut: one dispatch per 16-byte window + big-table traffic.
+    rows.push((
+        "utf8lut".to_string(),
+        vec![
+            format!("{:.3}", (bytes as f64 / 14.0) / bytes as f64),
+            format!("{:.1}", 6.0),
+            format!("table={}B", Utf8LutTranscoder::table_bytes()),
+            "-".to_string(),
+        ],
+    ));
+    format!(
+        "Table 8 — algorithmic counters, Arabic lipsum, UTF-8→UTF-16\n\
+         (dispatches/byte stands in for instructions/byte; see DESIGN.md)\n{}",
+        render_table(&["", "disp/byte", "ops/byte", "detail", "case1"], &rows)
+    )
+}
+
+fn utf16_speed_table(title: &str, collection: Collection) -> String {
+    let engines = utf16_engines();
+    let corpora = generate_collection(collection);
+    let mut rows = Vec::new();
+    for corpus in &corpora {
+        let cells = engines
+            .iter()
+            .map(|e| fmt_speed(bench_utf16_engine(e.as_ref(), corpus)))
+            .collect();
+        rows.push((corpus.name().to_string(), cells));
+    }
+    let header: Vec<&str> =
+        std::iter::once("").chain(engines.iter().map(|e| e.name())).collect();
+    format!("{title}\n{}", render_table(&header, &rows))
+}
+
+/// Table 9: validating UTF-16→UTF-8, lipsum.
+pub fn table9() -> String {
+    utf16_speed_table("Table 9 — validating UTF-16→UTF-8 (Gc/s), lipsum", Collection::Lipsum)
+}
+
+/// Table 10: validating UTF-16→UTF-8, wikipedia-Mars.
+pub fn table10() -> String {
+    utf16_speed_table(
+        "Table 10 — validating UTF-16→UTF-8 (Gc/s), wikipedia-Mars",
+        Collection::WikipediaMars,
+    )
+}
+
+/// Figure 6: bar series (subset of Table 9).
+pub fn fig6() -> String {
+    let engines = utf16_engines();
+    let corpora = generate_collection(Collection::Lipsum);
+    let mut out = String::from("Figure 6 — validating UTF-16→UTF-8 (Gc/s)\n");
+    for corpus in corpora.iter().filter(|c| {
+        matches!(
+            c.language,
+            Language::Arabic | Language::Chinese | Language::Japanese | Language::Korean
+        )
+    }) {
+        out.push_str(&format!("{}:\n", corpus.name()));
+        for engine in &engines {
+            let v = bench_utf16_engine(engine.as_ref(), corpus);
+            let bar = "#".repeat((v * 30.0).min(120.0) as usize);
+            out.push_str(&format!("  {:>8} {:>5} |{}\n", engine.name(), fmt_speed(v), bar));
+        }
+    }
+    out
+}
+
+/// Figure 7: transcoding speed versus input length (prefixes of the
+/// Arabic wikipedia-Mars file, both directions, our engines).
+pub fn fig7() -> String {
+    let corpus = Corpus::generate(Language::Arabic, Collection::WikipediaMars);
+    let to16 = OurUtf8ToUtf16::validating();
+    let to8 = OurUtf16ToUtf8::validating();
+    let mut out = String::from(
+        "Figure 7 — speed vs input length, Arabic wikipedia-Mars prefixes (Gc/s)\n\
+         chars        UTF-8→UTF-16   UTF-16→UTF-8\n",
+    );
+    let mut n = 1usize;
+    while n <= corpus.utf8.len() {
+        let p8 = corpus.utf8_prefix(n);
+        let chars8 = crate::transcode::utf16_len_from_utf8(p8);
+        let mut dst16 = vec![0u16; crate::transcode::utf16_capacity_for(p8.len())];
+        let r8 = measure(
+            || {
+                std::hint::black_box(to16.convert(p8, &mut dst16).unwrap());
+            },
+            default_budget() / 4,
+            5,
+        );
+        let p16 = corpus.utf16_prefix(n);
+        let mut dst8 = vec![0u8; crate::transcode::utf8_capacity_for(p16.len())];
+        let r16 = measure(
+            || {
+                std::hint::black_box(to8.convert(p16, &mut dst8).unwrap());
+            },
+            default_budget() / 4,
+            5,
+        );
+        out.push_str(&format!(
+            "{:>9}    {:>12}   {:>12}\n",
+            chars8,
+            format!("{:.3}", r8.gigachars_per_sec(chars8)),
+            format!("{:.3}", r16.gigachars_per_sec(p16.len())),
+        ));
+        n *= 4;
+    }
+    out
+}
+
+/// Ablation (ours): the XLA/PJRT batch-offload path versus the native
+/// SIMD path on the same content. Requires built artifacts.
+pub fn xla_ablation(artifacts_dir: &std::path::Path) -> String {
+    let corpus = Corpus::generate(Language::Arabic, Collection::Lipsum);
+    // The interpret-mode Pallas kernels are CPU-emulated; keep the input
+    // small so the ablation finishes quickly.
+    let input = corpus.utf8_prefix(16 * 1024);
+    let chars = crate::transcode::utf16_len_from_utf8(input);
+
+    let engine = match crate::runtime::XlaEngine::load(artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => return format!("xla ablation skipped: {e:#}\n"),
+    };
+    let r_xla = measure(
+        || {
+            std::hint::black_box(engine.utf8_to_utf16_stream(input).unwrap().unwrap());
+        },
+        default_budget(),
+        2,
+    );
+    let simd = OurUtf8ToUtf16::validating();
+    let mut dst = vec![0u16; crate::transcode::utf16_capacity_for(input.len())];
+    let r_simd = measure(
+        || {
+            std::hint::black_box(simd.convert(input, &mut dst).unwrap());
+        },
+        default_budget(),
+        2,
+    );
+    format!(
+        "XLA batch-offload ablation — Arabic lipsum prefix ({} chars)\n\
+         platform: {}\n\
+         native SIMD path : {:.4} Gc/s\n\
+         XLA/PJRT path    : {:.6} Gc/s (interpret-mode Pallas on CPU; \
+         see DESIGN.md §Perf for the real-TPU estimate)\n",
+        chars,
+        engine.platform(),
+        r_simd.gigachars_per_sec(chars),
+        r_xla.gigachars_per_sec(chars),
+    )
+}
+
+/// Run a named section (CLI entry point).
+pub fn run_section(name: &str, artifacts_dir: &std::path::Path) -> Option<String> {
+    Some(match name {
+        "table4" => table4(),
+        "table5" => table5(),
+        "table6" => table6(),
+        "table7" => table7(),
+        "table8" => table8(),
+        "table9" => table9(),
+        "table10" => table10(),
+        "fig5" => fig5(),
+        "fig6" => fig6(),
+        "fig7" => fig7(),
+        "xla" => xla_ablation(artifacts_dir),
+        _ => return None,
+    })
+}
+
+/// All section names, in paper order.
+pub const SECTIONS: &[&str] = &[
+    "table4", "table5", "table6", "fig5", "table7", "table8", "table9", "fig6", "table10",
+    "fig7", "xla",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speed_formatting_matches_paper_style() {
+        assert_eq!(fmt_speed(0.29), "0.29");
+        assert_eq!(fmt_speed(1.41), "1.4");
+        assert_eq!(fmt_speed(18.3), "18.");
+    }
+
+    #[test]
+    fn table4_contains_all_rows() {
+        let t = table4();
+        for lang in ["Arabic", "Emoji", "Latin", "Vietnamese", "Persan"] {
+            assert!(t.contains(lang), "missing {lang}:\n{t}");
+        }
+    }
+
+    #[test]
+    fn quick_bench_tables_render() {
+        // Tiny budget so the full table machinery is exercised in tests.
+        std::env::set_var("SIMDUTF_BENCH_BUDGET_MS", "1");
+        let t5 = table5();
+        assert!(t5.contains("unsupported"), "Inoue×Emoji must be unsupported:\n{t5}");
+        assert!(t5.contains("ours"));
+        let t9 = table9();
+        assert!(t9.contains("utf8lut"));
+        std::env::remove_var("SIMDUTF_BENCH_BUDGET_MS");
+    }
+}

@@ -1,0 +1,69 @@
+//! # simdutf-rs
+//!
+//! Reproduction of Lemire & Muła, *"Transcoding Billions of Unicode
+//! Characters per Second with SIMD Instructions"* (Software: Practice &
+//! Experience, 2021; DOI 10.1002/spe.3036).
+//!
+//! The library provides:
+//!
+//! * [`transcode`] — the paper's vectorized UTF-8 ⇄ UTF-16 transcoders
+//!   (Algorithms 2, 3 and 4), validating and non-validating, built on a
+//!   portable SIMD substrate ([`simd`]) and small lookup tables
+//!   ([`tables`]).
+//! * [`validate`] — Keiser–Lemire UTF-8 validation and UTF-16 surrogate
+//!   validation.
+//! * [`baselines`] — every comparison system from the paper's evaluation,
+//!   reimplemented: the LLVM/Unicode-Consortium scalar transcoder, the
+//!   Hoehrmann finite-state transcoder ("finite"), a Steagall-style
+//!   DFA+ASCII-fast-path variant, an ICU-like careful scalar transcoder,
+//!   the Inoue et al. 2008 table-driven SIMD transcoder (Algorithm 1),
+//!   and a utf8lut-style big-table transcoder.
+//! * [`corpus`] — synthetic corpus generators reproducing the byte-class
+//!   distributions of the paper's lipsum and wikipedia-Mars datasets
+//!   (Table 4).
+//! * [`coordinator`] — a streaming transcoding service (router, batcher,
+//!   worker pool, backpressure, metrics) that serves the transcoders.
+//! * [`runtime`] — a PJRT client that loads the AOT-compiled JAX/Pallas
+//!   batch transcoding graph (`artifacts/*.hlo.txt`) for batch offload.
+//! * [`harness`] — regenerates every table and figure of the paper's
+//!   evaluation section.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla_extension rpath in this
+//! // offline image; the same flow runs in examples/quickstart.rs.)
+//! use simdutf_rs::prelude::*;
+//!
+//! let engine = OurUtf8ToUtf16::validating();
+//! let src = "héllo wörld — 漢字 🙂".as_bytes();
+//! let utf16 = engine.convert_to_vec(src).expect("valid UTF-8");
+//! assert_eq!(String::from_utf16(&utf16).unwrap(), "héllo wörld — 漢字 🙂");
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod corpus;
+pub mod counters;
+pub mod harness;
+pub mod runtime;
+pub mod scalar;
+pub mod simd;
+pub mod tables;
+pub mod transcode;
+pub mod validate;
+
+/// Convenient re-exports of the main public API.
+pub mod prelude {
+    pub use crate::baselines::{
+        finite::FiniteTranscoder, icu_like::IcuLikeTranscoder, inoue::InoueTranscoder,
+        llvm::LlvmTranscoder, steagall::SteagallTranscoder, utf8lut::Utf8LutTranscoder,
+    };
+    pub use crate::corpus::{
+        Collection, Corpus, CorpusStats, Language, LIPSUM_LANGUAGES, WIKI_LANGUAGES,
+    };
+    pub use crate::transcode::{
+        utf16_to_utf8::OurUtf16ToUtf8, utf8_to_utf16::OurUtf8ToUtf16, Utf16ToUtf8, Utf8ToUtf16,
+    };
+    pub use crate::validate::{validate_utf16le, validate_utf8, Utf8Validator};
+}

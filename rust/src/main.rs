@@ -1,0 +1,204 @@
+//! simdutf-cli — leader entrypoint for the transcoding system.
+//!
+//! Subcommands (CLI is hand-rolled; the offline crate set has no clap):
+//!
+//! ```text
+//! simdutf-cli harness [section|all] [--artifacts DIR]
+//!     Regenerate the paper's tables/figures (table4..table10, fig5..fig7, xla).
+//! simdutf-cli transcode --direction 8to16|16to8 <file>
+//!     Transcode a file to stdout (UTF-16 side is little-endian bytes).
+//! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla]
+//!     Run the streaming service against a synthetic workload and print
+//!     throughput/latency stats.
+//! simdutf-cli validate <file>
+//!     Validate a file as UTF-8 (exit code 1 when invalid).
+//! ```
+
+use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
+use simdutf_rs::prelude::*;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("harness") => cmd_harness(&args[1..]),
+        Some("transcode") => cmd_transcode(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("validate") => cmd_validate(&args[1..]),
+        _ => {
+            eprintln!("usage: simdutf-cli <harness|transcode|serve|validate> ...");
+            eprintln!("see the module docs of rust/src/main.rs");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn cmd_harness(args: &[String]) -> i32 {
+    let artifacts = PathBuf::from(
+        flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let section = args.iter().find(|a| !a.starts_with("--")).cloned();
+    let sections: Vec<&str> = match section.as_deref() {
+        None | Some("all") => simdutf_rs::harness::SECTIONS.to_vec(),
+        Some(s) => vec![s],
+    };
+    for s in sections {
+        match simdutf_rs::harness::run_section(s, &artifacts) {
+            Some(out) => println!("{out}"),
+            None => {
+                eprintln!("unknown section {s}; known: {:?}", simdutf_rs::harness::SECTIONS);
+                return 2;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_transcode(args: &[String]) -> i32 {
+    let direction = flag_value(args, "--direction").unwrap_or_else(|| "8to16".to_string());
+    let path = match args.iter().rev().find(|a| !a.starts_with("--")) {
+        Some(p) => p.clone(),
+        None => {
+            eprintln!("transcode: missing input file");
+            return 2;
+        }
+    };
+    let data = match std::fs::read(&path) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("transcode: reading {path}: {e}");
+            return 1;
+        }
+    };
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    match direction.as_str() {
+        "8to16" => {
+            let engine = OurUtf8ToUtf16::validating();
+            match engine.convert_to_vec(&data) {
+                Some(words) => {
+                    for w in words {
+                        out.write_all(&w.to_le_bytes()).unwrap();
+                    }
+                    0
+                }
+                None => {
+                    eprintln!("transcode: invalid UTF-8 input");
+                    1
+                }
+            }
+        }
+        "16to8" => {
+            let words: Vec<u16> =
+                data.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+            let engine = OurUtf16ToUtf8::validating();
+            match engine.convert_to_vec(&words) {
+                Some(bytes) => {
+                    out.write_all(&bytes).unwrap();
+                    0
+                }
+                None => {
+                    eprintln!("transcode: invalid UTF-16 input");
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("transcode: unknown direction {other} (use 8to16|16to8)");
+            2
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let workers = flag_value(args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let requests: usize =
+        flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let engine = match flag_value(args, "--engine").as_deref() {
+        None | Some("simd") => EngineChoice::Simd { validate: true },
+        Some("scalar") => EngineChoice::Scalar,
+        Some("xla") => EngineChoice::Xla {
+            artifacts_dir: PathBuf::from(
+                flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".to_string()),
+            ),
+        },
+        Some(other) => {
+            eprintln!("serve: unknown engine {other}");
+            return 2;
+        }
+    };
+
+    println!("starting service: workers={workers} engine={engine:?} requests={requests}");
+    let service =
+        match TranscodeService::start(ServiceConfig { workers, queue_depth: 1024, engine }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: {e:#}");
+                return 1;
+            }
+        };
+
+    // Synthetic mixed workload drawn from the paper's corpora.
+    let corpora = simdutf_rs::corpus::generate_collection(Collection::WikipediaMars);
+    let started = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let corpus = &corpora[i % corpora.len()];
+        let req = if i % 2 == 0 {
+            Request::utf8(i as u64, corpus.utf8_prefix(8192).to_vec())
+        } else {
+            Request::utf16(i as u64, corpus.utf16_prefix(4096).to_vec())
+        };
+        pending.push(service.submit(req));
+    }
+    let mut failures = 0usize;
+    for rx in pending {
+        if !rx.recv().expect("worker alive").ok() {
+            failures += 1;
+        }
+    }
+    let elapsed = started.elapsed();
+    let snap = service.stats();
+    println!("completed {requests} requests in {elapsed:?} ({failures} failures)");
+    println!("{snap}");
+    println!(
+        "throughput: {:.3} Gchars/s, {:.1} MB/s in",
+        snap.chars as f64 / elapsed.as_secs_f64() / 1e9,
+        snap.bytes_in as f64 / elapsed.as_secs_f64() / 1e6
+    );
+    service.shutdown();
+    if failures > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_validate(args: &[String]) -> i32 {
+    let Some(path) = args.iter().find(|a| !a.starts_with("--")) else {
+        eprintln!("validate: missing input file");
+        return 2;
+    };
+    match std::fs::read(path) {
+        Ok(data) => {
+            if validate_utf8(&data) {
+                println!("valid UTF-8 ({} bytes)", data.len());
+                0
+            } else {
+                println!("INVALID UTF-8");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("validate: {e}");
+            1
+        }
+    }
+}

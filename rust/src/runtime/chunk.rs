@@ -1,0 +1,143 @@
+//! Stream ⇄ block chunking for the batch (XLA) path.
+//!
+//! The kernels' block contract: 64-unit rows, zero-padded, rows start
+//! and end on character boundaries (no UTF-8 sequence or surrogate pair
+//! straddles a row). These functions enforce that contract and are the
+//! mirror image of `python/compile/kernels/ref.py`.
+
+/// Split UTF-8 bytes into character-aligned rows.
+///
+/// Returns `(rows, lengths)` where `rows` is row-major `(n, 64)` i32.
+/// On *invalid* input the alignment heuristic may produce unaligned rows
+/// (e.g. 64 straight continuation bytes); the validation kernel then
+/// rejects them, which is the desired behavior.
+pub fn utf8_blocks(src: &[u8]) -> (Vec<i32>, Vec<i32>) {
+    let mut rows = Vec::new();
+    let mut lens = Vec::new();
+    let mut i = 0usize;
+    while i < src.len() {
+        let mut end = (i + super::BLOCK).min(src.len());
+        while end < src.len() && end > i && (src[end] & 0xC0) == 0x80 {
+            end -= 1;
+        }
+        if end == i {
+            end = (i + super::BLOCK).min(src.len());
+        }
+        let mut row = vec![0i32; super::BLOCK];
+        for (j, &b) in src[i..end].iter().enumerate() {
+            row[j] = b as i32;
+        }
+        rows.extend_from_slice(&row);
+        lens.push((end - i) as i32);
+        i = end;
+    }
+    if lens.is_empty() {
+        rows.extend(std::iter::repeat(0).take(super::BLOCK));
+        lens.push(0);
+    }
+    (rows, lens)
+}
+
+/// Split UTF-16 units into pair-aligned rows.
+pub fn utf16_blocks(src: &[u16]) -> (Vec<i32>, Vec<i32>) {
+    let mut rows = Vec::new();
+    let mut lens = Vec::new();
+    let mut i = 0usize;
+    while i < src.len() {
+        let mut end = (i + super::BLOCK).min(src.len());
+        if end < src.len() && (0xD800..0xDC00).contains(&src[end - 1]) {
+            end -= 1;
+        }
+        let mut row = vec![0i32; super::BLOCK];
+        for (j, &w) in src[i..end].iter().enumerate() {
+            row[j] = w as i32;
+        }
+        rows.extend_from_slice(&row);
+        lens.push((end - i) as i32);
+        i = end;
+    }
+    if lens.is_empty() {
+        rows.extend(std::iter::repeat(0).take(super::BLOCK));
+        lens.push(0);
+    }
+    (rows, lens)
+}
+
+/// Iterate over fixed-size padded batches of rows.
+///
+/// Yields `(blocks, lengths)` pairs where `blocks` is `(batch, width)`
+/// row-major and `lengths` is `(batch,)`; the final batch is zero-padded
+/// (padding rows have length 0 and are skipped during reassembly).
+pub fn batches<'a>(
+    rows: &'a [i32],
+    lens: &'a [i32],
+    batch: usize,
+    width: usize,
+) -> impl Iterator<Item = (Vec<i32>, Vec<i32>)> + 'a {
+    let n = lens.len();
+    (0..n.div_ceil(batch)).map(move |b| {
+        let lo = b * batch;
+        let hi = ((b + 1) * batch).min(n);
+        let mut blocks = vec![0i32; batch * width];
+        let mut lengths = vec![0i32; batch];
+        blocks[..(hi - lo) * width].copy_from_slice(&rows[lo * width..hi * width]);
+        lengths[..hi - lo].copy_from_slice(&lens[lo..hi]);
+        (blocks, lengths)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::BLOCK;
+    use super::*;
+
+    #[test]
+    fn utf8_rows_are_char_aligned() {
+        let text = "é漢🙂a".repeat(40);
+        let (rows, lens) = utf8_blocks(text.as_bytes());
+        assert_eq!(rows.len(), lens.len() * BLOCK);
+        // Reassemble and verify each row is independently valid UTF-8.
+        let mut reassembled = Vec::new();
+        for (r, &len) in lens.iter().enumerate() {
+            let row: Vec<u8> =
+                rows[r * BLOCK..r * BLOCK + len as usize].iter().map(|&v| v as u8).collect();
+            assert!(std::str::from_utf8(&row).is_ok(), "row {r} not aligned");
+            reassembled.extend(row);
+        }
+        assert_eq!(reassembled, text.as_bytes());
+    }
+
+    #[test]
+    fn utf16_rows_do_not_split_pairs() {
+        let text = "🙂".repeat(100); // 200 units, all pairs
+        let units: Vec<u16> = text.encode_utf16().collect();
+        let (rows, lens) = utf16_blocks(&units);
+        let mut reassembled = Vec::new();
+        for (r, &len) in lens.iter().enumerate() {
+            let row: Vec<u16> =
+                rows[r * BLOCK..r * BLOCK + len as usize].iter().map(|&v| v as u16).collect();
+            assert!(crate::validate::validate_utf16le(&row), "row {r} splits a pair");
+            reassembled.extend(row);
+        }
+        assert_eq!(reassembled, units);
+    }
+
+    #[test]
+    fn empty_input_yields_one_empty_row() {
+        let (rows, lens) = utf8_blocks(b"");
+        assert_eq!(lens, vec![0]);
+        assert_eq!(rows.len(), BLOCK);
+    }
+
+    #[test]
+    fn batching_pads_final_batch() {
+        let (rows, lens) = utf8_blocks("x".repeat(70 * BLOCK).as_bytes());
+        assert_eq!(lens.len(), 70);
+        let batches: Vec<_> = batches(&rows, &lens, 64, BLOCK).collect();
+        assert_eq!(batches.len(), 2);
+        let (b1, l1) = &batches[1];
+        assert_eq!(l1.len(), 64);
+        assert_eq!(b1.len(), 64 * BLOCK);
+        assert!(l1[6..].iter().all(|&l| l == 0), "padding rows empty");
+    }
+}

@@ -1,0 +1,287 @@
+//! Strict scalar UTF-8/UTF-16 primitives.
+//!
+//! These routines are the character-at-a-time ground truth. The
+//! vectorized transcoders use them for the final partial block ("We fall
+//! back on a conventional approach to process the remaining bytes",
+//! §4/§5), and the test suite uses them as one of several independent
+//! oracles.
+
+/// Error raised by the strict decoders.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodingError;
+
+/// Decode one UTF-8 character from the front of `src`.
+///
+/// Enforces all six rules of §3: byte ranges, continuation counts,
+/// overlong forms, the U+10FFFF ceiling and the surrogate gap. Returns
+/// `(code point, bytes consumed)`.
+#[inline]
+pub fn decode_utf8_char(src: &[u8]) -> Result<(u32, usize), CodingError> {
+    let b0 = *src.first().ok_or(CodingError)?;
+    if b0 < 0x80 {
+        return Ok((b0 as u32, 1));
+    }
+    if b0 < 0xC2 {
+        // 0x80..0xBF: stray continuation; 0xC0/0xC1: overlong 2-byte.
+        return Err(CodingError);
+    }
+    let cont = |i: usize| -> Result<u32, CodingError> {
+        let b = *src.get(i).ok_or(CodingError)?;
+        if b & 0xC0 != 0x80 {
+            return Err(CodingError);
+        }
+        Ok((b & 0x3F) as u32)
+    };
+    if b0 < 0xE0 {
+        let cp = ((b0 & 0x1F) as u32) << 6 | cont(1)?;
+        // b0 >= 0xC2 already rules out overlong forms here.
+        Ok((cp, 2))
+    } else if b0 < 0xF0 {
+        let cp = ((b0 & 0x0F) as u32) << 12 | cont(1)? << 6 | cont(2)?;
+        if cp < 0x800 {
+            return Err(CodingError); // overlong 3-byte
+        }
+        if (0xD800..=0xDFFF).contains(&cp) {
+            return Err(CodingError); // surrogate
+        }
+        Ok((cp, 3))
+    } else if b0 < 0xF5 {
+        let cp = ((b0 & 0x07) as u32) << 18 | cont(1)? << 12 | cont(2)? << 6 | cont(3)?;
+        if cp < 0x10000 {
+            return Err(CodingError); // overlong 4-byte
+        }
+        if cp > 0x10FFFF {
+            return Err(CodingError); // beyond Unicode
+        }
+        Ok((cp, 4))
+    } else {
+        Err(CodingError) // 0xF5..0xFF can never appear
+    }
+}
+
+/// Decode one UTF-16 (little-endian word order) character from the front
+/// of `src`. Returns `(code point, words consumed)`.
+#[inline]
+pub fn decode_utf16_char(src: &[u16]) -> Result<(u32, usize), CodingError> {
+    let w0 = *src.first().ok_or(CodingError)?;
+    if !(0xD800..=0xDFFF).contains(&w0) {
+        return Ok((w0 as u32, 1));
+    }
+    if w0 >= 0xDC00 {
+        return Err(CodingError); // lone low surrogate
+    }
+    let w1 = *src.get(1).ok_or(CodingError)?;
+    if !(0xDC00..=0xDFFF).contains(&w1) {
+        return Err(CodingError); // high surrogate not followed by low
+    }
+    let cp = 0x10000 + (((w0 - 0xD800) as u32) << 10) + (w1 - 0xDC00) as u32;
+    Ok((cp, 2))
+}
+
+/// Encode a code point as UTF-16; returns the number of words written.
+/// `cp` must be a valid Unicode scalar value.
+#[inline]
+pub fn encode_utf16_char(cp: u32, dst: &mut [u16]) -> usize {
+    if cp < 0x10000 {
+        dst[0] = cp as u16;
+        1
+    } else {
+        let v = cp - 0x10000;
+        dst[0] = 0xD800 + (v >> 10) as u16;
+        dst[1] = 0xDC00 + (v & 0x3FF) as u16;
+        2
+    }
+}
+
+/// Encode a code point as UTF-8; returns the number of bytes written.
+/// `cp` must be a valid Unicode scalar value.
+#[inline]
+pub fn encode_utf8_char(cp: u32, dst: &mut [u8]) -> usize {
+    if cp < 0x80 {
+        dst[0] = cp as u8;
+        1
+    } else if cp < 0x800 {
+        dst[0] = 0xC0 | (cp >> 6) as u8;
+        dst[1] = 0x80 | (cp & 0x3F) as u8;
+        2
+    } else if cp < 0x10000 {
+        dst[0] = 0xE0 | (cp >> 12) as u8;
+        dst[1] = 0x80 | ((cp >> 6) & 0x3F) as u8;
+        dst[2] = 0x80 | (cp & 0x3F) as u8;
+        3
+    } else {
+        dst[0] = 0xF0 | (cp >> 18) as u8;
+        dst[1] = 0x80 | ((cp >> 12) & 0x3F) as u8;
+        dst[2] = 0x80 | ((cp >> 6) & 0x3F) as u8;
+        dst[3] = 0x80 | (cp & 0x3F) as u8;
+        4
+    }
+}
+
+/// Encode a code point (including lone surrogates) as generalized UTF-8
+/// (WTF-8). Used by the non-validating UTF-16 → UTF-8 engine to stay
+/// total on garbage input; identical to [`encode_utf8_char`] on scalar
+/// values.
+#[inline]
+pub fn encode_utf8_char_wtf8(cp: u32, dst: &mut [u8]) -> usize {
+    // Surrogates fall in the 3-byte range; the 3-byte encoder emits the
+    // natural (invalid-as-UTF-8) byte sequence for them.
+    encode_utf8_char(cp, dst)
+}
+
+/// Scalar validating UTF-8 → UTF-16 transcoder over a whole buffer.
+/// Returns the number of words written, or `None` on invalid input.
+pub fn utf8_to_utf16(src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    let mut p = 0;
+    let mut q = 0;
+    while p < src.len() {
+        let (cp, len) = decode_utf8_char(&src[p..]).ok()?;
+        p += len;
+        q += encode_utf16_char(cp, &mut dst[q..]);
+    }
+    Some(q)
+}
+
+/// Scalar validating UTF-16 → UTF-8 transcoder over a whole buffer.
+/// Returns the number of bytes written, or `None` on invalid input.
+pub fn utf16_to_utf8(src: &[u16], dst: &mut [u8]) -> Option<usize> {
+    let mut p = 0;
+    let mut q = 0;
+    while p < src.len() {
+        let (cp, len) = decode_utf16_char(&src[p..]).ok()?;
+        p += len;
+        q += encode_utf8_char(cp, &mut dst[q..]);
+    }
+    Some(q)
+}
+
+/// Non-validating scalar UTF-8 → UTF-16: assumes well-formed input and
+/// decodes by leading-byte length only (used by non-validating tails).
+pub fn utf8_to_utf16_unchecked(src: &[u8], dst: &mut [u16]) -> usize {
+    let mut p = 0;
+    let mut q = 0;
+    while p < src.len() {
+        let b0 = src[p];
+        if b0 < 0x80 {
+            dst[q] = b0 as u16;
+            p += 1;
+            q += 1;
+        } else if b0 < 0xE0 {
+            if p + 2 > src.len() {
+                break;
+            }
+            dst[q] = ((b0 & 0x1F) as u16) << 6 | (src[p + 1] & 0x3F) as u16;
+            p += 2;
+            q += 1;
+        } else if b0 < 0xF0 {
+            if p + 3 > src.len() {
+                break;
+            }
+            dst[q] = ((b0 & 0x0F) as u16) << 12
+                | ((src[p + 1] & 0x3F) as u16) << 6
+                | (src[p + 2] & 0x3F) as u16;
+            p += 3;
+            q += 1;
+        } else {
+            if p + 4 > src.len() {
+                break;
+            }
+            let cp = ((b0 & 0x07) as u32) << 18
+                | ((src[p + 1] & 0x3F) as u32) << 12
+                | ((src[p + 2] & 0x3F) as u32) << 6
+                | (src[p + 3] & 0x3F) as u32;
+            q += encode_utf16_char(cp, &mut dst[q..]);
+            p += 4;
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_matches_char_encoding() {
+        for cp in [0u32, 0x41, 0x7F, 0x80, 0x7FF, 0x800, 0xD7FF, 0xE000, 0xFFFF, 0x10000, 0x10FFFF]
+        {
+            let c = char::from_u32(cp).unwrap();
+            let mut buf = [0u8; 4];
+            let s = c.encode_utf8(&mut buf);
+            let (decoded, len) = decode_utf8_char(s.as_bytes()).unwrap();
+            assert_eq!(decoded, cp);
+            assert_eq!(len, s.len());
+        }
+    }
+
+    #[test]
+    fn rejects_every_error_class() {
+        // Rule 1: five-high-bit bytes / F5..FF
+        assert!(decode_utf8_char(&[0xF8, 0x80, 0x80, 0x80, 0x80]).is_err());
+        assert!(decode_utf8_char(&[0xFF]).is_err());
+        // Rule 2: truncated sequences
+        assert!(decode_utf8_char(&[0xC2]).is_err());
+        assert!(decode_utf8_char(&[0xE0, 0xA0]).is_err());
+        assert!(decode_utf8_char(&[0xF0, 0x90, 0x80]).is_err());
+        // Rule 3: stray continuation
+        assert!(decode_utf8_char(&[0x80]).is_err());
+        assert!(decode_utf8_char(&[0xBF, 0x41]).is_err());
+        // Rule 4: overlong forms
+        assert!(decode_utf8_char(&[0xC0, 0x80]).is_err());
+        assert!(decode_utf8_char(&[0xC1, 0xBF]).is_err());
+        assert!(decode_utf8_char(&[0xE0, 0x80, 0x80]).is_err());
+        assert!(decode_utf8_char(&[0xE0, 0x9F, 0xBF]).is_err());
+        assert!(decode_utf8_char(&[0xF0, 0x80, 0x80, 0x80]).is_err());
+        assert!(decode_utf8_char(&[0xF0, 0x8F, 0xBF, 0xBF]).is_err());
+        // Rule 5: > U+10FFFF
+        assert!(decode_utf8_char(&[0xF4, 0x90, 0x80, 0x80]).is_err());
+        // Rule 6: surrogates
+        assert!(decode_utf8_char(&[0xED, 0xA0, 0x80]).is_err());
+        assert!(decode_utf8_char(&[0xED, 0xBF, 0xBF]).is_err());
+        // Boundary validity just outside each error
+        assert!(decode_utf8_char(&[0xED, 0x9F, 0xBF]).is_ok()); // U+D7FF
+        assert!(decode_utf8_char(&[0xEE, 0x80, 0x80]).is_ok()); // U+E000
+        assert!(decode_utf8_char(&[0xF4, 0x8F, 0xBF, 0xBF]).is_ok()); // U+10FFFF
+    }
+
+    #[test]
+    fn utf16_surrogate_pairs() {
+        let s = "🙂"; // U+1F642
+        let units: Vec<u16> = s.encode_utf16().collect();
+        assert_eq!(units.len(), 2);
+        let (cp, n) = decode_utf16_char(&units).unwrap();
+        assert_eq!(cp, 0x1F642);
+        assert_eq!(n, 2);
+        // lone surrogates rejected
+        assert!(decode_utf16_char(&[0xD800]).is_err());
+        assert!(decode_utf16_char(&[0xD800, 0x0041]).is_err());
+        assert!(decode_utf16_char(&[0xDC00]).is_err());
+        assert!(decode_utf16_char(&[0xDC00, 0xD800]).is_err());
+    }
+
+    #[test]
+    fn roundtrip_whole_buffer() {
+        let text = "ASCII, Ünïcødé, 漢字テスト, עברית, 🙂🚀🌍 mixed";
+        let bytes = text.as_bytes();
+        let mut utf16 = vec![0u16; bytes.len()];
+        let n16 = utf8_to_utf16(bytes, &mut utf16).unwrap();
+        assert_eq!(
+            utf16[..n16],
+            text.encode_utf16().collect::<Vec<u16>>()[..]
+        );
+        let mut utf8 = vec![0u8; n16 * 3];
+        let n8 = utf16_to_utf8(&utf16[..n16], &mut utf8).unwrap();
+        assert_eq!(&utf8[..n8], bytes);
+    }
+
+    #[test]
+    fn unchecked_matches_checked_on_valid_input() {
+        let text = "abcé漢🙂x";
+        let mut a = vec![0u16; 32];
+        let mut b = vec![0u16; 32];
+        let na = utf8_to_utf16(text.as_bytes(), &mut a).unwrap();
+        let nb = utf8_to_utf16_unchecked(text.as_bytes(), &mut b);
+        assert_eq!(na, nb);
+        assert_eq!(a[..na], b[..nb]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Portable SIMD substrate.
+//!
+//! The paper's algorithms are expressed in terms of a handful of SIMD
+//! primitives: 16-byte loads, byte-wise comparisons, `movemask`-style mask
+//! extraction, and `pshufb`-style arbitrary byte shuffles. This module
+//! provides those primitives as fixed-width value types (`U8x16`,
+//! `U16x8`) implemented in safe, loop-based Rust. At `opt-level=3` the
+//! loops autovectorize into the corresponding machine SIMD on x64
+//! (SSE/AVX2) and aarch64 (NEON); on other targets they remain correct
+//! scalar code — the same portability property the paper claims for its
+//! high-level C++ approach (§6.1).
+//!
+//! The substrate intentionally mirrors the x64/NEON instruction semantics
+//! that the paper relies on:
+//!
+//! * [`U8x16::shuffle`] is `pshufb`: an index with the high bit set
+//!   produces a zero byte, otherwise the low 4 bits select a source lane.
+//! * [`U8x16::movemask`] is `pmovmskb`: one bit per lane, bit `i` = MSB of
+//!   lane `i` (lane 0 → least-significant bit).
+//! * [`U8x16::lookup16`] is the nibble-table lookup used by the
+//!   Keiser–Lemire validator (a `pshufb` against a constant table).
+
+mod u16x8;
+mod u8x16;
+
+pub use u16x8::U16x8;
+pub use u8x16::U8x16;
+
+/// 32-lane byte permute (the POWER `vperm` / AVX2 two-source shuffle the
+/// Inoue et al. transcoder relies on): lane `i` of the result is
+/// `concat(lo, hi)[idx[i] & 0x1F]`, or zero when `idx[i] & 0x80` is set.
+#[inline]
+pub fn shuffle32(lo: U8x16, hi: U8x16, idx: U8x16) -> U8x16 {
+    let mut cat = [0u8; 32];
+    cat[..16].copy_from_slice(&lo.0);
+    cat[16..].copy_from_slice(&hi.0);
+    let mut v = [0u8; 16];
+    for i in 0..16 {
+        let j = idx.0[i];
+        v[i] = if j & 0x80 != 0 { 0 } else { cat[(j & 0x1F) as usize] };
+    }
+    U8x16(v)
+}
+
+/// Compute the 64-bit "is not a continuation byte" mask for a 64-byte
+/// block (Algorithm 3, line 8). Bit `i` is set iff `block[i]` is NOT a
+/// UTF-8 continuation byte (i.e. it is ASCII or a leading byte).
+///
+/// A byte is a continuation byte iff its two most significant bits are
+/// `10`, i.e. iff, read as a signed 8-bit integer, it is less than -64
+/// (the paper phrases this as "all bytes less than -65 ... are
+/// continuation bytes", comparing with <= -65 == < -64).
+#[inline]
+pub fn not_continuation_mask64(block: &[u8; 64]) -> u64 {
+    let mut m = 0u64;
+    for i in 0..64 {
+        // continuation <=> (b & 0xC0) == 0x80
+        let is_not_cont = (block[i] & 0xC0) != 0x80;
+        m |= (is_not_cont as u64) << i;
+    }
+    m
+}
+
+/// Compute the 64-bit ASCII mask for a 64-byte block: bit `i` set iff
+/// `block[i] < 0x80`.
+#[inline]
+pub fn ascii_mask64(block: &[u8; 64]) -> u64 {
+    let mut m = 0u64;
+    for i in 0..64 {
+        m |= (((block[i] >> 7) ^ 1) as u64) << i;
+    }
+    m
+}
+
+/// True iff every byte of `block` is ASCII (fast path of Algorithm 3).
+#[inline]
+pub fn is_ascii_block(block: &[u8; 64]) -> bool {
+    // OR-reduce then test the sign bit: one pass, autovectorizes.
+    let mut acc = 0u8;
+    for &b in block.iter() {
+        acc |= b;
+    }
+    acc < 0x80
+}
+
+/// True iff every byte of the (arbitrary-length) slice is ASCII.
+#[inline]
+pub fn is_ascii(bytes: &[u8]) -> bool {
+    let mut acc = 0u8;
+    for &b in bytes {
+        acc |= b;
+    }
+    acc < 0x80
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn not_continuation_mask_matches_definition() {
+        let mut block = [0u8; 64];
+        for i in 0..64 {
+            block[i] = (i * 37 % 256) as u8;
+        }
+        let m = not_continuation_mask64(&block);
+        for i in 0..64 {
+            let expected = (block[i] & 0xC0) != 0x80;
+            assert_eq!((m >> i) & 1 == 1, expected, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn ascii_mask_matches_definition() {
+        let mut block = [0u8; 64];
+        for i in 0..64 {
+            block[i] = (i * 41 % 256) as u8;
+        }
+        let m = ascii_mask64(&block);
+        for i in 0..64 {
+            assert_eq!((m >> i) & 1 == 1, block[i] < 0x80, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn ascii_block_detection() {
+        let block = [b'a'; 64];
+        assert!(is_ascii_block(&block));
+        let mut block2 = block;
+        block2[63] = 0xC3;
+        assert!(!is_ascii_block(&block2));
+        assert!(is_ascii(b"hello world"));
+        assert!(!is_ascii("héllo".as_bytes()));
+        assert!(is_ascii(b""));
+    }
+}

@@ -1,0 +1,165 @@
+//! 8-lane 16-bit vector (the UTF-16 side of the transcoders).
+
+use super::U8x16;
+
+/// An 8-lane vector of 16-bit code units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct U16x8(pub [u16; 8]);
+
+impl U16x8 {
+    pub const ZERO: U16x8 = U16x8([0; 8]);
+
+    /// Load 8 little-endian 16-bit words from 16 bytes.
+    #[inline]
+    pub fn load_le_bytes(src: &[u8]) -> U16x8 {
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = u16::from_le_bytes([src[2 * i], src[2 * i + 1]]);
+        }
+        U16x8(v)
+    }
+
+    /// Load 8 words from a `&[u16]` slice (length >= 8).
+    #[inline]
+    pub fn load(src: &[u16]) -> U16x8 {
+        let mut v = [0u16; 8];
+        v.copy_from_slice(&src[..8]);
+        U16x8(v)
+    }
+
+    #[inline]
+    pub fn splat(w: u16) -> U16x8 {
+        U16x8([w; 8])
+    }
+
+    #[inline]
+    pub fn store(self, dst: &mut [u16]) {
+        dst[..8].copy_from_slice(&self.0);
+    }
+
+    /// Reinterpret as 16 bytes (little-endian lane order).
+    #[inline]
+    pub fn to_bytes(self) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..8 {
+            let [lo, hi] = self.0[i].to_le_bytes();
+            v[2 * i] = lo;
+            v[2 * i + 1] = hi;
+        }
+        U8x16(v)
+    }
+
+    #[inline]
+    pub fn and(self, rhs: U16x8) -> U16x8 {
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = self.0[i] & rhs.0[i];
+        }
+        U16x8(v)
+    }
+
+    #[inline]
+    pub fn or(self, rhs: U16x8) -> U16x8 {
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = self.0[i] | rhs.0[i];
+        }
+        U16x8(v)
+    }
+
+    /// Lane-wise logical shift right by a constant (`psrlw`).
+    #[inline]
+    pub fn shr<const N: u32>(self) -> U16x8 {
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = self.0[i] >> N;
+        }
+        U16x8(v)
+    }
+
+    /// Lane-wise shift left by a constant (`psllw`).
+    #[inline]
+    pub fn shl<const N: u32>(self) -> U16x8 {
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = self.0[i] << N;
+        }
+        U16x8(v)
+    }
+
+    /// Lane-wise unsigned less-than mask: `0xFFFF` where `self < rhs`.
+    #[inline]
+    pub fn lt_mask(self, rhs: U16x8) -> U16x8 {
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = if self.0[i] < rhs.0[i] { 0xFFFF } else { 0 };
+        }
+        U16x8(v)
+    }
+
+    /// 8-bit mask: bit `i` = MSB of lane `i` (the `packs`+`pmovmskb`
+    /// idiom used to build the per-word bitsets of Algorithm 4).
+    #[inline]
+    pub fn movemask(self) -> u8 {
+        let mut m = 0u8;
+        for i in 0..8 {
+            m |= ((self.0[i] >> 15) as u8) << i;
+        }
+        m
+    }
+
+    /// OR-reduction of all lanes.
+    #[inline]
+    pub fn reduce_or(self) -> u16 {
+        let mut acc = 0u16;
+        for i in 0..8 {
+            acc |= self.0[i];
+        }
+        acc
+    }
+
+    /// True iff any word is in the surrogate range `0xD800..=0xDFFF`.
+    #[inline]
+    pub fn has_surrogate(self) -> bool {
+        let mut any = false;
+        for i in 0..8 {
+            any |= (self.0[i] & 0xF800) == 0xD800;
+        }
+        any
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn le_byte_roundtrip() {
+        let bytes: Vec<u8> = (0..16).collect();
+        let v = U16x8::load_le_bytes(&bytes);
+        assert_eq!(v.0[0], 0x0100);
+        assert_eq!(v.0[7], 0x0F0E);
+        assert_eq!(v.to_bytes().0.to_vec(), bytes);
+    }
+
+    #[test]
+    fn movemask_bits() {
+        let v = U16x8([0x8000, 0, 0xFFFF, 0, 0, 0x8001, 0, 0]);
+        assert_eq!(v.movemask(), (1 << 0) | (1 << 2) | (1 << 5));
+    }
+
+    #[test]
+    fn surrogate_detection() {
+        assert!(U16x8([0, 0, 0xD800, 0, 0, 0, 0, 0]).has_surrogate());
+        assert!(U16x8([0xDFFF; 8]).has_surrogate());
+        assert!(!U16x8([0xD7FF, 0xE000, 0x41, 0, 0, 0, 0, 0]).has_surrogate());
+    }
+
+    #[test]
+    fn shifts() {
+        let v = U16x8::splat(0x0F00);
+        assert_eq!(v.shr::<4>(), U16x8::splat(0x00F0));
+        assert_eq!(v.shl::<4>(), U16x8::splat(0xF000));
+    }
+}

@@ -1,0 +1,329 @@
+//! 16-lane byte vector with x64/NEON-equivalent semantics.
+
+/// A 16-byte SIMD value. All operations are lane-wise unless noted.
+///
+/// The type is `repr(transparent)` over `[u8; 16]`. Arithmetic and
+/// comparison loops autovectorize at `opt-level=3`; the operations LLVM
+/// cannot synthesize from loops — `shuffle`/`lookup16` (`pshufb`),
+/// `prev` (`palignr`), `movemask` (`pmovmskb`) — carry explicit
+/// `core::arch` implementations gated on `target_feature = "ssse3"`
+/// (enabled by the workspace's `target-cpu=native`), with the portable
+/// loop as the fallback on other targets. This mirrors the paper's
+/// multi-backend C++ (§6.1: "a high-level C++ approach which allows us
+/// to easily support multiple processor instruction sets").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct U8x16(pub [u8; 16]);
+
+impl U8x16 {
+    pub const ZERO: U8x16 = U8x16([0; 16]);
+
+    /// Load 16 bytes from the start of `src` (must have length >= 16).
+    #[inline]
+    pub fn load(src: &[u8]) -> U8x16 {
+        let mut v = [0u8; 16];
+        v.copy_from_slice(&src[..16]);
+        U8x16(v)
+    }
+
+    /// Broadcast a single byte to all lanes.
+    #[inline]
+    pub fn splat(b: u8) -> U8x16 {
+        U8x16([b; 16])
+    }
+
+    /// Store into the start of `dst` (must have length >= 16).
+    #[inline]
+    pub fn store(self, dst: &mut [u8]) {
+        dst[..16].copy_from_slice(&self.0);
+    }
+
+    #[inline]
+    pub fn and(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] & rhs.0[i];
+        }
+        U8x16(v)
+    }
+
+    #[inline]
+    pub fn or(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] | rhs.0[i];
+        }
+        U8x16(v)
+    }
+
+    #[inline]
+    pub fn xor(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] ^ rhs.0[i];
+        }
+        U8x16(v)
+    }
+
+    /// Lane-wise unsigned saturating subtraction (`psubusb`).
+    #[inline]
+    pub fn saturating_sub(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = self.0[i].saturating_sub(rhs.0[i]);
+        }
+        U8x16(v)
+    }
+
+    /// Lane-wise wrapping addition (`paddb`).
+    #[inline]
+    pub fn wrapping_add(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = self.0[i].wrapping_add(rhs.0[i]);
+        }
+        U8x16(v)
+    }
+
+    /// Lane-wise logical shift right by a constant (`psrlw`+mask idiom).
+    #[inline]
+    pub fn shr<const N: u32>(self) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] >> N;
+        }
+        U8x16(v)
+    }
+
+    /// Lane-wise equality: `0xFF` where equal, `0x00` elsewhere (`pcmpeqb`).
+    #[inline]
+    pub fn eq_mask(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = if self.0[i] == rhs.0[i] { 0xFF } else { 0 };
+        }
+        U8x16(v)
+    }
+
+    /// Lane-wise unsigned less-than: `0xFF` where `self < rhs`.
+    #[inline]
+    pub fn lt_mask(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = if self.0[i] < rhs.0[i] { 0xFF } else { 0 };
+        }
+        U8x16(v)
+    }
+
+    /// Lane-wise signed greater-than (`pcmpgtb`): `0xFF` where
+    /// `self as i8 > rhs as i8`.
+    #[inline]
+    pub fn gt_i8_mask(self, rhs: U8x16) -> U8x16 {
+        let mut v = [0u8; 16];
+        for i in 0..16 {
+            v[i] = if (self.0[i] as i8) > (rhs.0[i] as i8) { 0xFF } else { 0 };
+        }
+        U8x16(v)
+    }
+
+    /// `pmovmskb`: bit `i` of the result is the most significant bit of
+    /// lane `i` (lane 0 maps to the least significant bit).
+    #[inline]
+    pub fn movemask(self) -> u16 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
+            return _mm_movemask_epi8(a) as u16;
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut m = 0u16;
+            for i in 0..16 {
+                m |= ((self.0[i] >> 7) as u16) << i;
+            }
+            m
+        }
+    }
+
+    /// `pshufb`: for each lane `i`, if `idx[i] & 0x80 != 0` the result
+    /// lane is zero, otherwise it is `self[idx[i] & 0x0F]`.
+    #[inline]
+    pub fn shuffle(self, idx: U8x16) -> U8x16 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
+            let b = _mm_loadu_si128(idx.0.as_ptr() as *const __m128i);
+            let r = _mm_shuffle_epi8(a, b);
+            let mut out = [0u8; 16];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 16];
+            for i in 0..16 {
+                let j = idx.0[i];
+                v[i] = if j & 0x80 != 0 { 0 } else { self.0[(j & 0x0F) as usize] };
+            }
+            U8x16(v)
+        }
+    }
+
+    /// Nibble-table lookup: `table.shuffle(self)` where every lane of
+    /// `self` must be in `[0, 16)`. This is how the Keiser–Lemire
+    /// validator evaluates its three classification tables.
+    #[inline]
+    pub fn lookup16(self, table: &[u8; 16]) -> U8x16 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let t = _mm_loadu_si128(table.as_ptr() as *const __m128i);
+            // callers guarantee lanes < 16, so pshufb needs no masking
+            let i = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
+            let r = _mm_shuffle_epi8(t, i);
+            let mut out = [0u8; 16];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 16];
+            for i in 0..16 {
+                v[i] = table[(self.0[i] & 0x0F) as usize];
+            }
+            U8x16(v)
+        }
+    }
+
+    /// `palignr`-style lag: returns a vector whose lane `i` is the byte
+    /// that appeared `N` positions before lane `i` in the concatenated
+    /// stream `prev ++ self` (used by the validator for `prev1/2/3`).
+    #[inline]
+    pub fn prev<const N: usize>(self, prev_block: U8x16) -> U8x16 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let cur = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
+            let prv = _mm_loadu_si128(prev_block.0.as_ptr() as *const __m128i);
+            // palignr concatenates prev:cur and shifts right by (16 - N)
+            let r = match N {
+                1 => _mm_alignr_epi8(cur, prv, 15),
+                2 => _mm_alignr_epi8(cur, prv, 14),
+                3 => _mm_alignr_epi8(cur, prv, 13),
+                _ => unreachable!("prev<N> only used with N in 1..=3"),
+            };
+            let mut out = [0u8; 16];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut cat = [0u8; 32];
+            cat[..16].copy_from_slice(&prev_block.0);
+            cat[16..].copy_from_slice(&self.0);
+            let mut v = [0u8; 16];
+            for i in 0..16 {
+                v[i] = cat[16 + i - N];
+            }
+            U8x16(v)
+        }
+    }
+
+    /// True iff any lane is non-zero.
+    #[inline]
+    pub fn any(self) -> bool {
+        let mut acc = 0u8;
+        for i in 0..16 {
+            acc |= self.0[i];
+        }
+        acc != 0
+    }
+
+    /// OR-reduction of all lanes.
+    #[inline]
+    pub fn reduce_or(self) -> u8 {
+        let mut acc = 0u8;
+        for i in 0..16 {
+            acc |= self.0[i];
+        }
+        acc
+    }
+
+    /// True iff every lane is ASCII (MSB clear).
+    #[inline]
+    pub fn is_ascii(self) -> bool {
+        self.reduce_or() < 0x80
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuffle_is_pshufb() {
+        let v = U8x16([10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22, 23, 24, 25]);
+        // reverse
+        let idx = U8x16([15, 14, 13, 12, 11, 10, 9, 8, 7, 6, 5, 4, 3, 2, 1, 0]);
+        assert_eq!(
+            v.shuffle(idx).0,
+            [25, 24, 23, 22, 21, 20, 19, 18, 17, 16, 15, 14, 13, 12, 11, 10]
+        );
+        // high bit set -> zero
+        let idx2 = U8x16([0x80, 0, 0xFF, 1, 0x80, 2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        let out = v.shuffle(idx2);
+        assert_eq!(out.0[0], 0);
+        assert_eq!(out.0[1], 10);
+        assert_eq!(out.0[2], 0);
+        assert_eq!(out.0[3], 11);
+        // index wraps at 16 like pshufb (low 4 bits)
+        let idx3 = U8x16([16 | 1; 16]); // 0x11 -> lane 1
+        assert_eq!(v.shuffle(idx3).0, [11; 16]);
+    }
+
+    #[test]
+    fn movemask_matches_sse() {
+        let mut v = [0u8; 16];
+        v[0] = 0x80;
+        v[3] = 0xFF;
+        v[15] = 0x90;
+        assert_eq!(U8x16(v).movemask(), (1 << 0) | (1 << 3) | (1 << 15));
+    }
+
+    #[test]
+    fn prev_lags_across_blocks() {
+        let prev = U8x16([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]);
+        let cur = U8x16([16, 17, 18, 19, 20, 21, 22, 23, 24, 25, 26, 27, 28, 29, 30, 31]);
+        assert_eq!(cur.prev::<1>(prev).0[0], 15);
+        assert_eq!(cur.prev::<1>(prev).0[1], 16);
+        assert_eq!(cur.prev::<2>(prev).0[0], 14);
+        assert_eq!(cur.prev::<3>(prev).0[0], 13);
+        assert_eq!(cur.prev::<3>(prev).0[15], 28);
+    }
+
+    #[test]
+    fn saturating_sub_saturates() {
+        let a = U8x16::splat(0x10);
+        let b = U8x16::splat(0x20);
+        assert_eq!(a.saturating_sub(b), U8x16::ZERO);
+        assert_eq!(b.saturating_sub(a), U8x16::splat(0x10));
+    }
+
+    #[test]
+    fn comparison_masks() {
+        let a = U8x16([0, 1, 0x7F, 0x80, 0xFF, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        let b = U8x16::splat(0x80);
+        let lt = a.lt_mask(b);
+        assert_eq!(lt.0[0], 0xFF);
+        assert_eq!(lt.0[2], 0xFF);
+        assert_eq!(lt.0[3], 0);
+        assert_eq!(lt.0[4], 0);
+        // signed compare: 0xFF = -1 > -64(=0xC0)
+        let gt = a.gt_i8_mask(U8x16::splat(0xC0));
+        assert_eq!(gt.0[4], 0xFF); // -1 > -64
+        assert_eq!(gt.0[3], 0); // -128 < -64
+        assert_eq!(gt.0[0], 0xFF); // 0 > -64
+    }
+}

@@ -1,0 +1,182 @@
+//! Nibble-classification tables for the Keiser–Lemire UTF-8 validator
+//! (Keiser & Lemire, "Validating UTF-8 in less than one instruction per
+//! byte", SPE 2021 — reference [3] of the paper; §4 applies it for the
+//! validating transcoder).
+//!
+//! The validator classifies every adjacent byte pair through three
+//! 16-entry tables indexed by (high nibble of previous byte, low nibble
+//! of previous byte, high nibble of current byte). The AND of the three
+//! looked-up classes is non-zero exactly where a *special-case* error
+//! could exist; combined with a saturating-subtraction check for 3/4-byte
+//! continuation runs, the OR-reduction over the input is zero iff the
+//! input is valid UTF-8.
+
+/// Error-class bits. Names follow the original publication.
+pub const TOO_SHORT: u8 = 1 << 0; // lead byte followed by another lead/ASCII
+pub const TOO_LONG: u8 = 1 << 1; // ASCII followed by a continuation byte
+pub const OVERLONG_3: u8 = 1 << 2; // E0 followed by 80..9F
+pub const TOO_LARGE: u8 = 1 << 3; // F4 followed by 90..BF etc. (> U+10FFFF)
+pub const SURROGATE: u8 = 1 << 4; // ED followed by A0..BF
+pub const OVERLONG_2: u8 = 1 << 5; // C0/C1: value < 0x80 in 2 bytes
+pub const TOO_LARGE_1000: u8 = 1 << 6; // F5..FF or F4 9x: >= 0x140000
+pub const OVERLONG_4: u8 = 1 << 6; // F0 followed by 80..8F (shares the bit)
+pub const TWO_CONTS: u8 = 1 << 7; // two continuation bytes (carried)
+
+/// Classes that must propagate through the second table unconditionally.
+pub const CARRY: u8 = TOO_SHORT | TOO_LONG | TWO_CONTS;
+
+/// Classification by the high nibble of the previous byte.
+pub const BYTE_1_HIGH: [u8; 16] = [
+    // 0x0_-0x7_: ASCII leads — only TOO_LONG is possible.
+    TOO_LONG, TOO_LONG, TOO_LONG, TOO_LONG, TOO_LONG, TOO_LONG, TOO_LONG, TOO_LONG,
+    // 0x8_-0xB_: continuation bytes.
+    TWO_CONTS, TWO_CONTS, TWO_CONTS, TWO_CONTS,
+    // 0xC_: 2-byte lead (C0/C1 overlong possible).
+    TOO_SHORT | OVERLONG_2,
+    // 0xD_: 2-byte lead.
+    TOO_SHORT,
+    // 0xE_: 3-byte lead (E0 overlong, ED surrogate possible).
+    TOO_SHORT | OVERLONG_3 | SURROGATE,
+    // 0xF_: 4-byte lead (F0 overlong, F4+/F5.. too large possible).
+    TOO_SHORT | TOO_LARGE | TOO_LARGE_1000 | OVERLONG_4,
+];
+
+/// Classification by the low nibble of the previous byte.
+pub const BYTE_1_LOW: [u8; 16] = [
+    CARRY | OVERLONG_3 | OVERLONG_2 | OVERLONG_4, // 0
+    CARRY | OVERLONG_2,                           // 1
+    CARRY,                                        // 2
+    CARRY,                                        // 3
+    CARRY | TOO_LARGE,                            // 4
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // 5
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // 6
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // 7
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // 8
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // 9
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // A
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // B
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // C
+    CARRY | TOO_LARGE | TOO_LARGE_1000 | SURROGATE, // D
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // E
+    CARRY | TOO_LARGE | TOO_LARGE_1000,           // F
+];
+
+/// Classification by the high nibble of the current byte.
+pub const BYTE_2_HIGH: [u8; 16] = [
+    // 0x0_-0x7_: ASCII — an error iff the previous byte was a lead.
+    TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT,
+    // 0x8_: first half of continuation range.
+    TOO_LONG | OVERLONG_2 | TWO_CONTS | OVERLONG_3 | TOO_LARGE_1000 | OVERLONG_4,
+    // 0x9_: second quarter.
+    TOO_LONG | OVERLONG_2 | TWO_CONTS | OVERLONG_3 | TOO_LARGE,
+    // 0xA_, 0xB_: upper half (surrogates live here after ED).
+    TOO_LONG | OVERLONG_2 | TWO_CONTS | SURROGATE | TOO_LARGE,
+    TOO_LONG | OVERLONG_2 | TWO_CONTS | SURROGATE | TOO_LARGE,
+    // 0xC_-0xF_: lead bytes — an error iff the previous byte was a lead.
+    TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar reference: classify the pair (prev, cur) through the three
+    /// tables, exactly as the vectorized code does.
+    fn special_cases(prev: u8, cur: u8) -> u8 {
+        BYTE_1_HIGH[(prev >> 4) as usize]
+            & BYTE_1_LOW[(prev & 0x0F) as usize]
+            & BYTE_2_HIGH[(cur >> 4) as usize]
+    }
+
+    #[test]
+    fn ascii_pairs_are_clean() {
+        for prev in 0..0x80u8 {
+            for cur in [0u8, 0x41, 0x7F] {
+                assert_eq!(special_cases(prev, cur), 0, "{prev:02x} {cur:02x}");
+            }
+        }
+    }
+
+    #[test]
+    fn ascii_then_continuation_is_too_long() {
+        assert_eq!(special_cases(0x41, 0x80) & TOO_LONG, TOO_LONG);
+        assert_eq!(special_cases(0x7F, 0xBF) & TOO_LONG, TOO_LONG);
+    }
+
+    #[test]
+    fn lead_then_ascii_is_too_short() {
+        assert_eq!(special_cases(0xC2, 0x41) & TOO_SHORT, TOO_SHORT);
+        assert_eq!(special_cases(0xE1, 0x20) & TOO_SHORT, TOO_SHORT);
+        assert_eq!(special_cases(0xF1, 0x7F) & TOO_SHORT, TOO_SHORT);
+        // lead then lead
+        assert_eq!(special_cases(0xC2, 0xC2) & TOO_SHORT, TOO_SHORT);
+    }
+
+    #[test]
+    fn valid_two_byte_is_clean() {
+        // C2..DF followed by 80..BF is valid.
+        for prev in 0xC2..=0xDFu8 {
+            for cur in [0x80u8, 0x9F, 0xA0, 0xBF] {
+                assert_eq!(special_cases(prev, cur), 0, "{prev:02x} {cur:02x}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlong_two_byte_flagged() {
+        for cur in [0x80u8, 0xBF] {
+            assert_eq!(special_cases(0xC0, cur) & OVERLONG_2, OVERLONG_2);
+            assert_eq!(special_cases(0xC1, cur) & OVERLONG_2, OVERLONG_2);
+        }
+    }
+
+    #[test]
+    fn overlong_three_byte_flagged() {
+        // E0 80..9F is overlong; E0 A0..BF is fine.
+        assert_ne!(special_cases(0xE0, 0x80) & OVERLONG_3, 0);
+        assert_ne!(special_cases(0xE0, 0x9F) & OVERLONG_3, 0);
+        assert_eq!(special_cases(0xE0, 0xA0), 0);
+        assert_eq!(special_cases(0xE0, 0xBF), 0);
+    }
+
+    #[test]
+    fn surrogates_flagged() {
+        // ED A0..BF encodes U+D800..DFFF.
+        assert_ne!(special_cases(0xED, 0xA0) & SURROGATE, 0);
+        assert_ne!(special_cases(0xED, 0xBF) & SURROGATE, 0);
+        assert_eq!(special_cases(0xED, 0x80), 0);
+        assert_eq!(special_cases(0xED, 0x9F), 0);
+    }
+
+    #[test]
+    fn overlong_four_byte_flagged() {
+        // F0 80..8F is overlong; F0 90..BF is fine.
+        assert_ne!(special_cases(0xF0, 0x80), 0);
+        assert_ne!(special_cases(0xF0, 0x8F), 0);
+        assert_eq!(special_cases(0xF0, 0x90), 0);
+        assert_eq!(special_cases(0xF0, 0xBF), 0);
+    }
+
+    #[test]
+    fn too_large_flagged() {
+        // F4 90..BF is > U+10FFFF; F4 80..8F is the last valid plane.
+        assert_ne!(special_cases(0xF4, 0x90), 0);
+        assert_eq!(special_cases(0xF4, 0x80), 0);
+        assert_eq!(special_cases(0xF4, 0x8F), 0);
+        // F5..FF always invalid with continuation
+        for prev in [0xF5u8, 0xF8, 0xFF] {
+            assert_ne!(special_cases(prev, 0x80), 0, "{prev:02x}");
+        }
+    }
+
+    #[test]
+    fn two_continuations_flagged_via_carry() {
+        // A continuation followed by a continuation carries TWO_CONTS;
+        // this is cancelled by the must-be-2/3-continuation check at the
+        // vector level, so here we just confirm the bit fires.
+        assert_ne!(special_cases(0x80, 0x80) & TWO_CONTS, 0);
+        assert_ne!(special_cases(0xBF, 0xBF) & TWO_CONTS, 0);
+        // ...and that continuation->ascii carries nothing.
+        assert_eq!(special_cases(0x80, 0x41), 0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Lookup tables for the vectorized transcoders.
+//!
+//! The paper's core data structures (§4, §5):
+//!
+//! * [`utf8_to_utf16`] — the main table mapping the low 12 bits of the
+//!   end-of-character bitset to `(consumed bytes, shuffle-mask index)`,
+//!   plus the 209 16-byte shuffle masks shared by the three layouts of
+//!   Algorithm 2. The paper quotes ~2 KiB + 3.3 KiB; we index by the full
+//!   12-bit key (4096 × 2 B = 8 KiB) rather than a compressed 1024-entry
+//!   variant — the shuffle masks are identical (209 × 16 B = 3.3 KiB).
+//! * [`utf16_to_utf8`] — the two 256 × 17-byte tables (4352 B each) used
+//!   by the 1–2-byte and 1–3-byte routines of Algorithm 4.
+//! * [`keiser_lemire`] — the three 16-byte nibble-classification tables
+//!   of the Keiser–Lemire UTF-8 validator.
+//!
+//! All tables are *generated* (in plain Rust, at first use) rather than
+//! embedded as opaque literals, and the generators are unit-tested
+//! against the format definitions of §3. This keeps the construction
+//! auditable — a point the paper makes when comparing its 11 KiB of
+//! tables against utf8lut's 2 MiB.
+
+pub mod keiser_lemire;
+pub mod utf16_to_utf8;
+pub mod utf8_to_utf16;
+
+/// Extract the byte lengths of the complete characters described by an
+/// end-of-character bitset.
+///
+/// `mask` has bit `i` set iff position `i` is the last byte of a
+/// character; positions `0..nbits` are considered. The window is assumed
+/// to start at a character boundary. Returns `(lens, n, valid)` where
+/// `lens[..n]` are the lengths of the complete characters found, in
+/// order, and `valid` is false if a character longer than 4 bytes was
+/// implied (invalid UTF-8) — scanning stops there.
+pub fn char_lens_from_mask(mask: u32, nbits: u32) -> ([u8; 16], usize, bool) {
+    let mut lens = [0u8; 16];
+    let mut n = 0;
+    let mut start = 0u32;
+    let mut i = 0u32;
+    while i < nbits {
+        if (mask >> i) & 1 == 1 {
+            let len = i - start + 1;
+            if len > 4 {
+                return (lens, n, false);
+            }
+            lens[n] = len as u8;
+            n += 1;
+            start = i + 1;
+        } else if i - start + 1 > 4 {
+            // Even without seeing the end bit, the character is already
+            // longer than 4 bytes: invalid.
+            return (lens, n, false);
+        }
+        i += 1;
+    }
+    (lens, n, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_lens_ascii() {
+        let (lens, n, valid) = char_lens_from_mask(0xFFF, 12);
+        assert!(valid);
+        assert_eq!(n, 12);
+        assert!(lens[..12].iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn char_lens_two_byte() {
+        let (lens, n, valid) = char_lens_from_mask(0xAAA, 12);
+        assert!(valid);
+        assert_eq!(n, 6);
+        assert!(lens[..6].iter().all(|&l| l == 2));
+    }
+
+    #[test]
+    fn char_lens_three_byte() {
+        let (lens, n, valid) = char_lens_from_mask(0x924, 12);
+        assert!(valid);
+        assert_eq!(n, 4);
+        assert!(lens[..4].iter().all(|&l| l == 3));
+    }
+
+    #[test]
+    fn char_lens_four_byte() {
+        let (lens, n, valid) = char_lens_from_mask(0x888, 12);
+        assert!(valid);
+        assert_eq!(n, 3);
+        assert!(lens[..3].iter().all(|&l| l == 4));
+    }
+
+    #[test]
+    fn char_lens_mixed_with_incomplete_tail() {
+        // 1-byte at 0, 3-byte ending at 3, then nothing: one incomplete char.
+        let mask = 0b0000_0000_1001u32;
+        let (lens, n, valid) = char_lens_from_mask(mask, 12);
+        // positions 4..11 have no end bit; 12 - 4 = 8 > 4 -> invalid flagged
+        assert!(!valid);
+        assert_eq!(n, 2);
+        assert_eq!(&lens[..2], &[1, 3]);
+    }
+
+    #[test]
+    fn char_lens_overlong_is_invalid() {
+        // First end bit at position 5 -> 6-byte character: invalid.
+        let (_, n, valid) = char_lens_from_mask(0b100000, 12);
+        assert!(!valid);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn char_lens_empty_mask() {
+        let (_, n, valid) = char_lens_from_mask(0, 12);
+        assert!(!valid); // an unterminated >4-byte character
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn char_lens_short_window_is_valid_when_incomplete_fits() {
+        // 3 bits, one 2-byte char complete, 1 byte leftover (incomplete but
+        // not yet overlong).
+        let (lens, n, valid) = char_lens_from_mask(0b010, 3);
+        assert!(valid);
+        assert_eq!(n, 1);
+        assert_eq!(lens[0], 2);
+    }
+}

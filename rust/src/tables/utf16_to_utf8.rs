@@ -1,0 +1,142 @@
+//! Tables for the UTF-16 → UTF-8 transcoder (§5, Algorithm 4).
+//!
+//! Two 256-entry tables, each entry a 16-byte shuffle mask plus a byte
+//! count — 256 × 17 = 4352 bytes per table, 8704 bytes total, exactly the
+//! paper's figure.
+//!
+//! * [`ONE_TWO`] — the 1–2-byte routine. The eight input words are
+//!   *unpacked* into 16 bytes: byte `2i` holds the leading byte (or the
+//!   ASCII byte itself) of word `i`, byte `2i+1` its continuation byte.
+//!   The key is the 8-bit "word is ASCII" bitset; the mask compresses the
+//!   needed 8–16 bytes to the front.
+//! * [`ONE_TWO_THREE`] — the 1–3-byte routine, applied to half registers
+//!   (four words expanded to four 32-bit lanes `[lead, cont1, cont2, _]`).
+//!   The key packs two 4-bit bitsets: low nibble = "word < 0x80", high
+//!   nibble = "word < 0x800"; the mask compresses the 4–12 needed bytes.
+
+use std::sync::LazyLock;
+
+/// A shuffle mask plus the number of output bytes it produces.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressEntry {
+    pub mask: [u8; 16],
+    pub count: u8,
+}
+
+/// Table for the 1–2-byte routine, keyed by the 8-bit ASCII bitset.
+pub static ONE_TWO: LazyLock<[CompressEntry; 256]> = LazyLock::new(build_one_two);
+
+/// Table for the 1–3-byte routine, keyed by `(ascii_mask) | (below_0x800_mask << 4)`
+/// over four words.
+pub static ONE_TWO_THREE: LazyLock<[CompressEntry; 256]> = LazyLock::new(build_one_two_three);
+
+fn build_one_two() -> [CompressEntry; 256] {
+    let mut table = [CompressEntry { mask: [0x80; 16], count: 0 }; 256];
+    for key in 0..256usize {
+        let mut mask = [0x80u8; 16];
+        let mut out = 0usize;
+        for word in 0..8 {
+            let ascii = (key >> word) & 1 == 1;
+            mask[out] = (2 * word) as u8;
+            out += 1;
+            if !ascii {
+                mask[out] = (2 * word + 1) as u8;
+                out += 1;
+            }
+        }
+        table[key] = CompressEntry { mask, count: out as u8 };
+    }
+    table
+}
+
+fn build_one_two_three() -> [CompressEntry; 256] {
+    let mut table = [CompressEntry { mask: [0x80; 16], count: 0 }; 256];
+    for key in 0..256usize {
+        let mut mask = [0x80u8; 16];
+        let mut out = 0usize;
+        for word in 0..4 {
+            let one = (key >> word) & 1 == 1;
+            let below_800 = (key >> (word + 4)) & 1 == 1;
+            // Impossible combination (ASCII but not < 0x800) never occurs
+            // at runtime; fill it as ASCII for safety.
+            let len = if one {
+                1
+            } else if below_800 {
+                2
+            } else {
+                3
+            };
+            for j in 0..len {
+                mask[out] = (4 * word + j) as u8;
+                out += 1;
+            }
+        }
+        table[key] = CompressEntry { mask, count: out as u8 };
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_sizes_match_paper() {
+        // 256 entries x (16-byte mask + 1 count byte) = 4352 bytes each.
+        assert_eq!(ONE_TWO.len() * 17, 4352);
+        assert_eq!(ONE_TWO_THREE.len() * 17, 4352);
+    }
+
+    #[test]
+    fn one_two_all_ascii() {
+        let e = ONE_TWO[0xFF];
+        assert_eq!(e.count, 8);
+        for i in 0..8 {
+            assert_eq!(e.mask[i], 2 * i as u8);
+        }
+        assert!(e.mask[8..].iter().all(|&b| b == 0x80));
+    }
+
+    #[test]
+    fn one_two_none_ascii() {
+        let e = ONE_TWO[0x00];
+        assert_eq!(e.count, 16);
+        for i in 0..16 {
+            assert_eq!(e.mask[i], i as u8);
+        }
+    }
+
+    #[test]
+    fn one_two_counts() {
+        for key in 0..256usize {
+            let expected = 8 + (8 - (key as u8).count_ones() as u8);
+            assert_eq!(ONE_TWO[key].count, expected, "key {key:02x}");
+        }
+    }
+
+    #[test]
+    fn one_two_three_all_three_byte() {
+        let e = ONE_TWO_THREE[0x00];
+        assert_eq!(e.count, 12);
+        // lanes [0,1,2], [4,5,6], [8,9,10], [12,13,14]
+        let expected: Vec<u8> = (0..4).flat_map(|w| vec![4 * w, 4 * w + 1, 4 * w + 2]).collect();
+        assert_eq!(&e.mask[..12], &expected[..]);
+    }
+
+    #[test]
+    fn one_two_three_all_ascii() {
+        let e = ONE_TWO_THREE[0xFF];
+        assert_eq!(e.count, 4);
+        assert_eq!(&e.mask[..4], &[0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn one_two_three_mixed() {
+        // word0 ascii, word1 two-byte, word2 three-byte, word3 two-byte:
+        // one-mask = 0b0001, below-800-mask = 0b1011
+        let key = 0b0001 | (0b1011 << 4);
+        let e = ONE_TWO_THREE[key];
+        assert_eq!(e.count, 1 + 2 + 3 + 2);
+        assert_eq!(&e.mask[..8], &[0, 4, 5, 8, 9, 10, 12, 13]);
+    }
+}

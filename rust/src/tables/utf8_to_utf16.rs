@@ -1,0 +1,311 @@
+//! Tables for the UTF-8 → UTF-16 transcoder (§4, Algorithm 2).
+//!
+//! The transcoder consumes 12-byte windows. From the low 12 bits of the
+//! end-of-character bitset (bit `i` set ⟺ byte `i` ends a character) the
+//! **main table** yields how many bytes the window consumes and which
+//! shuffle mask to use. Shuffle-mask indexes are partitioned exactly as
+//! in the paper:
+//!
+//! * `[0, 64)`   — case 1: six characters of 1–2 bytes each, placed into
+//!   six 16-bit lanes (Fig. 2). 2⁶ = 64 masks.
+//! * `[64, 145)` — case 2: four characters of 1–3 bytes each, placed into
+//!   four 32-bit lanes (Fig. 3). 3⁴ = 81 masks.
+//! * `[145, 209)`— case 3: three characters of 1–4 bytes each, placed
+//!   into three 32-bit lanes incl. surrogate synthesis (Fig. 4).
+//!   4³ = 64 masks.
+//!
+//! Lane layout (shared by all three cases): within its lane, a
+//! character's bytes appear **last byte first** — byte 0 of the lane is
+//! the final byte of the character, byte 1 the one before it, and so on;
+//! absent bytes are `0x80` (which `pshufb` turns into zero). This makes
+//! the bit-extraction masks of Figs. 2–4 uniform across character
+//! lengths (see `transcode::utf8_to_utf16`).
+
+use super::char_lens_from_mask;
+use std::sync::LazyLock;
+
+/// Number of shuffle masks (paper: "We need 209 shuffle masks").
+pub const NUM_MASKS: usize = 209;
+/// First index of case 2 (four chars × 1–3 bytes).
+pub const CASE2_START: u8 = 64;
+/// First index of case 3 (three chars × 1–4 bytes).
+pub const CASE3_START: u8 = 145;
+
+/// One main-table entry: bytes consumed by the window and the index of
+/// the shuffle mask to apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub consumed: u8,
+    pub idx: u8,
+}
+
+/// The tables: a 4096-entry main table (indexed by the 12-bit
+/// end-of-character bitset) plus the 209 16-byte shuffle masks.
+///
+/// `shuf` is allocated at 256 entries (padding past `NUM_MASKS` is
+/// never selected) so that indexing with the `u8` mask index provably
+/// needs no bounds check in the hot loop.
+pub struct Utf8ToUtf16Tables {
+    pub main: [Entry; 4096],
+    pub shuf: [[u8; 16]; 256],
+}
+
+/// Lazily-constructed singleton (construction is cheap and deterministic;
+/// see [`build_tables`]).
+pub static TABLES: LazyLock<Utf8ToUtf16Tables> = LazyLock::new(build_tables);
+
+/// Shuffle-mask index for case 1 from six lengths in `{1,2}`.
+fn case1_idx(lens: &[u8]) -> u8 {
+    let mut idx = 0u8;
+    for k in 0..6 {
+        idx |= (lens[k] - 1) << k;
+    }
+    idx
+}
+
+/// Shuffle-mask index for case 2 from four lengths in `{1,2,3}`.
+fn case2_idx(lens: &[u8]) -> u8 {
+    let mut idx = 0u16;
+    let mut pow = 1u16;
+    for k in 0..4 {
+        idx += (lens[k] - 1) as u16 * pow;
+        pow *= 3;
+    }
+    CASE2_START + idx as u8
+}
+
+/// Shuffle-mask index for case 3 from three lengths in `{1,2,3,4}`.
+fn case3_idx(lens: &[u8]) -> u8 {
+    let mut idx = 0u8;
+    let mut pow = 1u8;
+    for k in 0..3 {
+        idx += (lens[k] - 1) * pow;
+        pow *= 4;
+    }
+    CASE3_START + idx
+}
+
+/// Build the 16-byte shuffle mask for `nchars` characters of lengths
+/// `lens`, each occupying a lane of `lane_width` bytes, bytes reversed
+/// within the lane (`0x80` where absent).
+fn build_mask(lens: &[u8], nchars: usize, lane_width: usize) -> [u8; 16] {
+    let mut mask = [0x80u8; 16];
+    let mut start = 0u8;
+    for k in 0..nchars {
+        let len = lens[k];
+        let last = start + len - 1;
+        for j in 0..len {
+            mask[k * lane_width + j as usize] = last - j;
+        }
+        start += len;
+    }
+    mask
+}
+
+/// Construct the main table and shuffle masks.
+///
+/// For every 12-bit end-of-character bitset we extract the character
+/// lengths ([`char_lens_from_mask`]) and pick, among the applicable
+/// cases, the one consuming the most bytes (ties prefer case 1 over
+/// case 2 over case 3 — fewer, cheaper lanes win at equal consumption).
+/// Keys that describe invalid UTF-8 (a character longer than 4 bytes, or
+/// fewer than three complete characters in 12 bytes — impossible for
+/// valid input since windows start at character boundaries) fall back to
+/// a safe entry that consumes at least one byte; the validating
+/// transcoder rejects such inputs before the table is consulted.
+pub fn build_tables() -> Utf8ToUtf16Tables {
+    let mut shuf = [[0x80u8; 16]; 256];
+    // Enumerate all masks up-front so each index is defined even if no
+    // 12-bit key selects it.
+    for code in 0..64u16 {
+        let lens: Vec<u8> = (0..6).map(|k| ((code >> k) & 1) as u8 + 1).collect();
+        shuf[case1_idx(&lens) as usize] = build_mask(&lens, 6, 2);
+    }
+    for code in 0..81u16 {
+        let mut c = code;
+        let lens: Vec<u8> = (0..4)
+            .map(|_| {
+                let l = (c % 3) as u8 + 1;
+                c /= 3;
+                l
+            })
+            .collect();
+        shuf[case2_idx(&lens) as usize] = build_mask(&lens, 4, 4);
+    }
+    for code in 0..64u16 {
+        let mut c = code;
+        let lens: Vec<u8> = (0..3)
+            .map(|_| {
+                let l = (c % 4) as u8 + 1;
+                c /= 4;
+                l
+            })
+            .collect();
+        shuf[case3_idx(&lens) as usize] = build_mask(&lens, 3, 4);
+    }
+
+    let mut main = [Entry { consumed: 1, idx: CASE3_START }; 4096];
+    for key in 0..4096u32 {
+        let (lens, n, _valid) = char_lens_from_mask(key, 12);
+        // Candidate (consumed, idx) per case, if applicable.
+        let mut best: Option<(u8, u8, u8)> = None; // (consumed, pref, idx)
+        if n >= 6 && lens[..6].iter().all(|&l| l <= 2) {
+            let consumed: u8 = lens[..6].iter().sum();
+            best = Some((consumed, 2, case1_idx(&lens)));
+        }
+        if n >= 4 && lens[..4].iter().all(|&l| l <= 3) {
+            let consumed: u8 = lens[..4].iter().sum();
+            let cand = (consumed, 1, case2_idx(&lens));
+            if best.map_or(true, |b| (cand.0, cand.1) > (b.0, b.1)) {
+                best = Some(cand);
+            }
+        }
+        if n >= 3 {
+            // lens <= 4 by construction of char_lens_from_mask
+            let consumed: u8 = lens[..3].iter().sum();
+            let cand = (consumed, 0, case3_idx(&lens));
+            if best.map_or(true, |b| (cand.0, cand.1) > (b.0, b.1)) {
+                best = Some(cand);
+            }
+        }
+        main[key as usize] = match best {
+            Some((consumed, _, idx)) => Entry { consumed, idx },
+            None => {
+                // Invalid or boundary-degenerate key. Consume past the
+                // first end-of-character bit (or one byte) using a
+                // case-3 mask of padded 1-byte characters; output is
+                // garbage but bounded — the validating path never gets
+                // here on its own output.
+                let consumed = if key == 0 { 12 } else { key.trailing_zeros() as u8 + 1 };
+                let mut padded = [1u8; 3];
+                for k in 0..n.min(3) {
+                    padded[k] = lens[k];
+                }
+                Entry { consumed: consumed.max(1), idx: case3_idx(&padded) }
+            }
+        };
+    }
+
+    Utf8ToUtf16Tables { main, shuf }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_partition_matches_paper() {
+        // 64 + 81 + 64 = 209 masks, partition boundaries as documented.
+        assert_eq!(NUM_MASKS, 209);
+        let all_one = [1u8; 6];
+        assert_eq!(case1_idx(&all_one), 0);
+        let all_two = [2u8; 6];
+        assert_eq!(case1_idx(&all_two), 63);
+        assert_eq!(case2_idx(&[1, 1, 1, 1]), 64);
+        assert_eq!(case2_idx(&[3, 3, 3, 3]), 144);
+        assert_eq!(case3_idx(&[1, 1, 1]), 145);
+        assert_eq!(case3_idx(&[4, 4, 4]), 208);
+    }
+
+    #[test]
+    fn ascii_key_consumes_six() {
+        let t = &*TABLES;
+        let e = t.main[0xFFF];
+        assert_eq!(e.consumed, 6);
+        assert!(e.idx < CASE2_START);
+    }
+
+    #[test]
+    fn two_byte_key_consumes_twelve() {
+        let t = &*TABLES;
+        let e = t.main[0xAAA];
+        assert_eq!(e.consumed, 12);
+        assert!(e.idx < CASE2_START, "six 2-byte chars is case 1");
+    }
+
+    #[test]
+    fn three_byte_key_is_case2() {
+        let t = &*TABLES;
+        let e = t.main[0x924];
+        assert_eq!(e.consumed, 12);
+        assert!(e.idx >= CASE2_START && e.idx < CASE3_START);
+    }
+
+    #[test]
+    fn four_byte_key_is_case3() {
+        let t = &*TABLES;
+        let e = t.main[0x888];
+        assert_eq!(e.consumed, 12);
+        assert!(e.idx >= CASE3_START);
+    }
+
+    #[test]
+    fn every_valid_key_consumes_at_least_three_bytes() {
+        // For any key describing >= 3 complete chars of <= 4 bytes, the
+        // entry must consume >= 3 bytes and never more than 12.
+        let t = &*TABLES;
+        for key in 0..4096u32 {
+            let (lens, n, valid) = char_lens_from_mask(key, 12);
+            let e = t.main[key as usize];
+            assert!(e.consumed >= 1 && e.consumed <= 12, "key {key:03x}");
+            if valid && n >= 3 {
+                assert!(e.consumed >= lens[..3].iter().sum::<u8>().min(3), "key {key:03x}");
+            }
+        }
+    }
+
+    #[test]
+    fn consumed_always_lands_on_char_boundary() {
+        // If the entry consumes k bytes, bit k-1 of the key must be set
+        // (the consumed region ends exactly at a character end) whenever
+        // the key is structurally valid.
+        let t = &*TABLES;
+        for key in 0..4096u32 {
+            let (_, n, valid) = char_lens_from_mask(key, 12);
+            if !(valid && n >= 3) {
+                continue;
+            }
+            let e = t.main[key as usize];
+            assert_eq!(
+                (key >> (e.consumed - 1)) & 1,
+                1,
+                "key {key:03x} consumed {} does not end a char",
+                e.consumed
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_mask_indices_stay_in_window() {
+        let t = &*TABLES;
+        for (i, mask) in t.shuf.iter().take(NUM_MASKS).enumerate() {
+            for &b in mask {
+                assert!(b == 0x80 || b < 12, "mask {i} has out-of-window index {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn case1_mask_layout() {
+        // Six ASCII chars: lane k selects byte k into byte 2k, 0x80 high.
+        let t = &*TABLES;
+        let e = t.main[0xFFF];
+        let m = t.shuf[e.idx as usize];
+        for k in 0..6 {
+            assert_eq!(m[2 * k], k as u8);
+            assert_eq!(m[2 * k + 1], 0x80);
+        }
+    }
+
+    #[test]
+    fn case1_two_byte_layout_reverses_bytes() {
+        // Six 2-byte chars: lane k = [2k+1, 2k] (last byte first).
+        let t = &*TABLES;
+        let e = t.main[0xAAA];
+        let m = t.shuf[e.idx as usize];
+        for k in 0..6 {
+            assert_eq!(m[2 * k], 2 * k as u8 + 1);
+            assert_eq!(m[2 * k + 1], 2 * k as u8);
+        }
+    }
+}

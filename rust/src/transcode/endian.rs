@@ -1,0 +1,139 @@
+//! Byte order: UTF-16BE support and byte-order-mark handling (§3, §6.1).
+//!
+//! The paper focuses on little-endian UTF-16 and notes that "supporting
+//! the big-endian UTF-16 format given a little-endian transcoder
+//! requires little effort, especially with SIMD instructions" — a
+//! `rev16`/`pshufb` byte swap. This module provides exactly that, plus
+//! the byte-order-mark (BOM) conventions of §3.
+
+use crate::simd::U8x16;
+
+/// The detected encoding of a byte stream, from its BOM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bom {
+    /// `EF BB BF`
+    Utf8,
+    /// `FF FE` — little-endian UTF-16.
+    Utf16Le,
+    /// `FE FF` — big-endian UTF-16.
+    Utf16Be,
+    /// No recognized byte-order mark.
+    None,
+}
+
+impl Bom {
+    /// Length of the mark in bytes (to skip).
+    pub fn len(self) -> usize {
+        match self {
+            Bom::Utf8 => 3,
+            Bom::Utf16Le | Bom::Utf16Be => 2,
+            Bom::None => 0,
+        }
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Detect a byte-order mark at the start of `data` (§3: "the two bytes
+/// 0xff 0xfe indicate a little-endian format whereas the two bytes
+/// 0xfe 0xff indicate a big-endian format").
+pub fn detect_bom(data: &[u8]) -> Bom {
+    if data.len() >= 3 && data[0] == 0xEF && data[1] == 0xBB && data[2] == 0xBF {
+        return Bom::Utf8;
+    }
+    if data.len() >= 2 {
+        match (data[0], data[1]) {
+            (0xFF, 0xFE) => return Bom::Utf16Le,
+            (0xFE, 0xFF) => return Bom::Utf16Be,
+            _ => {}
+        }
+    }
+    Bom::None
+}
+
+/// Byte-swap a UTF-16 buffer in place (LE ⇄ BE), vectorized with the
+/// same `pshufb` idiom the paper describes for `rev16`.
+pub fn swap_bytes_utf16(words: &mut [u16]) {
+    const SWAP: [u8; 16] = [1, 0, 3, 2, 5, 4, 7, 6, 9, 8, 11, 10, 13, 12, 15, 14];
+    let mut i = 0usize;
+    while i + 8 <= words.len() {
+        // load as bytes, shuffle, store
+        let mut bytes = [0u8; 16];
+        for k in 0..8 {
+            let [lo, hi] = words[i + k].to_le_bytes();
+            bytes[2 * k] = lo;
+            bytes[2 * k + 1] = hi;
+        }
+        let swapped = U8x16(bytes).shuffle(U8x16(SWAP));
+        for k in 0..8 {
+            words[i + k] = u16::from_le_bytes([swapped.0[2 * k], swapped.0[2 * k + 1]]);
+        }
+        i += 8;
+    }
+    for w in &mut words[i..] {
+        *w = w.swap_bytes();
+    }
+}
+
+/// Decode big-endian UTF-16 bytes into native-order code units.
+pub fn utf16be_bytes_to_words(data: &[u8]) -> Vec<u16> {
+    data.chunks_exact(2).map(|c| u16::from_be_bytes([c[0], c[1]])).collect()
+}
+
+/// Transcode big-endian UTF-16 bytes to UTF-8 (validating): byte-swap +
+/// the paper's little-endian transcoder.
+pub fn utf16be_to_utf8(data: &[u8], dst: &mut [u8]) -> Option<usize> {
+    use crate::transcode::Utf16ToUtf8;
+    let words = utf16be_bytes_to_words(data);
+    crate::transcode::utf16_to_utf8::OurUtf16ToUtf8::validating().convert(&words, dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bom_detection() {
+        assert_eq!(detect_bom(&[0xEF, 0xBB, 0xBF, b'a']), Bom::Utf8);
+        assert_eq!(detect_bom(&[0xFF, 0xFE, 0x41, 0x00]), Bom::Utf16Le);
+        assert_eq!(detect_bom(&[0xFE, 0xFF, 0x00, 0x41]), Bom::Utf16Be);
+        assert_eq!(detect_bom(b"plain"), Bom::None);
+        assert_eq!(detect_bom(&[]), Bom::None);
+        assert_eq!(Bom::Utf8.len(), 3);
+        assert_eq!(Bom::None.len(), 0);
+    }
+
+    #[test]
+    fn swap_round_trips() {
+        let text = "héllo 漢字 🙂 swap test with more than eight units";
+        let mut words: Vec<u16> = text.encode_utf16().collect();
+        let original = words.clone();
+        swap_bytes_utf16(&mut words);
+        assert_ne!(words, original);
+        for (w, o) in words.iter().zip(&original) {
+            assert_eq!(*w, o.swap_bytes());
+        }
+        swap_bytes_utf16(&mut words);
+        assert_eq!(words, original);
+    }
+
+    #[test]
+    fn utf16be_to_utf8_round_trip() {
+        let text = "big-endian 漢字 🙂 path";
+        let be_bytes: Vec<u8> =
+            text.encode_utf16().flat_map(|w| w.to_be_bytes()).collect();
+        let mut dst = vec![0u8; crate::transcode::utf8_capacity_for(be_bytes.len() / 2)];
+        let n = utf16be_to_utf8(&be_bytes, &mut dst).unwrap();
+        assert_eq!(&dst[..n], text.as_bytes());
+    }
+
+    #[test]
+    fn utf16be_rejects_invalid() {
+        // lone high surrogate, big-endian
+        let bad = [0xD8u8, 0x00];
+        let mut dst = vec![0u8; 32];
+        assert_eq!(utf16be_to_utf8(&bad, &mut dst), None);
+    }
+}

@@ -1,0 +1,115 @@
+//! Interleaved (two-half) decoding — the paper's §7 future-work item,
+//! implemented.
+//!
+//! "Given a long string, one could decode the first half and the second
+//! half separately — for example. One needs to ensure that the outputs
+//! end up being consecutive which we can achieve by copying them or by
+//! pre-computing the character offsets." (§7)
+//!
+//! We take the pre-computed-offsets route: a single cheap vectorizable
+//! pass counts the UTF-16 units each half will produce
+//! ([`crate::transcode::utf16_len_from_utf8`] is exact for valid
+//! input), the split point is snapped to a character boundary, and the
+//! two halves are transcoded directly into their final, disjoint output
+//! slices — concurrently when a second thread is available.
+
+use crate::transcode::utf8_to_utf16::OurUtf8ToUtf16;
+use crate::transcode::{utf16_len_from_utf8, Utf8ToUtf16};
+
+/// Snap `pos` back to the nearest UTF-8 character boundary at or before
+/// it.
+fn snap_to_boundary(src: &[u8], mut pos: usize) -> usize {
+    while pos > 0 && pos < src.len() && (src[pos] & 0xC0) == 0x80 {
+        pos -= 1;
+    }
+    pos
+}
+
+/// Validating UTF-8 → UTF-16 over two interleaved halves.
+///
+/// Returns the number of words written to `dst`, or `None` on invalid
+/// input. Output is bit-identical to the sequential engine (tested).
+pub fn utf8_to_utf16_interleaved(src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    let engine = OurUtf8ToUtf16::validating();
+    if src.len() < 4096 {
+        // Not worth the pre-pass + thread overhead below ~4 KiB.
+        return engine.convert(src, dst);
+    }
+    let mid = snap_to_boundary(src, src.len() / 2);
+    let (first, second) = src.split_at(mid);
+    // Pre-compute the first half's output offset (§7's "pre-computing
+    // the character offsets"). Exact only for valid input; if the input
+    // is invalid the halves' validation rejects it anyway.
+    let first_units = utf16_len_from_utf8(first);
+    if first_units + 16 > dst.len() {
+        return None;
+    }
+    let (dst_a, dst_b) = dst.split_at_mut(first_units + 16);
+
+    let (n_a, n_b) = std::thread::scope(|scope| {
+        let handle = scope.spawn(move || engine.convert(second, dst_b));
+        let a = engine.convert(first, &mut dst_a[..]);
+        (a, handle.join().expect("worker thread"))
+    });
+    let n_a = n_a?;
+    let n_b = n_b?;
+    if n_a != first_units {
+        // Only possible on invalid input that slipped past the length
+        // estimate; be conservative.
+        return None;
+    }
+    // Close the 16-word slack gap between the halves.
+    dst.copy_within(first_units + 16..first_units + 16 + n_b, first_units);
+    Some(n_a + n_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{Collection, Corpus, Language};
+    use crate::transcode::utf16_capacity_for;
+
+    #[test]
+    fn matches_sequential_engine_on_all_corpora() {
+        let seq = OurUtf8ToUtf16::validating();
+        for lang in [Language::Arabic, Language::Chinese, Language::Emoji, Language::Latin] {
+            let corpus = Corpus::generate(lang, Collection::Lipsum);
+            let mut a = vec![0u16; utf16_capacity_for(corpus.utf8.len()) + 16];
+            let mut b = vec![0u16; utf16_capacity_for(corpus.utf8.len()) + 16];
+            let n_seq = seq.convert(&corpus.utf8, &mut a).unwrap();
+            let n_int = utf8_to_utf16_interleaved(&corpus.utf8, &mut b).unwrap();
+            assert_eq!(n_seq, n_int, "{}", corpus.name());
+            assert_eq!(a[..n_seq], b[..n_int], "{}", corpus.name());
+        }
+    }
+
+    #[test]
+    fn small_inputs_take_sequential_path() {
+        let text = "short é漢🙂";
+        let mut dst = vec![0u16; utf16_capacity_for(text.len()) + 16];
+        let n = utf8_to_utf16_interleaved(text.as_bytes(), &mut dst).unwrap();
+        assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn split_point_never_cuts_a_character() {
+        // Force the midpoint into multi-byte characters of each width.
+        for unit in ["é", "漢", "🙂"] {
+            let text = unit.repeat(3000);
+            let mut dst = vec![0u16; utf16_capacity_for(text.len()) + 16];
+            let n = utf8_to_utf16_interleaved(text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(&dst[..n], &text.encode_utf16().collect::<Vec<_>>()[..], "{unit}");
+        }
+    }
+
+    #[test]
+    fn invalid_input_rejected_in_either_half() {
+        let mut bad = "x".repeat(10_000).into_bytes();
+        bad[100] = 0xFF; // first half
+        let mut dst = vec![0u16; utf16_capacity_for(bad.len()) + 16];
+        assert_eq!(utf8_to_utf16_interleaved(&bad, &mut dst), None);
+        let mut bad2 = "x".repeat(10_000).into_bytes();
+        bad2[9000] = 0xFF; // second half
+        assert_eq!(utf8_to_utf16_interleaved(&bad2, &mut dst), None);
+    }
+}

@@ -1,0 +1,132 @@
+//! The paper's transcoders and their public traits.
+//!
+//! Every transcoding engine in this crate — ours and all baselines —
+//! implements [`Utf8ToUtf16`] and/or [`Utf16ToUtf8`], so the benchmark
+//! harness, the coordinator and the tests can treat them uniformly.
+//!
+//! ### Buffer contract
+//!
+//! Output buffers must satisfy [`utf16_capacity_for`] /
+//! [`utf8_capacity_for`]: the worst-case output size plus a small slack
+//! that lets the vectorized kernels write whole registers and advance by
+//! less (the standard SIMD idiom the paper's Figs. 2–4 rely on). The
+//! engines additionally bound every write, so even adversarial invalid
+//! input through a non-validating engine cannot write out of bounds —
+//! it yields garbage output and/or `None`, never memory unsafety.
+
+pub mod endian;
+pub mod interleaved;
+pub mod utf16_to_utf8;
+pub mod utf32;
+pub mod utf8_to_utf16;
+
+/// Required UTF-16 output capacity (in words) to transcode `src_len`
+/// UTF-8 bytes: one word per input byte plus register slack.
+#[inline]
+pub const fn utf16_capacity_for(src_len: usize) -> usize {
+    src_len + 16
+}
+
+/// Required UTF-8 output capacity (in bytes) to transcode `src_len`
+/// UTF-16 words: three bytes per word plus register slack.
+#[inline]
+pub const fn utf8_capacity_for(src_len: usize) -> usize {
+    3 * src_len + 16
+}
+
+/// A UTF-8 → UTF-16 transcoding engine.
+pub trait Utf8ToUtf16: Send + Sync {
+    /// Engine name as used in the paper's tables (e.g. `"ours"`, `"ICU"`).
+    fn name(&self) -> &'static str;
+
+    /// Whether this engine validates its input (Table 5 vs Table 6).
+    fn validating(&self) -> bool;
+
+    /// Transcode `src` into `dst` (little-endian word order), returning
+    /// the number of words written, or `None` if the engine validates and
+    /// the input is invalid (or `dst` is too small — see module docs).
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize>;
+
+    /// Whether the engine supports inputs with 4-byte (supplemental
+    /// plane) characters. Inoue et al. does not (§2) — the harness marks
+    /// the Emoji dataset "unsupported" for it, as the paper does.
+    fn supports_supplemental(&self) -> bool {
+        true
+    }
+
+    /// Convenience: transcode into a fresh, exactly-sized vector.
+    fn convert_to_vec(&self, src: &[u8]) -> Option<Vec<u16>> {
+        let mut dst = vec![0u16; utf16_capacity_for(src.len())];
+        let n = self.convert(src, &mut dst)?;
+        dst.truncate(n);
+        Some(dst)
+    }
+}
+
+/// A UTF-16 → UTF-8 transcoding engine.
+pub trait Utf16ToUtf8: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn validating(&self) -> bool;
+
+    /// Transcode `src` (native word order) into `dst`, returning the
+    /// number of bytes written, or `None` on invalid input.
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize>;
+
+    fn convert_to_vec(&self, src: &[u16]) -> Option<Vec<u8>> {
+        let mut dst = vec![0u8; utf8_capacity_for(src.len())];
+        let n = self.convert(src, &mut dst)?;
+        dst.truncate(n);
+        Some(dst)
+    }
+}
+
+/// Number of UTF-16 words needed to represent valid UTF-8 input
+/// (counting surrogate pairs as two). Vectorizable single pass.
+pub fn utf16_len_from_utf8(src: &[u8]) -> usize {
+    // words = #non-continuation bytes + #4-byte leads
+    let mut n = 0usize;
+    for &b in src {
+        n += ((b & 0xC0) != 0x80) as usize;
+        n += (b >= 0xF0) as usize;
+    }
+    n
+}
+
+/// Number of UTF-8 bytes needed to represent valid UTF-16 input.
+pub fn utf8_len_from_utf16(src: &[u16]) -> usize {
+    let mut n = 0usize;
+    for &w in src {
+        n += if w < 0x80 {
+            1
+        } else if w < 0x800 {
+            2
+        } else if (0xD800..0xDC00).contains(&w) {
+            // high surrogate: the pair contributes 4 bytes; count them
+            // here and let the low surrogate contribute 0.
+            4
+        } else if (0xDC00..0xE000).contains(&w) {
+            0
+        } else {
+            3
+        };
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_estimates_match_std() {
+        for text in ["", "abc", "héllo", "漢字", "🙂🚀", "mixed é漢🙂 text"] {
+            assert_eq!(
+                utf16_len_from_utf8(text.as_bytes()),
+                text.encode_utf16().count(),
+                "{text}"
+            );
+            let units: Vec<u16> = text.encode_utf16().collect();
+            assert_eq!(utf8_len_from_utf16(&units), text.len(), "{text}");
+        }
+    }
+}

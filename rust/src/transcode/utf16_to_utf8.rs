@@ -1,0 +1,371 @@
+//! Our vectorized UTF-16 → UTF-8 transcoder (§5, Algorithm 4).
+//!
+//! Per 8-word register, branch on the register's content class:
+//!
+//! 1. all words `< 0x80` — pack eight ASCII bytes;
+//! 2. all words `< 0x800` — unpack each word to a candidate
+//!    `[lead, continuation]` byte pair, then compress via the
+//!    [`ONE_TWO`] table keyed by the 8-bit ASCII bitset (8–16 bytes out);
+//! 3. all words outside the surrogate range — expand each half-register
+//!    (4 words) to 32-bit lanes `[lead, cont1, cont2, _]`, then compress
+//!    via the [`ONE_TWO_THREE`] table keyed by the packed
+//!    `ascii | below-0x800 << 4` bitset (4–12 bytes per half, up to 24
+//!    bytes per register — hence the 32-bit cast the paper describes);
+//! 4. otherwise (a potential surrogate pair) — conventional scalar path
+//!    with validation; the paper notes this is the only place validation
+//!    is ever needed for UTF-16 input.
+
+use crate::counters::Counters;
+use crate::scalar;
+use crate::simd::{U16x8, U8x16};
+use crate::tables::utf16_to_utf8::{ONE_TWO, ONE_TWO_THREE};
+use crate::transcode::Utf16ToUtf8;
+
+/// The paper's UTF-16 → UTF-8 transcoder ("ours" in Tables 9–10).
+///
+/// Validation is effectively free: only registers containing surrogate
+/// candidates need any checking, so the paper reports a single
+/// (validating) configuration ("there is no measurable benefit to
+/// omitting the validation", §6.4). A non-validating constructor exists
+/// for completeness and treats lone surrogates as replacement-free
+/// garbage input.
+#[derive(Clone, Copy, Debug)]
+pub struct OurUtf16ToUtf8 {
+    validate: bool,
+}
+
+impl OurUtf16ToUtf8 {
+    pub const fn validating() -> Self {
+        OurUtf16ToUtf8 { validate: true }
+    }
+
+    pub const fn non_validating() -> Self {
+        OurUtf16ToUtf8 { validate: false }
+    }
+}
+
+impl Utf16ToUtf8 for OurUtf16ToUtf8 {
+    fn name(&self) -> &'static str {
+        "ours"
+    }
+
+    fn validating(&self) -> bool {
+        self.validate
+    }
+
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+        convert_impl::<false>(src, dst, self.validate, &mut Counters::disabled())
+    }
+}
+
+/// Convert with instrumentation (Table 8 support).
+pub fn convert_counted(
+    src: &[u16],
+    dst: &mut [u8],
+    validate: bool,
+    counters: &mut Counters,
+) -> Option<usize> {
+    convert_impl::<true>(src, dst, validate, counters)
+}
+
+/// Case 2: eight words, all `< 0x800`, to 8–16 bytes.
+///
+/// Branch-free: both candidate bytes are computed vectorially, the
+/// first byte selected by the ASCII lane mask, and the 8-bit table key
+/// extracted with a `movemask` — the exact structure of the paper's
+/// SSE routine.
+#[inline]
+fn one_two_bytes(v: U16x8, dst: &mut [u8]) -> usize {
+    let is_ascii = v.lt_mask(U16x8::splat(0x80));
+    // lead = 0xC0 | (w >> 6) for 2-byte words, the word itself for ASCII
+    let lead = v.shr::<6>().or(U16x8::splat(0xC0));
+    let b0 = is_ascii.and(v).or(not16(is_ascii).and(lead));
+    let b1 = v.and(U16x8::splat(0x3F)).or(U16x8::splat(0x80));
+    // Interleave the low bytes of b0/b1 into [b0_0, b1_0, b0_1, …].
+    let unpacked = b0.or(b1.shl::<8>()).to_bytes();
+    let ascii_mask = is_ascii.movemask();
+    let entry = &ONE_TWO[ascii_mask as usize];
+    let out = unpacked.shuffle(U8x16(entry.mask));
+    out.store(dst);
+    entry.count as usize
+}
+
+#[inline]
+fn not16(v: U16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = !v.0[i];
+    }
+    U16x8(out)
+}
+
+/// Case 3 helper: four words (all non-surrogate, any BMP value) to
+/// 4–12 bytes via 32-bit lane expansion.
+#[inline]
+fn one_two_three_half(words: &[u16], dst: &mut [u8]) -> usize {
+    // Branch-free expansion: all three byte candidates computed for
+    // every word, selected by the class masks (the paper's "split the
+    // bits … then complete the bit layout", §5). Bytes beyond a
+    // character's length hold garbage the compress shuffle never reads.
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse4.1"))]
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert!(words.len() >= 4 && dst.len() >= 16);
+        let w64 = _mm_loadl_epi64(words.as_ptr() as *const __m128i);
+        let w = _mm_cvtepu16_epi32(w64); // four 32-bit lanes
+        let is1 = _mm_cmplt_epi32(w, _mm_set1_epi32(0x80));
+        let is12 = _mm_cmplt_epi32(w, _mm_set1_epi32(0x800));
+        // lead byte candidates per class
+        let lead2 = _mm_or_si128(_mm_srli_epi32(w, 6), _mm_set1_epi32(0xC0));
+        let lead3 = _mm_or_si128(_mm_srli_epi32(w, 12), _mm_set1_epi32(0xE0));
+        let b0 = _mm_blendv_epi8(_mm_blendv_epi8(lead3, lead2, is12), w, is1);
+        // second byte: cont(w) for 2-byte, cont(w >> 6) for 3-byte
+        let cont_lo = _mm_or_si128(_mm_and_si128(w, _mm_set1_epi32(0x3F)), _mm_set1_epi32(0x80));
+        let cont_mid = _mm_or_si128(
+            _mm_and_si128(_mm_srli_epi32(w, 6), _mm_set1_epi32(0x3F)),
+            _mm_set1_epi32(0x80),
+        );
+        let b1 = _mm_blendv_epi8(cont_mid, cont_lo, is12);
+        let b2 = cont_lo;
+        let expanded =
+            _mm_or_si128(_mm_or_si128(b0, _mm_slli_epi32(b1, 8)), _mm_slli_epi32(b2, 16));
+        let key = (_mm_movemask_ps(_mm_castsi128_ps(is1))
+            | (_mm_movemask_ps(_mm_castsi128_ps(is12)) << 4)) as usize;
+        let entry = &ONE_TWO_THREE[key];
+        let mask = _mm_loadu_si128(entry.mask.as_ptr() as *const __m128i);
+        let out = _mm_shuffle_epi8(expanded, mask);
+        _mm_storeu_si128(dst.as_mut_ptr() as *mut __m128i, out);
+        return entry.count as usize;
+    }
+    #[allow(unreachable_code)]
+    {
+        let mut expanded = [0u8; 16];
+        let mut key = 0u8;
+        for i in 0..4 {
+            let w = words[i] as u32;
+            let is1 = (w < 0x80) as u32;
+            let is2 = ((w >= 0x80) & (w < 0x800)) as u32;
+            let is3 = (w >= 0x800) as u32;
+            key |= (is1 as u8) << i;
+            key |= ((is1 | is2) as u8) << (i + 4);
+            let b0 = is1 * w + is2 * (0xC0 | (w >> 6)) + is3 * (0xE0 | (w >> 12));
+            let b1 = is2 * (0x80 | (w & 0x3F)) + is3 * (0x80 | ((w >> 6) & 0x3F));
+            let b2 = is3 * (0x80 | (w & 0x3F));
+            expanded[4 * i] = b0 as u8;
+            expanded[4 * i + 1] = b1 as u8;
+            expanded[4 * i + 2] = b2 as u8;
+        }
+        let entry = &ONE_TWO_THREE[key as usize];
+        let out = U8x16(expanded).shuffle(U8x16(entry.mask));
+        out.store(dst);
+        entry.count as usize
+    }
+}
+
+/// Public re-export of the half-register 1–3-byte routine for reuse by
+/// the utf8lut-style baseline (which runs it without the class
+/// specializations).
+#[inline]
+pub fn one_two_three_half_pub(words: &[u16], dst: &mut [u8]) -> usize {
+    one_two_three_half(words, dst)
+}
+
+fn convert_impl<const COUNT: bool>(
+    src: &[u16],
+    dst: &mut [u8],
+    validate: bool,
+    counters: &mut Counters,
+) -> Option<usize> {
+    let mut p = 0usize;
+    let mut q = 0usize;
+
+    while p + 8 <= src.len() {
+        // Each register writes at most 24 bytes (+16 slack for full
+        // register stores).
+        if q + 32 > dst.len() {
+            return None;
+        }
+        let v = U16x8::load(&src[p..]);
+        let acc = v.reduce_or();
+        if acc < 0x80 {
+            // Case 1: eight ASCII characters (`packus` + 8-byte store).
+            #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+            unsafe {
+                use core::arch::x86_64::*;
+                let x = _mm_loadu_si128(v.0.as_ptr() as *const __m128i);
+                let packed = _mm_packus_epi16(x, x);
+                _mm_storel_epi64(dst.as_mut_ptr().add(q) as *mut __m128i, packed);
+            }
+            #[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+            for i in 0..8 {
+                dst[q + i] = v.0[i] as u8;
+            }
+            p += 8;
+            q += 8;
+            if COUNT { counters.u16_ascii8 += 1; }
+            continue;
+        }
+        if acc < 0x800 {
+            // Case 2: 1–2-byte characters only.
+            q += one_two_bytes(v, &mut dst[q..]);
+            p += 8;
+            if COUNT { counters.u16_onetwo += 1; }
+            continue;
+        }
+        if !v.has_surrogate() {
+            // Case 3: BMP, up to 3 bytes per character, two halves.
+            q += one_two_three_half(&src[p..p + 4], &mut dst[q..]);
+            q += one_two_three_half(&src[p + 4..p + 8], &mut dst[q..]);
+            p += 8;
+            if COUNT { counters.u16_onetwothree += 1; }
+            continue;
+        }
+        // Case 4: at least one surrogate candidate — conventional path
+        // over this register (§5: the only place validation happens).
+        if COUNT { counters.u16_surrogate_fallback += 1; }
+        let limit = p + 8;
+        while p < limit {
+            match scalar::decode_utf16_char(&src[p..]) {
+                Ok((cp, n)) => {
+                    // A pair may extend one word past the register.
+                    p += n;
+                    q += scalar::encode_utf8_char(cp, &mut dst[q..]);
+                }
+                Err(_) => {
+                    if !validate {
+                        // Garbage-tolerant: emit U+FFFD-free best effort —
+                        // encode the lone surrogate as 3 raw bytes (WTF-8
+                        // style) and move on.
+                        let w = src[p] as u32;
+                        q += scalar::encode_utf8_char_wtf8(w, &mut dst[q..]);
+                        p += 1;
+                    } else {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    // Scalar tail (fewer than 8 words).
+    while p < src.len() {
+        if q + 4 > dst.len() {
+            return None;
+        }
+        match scalar::decode_utf16_char(&src[p..]) {
+            Ok((cp, n)) => {
+                p += n;
+                q += scalar::encode_utf8_char(cp, &mut dst[q..]);
+            }
+            Err(_) => {
+                if !validate {
+                    let w = src[p] as u32;
+                    q += scalar::encode_utf8_char_wtf8(w, &mut dst[q..]);
+                    p += 1;
+                } else {
+                    return None;
+                }
+            }
+        }
+    }
+    Some(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::utf8_capacity_for;
+
+    fn roundtrip(text: &str) {
+        let units: Vec<u16> = text.encode_utf16().collect();
+        let engine = OurUtf16ToUtf8::validating();
+        let mut dst = vec![0u8; utf8_capacity_for(units.len())];
+        let n = engine.convert(&units, &mut dst).expect("valid input");
+        assert_eq!(&dst[..n], text.as_bytes(), "{text:?}");
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip("");
+        roundtrip("a");
+        roundtrip("é");
+        roundtrip("漢");
+        roundtrip("🙂");
+    }
+
+    #[test]
+    fn ascii_fast_path() {
+        roundtrip(&"plain ascii text only ".repeat(20));
+    }
+
+    #[test]
+    fn one_two_byte_path() {
+        roundtrip(&"русский текст пример ".repeat(20));
+        roundtrip(&"mixé déjà vu là-bàs ".repeat(20));
+    }
+
+    #[test]
+    fn one_two_three_byte_path() {
+        roundtrip(&"漢字テスト文字列 with ascii and ü ".repeat(20));
+        roundtrip(&"ไทยสวัสดี".repeat(25));
+    }
+
+    #[test]
+    fn surrogate_pairs() {
+        roundtrip(&"🙂🚀🌍💡".repeat(25));
+        roundtrip(&"a🙂é漢🚀".repeat(25));
+    }
+
+    #[test]
+    fn pair_straddles_register_boundary() {
+        for pad in 0..20 {
+            let text = format!("{}🙂{}", "x".repeat(pad), "y".repeat(30));
+            roundtrip(&text);
+        }
+    }
+
+    #[test]
+    fn validating_rejects_lone_surrogates() {
+        let engine = OurUtf16ToUtf8::validating();
+        for bad in [
+            vec![0xD800u16],
+            vec![0x41; 20].into_iter().chain([0xDC00]).collect::<Vec<u16>>(),
+            {
+                let mut v = vec![0x41u16; 20];
+                v[10] = 0xD800; // lone high in the middle
+                v
+            },
+            vec![0xDC00, 0xD800], // reversed pair
+        ] {
+            let mut dst = vec![0u8; utf8_capacity_for(bad.len())];
+            assert_eq!(engine.convert(&bad, &mut dst), None);
+        }
+    }
+
+    #[test]
+    fn non_validating_survives_lone_surrogates() {
+        let engine = OurUtf16ToUtf8::non_validating();
+        let mut bad = vec![0x41u16; 20];
+        bad[10] = 0xD800;
+        let mut dst = vec![0u8; utf8_capacity_for(bad.len())];
+        let n = engine.convert(&bad, &mut dst).expect("non-validating never fails");
+        assert!(n >= 20);
+    }
+
+    #[test]
+    fn counters_record_paths() {
+        let mut c = Counters::enabled();
+        let units: Vec<u16> = "abcdefgh".encode_utf16().collect();
+        let mut dst = vec![0u8; 64];
+        convert_counted(&units, &mut dst, true, &mut c).unwrap();
+        assert_eq!(c.u16_ascii8, 1);
+        let units2: Vec<u16> = "ééééèèèè".encode_utf16().collect();
+        let mut c2 = Counters::enabled();
+        convert_counted(&units2, &mut dst, true, &mut c2).unwrap();
+        assert_eq!(c2.u16_onetwo, 1);
+        let units3: Vec<u16> = "漢字テスト漢字テ".encode_utf16().collect();
+        let mut c3 = Counters::enabled();
+        convert_counted(&units3, &mut dst, true, &mut c3).unwrap();
+        assert_eq!(c3.u16_onetwothree, 1);
+    }
+}

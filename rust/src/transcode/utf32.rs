@@ -1,0 +1,164 @@
+//! UTF-32 transcoding (§1/§3: "For internal processing within software
+//! functions, there is also the UTF-32 encoding format").
+//!
+//! UTF-32 is fixed-width, so transcoding it is structurally simpler
+//! than the UTF-8 ⇄ UTF-16 pair; the interesting parts are validation
+//! (scalar-value range + surrogate gap) and the variable-width output
+//! compaction when encoding, which reuses the same class-mask machinery
+//! as Algorithm 4.
+
+use crate::scalar;
+
+/// Validate a UTF-32 buffer: every value must be a Unicode scalar value
+/// (≤ U+10FFFF and outside the surrogate gap).
+pub fn validate_utf32(input: &[u32]) -> bool {
+    // Branch-free OR-reduction, autovectorizes.
+    let mut bad = false;
+    for &c in input {
+        bad |= c > 0x10FFFF || (c & 0xFFFFF800) == 0xD800;
+    }
+    !bad
+}
+
+/// UTF-8 → UTF-32, validating. Returns code points written.
+pub fn utf8_to_utf32(src: &[u8], dst: &mut [u32]) -> Option<usize> {
+    let mut p = 0usize;
+    let mut q = 0usize;
+    // ASCII fast path in 16-byte strides, scalar strict decode otherwise.
+    while p < src.len() {
+        if p + 16 <= src.len() && crate::simd::U8x16::load(&src[p..]).is_ascii() {
+            if q + 16 > dst.len() {
+                return None;
+            }
+            for i in 0..16 {
+                dst[q + i] = src[p + i] as u32;
+            }
+            p += 16;
+            q += 16;
+            continue;
+        }
+        let (cp, len) = scalar::decode_utf8_char(&src[p..]).ok()?;
+        if q >= dst.len() {
+            return None;
+        }
+        dst[q] = cp;
+        q += 1;
+        p += len;
+    }
+    Some(q)
+}
+
+/// UTF-32 → UTF-8, validating. Returns bytes written.
+/// `dst` needs up to 4 bytes per code point.
+pub fn utf32_to_utf8(src: &[u32], dst: &mut [u8]) -> Option<usize> {
+    if !validate_utf32(src) {
+        return None;
+    }
+    let mut q = 0usize;
+    for &cp in src {
+        if q + 4 > dst.len() {
+            return None;
+        }
+        q += scalar::encode_utf8_char(cp, &mut dst[q..]);
+    }
+    Some(q)
+}
+
+/// UTF-16 → UTF-32, validating. Returns code points written.
+pub fn utf16_to_utf32(src: &[u16], dst: &mut [u32]) -> Option<usize> {
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < src.len() {
+        let (cp, n) = scalar::decode_utf16_char(&src[p..]).ok()?;
+        if q >= dst.len() {
+            return None;
+        }
+        dst[q] = cp;
+        q += 1;
+        p += n;
+    }
+    Some(q)
+}
+
+/// UTF-32 → UTF-16, validating. Returns words written.
+/// `dst` needs up to 2 words per code point.
+pub fn utf32_to_utf16(src: &[u32], dst: &mut [u16]) -> Option<usize> {
+    if !validate_utf32(src) {
+        return None;
+    }
+    let mut q = 0usize;
+    for &cp in src {
+        if q + 2 > dst.len() {
+            return None;
+        }
+        q += scalar::encode_utf16_char(cp, &mut dst[q..]);
+    }
+    Some(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLES: &[&str] =
+        &["", "ascii only", "héllo wörld", "漢字テスト", "🙂🚀🌍", "mix a é 漢 🙂 end"];
+
+    #[test]
+    fn utf8_utf32_round_trip_matches_std() {
+        for text in SAMPLES {
+            let expected: Vec<u32> = text.chars().map(|c| c as u32).collect();
+            let mut dst = vec![0u32; text.len() + 16];
+            let n = utf8_to_utf32(text.as_bytes(), &mut dst).unwrap();
+            assert_eq!(&dst[..n], &expected[..], "{text}");
+            let mut back = vec![0u8; 4 * n + 4];
+            let m = utf32_to_utf8(&dst[..n], &mut back).unwrap();
+            assert_eq!(&back[..m], text.as_bytes());
+        }
+    }
+
+    #[test]
+    fn utf16_utf32_round_trip_matches_std() {
+        for text in SAMPLES {
+            let units: Vec<u16> = text.encode_utf16().collect();
+            let expected: Vec<u32> = text.chars().map(|c| c as u32).collect();
+            let mut dst = vec![0u32; units.len() + 2];
+            let n = utf16_to_utf32(&units, &mut dst).unwrap();
+            assert_eq!(&dst[..n], &expected[..], "{text}");
+            let mut back = vec![0u16; 2 * n + 2];
+            let m = utf32_to_utf16(&dst[..n], &mut back).unwrap();
+            assert_eq!(&back[..m], &units[..]);
+        }
+    }
+
+    #[test]
+    fn utf32_validation() {
+        assert!(validate_utf32(&[0, 0x41, 0xD7FF, 0xE000, 0x10FFFF]));
+        assert!(!validate_utf32(&[0xD800]));
+        assert!(!validate_utf32(&[0xDFFF]));
+        assert!(!validate_utf32(&[0x110000]));
+        assert!(!validate_utf32(&[0x41, 0xFFFFFFFF]));
+        assert!(validate_utf32(&[]));
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let mut dst32 = vec![0u32; 32];
+        assert_eq!(utf8_to_utf32(&[0xC0, 0x80], &mut dst32), None);
+        assert_eq!(utf16_to_utf32(&[0xD800], &mut dst32), None);
+        let mut dst8 = vec![0u8; 32];
+        assert_eq!(utf32_to_utf8(&[0xD800], &mut dst8), None);
+        let mut dst16 = vec![0u16; 32];
+        assert_eq!(utf32_to_utf16(&[0x110000], &mut dst16), None);
+    }
+
+    #[test]
+    fn ascii_fast_path_alignments() {
+        for pad in 0..20 {
+            let text = format!("{}é{}", "a".repeat(pad), "b".repeat(40));
+            let mut dst = vec![0u32; text.len() + 16];
+            let n = utf8_to_utf32(text.as_bytes(), &mut dst).unwrap();
+            let expected: Vec<u32> = text.chars().map(|c| c as u32).collect();
+            assert_eq!(&dst[..n], &expected[..]);
+        }
+    }
+}

@@ -1,0 +1,573 @@
+//! Our vectorized UTF-8 → UTF-16 transcoder (§4, Algorithms 2 + 3).
+//!
+//! Structure, following Algorithm 3:
+//!
+//! 1. Read input in 64-byte blocks. All-ASCII blocks take a widening
+//!    fast path.
+//! 2. Otherwise compute the end-of-character bitset once for the block
+//!    (`not-continuation mask >> 1`) and repeatedly convert 12-byte
+//!    windows with Algorithm 2 while at least 12 bits of the bitset
+//!    remain.
+//! 3. Before the table lookup, three cheap bitset tests catch the common
+//!    patterns the paper calls out: 16 ASCII bytes (`0xFFFF`), eight
+//!    2-byte characters (`0xAAAA`) and four 3-byte characters (`0x924`).
+//! 4. The table-driven core applies one of three shuffle layouts
+//!    (Figs. 2–4), all sharing the "last byte first" lane convention of
+//!    [`crate::tables::utf8_to_utf16`].
+//! 5. The trailing partial block falls back to the scalar routine.
+//!
+//! The validating variant interleaves the Keiser–Lemire checker over
+//! aligned 64-byte blocks, running slightly ahead of the converter so
+//! every byte is validated exactly once with correct carry state.
+
+use crate::counters::Counters;
+use crate::scalar;
+use crate::simd::{is_ascii_block, not_continuation_mask64, U16x8, U8x16};
+use crate::tables::utf8_to_utf16::{CASE2_START, CASE3_START, TABLES};
+use crate::transcode::Utf8ToUtf16;
+use crate::validate::Utf8Validator;
+
+/// The paper's UTF-8 → UTF-16 transcoder ("ours" in Tables 5–8).
+#[derive(Clone, Copy, Debug)]
+pub struct OurUtf8ToUtf16 {
+    validate: bool,
+}
+
+impl OurUtf8ToUtf16 {
+    /// Validating variant (Table 6/7 configuration).
+    pub const fn validating() -> Self {
+        OurUtf8ToUtf16 { validate: true }
+    }
+
+    /// Non-validating variant (Table 5 configuration).
+    pub const fn non_validating() -> Self {
+        OurUtf8ToUtf16 { validate: false }
+    }
+}
+
+impl Utf8ToUtf16 for OurUtf8ToUtf16 {
+    fn name(&self) -> &'static str {
+        "ours"
+    }
+
+    fn validating(&self) -> bool {
+        self.validate
+    }
+
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+        convert_impl::<false>(src, dst, self.validate, &mut Counters::disabled())
+    }
+}
+
+/// Convert with instrumentation (Table 8 support).
+pub fn convert_counted(
+    src: &[u8],
+    dst: &mut [u16],
+    validate: bool,
+    counters: &mut Counters,
+) -> Option<usize> {
+    convert_impl::<true>(src, dst, validate, counters)
+}
+
+/// Widen 16 ASCII bytes into 16 UTF-16 words.
+#[inline]
+fn widen16(src: &[u8], dst: &mut [u16]) {
+    for i in 0..16 {
+        dst[i] = src[i] as u16;
+    }
+}
+
+/// Widen a 64-byte ASCII block into 64 UTF-16 words (`vpmovzxbw`).
+#[inline]
+fn widen64(block: &[u8; 64], dst: &mut [u16]) {
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert!(dst.len() >= 64);
+        for i in 0..4 {
+            let v = _mm_loadu_si128(block.as_ptr().add(16 * i) as *const __m128i);
+            let w = _mm256_cvtepu8_epi16(v);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(16 * i) as *mut __m256i, w);
+        }
+        return;
+    }
+    #[allow(unreachable_code)]
+    {
+        for i in 0..64 {
+            dst[i] = block[i] as u16;
+        }
+    }
+}
+
+/// Algorithm 2, case 1 (Fig. 2): six characters of 1–2 bytes in 16-bit
+/// lanes. Returns the number of words written (always 6).
+#[inline]
+fn compose_case1(perm: U8x16, dst: &mut [u16]) -> usize {
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert!(dst.len() >= 8);
+        let v = _mm_loadu_si128(perm.0.as_ptr() as *const __m128i);
+        let ascii = _mm_and_si128(v, _mm_set1_epi16(0x7F));
+        let high = _mm_and_si128(v, _mm_set1_epi16(0x1F00));
+        let composed = _mm_or_si128(ascii, _mm_srli_epi16(high, 2));
+        _mm_storeu_si128(dst.as_mut_ptr() as *mut __m128i, composed);
+        return 6;
+    }
+    #[allow(unreachable_code)]
+    {
+        let v = perm_to_u16x8(perm);
+        let ascii = v.and(U16x8::splat(0x7F));
+        let highbyte = v.and(U16x8::splat(0x1F00));
+        let composed = ascii.or(highbyte.shr::<2>());
+        // Write the full register, advance by six (slack guaranteed).
+        composed.store(dst);
+        6
+    }
+}
+
+#[inline]
+fn perm_to_u16x8(perm: U8x16) -> U16x8 {
+    let mut v = [0u16; 8];
+    for i in 0..8 {
+        v[i] = u16::from_le_bytes([perm.0[2 * i], perm.0[2 * i + 1]]);
+    }
+    U16x8(v)
+}
+
+#[inline]
+fn perm_lane32(perm: U8x16, k: usize) -> u32 {
+    u32::from_le_bytes([perm.0[4 * k], perm.0[4 * k + 1], perm.0[4 * k + 2], perm.0[4 * k + 3]])
+}
+
+/// Algorithm 2, case 2 (Fig. 3): four characters of 1–3 bytes in 32-bit
+/// lanes. Returns the number of words written (always 4).
+#[inline]
+fn compose_case2(perm: U8x16, dst: &mut [u16]) -> usize {
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse4.1"))]
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert!(dst.len() >= 4);
+        let v = _mm_loadu_si128(perm.0.as_ptr() as *const __m128i);
+        let ascii = _mm_and_si128(v, _mm_set1_epi32(0x7F));
+        let middle = _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x3F00)), 2);
+        let high = _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x0F_0000)), 4);
+        let composed = _mm_or_si128(_mm_or_si128(ascii, middle), high);
+        let packed = _mm_packus_epi32(composed, composed);
+        _mm_storel_epi64(dst.as_mut_ptr() as *mut __m128i, packed);
+        return 4;
+    }
+    #[allow(unreachable_code)]
+    {
+        for k in 0..4 {
+            let lane = perm_lane32(perm, k);
+            let ascii = lane & 0x7F;
+            let middle = (lane & 0x3F00) >> 2;
+            let high = (lane & 0x0F_0000) >> 4;
+            dst[k] = (ascii | middle | high) as u16;
+        }
+        4
+    }
+}
+
+/// Algorithm 2, case 3 (Fig. 4): three characters of 1–4 bytes in 32-bit
+/// lanes, with surrogate-pair synthesis for supplemental-plane
+/// characters. Returns the number of words written (3–6).
+#[inline]
+fn compose_case3(perm: U8x16, dst: &mut [u16]) -> usize {
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert!(dst.len() >= 6);
+        let v = _mm_loadu_si128(perm.0.as_ptr() as *const __m128i);
+        let ascii = _mm_and_si128(v, _mm_set1_epi32(0x7F));
+        let middle = _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x3F00)), 2);
+        // Third byte from the end: 6 data bits for a 4-byte character,
+        // 4 data bits plus a spurious set bit for a 3-byte lead; bit 6
+        // distinguishes the two and clears it (Fig. 4's exclusive-or).
+        let mh = _mm_and_si128(v, _mm_set1_epi32(0x3F_0000));
+        let correct = _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x40_0000)), 1);
+        let middlehigh = _mm_srli_epi32(_mm_xor_si128(mh, correct), 4);
+        let high = _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x0700_0000)), 6);
+        let composed =
+            _mm_or_si128(_mm_or_si128(ascii, middle), _mm_or_si128(middlehigh, high));
+        // Surrogate pair synthesis for all lanes at once (§3's formula).
+        let vm = _mm_sub_epi32(composed, _mm_set1_epi32(0x10000));
+        let lowten = _mm_or_si128(
+            _mm_and_si128(vm, _mm_set1_epi32(0x3FF)),
+            _mm_set1_epi32(0xDC00),
+        );
+        let highten = _mm_or_si128(
+            _mm_and_si128(_mm_srli_epi32(vm, 10), _mm_set1_epi32(0x3FF)),
+            _mm_set1_epi32(0xD800),
+        );
+        let surrogates = _mm_or_si128(highten, _mm_slli_epi32(lowten, 16));
+        let mut basic = [0u32; 4];
+        let mut surr = [0u32; 4];
+        _mm_storeu_si128(basic.as_mut_ptr() as *mut __m128i, composed);
+        _mm_storeu_si128(surr.as_mut_ptr() as *mut __m128i, surrogates);
+        let mut q = 0usize;
+        for k in 0..3 {
+            if basic[k] < 0x10000 {
+                dst[q] = basic[k] as u16;
+                q += 1;
+            } else {
+                dst[q] = surr[k] as u16;
+                dst[q + 1] = (surr[k] >> 16) as u16;
+                q += 2;
+            }
+        }
+        return q;
+    }
+    #[allow(unreachable_code)]
+    {
+        let mut q = 0usize;
+        for k in 0..3 {
+            let lane = perm_lane32(perm, k);
+            let ascii = lane & 0x7F;
+            let middle = (lane & 0x3F00) >> 2;
+            let mut middlehigh = lane & 0x3F_0000;
+            let correct = (lane & 0x40_0000) >> 1;
+            middlehigh ^= correct;
+            let middlehigh = middlehigh >> 4;
+            let high = (lane & 0x0700_0000) >> 6;
+            let composed = ascii | middle | middlehigh | high;
+            if composed < 0x10000 {
+                dst[q] = composed as u16;
+                q += 1;
+            } else {
+                // Surrogate pair, per the UTF-16 specification (§3).
+                let v = composed.wrapping_sub(0x10000);
+                dst[q] = 0xD800 | ((v >> 10) & 0x3FF) as u16;
+                dst[q + 1] = 0xDC00 | (v & 0x3FF) as u16;
+                q += 2;
+            }
+        }
+        q
+    }
+}
+
+/// `COUNT = false` compiles the instrumentation out of the hot loop
+/// entirely (the uninstrumented and counted entry points are separate
+/// monomorphizations).
+fn convert_impl<const COUNT: bool>(
+    src: &[u8],
+    dst: &mut [u16],
+    validate: bool,
+    counters: &mut Counters,
+) -> Option<usize> {
+    let tables = &*TABLES;
+    let mut validator = Utf8Validator::new();
+    let mut v_pos = 0usize; // validation frontier (multiple of 64)
+    let mut p = 0usize;
+    let mut q = 0usize;
+
+    // Main loop: a full 64-byte block plus a 16-byte safety margin for
+    // the unaligned window loads (windows start at most 51 bytes in).
+    while p + 80 <= src.len() {
+        let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
+        if is_ascii_block(block) {
+            if q + 64 > dst.len() {
+                return None;
+            }
+            if validate {
+                if v_pos == p {
+                    // Common aligned case: fold validation into this
+                    // block's already-established ASCII-ness — this is
+                    // why validation is near-free on ASCII (Table 5 vs 6).
+                    validator.skip64_ascii(block);
+                    v_pos += 64;
+                } else {
+                    // Conversion drifted off 64-byte alignment: catch
+                    // the frontier up over the bytes this block covers.
+                    // (Anything the frontier cannot reach yet is covered
+                    // by the tail validation before returning.)
+                    while v_pos + 64 <= src.len() && v_pos < p + 64 {
+                        let vb: &[u8; 64] = src[v_pos..v_pos + 64].try_into().unwrap();
+                        validator.push64(vb);
+                        v_pos += 64;
+                        if COUNT { counters.validated_blocks += 1; }
+                    }
+                }
+                if validator.has_error() {
+                    return None;
+                }
+            }
+            widen64(block, &mut dst[q..]);
+            p += 64;
+            q += 64;
+            if COUNT { counters.ascii_blocks += 1; }
+            continue;
+        }
+        if validate {
+            while v_pos + 64 <= src.len() && v_pos < p + 80 {
+                let vb: &[u8; 64] = src[v_pos..v_pos + 64].try_into().unwrap();
+                validator.push64(vb);
+                v_pos += 64;
+                if COUNT { counters.validated_blocks += 1; }
+            }
+            if validator.has_error() {
+                return None;
+            }
+        }
+
+        // End-of-character bitset: byte i ends a character iff byte i+1
+        // is not a continuation byte (Algorithm 3, lines 8–9). Bit 63 is
+        // unknown without the next block but is never consulted: windows
+        // start at offsets <= 51 and use 12 bits.
+        let e = not_continuation_mask64(block) >> 1;
+        let mut off = 0usize;
+        while off < 52 {
+            if q + 16 > dst.len() {
+                return None;
+            }
+            let w = &src[p + off..];
+            let z16 = ((e >> off) & 0xFFFF) as u16;
+            if z16 == 0xFFFF {
+                // Sixteen ASCII bytes.
+                widen16(w, &mut dst[q..]);
+                q += 16;
+                off += 16;
+                if COUNT { counters.fast_ascii16 += 1; }
+                continue;
+            }
+            if z16 == 0xAAAA {
+                // Eight 2-byte characters (16 bytes): each 16-bit unit is
+                // [lead, cont] little-endian; composed = lead5 << 6 | cont6.
+                #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+                unsafe {
+                    use core::arch::x86_64::*;
+                    let v = _mm_loadu_si128(w.as_ptr() as *const __m128i);
+                    let lead = _mm_slli_epi16(_mm_and_si128(v, _mm_set1_epi16(0x1F)), 6);
+                    let cont = _mm_and_si128(_mm_srli_epi16(v, 8), _mm_set1_epi16(0x3F));
+                    let composed = _mm_or_si128(lead, cont);
+                    _mm_storeu_si128(dst.as_mut_ptr().add(q) as *mut __m128i, composed);
+                }
+                #[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+                {
+                    let v = U16x8::load_le_bytes(w);
+                    let composed = v
+                        .and(U16x8::splat(0x1F))
+                        .shl::<6>()
+                        .or(v.shr::<8>().and(U16x8::splat(0x3F)));
+                    composed.store(&mut dst[q..]);
+                }
+                q += 8;
+                off += 16;
+                if COUNT { counters.fast_twobyte8 += 1; }
+                continue;
+            }
+            let key = ((e >> off) & 0xFFF) as usize;
+            if key == 0x924 {
+                // Four 3-byte characters (12 bytes): one fixed shuffle
+                // into 32-bit lanes + the case-2 bit math (Fig. 3).
+                const THREE_BYTE_SHUF: [u8; 16] =
+                    [2, 1, 0, 0x80, 5, 4, 3, 0x80, 8, 7, 6, 0x80, 11, 10, 9, 0x80];
+                let perm = U8x16::load(w).shuffle(U8x16(THREE_BYTE_SHUF));
+                q += compose_case2(perm, &mut dst[q..]);
+                off += 12;
+                if COUNT { counters.fast_threebyte4 += 1; }
+                continue;
+            }
+            #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+            if key == 0x888 {
+                // Three 4-byte (supplemental) characters: compose and
+                // write three surrogate pairs unconditionally — the
+                // "many 4-byte characters" scenario the paper calls out
+                // as unoptimized in competing libraries (§6.4).
+                unsafe {
+                    use core::arch::x86_64::*;
+                    const FOUR_BYTE_SHUF: [u8; 16] =
+                        [3, 2, 1, 0, 7, 6, 5, 4, 11, 10, 9, 8, 0x80, 0x80, 0x80, 0x80];
+                    let input = _mm_loadu_si128(w.as_ptr() as *const __m128i);
+                    let m = _mm_loadu_si128(FOUR_BYTE_SHUF.as_ptr() as *const __m128i);
+                    let v = _mm_shuffle_epi8(input, m);
+                    let ascii = _mm_and_si128(v, _mm_set1_epi32(0x7F));
+                    let middle = _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x3F00)), 2);
+                    let middlehigh =
+                        _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x3F_0000)), 4);
+                    let high = _mm_srli_epi32(_mm_and_si128(v, _mm_set1_epi32(0x0700_0000)), 6);
+                    let composed =
+                        _mm_or_si128(_mm_or_si128(ascii, middle), _mm_or_si128(middlehigh, high));
+                    let vm = _mm_sub_epi32(composed, _mm_set1_epi32(0x10000));
+                    let lowten = _mm_or_si128(
+                        _mm_and_si128(vm, _mm_set1_epi32(0x3FF)),
+                        _mm_set1_epi32(0xDC00),
+                    );
+                    let highten = _mm_or_si128(
+                        _mm_and_si128(_mm_srli_epi32(vm, 10), _mm_set1_epi32(0x3FF)),
+                        _mm_set1_epi32(0xD800),
+                    );
+                    // Each 32-bit lane is [high, low] in little-endian u16
+                    // order: storing the register writes the pairs in
+                    // stream order (lane 3 is slack the next write covers).
+                    let surrogates = _mm_or_si128(highten, _mm_slli_epi32(lowten, 16));
+                    _mm_storeu_si128(dst.as_mut_ptr().add(q) as *mut __m128i, surrogates);
+                }
+                q += 6;
+                off += 12;
+                if COUNT {
+                    counters.case3 += 1;
+                }
+                continue;
+            }
+            let entry = tables.main[key];
+            let mask = U8x16(tables.shuf[entry.idx as usize]);
+            let perm = U8x16::load(w).shuffle(mask);
+            q += if entry.idx < CASE2_START {
+                if COUNT { counters.case1 += 1; }
+                compose_case1(perm, &mut dst[q..])
+            } else if entry.idx < CASE3_START {
+                if COUNT { counters.case2 += 1; }
+                compose_case2(perm, &mut dst[q..])
+            } else {
+                if COUNT { counters.case3 += 1; }
+                compose_case3(perm, &mut dst[q..])
+            };
+            off += entry.consumed as usize;
+        }
+        p += off;
+    }
+
+    // Tail: validate the remaining bytes, then convert scalar.
+    if validate {
+        validator.push_tail(&src[v_pos..]);
+        if !validator.finish() {
+            return None;
+        }
+        // Bytes [p..] are now known valid; strict scalar still guards
+        // capacity via encode.
+        if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
+            return None;
+        }
+        q += scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
+    } else {
+        if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
+            return None;
+        }
+        q += scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
+    }
+    Some(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::utf16_capacity_for;
+
+    fn roundtrip(text: &str) {
+        for engine in [OurUtf8ToUtf16::validating(), OurUtf8ToUtf16::non_validating()] {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = engine.convert(text.as_bytes(), &mut dst).expect("valid input");
+            let expected: Vec<u16> = text.encode_utf16().collect();
+            assert_eq!(&dst[..n], &expected[..], "engine validate={}", engine.validate);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip("");
+        roundtrip("a");
+        roundtrip("é");
+        roundtrip("漢");
+        roundtrip("🙂");
+    }
+
+    #[test]
+    fn ascii_block_path() {
+        roundtrip(&"The quick brown fox jumps over the lazy dog. ".repeat(10));
+    }
+
+    #[test]
+    fn two_byte_fast_path() {
+        // long runs of 2-byte chars trigger the 0xAAAA path
+        roundtrip(&"пример текста на русском языке".repeat(20));
+        roundtrip(&"ذذذذذذذذذذذذذذذذ".repeat(20));
+    }
+
+    #[test]
+    fn three_byte_fast_path() {
+        roundtrip(&"漢字変換試験用文字列".repeat(30));
+    }
+
+    #[test]
+    fn supplemental_plane() {
+        roundtrip(&"🙂🚀🌍💡🔥🎉".repeat(30));
+        // mixed with ascii to exercise case 3 boundaries
+        roundtrip(&"a🙂b🚀c🌍d".repeat(25));
+    }
+
+    #[test]
+    fn mixed_content_all_cases() {
+        let mixed = "ASCII text, воскресенье, 漢字テスト, עברית, हिन्दी, 🙂🚀, end. ";
+        roundtrip(&mixed.repeat(15));
+    }
+
+    #[test]
+    fn block_boundary_straddling() {
+        // Put multi-byte chars across every 64-byte boundary alignment.
+        for pad in 0..70 {
+            let text = format!("{}é漢🙂{}", "x".repeat(pad), "y".repeat(80));
+            roundtrip(&text);
+        }
+    }
+
+    #[test]
+    fn validating_rejects_invalid() {
+        let engine = OurUtf8ToUtf16::validating();
+        for bad in [
+            vec![0xFFu8; 100],
+            {
+                let mut v = b"valid ascii prefix that is quite long to reach the simd path!!!".to_vec();
+                v.extend_from_slice(&[0xC0, 0x80]); // overlong
+                v.extend_from_slice(&[b'x'; 80]);
+                v
+            },
+            {
+                let mut v = "é".repeat(60).into_bytes();
+                v.push(0xE0); // truncated at end
+                v
+            },
+            {
+                let mut v = b"x".repeat(100);
+                v[70] = 0xED;
+                v[71] = 0xA0;
+                v[72] = 0x80; // surrogate
+                v
+            },
+        ] {
+            let mut dst = vec![0u16; utf16_capacity_for(bad.len())];
+            assert_eq!(engine.convert(&bad, &mut dst), None, "{:02x?}…", &bad[..8]);
+        }
+    }
+
+    #[test]
+    fn non_validating_is_memory_safe_on_garbage() {
+        // Any byte soup must not panic or overflow; result is unspecified.
+        let engine = OurUtf8ToUtf16::non_validating();
+        let mut state = 0x12345678u64;
+        for len in [0usize, 1, 15, 64, 100, 300, 1000] {
+            let mut soup = vec![0u8; len];
+            for b in soup.iter_mut() {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                *b = (state >> 33) as u8;
+            }
+            let mut dst = vec![0u16; utf16_capacity_for(len)];
+            let _ = engine.convert(&soup, &mut dst); // must not panic
+        }
+    }
+
+    #[test]
+    fn counters_record_fast_paths() {
+        let mut c = Counters::enabled();
+        let text = "x".repeat(256);
+        let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+        convert_counted(text.as_bytes(), &mut dst, true, &mut c).unwrap();
+        assert!(c.ascii_blocks > 0);
+        let text2 = "я".repeat(128);
+        let mut c2 = Counters::enabled();
+        let mut dst2 = vec![0u16; utf16_capacity_for(text2.len())];
+        convert_counted(text2.as_bytes(), &mut dst2, true, &mut c2).unwrap();
+        assert!(c2.fast_twobyte8 > 0);
+    }
+}

@@ -1,0 +1,379 @@
+//! Vectorized input validation.
+//!
+//! * [`Utf8Validator`] — the Keiser–Lemire UTF-8 validator working in
+//!   16-byte registers over 64-byte blocks, exactly as the paper's
+//!   validating UTF-8 → UTF-16 transcoder applies it (§4: "To validate
+//!   the input bytes, we apply the Keiser-Lemire approach which already
+//!   works in chunks of 64 bytes"). ASCII blocks short-circuit.
+//! * [`validate_utf16le`] — UTF-16 validation: surrogate words must form
+//!   properly ordered pairs (§3). Vectorized scan for the common
+//!   surrogate-free case, scalar pairing check otherwise.
+
+use crate::simd::U8x16;
+use crate::tables::keiser_lemire::{BYTE_1_HIGH, BYTE_1_LOW, BYTE_2_HIGH};
+
+/// Per-lane maxima for the incomplete-at-end check: a register is
+/// complete unless its last three bytes start a longer sequence.
+const INCOMPLETE_MAX: [u8; 16] = {
+    let mut m = [0xFFu8; 16];
+    m[13] = 0xF0 - 1;
+    m[14] = 0xE0 - 1;
+    m[15] = 0xC0 - 1;
+    m
+};
+
+/// Streaming Keiser–Lemire UTF-8 validator.
+///
+/// Feed 16-byte registers (or whole 64-byte blocks) in input order, then
+/// call [`Utf8Validator::finish`]. The validator carries lookahead state
+/// between registers (`prev` bytes and the incomplete-sequence mask), so
+/// it can be interleaved with block-wise transcoding.
+#[derive(Clone)]
+pub struct Utf8Validator {
+    error: U8x16,
+    prev_block: U8x16,
+    prev_incomplete: U8x16,
+}
+
+impl Default for Utf8Validator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Utf8Validator {
+    pub fn new() -> Self {
+        Utf8Validator {
+            error: U8x16::ZERO,
+            prev_block: U8x16::ZERO,
+            prev_incomplete: U8x16::ZERO,
+        }
+    }
+
+    /// Classify one 16-byte register given the previous register.
+    #[inline]
+    fn check_special_cases(input: U8x16, prev1: U8x16) -> U8x16 {
+        let byte_1_high = prev1.shr::<4>().lookup16(&BYTE_1_HIGH);
+        let byte_1_low = prev1.and(U8x16::splat(0x0F)).lookup16(&BYTE_1_LOW);
+        let byte_2_high = input.shr::<4>().lookup16(&BYTE_2_HIGH);
+        byte_1_high.and(byte_1_low).and(byte_2_high)
+    }
+
+    /// Where a byte *must* be the 2nd or 3rd continuation of a 3/4-byte
+    /// sequence, its TWO_CONTS special-case bit is expected; anywhere
+    /// else that bit (0x80) is an error — computed as an XOR.
+    #[inline]
+    fn check_multibyte_lengths(input: U8x16, prev_block: U8x16, sc: U8x16) -> U8x16 {
+        let prev2 = input.prev::<2>(prev_block);
+        let prev3 = input.prev::<3>(prev_block);
+        // byte >= 0xE0 (3-byte lead) two positions back, or >= 0xF0
+        // (4-byte lead) three positions back, forces a continuation here.
+        let is_third_byte = prev2.saturating_sub(U8x16::splat(0xE0 - 0x80));
+        let is_fourth_byte = prev3.saturating_sub(U8x16::splat(0xF0 - 0x80));
+        let must32 = is_third_byte.or(is_fourth_byte);
+        let must32_80 = must32.and(U8x16::splat(0x80));
+        must32_80.xor(sc)
+    }
+
+    /// Sequences that start in the last three bytes of a register are
+    /// incomplete *within* that register; if the input ends there, that
+    /// is an error (rule 2 of §3).
+    #[inline]
+    fn is_incomplete(input: U8x16) -> U8x16 {
+        input.saturating_sub(U8x16(INCOMPLETE_MAX))
+    }
+
+    /// Process one 16-byte register.
+    #[inline]
+    pub fn push16(&mut self, input: U8x16) {
+        #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        {
+            // Fused register-resident implementation: one load per
+            // state field, every intermediate stays in xmm registers.
+            // The generic path below round-trips each op through the
+            // `[u8; 16]` representation, which the profiler shows as
+            // the dominant cost (EXPERIMENTS.md §Perf, iteration 3).
+            unsafe { self.push16_x86(input) };
+            return;
+        }
+        #[allow(unreachable_code)]
+        {
+            if input.is_ascii() {
+                // An ASCII register cannot complete a pending multi-byte
+                // sequence: surface any carried incompleteness.
+                self.error = self.error.or(self.prev_incomplete);
+            } else {
+                let prev1 = input.prev::<1>(self.prev_block);
+                let sc = Self::check_special_cases(input, prev1);
+                self.error = self
+                    .error
+                    .or(Self::check_multibyte_lengths(input, self.prev_block, sc));
+            }
+            self.prev_incomplete = Self::is_incomplete(input);
+            self.prev_block = input;
+        }
+    }
+
+    /// SSSE3 implementation of [`Utf8Validator::push16`]; semantically
+    /// identical to the portable path (tested against it exhaustively).
+    #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+    #[inline]
+    unsafe fn push16_x86(&mut self, input: U8x16) {
+        use core::arch::x86_64::*;
+        let inp = _mm_loadu_si128(input.0.as_ptr() as *const __m128i);
+        let low_nibble = _mm_set1_epi8(0x0F);
+        if _mm_movemask_epi8(inp) == 0 {
+            // ASCII register.
+            let err = _mm_loadu_si128(self.error.0.as_ptr() as *const __m128i);
+            let inc = _mm_loadu_si128(self.prev_incomplete.0.as_ptr() as *const __m128i);
+            let err = _mm_or_si128(err, inc);
+            _mm_storeu_si128(self.error.0.as_mut_ptr() as *mut __m128i, err);
+        } else {
+            let prv = _mm_loadu_si128(self.prev_block.0.as_ptr() as *const __m128i);
+            let prev1 = _mm_alignr_epi8(inp, prv, 15);
+            // Three nibble classifications (pshufb table lookups).
+            let t1h = _mm_loadu_si128(BYTE_1_HIGH.as_ptr() as *const __m128i);
+            let t1l = _mm_loadu_si128(BYTE_1_LOW.as_ptr() as *const __m128i);
+            let t2h = _mm_loadu_si128(BYTE_2_HIGH.as_ptr() as *const __m128i);
+            let hi1 = _mm_and_si128(_mm_srli_epi16(prev1, 4), low_nibble);
+            let lo1 = _mm_and_si128(prev1, low_nibble);
+            let hi2 = _mm_and_si128(_mm_srli_epi16(inp, 4), low_nibble);
+            let sc = _mm_and_si128(
+                _mm_and_si128(_mm_shuffle_epi8(t1h, hi1), _mm_shuffle_epi8(t1l, lo1)),
+                _mm_shuffle_epi8(t2h, hi2),
+            );
+            // must-be-2/3-continuation check.
+            let prev2 = _mm_alignr_epi8(inp, prv, 14);
+            let prev3 = _mm_alignr_epi8(inp, prv, 13);
+            let is_third = _mm_subs_epu8(prev2, _mm_set1_epi8((0xE0u8 - 0x80) as i8));
+            let is_fourth = _mm_subs_epu8(prev3, _mm_set1_epi8((0xF0u8 - 0x80) as i8));
+            let must32 = _mm_or_si128(is_third, is_fourth);
+            let must32_80 = _mm_and_si128(must32, _mm_set1_epi8(0x80u8 as i8));
+            let this_err = _mm_xor_si128(must32_80, sc);
+            let err = _mm_loadu_si128(self.error.0.as_ptr() as *const __m128i);
+            let err = _mm_or_si128(err, this_err);
+            _mm_storeu_si128(self.error.0.as_mut_ptr() as *mut __m128i, err);
+        }
+        // Incomplete-at-end mask.
+        let max_value = _mm_loadu_si128(INCOMPLETE_MAX.as_ptr() as *const __m128i);
+        let inc = _mm_subs_epu8(inp, max_value);
+        _mm_storeu_si128(self.prev_incomplete.0.as_mut_ptr() as *mut __m128i, inc);
+        self.prev_block = input;
+    }
+
+    /// Process one 64-byte block (the granularity of Algorithm 3).
+    ///
+    /// All-ASCII blocks short-circuit to a single carried-incompleteness
+    /// check — the reason the paper can claim "we only need to validate
+    /// the UTF-8 input when it is not ASCII" (§4) and still be correct.
+    #[inline]
+    pub fn push64(&mut self, block: &[u8; 64]) {
+        if crate::simd::is_ascii_block(block) {
+            self.error = self.error.or(self.prev_incomplete);
+            self.prev_incomplete = U8x16::ZERO;
+            self.prev_block = U8x16::load(&block[48..]);
+            return;
+        }
+        for i in 0..4 {
+            self.push16(U8x16::load(&block[16 * i..]));
+        }
+    }
+
+    /// Advance over a 64-byte block the caller has already proven to be
+    /// all-ASCII (the converter's block fast path): only the carried
+    /// incompleteness check remains. This is what makes validation
+    /// effectively free on ASCII content (paper §4, Table 5 vs 6).
+    #[inline]
+    pub fn skip64_ascii(&mut self, block: &[u8; 64]) {
+        debug_assert!(crate::simd::is_ascii_block(block));
+        self.error = self.error.or(self.prev_incomplete);
+        self.prev_incomplete = U8x16::ZERO;
+        self.prev_block = U8x16::load(&block[48..]);
+    }
+
+    /// Process an arbitrary-length tail (zero-padded to register size;
+    /// zero padding is ASCII and never masks an error).
+    pub fn push_tail(&mut self, tail: &[u8]) {
+        let mut chunks = tail.chunks_exact(16);
+        for c in chunks.by_ref() {
+            self.push16(U8x16::load(c));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 16];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.push16(U8x16(buf));
+        }
+    }
+
+    /// True iff everything seen so far is valid *and* no sequence is left
+    /// dangling at the end of the input.
+    #[inline]
+    pub fn finish(&self) -> bool {
+        !self.error.or(self.prev_incomplete).any()
+    }
+
+    /// True iff an error has already been detected (ignoring a possibly
+    /// still-open trailing sequence). Useful for early exit.
+    #[inline]
+    pub fn has_error(&self) -> bool {
+        self.error.any()
+    }
+}
+
+/// Validate a whole byte slice as UTF-8 (convenience wrapper).
+pub fn validate_utf8(input: &[u8]) -> bool {
+    let mut v = Utf8Validator::new();
+    v.push_tail(input);
+    v.finish()
+}
+
+/// Validate a UTF-16 (native word order) slice: every high surrogate is
+/// followed by a low surrogate and vice versa.
+pub fn validate_utf16le(input: &[u16]) -> bool {
+    let mut i = 0;
+    // Vectorized scan: blocks of 8 words with no surrogate at all are
+    // accepted wholesale — "validating UTF-16 may merely involve checking
+    // for the absence of 16-bit words in the range 0xD800...DFFF" (§3).
+    while i + 8 <= input.len() {
+        let v = crate::simd::U16x8::load(&input[i..]);
+        if !v.has_surrogate() {
+            i += 8;
+            continue;
+        }
+        // Scalar pairing check within this neighborhood.
+        match crate::scalar::decode_utf16_char(&input[i..]) {
+            Ok((_, n)) => i += n,
+            Err(_) => return false,
+        }
+    }
+    while i < input.len() {
+        match crate::scalar::decode_utf16_char(&input[i..]) {
+            Ok((_, n)) => i += n,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(bytes: &[u8]) {
+        assert_eq!(
+            validate_utf8(bytes),
+            std::str::from_utf8(bytes).is_ok(),
+            "bytes {bytes:02x?}"
+        );
+    }
+
+    #[test]
+    fn agrees_with_std_on_valid_text() {
+        check(b"plain ascii");
+        check("héllo wörld".as_bytes());
+        check("漢字テスト".as_bytes());
+        check("🙂🚀🌍".as_bytes());
+        check("".as_bytes());
+        check("a".repeat(200).as_bytes());
+        check("é".repeat(100).as_bytes());
+        check("漢".repeat(70).as_bytes());
+        check("🙂".repeat(50).as_bytes());
+    }
+
+    #[test]
+    fn rejects_each_error_class() {
+        for bad in [
+            &[0x80u8][..],                     // stray continuation
+            &[0xC2],                           // truncated 2-byte
+            &[0xC0, 0x80],                     // overlong 2-byte
+            &[0xC1, 0xBF],                     // overlong 2-byte
+            &[0xE0, 0x80, 0x80],               // overlong 3-byte
+            &[0xED, 0xA0, 0x80],               // surrogate
+            &[0xF0, 0x80, 0x80, 0x80],         // overlong 4-byte
+            &[0xF4, 0x90, 0x80, 0x80],         // > U+10FFFF
+            &[0xF5, 0x80, 0x80, 0x80],         // invalid lead
+            &[0xFF],                           // invalid byte
+            &[0x41, 0x80],                     // ascii + continuation
+            &[0xC2, 0x41],                     // lead + ascii
+            &[0xE1, 0x80, 0xC0, 0x80],         // lead inside sequence
+        ] {
+            check(bad);
+            assert!(!validate_utf8(bad), "{bad:02x?} accepted");
+        }
+    }
+
+    #[test]
+    fn error_at_every_alignment() {
+        // Slide an error byte across several block/register boundaries.
+        for pos in 0..130 {
+            let mut buf = vec![b'a'; 160];
+            buf[pos] = 0x80;
+            check(&buf);
+            assert!(!validate_utf8(&buf));
+        }
+        // Multi-byte char straddling boundaries is fine.
+        for pos in 0..130 {
+            let mut buf = vec![b'a'; 160];
+            let snowman = "☃".as_bytes(); // 3 bytes
+            buf[pos..pos + 3].copy_from_slice(snowman);
+            check(&buf);
+            assert!(validate_utf8(&buf));
+        }
+    }
+
+    #[test]
+    fn truncated_sequence_at_end_detected() {
+        let mut buf = "és".repeat(40).into_bytes();
+        buf.push(0xE4); // dangling 3-byte lead
+        check(&buf);
+        assert!(!validate_utf8(&buf));
+        let mut buf2 = vec![b'x'; 63];
+        buf2.push(0xC3); // dangling at exactly a block edge
+        check(&buf2);
+        // followed by ascii-only register in next call order
+        let mut v = Utf8Validator::new();
+        v.push_tail(&buf2);
+        assert!(!v.finish());
+    }
+
+    #[test]
+    fn exhaustive_two_byte_space() {
+        // All 65536 2-byte combinations, embedded in ASCII context.
+        for hi in 0..=255u8 {
+            for lo in 0..=255u8 {
+                let buf = [b'a', hi, lo, b'b'];
+                assert_eq!(
+                    validate_utf8(&buf),
+                    std::str::from_utf8(&buf).is_ok(),
+                    "{hi:02x} {lo:02x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn utf16_validation() {
+        let ok: Vec<u16> = "hello 漢字 🙂".encode_utf16().collect();
+        assert!(validate_utf16le(&ok));
+        assert!(validate_utf16le(&[]));
+        assert!(validate_utf16le(&[0xD7FF, 0xE000, 0xFFFF]));
+        // lone high surrogate
+        assert!(!validate_utf16le(&[0xD800]));
+        assert!(!validate_utf16le(&[0x41, 0xD800, 0x42]));
+        // lone low surrogate
+        assert!(!validate_utf16le(&[0xDC00, 0x41]));
+        // reversed pair
+        assert!(!validate_utf16le(&[0xDC00, 0xD800]));
+        // valid pair
+        assert!(validate_utf16le(&[0xD83D, 0xDE42]));
+        // pair straddling an 8-word boundary
+        let mut v = vec![0x41u16; 7];
+        v.push(0xD83D);
+        v.push(0xDE42);
+        assert!(validate_utf16le(&v));
+        let mut w = vec![0x41u16; 7];
+        w.push(0xD83D);
+        assert!(!validate_utf16le(&w));
+    }
+}

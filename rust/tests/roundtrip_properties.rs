@@ -1,0 +1,198 @@
+//! Property-based integration tests (hand-rolled generator — the
+//! offline crate set has no proptest; shrinking is replaced by printing
+//! the failing seed, which reproduces deterministically).
+//!
+//! Invariants:
+//! 1. ∀ valid strings: every UTF-8→UTF-16 engine == `str::encode_utf16`.
+//! 2. ∀ valid strings: every UTF-16→UTF-8 engine == the original bytes.
+//! 3. ∀ byte soup: every *validating* engine accepts iff `std` accepts.
+//! 4. ∀ byte soup: non-validating engines never panic.
+//! 5. Round trip: utf8 → utf16 → utf8 is the identity.
+
+use simdutf_rs::corpus::SplitMix64;
+use simdutf_rs::prelude::*;
+use simdutf_rs::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+/// Random scalar value, biased across all four UTF-8 length classes.
+fn random_char(rng: &mut SplitMix64) -> char {
+    loop {
+        let cp = match rng.below(4) {
+            0 => rng.below(0x80) as u32,
+            1 => 0x80 + rng.below(0x800 - 0x80) as u32,
+            2 => 0x800 + rng.below(0x10000 - 0x800) as u32,
+            _ => 0x10000 + rng.below(0x110000 - 0x10000) as u32,
+        };
+        if let Some(c) = char::from_u32(cp) {
+            return c;
+        }
+    }
+}
+
+fn random_string(rng: &mut SplitMix64, max_chars: u64) -> String {
+    let n = rng.below(max_chars + 1);
+    (0..n).map(|_| random_char(rng)).collect()
+}
+
+fn utf8_engines() -> Vec<Box<dyn Utf8ToUtf16>> {
+    vec![
+        Box::new(OurUtf8ToUtf16::validating()),
+        Box::new(OurUtf8ToUtf16::non_validating()),
+        Box::new(IcuLikeTranscoder),
+        Box::new(LlvmTranscoder),
+        Box::new(FiniteTranscoder),
+        Box::new(SteagallTranscoder),
+        Box::new(Utf8LutTranscoder::validating()),
+        Box::new(Utf8LutTranscoder::full()),
+    ]
+}
+
+fn utf16_engines() -> Vec<Box<dyn Utf16ToUtf8>> {
+    vec![
+        Box::new(OurUtf16ToUtf8::validating()),
+        Box::new(IcuLikeTranscoder),
+        Box::new(LlvmTranscoder),
+        Box::new(Utf8LutTranscoder::validating()),
+    ]
+}
+
+#[test]
+fn prop_every_engine_matches_std_on_random_strings() {
+    let engines = utf8_engines();
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(seed);
+        let text = random_string(&mut rng, 300);
+        let expected: Vec<u16> = text.encode_utf16().collect();
+        for engine in &engines {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = engine
+                .convert(text.as_bytes(), &mut dst)
+                .unwrap_or_else(|| panic!("{} rejected valid input, seed {seed}", engine.name()));
+            assert_eq!(&dst[..n], &expected[..], "{} seed {seed}", engine.name());
+        }
+    }
+}
+
+#[test]
+fn prop_every_utf16_engine_matches_std_on_random_strings() {
+    let engines = utf16_engines();
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xABCD);
+        let text = random_string(&mut rng, 300);
+        let units: Vec<u16> = text.encode_utf16().collect();
+        for engine in &engines {
+            let mut dst = vec![0u8; utf8_capacity_for(units.len())];
+            let n = engine
+                .convert(&units, &mut dst)
+                .unwrap_or_else(|| panic!("{} rejected valid input, seed {seed}", engine.name()));
+            assert_eq!(&dst[..n], text.as_bytes(), "{} seed {seed}", engine.name());
+        }
+    }
+}
+
+#[test]
+fn prop_validating_engines_agree_with_std_on_byte_soup() {
+    let engines: Vec<Box<dyn Utf8ToUtf16>> = vec![
+        Box::new(OurUtf8ToUtf16::validating()),
+        Box::new(IcuLikeTranscoder),
+        Box::new(LlvmTranscoder),
+        Box::new(FiniteTranscoder),
+        Box::new(SteagallTranscoder),
+        Box::new(Utf8LutTranscoder::validating()),
+    ];
+    for seed in 0..600u64 {
+        let mut rng = SplitMix64::new(seed.wrapping_mul(0x9E3779B9));
+        let len = rng.below(240) as usize;
+        let mut soup = vec![0u8; len];
+        for b in soup.iter_mut() {
+            // Mix fully random bytes with mostly-valid content so both
+            // accept and reject paths are exercised.
+            *b = if rng.below(4) == 0 {
+                rng.below(256) as u8
+            } else {
+                (b'a' + rng.below(26) as u8) as u8
+            };
+        }
+        let expected = std::str::from_utf8(&soup).is_ok();
+        let v = validate_utf8(&soup);
+        assert_eq!(v, expected, "validator seed {seed} soup {soup:02x?}");
+        for engine in &engines {
+            let mut dst = vec![0u16; utf16_capacity_for(soup.len())];
+            let accepted = engine.convert(&soup, &mut dst).is_some();
+            assert_eq!(accepted, expected, "{} seed {seed} soup {soup:02x?}", engine.name());
+        }
+    }
+}
+
+#[test]
+fn prop_non_validating_engines_are_total_on_byte_soup() {
+    let engines: Vec<Box<dyn Utf8ToUtf16>> = vec![
+        Box::new(OurUtf8ToUtf16::non_validating()),
+        Box::new(Utf8LutTranscoder::full()),
+        Box::new(InoueTranscoder),
+    ];
+    for seed in 0..300u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xF00D);
+        let len = rng.below(300) as usize;
+        let soup: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        for engine in &engines {
+            let mut dst = vec![0u16; utf16_capacity_for(soup.len())];
+            let _ = engine.convert(&soup, &mut dst); // must not panic
+        }
+    }
+}
+
+#[test]
+fn prop_round_trip_is_identity() {
+    let to16 = OurUtf8ToUtf16::validating();
+    let to8 = OurUtf16ToUtf8::validating();
+    for seed in 0..300u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xBEEF);
+        let text = random_string(&mut rng, 500);
+        let utf16 = to16.convert_to_vec(text.as_bytes()).expect("valid");
+        let utf8 = to8.convert_to_vec(&utf16).expect("valid");
+        assert_eq!(utf8, text.as_bytes(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_utf16_validation_agrees_with_std() {
+    for seed in 0..500u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x1616);
+        let len = rng.below(120) as usize;
+        let units: Vec<u16> = (0..len)
+            .map(|_| {
+                if rng.below(3) == 0 {
+                    // stress the surrogate range
+                    0xD700u16.wrapping_add(rng.below(0x300) as u16)
+                } else {
+                    rng.below(0x10000) as u16
+                }
+            })
+            .collect();
+        let expected = String::from_utf16(&units).is_ok();
+        assert_eq!(validate_utf16le(&units), expected, "seed {seed} units {units:04x?}");
+        // The validating utf16→utf8 engine must agree with the validator.
+        let engine = OurUtf16ToUtf8::validating();
+        let mut dst = vec![0u8; utf8_capacity_for(units.len())];
+        assert_eq!(engine.convert(&units, &mut dst).is_some(), expected, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_lengths_functions_are_exact_on_valid_input() {
+    for seed in 0..200u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x1e47);
+        let text = random_string(&mut rng, 300);
+        assert_eq!(
+            simdutf_rs::transcode::utf16_len_from_utf8(text.as_bytes()),
+            text.encode_utf16().count(),
+            "seed {seed}"
+        );
+        let units: Vec<u16> = text.encode_utf16().collect();
+        assert_eq!(
+            simdutf_rs::transcode::utf8_len_from_utf16(&units),
+            text.len(),
+            "seed {seed}"
+        );
+    }
+}

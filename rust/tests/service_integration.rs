@@ -1,0 +1,111 @@
+//! Cross-module integration: coordinator × engines × runtime × corpus.
+
+use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
+use simdutf_rs::prelude::*;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join(format!("utf8_to_utf16_b{}.hlo.txt", simdutf_rs::runtime::AOT_BATCH))
+        .exists()
+        .then_some(dir)
+}
+
+#[test]
+fn service_handles_every_corpus_in_both_directions() {
+    let service = TranscodeService::start(ServiceConfig {
+        workers: 4,
+        queue_depth: 128,
+        engine: EngineChoice::Simd { validate: true },
+    })
+    .unwrap();
+    let mut pending = Vec::new();
+    let corpora = simdutf_rs::corpus::generate_collection(Collection::Lipsum);
+    for (i, corpus) in corpora.iter().enumerate() {
+        pending.push((
+            corpus.utf16.clone(),
+            service.submit(Request::utf8(i as u64, corpus.utf8.clone())),
+            true,
+        ));
+        pending.push((
+            corpus.utf16.clone(),
+            service.submit(Request::utf16(1000 + i as u64, corpus.utf16.clone())),
+            false,
+        ));
+    }
+    for (expected_utf16, rx, is8to16) in pending {
+        let resp = rx.recv().unwrap();
+        assert!(resp.ok());
+        if is8to16 {
+            assert_eq!(resp.utf16.unwrap(), expected_utf16);
+        }
+    }
+    let snap = service.stats();
+    assert_eq!(snap.completed as usize, 2 * corpora.len());
+    assert!(snap.max_latency >= snap.mean_latency);
+    service.shutdown();
+}
+
+#[test]
+fn xla_service_agrees_with_simd_service_when_artifacts_present() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let xla = TranscodeService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 16,
+        engine: EngineChoice::Xla { artifacts_dir: dir },
+    })
+    .unwrap();
+    let simd = TranscodeService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 16,
+        engine: EngineChoice::Simd { validate: true },
+    })
+    .unwrap();
+    // Keep inputs modest: the interpret-mode kernels are CPU-emulated.
+    let corpus = Corpus::generate(Language::Korean, Collection::Lipsum);
+    let doc8 = corpus.utf8_prefix(4096).to_vec();
+    let doc16 = corpus.utf16_prefix(2048).to_vec();
+
+    let a = xla.transcode(Request::utf8(1, doc8.clone()));
+    let b = simd.transcode(Request::utf8(1, doc8));
+    assert_eq!(a.utf16, b.utf16, "XLA and SIMD engines must agree (utf8→utf16)");
+
+    let a = xla.transcode(Request::utf16(2, doc16.clone()));
+    let b = simd.transcode(Request::utf16(2, doc16));
+    assert_eq!(a.utf8, b.utf8, "XLA and SIMD engines must agree (utf16→utf8)");
+
+    // Invalid input: both reject.
+    let bad = vec![0xC0u8, 0x80, b'x', 0xFF];
+    assert!(!xla.transcode(Request::utf8(3, bad.clone())).ok());
+    assert!(!simd.transcode(Request::utf8(3, bad)).ok());
+
+    xla.shutdown();
+    simd.shutdown();
+}
+
+#[test]
+fn harness_sections_all_render() {
+    std::env::set_var("SIMDUTF_BENCH_BUDGET_MS", "1");
+    for section in ["table4", "table5", "table6", "table9"] {
+        let out =
+            simdutf_rs::harness::run_section(section, &PathBuf::from("artifacts")).unwrap();
+        assert!(out.contains("Table"), "{section} missing title:\n{out}");
+        assert!(out.lines().count() > 5, "{section} too short");
+    }
+    std::env::remove_var("SIMDUTF_BENCH_BUDGET_MS");
+}
+
+#[test]
+fn cli_binary_sections_exist() {
+    assert!(simdutf_rs::harness::SECTIONS.contains(&"fig7"));
+    assert!(simdutf_rs::harness::SECTIONS.contains(&"xla"));
+    for s in simdutf_rs::harness::SECTIONS {
+        // every advertised section resolves (xla may report "skipped")
+        if *s != "xla" && *s != "fig7" && !s.starts_with("table") && !s.starts_with("fig") {
+            panic!("unexpected section {s}");
+        }
+    }
+}
