@@ -5,6 +5,7 @@
 //! ```
 
 use simdutf_rs::prelude::*;
+use simdutf_rs::transcode::{utf16_capacity_for, utf8_capacity_for};
 
 fn main() {
     // --- transcode UTF-8 → UTF-16 (validating) ---
@@ -25,24 +26,63 @@ fn main() {
     assert!(validate_utf16le(&utf16));
     println!("validators: ok");
 
-    // --- invalid input is an error, not garbage ---
+    // --- invalid input is a structured error: kind + position ---
     let mut corrupted = text.as_bytes().to_vec();
     corrupted[20] = 0xFF;
-    assert_eq!(engine.convert_to_vec(&corrupted), None);
-    println!("corrupted input rejected: ok");
+    let err = engine.convert_to_vec(&corrupted).expect_err("corrupted");
+    assert_eq!(err.kind, ErrorKind::HeaderBits);
+    assert_eq!(err.position, std::str::from_utf8(&corrupted).unwrap_err().valid_up_to());
+    println!("corrupted input rejected with `{err}`: ok");
 
-    // --- the baselines share the same traits ---
-    let baselines: Vec<Box<dyn Utf8ToUtf16>> = vec![
-        Box::new(IcuLikeTranscoder),
-        Box::new(LlvmTranscoder),
-        Box::new(FiniteTranscoder),
-        Box::new(SteagallTranscoder),
-        Box::new(Utf8LutTranscoder::validating()),
-    ];
-    for b in &baselines {
-        assert_eq!(b.convert_to_vec(text.as_bytes()).unwrap(), utf16, "{}", b.name());
+    // --- streaming: arbitrary chunk boundaries, same results ---
+    let mut stream = StreamingUtf8ToUtf16::new();
+    let mut streamed = Vec::new();
+    // Per-push buffer: chunk length (7) plus up to 3 carried bytes.
+    let mut buf = vec![0u16; utf16_capacity_for(7 + 3)];
+    for chunk in text.as_bytes().chunks(7) {
+        let fed = stream.push(chunk, &mut buf).expect("valid");
+        streamed.extend_from_slice(&buf[..fed.written]);
     }
-    println!("all {} baselines agree with ours", baselines.len());
+    stream.finish().expect("no dangling sequence");
+    assert_eq!(streamed, utf16);
+    println!("streaming in 7-byte chunks matches one-shot: ok");
+
+    // --- UTF-16 streaming carries a pending high surrogate ---
+    let mut stream16 = StreamingUtf16ToUtf8::new();
+    let mut streamed8 = Vec::new();
+    let mut buf8 = vec![0u8; utf8_capacity_for(3 + 1)];
+    for chunk in utf16.chunks(3) {
+        let fed = stream16.push(chunk, &mut buf8).expect("valid");
+        streamed8.extend_from_slice(&buf8[..fed.written]);
+    }
+    stream16.finish().expect("no unpaired surrogate");
+    assert_eq!(streamed8, text.as_bytes());
+    println!("UTF-16 streaming in 3-word chunks matches one-shot: ok");
+
+    // --- every engine, via the unified registry ---
+    let registry = Registry::global();
+    for entry in registry.utf8_entries() {
+        if !entry.engine.supports_supplemental() {
+            continue; // Inoue et al.: BMP only
+        }
+        assert_eq!(
+            entry.engine.convert_to_vec(text.as_bytes()).unwrap(),
+            utf16,
+            "{}",
+            entry.key
+        );
+    }
+    println!("all registry engines agree with ours");
+
+    // --- engines also agree on *where* inputs fail ---
+    for entry in registry.utf8_entries() {
+        if !entry.engine.validating() {
+            continue;
+        }
+        let e = entry.engine.convert_to_vec(&corrupted).expect_err("corrupted");
+        assert_eq!((e.kind, e.position), (err.kind, err.position), "{}", entry.key);
+    }
+    println!("all validating engines report the same error kind and position");
 
     // --- generated benchmark corpora (Table 4) ---
     let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);

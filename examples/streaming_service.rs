@@ -66,16 +66,25 @@ fn main() {
             // Spot-verify 1 in 50 responses against std.
             if i % 50 == 0 {
                 let corpus = &corpora[i % corpora.len()];
-                if let Some(words) = &resp.utf16 {
+                if let Some(words) = resp.utf16() {
                     let size = 1024 << (i % 7);
                     let expected: Vec<u16> = std::str::from_utf8(corpus.utf8_prefix(size))
                         .unwrap()
                         .encode_utf16()
                         .collect();
-                    assert_eq!(words, &expected, "response {i} mismatch");
+                    assert_eq!(words, &expected[..], "response {i} mismatch");
                 }
             }
         } else {
+            // Structured rejection: the error says what and where. The
+            // 0xFF injected mid-document reads as header_bits when it
+            // lands on a character boundary, or truncates the preceding
+            // multi-byte character otherwise.
+            let err = resp.error().expect("failed responses carry an error");
+            assert!(
+                matches!(err.kind, ErrorKind::HeaderBits | ErrorKind::TooShort),
+                "unexpected kind {err}"
+            );
             invalid += 1;
         }
     }

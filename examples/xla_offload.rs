@@ -60,7 +60,7 @@ fn main() {
     }
     for rx in pending {
         let resp = rx.recv().unwrap();
-        assert_eq!(resp.utf16.as_deref().unwrap(), &native[..]);
+        assert_eq!(resp.utf16().unwrap(), &native[..]);
     }
     println!("coordinator on XLA engine: 16/16 responses verified");
     println!("{}", service.stats());

@@ -150,3 +150,102 @@ def validate_utf8_blocks(blocks, lengths):
         out_shape=jax.ShapeDtypeStruct((batch,), jnp.bool_),
         interpret=True,
     )(blocks, lengths)
+
+
+# ---------------------------------------------------------------------------
+# Failure records mirroring the Rust `transcode::TranscodeError` API.
+#
+# The Rust side reports `(kind, position)` for the first invalid sequence
+# (kinds below; positions are `str::Utf8Error::valid_up_to`-compatible).
+# The Pallas kernel above only returns a per-row validity bit, so — like
+# the Rust SIMD engines — the position/kind recovery is a scalar re-scan
+# of the failing row. Emitting the same snake_case kind strings keeps
+# Python and Rust harness failure records directly comparable.
+
+#: Mirror of Rust ``transcode::ErrorKind::as_str`` values.
+ERROR_KINDS = (
+    "header_bits",  # byte with >= 5 header bits (0xF8..0xFF)
+    "too_short",    # truncated sequence / missing continuation
+    "too_long",     # continuation byte where a lead was expected
+    "overlong",     # overlong encoding (incl. 0xC0/0xC1 leads)
+    "surrogate",    # UTF-8-encoded surrogate code point
+    "too_large",    # code point above U+10FFFF (incl. 0xF5..0xF7 leads)
+    "output_buffer",
+    "other",
+)
+
+
+def _decode_one(data, p):
+    """Strict scalar decode of one character at ``data[p:]``.
+
+    Returns ``(length, None)`` on success or ``(None, kind)`` on error —
+    the same classification as Rust ``scalar::decode_utf8_char``.
+    """
+    b0 = data[p]
+    if b0 < 0x80:
+        return 1, None
+    if b0 < 0xC0:
+        return None, "too_long"
+    if b0 < 0xC2:
+        return None, "overlong"
+    if 0xF5 <= b0 < 0xF8:
+        return None, "too_large"
+    if b0 >= 0xF8:
+        return None, "header_bits"
+    n = 2 if b0 < 0xE0 else 3 if b0 < 0xF0 else 4
+    cp = b0 & (0x7F >> n)
+    for i in range(1, n):
+        if p + i >= len(data) or (data[p + i] & 0xC0) != 0x80:
+            return None, "too_short"
+        cp = (cp << 6) | (data[p + i] & 0x3F)
+    if n == 3:
+        if cp < 0x800:
+            return None, "overlong"
+        if 0xD800 <= cp <= 0xDFFF:
+            return None, "surrogate"
+    elif n == 4:
+        if cp < 0x10000:
+            return None, "overlong"
+        if cp > 0x10FFFF:
+            return None, "too_large"
+    return n, None
+
+
+def classify_utf8_error(data):
+    """First UTF-8 error in ``data`` as ``{"kind", "position"}``, or None.
+
+    ``position`` equals CPython's ``UnicodeDecodeError.start`` (and Rust's
+    ``TranscodeError.position``): the index of the first byte of the first
+    invalid sequence.
+    """
+    data = bytes(data)
+    p = 0
+    while p < len(data):
+        length, kind = _decode_one(data, p)
+        if kind is not None:
+            return {"kind": kind, "position": p}
+        p += length
+    return None
+
+
+def error_records(blocks, lengths):
+    """Structured failure records for a validated batch.
+
+    Runs ``validate_utf8_blocks`` and, for each rejected row, re-scans the
+    row's bytes to a ``{"row", "kind", "position"}`` record (position is
+    relative to the row start, as each row starts on a character boundary).
+    """
+    valid = np.asarray(validate_utf8_blocks(blocks, lengths))
+    blocks = np.asarray(blocks)
+    lengths = np.asarray(lengths)
+    records = []
+    for r in np.flatnonzero(~valid):
+        row = bytes(int(v) & 0xFF for v in blocks[r, : int(lengths[r])])
+        rec = classify_utf8_error(row)
+        if rec is None:
+            # The kernel treats a truncated sequence at the padded row end
+            # as invalid; mirror Rust's defensive too_short-at-end.
+            rec = {"kind": "too_short", "position": int(lengths[r])}
+        rec["row"] = int(r)
+        records.append(rec)
+    return records

@@ -1,0 +1,80 @@
+"""Failure-record classification: the Rust `TranscodeError` mirror.
+
+Standalone from test_kernel.py so it runs without `hypothesis`; only the
+`error_records` test needs the (jax) validation kernel.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.validate import (
+    ERROR_KINDS,
+    classify_utf8_error,
+    error_records,
+)
+from compile.kernels.utf8_to_utf16 import BLOCK_ROWS
+
+BAD_SEQUENCES = [
+    b"\x80",
+    b"\xc0\x80",
+    b"\xc1\xbf",
+    b"\xc2",
+    b"\xe0\x80\x80",
+    b"\xe0\x9f\xbf",
+    b"\xed\xa0\x80",
+    b"\xf0\x80\x80\x80",
+    b"\xf4\x90\x80\x80",
+    b"\xf5\x80\x80\x80",
+    b"\xff",
+    b"abc\x80def",
+    b"\xc2a",
+    b"\xe1\x80\xc0\x80",
+]
+
+
+@pytest.mark.parametrize("bad", BAD_SEQUENCES, ids=range(len(BAD_SEQUENCES)))
+def test_classifier_position_matches_cpython(bad):
+    """The mirrored classifier reports CPython's UnicodeDecodeError.start."""
+    for prefix in [b"", b"xy", "héllo ".encode("utf-8")]:
+        data = prefix + bad
+        rec = classify_utf8_error(data)
+        try:
+            data.decode("utf-8")
+        except UnicodeDecodeError as e:
+            assert rec is not None, data
+            assert rec["position"] == e.start, data
+            assert rec["kind"] in ERROR_KINDS, rec
+        else:
+            assert rec is None, data
+
+
+def test_classifier_kinds_match_rust_convention():
+    cases = {
+        b"\xff": "header_bits",
+        b"\x80": "too_long",
+        b"\xc2": "too_short",
+        b"\xc0\x80": "overlong",
+        b"\xe0\x9f\xbf": "overlong",
+        b"\xed\xa0\x80": "surrogate",
+        b"\xf4\x90\x80\x80": "too_large",
+        b"\xf5\x80\x80\x80": "too_large",
+    }
+    for data, kind in cases.items():
+        assert classify_utf8_error(data)["kind"] == kind, data
+
+
+def test_classifier_accepts_valid_text():
+    for text in ["", "ascii", "héllo wörld", "漢字テスト", "🙂🚀"]:
+        assert classify_utf8_error(text.encode("utf-8")) is None, text
+
+
+def test_error_records_for_rejected_rows():
+    data = b"good ascii then bad: \xed\xa0\x80 tail"
+    blocks, lengths = ref.blocks_from_utf8(data)
+    blocks, lengths = ref.pad_batch(blocks, lengths, BLOCK_ROWS)
+    records = error_records(blocks, lengths)
+    assert len(records) == 1
+    assert records[0]["kind"] == "surrogate"
+    assert records[0]["position"] == 21
+    assert records[0]["row"] == 0

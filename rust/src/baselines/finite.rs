@@ -7,7 +7,7 @@
 //! the code point. State 0 accepts, state 12 rejects. This is the exact
 //! table from the original publication.
 
-use crate::transcode::Utf8ToUtf16;
+use crate::transcode::{classify_utf8_error, TranscodeError, TranscodeResult, Utf8ToUtf16};
 
 /// Byte → character-class table (first half of Hoehrmann's `utf8d`).
 pub const CLASS: [u8; 256] = build_class_table();
@@ -91,25 +91,33 @@ impl Utf8ToUtf16 for FiniteTranscoder {
         true // the DFA rejects malformed input by construction
     }
 
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         let mut state = ACCEPT;
         let mut codep = 0u32;
         let mut q = 0usize;
-        for &b in src {
+        // The DFA rejects mid-character; `char_start` remembers where the
+        // offending character began so the reference scan can report the
+        // canonical kind/position.
+        let mut char_start = 0usize;
+        for (p, &b) in src.iter().enumerate() {
+            if state == ACCEPT {
+                char_start = p;
+            }
             state = decode_step(state, &mut codep, b);
             if state == ACCEPT {
                 if q + 2 > dst.len() {
-                    return None;
+                    return Err(TranscodeError::output_buffer(char_start));
                 }
                 q += crate::scalar::encode_utf16_char(codep, &mut dst[q..]);
             } else if state == REJECT {
-                return None;
+                return Err(classify_utf8_error(src, char_start));
             }
         }
         if state != ACCEPT {
-            return None; // truncated sequence at end of input
+            // Truncated sequence at end of input.
+            return Err(classify_utf8_error(src, char_start));
         }
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -142,7 +150,7 @@ mod tests {
         for hi in 0..=255u8 {
             for lo in 0..=255u8 {
                 let buf = [b'a', hi, lo, b'b'];
-                let accepted = engine.convert(&buf, &mut dst).is_some();
+                let accepted = engine.convert(&buf, &mut dst).is_ok();
                 assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{hi:02x}{lo:02x}");
             }
         }
@@ -152,9 +160,9 @@ mod tests {
     fn rejects_truncation_and_surrogates() {
         let engine = FiniteTranscoder;
         let mut dst = vec![0u16; 32];
-        assert!(engine.convert(&[0xE4], &mut dst).is_none());
-        assert!(engine.convert(&[0xED, 0xA0, 0x80], &mut dst).is_none());
-        assert!(engine.convert(&[0xF4, 0x90, 0x80, 0x80], &mut dst).is_none());
-        assert!(engine.convert(&[0xF4, 0x8F, 0xBF, 0xBF], &mut dst).is_some());
+        assert!(engine.convert(&[0xE4], &mut dst).is_err());
+        assert!(engine.convert(&[0xED, 0xA0, 0x80], &mut dst).is_err());
+        assert!(engine.convert(&[0xF4, 0x90, 0x80, 0x80], &mut dst).is_err());
+        assert!(engine.convert(&[0xF4, 0x8F, 0xBF, 0xBF], &mut dst).is_ok());
     }
 }

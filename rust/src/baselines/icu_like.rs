@@ -10,7 +10,10 @@
 //! give the ICU rows of Tables 5–10 their shape — without reimplementing
 //! the rest of ICU.
 
-use crate::transcode::{Utf16ToUtf8, Utf8ToUtf16};
+use crate::transcode::{
+    classify_utf16_error, classify_utf8_error, TranscodeError, TranscodeResult, Utf16ToUtf8,
+    Utf8ToUtf16,
+};
 
 /// Sentinel produced by `u8_next` on malformed input (ICU uses a
 /// negative `UChar32`).
@@ -97,32 +100,36 @@ impl Utf8ToUtf16 for IcuLikeTranscoder {
         true
     }
 
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         let mut i = 0usize;
         let mut q = 0usize;
         while i < src.len() {
+            // ICU funnels errors through a sentinel with no location;
+            // the canonical kind/position come from the reference scan
+            // at the character start.
+            let start = i;
             let c = u8_next(src, &mut i);
             if c < 0 {
-                return None;
+                return Err(classify_utf8_error(src, start));
             }
             // ICU's doAppend: capacity check on every code point.
             let c = c as u32;
             if c < 0x10000 {
                 if q >= dst.len() {
-                    return None;
+                    return Err(TranscodeError::output_buffer(start));
                 }
                 dst[q] = c as u16;
                 q += 1;
             } else {
                 if q + 2 > dst.len() {
-                    return None;
+                    return Err(TranscodeError::output_buffer(start));
                 }
                 dst[q] = 0xD7C0u16.wrapping_add((c >> 10) as u16); // U16_LEAD
                 dst[q + 1] = 0xDC00 | (c & 0x3FF) as u16; // U16_TRAIL
                 q += 2;
             }
         }
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -135,22 +142,23 @@ impl Utf16ToUtf8 for IcuLikeTranscoder {
         true
     }
 
-    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
         let mut i = 0usize;
         let mut q = 0usize;
         while i < src.len() {
             // U16_NEXT
+            let start = i;
             let w = src[i];
             i += 1;
             let c: u32 = if (0xD800..0xDC00).contains(&w) {
                 if i >= src.len() || !(0xDC00..0xE000).contains(&src[i]) {
-                    return None;
+                    return Err(classify_utf16_error(src, start));
                 }
                 let lo = src[i];
                 i += 1;
                 0x10000 + (((w as u32 - 0xD800) << 10) | (lo as u32 - 0xDC00))
             } else if (0xDC00..0xE000).contains(&w) {
-                return None;
+                return Err(classify_utf16_error(src, start));
             } else {
                 w as u32
             };
@@ -165,11 +173,11 @@ impl Utf16ToUtf8 for IcuLikeTranscoder {
                 4
             };
             if q + len > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(start));
             }
             q += crate::scalar::encode_utf8_char(c, &mut dst[q..]);
         }
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -206,7 +214,7 @@ mod tests {
         for hi in 0..=255u8 {
             for lo in 0..=255u8 {
                 let buf = [b'a', hi, lo, b'b'];
-                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_some();
+                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_ok();
                 assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{hi:02x}{lo:02x}");
             }
         }
@@ -220,7 +228,7 @@ mod tests {
         for lead in 0xE0..=0xEFu8 {
             for b1 in 0..=255u8 {
                 let buf = [lead, b1, 0x80];
-                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_some();
+                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_ok();
                 assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{lead:02x}{b1:02x}");
             }
         }

@@ -17,7 +17,7 @@
 //! * an ASCII fast path for eight-byte ASCII runs.
 
 use crate::simd::{shuffle32, U8x16};
-use crate::transcode::Utf8ToUtf16;
+use crate::transcode::{TranscodeError, TranscodeResult, Utf8ToUtf16};
 use std::sync::LazyLock;
 
 /// Byte-length of a character from its lead byte, as Algorithm 1's
@@ -87,7 +87,7 @@ impl Utf8ToUtf16 for InoueTranscoder {
         false
     }
 
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         let pats = &*PATTERNS;
         let mut p = 0usize;
         let mut q = 0usize;
@@ -95,7 +95,8 @@ impl Utf8ToUtf16 for InoueTranscoder {
         // Algorithm 1: while p + 32 < length(b)
         while p + 32 <= src.len() {
             if q + 8 > dst.len() {
-                return None;
+                // Non-validating: output exhaustion is the only error.
+                return Err(TranscodeError::output_buffer(p));
             }
             // ASCII fast path: next eight bytes.
             let mut acc = 0u8;
@@ -140,7 +141,7 @@ impl Utf8ToUtf16 for InoueTranscoder {
         // Conventional tail (non-validating, 1–3-byte only).
         while p < src.len() {
             if q >= dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(p));
             }
             let len = LEN_FROM_HIGH3[(src[p] >> 5) as usize] as usize;
             if p + len > src.len() {
@@ -158,7 +159,7 @@ impl Utf8ToUtf16 for InoueTranscoder {
             p += len;
             q += 1;
         }
-        Some(q)
+        Ok(q)
     }
 }
 

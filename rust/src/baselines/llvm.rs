@@ -8,7 +8,10 @@
 //! paper benchmarks precisely that code shape (one branchy pass,
 //! character at a time, no SIMD).
 
-use crate::transcode::{Utf16ToUtf8, Utf8ToUtf16};
+use crate::transcode::{
+    classify_utf16_error, classify_utf8_error, TranscodeError, TranscodeResult, Utf16ToUtf8,
+    Utf8ToUtf16,
+};
 
 /// `trailingBytesForUTF8`: extra bytes following each lead byte.
 const TRAILING_BYTES: [u8; 256] = build_trailing();
@@ -112,16 +115,19 @@ impl Utf8ToUtf16 for LlvmTranscoder {
         true
     }
 
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         let mut p = 0usize;
         let mut q = 0usize;
         while p < src.len() {
+            // `p` is the start of the current character: every failure
+            // below reports the canonical error found by the reference
+            // scan from here (the prefix is already converted, so valid).
             let extra = TRAILING_BYTES[src[p] as usize] as usize;
             if p + extra >= src.len() {
-                return None; // sourceExhausted
+                return Err(classify_utf8_error(src, p)); // sourceExhausted
             }
             if !is_legal_utf8(&src[p..], extra + 1) {
-                return None; // sourceIllegal
+                return Err(classify_utf8_error(src, p)); // sourceIllegal
             }
             // Fall-through accumulation, as in the original switch.
             let mut ch: u32 = 0;
@@ -129,30 +135,30 @@ impl Utf8ToUtf16 for LlvmTranscoder {
                 ch = (ch << 6).wrapping_add(src[p + i] as u32);
             }
             ch = ch.wrapping_sub(OFFSETS[extra]);
-            p += extra + 1;
 
             if ch <= 0xFFFF {
                 if (UNI_SUR_HIGH_START..=UNI_SUR_LOW_END).contains(&ch) {
-                    return None;
+                    return Err(classify_utf8_error(src, p));
                 }
                 if q >= dst.len() {
-                    return None; // targetExhausted
+                    return Err(TranscodeError::output_buffer(p)); // targetExhausted
                 }
                 dst[q] = ch as u16;
                 q += 1;
             } else if ch > UNI_MAX_LEGAL_UTF32 {
-                return None;
+                return Err(classify_utf8_error(src, p));
             } else {
                 if q + 2 > dst.len() {
-                    return None;
+                    return Err(TranscodeError::output_buffer(p));
                 }
                 let ch = ch - HALF_BASE;
                 dst[q] = ((ch >> 10) + UNI_SUR_HIGH_START) as u16;
                 dst[q + 1] = ((ch & 0x3FF) + UNI_SUR_LOW_START) as u16;
                 q += 2;
             }
+            p += extra + 1;
         }
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -165,25 +171,26 @@ impl Utf16ToUtf8 for LlvmTranscoder {
         true
     }
 
-    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
         let mut p = 0usize;
         let mut q = 0usize;
         while p < src.len() {
+            let start = p;
             let mut ch = src[p] as u32;
             p += 1;
             if (UNI_SUR_HIGH_START..UNI_SUR_LOW_START).contains(&ch) {
                 // High surrogate: must be followed by a low surrogate.
                 if p >= src.len() {
-                    return None;
+                    return Err(classify_utf16_error(src, start));
                 }
                 let ch2 = src[p] as u32;
                 if !(UNI_SUR_LOW_START..=UNI_SUR_LOW_END).contains(&ch2) {
-                    return None;
+                    return Err(classify_utf16_error(src, start));
                 }
                 ch = ((ch - UNI_SUR_HIGH_START) << 10) + (ch2 - UNI_SUR_LOW_START) + HALF_BASE;
                 p += 1;
             } else if (UNI_SUR_LOW_START..=UNI_SUR_LOW_END).contains(&ch) {
-                return None; // unpaired low surrogate
+                return Err(classify_utf16_error(src, start)); // unpaired low
             }
 
             let bytes_to_write = if ch < 0x80 {
@@ -196,7 +203,7 @@ impl Utf16ToUtf8 for LlvmTranscoder {
                 4
             };
             if q + bytes_to_write > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(start));
             }
             // Fall-through write, back to front, as in the original.
             const BYTE_MASK: u32 = 0xBF;
@@ -209,7 +216,7 @@ impl Utf16ToUtf8 for LlvmTranscoder {
             dst[q] = (tmp | FIRST_BYTE_MARK[bytes_to_write] as u32) as u8;
             q += bytes_to_write;
         }
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -246,7 +253,7 @@ mod tests {
         for hi in 0..=255u8 {
             for lo in 0..=255u8 {
                 let buf = [b'a', hi, lo, b'b'];
-                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_some();
+                let accepted = Utf8ToUtf16::convert(&engine, &buf, &mut dst).is_ok();
                 assert_eq!(accepted, std::str::from_utf8(&buf).is_ok(), "{hi:02x}{lo:02x}");
             }
         }
@@ -256,8 +263,8 @@ mod tests {
     fn rejects_unpaired_surrogates() {
         let engine = LlvmTranscoder;
         let mut dst = vec![0u8; 64];
-        assert!(Utf16ToUtf8::convert(&engine, &[0xD800], &mut dst).is_none());
-        assert!(Utf16ToUtf8::convert(&engine, &[0xD800, 0x41], &mut dst).is_none());
-        assert!(Utf16ToUtf8::convert(&engine, &[0xDC00], &mut dst).is_none());
+        assert!(Utf16ToUtf8::convert(&engine, &[0xD800], &mut dst).is_err());
+        assert!(Utf16ToUtf8::convert(&engine, &[0xD800, 0x41], &mut dst).is_err());
+        assert!(Utf16ToUtf8::convert(&engine, &[0xDC00], &mut dst).is_err());
     }
 }

@@ -9,7 +9,7 @@
 
 use crate::baselines::finite::{decode_step, ACCEPT, REJECT};
 use crate::simd::U8x16;
-use crate::transcode::Utf8ToUtf16;
+use crate::transcode::{classify_utf8_error, TranscodeError, TranscodeResult, Utf8ToUtf16};
 
 /// The `Steagall` engine of Tables 6 and 7.
 #[derive(Clone, Copy, Debug, Default)]
@@ -24,18 +24,21 @@ impl Utf8ToUtf16 for SteagallTranscoder {
         true
     }
 
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         let mut p = 0usize;
         let mut q = 0usize;
         let mut state = ACCEPT;
         let mut codep = 0u32;
+        // Start of the character the DFA is currently inside (for error
+        // reporting; see the finite baseline).
+        let mut char_start = 0usize;
 
         while p + 16 <= src.len() {
             if state == ACCEPT {
                 let v = U8x16::load(&src[p..]);
                 if v.is_ascii() {
                     if q + 16 > dst.len() {
-                        return None;
+                        return Err(TranscodeError::output_buffer(p));
                     }
                     for i in 0..16 {
                         dst[q + i] = v.0[i] as u16;
@@ -48,34 +51,40 @@ impl Utf8ToUtf16 for SteagallTranscoder {
             // DFA over the next 16 bytes.
             let end = p + 16;
             while p < end {
+                if state == ACCEPT {
+                    char_start = p;
+                }
                 state = decode_step(state, &mut codep, src[p]);
                 p += 1;
                 if state == ACCEPT {
                     if q + 2 > dst.len() {
-                        return None;
+                        return Err(TranscodeError::output_buffer(char_start));
                     }
                     q += crate::scalar::encode_utf16_char(codep, &mut dst[q..]);
                 } else if state == REJECT {
-                    return None;
+                    return Err(classify_utf8_error(src, char_start));
                 }
             }
         }
         while p < src.len() {
+            if state == ACCEPT {
+                char_start = p;
+            }
             state = decode_step(state, &mut codep, src[p]);
             p += 1;
             if state == ACCEPT {
                 if q + 2 > dst.len() {
-                    return None;
+                    return Err(TranscodeError::output_buffer(char_start));
                 }
                 q += crate::scalar::encode_utf16_char(codep, &mut dst[q..]);
             } else if state == REJECT {
-                return None;
+                return Err(classify_utf8_error(src, char_start));
             }
         }
         if state != ACCEPT {
-            return None;
+            return Err(classify_utf8_error(src, char_start));
         }
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -106,7 +115,8 @@ mod tests {
             let mut buf = vec![b'a'; 64];
             buf[pos] = 0xC0;
             let mut dst = vec![0u16; utf16_capacity_for(buf.len())];
-            assert!(engine.convert(&buf, &mut dst).is_none(), "pos {pos}");
+            let err = engine.convert(&buf, &mut dst).expect_err("invalid input");
+            assert_eq!(err.position, pos, "pos {pos}");
         }
     }
 

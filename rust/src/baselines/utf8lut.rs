@@ -21,7 +21,9 @@
 //!   at a constant ~2.5 Gc/s regardless of language.
 
 use crate::simd::{U16x8, U8x16};
-use crate::transcode::{Utf16ToUtf8, Utf8ToUtf16};
+use crate::transcode::{
+    classify_utf8_error, TranscodeError, TranscodeResult, Utf16ToUtf8, Utf8ToUtf16,
+};
 use crate::validate::Utf8Validator;
 use std::sync::LazyLock;
 
@@ -132,7 +134,7 @@ impl Utf8ToUtf16 for Utf8LutTranscoder {
         self.mode == LutMode::Validate
     }
 
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         let table = &*BIG_TABLE;
         let mut p = 0usize;
         let mut q = 0usize;
@@ -148,11 +150,14 @@ impl Utf8ToUtf16 for Utf8LutTranscoder {
                     v_pos += 16;
                 }
                 if validator.has_error() {
-                    return None;
+                    // Validation runs ahead of conversion, so `p` is a
+                    // character boundary with a valid prefix: the scalar
+                    // re-scan pinpoints the error (see transcode::error).
+                    return Err(classify_utf8_error(src, p));
                 }
             }
             if q + 8 > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(p));
             }
             // 16-bit end-of-character mask: byte i ends a char iff byte
             // i+1 is not a continuation.
@@ -170,9 +175,9 @@ impl Utf8ToUtf16 for Utf8LutTranscoder {
                         q += crate::scalar::encode_utf16_char(cp, &mut dst[q..]);
                         p += len;
                     }
-                    Err(_) => {
+                    Err(e) => {
                         if self.mode == LutMode::Validate {
-                            return None;
+                            return Err(TranscodeError::new(e.kind, p));
                         }
                         p += 1; // skip garbage byte
                     }
@@ -194,14 +199,18 @@ impl Utf8ToUtf16 for Utf8LutTranscoder {
         if self.mode == LutMode::Validate {
             validator.push_tail(&src[v_pos..]);
             if !validator.finish() {
-                return None;
+                // As in our SIMD engine: if the validation frontier
+                // stalled behind conversion near end-of-input, the
+                // re-scan must start from 0 to stay exact.
+                let from = if v_pos >= p { p } else { 0 };
+                return Err(classify_utf8_error(src, from));
             }
         }
         if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
-            return None;
+            return Err(TranscodeError::output_buffer(p));
         }
         q += crate::scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -214,7 +223,7 @@ impl Utf16ToUtf8 for Utf8LutTranscoder {
         true // surrogate handling always checks, as in Algorithm 4 case 4
     }
 
-    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
         // Flat routine: every register takes the general 1–3-byte
         // table-compress path (no ASCII / 2-byte specialization), with a
         // scalar fallback for surrogates. This reproduces utf8lut's flat
@@ -223,7 +232,7 @@ impl Utf16ToUtf8 for Utf8LutTranscoder {
         let mut q = 0usize;
         while p + 8 <= src.len() {
             if q + 32 > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(p));
             }
             let v = U16x8::load(&src[p..]);
             if !v.has_surrogate() {
@@ -245,23 +254,23 @@ impl Utf16ToUtf8 for Utf8LutTranscoder {
                         p += n;
                         q += crate::scalar::encode_utf8_char(cp, &mut dst[q..]);
                     }
-                    Err(_) => return None,
+                    Err(e) => return Err(TranscodeError::new(e.kind, p)),
                 }
             }
         }
         while p < src.len() {
             if q + 4 > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(p));
             }
             match crate::scalar::decode_utf16_char(&src[p..]) {
                 Ok((cp, n)) => {
                     p += n;
                     q += crate::scalar::encode_utf8_char(cp, &mut dst[q..]);
                 }
-                Err(_) => return None,
+                Err(e) => return Err(TranscodeError::new(e.kind, p)),
             }
         }
-        Some(q)
+        Ok(q)
     }
 }
 
@@ -305,7 +314,9 @@ mod tests {
         let mut bad = "é".repeat(30).into_bytes();
         bad[17] = 0xFF;
         let mut dst = vec![0u16; utf16_capacity_for(bad.len())];
-        assert!(Utf8ToUtf16::convert(&engine, &bad, &mut dst).is_none());
+        let err = Utf8ToUtf16::convert(&engine, &bad, &mut dst).expect_err("invalid");
+        let expected = std::str::from_utf8(&bad).unwrap_err().valid_up_to();
+        assert_eq!(err.position, expected);
     }
 
     #[test]

@@ -25,5 +25,6 @@ mod service;
 
 pub use metrics::{ServiceStats, StatsSnapshot};
 pub use service::{
-    Direction, EngineChoice, Request, Response, ServiceConfig, TranscodeService,
+    Direction, EngineChoice, Output, Payload, Request, Response, ServiceConfig, ServiceError,
+    TranscodeService,
 };

@@ -1,10 +1,10 @@
 //! The transcoding service: bounded queue, worker pool, engines.
 
 use super::metrics::ServiceStats;
+use crate::engine::Registry;
 use crate::runtime::XlaEngine;
 use crate::transcode::{
-    utf16_capacity_for, utf16_to_utf8::OurUtf16ToUtf8, utf8_capacity_for,
-    utf8_to_utf16::OurUtf8ToUtf16, Utf16ToUtf8, Utf8ToUtf16,
+    utf16_capacity_for, utf8_capacity_for, ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16,
 };
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -27,52 +27,125 @@ pub enum EngineChoice {
     Simd { validate: bool },
     /// The ICU-like scalar baseline (for A/B service comparisons).
     Scalar,
+    /// Any engine from the [`Registry`], by key (e.g. `"llvm"`,
+    /// `"utf8lut"`). Directions the named engine does not implement
+    /// fall back to `"ours"`.
+    Named(String),
     /// The AOT-compiled JAX/Pallas batch path via PJRT.
     Xla { artifacts_dir: PathBuf },
 }
 
-/// A transcoding request.
+/// A transcoding request: one payload, direction implied by encoding.
+///
+/// (Previously this was a struct with *both* a `utf8` and a `utf16`
+/// field, one of which was always empty; the enum makes the invalid
+/// state unrepresentable.)
+pub enum Payload {
+    /// UTF-8 bytes to convert to UTF-16.
+    Utf8(Vec<u8>),
+    /// Native-order UTF-16 words to convert to UTF-8.
+    Utf16(Vec<u16>),
+}
+
 pub struct Request {
     pub id: u64,
-    pub direction: Direction,
-    /// UTF-8 bytes for `Utf8ToUtf16`, little-endian UTF-16 bytes packed
-    /// as words for `Utf16ToUtf8`.
-    pub utf8: Vec<u8>,
-    pub utf16: Vec<u16>,
+    pub payload: Payload,
 }
 
 impl Request {
     pub fn utf8(id: u64, data: Vec<u8>) -> Request {
-        Request { id, direction: Direction::Utf8ToUtf16, utf8: data, utf16: Vec::new() }
+        Request { id, payload: Payload::Utf8(data) }
     }
 
     pub fn utf16(id: u64, data: Vec<u16>) -> Request {
-        Request { id, direction: Direction::Utf16ToUtf8, utf8: Vec::new(), utf16: data }
+        Request { id, payload: Payload::Utf16(data) }
+    }
+
+    pub fn direction(&self) -> Direction {
+        match self.payload {
+            Payload::Utf8(_) => Direction::Utf8ToUtf16,
+            Payload::Utf16(_) => Direction::Utf16ToUtf8,
+        }
     }
 
     fn input_bytes(&self) -> usize {
-        match self.direction {
-            Direction::Utf8ToUtf16 => self.utf8.len(),
-            Direction::Utf16ToUtf8 => self.utf16.len() * 2,
+        match &self.payload {
+            Payload::Utf8(b) => b.len(),
+            Payload::Utf16(w) => w.len() * 2,
         }
     }
 }
 
-/// A transcoding response.
+/// Successful conversion output (the opposite encoding of the payload).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Output {
+    Utf16(Vec<u16>),
+    Utf8(Vec<u8>),
+}
+
+/// A transcoding response: the output, or the structured error (kind +
+/// input position) the engine reported.
 #[derive(Debug)]
 pub struct Response {
     pub id: u64,
-    /// `None` = invalid input.
-    pub utf16: Option<Vec<u16>>,
-    pub utf8: Option<Vec<u8>>,
+    pub result: Result<Output, TranscodeError>,
 }
 
 impl Response {
     /// True iff the input validated and was transcoded.
     pub fn ok(&self) -> bool {
-        self.utf16.is_some() || self.utf8.is_some()
+        self.result.is_ok()
+    }
+
+    /// The structured error, if the conversion failed.
+    pub fn error(&self) -> Option<TranscodeError> {
+        self.result.as_ref().err().copied()
+    }
+
+    /// UTF-16 output words (for a UTF-8 request that succeeded).
+    pub fn utf16(&self) -> Option<&[u16]> {
+        match &self.result {
+            Ok(Output::Utf16(w)) => Some(w),
+            _ => None,
+        }
+    }
+
+    /// UTF-8 output bytes (for a UTF-16 request that succeeded).
+    pub fn utf8(&self) -> Option<&[u8]> {
+        match &self.result {
+            Ok(Output::Utf8(b)) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Consume the response, returning UTF-16 output if present.
+    pub fn into_utf16(self) -> Option<Vec<u16>> {
+        match self.result {
+            Ok(Output::Utf16(w)) => Some(w),
+            _ => None,
+        }
+    }
+
+    /// Consume the response, returning UTF-8 output if present.
+    pub fn into_utf8(self) -> Option<Vec<u8>> {
+        match self.result {
+            Ok(Output::Utf8(b)) => Some(b),
+            _ => None,
+        }
     }
 }
+
+/// Service startup failure.
+#[derive(Debug)]
+pub struct ServiceError(pub String);
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -107,9 +180,50 @@ pub struct TranscodeService {
 }
 
 impl TranscodeService {
-    /// Start the service. For `EngineChoice::Xla` this loads and
-    /// compiles the artifacts once per worker (fails fast if missing).
-    pub fn start(config: ServiceConfig) -> anyhow::Result<TranscodeService> {
+    /// Start the service. For `EngineChoice::Named` the key must exist
+    /// in the registry (in at least one direction); for
+    /// `EngineChoice::Xla` the artifacts must load (probed here, then
+    /// loaded per worker).
+    pub fn start(config: ServiceConfig) -> Result<TranscodeService, ServiceError> {
+        match &config.engine {
+            EngineChoice::Named(name) => {
+                let r = Registry::global();
+                if r.get_utf8(name).is_none() && r.get_utf16(name).is_none() {
+                    return Err(ServiceError(format!(
+                        "unknown engine {name:?}; known: {:?}",
+                        r.describe().iter().map(|d| d.0).collect::<Vec<_>>()
+                    )));
+                }
+                // One-directional engines fall back to "ours" for the
+                // other direction; make that visible so A/B numbers are
+                // not silently part-SIMD.
+                if r.get_utf8(name).is_none() {
+                    eprintln!(
+                        "service: engine {name:?} has no UTF-8→UTF-16 direction; \
+                         those requests will use \"ours\""
+                    );
+                }
+                if r.get_utf16(name).is_none() {
+                    eprintln!(
+                        "service: engine {name:?} has no UTF-16→UTF-8 direction; \
+                         those requests will use \"ours\""
+                    );
+                }
+            }
+            EngineChoice::Xla { artifacts_dir } => {
+                // Probe the load up front: a worker that cannot load its
+                // engine exits, and a service with zero consumers would
+                // deadlock the first blocking submit(). In stub builds
+                // (no --cfg pjrt_runtime) this fails immediately. In real
+                // PJRT builds the probe costs one extra graph compile at
+                // startup; workers still load their own engine because
+                // the xla binding's types are not assumed to be Sync.
+                if let Err(e) = XlaEngine::load(artifacts_dir) {
+                    return Err(ServiceError(format!("XLA engine unavailable: {e}")));
+                }
+            }
+            _ => {}
+        }
         let (tx, rx) = sync_channel::<Job>(config.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(ServiceStats::default());
@@ -121,7 +235,7 @@ impl TranscodeService {
             let handle = std::thread::Builder::new()
                 .name(format!("transcode-worker-{w}"))
                 .spawn(move || worker_loop(rx, stats, engine))
-                .expect("spawn worker");
+                .map_err(|e| ServiceError(format!("spawn worker: {e}")))?;
             workers.push(handle);
         }
         Ok(TranscodeService { tx, workers, stats })
@@ -172,24 +286,32 @@ impl TranscodeService {
 }
 
 enum WorkerEngine {
-    Simd { to16: OurUtf8ToUtf16, to8: OurUtf16ToUtf8 },
-    Scalar(crate::baselines::icu_like::IcuLikeTranscoder),
+    /// Any pair of registry engines behind trait objects.
+    Native { to16: Arc<dyn Utf8ToUtf16>, to8: Arc<dyn Utf16ToUtf8> },
     Xla(Box<XlaEngine>),
+}
+
+fn resolve_native(to16_key: &str, to8_key: &str) -> WorkerEngine {
+    let r = Registry::global();
+    WorkerEngine::Native {
+        to16: r
+            .get_utf8_arc(to16_key)
+            .or_else(|| r.get_utf8_arc("ours"))
+            .expect("registry always has ours"),
+        to8: r
+            .get_utf16_arc(to8_key)
+            .or_else(|| r.get_utf16_arc("ours"))
+            .expect("registry always has ours"),
+    }
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: EngineChoice) {
     let engine = match &choice {
-        EngineChoice::Simd { validate } => WorkerEngine::Simd {
-            to16: if *validate {
-                OurUtf8ToUtf16::validating()
-            } else {
-                OurUtf8ToUtf16::non_validating()
-            },
-            to8: OurUtf16ToUtf8::validating(),
-        },
-        EngineChoice::Scalar => {
-            WorkerEngine::Scalar(crate::baselines::icu_like::IcuLikeTranscoder)
+        EngineChoice::Simd { validate } => {
+            resolve_native(if *validate { "ours" } else { "ours-nv" }, "ours")
         }
+        EngineChoice::Scalar => resolve_native("icu", "icu"),
+        EngineChoice::Named(name) => resolve_native(name, name),
         EngineChoice::Xla { artifacts_dir } => match XlaEngine::load(artifacts_dir) {
             Ok(engine) => WorkerEngine::Xla(Box::new(engine)),
             Err(e) => {
@@ -210,13 +332,12 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
         let start = Instant::now();
         let input_bytes = request.input_bytes();
         let response = run_one(&engine, &request);
-        let ok = response.ok();
-        let (out_bytes, chars) = match (&response.utf16, &response.utf8) {
-            (Some(w), _) => (w.len() * 2, count_chars_utf16(w)),
-            (_, Some(b)) => (b.len(), crate::transcode::utf16_len_from_utf8(b)),
-            _ => (0, 0),
+        let (out_bytes, chars) = match &response.result {
+            Ok(Output::Utf16(w)) => (w.len() * 2, count_chars_utf16(w)),
+            Ok(Output::Utf8(b)) => (b.len(), crate::transcode::utf16_len_from_utf8(b)),
+            Err(_) => (0, 0),
         };
-        if ok {
+        if response.ok() {
             stats.record_completion(input_bytes, out_bytes, chars, start.elapsed());
         } else {
             stats.invalid.fetch_add(1, Ordering::Relaxed);
@@ -230,58 +351,47 @@ fn count_chars_utf16(words: &[u16]) -> usize {
 }
 
 fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
-    match request.direction {
-        Direction::Utf8ToUtf16 => {
-            let utf16 = match engine {
-                WorkerEngine::Simd { to16, .. } => {
-                    let mut dst = vec![0u16; utf16_capacity_for(request.utf8.len())];
-                    to16.convert(&request.utf8, &mut dst).map(|n| {
-                        dst.truncate(n);
-                        dst
-                    })
-                }
-                WorkerEngine::Scalar(engine) => {
-                    let mut dst = vec![0u16; utf16_capacity_for(request.utf8.len())];
-                    Utf8ToUtf16::convert(engine, &request.utf8, &mut dst).map(|n| {
-                        dst.truncate(n);
-                        dst
-                    })
-                }
-                WorkerEngine::Xla(engine) => {
-                    engine.utf8_to_utf16_stream(&request.utf8).unwrap_or_else(|e| {
-                        eprintln!("xla execution error: {e:#}");
-                        None
-                    })
-                }
-            };
-            Response { id: request.id, utf16, utf8: None }
+    let result = match (&request.payload, engine) {
+        (Payload::Utf8(src), WorkerEngine::Native { to16, .. }) => {
+            let mut dst = vec![0u16; utf16_capacity_for(src.len())];
+            to16.convert(src, &mut dst).map(|n| {
+                dst.truncate(n);
+                Output::Utf16(dst)
+            })
         }
-        Direction::Utf16ToUtf8 => {
-            let utf8 = match engine {
-                WorkerEngine::Simd { to8, .. } => {
-                    let mut dst = vec![0u8; utf8_capacity_for(request.utf16.len())];
-                    to8.convert(&request.utf16, &mut dst).map(|n| {
-                        dst.truncate(n);
-                        dst
-                    })
-                }
-                WorkerEngine::Scalar(engine) => {
-                    let mut dst = vec![0u8; utf8_capacity_for(request.utf16.len())];
-                    Utf16ToUtf8::convert(engine, &request.utf16, &mut dst).map(|n| {
-                        dst.truncate(n);
-                        dst
-                    })
-                }
-                WorkerEngine::Xla(engine) => {
-                    engine.utf16_to_utf8_stream(&request.utf16).unwrap_or_else(|e| {
-                        eprintln!("xla execution error: {e:#}");
-                        None
-                    })
-                }
-            };
-            Response { id: request.id, utf16: None, utf8 }
+        (Payload::Utf16(src), WorkerEngine::Native { to8, .. }) => {
+            let mut dst = vec![0u8; utf8_capacity_for(src.len())];
+            to8.convert(src, &mut dst).map(|n| {
+                dst.truncate(n);
+                Output::Utf8(dst)
+            })
         }
-    }
+        (Payload::Utf8(src), WorkerEngine::Xla(engine)) => {
+            match engine.utf8_to_utf16_stream(src) {
+                Ok(Some(words)) => Ok(Output::Utf16(words)),
+                // The graph's validation kernel rejects per block; the
+                // scalar reference scan recovers the canonical position.
+                Ok(None) => Err(crate::transcode::utf8_error(src)
+                    .unwrap_or(TranscodeError::new(ErrorKind::Other, 0))),
+                Err(e) => {
+                    eprintln!("xla execution error: {e:#}");
+                    Err(TranscodeError::new(ErrorKind::Other, 0))
+                }
+            }
+        }
+        (Payload::Utf16(src), WorkerEngine::Xla(engine)) => {
+            match engine.utf16_to_utf8_stream(src) {
+                Ok(Some(bytes)) => Ok(Output::Utf8(bytes)),
+                Ok(None) => Err(crate::transcode::utf16_error(src)
+                    .unwrap_or(TranscodeError::new(ErrorKind::Other, 0))),
+                Err(e) => {
+                    eprintln!("xla execution error: {e:#}");
+                    Err(TranscodeError::new(ErrorKind::Other, 0))
+                }
+            }
+        }
+    };
+    Response { id: request.id, result }
 }
 
 #[cfg(test)]
@@ -298,10 +408,10 @@ mod tests {
         let svc = service(EngineChoice::Simd { validate: true });
         let text = "service test: héllo 漢字 🙂 ".repeat(40);
         let resp = svc.transcode(Request::utf8(1, text.clone().into_bytes()));
-        assert_eq!(resp.utf16.as_deref().unwrap(), &text.encode_utf16().collect::<Vec<_>>()[..]);
+        assert_eq!(resp.utf16().unwrap(), &text.encode_utf16().collect::<Vec<_>>()[..]);
         let units: Vec<u16> = text.encode_utf16().collect();
         let resp2 = svc.transcode(Request::utf16(2, units));
-        assert_eq!(resp2.utf8.as_deref().unwrap(), text.as_bytes());
+        assert_eq!(resp2.utf8().unwrap(), text.as_bytes());
         let snap = svc.stats();
         assert_eq!(snap.completed, 2);
         assert!(snap.chars > 0);
@@ -309,11 +419,22 @@ mod tests {
     }
 
     #[test]
-    fn invalid_input_reported_not_crashed() {
+    fn invalid_input_reports_structured_error() {
         let svc = service(EngineChoice::Simd { validate: true });
-        let resp = svc.transcode(Request::utf8(1, vec![0xFF; 100]));
+        let mut bad = b"valid ascii prefix then: ".to_vec();
+        bad.extend_from_slice(&[0xFF; 4]);
+        let expected_pos = 25;
+        let resp = svc.transcode(Request::utf8(1, bad));
         assert!(!resp.ok());
+        let err = resp.error().expect("structured error");
+        assert_eq!(err.kind, ErrorKind::HeaderBits);
+        assert_eq!(err.position, expected_pos);
         assert_eq!(svc.stats().invalid, 1);
+        // UTF-16 direction too.
+        let resp = svc.transcode(Request::utf16(2, vec![0x41, 0xDC00]));
+        let err = resp.error().expect("structured error");
+        assert_eq!(err.kind, ErrorKind::Surrogate);
+        assert_eq!(err.position, 1);
         svc.shutdown();
     }
 
@@ -328,7 +449,7 @@ mod tests {
         for (text, rx) in rxs {
             let resp = rx.recv().unwrap();
             assert_eq!(
-                resp.utf16.as_deref().unwrap(),
+                resp.utf16().unwrap(),
                 &text.encode_utf16().collect::<Vec<_>>()[..]
             );
         }
@@ -337,15 +458,28 @@ mod tests {
     }
 
     #[test]
-    fn scalar_engine_matches_simd_engine() {
+    fn named_engines_match_simd_engine() {
         let simd = service(EngineChoice::Simd { validate: true });
-        let scalar = service(EngineChoice::Scalar);
         let text = "A/B: ünïcode 文字 🙂 ".repeat(30);
-        let a = simd.transcode(Request::utf8(1, text.clone().into_bytes()));
-        let b = scalar.transcode(Request::utf8(1, text.into_bytes()));
-        assert_eq!(a.utf16, b.utf16);
+        let reference = simd.transcode(Request::utf8(1, text.clone().into_bytes()));
+        for key in ["icu", "llvm", "steagall", "utf8lut"] {
+            let named = service(EngineChoice::Named(key.to_string()));
+            let b = named.transcode(Request::utf8(1, text.clone().into_bytes()));
+            assert_eq!(reference.utf16(), b.utf16(), "{key}");
+            named.shutdown();
+        }
         simd.shutdown();
-        scalar.shutdown();
+    }
+
+    #[test]
+    fn unknown_named_engine_fails_fast() {
+        let err = TranscodeService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            engine: EngineChoice::Named("definitely-not-an-engine".into()),
+        })
+        .expect_err("must reject unknown engine");
+        assert!(err.to_string().contains("unknown engine"), "{err}");
     }
 
     #[test]

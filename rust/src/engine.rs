@@ -1,0 +1,232 @@
+//! Unified engine registry.
+//!
+//! Every transcoding engine in the crate — ours and all baselines, both
+//! directions — registered once, behind trait objects, addressable by a
+//! stable key. The harness tables, the CLI's `--engine` flag, the
+//! benchmarks, the property tests and the coordinator all enumerate
+//! engines through this registry instead of maintaining their own
+//! hand-written lists (which used to drift).
+//!
+//! Keys are lower-case and unique per configuration; `name()` remains
+//! the paper's display name (shared between validating/non-validating
+//! configurations of the same engine):
+//!
+//! | key | display name | validating | directions |
+//! |---|---|---|---|
+//! | `ours` | ours | yes | both |
+//! | `ours-nv` | ours | no | 8→16 |
+//! | `icu` | ICU | yes | both |
+//! | `llvm` | LLVM | yes | both |
+//! | `finite` | finite | yes | 8→16 |
+//! | `steagall` | Steagall | yes | 8→16 |
+//! | `utf8lut` | utf8lut | yes | both |
+//! | `utf8lut-full` | utf8lut | no | 8→16 |
+//! | `inoue` | Inoue et al. | no | 8→16 |
+
+use crate::baselines::{
+    finite::FiniteTranscoder, icu_like::IcuLikeTranscoder, inoue::InoueTranscoder,
+    llvm::LlvmTranscoder, steagall::SteagallTranscoder, utf8lut::Utf8LutTranscoder,
+};
+use crate::transcode::{
+    utf16_to_utf8::OurUtf16ToUtf8, utf8_to_utf16::OurUtf8ToUtf16, Utf16ToUtf8, Utf8ToUtf16,
+};
+use std::sync::{Arc, LazyLock};
+
+/// A registered UTF-8 → UTF-16 engine.
+pub struct Utf8Entry {
+    /// Stable registry key (lower-case, unique).
+    pub key: &'static str,
+    pub engine: Arc<dyn Utf8ToUtf16>,
+}
+
+/// A registered UTF-16 → UTF-8 engine.
+pub struct Utf16Entry {
+    pub key: &'static str,
+    pub engine: Arc<dyn Utf16ToUtf8>,
+}
+
+/// The engine registry. Usually accessed through [`Registry::global`].
+pub struct Registry {
+    utf8: Vec<Utf8Entry>,
+    utf16: Vec<Utf16Entry>,
+}
+
+static GLOBAL: LazyLock<Registry> = LazyLock::new(Registry::standard);
+
+impl Registry {
+    /// The process-wide registry of all standard engines.
+    pub fn global() -> &'static Registry {
+        &GLOBAL
+    }
+
+    /// Build the standard registry (every engine of the paper's
+    /// evaluation, in Table 5/6/9 column order within each group).
+    pub fn standard() -> Registry {
+        let icu = Arc::new(IcuLikeTranscoder);
+        let llvm = Arc::new(LlvmTranscoder);
+        let lut = Arc::new(Utf8LutTranscoder::validating());
+        let ours16 = Arc::new(OurUtf16ToUtf8::validating());
+        Registry {
+            utf8: vec![
+                Utf8Entry { key: "icu", engine: icu.clone() },
+                Utf8Entry { key: "llvm", engine: llvm.clone() },
+                Utf8Entry { key: "finite", engine: Arc::new(FiniteTranscoder) },
+                Utf8Entry { key: "steagall", engine: Arc::new(SteagallTranscoder) },
+                Utf8Entry { key: "utf8lut", engine: lut.clone() },
+                Utf8Entry { key: "ours", engine: Arc::new(OurUtf8ToUtf16::validating()) },
+                Utf8Entry { key: "inoue", engine: Arc::new(InoueTranscoder) },
+                Utf8Entry { key: "utf8lut-full", engine: Arc::new(Utf8LutTranscoder::full()) },
+                Utf8Entry { key: "ours-nv", engine: Arc::new(OurUtf8ToUtf16::non_validating()) },
+            ],
+            utf16: vec![
+                Utf16Entry { key: "icu", engine: icu },
+                Utf16Entry { key: "llvm", engine: llvm },
+                Utf16Entry { key: "utf8lut", engine: lut },
+                Utf16Entry { key: "ours", engine: ours16 },
+            ],
+        }
+    }
+
+    /// All UTF-8 → UTF-16 entries.
+    pub fn utf8_entries(&self) -> &[Utf8Entry] {
+        &self.utf8
+    }
+
+    /// All UTF-16 → UTF-8 entries.
+    pub fn utf16_entries(&self) -> &[Utf16Entry] {
+        &self.utf16
+    }
+
+    /// Every UTF-8 → UTF-16 engine (validating and not).
+    pub fn all_utf8(&self) -> Vec<&dyn Utf8ToUtf16> {
+        self.utf8.iter().map(|e| e.engine.as_ref()).collect()
+    }
+
+    /// Every UTF-16 → UTF-8 engine, in Table 9/10 column order.
+    pub fn all_utf16(&self) -> Vec<&dyn Utf16ToUtf8> {
+        self.utf16.iter().map(|e| e.engine.as_ref()).collect()
+    }
+
+    /// The validating UTF-8 → UTF-16 engine set of Tables 6/7, in the
+    /// paper's column order.
+    pub fn utf8_validating(&self) -> Vec<&dyn Utf8ToUtf16> {
+        self.utf8
+            .iter()
+            .map(|e| e.engine.as_ref())
+            .filter(|e| e.validating())
+            .collect()
+    }
+
+    /// The non-validating UTF-8 → UTF-16 engine set of Table 5, in the
+    /// paper's column order.
+    pub fn utf8_non_validating(&self) -> Vec<&dyn Utf8ToUtf16> {
+        self.utf8
+            .iter()
+            .map(|e| e.engine.as_ref())
+            .filter(|e| !e.validating())
+            .collect()
+    }
+
+    /// Look up a UTF-8 → UTF-16 engine by registry key (case-insensitive).
+    pub fn get_utf8(&self, key: &str) -> Option<&dyn Utf8ToUtf16> {
+        self.utf8
+            .iter()
+            .find(|e| e.key.eq_ignore_ascii_case(key))
+            .map(|e| e.engine.as_ref())
+    }
+
+    /// Look up a UTF-16 → UTF-8 engine by registry key (case-insensitive).
+    pub fn get_utf16(&self, key: &str) -> Option<&dyn Utf16ToUtf8> {
+        self.utf16
+            .iter()
+            .find(|e| e.key.eq_ignore_ascii_case(key))
+            .map(|e| e.engine.as_ref())
+    }
+
+    /// Shared (`Arc`) handle to a UTF-8 → UTF-16 engine, for owners that
+    /// outlive the lookup (e.g. coordinator workers).
+    pub fn get_utf8_arc(&self, key: &str) -> Option<Arc<dyn Utf8ToUtf16>> {
+        self.utf8
+            .iter()
+            .find(|e| e.key.eq_ignore_ascii_case(key))
+            .map(|e| Arc::clone(&e.engine))
+    }
+
+    /// Shared (`Arc`) handle to a UTF-16 → UTF-8 engine.
+    pub fn get_utf16_arc(&self, key: &str) -> Option<Arc<dyn Utf16ToUtf8>> {
+        self.utf16
+            .iter()
+            .find(|e| e.key.eq_ignore_ascii_case(key))
+            .map(|e| Arc::clone(&e.engine))
+    }
+
+    /// All registry keys with their directions, for CLI help/listings:
+    /// `(key, display name, validating, has 8→16, has 16→8)`.
+    pub fn describe(&self) -> Vec<(&'static str, &'static str, bool, bool, bool)> {
+        let mut rows: Vec<(&'static str, &'static str, bool, bool, bool)> = Vec::new();
+        for e in &self.utf8 {
+            rows.push((e.key, e.engine.name(), e.engine.validating(), true, false));
+        }
+        for e in &self.utf16 {
+            if let Some(row) = rows.iter_mut().find(|r| r.0 == e.key) {
+                row.4 = true;
+            } else {
+                rows.push((e.key, e.engine.name(), e.engine.validating(), false, true));
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_unique_and_resolvable() {
+        let r = Registry::global();
+        let mut seen = std::collections::HashSet::new();
+        for e in r.utf8_entries() {
+            assert!(seen.insert(e.key), "duplicate utf8 key {}", e.key);
+            assert!(r.get_utf8(e.key).is_some());
+        }
+        seen.clear();
+        for e in r.utf16_entries() {
+            assert!(seen.insert(e.key), "duplicate utf16 key {}", e.key);
+            assert!(r.get_utf16(e.key).is_some());
+        }
+        assert!(r.get_utf8("OURS").is_some(), "lookup is case-insensitive");
+        assert!(r.get_utf8("no-such-engine").is_none());
+    }
+
+    #[test]
+    fn paper_table_sets_match() {
+        let r = Registry::global();
+        let validating: Vec<&str> =
+            r.utf8_validating().iter().map(|e| e.name()).collect();
+        assert_eq!(validating, ["ICU", "LLVM", "finite", "Steagall", "utf8lut", "ours"]);
+        let non_validating: Vec<&str> =
+            r.utf8_non_validating().iter().map(|e| e.name()).collect();
+        assert_eq!(non_validating, ["Inoue et al.", "utf8lut", "ours"]);
+        let utf16: Vec<&str> = r.all_utf16().iter().map(|e| e.name()).collect();
+        assert_eq!(utf16, ["ICU", "LLVM", "utf8lut", "ours"]);
+    }
+
+    #[test]
+    fn every_engine_transcodes_through_trait_objects() {
+        let r = Registry::global();
+        let text = "registry smoke test: é漢🙂 ok";
+        let expected: Vec<u16> = text.encode_utf16().collect();
+        for e in r.utf8_entries() {
+            if !e.engine.supports_supplemental() {
+                continue; // Inoue: BMP only
+            }
+            let out = e.engine.convert_to_vec(text.as_bytes()).expect("valid input");
+            assert_eq!(out, expected, "{}", e.key);
+        }
+        for e in r.utf16_entries() {
+            let out = e.engine.convert_to_vec(&expected).expect("valid input");
+            assert_eq!(out, text.as_bytes(), "{}", e.key);
+        }
+    }
+}

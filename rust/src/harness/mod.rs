@@ -15,38 +15,24 @@ pub mod bench;
 
 use crate::corpus::{generate_collection, Collection, Corpus, Language};
 use crate::counters::Counters;
+use crate::engine::Registry;
 use crate::prelude::*;
 use bench::{default_budget, measure};
 
-/// The validating UTF-8→UTF-16 engine set of Tables 6/7.
-pub fn utf8_validating_engines() -> Vec<Box<dyn Utf8ToUtf16>> {
-    vec![
-        Box::new(IcuLikeTranscoder),
-        Box::new(LlvmTranscoder),
-        Box::new(FiniteTranscoder),
-        Box::new(SteagallTranscoder),
-        Box::new(Utf8LutTranscoder::validating()),
-        Box::new(OurUtf8ToUtf16::validating()),
-    ]
+/// The validating UTF-8→UTF-16 engine set of Tables 6/7 (from the
+/// unified [`Registry`] — the harness no longer keeps its own list).
+pub fn utf8_validating_engines() -> Vec<&'static dyn Utf8ToUtf16> {
+    Registry::global().utf8_validating()
 }
 
 /// The non-validating UTF-8→UTF-16 engine set of Table 5.
-pub fn utf8_non_validating_engines() -> Vec<Box<dyn Utf8ToUtf16>> {
-    vec![
-        Box::new(InoueTranscoder),
-        Box::new(Utf8LutTranscoder::full()),
-        Box::new(OurUtf8ToUtf16::non_validating()),
-    ]
+pub fn utf8_non_validating_engines() -> Vec<&'static dyn Utf8ToUtf16> {
+    Registry::global().utf8_non_validating()
 }
 
 /// The UTF-16→UTF-8 engine set of Tables 9/10.
-pub fn utf16_engines() -> Vec<Box<dyn Utf16ToUtf8>> {
-    vec![
-        Box::new(IcuLikeTranscoder),
-        Box::new(LlvmTranscoder),
-        Box::new(Utf8LutTranscoder::validating()),
-        Box::new(OurUtf16ToUtf8::validating()),
-    ]
+pub fn utf16_engines() -> Vec<&'static dyn Utf16ToUtf8> {
+    Registry::global().all_utf16()
 }
 
 /// Benchmark one UTF-8→UTF-16 engine on one corpus; Gc/s, or None if
@@ -157,7 +143,7 @@ pub fn table5() -> String {
     for corpus in &corpora {
         let cells = engines
             .iter()
-            .map(|e| match bench_utf8_engine(e.as_ref(), corpus) {
+            .map(|e| match bench_utf8_engine(*e, corpus) {
                 Some(v) => fmt_speed(v),
                 None => "unsupported".to_string(),
             })
@@ -179,7 +165,7 @@ fn utf8_speed_table(title: &str, collection: Collection) -> String {
     for corpus in &corpora {
         let cells = engines
             .iter()
-            .map(|e| fmt_speed(bench_utf8_engine(e.as_ref(), corpus).unwrap()))
+            .map(|e| fmt_speed(bench_utf8_engine(*e, corpus).unwrap()))
             .collect();
         rows.push((corpus.name().to_string(), cells));
     }
@@ -214,7 +200,7 @@ pub fn fig5() -> String {
     }) {
         out.push_str(&format!("{}:\n", corpus.name()));
         for engine in &engines {
-            let v = bench_utf8_engine(engine.as_ref(), corpus).unwrap();
+            let v = bench_utf8_engine(*engine, corpus).unwrap();
             let bar = "#".repeat((v * 30.0).min(120.0) as usize);
             out.push_str(&format!("  {:>9} {:>5} |{}\n", engine.name(), fmt_speed(v), bar));
         }
@@ -294,7 +280,7 @@ fn utf16_speed_table(title: &str, collection: Collection) -> String {
     for corpus in &corpora {
         let cells = engines
             .iter()
-            .map(|e| fmt_speed(bench_utf16_engine(e.as_ref(), corpus)))
+            .map(|e| fmt_speed(bench_utf16_engine(*e, corpus)))
             .collect();
         rows.push((corpus.name().to_string(), cells));
     }
@@ -329,7 +315,7 @@ pub fn fig6() -> String {
     }) {
         out.push_str(&format!("{}:\n", corpus.name()));
         for engine in &engines {
-            let v = bench_utf16_engine(engine.as_ref(), corpus);
+            let v = bench_utf16_engine(*engine, corpus);
             let bar = "#".repeat((v * 30.0).min(120.0) as usize);
             out.push_str(&format!("  {:>8} {:>5} |{}\n", engine.name(), fmt_speed(v), bar));
         }

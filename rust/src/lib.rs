@@ -9,7 +9,13 @@
 //! * [`transcode`] — the paper's vectorized UTF-8 ⇄ UTF-16 transcoders
 //!   (Algorithms 2, 3 and 4), validating and non-validating, built on a
 //!   portable SIMD substrate ([`simd`]) and small lookup tables
-//!   ([`tables`]).
+//!   ([`tables`]). Conversions return rich results
+//!   ([`transcode::TranscodeResult`]): the output length, or a
+//!   [`transcode::TranscodeError`] carrying the error class and the
+//!   input position of the first invalid sequence.
+//! * [`transcode::streaming`] — chunk-at-a-time transcoding across
+//!   arbitrary chunk boundaries (carrying partial characters between
+//!   pushes), equivalent split-for-split to one-shot conversion.
 //! * [`validate`] — Keiser–Lemire UTF-8 validation and UTF-16 surrogate
 //!   validation.
 //! * [`baselines`] — every comparison system from the paper's evaluation,
@@ -18,33 +24,60 @@
 //!   DFA+ASCII-fast-path variant, an ICU-like careful scalar transcoder,
 //!   the Inoue et al. 2008 table-driven SIMD transcoder (Algorithm 1),
 //!   and a utf8lut-style big-table transcoder.
+//! * [`engine`] — the unified registry enumerating every engine (ours
+//!   and the baselines, both directions) behind trait objects by key.
 //! * [`corpus`] — synthetic corpus generators reproducing the byte-class
 //!   distributions of the paper's lipsum and wikipedia-Mars datasets
 //!   (Table 4).
-//! * [`coordinator`] — a streaming transcoding service (router, batcher,
-//!   worker pool, backpressure, metrics) that serves the transcoders.
+//! * [`coordinator`] — a transcoding service (router, batcher, worker
+//!   pool, backpressure, metrics) that serves any registry engine and
+//!   surfaces structured errors in its responses.
 //! * [`runtime`] — a PJRT client that loads the AOT-compiled JAX/Pallas
-//!   batch transcoding graph (`artifacts/*.hlo.txt`) for batch offload.
+//!   batch transcoding graph (`artifacts/*.hlo.txt`) for batch offload
+//!   (stubbed out unless built with `--cfg pjrt_runtime`).
 //! * [`harness`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! // (no_run: doctest binaries miss the xla_extension rpath in this
-//! // offline image; the same flow runs in examples/quickstart.rs.)
+//! ```
 //! use simdutf_rs::prelude::*;
 //!
+//! // One-shot conversion; errors carry a kind and a position.
 //! let engine = OurUtf8ToUtf16::validating();
 //! let src = "héllo wörld — 漢字 🙂".as_bytes();
 //! let utf16 = engine.convert_to_vec(src).expect("valid UTF-8");
 //! assert_eq!(String::from_utf16(&utf16).unwrap(), "héllo wörld — 漢字 🙂");
+//!
+//! let err = engine.convert_to_vec(&[b'a', 0xED, 0xA0, 0x80]).unwrap_err();
+//! assert_eq!((err.kind, err.position), (ErrorKind::Surrogate, 1));
+//!
+//! // Streaming: split anywhere, same outputs, same errors.
+//! let mut stream = StreamingUtf8ToUtf16::new();
+//! let mut out = Vec::new();
+//! let mut buf = vec![0u16; utf16_capacity_for(8)];
+//! for chunk in src.chunks(5) {
+//!     let fed = stream.push(chunk, &mut buf).expect("valid");
+//!     out.extend_from_slice(&buf[..fed.written]);
+//! }
+//! stream.finish().expect("no dangling sequence");
+//! assert_eq!(out, utf16);
+//!
+//! // Every engine, by name, through the registry.
+//! let llvm = Registry::global().get_utf8("llvm").unwrap();
+//! assert_eq!(llvm.convert_to_vec(src).unwrap(), utf16);
 //! ```
+
+// The SIMD substrate deliberately uses index loops over fixed-size
+// arrays and paired src/dst indexing (they autovectorize predictably);
+// keep clippy from pushing iterator rewrites onto the hot paths.
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy)]
 
 pub mod baselines;
 pub mod coordinator;
 pub mod corpus;
 pub mod counters;
+pub mod engine;
 pub mod harness;
 pub mod runtime;
 pub mod scalar;
@@ -62,8 +95,12 @@ pub mod prelude {
     pub use crate::corpus::{
         Collection, Corpus, CorpusStats, Language, LIPSUM_LANGUAGES, WIKI_LANGUAGES,
     };
+    pub use crate::engine::Registry;
     pub use crate::transcode::{
-        utf16_to_utf8::OurUtf16ToUtf8, utf8_to_utf16::OurUtf8ToUtf16, Utf16ToUtf8, Utf8ToUtf16,
+        streaming::{FeedResult, StreamingUtf16ToUtf8, StreamingUtf8ToUtf16},
+        utf16_capacity_for, utf16_to_utf8::OurUtf16ToUtf8, utf8_capacity_for,
+        utf8_to_utf16::OurUtf8ToUtf16, ErrorKind, TranscodeError, TranscodeResult, Utf16ToUtf8,
+        Utf8ToUtf16,
     };
     pub use crate::validate::{validate_utf16le, validate_utf8, Utf8Validator};
 }

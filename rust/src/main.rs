@@ -5,13 +5,17 @@
 //! ```text
 //! simdutf-cli harness [section|all] [--artifacts DIR]
 //!     Regenerate the paper's tables/figures (table4..table10, fig5..fig7, xla).
-//! simdutf-cli transcode --direction 8to16|16to8 <file>
+//! simdutf-cli transcode --direction 8to16|16to8 [--engine KEY] <file>
 //!     Transcode a file to stdout (UTF-16 side is little-endian bytes).
-//! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla]
+//!     On invalid input, prints the error kind and byte/word position.
+//! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla|KEY]
 //!     Run the streaming service against a synthetic workload and print
-//!     throughput/latency stats.
+//!     throughput/latency stats. KEY is any registry engine (see `engines`).
+//! simdutf-cli engines
+//!     List every registered engine (key, name, validation, directions).
 //! simdutf-cli validate <file>
-//!     Validate a file as UTF-8 (exit code 1 when invalid).
+//!     Validate a file as UTF-8; reports the error kind and position
+//!     (exit code 1 when invalid).
 //! ```
 
 use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
@@ -26,9 +30,10 @@ fn main() {
         Some("harness") => cmd_harness(&args[1..]),
         Some("transcode") => cmd_transcode(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("engines") => cmd_engines(),
         Some("validate") => cmd_validate(&args[1..]),
         _ => {
-            eprintln!("usage: simdutf-cli <harness|transcode|serve|validate> ...");
+            eprintln!("usage: simdutf-cli <harness|transcode|serve|engines|validate> ...");
             eprintln!("see the module docs of rust/src/main.rs");
             2
         }
@@ -61,8 +66,23 @@ fn cmd_harness(args: &[String]) -> i32 {
     0
 }
 
+fn cmd_engines() -> i32 {
+    println!("{:<14} {:<14} {:<10} {}", "key", "name", "validates", "directions");
+    for (key, name, validating, d8to16, d16to8) in Registry::global().describe() {
+        let dirs = match (d8to16, d16to8) {
+            (true, true) => "8→16, 16→8",
+            (true, false) => "8→16",
+            (false, true) => "16→8",
+            (false, false) => "-",
+        };
+        println!("{:<14} {:<14} {:<10} {}", key, name, if validating { "yes" } else { "no" }, dirs);
+    }
+    0
+}
+
 fn cmd_transcode(args: &[String]) -> i32 {
     let direction = flag_value(args, "--direction").unwrap_or_else(|| "8to16".to_string());
+    let engine_key = flag_value(args, "--engine").unwrap_or_else(|| "ours".to_string());
     let path = match args.iter().rev().find(|a| !a.starts_with("--")) {
         Some(p) => p.clone(),
         None => {
@@ -81,16 +101,19 @@ fn cmd_transcode(args: &[String]) -> i32 {
     let mut out = stdout.lock();
     match direction.as_str() {
         "8to16" => {
-            let engine = OurUtf8ToUtf16::validating();
+            let Some(engine) = Registry::global().get_utf8(&engine_key) else {
+                eprintln!("transcode: unknown engine {engine_key} (see `simdutf-cli engines`)");
+                return 2;
+            };
             match engine.convert_to_vec(&data) {
-                Some(words) => {
+                Ok(words) => {
                     for w in words {
                         out.write_all(&w.to_le_bytes()).unwrap();
                     }
                     0
                 }
-                None => {
-                    eprintln!("transcode: invalid UTF-8 input");
+                Err(e) => {
+                    eprintln!("transcode: invalid UTF-8 input: {e}");
                     1
                 }
             }
@@ -98,14 +121,17 @@ fn cmd_transcode(args: &[String]) -> i32 {
         "16to8" => {
             let words: Vec<u16> =
                 data.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
-            let engine = OurUtf16ToUtf8::validating();
+            let Some(engine) = Registry::global().get_utf16(&engine_key) else {
+                eprintln!("transcode: unknown engine {engine_key} (see `simdutf-cli engines`)");
+                return 2;
+            };
             match engine.convert_to_vec(&words) {
-                Some(bytes) => {
+                Ok(bytes) => {
                     out.write_all(&bytes).unwrap();
                     0
                 }
-                None => {
-                    eprintln!("transcode: invalid UTF-16 input");
+                Err(e) => {
+                    eprintln!("transcode: invalid UTF-16 input: {e}");
                     1
                 }
             }
@@ -129,10 +155,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                 flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".to_string()),
             ),
         },
-        Some(other) => {
-            eprintln!("serve: unknown engine {other}");
-            return 2;
-        }
+        Some(key) => EngineChoice::Named(key.to_string()),
     };
 
     println!("starting service: workers={workers} engine={engine:?} requests={requests}");
@@ -160,7 +183,11 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     let mut failures = 0usize;
     for rx in pending {
-        if !rx.recv().expect("worker alive").ok() {
+        let resp = rx.recv().expect("worker alive");
+        if !resp.ok() {
+            if let Some(err) = resp.error() {
+                eprintln!("request {} failed: {err}", resp.id);
+            }
             failures += 1;
         }
     }
@@ -187,15 +214,16 @@ fn cmd_validate(args: &[String]) -> i32 {
         return 2;
     };
     match std::fs::read(path) {
-        Ok(data) => {
-            if validate_utf8(&data) {
+        Ok(data) => match simdutf_rs::transcode::utf8_error(&data) {
+            None => {
                 println!("valid UTF-8 ({} bytes)", data.len());
                 0
-            } else {
-                println!("INVALID UTF-8");
+            }
+            Some(err) => {
+                println!("INVALID UTF-8: {err}");
                 1
             }
-        }
+        },
         Err(e) => {
             eprintln!("validate: {e}");
             1

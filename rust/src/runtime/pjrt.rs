@@ -1,0 +1,188 @@
+//! The real PJRT-backed engine (`--cfg pjrt_runtime` builds only).
+//!
+//! The HLO interchange is *text*: jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see `python/compile/aot.py`).
+
+use super::{Result, RuntimeError, AOT_BATCH, BLOCK, OUT_WIDTH};
+use crate::runtime::chunk;
+use std::path::Path;
+
+/// A compiled pair of batch transcoding executables on the PJRT CPU
+/// client.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    utf8_to_utf16: xla::PjRtLoadedExecutable,
+    utf16_to_utf8: xla::PjRtLoadedExecutable,
+}
+
+impl XlaEngine {
+    /// Load both graphs from `artifacts_dir` (built by `make artifacts`).
+    pub fn load(artifacts_dir: &Path) -> Result<XlaEngine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError(format!("PJRT client: {e}")))?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = artifacts_dir.join(name);
+            let path = path
+                .to_str()
+                .ok_or_else(|| RuntimeError("artifact path not UTF-8".to_string()))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| RuntimeError(format!("parsing {name}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| RuntimeError(format!("compiling {name}: {e}")))
+        };
+        Ok(XlaEngine {
+            utf8_to_utf16: load(&format!("utf8_to_utf16_b{AOT_BATCH}.hlo.txt"))?,
+            utf16_to_utf8: load(&format!("utf16_to_utf8_b{AOT_BATCH}.hlo.txt"))?,
+            client,
+        })
+    }
+
+    /// Platform name of the underlying PJRT client (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one padded batch through the UTF-8→UTF-16 graph.
+    ///
+    /// `blocks` is row-major `(AOT_BATCH, BLOCK)` i32, `lengths` is
+    /// `(AOT_BATCH,)`. Returns `(words, counts, valid)`.
+    pub fn run_utf8_to_utf16(
+        &self,
+        blocks: &[i32],
+        lengths: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<bool>)> {
+        debug_assert_eq!(blocks.len(), AOT_BATCH * BLOCK);
+        debug_assert_eq!(lengths.len(), AOT_BATCH);
+        run_batch(&self.utf8_to_utf16, blocks, lengths)
+    }
+
+    /// Execute one padded batch through the UTF-16→UTF-8 graph.
+    pub fn run_utf16_to_utf8(
+        &self,
+        blocks: &[i32],
+        lengths: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<bool>)> {
+        debug_assert_eq!(blocks.len(), AOT_BATCH * BLOCK);
+        debug_assert_eq!(lengths.len(), AOT_BATCH);
+        run_batch(&self.utf16_to_utf8, blocks, lengths)
+    }
+
+    /// Transcode a whole UTF-8 stream via the accelerator path:
+    /// chunk → batch → execute → reassemble. Returns `Ok(None)` when the
+    /// graph's validation kernel rejects a block.
+    pub fn utf8_to_utf16_stream(&self, src: &[u8]) -> Result<Option<Vec<u16>>> {
+        let (rows, lens) = chunk::utf8_blocks(src);
+        let mut out = Vec::with_capacity(src.len());
+        for (chunk_rows, chunk_lens) in chunk::batches(&rows, &lens, AOT_BATCH, BLOCK) {
+            let (words, counts, valid) = self.run_utf8_to_utf16(&chunk_rows, &chunk_lens)?;
+            for r in 0..AOT_BATCH {
+                if chunk_lens[r] == 0 {
+                    continue;
+                }
+                if !valid[r] {
+                    return Ok(None);
+                }
+                let c = counts[r] as usize;
+                out.extend(words[r * BLOCK..r * BLOCK + c].iter().map(|&w| w as u16));
+            }
+        }
+        Ok(Some(out))
+    }
+
+    /// Transcode a whole UTF-16 stream via the accelerator path.
+    pub fn utf16_to_utf8_stream(&self, src: &[u16]) -> Result<Option<Vec<u8>>> {
+        let (rows, lens) = chunk::utf16_blocks(src);
+        let mut out = Vec::with_capacity(src.len() * 3);
+        for (chunk_rows, chunk_lens) in chunk::batches(&rows, &lens, AOT_BATCH, BLOCK) {
+            let (bytes, counts, valid) = self.run_utf16_to_utf8(&chunk_rows, &chunk_lens)?;
+            for r in 0..AOT_BATCH {
+                if chunk_lens[r] == 0 {
+                    continue;
+                }
+                if !valid[r] {
+                    return Ok(None);
+                }
+                let c = counts[r] as usize;
+                out.extend(bytes[r * OUT_WIDTH..r * OUT_WIDTH + c].iter().map(|&b| b as u8));
+            }
+        }
+        Ok(Some(out))
+    }
+}
+
+fn run_batch(
+    exe: &xla::PjRtLoadedExecutable,
+    blocks: &[i32],
+    lengths: &[i32],
+) -> Result<(Vec<i32>, Vec<i32>, Vec<bool>)> {
+    let x = xla::Literal::vec1(blocks)
+        .reshape(&[AOT_BATCH as i64, BLOCK as i64])
+        .map_err(|e| RuntimeError(format!("reshape: {e}")))?;
+    let n = xla::Literal::vec1(lengths);
+    let result = exe
+        .execute::<xla::Literal>(&[x, n])
+        .map_err(|e| RuntimeError(format!("execute: {e}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| RuntimeError(format!("transfer: {e}")))?;
+    let (units, counts, valid) = result
+        .to_tuple3()
+        .map_err(|e| RuntimeError(format!("untuple: {e}")))?;
+    let valid: Vec<bool> = valid
+        .to_vec::<i32>()
+        .map_err(|e| RuntimeError(format!("valid vector: {e}")))?
+        .into_iter()
+        .map(|v| v != 0)
+        .collect();
+    Ok((
+        units.to_vec::<i32>().map_err(|e| RuntimeError(format!("units vector: {e}")))?,
+        counts.to_vec::<i32>().map_err(|e| RuntimeError(format!("counts vector: {e}")))?,
+        valid,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let name = format!("utf8_to_utf16_b{AOT_BATCH}.hlo.txt");
+        dir.join(name).exists().then_some(dir)
+    }
+
+    #[test]
+    fn xla_engine_round_trips_when_artifacts_present() {
+        // Integration gate: requires `make artifacts` to have run.
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = XlaEngine::load(&dir).expect("load artifacts");
+        let text = "xla offload: ascii, héllo, 漢字テスト, 🙂🚀 — all classes ".repeat(9);
+        let words = engine
+            .utf8_to_utf16_stream(text.as_bytes())
+            .expect("execute")
+            .expect("valid input");
+        assert_eq!(words, text.encode_utf16().collect::<Vec<_>>());
+
+        let units: Vec<u16> = text.encode_utf16().collect();
+        let bytes = engine.utf16_to_utf8_stream(&units).expect("execute").expect("valid");
+        assert_eq!(bytes, text.as_bytes());
+    }
+
+    #[test]
+    fn xla_engine_rejects_invalid_when_artifacts_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = XlaEngine::load(&dir).expect("load artifacts");
+        let mut bad = "valid prefix ".repeat(8).into_bytes();
+        bad.extend_from_slice(&[0xED, 0xA0, 0x80]); // UTF-8-encoded surrogate
+        assert_eq!(engine.utf8_to_utf16_stream(&bad).expect("execute"), None);
+        assert_eq!(engine.utf16_to_utf8_stream(&[0x41, 0xD800]).expect("execute"), None);
+    }
+}

@@ -1,0 +1,59 @@
+//! API-compatible stand-in for the PJRT engine when the `xla` binding
+//! is not compiled in (the default). `load` always fails; the other
+//! methods are unreachable because no `XlaEngine` value can exist.
+
+use super::{Result, RuntimeError};
+use std::path::Path;
+
+/// Uninhabited stand-in for the PJRT engine (see module docs).
+pub struct XlaEngine {
+    never: std::convert::Infallible,
+}
+
+impl XlaEngine {
+    /// Always fails in this build. For the real engine, add the `xla`
+    /// crate (an `xla_extension` binding) to `[dependencies]` and build
+    /// with `RUSTFLAGS="--cfg pjrt_runtime"` — see the module docs of
+    /// [`crate::runtime`].
+    pub fn load(artifacts_dir: &Path) -> Result<XlaEngine> {
+        Err(RuntimeError(format!(
+            "XLA/PJRT runtime not compiled in (artifacts dir {}): add the \
+             `xla` crate to Cargo.toml [dependencies] and rebuild with \
+             RUSTFLAGS=\"--cfg pjrt_runtime\" to enable the batch-offload path",
+            artifacts_dir.display()
+        )))
+    }
+
+    /// Platform name of the underlying PJRT client (for diagnostics).
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    /// Execute one padded batch through the UTF-8→UTF-16 graph.
+    pub fn run_utf8_to_utf16(
+        &self,
+        _blocks: &[i32],
+        _lengths: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<bool>)> {
+        match self.never {}
+    }
+
+    /// Execute one padded batch through the UTF-16→UTF-8 graph.
+    pub fn run_utf16_to_utf8(
+        &self,
+        _blocks: &[i32],
+        _lengths: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<bool>)> {
+        match self.never {}
+    }
+
+    /// Transcode a whole UTF-8 stream via the accelerator path.
+    pub fn utf8_to_utf16_stream(&self, _src: &[u8]) -> Result<Option<Vec<u16>>> {
+        match self.never {}
+    }
+
+    /// Transcode a whole UTF-16 stream via the accelerator path.
+    pub fn utf16_to_utf8_stream(&self, _src: &[u16]) -> Result<Option<Vec<u8>>> {
+        match self.never {}
+    }
+}

@@ -6,29 +6,44 @@
 //! §4/§5), and the test suite uses them as one of several independent
 //! oracles.
 
-/// Error raised by the strict decoders.
+use crate::transcode::ErrorKind;
+
+/// Error raised by the strict decoders, carrying the simdutf-style
+/// error class (the *position* is the offset the caller decoded at).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct CodingError;
+pub struct CodingError {
+    pub kind: ErrorKind,
+}
+
+impl CodingError {
+    const fn new(kind: ErrorKind) -> CodingError {
+        CodingError { kind }
+    }
+}
 
 /// Decode one UTF-8 character from the front of `src`.
 ///
 /// Enforces all six rules of §3: byte ranges, continuation counts,
 /// overlong forms, the U+10FFFF ceiling and the surrogate gap. Returns
-/// `(code point, bytes consumed)`.
+/// `(code point, bytes consumed)`, or the error class on failure.
 #[inline]
 pub fn decode_utf8_char(src: &[u8]) -> Result<(u32, usize), CodingError> {
-    let b0 = *src.first().ok_or(CodingError)?;
+    let b0 = *src.first().ok_or(CodingError::new(ErrorKind::TooShort))?;
     if b0 < 0x80 {
         return Ok((b0 as u32, 1));
     }
+    if b0 < 0xC0 {
+        // 0x80..0xBF: continuation byte where a lead was expected.
+        return Err(CodingError::new(ErrorKind::TooLong));
+    }
     if b0 < 0xC2 {
-        // 0x80..0xBF: stray continuation; 0xC0/0xC1: overlong 2-byte.
-        return Err(CodingError);
+        // 0xC0/0xC1: overlong 2-byte form by construction.
+        return Err(CodingError::new(ErrorKind::Overlong));
     }
     let cont = |i: usize| -> Result<u32, CodingError> {
-        let b = *src.get(i).ok_or(CodingError)?;
+        let b = *src.get(i).ok_or(CodingError::new(ErrorKind::TooShort))?;
         if b & 0xC0 != 0x80 {
-            return Err(CodingError);
+            return Err(CodingError::new(ErrorKind::TooShort));
         }
         Ok((b & 0x3F) as u32)
     };
@@ -39,23 +54,27 @@ pub fn decode_utf8_char(src: &[u8]) -> Result<(u32, usize), CodingError> {
     } else if b0 < 0xF0 {
         let cp = ((b0 & 0x0F) as u32) << 12 | cont(1)? << 6 | cont(2)?;
         if cp < 0x800 {
-            return Err(CodingError); // overlong 3-byte
+            return Err(CodingError::new(ErrorKind::Overlong));
         }
         if (0xD800..=0xDFFF).contains(&cp) {
-            return Err(CodingError); // surrogate
+            return Err(CodingError::new(ErrorKind::Surrogate));
         }
         Ok((cp, 3))
     } else if b0 < 0xF5 {
         let cp = ((b0 & 0x07) as u32) << 18 | cont(1)? << 12 | cont(2)? << 6 | cont(3)?;
         if cp < 0x10000 {
-            return Err(CodingError); // overlong 4-byte
+            return Err(CodingError::new(ErrorKind::Overlong));
         }
         if cp > 0x10FFFF {
-            return Err(CodingError); // beyond Unicode
+            return Err(CodingError::new(ErrorKind::TooLarge));
         }
         Ok((cp, 4))
+    } else if b0 < 0xF8 {
+        // 0xF5..0xF7: a 4-byte form that can only encode > U+10FFFF.
+        Err(CodingError::new(ErrorKind::TooLarge))
     } else {
-        Err(CodingError) // 0xF5..0xFF can never appear
+        // 0xF8..0xFF: five or more header bits.
+        Err(CodingError::new(ErrorKind::HeaderBits))
     }
 }
 
@@ -63,16 +82,20 @@ pub fn decode_utf8_char(src: &[u8]) -> Result<(u32, usize), CodingError> {
 /// of `src`. Returns `(code point, words consumed)`.
 #[inline]
 pub fn decode_utf16_char(src: &[u16]) -> Result<(u32, usize), CodingError> {
-    let w0 = *src.first().ok_or(CodingError)?;
+    let w0 = *src.first().ok_or(CodingError::new(ErrorKind::TooShort))?;
     if !(0xD800..=0xDFFF).contains(&w0) {
         return Ok((w0 as u32, 1));
     }
     if w0 >= 0xDC00 {
-        return Err(CodingError); // lone low surrogate
+        return Err(CodingError::new(ErrorKind::Surrogate)); // lone low surrogate
     }
-    let w1 = *src.get(1).ok_or(CodingError)?;
+    let Some(&w1) = src.get(1) else {
+        // High surrogate at end of input: truncated pair.
+        return Err(CodingError::new(ErrorKind::TooShort));
+    };
     if !(0xDC00..=0xDFFF).contains(&w1) {
-        return Err(CodingError); // high surrogate not followed by low
+        // High surrogate not followed by a low surrogate.
+        return Err(CodingError::new(ErrorKind::Surrogate));
     }
     let cp = 0x10000 + (((w0 - 0xD800) as u32) << 10) + (w1 - 0xDC00) as u32;
     Ok((cp, 2))
@@ -130,29 +153,40 @@ pub fn encode_utf8_char_wtf8(cp: u32, dst: &mut [u8]) -> usize {
 }
 
 /// Scalar validating UTF-8 → UTF-16 transcoder over a whole buffer.
-/// Returns the number of words written, or `None` on invalid input.
-pub fn utf8_to_utf16(src: &[u8], dst: &mut [u16]) -> Option<usize> {
+/// Returns the number of words written, or the first error (kind and
+/// byte position). This is the character-at-a-time ground truth the
+/// vectorized engines' error reporting is tested against.
+pub fn utf8_to_utf16(
+    src: &[u8],
+    dst: &mut [u16],
+) -> Result<usize, crate::transcode::TranscodeError> {
     let mut p = 0;
     let mut q = 0;
     while p < src.len() {
-        let (cp, len) = decode_utf8_char(&src[p..]).ok()?;
+        let (cp, len) = decode_utf8_char(&src[p..])
+            .map_err(|e| crate::transcode::TranscodeError::new(e.kind, p))?;
         p += len;
         q += encode_utf16_char(cp, &mut dst[q..]);
     }
-    Some(q)
+    Ok(q)
 }
 
 /// Scalar validating UTF-16 → UTF-8 transcoder over a whole buffer.
-/// Returns the number of bytes written, or `None` on invalid input.
-pub fn utf16_to_utf8(src: &[u16], dst: &mut [u8]) -> Option<usize> {
+/// Returns the number of bytes written, or the first error (kind and
+/// word position).
+pub fn utf16_to_utf8(
+    src: &[u16],
+    dst: &mut [u8],
+) -> Result<usize, crate::transcode::TranscodeError> {
     let mut p = 0;
     let mut q = 0;
     while p < src.len() {
-        let (cp, len) = decode_utf16_char(&src[p..]).ok()?;
+        let (cp, len) = decode_utf16_char(&src[p..])
+            .map_err(|e| crate::transcode::TranscodeError::new(e.kind, p))?;
         p += len;
         q += encode_utf8_char(cp, &mut dst[q..]);
     }
-    Some(q)
+    Ok(q)
 }
 
 /// Non-validating scalar UTF-8 → UTF-16: assumes well-formed input and

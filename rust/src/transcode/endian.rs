@@ -83,8 +83,9 @@ pub fn utf16be_bytes_to_words(data: &[u8]) -> Vec<u16> {
 }
 
 /// Transcode big-endian UTF-16 bytes to UTF-8 (validating): byte-swap +
-/// the paper's little-endian transcoder.
-pub fn utf16be_to_utf8(data: &[u8], dst: &mut [u8]) -> Option<usize> {
+/// the paper's little-endian transcoder. Error positions are in 16-bit
+/// words (as for the little-endian engines), not source bytes.
+pub fn utf16be_to_utf8(data: &[u8], dst: &mut [u8]) -> crate::transcode::TranscodeResult {
     use crate::transcode::Utf16ToUtf8;
     let words = utf16be_bytes_to_words(data);
     crate::transcode::utf16_to_utf8::OurUtf16ToUtf8::validating().convert(&words, dst)
@@ -134,6 +135,6 @@ mod tests {
         // lone high surrogate, big-endian
         let bad = [0xD8u8, 0x00];
         let mut dst = vec![0u8; 32];
-        assert_eq!(utf16be_to_utf8(&bad, &mut dst), None);
+        assert!(utf16be_to_utf8(&bad, &mut dst).is_err());
     }
 }

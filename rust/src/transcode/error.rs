@@ -1,0 +1,226 @@
+//! Rich transcoding results: error kinds and positions.
+//!
+//! The paper's open-source artifact (simdutf) reports failures through a
+//! `result { error_code, count }` pair so callers learn *where* and *why*
+//! a conversion failed. This module is the equivalent for this crate:
+//! every engine returns [`TranscodeResult`], and a failed conversion
+//! carries a [`TranscodeError`] with a simdutf-compatible [`ErrorKind`]
+//! and the position of the first offending code unit.
+//!
+//! ### Position convention
+//!
+//! `position` is an index into the *input* buffer, in input units (bytes
+//! for UTF-8 sources, 16-bit words for UTF-16 sources), and points at the
+//! **first unit of the first invalid sequence** — exactly
+//! `std::str::Utf8Error::valid_up_to()` for UTF-8 input. For
+//! [`ErrorKind::OutputBuffer`] it is the input position at which output
+//! space ran out (everything before it was transcoded).
+//!
+//! ### How the SIMD engines find the position
+//!
+//! The vectorized converters detect *that* a block is invalid via the
+//! Keiser–Lemire error vector, which says nothing about *where*. Position
+//! recovery is a scalar re-scan from the conversion frontier — a known
+//! character boundary at most ~144 bytes behind the failing block
+//! (validation runs only one block-plus-margin ahead of conversion) — so
+//! the cost is a bounded scalar scan on the error path only, the same
+//! approach simdutf takes in `convert_with_errors`.
+
+use crate::scalar;
+
+/// Why a conversion failed. The first six variants mirror simdutf's
+/// `error_code` classes (§3's six rules); the last two are ours.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorKind {
+    /// A byte with five or more header bits (`0xF8..=0xFF`) — rule 1.
+    HeaderBits,
+    /// A truncated sequence: a lead byte without enough continuation
+    /// bytes, or input ending mid-sequence (mid surrogate pair for
+    /// UTF-16) — rule 2.
+    TooShort,
+    /// A continuation byte where a lead byte was expected — rule 3.
+    TooLong,
+    /// An overlong encoding, including `0xC0`/`0xC1` leads — rule 4.
+    Overlong,
+    /// A code point in the surrogate gap `U+D800..=U+DFFF` (UTF-8), or
+    /// an unpaired/misordered surrogate (UTF-16) — rule 6.
+    Surrogate,
+    /// A code point above `U+10FFFF`, including `0xF5..=0xF7` leads —
+    /// rule 5.
+    TooLarge,
+    /// The output buffer is too small (see the module docs of
+    /// [`crate::transcode`] for the capacity contract).
+    OutputBuffer,
+    /// An engine-internal failure that is not an encoding error (e.g. an
+    /// accelerator execution error). Mirrors simdutf's `OTHER`.
+    Other,
+}
+
+impl ErrorKind {
+    /// Stable lower-snake name (shared with the Python harness, which
+    /// emits the same strings in its failure records).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::HeaderBits => "header_bits",
+            ErrorKind::TooShort => "too_short",
+            ErrorKind::TooLong => "too_long",
+            ErrorKind::Overlong => "overlong",
+            ErrorKind::Surrogate => "surrogate",
+            ErrorKind::TooLarge => "too_large",
+            ErrorKind::OutputBuffer => "output_buffer",
+            ErrorKind::Other => "other",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A failed conversion: what went wrong and where.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TranscodeError {
+    /// The error class (first error encountered).
+    pub kind: ErrorKind,
+    /// Input-unit index of the first unit of the offending sequence (see
+    /// the module docs for the exact convention).
+    pub position: usize,
+}
+
+impl TranscodeError {
+    pub const fn new(kind: ErrorKind, position: usize) -> TranscodeError {
+        TranscodeError { kind, position }
+    }
+
+    /// Output-space exhaustion at input position `position`.
+    pub const fn output_buffer(position: usize) -> TranscodeError {
+        TranscodeError { kind: ErrorKind::OutputBuffer, position }
+    }
+
+    /// Shift the position by `delta` input units (used when an error was
+    /// found in a sub-slice of a larger stream).
+    pub const fn offset(self, delta: usize) -> TranscodeError {
+        TranscodeError { kind: self.kind, position: self.position + delta }
+    }
+}
+
+impl std::fmt::Display for TranscodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at input position {}", self.kind, self.position)
+    }
+}
+
+impl std::error::Error for TranscodeError {}
+
+/// The result of a conversion: units written on success, or the first
+/// error with kind and position.
+pub type TranscodeResult<T = usize> = Result<T, TranscodeError>;
+
+/// Scalar reference scan: find the first UTF-8 error at or after `from`.
+///
+/// `from` must be a character boundary with a valid prefix (the engines
+/// pass their conversion frontier). Returns the canonical error — the
+/// same `(kind, position)` for every engine — or, defensively, a
+/// [`ErrorKind::TooShort`] at `src.len()` if no error is found (callers
+/// only invoke this after a validator has flagged one).
+pub fn classify_utf8_error(src: &[u8], from: usize) -> TranscodeError {
+    let mut p = from;
+    while p < src.len() {
+        match scalar::decode_utf8_char(&src[p..]) {
+            Ok((_, len)) => p += len,
+            Err(e) => return TranscodeError::new(e.kind, p),
+        }
+    }
+    TranscodeError::new(ErrorKind::TooShort, src.len())
+}
+
+/// Scalar reference scan: find the first UTF-16 error at or after `from`
+/// (a code-unit index on a character boundary with a valid prefix).
+pub fn classify_utf16_error(src: &[u16], from: usize) -> TranscodeError {
+    let mut p = from;
+    while p < src.len() {
+        match scalar::decode_utf16_char(&src[p..]) {
+            Ok((_, n)) => p += n,
+            Err(e) => return TranscodeError::new(e.kind, p),
+        }
+    }
+    TranscodeError::new(ErrorKind::TooShort, src.len())
+}
+
+/// Diagnose a whole buffer as UTF-8: `None` if valid, otherwise the
+/// first error. Convenience for validation-only callers (e.g. the CLI's
+/// `validate` subcommand) that want a position without transcoding.
+pub fn utf8_error(src: &[u8]) -> Option<TranscodeError> {
+    if crate::validate::validate_utf8(src) {
+        None
+    } else {
+        Some(classify_utf8_error(src, 0))
+    }
+}
+
+/// Diagnose a whole buffer as UTF-16: `None` if valid, otherwise the
+/// first error.
+pub fn utf16_error(src: &[u16]) -> Option<TranscodeError> {
+    if crate::validate::validate_utf16le(src) {
+        None
+    } else {
+        Some(classify_utf16_error(src, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_matches_std_position() {
+        let cases: &[&[u8]] = &[
+            &[0x80],                         // stray continuation
+            &[b'a', b'b', 0xFF, b'c'],       // header bits
+            &[b'a', 0xC2],                   // truncated at end
+            &[b'x', 0xC0, 0x80],             // overlong
+            &[b'x', 0xED, 0xA0, 0x80],       // surrogate
+            &[b'x', 0xF4, 0x90, 0x80, 0x80], // too large
+            &[0xE0, 0x80, 0x80],             // overlong 3-byte
+            "é漢".as_bytes(),                // valid — no error
+        ];
+        for src in cases {
+            match std::str::from_utf8(src) {
+                Ok(_) => assert_eq!(utf8_error(src), None, "{src:02x?}"),
+                Err(e) => {
+                    let err = utf8_error(src).expect("must report an error");
+                    assert_eq!(err.position, e.valid_up_to(), "{src:02x?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn classify_kinds() {
+        assert_eq!(classify_utf8_error(&[0xFF], 0).kind, ErrorKind::HeaderBits);
+        assert_eq!(classify_utf8_error(&[0x80], 0).kind, ErrorKind::TooLong);
+        assert_eq!(classify_utf8_error(&[0xC2], 0).kind, ErrorKind::TooShort);
+        assert_eq!(classify_utf8_error(&[0xC0, 0x80], 0).kind, ErrorKind::Overlong);
+        assert_eq!(classify_utf8_error(&[0xED, 0xA0, 0x80], 0).kind, ErrorKind::Surrogate);
+        assert_eq!(classify_utf8_error(&[0xF5, 0x80, 0x80, 0x80], 0).kind, ErrorKind::TooLarge);
+        assert_eq!(classify_utf8_error(&[0xF4, 0x90, 0x80, 0x80], 0).kind, ErrorKind::TooLarge);
+        assert_eq!(classify_utf8_error(&[0xE0, 0x9F, 0xBF], 0).kind, ErrorKind::Overlong);
+    }
+
+    #[test]
+    fn utf16_kinds_and_positions() {
+        assert_eq!(utf16_error(&[0x41, 0xDC00]), Some(TranscodeError::new(ErrorKind::Surrogate, 1)));
+        assert_eq!(utf16_error(&[0xD800, 0x41]), Some(TranscodeError::new(ErrorKind::Surrogate, 0)));
+        assert_eq!(utf16_error(&[0x41, 0xD800]), Some(TranscodeError::new(ErrorKind::TooShort, 1)));
+        assert_eq!(utf16_error(&[0xD83D, 0xDE42]), None);
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = TranscodeError::new(ErrorKind::Surrogate, 17);
+        assert_eq!(e.to_string(), "surrogate at input position 17");
+        assert_eq!(e.offset(3).position, 20);
+    }
+}

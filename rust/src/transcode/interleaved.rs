@@ -14,7 +14,10 @@
 //! slices — concurrently when a second thread is available.
 
 use crate::transcode::utf8_to_utf16::OurUtf8ToUtf16;
-use crate::transcode::{utf16_len_from_utf8, Utf8ToUtf16};
+use crate::transcode::{
+    classify_utf8_error, utf16_len_from_utf8, ErrorKind, TranscodeError, TranscodeResult,
+    Utf8ToUtf16,
+};
 
 /// Snap `pos` back to the nearest UTF-8 character boundary at or before
 /// it.
@@ -27,9 +30,12 @@ fn snap_to_boundary(src: &[u8], mut pos: usize) -> usize {
 
 /// Validating UTF-8 → UTF-16 over two interleaved halves.
 ///
-/// Returns the number of words written to `dst`, or `None` on invalid
-/// input. Output is bit-identical to the sequential engine (tested).
-pub fn utf8_to_utf16_interleaved(src: &[u8], dst: &mut [u16]) -> Option<usize> {
+/// Returns the number of words written to `dst`, or the first error.
+/// Output is bit-identical to the sequential engine (tested), and so is
+/// the reported error: when either half rejects, the error is
+/// re-derived by the canonical whole-input reference scan, so kind and
+/// position are independent of where the input happened to be split.
+pub fn utf8_to_utf16_interleaved(src: &[u8], dst: &mut [u16]) -> TranscodeResult {
     let engine = OurUtf8ToUtf16::validating();
     if src.len() < 4096 {
         // Not worth the pre-pass + thread overhead below ~4 KiB.
@@ -42,7 +48,7 @@ pub fn utf8_to_utf16_interleaved(src: &[u8], dst: &mut [u16]) -> Option<usize> {
     // is invalid the halves' validation rejects it anyway.
     let first_units = utf16_len_from_utf8(first);
     if first_units + 16 > dst.len() {
-        return None;
+        return Err(TranscodeError::output_buffer(0));
     }
     let (dst_a, dst_b) = dst.split_at_mut(first_units + 16);
 
@@ -51,16 +57,36 @@ pub fn utf8_to_utf16_interleaved(src: &[u8], dst: &mut [u16]) -> Option<usize> {
         let a = engine.convert(first, &mut dst_a[..]);
         (a, handle.join().expect("worker thread"))
     });
-    let n_a = n_a?;
-    let n_b = n_b?;
+    let (n_a, n_b) = match (n_a, n_b) {
+        (Ok(a), Ok(b)) => (a, b),
+        (a, b) => {
+            // An *encoding* error in either half is re-derived by the
+            // canonical whole-input reference scan (a half-local
+            // position could differ for pathological invalid input
+            // around the split point). Pure output exhaustion must NOT
+            // be re-classified — the input may be perfectly valid — so
+            // it propagates as OutputBuffer, with the second half's
+            // position shifted to whole-input coordinates.
+            let encoding_err =
+                |r: &TranscodeResult| matches!(r, Err(e) if e.kind != ErrorKind::OutputBuffer);
+            if encoding_err(&a) || encoding_err(&b) {
+                return Err(classify_utf8_error(src, 0));
+            }
+            return Err(match (a, b) {
+                (Err(e), _) => e,
+                (_, Err(e)) => e.offset(mid),
+                _ => unreachable!("at least one half failed"),
+            });
+        }
+    };
     if n_a != first_units {
         // Only possible on invalid input that slipped past the length
         // estimate; be conservative.
-        return None;
+        return Err(classify_utf8_error(src, 0));
     }
     // Close the 16-word slack gap between the halves.
     dst.copy_within(first_units + 16..first_units + 16 + n_b, first_units);
-    Some(n_a + n_b)
+    Ok(n_a + n_b)
 }
 
 #[cfg(test)]
@@ -107,9 +133,11 @@ mod tests {
         let mut bad = "x".repeat(10_000).into_bytes();
         bad[100] = 0xFF; // first half
         let mut dst = vec![0u16; utf16_capacity_for(bad.len()) + 16];
-        assert_eq!(utf8_to_utf16_interleaved(&bad, &mut dst), None);
+        let err = utf8_to_utf16_interleaved(&bad, &mut dst).expect_err("invalid");
+        assert_eq!(err.position, 100);
         let mut bad2 = "x".repeat(10_000).into_bytes();
         bad2[9000] = 0xFF; // second half
-        assert_eq!(utf8_to_utf16_interleaved(&bad2, &mut dst), None);
+        let err2 = utf8_to_utf16_interleaved(&bad2, &mut dst).expect_err("invalid");
+        assert_eq!(err2.position, 9000);
     }
 }

@@ -2,7 +2,16 @@
 //!
 //! Every transcoding engine in this crate — ours and all baselines —
 //! implements [`Utf8ToUtf16`] and/or [`Utf16ToUtf8`], so the benchmark
-//! harness, the coordinator and the tests can treat them uniformly.
+//! harness, the coordinator and the tests can treat them uniformly (see
+//! [`crate::engine::Registry`] for the canonical engine enumeration).
+//!
+//! ### Results and errors
+//!
+//! `convert` returns [`TranscodeResult`]: the number of output units
+//! written, or a [`TranscodeError`] carrying the error class
+//! ([`ErrorKind`]) and the input position of the first invalid sequence.
+//! See [`error`] for the exact position convention and how the SIMD
+//! engines recover positions with a bounded scalar re-scan.
 //!
 //! ### Buffer contract
 //!
@@ -12,13 +21,26 @@
 //! less (the standard SIMD idiom the paper's Figs. 2–4 rely on). The
 //! engines additionally bound every write, so even adversarial invalid
 //! input through a non-validating engine cannot write out of bounds —
-//! it yields garbage output and/or `None`, never memory unsafety.
+//! it yields garbage output and/or [`ErrorKind::OutputBuffer`], never
+//! memory unsafety.
+//!
+//! When transcoding chunk-at-a-time through [`streaming`], the contract
+//! applies **per push**: each `push(chunk, dst)` call needs `dst` sized
+//! by the capacity function for `chunk.len()` plus the carried pending
+//! units (≤ 3 bytes / ≤ 1 word) — see the streaming module docs.
 
 pub mod endian;
+pub mod error;
 pub mod interleaved;
+pub mod streaming;
 pub mod utf16_to_utf8;
 pub mod utf32;
 pub mod utf8_to_utf16;
+
+pub use error::{
+    classify_utf16_error, classify_utf8_error, utf16_error, utf8_error, ErrorKind,
+    TranscodeError, TranscodeResult,
+};
 
 /// Required UTF-16 output capacity (in words) to transcode `src_len`
 /// UTF-8 bytes: one word per input byte plus register slack.
@@ -43,9 +65,11 @@ pub trait Utf8ToUtf16: Send + Sync {
     fn validating(&self) -> bool;
 
     /// Transcode `src` into `dst` (little-endian word order), returning
-    /// the number of words written, or `None` if the engine validates and
-    /// the input is invalid (or `dst` is too small — see module docs).
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize>;
+    /// the number of words written. Fails with the first error's kind
+    /// and byte position if the engine validates and the input is
+    /// invalid, or with [`ErrorKind::OutputBuffer`] if `dst` is too
+    /// small (see module docs).
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult;
 
     /// Whether the engine supports inputs with 4-byte (supplemental
     /// plane) characters. Inoue et al. does not (§2) — the harness marks
@@ -55,11 +79,11 @@ pub trait Utf8ToUtf16: Send + Sync {
     }
 
     /// Convenience: transcode into a fresh, exactly-sized vector.
-    fn convert_to_vec(&self, src: &[u8]) -> Option<Vec<u16>> {
+    fn convert_to_vec(&self, src: &[u8]) -> TranscodeResult<Vec<u16>> {
         let mut dst = vec![0u16; utf16_capacity_for(src.len())];
         let n = self.convert(src, &mut dst)?;
         dst.truncate(n);
-        Some(dst)
+        Ok(dst)
     }
 }
 
@@ -69,14 +93,15 @@ pub trait Utf16ToUtf8: Send + Sync {
     fn validating(&self) -> bool;
 
     /// Transcode `src` (native word order) into `dst`, returning the
-    /// number of bytes written, or `None` on invalid input.
-    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize>;
+    /// number of bytes written, or the first error's kind and word
+    /// position.
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult;
 
-    fn convert_to_vec(&self, src: &[u16]) -> Option<Vec<u8>> {
+    fn convert_to_vec(&self, src: &[u16]) -> TranscodeResult<Vec<u8>> {
         let mut dst = vec![0u8; utf8_capacity_for(src.len())];
         let n = self.convert(src, &mut dst)?;
         dst.truncate(n);
-        Some(dst)
+        Ok(dst)
     }
 }
 
@@ -92,23 +117,36 @@ pub fn utf16_len_from_utf8(src: &[u8]) -> usize {
     n
 }
 
-/// Number of UTF-8 bytes needed to represent valid UTF-16 input.
+/// Number of UTF-8 bytes needed to represent UTF-16 input.
+///
+/// Exact for valid input (a surrogate *pair* contributes 4 bytes).
+/// For malformed input the convention is: every **unpaired** surrogate —
+/// a lone low surrogate, or a high surrogate not followed by a low one —
+/// counts 3 bytes, the width of both U+FFFD (replacement) and the raw
+/// WTF-8 encoding the non-validating engine emits. This keeps the
+/// estimate an upper bound for every engine in the crate.
 pub fn utf8_len_from_utf16(src: &[u16]) -> usize {
     let mut n = 0usize;
-    for &w in src {
+    let mut i = 0usize;
+    while i < src.len() {
+        let w = src[i];
         n += if w < 0x80 {
             1
         } else if w < 0x800 {
             2
         } else if (0xD800..0xDC00).contains(&w) {
-            // high surrogate: the pair contributes 4 bytes; count them
-            // here and let the low surrogate contribute 0.
-            4
-        } else if (0xDC00..0xE000).contains(&w) {
-            0
+            if i + 1 < src.len() && (0xDC00..0xE000).contains(&src[i + 1]) {
+                // Properly paired: the pair is one 4-byte character.
+                i += 1;
+                4
+            } else {
+                3 // unpaired high surrogate
+            }
         } else {
+            // BMP character, or an unpaired low surrogate (3 either way).
             3
         };
+        i += 1;
     }
     n
 }
@@ -128,5 +166,24 @@ mod tests {
             let units: Vec<u16> = text.encode_utf16().collect();
             assert_eq!(utf8_len_from_utf16(&units), text.len(), "{text}");
         }
+    }
+
+    #[test]
+    fn utf8_len_counts_unpaired_surrogates_as_three() {
+        // Lone low surrogate: 3 (was 0 before the fix).
+        assert_eq!(utf8_len_from_utf16(&[0xDC00]), 3);
+        // Lone high surrogate: 3 (was 4 before the fix).
+        assert_eq!(utf8_len_from_utf16(&[0xD800]), 3);
+        assert_eq!(utf8_len_from_utf16(&[0xD800, 0x41]), 4);
+        // A proper pair is still 4.
+        assert_eq!(utf8_len_from_utf16(&[0xD83D, 0xDE42]), 4);
+        // Reversed pair: two unpaired surrogates.
+        assert_eq!(utf8_len_from_utf16(&[0xDC00, 0xD800]), 6);
+        // Matches the WTF-8 output size of the non-validating engine.
+        let bad = [0x41u16, 0xD800, 0x42, 0xDC00, 0xD83D, 0xDE42];
+        let engine = utf16_to_utf8::OurUtf16ToUtf8::non_validating();
+        let mut dst = vec![0u8; utf8_capacity_for(bad.len())];
+        let n = Utf16ToUtf8::convert(&engine, &bad, &mut dst).expect("total on garbage");
+        assert_eq!(n, utf8_len_from_utf16(&bad));
     }
 }

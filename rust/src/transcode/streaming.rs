@@ -1,0 +1,404 @@
+//! Chunk-at-a-time transcoding with arbitrary chunk boundaries.
+//!
+//! A network or file stream hands the transcoder chunks that do not
+//! respect character boundaries: a UTF-8 sequence (up to 4 bytes) or a
+//! UTF-16 surrogate pair can straddle any split. The streaming
+//! transcoders here carry that partial character across `push` calls —
+//! at most **3 pending bytes** for UTF-8 input (a 4-byte lead plus two
+//! continuations) and at most **1 pending high surrogate** for UTF-16
+//! input — and otherwise hand whole character runs to the underlying
+//! vectorized engine, so the per-byte cost is the engine's, not a
+//! scalar re-implementation's.
+//!
+//! ### Equivalence guarantee
+//!
+//! For **validating** engines (the default), any split of an input into
+//! chunks yields exactly the one-shot `convert` of the concatenation:
+//! the concatenated `push` outputs match, and so do failures — the
+//! reported [`TranscodeError`] carries the same kind and the same
+//! **absolute** position (in input units since the start of the
+//! stream). `tests/streaming.rs` asserts this at every split point.
+//!
+//! With a *non-validating* engine via `with_engine`, boundary-straddling
+//! characters still go through the strict scalar decoder, so garbage at
+//! a chunk boundary can be rejected where the one-shot engine would
+//! have converted it best-effort; valid input is unaffected.
+//!
+//! ### Buffer contract, per push
+//!
+//! Each `push(chunk, dst)` needs `dst` sized for that chunk plus the
+//! carried units: [`crate::transcode::utf16_capacity_for`]`(chunk.len()
+//! + 3)` words for UTF-8 input, [`crate::transcode::utf8_capacity_for`]
+//! `(chunk.len() + 1)` bytes for UTF-16 input. `finish` writes nothing
+//! (a pending partial character at end-of-stream is an error, not
+//! output).
+//!
+//! After an error the transcoder is poisoned: further pushes fail with
+//! [`ErrorKind::Other`].
+
+use crate::scalar;
+use crate::transcode::utf16_to_utf8::OurUtf16ToUtf8;
+use crate::transcode::utf8_to_utf16::OurUtf8ToUtf16;
+use crate::transcode::{ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16};
+
+/// What one `push` did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FeedResult {
+    /// Output units written to `dst` by this push.
+    pub written: usize,
+    /// Input units carried over to the next push (0..=3 bytes for UTF-8,
+    /// 0..=1 words for UTF-16).
+    pub pending: usize,
+}
+
+/// Declared sequence length from a UTF-8 lead byte. Bytes that cannot
+/// start a sequence (continuations, `0xC0`/`0xC1`, `0xF5..=0xFF`) report
+/// 1 so they are never held back — the engine flags them immediately,
+/// exactly where the one-shot conversion would.
+#[inline]
+fn utf8_seq_len(lead: u8) -> usize {
+    if lead < 0xC2 {
+        1
+    } else if lead < 0xE0 {
+        2
+    } else if lead < 0xF0 {
+        3
+    } else if lead < 0xF5 {
+        4
+    } else {
+        1
+    }
+}
+
+/// How many trailing bytes of `tail` start a sequence that cannot be
+/// complete within `tail` (and must therefore wait for the next chunk).
+fn utf8_holdback(tail: &[u8]) -> usize {
+    let n = tail.len();
+    for back in 1..=n.min(3) {
+        let b = tail[n - back];
+        if (b & 0xC0) != 0x80 {
+            // First non-continuation byte from the end: a lead (or a
+            // standalone/invalid byte, declared length 1).
+            return if utf8_seq_len(b) > back { back } else { 0 };
+        }
+    }
+    // Three straight continuation bytes at the end: no lead within
+    // holdback range, so nothing can be completed by the next chunk —
+    // convert now (and let a validating engine report the error).
+    0
+}
+
+/// Streaming UTF-8 → UTF-16 over any [`Utf8ToUtf16`] engine.
+pub struct StreamingUtf8ToUtf16<E: Utf8ToUtf16 = OurUtf8ToUtf16> {
+    engine: E,
+    pending: [u8; 4],
+    pending_len: usize,
+    /// Total input bytes accepted by previous pushes (absolute stream
+    /// offset of the next incoming byte).
+    received: usize,
+    failed: bool,
+}
+
+impl StreamingUtf8ToUtf16<OurUtf8ToUtf16> {
+    /// Stream through the paper's validating SIMD engine.
+    pub fn new() -> Self {
+        Self::with_engine(OurUtf8ToUtf16::validating())
+    }
+}
+
+impl Default for StreamingUtf8ToUtf16<OurUtf8ToUtf16> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: Utf8ToUtf16> StreamingUtf8ToUtf16<E> {
+    /// Stream through an arbitrary engine (e.g. a baseline, for A/B
+    /// tests). Characters that straddle a chunk boundary go through the
+    /// strict scalar decoder; everything else through `engine`.
+    pub fn with_engine(engine: E) -> Self {
+        StreamingUtf8ToUtf16 { engine, pending: [0; 4], pending_len: 0, received: 0, failed: false }
+    }
+
+    /// Input bytes currently carried over (0..=3).
+    pub fn pending(&self) -> usize {
+        self.pending_len
+    }
+
+    /// Total input bytes accepted so far.
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// Feed one chunk; writes converted UTF-16 words into `dst` (sized
+    /// per the module-level buffer contract) and carries a trailing
+    /// partial character to the next push.
+    pub fn push(&mut self, chunk: &[u8], dst: &mut [u16]) -> Result<FeedResult, TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        let base = self.received; // absolute offset of chunk[0]
+        self.received += chunk.len();
+        let mut written = 0usize;
+        let mut offset = 0usize;
+
+        // Complete a carried partial character with the chunk's first
+        // bytes, through the strict scalar decoder.
+        if self.pending_len > 0 {
+            let start_abs = base - self.pending_len;
+            let need = utf8_seq_len(self.pending[0]);
+            while self.pending_len < need && offset < chunk.len() {
+                self.pending[self.pending_len] = chunk[offset];
+                self.pending_len += 1;
+                offset += 1;
+            }
+            if self.pending_len < need {
+                // Chunk exhausted before the sequence completed.
+                return Ok(FeedResult { written: 0, pending: self.pending_len });
+            }
+            match scalar::decode_utf8_char(&self.pending[..need]) {
+                Ok((cp, _)) => {
+                    if dst.len() < 2 {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(start_abs));
+                    }
+                    written += scalar::encode_utf16_char(cp, dst);
+                    self.pending_len = 0;
+                }
+                Err(e) => {
+                    self.failed = true;
+                    return Err(TranscodeError::new(e.kind, start_abs));
+                }
+            }
+        }
+
+        // Hold back a trailing sequence that cannot complete in this
+        // chunk, then bulk-convert the rest through the engine.
+        let body = &chunk[offset..];
+        let hold = utf8_holdback(body);
+        let end = body.len() - hold;
+        match self.engine.convert(&body[..end], &mut dst[written..]) {
+            Ok(n) => written += n,
+            Err(e) => {
+                self.failed = true;
+                return Err(e.offset(base + offset));
+            }
+        }
+        self.pending[..hold].copy_from_slice(&body[end..]);
+        self.pending_len = hold;
+        Ok(FeedResult { written, pending: hold })
+    }
+
+    /// End of stream: fails with [`ErrorKind::TooShort`] at the pending
+    /// character's absolute position if the stream ended mid-sequence.
+    pub fn finish(&mut self) -> Result<(), TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        if self.pending_len > 0 {
+            let pos = self.received - self.pending_len;
+            self.pending_len = 0;
+            self.failed = true;
+            return Err(TranscodeError::new(ErrorKind::TooShort, pos));
+        }
+        Ok(())
+    }
+}
+
+/// Streaming UTF-16 → UTF-8 over any [`Utf16ToUtf8`] engine.
+pub struct StreamingUtf16ToUtf8<E: Utf16ToUtf8 = OurUtf16ToUtf8> {
+    engine: E,
+    /// A high surrogate waiting for its low half.
+    pending_high: Option<u16>,
+    received: usize,
+    failed: bool,
+}
+
+impl StreamingUtf16ToUtf8<OurUtf16ToUtf8> {
+    /// Stream through the paper's validating SIMD engine.
+    pub fn new() -> Self {
+        Self::with_engine(OurUtf16ToUtf8::validating())
+    }
+}
+
+impl Default for StreamingUtf16ToUtf8<OurUtf16ToUtf8> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: Utf16ToUtf8> StreamingUtf16ToUtf8<E> {
+    pub fn with_engine(engine: E) -> Self {
+        StreamingUtf16ToUtf8 { engine, pending_high: None, received: 0, failed: false }
+    }
+
+    /// Input words currently carried over (0 or 1).
+    pub fn pending(&self) -> usize {
+        usize::from(self.pending_high.is_some())
+    }
+
+    /// Total input words accepted so far.
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// Feed one chunk of native-order UTF-16 words; `dst` sized per the
+    /// module-level buffer contract.
+    pub fn push(&mut self, chunk: &[u16], dst: &mut [u8]) -> Result<FeedResult, TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        let base = self.received;
+        self.received += chunk.len();
+        let mut written = 0usize;
+        let mut offset = 0usize;
+
+        if let Some(high) = self.pending_high {
+            if chunk.is_empty() {
+                return Ok(FeedResult { written: 0, pending: 1 });
+            }
+            let pair = [high, chunk[0]];
+            match scalar::decode_utf16_char(&pair) {
+                Ok((cp, _)) => {
+                    if dst.len() < 4 {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(base - 1));
+                    }
+                    written += scalar::encode_utf8_char(cp, dst);
+                    offset = 1;
+                    self.pending_high = None;
+                }
+                Err(e) => {
+                    // The carried high surrogate is unpaired.
+                    self.failed = true;
+                    return Err(TranscodeError::new(e.kind, base - 1));
+                }
+            }
+        }
+
+        // A single trailing high surrogate may still be completed by the
+        // next chunk: hold it. A trailing *run* of two or more is
+        // decided already — the first high of the run is followed by
+        // another high, so it is unpaired no matter what comes next.
+        let body = &chunk[offset..];
+        let run = body
+            .iter()
+            .rev()
+            .take_while(|w| (0xD800..0xDC00).contains(*w))
+            .count();
+        let hold = usize::from(run == 1);
+        let end = body.len() - run.max(hold);
+        match self.engine.convert(&body[..end], &mut dst[written..]) {
+            Ok(n) => written += n,
+            Err(e) => {
+                self.failed = true;
+                return Err(e.offset(base + offset));
+            }
+        }
+        if run >= 2 {
+            self.failed = true;
+            return Err(TranscodeError::new(ErrorKind::Surrogate, base + offset + end));
+        }
+        if hold == 1 {
+            self.pending_high = Some(body[end]);
+        }
+        Ok(FeedResult { written, pending: hold })
+    }
+
+    /// End of stream: fails with [`ErrorKind::TooShort`] if a high
+    /// surrogate is still waiting for its low half.
+    pub fn finish(&mut self) -> Result<(), TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        if self.pending_high.take().is_some() {
+            self.failed = true;
+            return Err(TranscodeError::new(ErrorKind::TooShort, self.received - 1));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+    #[test]
+    fn single_bytes_roundtrip() {
+        // Degenerate chunking: one byte per push.
+        let text = "a é 漢 🙂 end";
+        let mut s = StreamingUtf8ToUtf16::new();
+        let mut out = Vec::new();
+        let mut dst = vec![0u16; utf16_capacity_for(4)];
+        for &b in text.as_bytes() {
+            let r = s.push(&[b], &mut dst).expect("valid");
+            out.extend_from_slice(&dst[..r.written]);
+        }
+        s.finish().expect("complete");
+        assert_eq!(out, text.encode_utf16().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pending_is_bounded() {
+        let mut s = StreamingUtf8ToUtf16::new();
+        let mut dst = vec![0u16; utf16_capacity_for(4)];
+        // Push a 4-byte emoji lead byte by byte: pending grows to 3,
+        // then the final byte flushes it.
+        let emoji = "🙂".as_bytes();
+        for (i, &b) in emoji.iter().enumerate() {
+            let r = s.push(&[b], &mut dst).unwrap();
+            if i < 3 {
+                assert_eq!(r.pending, i + 1);
+                assert_eq!(r.written, 0);
+            } else {
+                assert_eq!(r.pending, 0);
+                assert_eq!(r.written, 2); // surrogate pair
+            }
+        }
+        s.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_stream_errors_at_lead() {
+        let mut s = StreamingUtf8ToUtf16::new();
+        let mut dst = vec![0u16; utf16_capacity_for(8)];
+        s.push(b"abc\xE2\x82", &mut dst).expect("held back");
+        let err = s.finish().expect_err("dangling sequence");
+        assert_eq!(err.kind, ErrorKind::TooShort);
+        assert_eq!(err.position, 3);
+    }
+
+    #[test]
+    fn utf16_pair_across_chunks() {
+        let units: Vec<u16> = "x🙂y".encode_utf16().collect(); // [x, hi, lo, y]
+        let mut s = StreamingUtf16ToUtf8::new();
+        let mut out = Vec::new();
+        let mut dst = vec![0u8; utf8_capacity_for(4)];
+        for w in &units {
+            let r = s.push(std::slice::from_ref(w), &mut dst).expect("valid");
+            out.extend_from_slice(&dst[..r.written]);
+        }
+        s.finish().expect("complete");
+        assert_eq!(out, "x🙂y".as_bytes());
+    }
+
+    #[test]
+    fn utf16_lone_high_at_end() {
+        let mut s = StreamingUtf16ToUtf8::new();
+        let mut dst = vec![0u8; utf8_capacity_for(4)];
+        s.push(&[0x41, 0xD83D], &mut dst).expect("high held back");
+        let err = s.finish().expect_err("unpaired high");
+        assert_eq!(err.kind, ErrorKind::TooShort);
+        assert_eq!(err.position, 1);
+    }
+
+    #[test]
+    fn poisoned_after_error() {
+        let mut s = StreamingUtf8ToUtf16::new();
+        let mut dst = vec![0u16; utf16_capacity_for(8)];
+        assert!(s.push(b"\xFFabc", &mut dst).is_err());
+        let again = s.push(b"abc", &mut dst).expect_err("poisoned");
+        assert_eq!(again.kind, ErrorKind::Other);
+    }
+}

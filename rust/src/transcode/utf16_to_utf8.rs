@@ -19,7 +19,7 @@ use crate::counters::Counters;
 use crate::scalar;
 use crate::simd::{U16x8, U8x16};
 use crate::tables::utf16_to_utf8::{ONE_TWO, ONE_TWO_THREE};
-use crate::transcode::Utf16ToUtf8;
+use crate::transcode::{TranscodeError, TranscodeResult, Utf16ToUtf8};
 
 /// The paper's UTF-16 → UTF-8 transcoder ("ours" in Tables 9–10).
 ///
@@ -53,7 +53,7 @@ impl Utf16ToUtf8 for OurUtf16ToUtf8 {
         self.validate
     }
 
-    fn convert(&self, src: &[u16], dst: &mut [u8]) -> Option<usize> {
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
         convert_impl::<false>(src, dst, self.validate, &mut Counters::disabled())
     }
 }
@@ -64,7 +64,7 @@ pub fn convert_counted(
     dst: &mut [u8],
     validate: bool,
     counters: &mut Counters,
-) -> Option<usize> {
+) -> TranscodeResult {
     convert_impl::<true>(src, dst, validate, counters)
 }
 
@@ -175,7 +175,7 @@ fn convert_impl<const COUNT: bool>(
     dst: &mut [u8],
     validate: bool,
     counters: &mut Counters,
-) -> Option<usize> {
+) -> TranscodeResult {
     let mut p = 0usize;
     let mut q = 0usize;
 
@@ -183,7 +183,7 @@ fn convert_impl<const COUNT: bool>(
         // Each register writes at most 24 bytes (+16 slack for full
         // register stores).
         if q + 32 > dst.len() {
-            return None;
+            return Err(TranscodeError::output_buffer(p));
         }
         let v = U16x8::load(&src[p..]);
         let acc = v.reduce_or();
@@ -231,7 +231,7 @@ fn convert_impl<const COUNT: bool>(
                     p += n;
                     q += scalar::encode_utf8_char(cp, &mut dst[q..]);
                 }
-                Err(_) => {
+                Err(e) => {
                     if !validate {
                         // Garbage-tolerant: emit U+FFFD-free best effort —
                         // encode the lone surrogate as 3 raw bytes (WTF-8
@@ -240,7 +240,10 @@ fn convert_impl<const COUNT: bool>(
                         q += scalar::encode_utf8_char_wtf8(w, &mut dst[q..]);
                         p += 1;
                     } else {
-                        return None;
+                        // The scalar path decodes exactly at the failing
+                        // word: position needs no re-scan here (§5 — the
+                        // only place UTF-16 validation ever happens).
+                        return Err(TranscodeError::new(e.kind, p));
                     }
                 }
             }
@@ -250,25 +253,25 @@ fn convert_impl<const COUNT: bool>(
     // Scalar tail (fewer than 8 words).
     while p < src.len() {
         if q + 4 > dst.len() {
-            return None;
+            return Err(TranscodeError::output_buffer(p));
         }
         match scalar::decode_utf16_char(&src[p..]) {
             Ok((cp, n)) => {
                 p += n;
                 q += scalar::encode_utf8_char(cp, &mut dst[q..]);
             }
-            Err(_) => {
+            Err(e) => {
                 if !validate {
                     let w = src[p] as u32;
                     q += scalar::encode_utf8_char_wtf8(w, &mut dst[q..]);
                     p += 1;
                 } else {
-                    return None;
+                    return Err(TranscodeError::new(e.kind, p));
                 }
             }
         }
     }
-    Some(q)
+    Ok(q)
 }
 
 #[cfg(test)]
@@ -338,7 +341,7 @@ mod tests {
             vec![0xDC00, 0xD800], // reversed pair
         ] {
             let mut dst = vec![0u8; utf8_capacity_for(bad.len())];
-            assert_eq!(engine.convert(&bad, &mut dst), None);
+            assert!(engine.convert(&bad, &mut dst).is_err());
         }
     }
 

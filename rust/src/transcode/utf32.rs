@@ -8,6 +8,19 @@
 //! as Algorithm 4.
 
 use crate::scalar;
+use crate::transcode::{ErrorKind, TranscodeError, TranscodeResult};
+
+/// First invalid UTF-32 value at or after `from`, if any.
+fn utf32_error(input: &[u32], from: usize) -> Option<TranscodeError> {
+    input[from..].iter().position(|&c| c > 0x10FFFF || (c & 0xFFFF_F800) == 0xD800).map(|i| {
+        let kind = if input[from + i] > 0x10FFFF {
+            ErrorKind::TooLarge
+        } else {
+            ErrorKind::Surrogate
+        };
+        TranscodeError::new(kind, from + i)
+    })
+}
 
 /// Validate a UTF-32 buffer: every value must be a Unicode scalar value
 /// (≤ U+10FFFF and outside the surrogate gap).
@@ -20,15 +33,16 @@ pub fn validate_utf32(input: &[u32]) -> bool {
     !bad
 }
 
-/// UTF-8 → UTF-32, validating. Returns code points written.
-pub fn utf8_to_utf32(src: &[u8], dst: &mut [u32]) -> Option<usize> {
+/// UTF-8 → UTF-32, validating. Returns code points written, or the
+/// first error (kind + byte position).
+pub fn utf8_to_utf32(src: &[u8], dst: &mut [u32]) -> TranscodeResult {
     let mut p = 0usize;
     let mut q = 0usize;
     // ASCII fast path in 16-byte strides, scalar strict decode otherwise.
     while p < src.len() {
         if p + 16 <= src.len() && crate::simd::U8x16::load(&src[p..]).is_ascii() {
             if q + 16 > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(p));
             }
             for i in 0..16 {
                 dst[q + i] = src[p + i] as u32;
@@ -37,63 +51,66 @@ pub fn utf8_to_utf32(src: &[u8], dst: &mut [u32]) -> Option<usize> {
             q += 16;
             continue;
         }
-        let (cp, len) = scalar::decode_utf8_char(&src[p..]).ok()?;
+        let (cp, len) =
+            scalar::decode_utf8_char(&src[p..]).map_err(|e| TranscodeError::new(e.kind, p))?;
         if q >= dst.len() {
-            return None;
+            return Err(TranscodeError::output_buffer(p));
         }
         dst[q] = cp;
         q += 1;
         p += len;
     }
-    Some(q)
+    Ok(q)
 }
 
-/// UTF-32 → UTF-8, validating. Returns bytes written.
-/// `dst` needs up to 4 bytes per code point.
-pub fn utf32_to_utf8(src: &[u32], dst: &mut [u8]) -> Option<usize> {
-    if !validate_utf32(src) {
-        return None;
+/// UTF-32 → UTF-8, validating. Returns bytes written, or the first
+/// error. `dst` needs up to 4 bytes per code point.
+pub fn utf32_to_utf8(src: &[u32], dst: &mut [u8]) -> TranscodeResult {
+    if let Some(err) = utf32_error(src, 0) {
+        return Err(err);
     }
     let mut q = 0usize;
-    for &cp in src {
+    for (p, &cp) in src.iter().enumerate() {
         if q + 4 > dst.len() {
-            return None;
+            return Err(TranscodeError::output_buffer(p));
         }
         q += scalar::encode_utf8_char(cp, &mut dst[q..]);
     }
-    Some(q)
+    Ok(q)
 }
 
-/// UTF-16 → UTF-32, validating. Returns code points written.
-pub fn utf16_to_utf32(src: &[u16], dst: &mut [u32]) -> Option<usize> {
+/// UTF-16 → UTF-32, validating. Returns code points written, or the
+/// first error (kind + word position).
+pub fn utf16_to_utf32(src: &[u16], dst: &mut [u32]) -> TranscodeResult {
     let mut p = 0usize;
     let mut q = 0usize;
     while p < src.len() {
-        let (cp, n) = scalar::decode_utf16_char(&src[p..]).ok()?;
+        let (cp, n) =
+            scalar::decode_utf16_char(&src[p..]).map_err(|e| TranscodeError::new(e.kind, p))?;
         if q >= dst.len() {
-            return None;
+            return Err(TranscodeError::output_buffer(p));
         }
         dst[q] = cp;
         q += 1;
         p += n;
     }
-    Some(q)
+    Ok(q)
 }
 
-/// UTF-32 → UTF-16, validating. Returns words written.
-/// `dst` needs up to 2 words per code point.
-pub fn utf32_to_utf16(src: &[u32], dst: &mut [u16]) -> Option<usize> {
-    if !validate_utf32(src) {
-        return None;
+/// UTF-32 → UTF-16, validating. Returns words written, or the first
+/// error. `dst` needs up to 2 words per code point.
+pub fn utf32_to_utf16(src: &[u32], dst: &mut [u16]) -> TranscodeResult {
+    if let Some(err) = utf32_error(src, 0) {
+        return Err(err);
     }
     let mut q = 0usize;
-    for &cp in src {
+    for (p, &cp) in src.iter().enumerate() {
         if q + 2 > dst.len() {
-            return None;
+            return Err(TranscodeError::output_buffer(p));
         }
         q += scalar::encode_utf16_char(cp, &mut dst[q..]);
     }
-    Some(q)
+    Ok(q)
 }
 
 #[cfg(test)]
@@ -141,14 +158,18 @@ mod tests {
     }
 
     #[test]
-    fn invalid_inputs_rejected() {
+    fn invalid_inputs_rejected_with_kind_and_position() {
         let mut dst32 = vec![0u32; 32];
-        assert_eq!(utf8_to_utf32(&[0xC0, 0x80], &mut dst32), None);
-        assert_eq!(utf16_to_utf32(&[0xD800], &mut dst32), None);
+        let err = utf8_to_utf32(&[0x41, 0xC0, 0x80], &mut dst32).unwrap_err();
+        assert_eq!((err.kind, err.position), (ErrorKind::Overlong, 1));
+        let err = utf16_to_utf32(&[0x41, 0xD800], &mut dst32).unwrap_err();
+        assert_eq!((err.kind, err.position), (ErrorKind::TooShort, 1));
         let mut dst8 = vec![0u8; 32];
-        assert_eq!(utf32_to_utf8(&[0xD800], &mut dst8), None);
+        let err = utf32_to_utf8(&[0x41, 0xD800], &mut dst8).unwrap_err();
+        assert_eq!((err.kind, err.position), (ErrorKind::Surrogate, 1));
         let mut dst16 = vec![0u16; 32];
-        assert_eq!(utf32_to_utf16(&[0x110000], &mut dst16), None);
+        let err = utf32_to_utf16(&[0x41, 0x110000], &mut dst16).unwrap_err();
+        assert_eq!((err.kind, err.position), (ErrorKind::TooLarge, 1));
     }
 
     #[test]

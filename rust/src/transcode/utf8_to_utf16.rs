@@ -24,7 +24,7 @@ use crate::counters::Counters;
 use crate::scalar;
 use crate::simd::{is_ascii_block, not_continuation_mask64, U16x8, U8x16};
 use crate::tables::utf8_to_utf16::{CASE2_START, CASE3_START, TABLES};
-use crate::transcode::Utf8ToUtf16;
+use crate::transcode::{classify_utf8_error, TranscodeError, TranscodeResult, Utf8ToUtf16};
 use crate::validate::Utf8Validator;
 
 /// The paper's UTF-8 → UTF-16 transcoder ("ours" in Tables 5–8).
@@ -54,7 +54,7 @@ impl Utf8ToUtf16 for OurUtf8ToUtf16 {
         self.validate
     }
 
-    fn convert(&self, src: &[u8], dst: &mut [u16]) -> Option<usize> {
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         convert_impl::<false>(src, dst, self.validate, &mut Counters::disabled())
     }
 }
@@ -65,7 +65,7 @@ pub fn convert_counted(
     dst: &mut [u16],
     validate: bool,
     counters: &mut Counters,
-) -> Option<usize> {
+) -> TranscodeResult {
     convert_impl::<true>(src, dst, validate, counters)
 }
 
@@ -250,12 +250,20 @@ fn compose_case3(perm: U8x16, dst: &mut [u16]) -> usize {
 /// `COUNT = false` compiles the instrumentation out of the hot loop
 /// entirely (the uninstrumented and counted entry points are separate
 /// monomorphizations).
+///
+/// Error-position recovery: in validating mode, validation always runs
+/// *ahead* of conversion and every block is checked before conversion
+/// touches it, so at the moment an error is flagged the conversion
+/// frontier `p` is a character boundary with a fully valid prefix and
+/// the error lies at most one block-plus-margin past `p`. A scalar
+/// re-scan from `p` (simdutf's `convert_with_errors` approach) then
+/// yields the exact kind and position at bounded cost.
 fn convert_impl<const COUNT: bool>(
     src: &[u8],
     dst: &mut [u16],
     validate: bool,
     counters: &mut Counters,
-) -> Option<usize> {
+) -> TranscodeResult {
     let tables = &*TABLES;
     let mut validator = Utf8Validator::new();
     let mut v_pos = 0usize; // validation frontier (multiple of 64)
@@ -268,7 +276,7 @@ fn convert_impl<const COUNT: bool>(
         let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
         if is_ascii_block(block) {
             if q + 64 > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(p));
             }
             if validate {
                 if v_pos == p {
@@ -290,7 +298,7 @@ fn convert_impl<const COUNT: bool>(
                     }
                 }
                 if validator.has_error() {
-                    return None;
+                    return Err(classify_utf8_error(src, p));
                 }
             }
             widen64(block, &mut dst[q..]);
@@ -307,7 +315,7 @@ fn convert_impl<const COUNT: bool>(
                 if COUNT { counters.validated_blocks += 1; }
             }
             if validator.has_error() {
-                return None;
+                return Err(classify_utf8_error(src, p));
             }
         }
 
@@ -319,7 +327,7 @@ fn convert_impl<const COUNT: bool>(
         let mut off = 0usize;
         while off < 52 {
             if q + 16 > dst.len() {
-                return None;
+                return Err(TranscodeError::output_buffer(p + off));
             }
             let w = &src[p + off..];
             let z16 = ((e >> off) & 0xFFFF) as u16;
@@ -433,21 +441,21 @@ fn convert_impl<const COUNT: bool>(
     if validate {
         validator.push_tail(&src[v_pos..]);
         if !validator.finish() {
-            return None;
+            // The error (or dangling incomplete sequence) is at or after
+            // the conversion frontier — unless the validation frontier
+            // stalled behind conversion near end-of-input (it cannot
+            // push a partial 64-byte block), in which case conversion
+            // may have consumed not-yet-validated bytes and the re-scan
+            // must start from the beginning to stay exact.
+            let from = if v_pos >= p { p } else { 0 };
+            return Err(classify_utf8_error(src, from));
         }
-        // Bytes [p..] are now known valid; strict scalar still guards
-        // capacity via encode.
-        if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
-            return None;
-        }
-        q += scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
-    } else {
-        if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
-            return None;
-        }
-        q += scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
     }
-    Some(q)
+    if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
+        return Err(TranscodeError::output_buffer(p));
+    }
+    q += scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
+    Ok(q)
 }
 
 #[cfg(test)]
@@ -537,7 +545,10 @@ mod tests {
             },
         ] {
             let mut dst = vec![0u16; utf16_capacity_for(bad.len())];
-            assert_eq!(engine.convert(&bad, &mut dst), None, "{:02x?}…", &bad[..8]);
+            let err = engine.convert(&bad, &mut dst).expect_err("invalid input");
+            // The reported position must match std's first-error offset.
+            let expected = std::str::from_utf8(&bad).expect_err("std agrees").valid_up_to();
+            assert_eq!(err.position, expected, "{:02x?}…", &bad[..8]);
         }
     }
 

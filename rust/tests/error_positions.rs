@@ -1,0 +1,231 @@
+//! Error-reporting properties of the rich result API.
+//!
+//! Invariants:
+//! 1. ∀ corrupted inputs: every *validating* UTF-8→UTF-16 engine reports
+//!    the error position `std::str::from_utf8` reports (`valid_up_to`),
+//!    and all engines agree on the kind.
+//! 2. ∀ corrupted UTF-16 inputs: every UTF-16→UTF-8 engine reports the
+//!    position of the first unpaired surrogate found by an independent
+//!    `char::decode_utf16`-based scan.
+//! 3. Truncating valid text mid-sequence yields `TooShort` at the cut
+//!    character's start.
+//! 4. Undersized output buffers yield `OutputBuffer`, not panics.
+
+use simdutf_rs::corpus::SplitMix64;
+use simdutf_rs::prelude::*;
+use simdutf_rs::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+/// Independent UTF-16 oracle: position of the first invalid word, via
+/// the standard library's decoder (one `Err` per unpaired surrogate).
+fn std_utf16_error_pos(units: &[u16]) -> Option<usize> {
+    let mut pos = 0usize;
+    for item in char::decode_utf16(units.iter().copied()) {
+        match item {
+            Ok(c) => pos += c.len_utf16(),
+            Err(_) => return Some(pos),
+        }
+    }
+    None
+}
+
+fn validating_utf8_engines() -> Vec<&'static dyn Utf8ToUtf16> {
+    Registry::global()
+        .all_utf8()
+        .into_iter()
+        .filter(|e| e.validating())
+        .collect()
+}
+
+#[test]
+fn corrupted_corpus_positions_match_std() {
+    // Corrupt a real multi-language corpus at many positions, including
+    // deep positions that exercise the SIMD engines' block loops and
+    // the scalar re-scan from the conversion frontier.
+    let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
+    let base = corpus.utf8_prefix(8 * 1024).to_vec();
+    let engines = validating_utf8_engines();
+    for (i, &bad_byte) in [0xFFu8, 0x80, 0xC0, 0xED, 0xF5].iter().enumerate() {
+        for pos in [0usize, 1, 17, 63, 64, 65, 127, 1000, 4096, 8000] {
+            let mut data = base.clone();
+            data[pos + i] = bad_byte;
+            let Err(std_err) = std::str::from_utf8(&data) else {
+                continue; // corruption happened to stay valid UTF-8
+            };
+            let expected_pos = std_err.valid_up_to();
+            let mut dst = vec![0u16; utf16_capacity_for(data.len())];
+            let mut kinds = Vec::new();
+            for engine in &engines {
+                let err = engine
+                    .convert(&data, &mut dst)
+                    .expect_err("std rejected this input");
+                assert_eq!(
+                    err.position,
+                    expected_pos,
+                    "{} bad={bad_byte:02x} pos={pos}",
+                    engine.name()
+                );
+                kinds.push(err.kind);
+            }
+            assert!(
+                kinds.windows(2).all(|w| w[0] == w[1]),
+                "engines disagree on kind: {kinds:?} bad={bad_byte:02x} pos={pos}"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_soup_positions_match_std() {
+    let engines = validating_utf8_engines();
+    for seed in 0..300u64 {
+        let mut rng = SplitMix64::new(seed.wrapping_mul(0xA5A5_5A5A));
+        let len = rng.below(200) as usize;
+        let soup: Vec<u8> = (0..len)
+            .map(|_| {
+                if rng.below(3) == 0 {
+                    rng.below(256) as u8
+                } else {
+                    (b'a' + rng.below(26) as u8) as u8
+                }
+            })
+            .collect();
+        let Err(std_err) = std::str::from_utf8(&soup) else {
+            continue;
+        };
+        let expected_pos = std_err.valid_up_to();
+        let mut dst = vec![0u16; utf16_capacity_for(soup.len())];
+        for engine in &engines {
+            let err = engine.convert(&soup, &mut dst).expect_err("std rejected");
+            assert_eq!(
+                err.position,
+                expected_pos,
+                "{} seed {seed} soup {soup:02x?}",
+                engine.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_prefix_reports_too_short_at_cut_character() {
+    let text = "ascii, héllo wörld, 漢字テスト, 🙂🚀🌍 — all classes ".repeat(8);
+    let bytes = text.as_bytes();
+    let engines = validating_utf8_engines();
+    for cut in 1..bytes.len() {
+        let prefix = &bytes[..cut];
+        match std::str::from_utf8(prefix) {
+            Ok(_) => continue, // cut on a character boundary
+            Err(e) => {
+                let expected_pos = e.valid_up_to();
+                let mut dst = vec![0u16; utf16_capacity_for(prefix.len())];
+                for engine in &engines {
+                    let err = engine
+                        .convert(prefix, &mut dst)
+                        .expect_err("mid-sequence cut must fail");
+                    assert_eq!(err.position, expected_pos, "{} cut={cut}", engine.name());
+                    assert_eq!(err.kind, ErrorKind::TooShort, "{} cut={cut}", engine.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn utf16_positions_match_std_decoder() {
+    let engines = Registry::global().all_utf16();
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x1616_1616);
+        let len = rng.below(120) as usize;
+        let units: Vec<u16> = (0..len)
+            .map(|_| {
+                if rng.below(3) == 0 {
+                    0xD700u16.wrapping_add(rng.below(0x300) as u16)
+                } else {
+                    rng.below(0x10000) as u16
+                }
+            })
+            .collect();
+        let expected = std_utf16_error_pos(&units);
+        let mut dst = vec![0u8; utf8_capacity_for(units.len())];
+        for engine in &engines {
+            match engine.convert(&units, &mut dst) {
+                Ok(_) => assert_eq!(expected, None, "{} seed {seed}", engine.name()),
+                Err(err) => {
+                    let expected =
+                        expected.unwrap_or_else(|| panic!("{} seed {seed}", engine.name()));
+                    assert_eq!(
+                        err.position,
+                        expected,
+                        "{} seed {seed} units {units:04x?}",
+                        engine.name()
+                    );
+                    assert!(
+                        err.kind == ErrorKind::Surrogate || err.kind == ErrorKind::TooShort,
+                        "{} seed {seed}: {:?}",
+                        engine.name(),
+                        err.kind
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lone_high_at_end_is_too_short_elsewhere_surrogate() {
+    for engine in Registry::global().all_utf16() {
+        let mut dst = vec![0u8; 64];
+        let err = engine.convert(&[0x41, 0xD800], &mut dst).expect_err("unpaired");
+        assert_eq!((err.kind, err.position), (ErrorKind::TooShort, 1), "{}", engine.name());
+        let err = engine.convert(&[0x41, 0xD800, 0x42], &mut dst).expect_err("unpaired");
+        assert_eq!((err.kind, err.position), (ErrorKind::Surrogate, 1), "{}", engine.name());
+        let err = engine.convert(&[0xDC00, 0x41], &mut dst).expect_err("lone low");
+        assert_eq!((err.kind, err.position), (ErrorKind::Surrogate, 0), "{}", engine.name());
+    }
+}
+
+#[test]
+fn undersized_output_is_reported_not_panicked() {
+    let text = "output buffer test é漢🙂 ".repeat(40);
+    let units: Vec<u16> = text.encode_utf16().collect();
+    for entry in Registry::global().utf8_entries() {
+        let mut tiny = [0u16; 2];
+        let err = entry
+            .engine
+            .convert(text.as_bytes(), &mut tiny)
+            .expect_err("2-word buffer cannot fit the output");
+        assert_eq!(err.kind, ErrorKind::OutputBuffer, "{}", entry.key);
+        assert!(err.position <= text.len(), "{}", entry.key);
+    }
+    for entry in Registry::global().utf16_entries() {
+        let mut tiny = [0u8; 2];
+        let err = entry
+            .engine
+            .convert(&units, &mut tiny)
+            .expect_err("2-byte buffer cannot fit the output");
+        assert_eq!(err.kind, ErrorKind::OutputBuffer, "{}", entry.key);
+        assert!(err.position <= units.len(), "{}", entry.key);
+    }
+}
+
+#[test]
+fn scalar_reference_and_classifier_agree_with_engines() {
+    // The library's own scalar transcoder is the documented ground
+    // truth; spot-check that the classifier helpers match it.
+    let samples: &[&[u8]] = &[
+        &[0x41, 0x80, 0x41],
+        &[0xE2, 0x82],
+        &[0xC1, 0xBF],
+        &[0xF0, 0x9F, 0x99, 0x82, 0xFF],
+    ];
+    for src in samples {
+        let mut dst = vec![0u16; utf16_capacity_for(src.len())];
+        let scalar_err = simdutf_rs::scalar::utf8_to_utf16(src, &mut dst).expect_err("invalid");
+        let classified = simdutf_rs::transcode::classify_utf8_error(src, 0);
+        assert_eq!(scalar_err, classified, "{src:02x?}");
+        let engine_err = OurUtf8ToUtf16::validating()
+            .convert(src, &mut dst)
+            .expect_err("invalid");
+        assert_eq!(engine_err, classified, "{src:02x?}");
+    }
+}

@@ -33,26 +33,18 @@ fn random_string(rng: &mut SplitMix64, max_chars: u64) -> String {
     (0..n).map(|_| random_char(rng)).collect()
 }
 
-fn utf8_engines() -> Vec<Box<dyn Utf8ToUtf16>> {
-    vec![
-        Box::new(OurUtf8ToUtf16::validating()),
-        Box::new(OurUtf8ToUtf16::non_validating()),
-        Box::new(IcuLikeTranscoder),
-        Box::new(LlvmTranscoder),
-        Box::new(FiniteTranscoder),
-        Box::new(SteagallTranscoder),
-        Box::new(Utf8LutTranscoder::validating()),
-        Box::new(Utf8LutTranscoder::full()),
-    ]
+/// Every UTF-8→UTF-16 engine, via the unified registry (Inoue excluded:
+/// it does not support the supplemental-plane strings generated here).
+fn utf8_engines() -> Vec<&'static dyn Utf8ToUtf16> {
+    Registry::global()
+        .all_utf8()
+        .into_iter()
+        .filter(|e| e.supports_supplemental())
+        .collect()
 }
 
-fn utf16_engines() -> Vec<Box<dyn Utf16ToUtf8>> {
-    vec![
-        Box::new(OurUtf16ToUtf8::validating()),
-        Box::new(IcuLikeTranscoder),
-        Box::new(LlvmTranscoder),
-        Box::new(Utf8LutTranscoder::validating()),
-    ]
+fn utf16_engines() -> Vec<&'static dyn Utf16ToUtf8> {
+    Registry::global().all_utf16()
 }
 
 #[test]
@@ -66,7 +58,7 @@ fn prop_every_engine_matches_std_on_random_strings() {
             let mut dst = vec![0u16; utf16_capacity_for(text.len())];
             let n = engine
                 .convert(text.as_bytes(), &mut dst)
-                .unwrap_or_else(|| panic!("{} rejected valid input, seed {seed}", engine.name()));
+                .unwrap_or_else(|e| panic!("{} rejected valid input ({e}), seed {seed}", engine.name()));
             assert_eq!(&dst[..n], &expected[..], "{} seed {seed}", engine.name());
         }
     }
@@ -83,7 +75,7 @@ fn prop_every_utf16_engine_matches_std_on_random_strings() {
             let mut dst = vec![0u8; utf8_capacity_for(units.len())];
             let n = engine
                 .convert(&units, &mut dst)
-                .unwrap_or_else(|| panic!("{} rejected valid input, seed {seed}", engine.name()));
+                .unwrap_or_else(|e| panic!("{} rejected valid input ({e}), seed {seed}", engine.name()));
             assert_eq!(&dst[..n], text.as_bytes(), "{} seed {seed}", engine.name());
         }
     }
@@ -91,14 +83,11 @@ fn prop_every_utf16_engine_matches_std_on_random_strings() {
 
 #[test]
 fn prop_validating_engines_agree_with_std_on_byte_soup() {
-    let engines: Vec<Box<dyn Utf8ToUtf16>> = vec![
-        Box::new(OurUtf8ToUtf16::validating()),
-        Box::new(IcuLikeTranscoder),
-        Box::new(LlvmTranscoder),
-        Box::new(FiniteTranscoder),
-        Box::new(SteagallTranscoder),
-        Box::new(Utf8LutTranscoder::validating()),
-    ];
+    let engines: Vec<&dyn Utf8ToUtf16> = Registry::global()
+        .all_utf8()
+        .into_iter()
+        .filter(|e| e.validating())
+        .collect();
     for seed in 0..600u64 {
         let mut rng = SplitMix64::new(seed.wrapping_mul(0x9E3779B9));
         let len = rng.below(240) as usize;
@@ -117,19 +106,33 @@ fn prop_validating_engines_agree_with_std_on_byte_soup() {
         assert_eq!(v, expected, "validator seed {seed} soup {soup:02x?}");
         for engine in &engines {
             let mut dst = vec![0u16; utf16_capacity_for(soup.len())];
-            let accepted = engine.convert(&soup, &mut dst).is_some();
-            assert_eq!(accepted, expected, "{} seed {seed} soup {soup:02x?}", engine.name());
+            match engine.convert(&soup, &mut dst) {
+                Ok(_) => assert!(expected, "{} accepted bad soup, seed {seed}", engine.name()),
+                Err(err) => {
+                    assert!(!expected, "{} rejected good soup, seed {seed}", engine.name());
+                    // Every validating engine must agree with std on the
+                    // position of the first error.
+                    let std_pos =
+                        std::str::from_utf8(&soup).expect_err("invalid").valid_up_to();
+                    assert_eq!(
+                        err.position,
+                        std_pos,
+                        "{} seed {seed} soup {soup:02x?}",
+                        engine.name()
+                    );
+                }
+            }
         }
     }
 }
 
 #[test]
 fn prop_non_validating_engines_are_total_on_byte_soup() {
-    let engines: Vec<Box<dyn Utf8ToUtf16>> = vec![
-        Box::new(OurUtf8ToUtf16::non_validating()),
-        Box::new(Utf8LutTranscoder::full()),
-        Box::new(InoueTranscoder),
-    ];
+    let engines: Vec<&dyn Utf8ToUtf16> = Registry::global()
+        .all_utf8()
+        .into_iter()
+        .filter(|e| !e.validating())
+        .collect();
     for seed in 0..300u64 {
         let mut rng = SplitMix64::new(seed ^ 0xF00D);
         let len = rng.below(300) as usize;
@@ -174,7 +177,7 @@ fn prop_utf16_validation_agrees_with_std() {
         // The validating utf16→utf8 engine must agree with the validator.
         let engine = OurUtf16ToUtf8::validating();
         let mut dst = vec![0u8; utf8_capacity_for(units.len())];
-        assert_eq!(engine.convert(&units, &mut dst).is_some(), expected, "seed {seed}");
+        assert_eq!(engine.convert(&units, &mut dst).is_ok(), expected, "seed {seed}");
     }
 }
 

@@ -37,7 +37,7 @@ fn service_handles_every_corpus_in_both_directions() {
         let resp = rx.recv().unwrap();
         assert!(resp.ok());
         if is8to16 {
-            assert_eq!(resp.utf16.unwrap(), expected_utf16);
+            assert_eq!(resp.into_utf16().unwrap(), expected_utf16);
         }
     }
     let snap = service.stats();
@@ -71,11 +71,11 @@ fn xla_service_agrees_with_simd_service_when_artifacts_present() {
 
     let a = xla.transcode(Request::utf8(1, doc8.clone()));
     let b = simd.transcode(Request::utf8(1, doc8));
-    assert_eq!(a.utf16, b.utf16, "XLA and SIMD engines must agree (utf8→utf16)");
+    assert_eq!(a.utf16(), b.utf16(), "XLA and SIMD engines must agree (utf8→utf16)");
 
     let a = xla.transcode(Request::utf16(2, doc16.clone()));
     let b = simd.transcode(Request::utf16(2, doc16));
-    assert_eq!(a.utf8, b.utf8, "XLA and SIMD engines must agree (utf16→utf8)");
+    assert_eq!(a.utf8(), b.utf8(), "XLA and SIMD engines must agree (utf16→utf8)");
 
     // Invalid input: both reject.
     let bad = vec![0xC0u8, 0x80, b'x', 0xFF];

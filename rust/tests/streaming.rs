@@ -1,0 +1,232 @@
+//! Streaming ⇄ one-shot equivalence, split at every chunk boundary.
+//!
+//! For each sample (valid and corrupted, both directions), the input is
+//! split into two chunks at *every* position, streamed, and compared —
+//! outputs and errors (kind + absolute position) — against the one-shot
+//! conversion. Random multi-chunk splits cover the general case.
+
+use simdutf_rs::corpus::SplitMix64;
+use simdutf_rs::prelude::*;
+use simdutf_rs::transcode::{utf16_capacity_for, utf8_capacity_for, TranscodeResult};
+
+/// One-shot reference conversion.
+fn oneshot_utf8(data: &[u8]) -> TranscodeResult<Vec<u16>> {
+    OurUtf8ToUtf16::validating().convert_to_vec(data)
+}
+
+fn oneshot_utf16(units: &[u16]) -> TranscodeResult<Vec<u8>> {
+    OurUtf16ToUtf8::validating().convert_to_vec(units)
+}
+
+/// Stream `data` through the given chunk split points and compare with
+/// the one-shot result (output or error).
+fn check_utf8_split(data: &[u8], chunks: &[&[u8]]) {
+    let expected = oneshot_utf8(data);
+    let mut s = StreamingUtf8ToUtf16::new();
+    let mut out = Vec::new();
+    let mut result: Result<(), simdutf_rs::transcode::TranscodeError> = Ok(());
+    'feed: {
+        for chunk in chunks {
+            let mut dst = vec![0u16; utf16_capacity_for(chunk.len() + 3)];
+            match s.push(chunk, &mut dst) {
+                Ok(fed) => out.extend_from_slice(&dst[..fed.written]),
+                Err(e) => {
+                    result = Err(e);
+                    break 'feed;
+                }
+            }
+        }
+        if let Err(e) = s.finish() {
+            result = Err(e);
+        }
+    }
+    match (expected, result) {
+        (Ok(exp), Ok(())) => assert_eq!(out, exp, "split {:?}", split_lens(chunks)),
+        (Err(exp), Err(got)) => {
+            assert_eq!(got, exp, "split {:?}", split_lens(chunks));
+        }
+        (exp, got) => panic!(
+            "one-shot {exp:?} but streaming {got:?} (split {:?})",
+            split_lens(chunks)
+        ),
+    }
+}
+
+fn check_utf16_split(units: &[u16], chunks: &[&[u16]]) {
+    let expected = oneshot_utf16(units);
+    let mut s = StreamingUtf16ToUtf8::new();
+    let mut out = Vec::new();
+    let mut result: Result<(), simdutf_rs::transcode::TranscodeError> = Ok(());
+    'feed: {
+        for chunk in chunks {
+            let mut dst = vec![0u8; utf8_capacity_for(chunk.len() + 1)];
+            match s.push(chunk, &mut dst) {
+                Ok(fed) => out.extend_from_slice(&dst[..fed.written]),
+                Err(e) => {
+                    result = Err(e);
+                    break 'feed;
+                }
+            }
+        }
+        if let Err(e) = s.finish() {
+            result = Err(e);
+        }
+    }
+    match (expected, result) {
+        (Ok(exp), Ok(())) => assert_eq!(out, exp, "split {:?}", split_lens16(chunks)),
+        (Err(exp), Err(got)) => assert_eq!(got, exp, "split {:?}", split_lens16(chunks)),
+        (exp, got) => panic!(
+            "one-shot {exp:?} but streaming {got:?} (split {:?})",
+            split_lens16(chunks)
+        ),
+    }
+}
+
+fn split_lens(chunks: &[&[u8]]) -> Vec<usize> {
+    chunks.iter().map(|c| c.len()).collect()
+}
+
+fn split_lens16(chunks: &[&[u16]]) -> Vec<usize> {
+    chunks.iter().map(|c| c.len()).collect()
+}
+
+const SAMPLES: &[&str] = &[
+    "",
+    "plain ascii",
+    "héllo wörld, déjà vu",
+    "漢字テスト文字列",
+    "🙂🚀🌍💡",
+    "mix a é 漢 🙂 end",
+];
+
+#[test]
+fn two_chunk_split_at_every_boundary_utf8() {
+    for text in SAMPLES {
+        let data = text.as_bytes();
+        for split in 0..=data.len() {
+            let (a, b) = data.split_at(split);
+            check_utf8_split(data, &[a, b]);
+        }
+    }
+}
+
+#[test]
+fn two_chunk_split_at_every_boundary_utf16() {
+    for text in SAMPLES {
+        let units: Vec<u16> = text.encode_utf16().collect();
+        for split in 0..=units.len() {
+            let (a, b) = units.split_at(split);
+            check_utf16_split(&units, &[a, b]);
+        }
+    }
+}
+
+#[test]
+fn corrupted_streams_report_the_oneshot_error_at_every_split() {
+    // Corruptions of every kind, at positions near chunk boundaries.
+    let mut corpora: Vec<Vec<u8>> = Vec::new();
+    for text in ["héllo wörld 漢字 🙂!", "ascii then 🙂 emoji"] {
+        for (pos, bad) in [(3usize, 0xFFu8), (7, 0x80), (10, 0xC2), (12, 0xED)] {
+            let mut data = text.as_bytes().to_vec();
+            if pos < data.len() {
+                data[pos] = bad;
+            }
+            corpora.push(data);
+        }
+        // Truncation mid-character.
+        let bytes = text.as_bytes();
+        corpora.push(bytes[..bytes.len() - 1].to_vec());
+        corpora.push(bytes[..bytes.len() - 2].to_vec());
+    }
+    for data in &corpora {
+        for split in 0..=data.len() {
+            let (a, b) = data.split_at(split);
+            check_utf8_split(data, &[a, b]);
+        }
+    }
+}
+
+#[test]
+fn corrupted_utf16_streams_report_the_oneshot_error_at_every_split() {
+    let base: Vec<u16> = "x🙂y漢z".encode_utf16().collect();
+    let mut corpora: Vec<Vec<u16>> = vec![
+        vec![0xD800],               // lone high only
+        vec![0x41, 0xDC00, 0x42],   // lone low mid-stream
+        vec![0x41, 0xD800],         // high at end
+        vec![0xD800, 0xD800, 0xDC00], // high before a valid pair
+    ];
+    for pos in 0..base.len() {
+        let mut bad = base.clone();
+        bad[pos] = 0xD800;
+        corpora.push(bad);
+        let mut bad = base.clone();
+        bad[pos] = 0xDC00;
+        corpora.push(bad);
+    }
+    for units in &corpora {
+        for split in 0..=units.len() {
+            let (a, b) = units.split_at(split);
+            check_utf16_split(units, &[a, b]);
+        }
+    }
+}
+
+#[test]
+fn random_multi_chunk_splits_match_oneshot() {
+    let corpus = Corpus::generate(Language::Hebrew, Collection::Lipsum);
+    let data = corpus.utf8_prefix(4096);
+    let expected = oneshot_utf8(data).expect("corpus is valid");
+    for seed in 0..40u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xCAFE);
+        let mut s = StreamingUtf8ToUtf16::new();
+        let mut out = Vec::new();
+        let mut p = 0usize;
+        while p < data.len() {
+            let n = 1 + rng.below(257) as usize;
+            let chunk = &data[p..(p + n).min(data.len())];
+            let mut dst = vec![0u16; utf16_capacity_for(chunk.len() + 3)];
+            let fed = s.push(chunk, &mut dst).expect("valid stream");
+            out.extend_from_slice(&dst[..fed.written]);
+            p += chunk.len();
+        }
+        s.finish().expect("complete");
+        assert_eq!(out, expected, "seed {seed}");
+    }
+    // Same, UTF-16 direction.
+    let units = corpus.utf16_prefix(2048);
+    let expected8 = oneshot_utf16(units).expect("corpus is valid");
+    for seed in 0..40u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xBEEF);
+        let mut s = StreamingUtf16ToUtf8::new();
+        let mut out = Vec::new();
+        let mut p = 0usize;
+        while p < units.len() {
+            let n = 1 + rng.below(129) as usize;
+            let chunk = &units[p..(p + n).min(units.len())];
+            let mut dst = vec![0u8; utf8_capacity_for(chunk.len() + 1)];
+            let fed = s.push(chunk, &mut dst).expect("valid stream");
+            out.extend_from_slice(&dst[..fed.written]);
+            p += chunk.len();
+        }
+        s.finish().expect("complete");
+        assert_eq!(out, expected8, "seed {seed}");
+    }
+}
+
+#[test]
+fn streaming_over_baseline_engines_agrees() {
+    // The streaming wrapper is engine-generic; spot-check a scalar
+    // baseline produces identical streams.
+    let text = "baseline streaming é漢🙂 test ".repeat(20);
+    let data = text.as_bytes();
+    let expected = oneshot_utf8(data).unwrap();
+    let mut s = StreamingUtf8ToUtf16::with_engine(LlvmTranscoder);
+    let mut out = Vec::new();
+    for chunk in data.chunks(13) {
+        let mut dst = vec![0u16; utf16_capacity_for(chunk.len() + 3)];
+        let fed = s.push(chunk, &mut dst).expect("valid");
+        out.extend_from_slice(&dst[..fed.written]);
+    }
+    s.finish().expect("complete");
+    assert_eq!(out, expected);
+}
