@@ -1,12 +1,36 @@
 //! `cargo bench --bench utf16_to_utf8` — regenerates the paper's UTF-16
 //! → UTF-8 evaluation: Table 9 (lipsum), Figure 6 (bar subset), Table 10
 //! (wikipedia-Mars), plus Figure 7 (speed vs input length, both
-//! directions).
+//! directions) — then a sweep over every `engine::Registry` UTF-16→UTF-8
+//! entry, including `simd128`/`simd256`/`best`.
+
+use simdutf_rs::corpus::{generate_collection, Collection};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::harness;
 
 fn main() {
     for section in ["table9", "fig6", "table10", "fig7"] {
-        let out = simdutf_rs::harness::run_section(section, std::path::Path::new("artifacts"))
+        let out = harness::run_section(section, std::path::Path::new("artifacts"))
             .expect("known section");
         println!("{out}");
     }
+
+    println!(
+        "All registered UTF-16→UTF-8 engines (input MB/s, lipsum; best = {})",
+        simdutf_rs::simd::best_key()
+    );
+    let corpora = generate_collection(Collection::Lipsum);
+    for entry in Registry::global().utf16_entries() {
+        print!("  {:>14}", entry.key);
+        for corpus in &corpora {
+            let v = harness::bench_utf16_engine_mbps(entry.engine.as_ref(), corpus);
+            print!("  {:>10}", format!("{v:.0}"));
+        }
+        println!();
+    }
+    print!("  {:>14}", "");
+    for corpus in &corpora {
+        print!("  {:>10}", corpus.name());
+    }
+    println!();
 }

@@ -1,16 +1,46 @@
 //! `cargo bench --bench utf8_to_utf16` — regenerates the paper's UTF-8 →
 //! UTF-16 evaluation: Table 5 (non-validating, lipsum), Table 6
 //! (validating, lipsum), Figure 5 (bar subset), Table 7 (validating,
-//! wikipedia-Mars) and Table 8 (path counters, Arabic lipsum).
+//! wikipedia-Mars) and Table 8 (path counters, Arabic lipsum) — then a
+//! full engine × corpus sweep over **every** `engine::Registry` entry,
+//! including the width-explicit `simd128`/`simd256` backends and the
+//! runtime-dispatched `best` alias.
 //!
 //! Methodology follows §6.1: repeated in-memory conversions, minimum
 //! timing, gigacharacters per second. Budget per cell is controlled by
 //! `SIMDUTF_BENCH_BUDGET_MS` (default 200 ms).
 
+use simdutf_rs::corpus::{generate_collection, Collection};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::harness;
+
 fn main() {
     for section in ["table5", "table6", "fig5", "table7", "table8"] {
-        let out = simdutf_rs::harness::run_section(section, std::path::Path::new("artifacts"))
+        let out = harness::run_section(section, std::path::Path::new("artifacts"))
             .expect("known section");
         println!("{out}");
     }
+
+    // Registry-wide sweep (the engine list comes from the registry, not
+    // a hand-written list — width keys included).
+    println!(
+        "All registered UTF-8→UTF-16 engines (input MB/s, lipsum; best = {})",
+        simdutf_rs::simd::best_key()
+    );
+    let corpora = generate_collection(Collection::Lipsum);
+    for entry in Registry::global().utf8_entries() {
+        print!("  {:>14}", entry.key);
+        for corpus in &corpora {
+            match harness::bench_utf8_engine_mbps(entry.engine.as_ref(), corpus) {
+                Some(v) => print!("  {:>10}", format!("{v:.0}")),
+                None => print!("  {:>10}", "n/a"),
+            }
+        }
+        println!();
+    }
+    print!("  {:>14}", "");
+    for corpus in &corpora {
+        print!("  {:>10}", corpus.name());
+    }
+    println!();
 }

@@ -84,6 +84,30 @@ fn main() {
     }
     println!("all validating engines report the same error kind and position");
 
+    // --- engine selection: width-explicit keys and runtime dispatch ---
+    // `best` resolves (once, at startup) to the widest backend the CPU
+    // supports; `simd128`/`simd256` pin a width for A/B comparisons.
+    let best = registry.get_utf8("best").expect("always registered");
+    assert_eq!(best.convert_to_vec(text.as_bytes()).unwrap(), utf16);
+    let wide = registry.get_utf8("simd256").expect("always registered");
+    assert_eq!(wide.convert_to_vec(text.as_bytes()).unwrap(), utf16);
+    println!("engine selection: best resolves to {} here", best_key());
+
+    // Width-generic code can also name a backend directly:
+    let pinned = OurUtf8ToUtf16::<V256>::validating_on();
+    assert_eq!(pinned.convert_to_vec(text.as_bytes()).unwrap(), utf16);
+
+    // The streaming transcoders take any engine, e.g. the `best` alias.
+    let mut beststream = StreamingUtf8ToUtf16::best();
+    let mut bestout = Vec::new();
+    for chunk in text.as_bytes().chunks(7) {
+        let fed = beststream.push(chunk, &mut buf).expect("valid");
+        bestout.extend_from_slice(&buf[..fed.written]);
+    }
+    beststream.finish().expect("no dangling sequence");
+    assert_eq!(bestout, utf16);
+    println!("streaming over the best backend matches one-shot: ok");
+
     // --- generated benchmark corpora (Table 4) ---
     let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
     let stats = corpus.stats();

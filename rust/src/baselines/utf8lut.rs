@@ -138,7 +138,7 @@ impl Utf8ToUtf16 for Utf8LutTranscoder {
         let table = &*BIG_TABLE;
         let mut p = 0usize;
         let mut q = 0usize;
-        let mut validator = Utf8Validator::new();
+        let mut validator = Utf8Validator::<crate::simd::V128>::new();
         let mut v_pos = 0usize;
 
         // Need 17 readable bytes for the end-mask (the last end bit
@@ -146,7 +146,7 @@ impl Utf8ToUtf16 for Utf8LutTranscoder {
         while p + 17 <= src.len() {
             if self.mode == LutMode::Validate {
                 while v_pos + 16 <= src.len() && v_pos < p + 17 {
-                    validator.push16(U8x16::load(&src[v_pos..]));
+                    validator.push_vec(U8x16::load(&src[v_pos..]));
                     v_pos += 16;
                 }
                 if validator.has_error() {

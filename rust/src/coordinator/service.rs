@@ -23,7 +23,11 @@ pub enum Direction {
 /// Which engine the worker pool runs.
 #[derive(Clone, Debug)]
 pub enum EngineChoice {
-    /// The paper's vectorized transcoders (default).
+    /// The paper's vectorized transcoders (default), at the widest
+    /// register width the CPU supports: resolves the registry's `best`
+    /// (or `best-nv`) alias rather than naming a width. Use
+    /// `Named("simd128")` / `Named("simd256")` to pin a width for A/B
+    /// comparisons.
     Simd { validate: bool },
     /// The ICU-like scalar baseline (for A/B service comparisons).
     Scalar,
@@ -308,7 +312,7 @@ fn resolve_native(to16_key: &str, to8_key: &str) -> WorkerEngine {
 fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: EngineChoice) {
     let engine = match &choice {
         EngineChoice::Simd { validate } => {
-            resolve_native(if *validate { "ours" } else { "ours-nv" }, "ours")
+            resolve_native(if *validate { "best" } else { "best-nv" }, "best")
         }
         EngineChoice::Scalar => resolve_native("icu", "icu"),
         EngineChoice::Named(name) => resolve_native(name, name),
@@ -462,7 +466,7 @@ mod tests {
         let simd = service(EngineChoice::Simd { validate: true });
         let text = "A/B: ünïcode 文字 🙂 ".repeat(30);
         let reference = simd.transcode(Request::utf8(1, text.clone().into_bytes()));
-        for key in ["icu", "llvm", "steagall", "utf8lut"] {
+        for key in ["icu", "llvm", "steagall", "utf8lut", "simd128", "simd256", "best"] {
             let named = service(EngineChoice::Named(key.to_string()));
             let b = named.transcode(Request::utf8(1, text.clone().into_bytes()));
             assert_eq!(reference.utf16(), b.utf16(), "{key}");

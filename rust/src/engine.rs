@@ -22,11 +22,36 @@
 //! | `utf8lut` | utf8lut | yes | both |
 //! | `utf8lut-full` | utf8lut | no | 8→16 |
 //! | `inoue` | Inoue et al. | no | 8→16 |
+//!
+//! ### Width-explicit keys and `best`
+//!
+//! Our engine is generic over the SIMD backend
+//! ([`crate::simd::VectorBackend`]); the registry exposes each width
+//! under an explicit key, plus a runtime-dispatched alias:
+//!
+//! | key | backend | validating | directions |
+//! |---|---|---|---|
+//! | `simd128` | `V128` (same engine as `ours`) | yes | both |
+//! | `simd256` | `V256` | yes | both |
+//! | `best` | widest usable here (AVX2 compiled in + CPU support) | yes | both |
+//! | `simd128-nv` | `V128` (same as `ours-nv`) | no | 8→16 |
+//! | `simd256-nv` | `V256` | no | 8→16 |
+//! | `best-nv` | widest usable here | no | 8→16 |
+//!
+//! `best` is resolved **once**, when the registry is built, from
+//! [`crate::simd::best_key`] — it needs both the AVX2 paths compiled in
+//! *and* a CPU that reports AVX2, else it stays on `simd128` (CPU
+//! features do not change at runtime).
+//! The width-explicit and `best` entries are marked `paper: false` so
+//! the paper-table engine sets (Tables 5–10) keep the paper's exact
+//! columns; everything else — property tests, benches, the service —
+//! enumerates the full entry list and therefore covers every width.
 
 use crate::baselines::{
     finite::FiniteTranscoder, icu_like::IcuLikeTranscoder, inoue::InoueTranscoder,
     llvm::LlvmTranscoder, steagall::SteagallTranscoder, utf8lut::Utf8LutTranscoder,
 };
+use crate::simd::{best_key, V256};
 use crate::transcode::{
     utf16_to_utf8::OurUtf16ToUtf8, utf8_to_utf16::OurUtf8ToUtf16, Utf16ToUtf8, Utf8ToUtf16,
 };
@@ -37,12 +62,16 @@ pub struct Utf8Entry {
     /// Stable registry key (lower-case, unique).
     pub key: &'static str,
     pub engine: Arc<dyn Utf8ToUtf16>,
+    /// True iff the entry belongs to the paper's evaluation column sets
+    /// (width-explicit aliases of our engine do not).
+    pub paper: bool,
 }
 
 /// A registered UTF-16 → UTF-8 engine.
 pub struct Utf16Entry {
     pub key: &'static str,
     pub engine: Arc<dyn Utf16ToUtf8>,
+    pub paper: bool,
 }
 
 /// The engine registry. Usually accessed through [`Registry::global`].
@@ -59,35 +88,66 @@ impl Registry {
         &GLOBAL
     }
 
-    /// Build the standard registry (every engine of the paper's
-    /// evaluation, in Table 5/6/9 column order within each group).
+    /// Build the standard registry: every engine of the paper's
+    /// evaluation (in Table 5/6/9 column order within each group),
+    /// followed by the width-explicit backends and the `best` alias.
     pub fn standard() -> Registry {
         let icu = Arc::new(IcuLikeTranscoder);
         let llvm = Arc::new(LlvmTranscoder);
         let lut = Arc::new(Utf8LutTranscoder::validating());
-        let ours16 = Arc::new(OurUtf16ToUtf8::validating());
+
+        // One shared instance per backend configuration; `ours` and
+        // `simd128` are literally the same engine under two keys.
+        let ours128 = Arc::new(OurUtf8ToUtf16::validating());
+        let ours128_nv = Arc::new(OurUtf8ToUtf16::non_validating());
+        let ours256 = Arc::new(OurUtf8ToUtf16::<V256>::validating_on());
+        let ours256_nv = Arc::new(OurUtf8ToUtf16::<V256>::non_validating_on());
+        let ours16_128 = Arc::new(OurUtf16ToUtf8::validating());
+        let ours16_256 = Arc::new(OurUtf16ToUtf8::<V256>::validating_on());
+
+        let wide = best_key() == V256::KEY;
+        let best8: Arc<dyn Utf8ToUtf16> =
+            if wide { ours256.clone() } else { ours128.clone() };
+        let best8_nv: Arc<dyn Utf8ToUtf16> =
+            if wide { ours256_nv.clone() } else { ours128_nv.clone() };
+        let best16: Arc<dyn Utf16ToUtf8> =
+            if wide { ours16_256.clone() } else { ours16_128.clone() };
+
         Registry {
             utf8: vec![
-                Utf8Entry { key: "icu", engine: icu.clone() },
-                Utf8Entry { key: "llvm", engine: llvm.clone() },
-                Utf8Entry { key: "finite", engine: Arc::new(FiniteTranscoder) },
-                Utf8Entry { key: "steagall", engine: Arc::new(SteagallTranscoder) },
-                Utf8Entry { key: "utf8lut", engine: lut.clone() },
-                Utf8Entry { key: "ours", engine: Arc::new(OurUtf8ToUtf16::validating()) },
-                Utf8Entry { key: "inoue", engine: Arc::new(InoueTranscoder) },
-                Utf8Entry { key: "utf8lut-full", engine: Arc::new(Utf8LutTranscoder::full()) },
-                Utf8Entry { key: "ours-nv", engine: Arc::new(OurUtf8ToUtf16::non_validating()) },
+                Utf8Entry { key: "icu", engine: icu.clone(), paper: true },
+                Utf8Entry { key: "llvm", engine: llvm.clone(), paper: true },
+                Utf8Entry { key: "finite", engine: Arc::new(FiniteTranscoder), paper: true },
+                Utf8Entry { key: "steagall", engine: Arc::new(SteagallTranscoder), paper: true },
+                Utf8Entry { key: "utf8lut", engine: lut.clone(), paper: true },
+                Utf8Entry { key: "ours", engine: ours128.clone(), paper: true },
+                Utf8Entry { key: "inoue", engine: Arc::new(InoueTranscoder), paper: true },
+                Utf8Entry {
+                    key: "utf8lut-full",
+                    engine: Arc::new(Utf8LutTranscoder::full()),
+                    paper: true,
+                },
+                Utf8Entry { key: "ours-nv", engine: ours128_nv.clone(), paper: true },
+                Utf8Entry { key: "simd128", engine: ours128, paper: false },
+                Utf8Entry { key: "simd256", engine: ours256, paper: false },
+                Utf8Entry { key: "best", engine: best8, paper: false },
+                Utf8Entry { key: "simd128-nv", engine: ours128_nv, paper: false },
+                Utf8Entry { key: "simd256-nv", engine: ours256_nv, paper: false },
+                Utf8Entry { key: "best-nv", engine: best8_nv, paper: false },
             ],
             utf16: vec![
-                Utf16Entry { key: "icu", engine: icu },
-                Utf16Entry { key: "llvm", engine: llvm },
-                Utf16Entry { key: "utf8lut", engine: lut },
-                Utf16Entry { key: "ours", engine: ours16 },
+                Utf16Entry { key: "icu", engine: icu, paper: true },
+                Utf16Entry { key: "llvm", engine: llvm, paper: true },
+                Utf16Entry { key: "utf8lut", engine: lut, paper: true },
+                Utf16Entry { key: "ours", engine: ours16_128.clone(), paper: true },
+                Utf16Entry { key: "simd128", engine: ours16_128, paper: false },
+                Utf16Entry { key: "simd256", engine: ours16_256, paper: false },
+                Utf16Entry { key: "best", engine: best16, paper: false },
             ],
         }
     }
 
-    /// All UTF-8 → UTF-16 entries.
+    /// All UTF-8 → UTF-16 entries (paper set + width-explicit keys).
     pub fn utf8_entries(&self) -> &[Utf8Entry] {
         &self.utf8
     }
@@ -97,14 +157,14 @@ impl Registry {
         &self.utf16
     }
 
-    /// Every UTF-8 → UTF-16 engine (validating and not).
+    /// Every UTF-8 → UTF-16 engine (validating and not), paper set.
     pub fn all_utf8(&self) -> Vec<&dyn Utf8ToUtf16> {
-        self.utf8.iter().map(|e| e.engine.as_ref()).collect()
+        self.utf8.iter().filter(|e| e.paper).map(|e| e.engine.as_ref()).collect()
     }
 
     /// Every UTF-16 → UTF-8 engine, in Table 9/10 column order.
     pub fn all_utf16(&self) -> Vec<&dyn Utf16ToUtf8> {
-        self.utf16.iter().map(|e| e.engine.as_ref()).collect()
+        self.utf16.iter().filter(|e| e.paper).map(|e| e.engine.as_ref()).collect()
     }
 
     /// The validating UTF-8 → UTF-16 engine set of Tables 6/7, in the
@@ -112,6 +172,7 @@ impl Registry {
     pub fn utf8_validating(&self) -> Vec<&dyn Utf8ToUtf16> {
         self.utf8
             .iter()
+            .filter(|e| e.paper)
             .map(|e| e.engine.as_ref())
             .filter(|e| e.validating())
             .collect()
@@ -122,6 +183,7 @@ impl Registry {
     pub fn utf8_non_validating(&self) -> Vec<&dyn Utf8ToUtf16> {
         self.utf8
             .iter()
+            .filter(|e| e.paper)
             .map(|e| e.engine.as_ref())
             .filter(|e| !e.validating())
             .collect()
@@ -200,6 +262,25 @@ mod tests {
     }
 
     #[test]
+    fn width_keys_and_best_alias_are_registered() {
+        let r = Registry::global();
+        for key in ["simd128", "simd256", "best"] {
+            assert!(r.get_utf8(key).is_some(), "missing utf8 {key}");
+            assert!(r.get_utf16(key).is_some(), "missing utf16 {key}");
+        }
+        for key in ["simd128-nv", "simd256-nv", "best-nv"] {
+            assert!(r.get_utf8(key).is_some(), "missing utf8 {key}");
+            assert!(!r.get_utf8(key).unwrap().validating(), "{key} must not validate");
+        }
+        // `best` resolves to whichever width the CPU prefers.
+        let best = r.get_utf8("best").unwrap();
+        let resolved =
+            if best_key() == "simd256" { r.get_utf8("simd256") } else { r.get_utf8("simd128") };
+        assert_eq!(best.name(), resolved.unwrap().name());
+        assert!(best.validating());
+    }
+
+    #[test]
     fn paper_table_sets_match() {
         let r = Registry::global();
         let validating: Vec<&str> =
@@ -228,5 +309,22 @@ mod tests {
             let out = e.engine.convert_to_vec(&expected).expect("valid input");
             assert_eq!(out, text.as_bytes(), "{}", e.key);
         }
+    }
+
+    #[test]
+    fn width_backends_agree_on_output_and_errors() {
+        let r = Registry::global();
+        let text = "width parity: ascii, éé, 漢字, 🙂🚀 — ".repeat(20);
+        let narrow = r.get_utf8("simd128").unwrap();
+        let wide = r.get_utf8("simd256").unwrap();
+        assert_eq!(
+            narrow.convert_to_vec(text.as_bytes()).unwrap(),
+            wide.convert_to_vec(text.as_bytes()).unwrap()
+        );
+        let mut bad = text.clone().into_bytes();
+        bad[100] = 0xFF;
+        let e1 = narrow.convert_to_vec(&bad).unwrap_err();
+        let e2 = wide.convert_to_vec(&bad).unwrap_err();
+        assert_eq!(e1, e2);
     }
 }

@@ -35,38 +35,55 @@ pub fn utf16_engines() -> Vec<&'static dyn Utf16ToUtf8> {
     Registry::global().all_utf16()
 }
 
-/// Benchmark one UTF-8→UTF-16 engine on one corpus; Gc/s, or None if
-/// the engine does not support the content (Inoue × Emoji).
-pub fn bench_utf8_engine(engine: &dyn Utf8ToUtf16, corpus: &Corpus) -> Option<f64> {
+/// Measure one UTF-8→UTF-16 engine on one corpus; `None` if the engine
+/// does not support the content (Inoue × Emoji). The single measurement
+/// core every throughput unit (Gc/s tables, MB/s json) derives from.
+fn measure_utf8_conversion(
+    engine: &dyn Utf8ToUtf16,
+    corpus: &Corpus,
+    budget: std::time::Duration,
+) -> Option<bench::BenchResult> {
     if !engine.supports_supplemental() && corpus.stats().pct_by_len[3] > 0.5 {
         return None;
     }
-    let chars = corpus.chars();
     let mut dst = vec![0u16; crate::transcode::utf16_capacity_for(corpus.utf8.len())];
-    let result = measure(
+    Some(measure(
         || {
             let n = engine.convert(&corpus.utf8, &mut dst).expect("corpus is valid");
             std::hint::black_box(n);
         },
-        default_budget(),
+        budget,
         3,
-    );
-    Some(result.gigachars_per_sec(chars))
+    ))
 }
 
-/// Benchmark one UTF-16→UTF-8 engine on one corpus (Gc/s).
-pub fn bench_utf16_engine(engine: &dyn Utf16ToUtf8, corpus: &Corpus) -> f64 {
-    let chars = corpus.chars();
+/// Measure one UTF-16→UTF-8 engine on one corpus.
+fn measure_utf16_conversion(
+    engine: &dyn Utf16ToUtf8,
+    corpus: &Corpus,
+    budget: std::time::Duration,
+) -> bench::BenchResult {
     let mut dst = vec![0u8; crate::transcode::utf8_capacity_for(corpus.utf16.len())];
-    let result = measure(
+    measure(
         || {
             let n = engine.convert(&corpus.utf16, &mut dst).expect("corpus is valid");
             std::hint::black_box(n);
         },
-        default_budget(),
+        budget,
         3,
-    );
-    result.gigachars_per_sec(chars)
+    )
+}
+
+/// Benchmark one UTF-8→UTF-16 engine on one corpus; Gc/s, or None if
+/// the engine does not support the content (Inoue × Emoji).
+pub fn bench_utf8_engine(engine: &dyn Utf8ToUtf16, corpus: &Corpus) -> Option<f64> {
+    measure_utf8_conversion(engine, corpus, default_budget())
+        .map(|r| r.gigachars_per_sec(corpus.chars()))
+}
+
+/// Benchmark one UTF-16→UTF-8 engine on one corpus (Gc/s).
+pub fn bench_utf16_engine(engine: &dyn Utf16ToUtf8, corpus: &Corpus) -> f64 {
+    measure_utf16_conversion(engine, corpus, default_budget()).gigachars_per_sec(corpus.chars())
 }
 
 /// Format a speed the way the paper prints them ("0.29", "1.4", "18.").
@@ -407,6 +424,107 @@ pub fn xla_ablation(artifacts_dir: &std::path::Path) -> String {
     )
 }
 
+/// Benchmark one UTF-8→UTF-16 engine on one corpus in **input MB/s**
+/// (the unit of the machine-readable smoke artifact; the paper's tables
+/// use Gc/s). Same measurement core as [`bench_utf8_engine`].
+pub fn bench_utf8_engine_mbps(engine: &dyn Utf8ToUtf16, corpus: &Corpus) -> Option<f64> {
+    measure_utf8_conversion(engine, corpus, default_budget())
+        .map(|r| corpus.utf8.len() as f64 / r.min.as_secs_f64() / 1e6)
+}
+
+/// Benchmark one UTF-16→UTF-8 engine on one corpus in input MB/s.
+pub fn bench_utf16_engine_mbps(engine: &dyn Utf16ToUtf8, corpus: &Corpus) -> f64 {
+    let r = measure_utf16_conversion(engine, corpus, default_budget());
+    (corpus.utf16.len() * 2) as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// Machine-readable engine × corpus throughput matrix: every registry
+/// entry (paper engines **and** the width-explicit `simd128`/`simd256`/
+/// `best` keys), each lipsum corpus profile, input MB/s. This is what
+/// CI writes to `BENCH_<n>.json` in smoke mode
+/// (`SIMDUTF_BENCH_BUDGET_MS` small) to seed the perf trajectory.
+pub fn bench_json() -> String {
+    bench_json_with(default_budget())
+}
+
+/// [`bench_json`] with an explicit per-cell budget (tests pass a tiny
+/// one directly instead of mutating the process-global env var).
+pub fn bench_json_with(budget: std::time::Duration) -> String {
+    fn emit_section(
+        out: &mut String,
+        label: &str,
+        rows: &[(&str, Vec<(String, Option<f64>)>)],
+        trailing_comma: bool,
+    ) {
+        out.push_str(&format!("  \"{label}\": {{\n"));
+        for (i, (key, cells)) in rows.iter().enumerate() {
+            out.push_str(&format!("    \"{key}\": {{"));
+            for (j, (name, cell)) in cells.iter().enumerate() {
+                match cell {
+                    Some(v) => out.push_str(&format!("\"{name}\": {v:.1}")),
+                    None => out.push_str(&format!("\"{name}\": null")),
+                }
+                if j + 1 < cells.len() {
+                    out.push_str(", ");
+                }
+            }
+            out.push('}');
+            if i + 1 < rows.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  }");
+        if trailing_comma {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+
+    let corpora = generate_collection(Collection::Lipsum);
+    let r = Registry::global();
+    let utf8_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = r
+        .utf8_entries()
+        .iter()
+        .map(|e| {
+            let cells = corpora
+                .iter()
+                .map(|c| {
+                    let mbps = measure_utf8_conversion(e.engine.as_ref(), c, budget)
+                        .map(|res| c.utf8.len() as f64 / res.min.as_secs_f64() / 1e6);
+                    (c.name().to_string(), mbps)
+                })
+                .collect();
+            (e.key, cells)
+        })
+        .collect();
+    let utf16_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = r
+        .utf16_entries()
+        .iter()
+        .map(|e| {
+            let cells = corpora
+                .iter()
+                .map(|c| {
+                    let res = measure_utf16_conversion(e.engine.as_ref(), c, budget);
+                    let mbps = (c.utf16.len() * 2) as f64 / res.min.as_secs_f64() / 1e6;
+                    (c.name().to_string(), Some(mbps))
+                })
+                .collect();
+            (e.key, cells)
+        })
+        .collect();
+
+    let mut out = String::from("{\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v1\",\n");
+    out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
+    out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
+    out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
+    emit_section(&mut out, "utf8_to_utf16", &utf8_rows, true);
+    emit_section(&mut out, "utf16_to_utf8", &utf16_rows, false);
+    out.push_str("}\n");
+    out
+}
+
 /// Run a named section (CLI entry point).
 pub fn run_section(name: &str, artifacts_dir: &std::path::Path) -> Option<String> {
     Some(match name {
@@ -448,6 +566,22 @@ mod tests {
         for lang in ["Arabic", "Emoji", "Latin", "Vietnamese", "Persan"] {
             assert!(t.contains(lang), "missing {lang}:\n{t}");
         }
+    }
+
+    #[test]
+    fn bench_json_covers_every_registry_key() {
+        // Explicit tiny budget — no process-global env mutation (which
+        // would race with other bench-shaped tests).
+        let json = bench_json_with(std::time::Duration::from_millis(1));
+        for e in Registry::global().utf8_entries() {
+            assert!(json.contains(&format!("\"{}\"", e.key)), "missing {}:\n{json}", e.key);
+        }
+        for key in ["simd128", "simd256", "best"] {
+            assert!(json.contains(&format!("\"{key}\"")), "missing width key {key}");
+        }
+        assert!(json.contains("\"utf8_to_utf16\"") && json.contains("\"utf16_to_utf8\""));
+        // Inoue × Emoji is the one unsupported cell.
+        assert!(json.contains("null"), "expected an unsupported cell:\n{json}");
     }
 
     #[test]

@@ -8,8 +8,13 @@
 //!
 //! * [`transcode`] — the paper's vectorized UTF-8 ⇄ UTF-16 transcoders
 //!   (Algorithms 2, 3 and 4), validating and non-validating, built on a
-//!   portable SIMD substrate ([`simd`]) and small lookup tables
-//!   ([`tables`]). Conversions return rich results
+//!   portable **width-generic** SIMD substrate ([`simd`]) and small
+//!   lookup tables ([`tables`]). The kernels are generic over
+//!   [`simd::VectorBackend`] and ship at two widths — [`simd::V128`]
+//!   (16-byte registers, the paper's formulation) and [`simd::V256`]
+//!   (32-byte registers) — surfaced in the engine registry as
+//!   `simd128`, `simd256` and the runtime-dispatched `best`.
+//!   Conversions return rich results
 //!   ([`transcode::TranscodeResult`]): the output length, or a
 //!   [`transcode::TranscodeError`] carrying the error class and the
 //!   input position of the first invalid sequence.
@@ -63,10 +68,27 @@
 //! stream.finish().expect("no dangling sequence");
 //! assert_eq!(out, utf16);
 //!
-//! // Every engine, by name, through the registry.
+//! // Every engine, by name, through the registry — including the
+//! // width-explicit backends and the runtime-dispatched alias.
 //! let llvm = Registry::global().get_utf8("llvm").unwrap();
 //! assert_eq!(llvm.convert_to_vec(src).unwrap(), utf16);
+//! let best = Registry::global().get_utf8("best").unwrap(); // widest usable backend
+//! assert_eq!(best.convert_to_vec(src).unwrap(), utf16);
+//! let wide = Registry::global().get_utf8("simd256").unwrap(); // pin a width
+//! assert_eq!(wide.convert_to_vec(src).unwrap(), utf16);
 //! ```
+//!
+//! ## Engine selection
+//!
+//! | registry key | what you get |
+//! |---|---|
+//! | `best` | our engine on the widest usable backend (AVX2 compiled in + detected → 256-bit) |
+//! | `simd128` / `simd256` | our engine pinned to a register width |
+//! | `ours` | alias of `simd128` (the paper's configuration) |
+//! | `icu`, `llvm`, `finite`, … | the paper's baselines |
+//!
+//! Width-generic code can also instantiate the engines directly:
+//! `OurUtf8ToUtf16::<V256>::validating_on()`.
 
 // The SIMD substrate deliberately uses index loops over fixed-size
 // arrays and paired src/dst indexing (they autovectorize predictably);
@@ -96,6 +118,7 @@ pub mod prelude {
         Collection, Corpus, CorpusStats, Language, LIPSUM_LANGUAGES, WIKI_LANGUAGES,
     };
     pub use crate::engine::Registry;
+    pub use crate::simd::{best_key, VectorBackend, V128, V256};
     pub use crate::transcode::{
         streaming::{FeedResult, StreamingUtf16ToUtf8, StreamingUtf8ToUtf16},
         utf16_capacity_for, utf16_to_utf8::OurUtf16ToUtf8, utf8_capacity_for,

@@ -12,7 +12,14 @@
 //!     Run the streaming service against a synthetic workload and print
 //!     throughput/latency stats. KEY is any registry engine (see `engines`).
 //! simdutf-cli engines
-//!     List every registered engine (key, name, validation, directions).
+//!     List every registered engine (key, name, validation, directions),
+//!     including the width-explicit `simd128`/`simd256` backends and the
+//!     runtime-dispatched `best` alias.
+//! simdutf-cli bench-json [--out FILE]
+//!     Emit the machine-readable engine × corpus throughput matrix
+//!     (input MB/s for every registry key; see harness::bench_json).
+//!     CI runs this in smoke mode (SIMDUTF_BENCH_BUDGET_MS=5) to write
+//!     BENCH_<n>.json.
 //! simdutf-cli validate <file>
 //!     Validate a file as UTF-8; reports the error kind and position
 //!     (exit code 1 when invalid).
@@ -31,9 +38,12 @@ fn main() {
         Some("transcode") => cmd_transcode(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("engines") => cmd_engines(),
+        Some("bench-json") => cmd_bench_json(&args[1..]),
         Some("validate") => cmd_validate(&args[1..]),
         _ => {
-            eprintln!("usage: simdutf-cli <harness|transcode|serve|engines|validate> ...");
+            eprintln!(
+                "usage: simdutf-cli <harness|transcode|serve|engines|bench-json|validate> ..."
+            );
             eprintln!("see the module docs of rust/src/main.rs");
             2
         }
@@ -77,12 +87,33 @@ fn cmd_engines() -> i32 {
         };
         println!("{:<14} {:<14} {:<10} {}", key, name, if validating { "yes" } else { "no" }, dirs);
     }
+    println!(
+        "\nruntime dispatch: `best` resolves to {} on this CPU",
+        simdutf_rs::simd::best_key()
+    );
+    0
+}
+
+fn cmd_bench_json(args: &[String]) -> i32 {
+    let json = simdutf_rs::harness::bench_json();
+    match flag_value(args, "--out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(&path, &json) {
+                eprintln!("bench-json: writing {path}: {e}");
+                return 1;
+            }
+            eprintln!("bench-json: wrote {path}");
+        }
+        None => print!("{json}"),
+    }
     0
 }
 
 fn cmd_transcode(args: &[String]) -> i32 {
     let direction = flag_value(args, "--direction").unwrap_or_else(|| "8to16".to_string());
-    let engine_key = flag_value(args, "--engine").unwrap_or_else(|| "ours".to_string());
+    // Default to the runtime-dispatched alias: the widest backend the
+    // CPU supports. `--engine simd128`/`simd256` (or any key) pins one.
+    let engine_key = flag_value(args, "--engine").unwrap_or_else(|| "best".to_string());
     let path = match args.iter().rev().find(|a| !a.starts_with("--")) {
         Some(p) => p.clone(),
         None => {

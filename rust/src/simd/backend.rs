@@ -1,0 +1,286 @@
+//! Width-generic SIMD backend layer.
+//!
+//! The paper expresses both transcoders and the Keiser–Lemire validator
+//! in terms of a small primitive set — loads/stores, splats, lane-wise
+//! logic and arithmetic, `movemask`, `pshufb`-style shuffles, nibble
+//! table lookups and the `palignr`-style `prev` lag — and retargets that
+//! set per instruction set (§6.1). This module captures the primitive
+//! set as traits so the kernels can be written once and instantiated at
+//! any register width:
+//!
+//! * [`SimdBytes`] — a vector of `u8` lanes (the UTF-8 side).
+//! * [`SimdWords`] — a vector of `u16` lanes (the UTF-16 side).
+//! * [`VectorBackend`] — ties a byte vector and a word vector of the
+//!   same width together and names the backend ([`V128`], [`V256`]).
+//!
+//! `V128` is backed by the original [`U8x16`]/[`U16x8`] types (with
+//! their SSSE3 intrinsic paths); `V256` by [`U8x32`]/[`U16x16`]
+//! (loop-based, with AVX2 intrinsic paths for the operations LLVM
+//! cannot synthesize from loops: `shuffle`, `lookup16`, `prev`,
+//! `movemask`). [`best_key`] picks the widest backend the running CPU
+//! supports, which is how the `best` engine-registry alias dispatches.
+//!
+//! ### 256-bit shuffle semantics
+//!
+//! [`SimdBytes::shuffle`] and [`SimdBytes::lookup16`] follow the AVX2
+//! `vpshufb` convention at 32 lanes: the shuffle is **per 16-byte
+//! half** (lane `i` selects from its own half via `idx[i] & 0x0F`).
+//! Nibble lookups are unaffected (the 16-byte table is logically
+//! broadcast to both halves); code that needs a true cross-half
+//! permute uses [`super::shuffle32`] (two-source) explicitly.
+
+use super::{U16x16, U16x8, U8x16, U8x32};
+
+/// A vector of `u8` lanes exposing the paper's primitive set.
+///
+/// Semantics match the x64 instructions named on each method; the
+/// loop-based implementations are bit-exact with the intrinsic paths
+/// (asserted by the `simd` unit tests).
+pub trait SimdBytes: Copy + Send + Sync + std::fmt::Debug + 'static {
+    /// Number of 8-bit lanes (16 or 32).
+    const LANES: usize;
+
+    fn zero() -> Self;
+    /// Load `LANES` bytes from the front of `src` (`src.len() >= LANES`).
+    fn load(src: &[u8]) -> Self;
+    /// Store `LANES` bytes to the front of `dst` (`dst.len() >= LANES`).
+    fn store(self, dst: &mut [u8]);
+    fn splat(b: u8) -> Self;
+    /// Build a vector lane-by-lane (table/constant construction only —
+    /// not a hot-path operation).
+    fn from_fn(f: impl FnMut(usize) -> u8) -> Self;
+
+    fn and(self, rhs: Self) -> Self;
+    fn or(self, rhs: Self) -> Self;
+    fn xor(self, rhs: Self) -> Self;
+    /// Lane-wise unsigned saturating subtraction (`psubusb`).
+    fn saturating_sub(self, rhs: Self) -> Self;
+    /// Lane-wise logical shift right by a constant.
+    fn shr<const N: u32>(self) -> Self;
+
+    /// `pmovmskb`: bit `i` of the result is the MSB of lane `i`.
+    fn movemask(self) -> u64;
+    /// `pshufb` (per 16-byte half at 32 lanes — see the module docs).
+    fn shuffle(self, idx: Self) -> Self;
+    /// Nibble-table lookup: every lane must be in `[0, 16)`; the 16-byte
+    /// table is broadcast across halves at 32 lanes.
+    fn lookup16(self, table: &[u8; 16]) -> Self;
+    /// `palignr`-style lag: lane `i` of the result is the byte `N`
+    /// positions before lane `i` in the stream `prev_block ++ self`.
+    fn prev<const N: usize>(self, prev_block: Self) -> Self;
+
+    /// True iff any lane is non-zero.
+    fn any(self) -> bool;
+    /// True iff every lane is ASCII (MSB clear).
+    fn is_ascii(self) -> bool;
+
+    /// Per-lane maxima for the Keiser–Lemire incomplete-at-end check: a
+    /// register is complete unless its last three bytes start a longer
+    /// sequence.
+    fn incomplete_max() -> Self {
+        Self::from_fn(|i| match Self::LANES - 1 - i {
+            0 => 0xC0 - 1,
+            1 => 0xE0 - 1,
+            2 => 0xF0 - 1,
+            _ => 0xFF,
+        })
+    }
+
+    /// One Keiser–Lemire validation step over this register.
+    ///
+    /// Given the previous register and the carried incompleteness mask,
+    /// returns `(new_error_accumulator, new_incomplete_mask)`. The
+    /// default is the portable trait-op formulation; `U8x16` overrides
+    /// it with a fused SSSE3 implementation where available.
+    #[inline]
+    fn kl_step(
+        self,
+        prev_block: Self,
+        prev_incomplete: Self,
+        error_acc: Self,
+        t1h: &[u8; 16],
+        t1l: &[u8; 16],
+        t2h: &[u8; 16],
+    ) -> (Self, Self) {
+        kl_step_portable(self, prev_block, prev_incomplete, error_acc, t1h, t1l, t2h)
+    }
+}
+
+/// Portable Keiser–Lemire step shared by the trait default and the
+/// non-x86 fallbacks of the specialized implementations.
+#[inline]
+pub(crate) fn kl_step_portable<V: SimdBytes>(
+    input: V,
+    prev_block: V,
+    prev_incomplete: V,
+    error_acc: V,
+    t1h: &[u8; 16],
+    t1l: &[u8; 16],
+    t2h: &[u8; 16],
+) -> (V, V) {
+    let error = if input.is_ascii() {
+        // An ASCII register cannot complete a pending multi-byte
+        // sequence: surface any carried incompleteness.
+        error_acc.or(prev_incomplete)
+    } else {
+        let prev1 = input.prev::<1>(prev_block);
+        // Three nibble classifications ANDed together (the special-case
+        // bitmap of the Keiser–Lemire validator).
+        let sc = prev1
+            .shr::<4>()
+            .lookup16(t1h)
+            .and(prev1.and(V::splat(0x0F)).lookup16(t1l))
+            .and(input.shr::<4>().lookup16(t2h));
+        // Where a byte *must* be the 2nd/3rd continuation of a 3/4-byte
+        // sequence its TWO_CONTS bit (0x80) is expected; anywhere else
+        // that bit is an error — computed as an XOR.
+        let prev2 = input.prev::<2>(prev_block);
+        let prev3 = input.prev::<3>(prev_block);
+        let is_third = prev2.saturating_sub(V::splat(0xE0 - 0x80));
+        let is_fourth = prev3.saturating_sub(V::splat(0xF0 - 0x80));
+        let must32_80 = is_third.or(is_fourth).and(V::splat(0x80));
+        error_acc.or(must32_80.xor(sc))
+    };
+    (error, input.saturating_sub(V::incomplete_max()))
+}
+
+/// A vector of `u16` lanes (the UTF-16 side of the transcoders).
+pub trait SimdWords: Copy + Send + Sync + std::fmt::Debug + 'static {
+    /// Number of 16-bit lanes (8 or 16).
+    const LANES: usize;
+    /// The byte vector of the same total width.
+    type Bytes: SimdBytes;
+
+    /// Load `LANES` words from a `&[u16]` slice (`src.len() >= LANES`).
+    fn load(src: &[u16]) -> Self;
+    /// Load `LANES` little-endian words from `2 * LANES` bytes.
+    fn load_le_bytes(src: &[u8]) -> Self;
+    fn splat(w: u16) -> Self;
+    fn store(self, dst: &mut [u16]);
+    /// Reinterpret as bytes (little-endian lane order).
+    fn to_bytes(self) -> Self::Bytes;
+
+    fn and(self, rhs: Self) -> Self;
+    fn or(self, rhs: Self) -> Self;
+    fn not(self) -> Self;
+    fn shr<const N: u32>(self) -> Self;
+    fn shl<const N: u32>(self) -> Self;
+    /// Lane-wise unsigned less-than mask: `0xFFFF` where `self < rhs`.
+    fn lt_mask(self, rhs: Self) -> Self;
+    /// Bit `i` of the result is the MSB of lane `i`.
+    fn movemask(self) -> u32;
+    fn reduce_or(self) -> u16;
+    /// True iff any word is in the surrogate range `0xD800..=0xDFFF`.
+    fn has_surrogate(self) -> bool;
+}
+
+/// A named register width: a byte vector and a word vector of the same
+/// total width, plus the identifiers the engine registry uses.
+pub trait VectorBackend:
+    Copy + Clone + Default + Send + Sync + std::fmt::Debug + 'static
+{
+    /// Vector width in bytes (== `Bytes::LANES` == `2 * Words::LANES`).
+    const WIDTH: usize;
+    /// Engine-registry key (`"simd128"` / `"simd256"`).
+    const KEY: &'static str;
+    /// Display name used by engines on this backend.
+    const ENGINE_NAME: &'static str;
+
+    type Bytes: SimdBytes;
+    type Words: SimdWords<Bytes = Self::Bytes>;
+}
+
+/// The 128-bit backend: the paper's SSE/NEON-width formulation, backed
+/// by [`U8x16`]/[`U16x8`] with their SSSE3 intrinsic paths.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct V128;
+
+impl VectorBackend for V128 {
+    const WIDTH: usize = 16;
+    const KEY: &'static str = "simd128";
+    const ENGINE_NAME: &'static str = "ours";
+    type Bytes = U8x16;
+    type Words = U16x8;
+}
+
+/// The 256-bit backend: 32-lane vectors, loop-based with AVX2 intrinsic
+/// paths for `shuffle`/`lookup16`/`prev`/`movemask`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct V256;
+
+impl VectorBackend for V256 {
+    const WIDTH: usize = 32;
+    const KEY: &'static str = "simd256";
+    const ENGINE_NAME: &'static str = "ours-256";
+    type Bytes = U8x32;
+    type Words = U16x16;
+}
+
+/// Registry key of the widest backend that is *worth running* here —
+/// what the `best` registry alias resolves to at process start.
+///
+/// Two conditions must both hold for `simd256` to win, and they are
+/// different in kind:
+///
+/// * **compile-time**: the build enabled AVX2 codegen
+///   (`-C target-cpu=native` or `target-feature=+avx2`), so the
+///   `U8x32` intrinsic paths actually exist. In a portable build the
+///   V256 backend is correct but loop-based — typically no faster than
+///   the tuned 128-bit engine — so `best` stays on `simd128` there.
+/// * **runtime**: the CPU reports AVX2, so those compiled paths can
+///   execute.
+///
+/// `simd256` remains individually selectable in every build for A/B
+/// measurement regardless of what `best` picks.
+pub fn best_key() -> &'static str {
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return V256::KEY;
+        }
+    }
+    V128::KEY
+}
+
+/// Width in bytes of the backend [`best_key`] names.
+pub fn best_width() -> usize {
+    if best_key() == V256::KEY {
+        V256::WIDTH
+    } else {
+        V128::WIDTH
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incomplete_max_matches_hand_written_constant() {
+        let m16 = <U8x16 as SimdBytes>::incomplete_max();
+        let mut expected = [0xFFu8; 16];
+        expected[13] = 0xF0 - 1;
+        expected[14] = 0xE0 - 1;
+        expected[15] = 0xC0 - 1;
+        assert_eq!(m16.0, expected);
+        let m32 = <U8x32 as SimdBytes>::incomplete_max();
+        assert_eq!(m32.0[28], 0xFF);
+        assert_eq!(m32.0[29], 0xF0 - 1);
+        assert_eq!(m32.0[30], 0xE0 - 1);
+        assert_eq!(m32.0[31], 0xC0 - 1);
+    }
+
+    #[test]
+    fn best_key_names_a_registered_width() {
+        assert!(["simd128", "simd256"].contains(&best_key()));
+        assert_eq!(best_width() == 32, best_key() == "simd256");
+    }
+
+    #[test]
+    fn width_constants_are_consistent() {
+        assert_eq!(V128::WIDTH, <U8x16 as SimdBytes>::LANES);
+        assert_eq!(V128::WIDTH, 2 * <U16x8 as SimdWords>::LANES);
+        assert_eq!(V256::WIDTH, <U8x32 as SimdBytes>::LANES);
+        assert_eq!(V256::WIDTH, 2 * <U16x16 as SimdWords>::LANES);
+    }
+}

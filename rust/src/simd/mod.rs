@@ -1,30 +1,56 @@
-//! Portable SIMD substrate.
+//! Portable, width-generic SIMD substrate.
 //!
 //! The paper's algorithms are expressed in terms of a handful of SIMD
-//! primitives: 16-byte loads, byte-wise comparisons, `movemask`-style mask
-//! extraction, and `pshufb`-style arbitrary byte shuffles. This module
-//! provides those primitives as fixed-width value types (`U8x16`,
-//! `U16x8`) implemented in safe, loop-based Rust. At `opt-level=3` the
-//! loops autovectorize into the corresponding machine SIMD on x64
-//! (SSE/AVX2) and aarch64 (NEON); on other targets they remain correct
-//! scalar code — the same portability property the paper claims for its
-//! high-level C++ approach (§6.1).
+//! primitives: vector loads, byte-wise comparisons, `movemask`-style
+//! mask extraction, `pshufb`-style shuffles, nibble-table lookups and
+//! the `palignr`-style `prev` lag. This module provides those
+//! primitives at two register widths behind one trait surface:
 //!
-//! The substrate intentionally mirrors the x64/NEON instruction semantics
-//! that the paper relies on:
+//! * **Backend layer** ([`backend`]) — the [`VectorBackend`] trait
+//!   (with [`SimdBytes`] / [`SimdWords`] for the lane types) that the
+//!   transcode kernels and the Keiser–Lemire validator are generic
+//!   over, plus the two shipped backends:
+//!   * [`V128`] — 16-byte vectors ([`U8x16`], [`U16x8`]), the paper's
+//!     SSE/NEON-width formulation, with SSSE3 intrinsic paths.
+//!   * [`V256`] — 32-byte vectors ([`U8x32`], [`U16x16`]), loop-based
+//!     with AVX2 intrinsic paths for the operations LLVM cannot
+//!     synthesize from loops.
+//! * **Value types** — fixed-width types implemented in safe,
+//!   loop-based Rust. At `opt-level=3` the loops autovectorize into the
+//!   corresponding machine SIMD on x64 (SSE/AVX2) and aarch64 (NEON);
+//!   on other targets they remain correct scalar code — the same
+//!   portability property the paper claims for its high-level C++
+//!   approach (§6.1).
+//!
+//! The substrate intentionally mirrors the x64/NEON instruction
+//! semantics that the paper relies on:
 //!
 //! * [`U8x16::shuffle`] is `pshufb`: an index with the high bit set
-//!   produces a zero byte, otherwise the low 4 bits select a source lane.
-//! * [`U8x16::movemask`] is `pmovmskb`: one bit per lane, bit `i` = MSB of
-//!   lane `i` (lane 0 → least-significant bit).
+//!   produces a zero byte, otherwise the low 4 bits select a source
+//!   lane. At 32 lanes [`U8x32::shuffle`] keeps the AVX2 `vpshufb`
+//!   convention (per 16-byte half); [`shuffle32`] is the explicit
+//!   two-source cross-half permute.
+//! * [`U8x16::movemask`] is `pmovmskb`: one bit per lane, bit `i` = MSB
+//!   of lane `i` (lane 0 → least-significant bit).
 //! * [`U8x16::lookup16`] is the nibble-table lookup used by the
 //!   Keiser–Lemire validator (a `pshufb` against a constant table).
+//!
+//! Which backend should a caller use? Usually neither directly: the
+//! engine registry's `best` alias resolves to the widest backend the
+//! running CPU supports (see [`best_key`]), and `simd128` / `simd256`
+//! name the widths explicitly.
 
+pub mod backend;
+mod u16x16;
 mod u16x8;
 mod u8x16;
+mod u8x32;
 
+pub use backend::{best_key, best_width, SimdBytes, SimdWords, VectorBackend, V128, V256};
+pub use u16x16::U16x16;
 pub use u16x8::U16x8;
 pub use u8x16::U8x16;
+pub use u8x32::U8x32;
 
 /// 32-lane byte permute (the POWER `vperm` / AVX2 two-source shuffle the
 /// Inoue et al. transcoder relies on): lane `i` of the result is

@@ -1,0 +1,230 @@
+//! 16-lane 16-bit vector (the 256-bit UTF-16 side).
+
+use super::backend::SimdWords;
+use super::U8x32;
+
+/// A 16-lane vector of 16-bit code units. Loop-based; every operation
+/// autovectorizes to AVX2 at `opt-level=3` when compiled for a CPU that
+/// has it, and stays correct scalar code elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct U16x16(pub [u16; 16]);
+
+impl U16x16 {
+    pub const ZERO: U16x16 = U16x16([0; 16]);
+
+    /// Load 16 little-endian 16-bit words from 32 bytes.
+    #[inline]
+    pub fn load_le_bytes(src: &[u8]) -> U16x16 {
+        let mut v = [0u16; 16];
+        for i in 0..16 {
+            v[i] = u16::from_le_bytes([src[2 * i], src[2 * i + 1]]);
+        }
+        U16x16(v)
+    }
+
+    /// Load 16 words from a `&[u16]` slice (length >= 16).
+    #[inline]
+    pub fn load(src: &[u16]) -> U16x16 {
+        let mut v = [0u16; 16];
+        v.copy_from_slice(&src[..16]);
+        U16x16(v)
+    }
+
+    #[inline]
+    pub fn splat(w: u16) -> U16x16 {
+        U16x16([w; 16])
+    }
+
+    #[inline]
+    pub fn store(self, dst: &mut [u16]) {
+        dst[..16].copy_from_slice(&self.0);
+    }
+
+    /// Reinterpret as 32 bytes (little-endian lane order).
+    #[inline]
+    pub fn to_bytes(self) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..16 {
+            let [lo, hi] = self.0[i].to_le_bytes();
+            v[2 * i] = lo;
+            v[2 * i + 1] = hi;
+        }
+        U8x32(v)
+    }
+
+    #[inline]
+    pub fn and(self, rhs: U16x16) -> U16x16 {
+        let mut v = [0u16; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] & rhs.0[i];
+        }
+        U16x16(v)
+    }
+
+    #[inline]
+    pub fn or(self, rhs: U16x16) -> U16x16 {
+        let mut v = [0u16; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] | rhs.0[i];
+        }
+        U16x16(v)
+    }
+
+    /// Lane-wise bitwise NOT.
+    #[inline]
+    pub fn not(self) -> U16x16 {
+        let mut v = [0u16; 16];
+        for i in 0..16 {
+            v[i] = !self.0[i];
+        }
+        U16x16(v)
+    }
+
+    /// Lane-wise logical shift right by a constant (`vpsrlw`).
+    #[inline]
+    pub fn shr<const N: u32>(self) -> U16x16 {
+        let mut v = [0u16; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] >> N;
+        }
+        U16x16(v)
+    }
+
+    /// Lane-wise shift left by a constant (`vpsllw`).
+    #[inline]
+    pub fn shl<const N: u32>(self) -> U16x16 {
+        let mut v = [0u16; 16];
+        for i in 0..16 {
+            v[i] = self.0[i] << N;
+        }
+        U16x16(v)
+    }
+
+    /// Lane-wise unsigned less-than mask: `0xFFFF` where `self < rhs`.
+    #[inline]
+    pub fn lt_mask(self, rhs: U16x16) -> U16x16 {
+        let mut v = [0u16; 16];
+        for i in 0..16 {
+            v[i] = if self.0[i] < rhs.0[i] { 0xFFFF } else { 0 };
+        }
+        U16x16(v)
+    }
+
+    /// 16-bit mask: bit `i` = MSB of lane `i`.
+    #[inline]
+    pub fn movemask(self) -> u16 {
+        let mut m = 0u16;
+        for i in 0..16 {
+            m |= ((self.0[i] >> 15) as u16) << i;
+        }
+        m
+    }
+
+    /// OR-reduction of all lanes.
+    #[inline]
+    pub fn reduce_or(self) -> u16 {
+        let mut acc = 0u16;
+        for i in 0..16 {
+            acc |= self.0[i];
+        }
+        acc
+    }
+
+    /// True iff any word is in the surrogate range `0xD800..=0xDFFF`.
+    #[inline]
+    pub fn has_surrogate(self) -> bool {
+        let mut any = false;
+        for i in 0..16 {
+            any |= (self.0[i] & 0xF800) == 0xD800;
+        }
+        any
+    }
+}
+
+impl SimdWords for U16x16 {
+    const LANES: usize = 16;
+    type Bytes = U8x32;
+
+    #[inline]
+    fn load(src: &[u16]) -> Self {
+        U16x16::load(src)
+    }
+    #[inline]
+    fn load_le_bytes(src: &[u8]) -> Self {
+        U16x16::load_le_bytes(src)
+    }
+    #[inline]
+    fn splat(w: u16) -> Self {
+        U16x16::splat(w)
+    }
+    #[inline]
+    fn store(self, dst: &mut [u16]) {
+        U16x16::store(self, dst)
+    }
+    #[inline]
+    fn to_bytes(self) -> U8x32 {
+        U16x16::to_bytes(self)
+    }
+    #[inline]
+    fn and(self, rhs: Self) -> Self {
+        U16x16::and(self, rhs)
+    }
+    #[inline]
+    fn or(self, rhs: Self) -> Self {
+        U16x16::or(self, rhs)
+    }
+    #[inline]
+    fn not(self) -> Self {
+        U16x16::not(self)
+    }
+    #[inline]
+    fn shr<const N: u32>(self) -> Self {
+        U16x16::shr::<N>(self)
+    }
+    #[inline]
+    fn shl<const N: u32>(self) -> Self {
+        U16x16::shl::<N>(self)
+    }
+    #[inline]
+    fn lt_mask(self, rhs: Self) -> Self {
+        U16x16::lt_mask(self, rhs)
+    }
+    #[inline]
+    fn movemask(self) -> u32 {
+        U16x16::movemask(self) as u32
+    }
+    #[inline]
+    fn reduce_or(self) -> u16 {
+        U16x16::reduce_or(self)
+    }
+    #[inline]
+    fn has_surrogate(self) -> bool {
+        U16x16::has_surrogate(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn le_byte_roundtrip() {
+        let bytes: Vec<u8> = (0..32).collect();
+        let v = U16x16::load_le_bytes(&bytes);
+        assert_eq!(v.0[0], 0x0100);
+        assert_eq!(v.0[15], 0x1F1E);
+        assert_eq!(v.to_bytes().0.to_vec(), bytes);
+    }
+
+    #[test]
+    fn movemask_and_surrogates() {
+        let mut w = [0u16; 16];
+        w[1] = 0x8000;
+        w[9] = 0xFFFF;
+        assert_eq!(U16x16(w).movemask(), (1 << 1) | (1 << 9));
+        w[9] = 0xD800;
+        assert!(U16x16(w).has_surrogate());
+        assert!(!U16x16([0xD7FF; 16]).has_surrogate());
+    }
+}

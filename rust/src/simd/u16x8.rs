@@ -1,5 +1,6 @@
 //! 8-lane 16-bit vector (the UTF-16 side of the transcoders).
 
+use super::backend::SimdWords;
 use super::U8x16;
 
 /// An 8-lane vector of 16-bit code units.
@@ -127,6 +128,78 @@ impl U16x8 {
             any |= (self.0[i] & 0xF800) == 0xD800;
         }
         any
+    }
+
+    /// Lane-wise bitwise NOT.
+    #[inline]
+    pub fn not(self) -> U16x8 {
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = !self.0[i];
+        }
+        U16x8(v)
+    }
+}
+
+impl SimdWords for U16x8 {
+    const LANES: usize = 8;
+    type Bytes = U8x16;
+
+    #[inline]
+    fn load(src: &[u16]) -> Self {
+        U16x8::load(src)
+    }
+    #[inline]
+    fn load_le_bytes(src: &[u8]) -> Self {
+        U16x8::load_le_bytes(src)
+    }
+    #[inline]
+    fn splat(w: u16) -> Self {
+        U16x8::splat(w)
+    }
+    #[inline]
+    fn store(self, dst: &mut [u16]) {
+        U16x8::store(self, dst)
+    }
+    #[inline]
+    fn to_bytes(self) -> U8x16 {
+        U16x8::to_bytes(self)
+    }
+    #[inline]
+    fn and(self, rhs: Self) -> Self {
+        U16x8::and(self, rhs)
+    }
+    #[inline]
+    fn or(self, rhs: Self) -> Self {
+        U16x8::or(self, rhs)
+    }
+    #[inline]
+    fn not(self) -> Self {
+        U16x8::not(self)
+    }
+    #[inline]
+    fn shr<const N: u32>(self) -> Self {
+        U16x8::shr::<N>(self)
+    }
+    #[inline]
+    fn shl<const N: u32>(self) -> Self {
+        U16x8::shl::<N>(self)
+    }
+    #[inline]
+    fn lt_mask(self, rhs: Self) -> Self {
+        U16x8::lt_mask(self, rhs)
+    }
+    #[inline]
+    fn movemask(self) -> u32 {
+        U16x8::movemask(self) as u32
+    }
+    #[inline]
+    fn reduce_or(self) -> u16 {
+        U16x8::reduce_or(self)
+    }
+    #[inline]
+    fn has_surrogate(self) -> bool {
+        U16x8::has_surrogate(self)
     }
 }
 

@@ -1,0 +1,388 @@
+//! 32-lane byte vector (the 256-bit side of the backend layer).
+
+use super::backend::{kl_step_portable, SimdBytes};
+use super::U8x16;
+
+/// A 32-byte SIMD value with AVX2-equivalent semantics.
+///
+/// Loop-based operations autovectorize at `opt-level=3`; the operations
+/// LLVM cannot synthesize from loops — `shuffle`/`lookup16` (`vpshufb`),
+/// `prev` (`vperm2i128` + `vpalignr`), `movemask` (`vpmovmskb`) — carry
+/// explicit `core::arch` implementations gated on
+/// `target_feature = "avx2"`, with the portable loop as the fallback.
+///
+/// Note the `vpshufb` convention: at 32 lanes [`U8x32::shuffle`] and
+/// [`U8x32::lookup16`] operate **per 16-byte half** (lane `i` selects
+/// from its own half). Cross-half permutes go through
+/// [`super::shuffle32`] explicitly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct U8x32(pub [u8; 32]);
+
+impl U8x32 {
+    pub const ZERO: U8x32 = U8x32([0; 32]);
+
+    /// Load 32 bytes from the start of `src` (must have length >= 32).
+    #[inline]
+    pub fn load(src: &[u8]) -> U8x32 {
+        let mut v = [0u8; 32];
+        v.copy_from_slice(&src[..32]);
+        U8x32(v)
+    }
+
+    /// Broadcast a single byte to all lanes.
+    #[inline]
+    pub fn splat(b: u8) -> U8x32 {
+        U8x32([b; 32])
+    }
+
+    /// Store into the start of `dst` (must have length >= 32).
+    #[inline]
+    pub fn store(self, dst: &mut [u8]) {
+        dst[..32].copy_from_slice(&self.0);
+    }
+
+    /// The two 16-byte halves, low half first.
+    #[inline]
+    pub fn to_halves(self) -> (U8x16, U8x16) {
+        let mut lo = [0u8; 16];
+        let mut hi = [0u8; 16];
+        lo.copy_from_slice(&self.0[..16]);
+        hi.copy_from_slice(&self.0[16..]);
+        (U8x16(lo), U8x16(hi))
+    }
+
+    #[inline]
+    pub fn and(self, rhs: U8x32) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] & rhs.0[i];
+        }
+        U8x32(v)
+    }
+
+    #[inline]
+    pub fn or(self, rhs: U8x32) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] | rhs.0[i];
+        }
+        U8x32(v)
+    }
+
+    #[inline]
+    pub fn xor(self, rhs: U8x32) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] ^ rhs.0[i];
+        }
+        U8x32(v)
+    }
+
+    /// Lane-wise unsigned saturating subtraction (`vpsubusb`).
+    #[inline]
+    pub fn saturating_sub(self, rhs: U8x32) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..32 {
+            v[i] = self.0[i].saturating_sub(rhs.0[i]);
+        }
+        U8x32(v)
+    }
+
+    /// Lane-wise logical shift right by a constant.
+    #[inline]
+    pub fn shr<const N: u32>(self) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] >> N;
+        }
+        U8x32(v)
+    }
+
+    /// `vpmovmskb`: bit `i` of the result is the MSB of lane `i`.
+    #[inline]
+    pub fn movemask(self) -> u32 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm256_loadu_si256(self.0.as_ptr() as *const __m256i);
+            return _mm256_movemask_epi8(a) as u32;
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut m = 0u32;
+            for i in 0..32 {
+                m |= ((self.0[i] >> 7) as u32) << i;
+            }
+            m
+        }
+    }
+
+    /// `vpshufb`: per 16-byte half, lane `i` is zero when
+    /// `idx[i] & 0x80` is set, else the byte `idx[i] & 0x0F` of lane
+    /// `i`'s own half.
+    #[inline]
+    pub fn shuffle(self, idx: U8x32) -> U8x32 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm256_loadu_si256(self.0.as_ptr() as *const __m256i);
+            let b = _mm256_loadu_si256(idx.0.as_ptr() as *const __m256i);
+            let r = _mm256_shuffle_epi8(a, b);
+            let mut out = [0u8; 32];
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, r);
+            return U8x32(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 32];
+            for i in 0..32 {
+                let j = idx.0[i];
+                v[i] = if j & 0x80 != 0 {
+                    0
+                } else {
+                    self.0[(i & 0x10) | (j & 0x0F) as usize]
+                };
+            }
+            U8x32(v)
+        }
+    }
+
+    /// Nibble-table lookup: the 16-byte table broadcast to both halves,
+    /// then `vpshufb`. Every lane of `self` must be in `[0, 16)`.
+    #[inline]
+    pub fn lookup16(self, table: &[u8; 16]) -> U8x32 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let t128 = _mm_loadu_si128(table.as_ptr() as *const __m128i);
+            let t = _mm256_broadcastsi128_si256(t128);
+            let i = _mm256_loadu_si256(self.0.as_ptr() as *const __m256i);
+            let r = _mm256_shuffle_epi8(t, i);
+            let mut out = [0u8; 32];
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, r);
+            return U8x32(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 32];
+            for i in 0..32 {
+                v[i] = table[(self.0[i] & 0x0F) as usize];
+            }
+            U8x32(v)
+        }
+    }
+
+    /// Cross-register lag: lane `i` is the byte `N` positions before
+    /// lane `i` in the concatenated stream `prev_block ++ self`. Unlike
+    /// [`U8x32::shuffle`], this *does* cross the 128-bit halves (the
+    /// simdjson `vperm2i128` + `vpalignr` idiom).
+    #[inline]
+    pub fn prev<const N: usize>(self, prev_block: U8x32) -> U8x32 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let cur = _mm256_loadu_si256(self.0.as_ptr() as *const __m256i);
+            let prv = _mm256_loadu_si256(prev_block.0.as_ptr() as *const __m256i);
+            // [prev.high, cur.low]: the carry-in each 128-bit half needs.
+            let shifted = _mm256_permute2x128_si256(prv, cur, 0x21);
+            let r = match N {
+                1 => _mm256_alignr_epi8(cur, shifted, 15),
+                2 => _mm256_alignr_epi8(cur, shifted, 14),
+                3 => _mm256_alignr_epi8(cur, shifted, 13),
+                _ => unreachable!("prev<N> only used with N in 1..=3"),
+            };
+            let mut out = [0u8; 32];
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, r);
+            return U8x32(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut cat = [0u8; 64];
+            cat[..32].copy_from_slice(&prev_block.0);
+            cat[32..].copy_from_slice(&self.0);
+            let mut v = [0u8; 32];
+            for i in 0..32 {
+                v[i] = cat[32 + i - N];
+            }
+            U8x32(v)
+        }
+    }
+
+    /// True iff any lane is non-zero.
+    #[inline]
+    pub fn any(self) -> bool {
+        let mut acc = 0u8;
+        for i in 0..32 {
+            acc |= self.0[i];
+        }
+        acc != 0
+    }
+
+    /// OR-reduction of all lanes.
+    #[inline]
+    pub fn reduce_or(self) -> u8 {
+        let mut acc = 0u8;
+        for i in 0..32 {
+            acc |= self.0[i];
+        }
+        acc
+    }
+
+    /// True iff every lane is ASCII (MSB clear).
+    #[inline]
+    pub fn is_ascii(self) -> bool {
+        self.reduce_or() < 0x80
+    }
+}
+
+impl SimdBytes for U8x32 {
+    const LANES: usize = 32;
+
+    #[inline]
+    fn zero() -> Self {
+        U8x32::ZERO
+    }
+    #[inline]
+    fn load(src: &[u8]) -> Self {
+        U8x32::load(src)
+    }
+    #[inline]
+    fn store(self, dst: &mut [u8]) {
+        U8x32::store(self, dst)
+    }
+    #[inline]
+    fn splat(b: u8) -> Self {
+        U8x32::splat(b)
+    }
+    #[inline]
+    fn from_fn(mut f: impl FnMut(usize) -> u8) -> Self {
+        let mut v = [0u8; 32];
+        for (i, lane) in v.iter_mut().enumerate() {
+            *lane = f(i);
+        }
+        U8x32(v)
+    }
+    #[inline]
+    fn and(self, rhs: Self) -> Self {
+        U8x32::and(self, rhs)
+    }
+    #[inline]
+    fn or(self, rhs: Self) -> Self {
+        U8x32::or(self, rhs)
+    }
+    #[inline]
+    fn xor(self, rhs: Self) -> Self {
+        U8x32::xor(self, rhs)
+    }
+    #[inline]
+    fn saturating_sub(self, rhs: Self) -> Self {
+        U8x32::saturating_sub(self, rhs)
+    }
+    #[inline]
+    fn shr<const N: u32>(self) -> Self {
+        U8x32::shr::<N>(self)
+    }
+    #[inline]
+    fn movemask(self) -> u64 {
+        U8x32::movemask(self) as u64
+    }
+    #[inline]
+    fn shuffle(self, idx: Self) -> Self {
+        U8x32::shuffle(self, idx)
+    }
+    #[inline]
+    fn lookup16(self, table: &[u8; 16]) -> Self {
+        U8x32::lookup16(self, table)
+    }
+    #[inline]
+    fn prev<const N: usize>(self, prev_block: Self) -> Self {
+        U8x32::prev::<N>(self, prev_block)
+    }
+    #[inline]
+    fn any(self) -> bool {
+        U8x32::any(self)
+    }
+    #[inline]
+    fn is_ascii(self) -> bool {
+        U8x32::is_ascii(self)
+    }
+
+    #[inline]
+    fn kl_step(
+        self,
+        prev_block: Self,
+        prev_incomplete: Self,
+        error_acc: Self,
+        t1h: &[u8; 16],
+        t1l: &[u8; 16],
+        t2h: &[u8; 16],
+    ) -> (Self, Self) {
+        // The per-op AVX2 intrinsics (prev/lookup16) make the portable
+        // formulation register-resident already; no fused path needed.
+        kl_step_portable(self, prev_block, prev_incomplete, error_acc, t1h, t1l, t2h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuffle_is_per_half_vpshufb() {
+        let v = U8x32::from_fn(|i| 100 + i as u8);
+        // Reverse within each half.
+        let idx = U8x32::from_fn(|i| (15 - (i & 0x0F)) as u8);
+        let out = v.shuffle(idx);
+        for i in 0..16 {
+            assert_eq!(out.0[i], 100 + (15 - i) as u8, "lo lane {i}");
+            assert_eq!(out.0[16 + i], 100 + 16 + (15 - i) as u8, "hi lane {i}");
+        }
+        // High bit zeroes.
+        let out2 = v.shuffle(U8x32::splat(0x80));
+        assert_eq!(out2, U8x32::ZERO);
+    }
+
+    #[test]
+    fn lookup16_broadcasts_the_table() {
+        let table: [u8; 16] = core::array::from_fn(|i| (i * 3) as u8);
+        let idx = U8x32::from_fn(|i| (i % 16) as u8);
+        let out = idx.lookup16(&table);
+        for i in 0..32 {
+            assert_eq!(out.0[i], table[i % 16], "lane {i}");
+        }
+    }
+
+    #[test]
+    fn prev_crosses_the_half_boundary() {
+        let prev = U8x32::from_fn(|i| i as u8);
+        let cur = U8x32::from_fn(|i| 32 + i as u8);
+        for (n, got) in
+            [(1usize, cur.prev::<1>(prev)), (2, cur.prev::<2>(prev)), (3, cur.prev::<3>(prev))]
+        {
+            for i in 0..32 {
+                let expected = (32 + i - n) as u8;
+                assert_eq!(got.0[i], expected, "N={n} lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn movemask_matches_definition() {
+        let v = U8x32::from_fn(|i| if i % 3 == 0 { 0x80 } else { 0x7F });
+        let m = v.movemask();
+        for i in 0..32 {
+            assert_eq!((m >> i) & 1 == 1, i % 3 == 0, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn halves_round_trip() {
+        let v = U8x32::from_fn(|i| i as u8);
+        let (lo, hi) = v.to_halves();
+        assert_eq!(lo.0[0], 0);
+        assert_eq!(lo.0[15], 15);
+        assert_eq!(hi.0[0], 16);
+        assert_eq!(hi.0[15], 31);
+    }
+}

@@ -9,7 +9,9 @@
 //!   12-bit key (4096 × 2 B = 8 KiB) rather than a compressed 1024-entry
 //!   variant — the shuffle masks are identical (209 × 16 B = 3.3 KiB).
 //! * [`utf16_to_utf8`] — the two 256 × 17-byte tables (4352 B each) used
-//!   by the 1–2-byte and 1–3-byte routines of Algorithm 4.
+//!   by the 1–2-byte and 1–3-byte routines of Algorithm 4, plus the
+//!   widened `ONE_TWO_HI` variant (indices offset by 16) that the
+//!   256-bit backend feeds through a two-source permute.
 //! * [`keiser_lemire`] — the three 16-byte nibble-classification tables
 //!   of the Keiser–Lemire UTF-8 validator.
 //!

@@ -30,6 +30,26 @@ pub static ONE_TWO: LazyLock<[CompressEntry; 256]> = LazyLock::new(build_one_two
 /// over four words.
 pub static ONE_TWO_THREE: LazyLock<[CompressEntry; 256]> = LazyLock::new(build_one_two_three);
 
+/// The [`ONE_TWO`] table widened for the 256-bit backend: every source
+/// index is offset by 16 so the mask selects from the **high half** of a
+/// 32-byte unpacked register through the two-source permute
+/// [`crate::simd::shuffle32`] (the POWER `vperm` / AVX2
+/// `vpermd`-class operation the 128-bit path never needs). Keyed by the
+/// ASCII bitset of words 8–15.
+pub static ONE_TWO_HI: LazyLock<[CompressEntry; 256]> = LazyLock::new(build_one_two_hi);
+
+fn build_one_two_hi() -> [CompressEntry; 256] {
+    let mut table = build_one_two();
+    for entry in table.iter_mut() {
+        for b in entry.mask.iter_mut() {
+            if *b != 0x80 {
+                *b += 16;
+            }
+        }
+    }
+    table
+}
+
 fn build_one_two() -> [CompressEntry; 256] {
     let mut table = [CompressEntry { mask: [0x80; 16], count: 0 }; 256];
     for key in 0..256usize {
@@ -128,6 +148,23 @@ mod tests {
         let e = ONE_TWO_THREE[0xFF];
         assert_eq!(e.count, 4);
         assert_eq!(&e.mask[..4], &[0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn one_two_hi_is_one_two_offset_by_sixteen() {
+        for key in 0..256usize {
+            let lo = ONE_TWO[key];
+            let hi = ONE_TWO_HI[key];
+            assert_eq!(lo.count, hi.count, "key {key:02x}");
+            for i in 0..16 {
+                if lo.mask[i] == 0x80 {
+                    assert_eq!(hi.mask[i], 0x80, "key {key:02x} lane {i}");
+                } else {
+                    assert_eq!(hi.mask[i], lo.mask[i] + 16, "key {key:02x} lane {i}");
+                    assert!(hi.mask[i] < 32, "key {key:02x} lane {i}");
+                }
+            }
+        }
     }
 
     #[test]

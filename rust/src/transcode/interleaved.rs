@@ -13,6 +13,7 @@
 //! two halves are transcoded directly into their final, disjoint output
 //! slices — concurrently when a second thread is available.
 
+use crate::simd::{VectorBackend, V128};
 use crate::transcode::utf8_to_utf16::OurUtf8ToUtf16;
 use crate::transcode::{
     classify_utf8_error, utf16_len_from_utf8, ErrorKind, TranscodeError, TranscodeResult,
@@ -28,7 +29,8 @@ fn snap_to_boundary(src: &[u8], mut pos: usize) -> usize {
     pos
 }
 
-/// Validating UTF-8 → UTF-16 over two interleaved halves.
+/// Validating UTF-8 → UTF-16 over two interleaved halves (default
+/// backend).
 ///
 /// Returns the number of words written to `dst`, or the first error.
 /// Output is bit-identical to the sequential engine (tested), and so is
@@ -36,7 +38,16 @@ fn snap_to_boundary(src: &[u8], mut pos: usize) -> usize {
 /// re-derived by the canonical whole-input reference scan, so kind and
 /// position are independent of where the input happened to be split.
 pub fn utf8_to_utf16_interleaved(src: &[u8], dst: &mut [u16]) -> TranscodeResult {
-    let engine = OurUtf8ToUtf16::validating();
+    utf8_to_utf16_interleaved_with::<V128>(src, dst)
+}
+
+/// [`utf8_to_utf16_interleaved`] on an explicit backend: each half runs
+/// the width-generic sequential engine.
+pub fn utf8_to_utf16_interleaved_with<B: VectorBackend>(
+    src: &[u8],
+    dst: &mut [u16],
+) -> TranscodeResult {
+    let engine = OurUtf8ToUtf16::<B>::validating_on();
     if src.len() < 4096 {
         // Not worth the pre-pass + thread overhead below ~4 KiB.
         return engine.convert(src, dst);
@@ -107,6 +118,19 @@ mod tests {
             assert_eq!(n_seq, n_int, "{}", corpus.name());
             assert_eq!(a[..n_seq], b[..n_int], "{}", corpus.name());
         }
+    }
+
+    #[test]
+    fn wide_backend_matches_default() {
+        use crate::simd::V256;
+        let corpus = Corpus::generate(Language::Chinese, Collection::Lipsum);
+        let input = corpus.utf8_prefix(64 * 1024);
+        let mut a = vec![0u16; utf16_capacity_for(input.len()) + 16];
+        let mut b = vec![0u16; utf16_capacity_for(input.len()) + 16];
+        let n = utf8_to_utf16_interleaved(input, &mut a).unwrap();
+        let m = utf8_to_utf16_interleaved_with::<V256>(input, &mut b).unwrap();
+        assert_eq!(n, m);
+        assert_eq!(a[..n], b[..m]);
     }
 
     #[test]

@@ -87,6 +87,25 @@ pub trait Utf8ToUtf16: Send + Sync {
     }
 }
 
+/// Shared handles transcode too: lets a registry engine (e.g. the
+/// runtime-dispatched `best` key, obtained as `Arc<dyn Utf8ToUtf16>`)
+/// drive anything that is generic over an engine — most usefully the
+/// [`streaming`] transcoders.
+impl<T: Utf8ToUtf16 + ?Sized> Utf8ToUtf16 for std::sync::Arc<T> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn validating(&self) -> bool {
+        (**self).validating()
+    }
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
+        (**self).convert(src, dst)
+    }
+    fn supports_supplemental(&self) -> bool {
+        (**self).supports_supplemental()
+    }
+}
+
 /// A UTF-16 → UTF-8 transcoding engine.
 pub trait Utf16ToUtf8: Send + Sync {
     fn name(&self) -> &'static str;
@@ -102,6 +121,19 @@ pub trait Utf16ToUtf8: Send + Sync {
         let n = self.convert(src, &mut dst)?;
         dst.truncate(n);
         Ok(dst)
+    }
+}
+
+/// See the [`Utf8ToUtf16`] blanket impl for `Arc`.
+impl<T: Utf16ToUtf8 + ?Sized> Utf16ToUtf8 for std::sync::Arc<T> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn validating(&self) -> bool {
+        (**self).validating()
+    }
+    fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
+        (**self).convert(src, dst)
     }
 }
 

@@ -100,9 +100,24 @@ pub struct StreamingUtf8ToUtf16<E: Utf8ToUtf16 = OurUtf8ToUtf16> {
 }
 
 impl StreamingUtf8ToUtf16<OurUtf8ToUtf16> {
-    /// Stream through the paper's validating SIMD engine.
+    /// Stream through the paper's validating SIMD engine (default
+    /// 128-bit backend).
     pub fn new() -> Self {
         Self::with_engine(OurUtf8ToUtf16::validating())
+    }
+}
+
+impl StreamingUtf8ToUtf16<std::sync::Arc<dyn Utf8ToUtf16>> {
+    /// Stream through the registry's runtime-dispatched `best` engine —
+    /// the widest usable backend (see `simd::best_key`). Any other key
+    /// works via [`StreamingUtf8ToUtf16::with_engine`] +
+    /// [`crate::engine::Registry::get_utf8_arc`].
+    pub fn best() -> Self {
+        Self::with_engine(
+            crate::engine::Registry::global()
+                .get_utf8_arc("best")
+                .expect("registry always has best"),
+        )
     }
 }
 
@@ -215,9 +230,21 @@ pub struct StreamingUtf16ToUtf8<E: Utf16ToUtf8 = OurUtf16ToUtf8> {
 }
 
 impl StreamingUtf16ToUtf8<OurUtf16ToUtf8> {
-    /// Stream through the paper's validating SIMD engine.
+    /// Stream through the paper's validating SIMD engine (default
+    /// 128-bit backend).
     pub fn new() -> Self {
         Self::with_engine(OurUtf16ToUtf8::validating())
+    }
+}
+
+impl StreamingUtf16ToUtf8<std::sync::Arc<dyn Utf16ToUtf8>> {
+    /// Stream through the registry's runtime-dispatched `best` engine.
+    pub fn best() -> Self {
+        Self::with_engine(
+            crate::engine::Registry::global()
+                .get_utf16_arc("best")
+                .expect("registry always has best"),
+        )
     }
 }
 
@@ -391,6 +418,30 @@ mod tests {
         let err = s.finish().expect_err("unpaired high");
         assert_eq!(err.kind, ErrorKind::TooShort);
         assert_eq!(err.position, 1);
+    }
+
+    #[test]
+    fn best_engine_streams_identically() {
+        let text = "best-dispatch stream: é漢🙂 over several chunks ".repeat(8);
+        let expected: Vec<u16> = text.encode_utf16().collect();
+        let mut s = StreamingUtf8ToUtf16::best();
+        let mut out = Vec::new();
+        let mut dst = vec![0u16; utf16_capacity_for(7 + 3)];
+        for chunk in text.as_bytes().chunks(7) {
+            let r = s.push(chunk, &mut dst).expect("valid");
+            out.extend_from_slice(&dst[..r.written]);
+        }
+        s.finish().expect("complete");
+        assert_eq!(out, expected);
+        let mut s16 = StreamingUtf16ToUtf8::best();
+        let mut out8 = Vec::new();
+        let mut dst8 = vec![0u8; utf8_capacity_for(5 + 1)];
+        for chunk in expected.chunks(5) {
+            let r = s16.push(chunk, &mut dst8).expect("valid");
+            out8.extend_from_slice(&dst8[..r.written]);
+        }
+        s16.finish().expect("complete");
+        assert_eq!(out8, text.as_bytes());
     }
 
     #[test]

@@ -17,11 +17,19 @@
 
 use crate::counters::Counters;
 use crate::scalar;
-use crate::simd::{U16x8, U8x16};
-use crate::tables::utf16_to_utf8::{ONE_TWO, ONE_TWO_THREE};
+use crate::simd::{shuffle32, SimdWords, U16x16, U16x8, U8x16, VectorBackend, V128};
+use crate::tables::utf16_to_utf8::{ONE_TWO, ONE_TWO_HI, ONE_TWO_THREE};
 use crate::transcode::{TranscodeError, TranscodeResult, Utf16ToUtf8};
+use std::marker::PhantomData;
 
-/// The paper's UTF-16 → UTF-8 transcoder ("ours" in Tables 9–10).
+/// The paper's UTF-16 → UTF-8 transcoder ("ours" in Tables 9–10),
+/// generic over the SIMD backend.
+///
+/// The backend parameter sets the classification width (8 or 16 words
+/// per dispatch) and the width of the ASCII pack; the 256-bit case-2
+/// path compresses through the widened [`ONE_TWO_HI`] table with a
+/// two-source permute, and case 3 reuses the shared half-register
+/// routine.
 ///
 /// Validation is effectively free: only registers containing surrogate
 /// candidates need any checking, so the paper reports a single
@@ -30,23 +38,39 @@ use crate::transcode::{TranscodeError, TranscodeResult, Utf16ToUtf8};
 /// for completeness and treats lone surrogates as replacement-free
 /// garbage input.
 #[derive(Clone, Copy, Debug)]
-pub struct OurUtf16ToUtf8 {
+pub struct OurUtf16ToUtf8<B: VectorBackend = V128> {
     validate: bool,
+    _backend: PhantomData<B>,
+}
+
+impl<B: VectorBackend> OurUtf16ToUtf8<B> {
+    /// Validating variant on an explicit backend
+    /// (`OurUtf16ToUtf8::<V256>::validating_on()`).
+    pub const fn validating_on() -> Self {
+        OurUtf16ToUtf8 { validate: true, _backend: PhantomData }
+    }
+
+    /// Non-validating variant on an explicit backend.
+    pub const fn non_validating_on() -> Self {
+        OurUtf16ToUtf8 { validate: false, _backend: PhantomData }
+    }
 }
 
 impl OurUtf16ToUtf8 {
+    /// Validating variant, default backend.
     pub const fn validating() -> Self {
-        OurUtf16ToUtf8 { validate: true }
+        Self::validating_on()
     }
 
+    /// Non-validating variant, default backend.
     pub const fn non_validating() -> Self {
-        OurUtf16ToUtf8 { validate: false }
+        Self::non_validating_on()
     }
 }
 
-impl Utf16ToUtf8 for OurUtf16ToUtf8 {
+impl<B: VectorBackend> Utf16ToUtf8 for OurUtf16ToUtf8<B> {
     fn name(&self) -> &'static str {
-        "ours"
+        B::ENGINE_NAME
     }
 
     fn validating(&self) -> bool {
@@ -54,18 +78,18 @@ impl Utf16ToUtf8 for OurUtf16ToUtf8 {
     }
 
     fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
-        convert_impl::<false>(src, dst, self.validate, &mut Counters::disabled())
+        convert_impl::<B, false>(src, dst, self.validate, &mut Counters::disabled())
     }
 }
 
-/// Convert with instrumentation (Table 8 support).
+/// Convert with instrumentation (Table 8 support; default backend).
 pub fn convert_counted(
     src: &[u16],
     dst: &mut [u8],
     validate: bool,
     counters: &mut Counters,
 ) -> TranscodeResult {
-    convert_impl::<true>(src, dst, validate, counters)
+    convert_impl::<V128, true>(src, dst, validate, counters)
 }
 
 /// Case 2: eight words, all `< 0x800`, to 8–16 bytes.
@@ -97,6 +121,36 @@ fn not16(v: U16x8) -> U16x8 {
         out[i] = !v.0[i];
     }
     U16x8(out)
+}
+
+/// Case 2 at 256-bit width: sixteen words, all `< 0x800`, to 16–32
+/// bytes.
+///
+/// Same branch-free structure as [`one_two_bytes`], one register wide:
+/// the 32-byte unpacked candidate vector is compressed half by half —
+/// the low half with the ordinary [`ONE_TWO`] mask, the high half with
+/// the widened [`ONE_TWO_HI`] mask through the two-source permute
+/// [`shuffle32`] (its sources sit above index 15, out of reach of a
+/// single-source 16-byte shuffle).
+#[inline]
+fn one_two_bytes_wide(words: &[u16], dst: &mut [u8]) -> usize {
+    debug_assert!(words.len() >= 16 && dst.len() >= 32);
+    let v = U16x16::load(words);
+    let is_ascii = v.lt_mask(U16x16::splat(0x80));
+    let lead = v.shr::<6>().or(U16x16::splat(0xC0));
+    let b0 = is_ascii.and(v).or(is_ascii.not().and(lead));
+    let b1 = v.and(U16x16::splat(0x3F)).or(U16x16::splat(0x80));
+    let unpacked = b0.or(b1.shl::<8>()).to_bytes();
+    let key = SimdWords::movemask(is_ascii);
+    let (lo, hi) = unpacked.to_halves();
+    let lo_entry = &ONE_TWO[(key & 0xFF) as usize];
+    let hi_entry = &ONE_TWO_HI[(key >> 8) as usize];
+    let out_lo = lo.shuffle(U8x16(lo_entry.mask));
+    let out_hi = shuffle32(lo, hi, U8x16(hi_entry.mask));
+    out_lo.store(dst);
+    let n_lo = lo_entry.count as usize;
+    out_hi.store(&mut dst[n_lo..]);
+    n_lo + hi_entry.count as usize
 }
 
 /// Case 3 helper: four words (all non-surrogate, any BMP value) to
@@ -170,60 +224,89 @@ pub fn one_two_three_half_pub(words: &[u16], dst: &mut [u8]) -> usize {
     one_two_three_half(words, dst)
 }
 
-fn convert_impl<const COUNT: bool>(
+/// Case 1: narrow `n` all-ASCII words to `n` bytes (`packus` + store).
+/// `n` is a multiple of 8; every word must be `< 0x80`.
+#[inline]
+fn pack_ascii(src: &[u16], dst: &mut [u8], n: usize) {
+    debug_assert!(n % 8 == 0 && src.len() >= n && dst.len() >= n);
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    unsafe {
+        use core::arch::x86_64::*;
+        let mut g = 0;
+        while g < n {
+            let x = _mm_loadu_si128(src.as_ptr().add(g) as *const __m128i);
+            let packed = _mm_packus_epi16(x, x);
+            _mm_storel_epi64(dst.as_mut_ptr().add(g) as *mut __m128i, packed);
+            g += 8;
+        }
+        return;
+    }
+    #[allow(unreachable_code)]
+    {
+        for i in 0..n {
+            dst[i] = src[i] as u8;
+        }
+    }
+}
+
+fn convert_impl<B: VectorBackend, const COUNT: bool>(
     src: &[u16],
     dst: &mut [u8],
     validate: bool,
     counters: &mut Counters,
 ) -> TranscodeResult {
+    // Words per register: 8 at 128-bit width, 16 at 256-bit.
+    let lanes = B::WIDTH / 2;
     let mut p = 0usize;
     let mut q = 0usize;
 
-    while p + 8 <= src.len() {
-        // Each register writes at most 24 bytes (+16 slack for full
-        // register stores).
-        if q + 32 > dst.len() {
+    while p + lanes <= src.len() {
+        // Each register writes at most `3 * lanes` bytes, plus 16 bytes
+        // of slack for full-register stores: `2 * WIDTH` covers both
+        // widths (32 bytes at 128-bit — the original bound — and 64 at
+        // 256-bit).
+        if q + 2 * B::WIDTH > dst.len() {
             return Err(TranscodeError::output_buffer(p));
         }
-        let v = U16x8::load(&src[p..]);
+        let v = <B::Words as SimdWords>::load(&src[p..]);
         let acc = v.reduce_or();
         if acc < 0x80 {
-            // Case 1: eight ASCII characters (`packus` + 8-byte store).
-            #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
-            unsafe {
-                use core::arch::x86_64::*;
-                let x = _mm_loadu_si128(v.0.as_ptr() as *const __m128i);
-                let packed = _mm_packus_epi16(x, x);
-                _mm_storel_epi64(dst.as_mut_ptr().add(q) as *mut __m128i, packed);
-            }
-            #[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
-            for i in 0..8 {
-                dst[q + i] = v.0[i] as u8;
-            }
-            p += 8;
-            q += 8;
+            // Case 1: `lanes` ASCII characters (`packus`-style narrowing
+            // store; the truncating loop autovectorizes).
+            pack_ascii(&src[p..], &mut dst[q..], lanes);
+            p += lanes;
+            q += lanes;
             if COUNT { counters.u16_ascii8 += 1; }
             continue;
         }
         if acc < 0x800 {
-            // Case 2: 1–2-byte characters only.
-            q += one_two_bytes(v, &mut dst[q..]);
-            p += 8;
+            // Case 2: 1–2-byte characters only. The 256-bit backend
+            // compresses a whole register through the widened table;
+            // narrower widths use the 8-word routine.
+            if B::WIDTH >= 32 {
+                q += one_two_bytes_wide(&src[p..], &mut dst[q..]);
+            } else {
+                q += one_two_bytes(U16x8::load(&src[p..]), &mut dst[q..]);
+            }
+            p += lanes;
             if COUNT { counters.u16_onetwo += 1; }
             continue;
         }
         if !v.has_surrogate() {
-            // Case 3: BMP, up to 3 bytes per character, two halves.
-            q += one_two_three_half(&src[p..p + 4], &mut dst[q..]);
-            q += one_two_three_half(&src[p + 4..p + 8], &mut dst[q..]);
-            p += 8;
+            // Case 3: BMP, up to 3 bytes per character, 4-word halves.
+            let mut h = 0;
+            while h < lanes {
+                q += one_two_three_half(&src[p + h..p + h + 4], &mut dst[q..]);
+                h += 4;
+            }
+            p += lanes;
             if COUNT { counters.u16_onetwothree += 1; }
             continue;
         }
         // Case 4: at least one surrogate candidate — conventional path
         // over this register (§5: the only place validation happens).
         if COUNT { counters.u16_surrogate_fallback += 1; }
-        let limit = p + 8;
+        let limit = p + lanes;
         while p < limit {
             match scalar::decode_utf16_char(&src[p..]) {
                 Ok((cp, n)) => {
@@ -285,6 +368,10 @@ mod tests {
         let mut dst = vec![0u8; utf8_capacity_for(units.len())];
         let n = engine.convert(&units, &mut dst).expect("valid input");
         assert_eq!(&dst[..n], text.as_bytes(), "{text:?}");
+        let wide = OurUtf16ToUtf8::<crate::simd::V256>::validating_on();
+        let mut dst2 = vec![0u8; utf8_capacity_for(units.len())];
+        let m = wide.convert(&units, &mut dst2).expect("valid input");
+        assert_eq!(&dst2[..m], text.as_bytes(), "256-bit {text:?}");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! as Algorithm 4.
 
 use crate::scalar;
+use crate::simd::{SimdBytes, VectorBackend, V128};
 use crate::transcode::{ErrorKind, TranscodeError, TranscodeResult};
 
 /// First invalid UTF-32 value at or after `from`, if any.
@@ -34,21 +35,29 @@ pub fn validate_utf32(input: &[u32]) -> bool {
 }
 
 /// UTF-8 → UTF-32, validating. Returns code points written, or the
-/// first error (kind + byte position).
+/// first error (kind + byte position). Default backend; see
+/// [`utf8_to_utf32_with`] to choose the width.
 pub fn utf8_to_utf32(src: &[u8], dst: &mut [u32]) -> TranscodeResult {
+    utf8_to_utf32_with::<V128>(src, dst)
+}
+
+/// UTF-8 → UTF-32 on an explicit backend: the ASCII fast path widens a
+/// full backend register per stride.
+pub fn utf8_to_utf32_with<B: VectorBackend>(src: &[u8], dst: &mut [u32]) -> TranscodeResult {
     let mut p = 0usize;
     let mut q = 0usize;
-    // ASCII fast path in 16-byte strides, scalar strict decode otherwise.
+    // ASCII fast path in backend-width strides, scalar strict decode
+    // otherwise.
     while p < src.len() {
-        if p + 16 <= src.len() && crate::simd::U8x16::load(&src[p..]).is_ascii() {
-            if q + 16 > dst.len() {
+        if p + B::WIDTH <= src.len() && <B::Bytes as SimdBytes>::load(&src[p..]).is_ascii() {
+            if q + B::WIDTH > dst.len() {
                 return Err(TranscodeError::output_buffer(p));
             }
-            for i in 0..16 {
+            for i in 0..B::WIDTH {
                 dst[q + i] = src[p + i] as u32;
             }
-            p += 16;
-            q += 16;
+            p += B::WIDTH;
+            q += B::WIDTH;
             continue;
         }
         let (cp, len) =
@@ -174,12 +183,16 @@ mod tests {
 
     #[test]
     fn ascii_fast_path_alignments() {
-        for pad in 0..20 {
-            let text = format!("{}é{}", "a".repeat(pad), "b".repeat(40));
+        use crate::simd::V256;
+        for pad in 0..40 {
+            let text = format!("{}é{}", "a".repeat(pad), "b".repeat(70));
+            let expected: Vec<u32> = text.chars().map(|c| c as u32).collect();
             let mut dst = vec![0u32; text.len() + 16];
             let n = utf8_to_utf32(text.as_bytes(), &mut dst).unwrap();
-            let expected: Vec<u32> = text.chars().map(|c| c as u32).collect();
             assert_eq!(&dst[..n], &expected[..]);
+            let mut dst2 = vec![0u32; text.len() + 32];
+            let m = utf8_to_utf32_with::<V256>(text.as_bytes(), &mut dst2).unwrap();
+            assert_eq!(&dst2[..m], &expected[..], "256-bit pad={pad}");
         }
     }
 }

@@ -22,32 +22,57 @@
 
 use crate::counters::Counters;
 use crate::scalar;
-use crate::simd::{is_ascii_block, not_continuation_mask64, U16x8, U8x16};
+use crate::simd::{
+    is_ascii_block, not_continuation_mask64, SimdWords, U16x8, U8x16, VectorBackend, V128,
+};
 use crate::tables::utf8_to_utf16::{CASE2_START, CASE3_START, TABLES};
 use crate::transcode::{classify_utf8_error, TranscodeError, TranscodeResult, Utf8ToUtf16};
 use crate::validate::Utf8Validator;
+use std::marker::PhantomData;
 
-/// The paper's UTF-8 → UTF-16 transcoder ("ours" in Tables 5–8).
+/// The paper's UTF-8 → UTF-16 transcoder ("ours" in Tables 5–8),
+/// generic over the SIMD backend.
+///
+/// The backend parameter controls the register width of the wide fast
+/// paths (ASCII runs, 2-byte runs) and of the interleaved Keiser–Lemire
+/// validator; the table-driven 12-byte-window core is shared — its
+/// shuffle masks are 16-byte `pshufb` layouts at every width (the
+/// paper's follow-up AVX-512 work restructures the windows themselves;
+/// that is a future backend, enabled by this layer).
 #[derive(Clone, Copy, Debug)]
-pub struct OurUtf8ToUtf16 {
+pub struct OurUtf8ToUtf16<B: VectorBackend = V128> {
     validate: bool,
+    _backend: PhantomData<B>,
+}
+
+impl<B: VectorBackend> OurUtf8ToUtf16<B> {
+    /// Validating variant on an explicit backend
+    /// (`OurUtf8ToUtf16::<V256>::validating_on()`).
+    pub const fn validating_on() -> Self {
+        OurUtf8ToUtf16 { validate: true, _backend: PhantomData }
+    }
+
+    /// Non-validating variant on an explicit backend.
+    pub const fn non_validating_on() -> Self {
+        OurUtf8ToUtf16 { validate: false, _backend: PhantomData }
+    }
 }
 
 impl OurUtf8ToUtf16 {
-    /// Validating variant (Table 6/7 configuration).
+    /// Validating variant (Table 6/7 configuration), default backend.
     pub const fn validating() -> Self {
-        OurUtf8ToUtf16 { validate: true }
+        Self::validating_on()
     }
 
-    /// Non-validating variant (Table 5 configuration).
+    /// Non-validating variant (Table 5 configuration), default backend.
     pub const fn non_validating() -> Self {
-        OurUtf8ToUtf16 { validate: false }
+        Self::non_validating_on()
     }
 }
 
-impl Utf8ToUtf16 for OurUtf8ToUtf16 {
+impl<B: VectorBackend> Utf8ToUtf16 for OurUtf8ToUtf16<B> {
     fn name(&self) -> &'static str {
-        "ours"
+        B::ENGINE_NAME
     }
 
     fn validating(&self) -> bool {
@@ -55,18 +80,18 @@ impl Utf8ToUtf16 for OurUtf8ToUtf16 {
     }
 
     fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
-        convert_impl::<false>(src, dst, self.validate, &mut Counters::disabled())
+        convert_impl::<B, false>(src, dst, self.validate, &mut Counters::disabled())
     }
 }
 
-/// Convert with instrumentation (Table 8 support).
+/// Convert with instrumentation (Table 8 support; default backend).
 pub fn convert_counted(
     src: &[u8],
     dst: &mut [u16],
     validate: bool,
     counters: &mut Counters,
 ) -> TranscodeResult {
-    convert_impl::<true>(src, dst, validate, counters)
+    convert_impl::<V128, true>(src, dst, validate, counters)
 }
 
 /// Widen 16 ASCII bytes into 16 UTF-16 words.
@@ -258,21 +283,22 @@ fn compose_case3(perm: U8x16, dst: &mut [u16]) -> usize {
 /// the error lies at most one block-plus-margin past `p`. A scalar
 /// re-scan from `p` (simdutf's `convert_with_errors` approach) then
 /// yields the exact kind and position at bounded cost.
-fn convert_impl<const COUNT: bool>(
+fn convert_impl<B: VectorBackend, const COUNT: bool>(
     src: &[u8],
     dst: &mut [u16],
     validate: bool,
     counters: &mut Counters,
 ) -> TranscodeResult {
     let tables = &*TABLES;
-    let mut validator = Utf8Validator::new();
+    let mut validator = Utf8Validator::<B>::new();
     let mut v_pos = 0usize; // validation frontier (multiple of 64)
     let mut p = 0usize;
     let mut q = 0usize;
 
-    // Main loop: a full 64-byte block plus a 16-byte safety margin for
-    // the unaligned window loads (windows start at most 51 bytes in).
-    while p + 80 <= src.len() {
+    // Main loop: a full 64-byte block plus a backend-width safety margin
+    // for the unaligned window loads (16-byte windows start at most 51
+    // bytes in; the 256-bit fast paths read 32 bytes from offsets <= 20).
+    while p + 64 + B::WIDTH <= src.len() {
         let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
         if is_ascii_block(block) {
             if q + 64 > dst.len() {
@@ -308,7 +334,7 @@ fn convert_impl<const COUNT: bool>(
             continue;
         }
         if validate {
-            while v_pos + 64 <= src.len() && v_pos < p + 80 {
+            while v_pos + 64 <= src.len() && v_pos < p + 64 + B::WIDTH {
                 let vb: &[u8; 64] = src[v_pos..v_pos + 64].try_into().unwrap();
                 validator.push64(vb);
                 v_pos += 64;
@@ -330,6 +356,42 @@ fn convert_impl<const COUNT: bool>(
                 return Err(TranscodeError::output_buffer(p + off));
             }
             let w = &src[p + off..];
+            // 256-bit fast paths: a 32-byte ASCII run or a 16-character
+            // 2-byte run, consumed in one register. Compiled out at
+            // narrower widths; offsets <= 20 keep the 32 consumed bits
+            // within the known range of `e` and the reads inside the
+            // loop margin. The extra output headroom (32 words for the
+            // ASCII widen) is a *condition* here, not a hard
+            // requirement: without it we fall through to the 16-byte
+            // paths, so the backend's capacity contract stays exactly
+            // the 128-bit one and a caller-sized buffer never sees a
+            // spurious `OutputBuffer` from the wide backend.
+            if B::WIDTH >= 32 && off <= 20 && q + 32 <= dst.len() {
+                let e32 = ((e >> off) & 0xFFFF_FFFF) as u32;
+                if e32 == 0xFFFF_FFFF {
+                    for i in 0..32 {
+                        dst[q + i] = w[i] as u16;
+                    }
+                    q += 32;
+                    off += 32;
+                    if COUNT { counters.fast_ascii16 += 2; }
+                    continue;
+                }
+                if e32 == 0xAAAA_AAAA {
+                    // Sixteen 2-byte characters (32 bytes): same bit math
+                    // as the 16-byte path, one backend-width register.
+                    let v = <B::Words as SimdWords>::load_le_bytes(w);
+                    let composed = v
+                        .and(<B::Words as SimdWords>::splat(0x1F))
+                        .shl::<6>()
+                        .or(v.shr::<8>().and(<B::Words as SimdWords>::splat(0x3F)));
+                    composed.store(&mut dst[q..]);
+                    q += 16;
+                    off += 32;
+                    if COUNT { counters.fast_twobyte8 += 2; }
+                    continue;
+                }
+            }
             let z16 = ((e >> off) & 0xFFFF) as u16;
             if z16 == 0xFFFF {
                 // Sixteen ASCII bytes.
@@ -464,11 +526,19 @@ mod tests {
     use crate::transcode::utf16_capacity_for;
 
     fn roundtrip(text: &str) {
+        let expected: Vec<u16> = text.encode_utf16().collect();
         for engine in [OurUtf8ToUtf16::validating(), OurUtf8ToUtf16::non_validating()] {
             let mut dst = vec![0u16; utf16_capacity_for(text.len())];
             let n = engine.convert(text.as_bytes(), &mut dst).expect("valid input");
-            let expected: Vec<u16> = text.encode_utf16().collect();
             assert_eq!(&dst[..n], &expected[..], "engine validate={}", engine.validate);
+        }
+        for engine in [
+            OurUtf8ToUtf16::<crate::simd::V256>::validating_on(),
+            OurUtf8ToUtf16::<crate::simd::V256>::non_validating_on(),
+        ] {
+            let mut dst = vec![0u16; utf16_capacity_for(text.len())];
+            let n = engine.convert(text.as_bytes(), &mut dst).expect("valid input");
+            assert_eq!(&dst[..n], &expected[..], "256-bit validate={}", engine.validate);
         }
     }
 
@@ -517,6 +587,44 @@ mod tests {
         for pad in 0..70 {
             let text = format!("{}é漢🙂{}", "x".repeat(pad), "y".repeat(80));
             roundtrip(&text);
+        }
+    }
+
+    #[test]
+    fn tight_buffer_units_plus_slack_suffices_on_both_backends() {
+        // The interleaved converter hands each half exactly
+        // `units + 16` words — tighter than `utf16_capacity_for` — so
+        // the wide backend must not demand more headroom than the
+        // 128-bit one (regression: the V256 window check used to
+        // reserve 32 words and spuriously reported OutputBuffer on
+        // dense 3-byte input).
+        for text in ["漢".repeat(700), format!("abc{}", "漢".repeat(699))] {
+            let expected: Vec<u16> = text.encode_utf16().collect();
+            let mut narrow_dst = vec![0u16; expected.len() + 16];
+            let n = OurUtf8ToUtf16::validating()
+                .convert(text.as_bytes(), &mut narrow_dst)
+                .expect("fits in units + 16");
+            assert_eq!(&narrow_dst[..n], &expected[..]);
+            let mut wide_dst = vec![0u16; expected.len() + 16];
+            let m = OurUtf8ToUtf16::<crate::simd::V256>::validating_on()
+                .convert(text.as_bytes(), &mut wide_dst)
+                .expect("wide backend must fit in units + 16 too");
+            assert_eq!(&wide_dst[..m], &expected[..]);
+        }
+    }
+
+    #[test]
+    fn wide_backend_rejects_at_same_position() {
+        let narrow = OurUtf8ToUtf16::validating();
+        let wide = OurUtf8ToUtf16::<crate::simd::V256>::validating_on();
+        for pos in [0usize, 15, 16, 31, 32, 63, 64, 79, 95, 96, 130] {
+            let mut bad = b"x".repeat(160);
+            bad[pos] = 0xC0;
+            let mut dst = vec![0u16; utf16_capacity_for(bad.len())];
+            let e1 = narrow.convert(&bad, &mut dst).expect_err("invalid");
+            let e2 = wide.convert(&bad, &mut dst).expect_err("invalid");
+            assert_eq!(e1, e2, "error at {pos}");
+            assert_eq!(e1.position, pos);
         }
     }
 

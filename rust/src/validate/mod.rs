@@ -1,163 +1,68 @@
-//! Vectorized input validation.
+//! Vectorized input validation, generic over the SIMD backend.
 //!
 //! * [`Utf8Validator`] — the Keiser–Lemire UTF-8 validator working in
-//!   16-byte registers over 64-byte blocks, exactly as the paper's
+//!   backend-width registers over 64-byte blocks, exactly as the paper's
 //!   validating UTF-8 → UTF-16 transcoder applies it (§4: "To validate
 //!   the input bytes, we apply the Keiser-Lemire approach which already
-//!   works in chunks of 64 bytes"). ASCII blocks short-circuit.
+//!   works in chunks of 64 bytes"). ASCII blocks short-circuit. The
+//!   validator is generic over [`VectorBackend`]: `Utf8Validator<V128>`
+//!   (the default) steps in 16-byte registers with the fused SSSE3 path,
+//!   `Utf8Validator<V256>` in 32-byte registers — both produce identical
+//!   verdicts (asserted below and by `tests/backend_equivalence.rs`).
 //! * [`validate_utf16le`] — UTF-16 validation: surrogate words must form
 //!   properly ordered pairs (§3). Vectorized scan for the common
 //!   surrogate-free case, scalar pairing check otherwise.
 
-use crate::simd::U8x16;
+use crate::simd::{SimdBytes, VectorBackend, V128};
 use crate::tables::keiser_lemire::{BYTE_1_HIGH, BYTE_1_LOW, BYTE_2_HIGH};
 
-/// Per-lane maxima for the incomplete-at-end check: a register is
-/// complete unless its last three bytes start a longer sequence.
-const INCOMPLETE_MAX: [u8; 16] = {
-    let mut m = [0xFFu8; 16];
-    m[13] = 0xF0 - 1;
-    m[14] = 0xE0 - 1;
-    m[15] = 0xC0 - 1;
-    m
-};
-
-/// Streaming Keiser–Lemire UTF-8 validator.
+/// Streaming Keiser–Lemire UTF-8 validator over backend `B`.
 ///
-/// Feed 16-byte registers (or whole 64-byte blocks) in input order, then
-/// call [`Utf8Validator::finish`]. The validator carries lookahead state
-/// between registers (`prev` bytes and the incomplete-sequence mask), so
-/// it can be interleaved with block-wise transcoding.
+/// Feed backend-width registers (or whole 64-byte blocks) in input
+/// order, then call [`Utf8Validator::finish`]. The validator carries
+/// lookahead state between registers (`prev` bytes and the
+/// incomplete-sequence mask), so it can be interleaved with block-wise
+/// transcoding.
 #[derive(Clone)]
-pub struct Utf8Validator {
-    error: U8x16,
-    prev_block: U8x16,
-    prev_incomplete: U8x16,
+pub struct Utf8Validator<B: VectorBackend = V128> {
+    error: B::Bytes,
+    prev_block: B::Bytes,
+    prev_incomplete: B::Bytes,
 }
 
-impl Default for Utf8Validator {
+impl<B: VectorBackend> Default for Utf8Validator<B> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Utf8Validator {
+impl<B: VectorBackend> Utf8Validator<B> {
     pub fn new() -> Self {
         Utf8Validator {
-            error: U8x16::ZERO,
-            prev_block: U8x16::ZERO,
-            prev_incomplete: U8x16::ZERO,
+            error: <B::Bytes as SimdBytes>::zero(),
+            prev_block: <B::Bytes as SimdBytes>::zero(),
+            prev_incomplete: <B::Bytes as SimdBytes>::zero(),
         }
     }
 
-    /// Classify one 16-byte register given the previous register.
+    /// Process one backend-width register (16 or 32 bytes).
+    ///
+    /// The per-register classification lives in [`SimdBytes::kl_step`]
+    /// so each backend can fuse it (`U8x16` carries the SSSE3
+    /// register-resident implementation; profiling showed the state
+    /// round-trips through `[u8; 16]` as the dominant cost otherwise).
     #[inline]
-    fn check_special_cases(input: U8x16, prev1: U8x16) -> U8x16 {
-        let byte_1_high = prev1.shr::<4>().lookup16(&BYTE_1_HIGH);
-        let byte_1_low = prev1.and(U8x16::splat(0x0F)).lookup16(&BYTE_1_LOW);
-        let byte_2_high = input.shr::<4>().lookup16(&BYTE_2_HIGH);
-        byte_1_high.and(byte_1_low).and(byte_2_high)
-    }
-
-    /// Where a byte *must* be the 2nd or 3rd continuation of a 3/4-byte
-    /// sequence, its TWO_CONTS special-case bit is expected; anywhere
-    /// else that bit (0x80) is an error — computed as an XOR.
-    #[inline]
-    fn check_multibyte_lengths(input: U8x16, prev_block: U8x16, sc: U8x16) -> U8x16 {
-        let prev2 = input.prev::<2>(prev_block);
-        let prev3 = input.prev::<3>(prev_block);
-        // byte >= 0xE0 (3-byte lead) two positions back, or >= 0xF0
-        // (4-byte lead) three positions back, forces a continuation here.
-        let is_third_byte = prev2.saturating_sub(U8x16::splat(0xE0 - 0x80));
-        let is_fourth_byte = prev3.saturating_sub(U8x16::splat(0xF0 - 0x80));
-        let must32 = is_third_byte.or(is_fourth_byte);
-        let must32_80 = must32.and(U8x16::splat(0x80));
-        must32_80.xor(sc)
-    }
-
-    /// Sequences that start in the last three bytes of a register are
-    /// incomplete *within* that register; if the input ends there, that
-    /// is an error (rule 2 of §3).
-    #[inline]
-    fn is_incomplete(input: U8x16) -> U8x16 {
-        input.saturating_sub(U8x16(INCOMPLETE_MAX))
-    }
-
-    /// Process one 16-byte register.
-    #[inline]
-    pub fn push16(&mut self, input: U8x16) {
-        #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
-        {
-            // Fused register-resident implementation: one load per
-            // state field, every intermediate stays in xmm registers.
-            // The generic path below round-trips each op through the
-            // `[u8; 16]` representation, which the profiler shows as
-            // the dominant cost (EXPERIMENTS.md §Perf, iteration 3).
-            unsafe { self.push16_x86(input) };
-            return;
-        }
-        #[allow(unreachable_code)]
-        {
-            if input.is_ascii() {
-                // An ASCII register cannot complete a pending multi-byte
-                // sequence: surface any carried incompleteness.
-                self.error = self.error.or(self.prev_incomplete);
-            } else {
-                let prev1 = input.prev::<1>(self.prev_block);
-                let sc = Self::check_special_cases(input, prev1);
-                self.error = self
-                    .error
-                    .or(Self::check_multibyte_lengths(input, self.prev_block, sc));
-            }
-            self.prev_incomplete = Self::is_incomplete(input);
-            self.prev_block = input;
-        }
-    }
-
-    /// SSSE3 implementation of [`Utf8Validator::push16`]; semantically
-    /// identical to the portable path (tested against it exhaustively).
-    #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
-    #[inline]
-    unsafe fn push16_x86(&mut self, input: U8x16) {
-        use core::arch::x86_64::*;
-        let inp = _mm_loadu_si128(input.0.as_ptr() as *const __m128i);
-        let low_nibble = _mm_set1_epi8(0x0F);
-        if _mm_movemask_epi8(inp) == 0 {
-            // ASCII register.
-            let err = _mm_loadu_si128(self.error.0.as_ptr() as *const __m128i);
-            let inc = _mm_loadu_si128(self.prev_incomplete.0.as_ptr() as *const __m128i);
-            let err = _mm_or_si128(err, inc);
-            _mm_storeu_si128(self.error.0.as_mut_ptr() as *mut __m128i, err);
-        } else {
-            let prv = _mm_loadu_si128(self.prev_block.0.as_ptr() as *const __m128i);
-            let prev1 = _mm_alignr_epi8(inp, prv, 15);
-            // Three nibble classifications (pshufb table lookups).
-            let t1h = _mm_loadu_si128(BYTE_1_HIGH.as_ptr() as *const __m128i);
-            let t1l = _mm_loadu_si128(BYTE_1_LOW.as_ptr() as *const __m128i);
-            let t2h = _mm_loadu_si128(BYTE_2_HIGH.as_ptr() as *const __m128i);
-            let hi1 = _mm_and_si128(_mm_srli_epi16(prev1, 4), low_nibble);
-            let lo1 = _mm_and_si128(prev1, low_nibble);
-            let hi2 = _mm_and_si128(_mm_srli_epi16(inp, 4), low_nibble);
-            let sc = _mm_and_si128(
-                _mm_and_si128(_mm_shuffle_epi8(t1h, hi1), _mm_shuffle_epi8(t1l, lo1)),
-                _mm_shuffle_epi8(t2h, hi2),
-            );
-            // must-be-2/3-continuation check.
-            let prev2 = _mm_alignr_epi8(inp, prv, 14);
-            let prev3 = _mm_alignr_epi8(inp, prv, 13);
-            let is_third = _mm_subs_epu8(prev2, _mm_set1_epi8((0xE0u8 - 0x80) as i8));
-            let is_fourth = _mm_subs_epu8(prev3, _mm_set1_epi8((0xF0u8 - 0x80) as i8));
-            let must32 = _mm_or_si128(is_third, is_fourth);
-            let must32_80 = _mm_and_si128(must32, _mm_set1_epi8(0x80u8 as i8));
-            let this_err = _mm_xor_si128(must32_80, sc);
-            let err = _mm_loadu_si128(self.error.0.as_ptr() as *const __m128i);
-            let err = _mm_or_si128(err, this_err);
-            _mm_storeu_si128(self.error.0.as_mut_ptr() as *mut __m128i, err);
-        }
-        // Incomplete-at-end mask.
-        let max_value = _mm_loadu_si128(INCOMPLETE_MAX.as_ptr() as *const __m128i);
-        let inc = _mm_subs_epu8(inp, max_value);
-        _mm_storeu_si128(self.prev_incomplete.0.as_mut_ptr() as *mut __m128i, inc);
+    pub fn push_vec(&mut self, input: B::Bytes) {
+        let (error, incomplete) = input.kl_step(
+            self.prev_block,
+            self.prev_incomplete,
+            self.error,
+            &BYTE_1_HIGH,
+            &BYTE_1_LOW,
+            &BYTE_2_HIGH,
+        );
+        self.error = error;
+        self.prev_incomplete = incomplete;
         self.prev_block = input;
     }
 
@@ -170,12 +75,14 @@ impl Utf8Validator {
     pub fn push64(&mut self, block: &[u8; 64]) {
         if crate::simd::is_ascii_block(block) {
             self.error = self.error.or(self.prev_incomplete);
-            self.prev_incomplete = U8x16::ZERO;
-            self.prev_block = U8x16::load(&block[48..]);
+            self.prev_incomplete = <B::Bytes as SimdBytes>::zero();
+            self.prev_block = <B::Bytes as SimdBytes>::load(&block[64 - B::WIDTH..]);
             return;
         }
-        for i in 0..4 {
-            self.push16(U8x16::load(&block[16 * i..]));
+        let mut i = 0;
+        while i < 64 {
+            self.push_vec(<B::Bytes as SimdBytes>::load(&block[i..]));
+            i += B::WIDTH;
         }
     }
 
@@ -187,22 +94,22 @@ impl Utf8Validator {
     pub fn skip64_ascii(&mut self, block: &[u8; 64]) {
         debug_assert!(crate::simd::is_ascii_block(block));
         self.error = self.error.or(self.prev_incomplete);
-        self.prev_incomplete = U8x16::ZERO;
-        self.prev_block = U8x16::load(&block[48..]);
+        self.prev_incomplete = <B::Bytes as SimdBytes>::zero();
+        self.prev_block = <B::Bytes as SimdBytes>::load(&block[64 - B::WIDTH..]);
     }
 
     /// Process an arbitrary-length tail (zero-padded to register size;
     /// zero padding is ASCII and never masks an error).
     pub fn push_tail(&mut self, tail: &[u8]) {
-        let mut chunks = tail.chunks_exact(16);
+        let mut chunks = tail.chunks_exact(B::WIDTH);
         for c in chunks.by_ref() {
-            self.push16(U8x16::load(c));
+            self.push_vec(<B::Bytes as SimdBytes>::load(c));
         }
         let rem = chunks.remainder();
         if !rem.is_empty() {
-            let mut buf = [0u8; 16];
+            let mut buf = [0u8; 64]; // covers every backend width
             buf[..rem.len()].copy_from_slice(rem);
-            self.push16(U8x16(buf));
+            self.push_vec(<B::Bytes as SimdBytes>::load(&buf));
         }
     }
 
@@ -221,9 +128,15 @@ impl Utf8Validator {
     }
 }
 
-/// Validate a whole byte slice as UTF-8 (convenience wrapper).
+/// Validate a whole byte slice as UTF-8 (convenience wrapper, default
+/// backend).
 pub fn validate_utf8(input: &[u8]) -> bool {
-    let mut v = Utf8Validator::new();
+    validate_utf8_with::<V128>(input)
+}
+
+/// Validate a whole byte slice as UTF-8 on an explicit backend.
+pub fn validate_utf8_with<B: VectorBackend>(input: &[u8]) -> bool {
+    let mut v = Utf8Validator::<B>::new();
     v.push_tail(input);
     v.finish()
 }
@@ -259,12 +172,15 @@ pub fn validate_utf16le(input: &[u16]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simd::V256;
 
     fn check(bytes: &[u8]) {
+        let expected = std::str::from_utf8(bytes).is_ok();
+        assert_eq!(validate_utf8(bytes), expected, "bytes {bytes:02x?}");
         assert_eq!(
-            validate_utf8(bytes),
-            std::str::from_utf8(bytes).is_ok(),
-            "bytes {bytes:02x?}"
+            validate_utf8_with::<V256>(bytes),
+            expected,
+            "256-bit backend disagrees on {bytes:02x?}"
         );
     }
 
@@ -332,24 +248,60 @@ mod tests {
         buf2.push(0xC3); // dangling at exactly a block edge
         check(&buf2);
         // followed by ascii-only register in next call order
-        let mut v = Utf8Validator::new();
+        let mut v = Utf8Validator::<V128>::new();
+        v.push_tail(&buf2);
+        assert!(!v.finish());
+        let mut v = Utf8Validator::<V256>::new();
         v.push_tail(&buf2);
         assert!(!v.finish());
     }
 
     #[test]
     fn exhaustive_two_byte_space() {
-        // All 65536 2-byte combinations, embedded in ASCII context.
+        // All 65536 2-byte combinations, embedded in ASCII context, on
+        // both backends.
         for hi in 0..=255u8 {
             for lo in 0..=255u8 {
                 let buf = [b'a', hi, lo, b'b'];
+                let expected = std::str::from_utf8(&buf).is_ok();
+                assert_eq!(validate_utf8(&buf), expected, "{hi:02x} {lo:02x}");
                 assert_eq!(
-                    validate_utf8(&buf),
-                    std::str::from_utf8(&buf).is_ok(),
-                    "{hi:02x} {lo:02x}"
+                    validate_utf8_with::<V256>(&buf),
+                    expected,
+                    "256-bit {hi:02x} {lo:02x}"
                 );
             }
         }
+    }
+
+    #[test]
+    fn block_api_matches_tail_api() {
+        // push64/skip64_ascii deliver the same verdict as push_tail at
+        // both widths, including carried incompleteness across blocks.
+        let mut text = "x".repeat(61).into_bytes();
+        text.extend_from_slice("é漢🙂 and more text to fill a second block".as_bytes());
+        text.resize(128, b'y');
+        fn by_blocks<B: VectorBackend>(bytes: &[u8]) -> bool {
+            let mut v = Utf8Validator::<B>::new();
+            let mut p = 0;
+            while p + 64 <= bytes.len() {
+                let block: &[u8; 64] = bytes[p..p + 64].try_into().unwrap();
+                if crate::simd::is_ascii_block(block) {
+                    v.skip64_ascii(block);
+                } else {
+                    v.push64(block);
+                }
+                p += 64;
+            }
+            v.push_tail(&bytes[p..]);
+            v.finish()
+        }
+        assert!(by_blocks::<V128>(&text));
+        assert!(by_blocks::<V256>(&text));
+        let mut bad = text.clone();
+        bad[70] = 0xFF;
+        assert!(!by_blocks::<V128>(&bad));
+        assert!(!by_blocks::<V256>(&bad));
     }
 
     #[test]

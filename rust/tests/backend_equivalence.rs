@@ -1,0 +1,205 @@
+//! Differential property suite for the width-generic backend layer.
+//!
+//! Invariants (the acceptance gate for the `simd128`/`simd256`/`best`
+//! registry keys):
+//!
+//! 1. ∀ corpus profiles: every UTF-8→UTF-16 registry entry — both width
+//!    backends, the `best` alias and every baseline — produces output
+//!    byte-identical to the scalar/std reference, and likewise for
+//!    every UTF-16→UTF-8 entry.
+//! 2. ∀ inputs straddling 16- and 32-byte lane boundaries (and the
+//!    64-byte block and 80/96-byte margin boundaries): same property.
+//! 3. ∀ corrupted inputs: every *validating* entry reports the same
+//!    `TranscodeError` — identical kind and identical position — as
+//!    `std::str::from_utf8` / the std UTF-16 decoder.
+//! 4. The streaming transcoders produce identical outputs when run over
+//!    an explicit width backend.
+
+use simdutf_rs::corpus::SplitMix64;
+use simdutf_rs::prelude::*;
+use simdutf_rs::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+/// UTF-8 text whose multi-byte characters slide across every interesting
+/// lane/block boundary for both register widths.
+fn boundary_samples() -> Vec<String> {
+    let mut samples = Vec::new();
+    // Multi-byte characters of each width straddling 16/32/64/80/96.
+    for unit in ["é", "ร", "漢", "🙂"] {
+        for boundary in [16usize, 32, 48, 64, 80, 96, 128] {
+            for shift in 0..4 {
+                let pad = boundary.saturating_sub(shift + 1);
+                samples.push(format!("{}{}{}", "a".repeat(pad), unit, "b".repeat(140)));
+            }
+        }
+    }
+    // Dense multi-byte runs whose length sits on each boundary.
+    for unit in ["é", "漢", "🙂"] {
+        for n in [5usize, 8, 11, 16, 21, 27, 32, 43] {
+            samples.push(unit.repeat(n));
+        }
+    }
+    // Mixed content exercising every window case at both widths.
+    samples.push("ASCII → воскресенье → 漢字テスト → 🙂🚀🌍 → mixed tail xyz".repeat(9));
+    samples
+}
+
+#[test]
+fn all_utf8_engines_agree_on_corpora() {
+    for lang in [Language::Arabic, Language::Chinese, Language::Emoji, Language::Latin] {
+        let corpus = Corpus::generate(lang, Collection::Lipsum);
+        let input = corpus.utf8_prefix(48 * 1024);
+        let expected: Vec<u16> = std::str::from_utf8(input)
+            .expect("corpus is valid")
+            .encode_utf16()
+            .collect();
+        for entry in Registry::global().utf8_entries() {
+            if !entry.engine.supports_supplemental() && lang == Language::Emoji {
+                continue;
+            }
+            let out = entry.engine.convert_to_vec(input).expect("corpus is valid");
+            assert_eq!(out, expected, "{} on {}", entry.key, corpus.name());
+        }
+    }
+}
+
+#[test]
+fn all_utf16_engines_agree_on_corpora() {
+    for lang in [Language::Arabic, Language::Chinese, Language::Emoji, Language::Latin] {
+        let corpus = Corpus::generate(lang, Collection::Lipsum);
+        let input = corpus.utf16_prefix(24 * 1024);
+        let expected: Vec<u8> = char::decode_utf16(input.iter().copied())
+            .collect::<Result<String, _>>()
+            .expect("corpus is valid")
+            .into_bytes();
+        for entry in Registry::global().utf16_entries() {
+            let out = entry.engine.convert_to_vec(input).expect("corpus is valid");
+            assert_eq!(out, expected, "{} on {}", entry.key, corpus.name());
+        }
+    }
+}
+
+#[test]
+fn lane_boundary_inputs_agree_across_backends() {
+    for text in boundary_samples() {
+        let expected: Vec<u16> = text.encode_utf16().collect();
+        let label: String = text.chars().take(12).collect();
+        for entry in Registry::global().utf8_entries() {
+            if !entry.engine.supports_supplemental() && text.contains('🙂') {
+                continue;
+            }
+            let out = entry.engine.convert_to_vec(text.as_bytes()).expect("valid input");
+            assert_eq!(out, expected, "{} on {label:?}…", entry.key);
+        }
+        for entry in Registry::global().utf16_entries() {
+            let out = entry.engine.convert_to_vec(&expected).expect("valid input");
+            assert_eq!(out, text.as_bytes(), "{} on {label:?}…", entry.key);
+        }
+    }
+}
+
+#[test]
+fn utf8_error_positions_identical_across_backends() {
+    // Corrupt valid text at positions that land in every region of the
+    // width-generic kernel: ASCII block path, wide fast paths, window
+    // core, margins, scalar tail.
+    let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
+    let base = corpus.utf8_prefix(4 * 1024).to_vec();
+    let validating: Vec<_> = Registry::global()
+        .utf8_entries()
+        .iter()
+        .filter(|e| e.engine.validating())
+        .collect();
+    assert!(validating.iter().any(|e| e.key == "simd256"));
+    for &bad_byte in &[0xFFu8, 0x80, 0xC0, 0xED, 0xF5] {
+        for pos in [0usize, 15, 16, 31, 32, 51, 63, 64, 79, 80, 95, 96, 1000, 4000] {
+            let mut data = base.clone();
+            data[pos] = bad_byte;
+            let Err(std_err) = std::str::from_utf8(&data) else {
+                continue;
+            };
+            let expected_pos = std_err.valid_up_to();
+            let mut reported = Vec::new();
+            let mut dst = vec![0u16; utf16_capacity_for(data.len())];
+            for entry in &validating {
+                let err = entry
+                    .engine
+                    .convert(&data, &mut dst)
+                    .expect_err("std rejected this input");
+                assert_eq!(
+                    err.position, expected_pos,
+                    "{} bad={bad_byte:02x} pos={pos}",
+                    entry.key
+                );
+                reported.push((entry.key, err));
+            }
+            let first = reported[0].1;
+            for (key, err) in &reported {
+                assert_eq!(*err, first, "{key} disagrees at pos={pos}");
+            }
+        }
+    }
+}
+
+#[test]
+fn utf16_error_positions_identical_across_backends() {
+    let corpus = Corpus::generate(Language::Emoji, Collection::Lipsum);
+    let base = corpus.utf16_prefix(2 * 1024).to_vec();
+    let mut rng = SplitMix64::new(0xB0BA);
+    for trial in 0..200 {
+        let mut data = base.clone();
+        let pos = rng.below(data.len() as u64) as usize;
+        // Plant an unpaired surrogate.
+        data[pos] = if trial % 2 == 0 { 0xD800 } else { 0xDC00 };
+        let expected = {
+            let mut p = 0usize;
+            let mut found = None;
+            for item in char::decode_utf16(data.iter().copied()) {
+                match item {
+                    Ok(c) => p += c.len_utf16(),
+                    Err(_) => {
+                        found = Some(p);
+                        break;
+                    }
+                }
+            }
+            found
+        };
+        let mut dst = vec![0u8; utf8_capacity_for(data.len())];
+        for entry in Registry::global().utf16_entries() {
+            if !entry.engine.validating() {
+                continue;
+            }
+            match (entry.engine.convert(&data, &mut dst), expected) {
+                (Ok(_), None) => {}
+                (Err(err), Some(p)) => {
+                    assert_eq!(err.position, p, "{} trial {trial}", entry.key);
+                }
+                (got, want) => panic!(
+                    "{} trial {trial}: verdict mismatch ({got:?} vs std {want:?})",
+                    entry.key
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_over_wide_backend_matches_one_shot() {
+    use simdutf_rs::simd::V256;
+    use simdutf_rs::transcode::utf8_to_utf16::OurUtf8ToUtf16;
+    let text = "stream: ascii, éé, 漢字, 🙂 — ".repeat(40);
+    let expected: Vec<u16> = text.encode_utf16().collect();
+    for chunk_size in [1usize, 3, 16, 31, 32, 57] {
+        let mut stream = simdutf_rs::transcode::streaming::StreamingUtf8ToUtf16::with_engine(
+            OurUtf8ToUtf16::<V256>::validating_on(),
+        );
+        let mut out = Vec::new();
+        let mut buf = vec![0u16; utf16_capacity_for(chunk_size + 3)];
+        for chunk in text.as_bytes().chunks(chunk_size) {
+            let fed = stream.push(chunk, &mut buf).expect("valid");
+            out.extend_from_slice(&buf[..fed.written]);
+        }
+        stream.finish().expect("complete");
+        assert_eq!(out, expected, "chunk={chunk_size}");
+    }
+}

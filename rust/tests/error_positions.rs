@@ -28,12 +28,20 @@ fn std_utf16_error_pos(units: &[u16]) -> Option<usize> {
     None
 }
 
+// Enumerate the *full* registry entry list (not just the paper-table
+// set) so the width-explicit `simd128`/`simd256`/`best` backends are
+// exercised by every property here.
 fn validating_utf8_engines() -> Vec<&'static dyn Utf8ToUtf16> {
     Registry::global()
-        .all_utf8()
-        .into_iter()
+        .utf8_entries()
+        .iter()
+        .map(|e| e.engine.as_ref())
         .filter(|e| e.validating())
         .collect()
+}
+
+fn all_utf16_engines() -> Vec<&'static dyn Utf16ToUtf8> {
+    Registry::global().utf16_entries().iter().map(|e| e.engine.as_ref()).collect()
 }
 
 #[test]
@@ -132,7 +140,7 @@ fn truncated_prefix_reports_too_short_at_cut_character() {
 
 #[test]
 fn utf16_positions_match_std_decoder() {
-    let engines = Registry::global().all_utf16();
+    let engines = all_utf16_engines();
     for seed in 0..400u64 {
         let mut rng = SplitMix64::new(seed ^ 0x1616_1616);
         let len = rng.below(120) as usize;
@@ -173,7 +181,7 @@ fn utf16_positions_match_std_decoder() {
 
 #[test]
 fn lone_high_at_end_is_too_short_elsewhere_surrogate() {
-    for engine in Registry::global().all_utf16() {
+    for engine in all_utf16_engines() {
         let mut dst = vec![0u8; 64];
         let err = engine.convert(&[0x41, 0xD800], &mut dst).expect_err("unpaired");
         assert_eq!((err.kind, err.position), (ErrorKind::TooShort, 1), "{}", engine.name());

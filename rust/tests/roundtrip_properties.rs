@@ -33,18 +33,21 @@ fn random_string(rng: &mut SplitMix64, max_chars: u64) -> String {
     (0..n).map(|_| random_char(rng)).collect()
 }
 
-/// Every UTF-8→UTF-16 engine, via the unified registry (Inoue excluded:
-/// it does not support the supplemental-plane strings generated here).
+/// Every UTF-8→UTF-16 engine — the registry's *full* entry list, so the
+/// width-explicit `simd128`/`simd256`/`best` backends are property-
+/// tested alongside the paper set (Inoue excluded: it does not support
+/// the supplemental-plane strings generated here).
 fn utf8_engines() -> Vec<&'static dyn Utf8ToUtf16> {
     Registry::global()
-        .all_utf8()
-        .into_iter()
+        .utf8_entries()
+        .iter()
+        .map(|e| e.engine.as_ref())
         .filter(|e| e.supports_supplemental())
         .collect()
 }
 
 fn utf16_engines() -> Vec<&'static dyn Utf16ToUtf8> {
-    Registry::global().all_utf16()
+    Registry::global().utf16_entries().iter().map(|e| e.engine.as_ref()).collect()
 }
 
 #[test]
@@ -84,8 +87,9 @@ fn prop_every_utf16_engine_matches_std_on_random_strings() {
 #[test]
 fn prop_validating_engines_agree_with_std_on_byte_soup() {
     let engines: Vec<&dyn Utf8ToUtf16> = Registry::global()
-        .all_utf8()
-        .into_iter()
+        .utf8_entries()
+        .iter()
+        .map(|e| e.engine.as_ref())
         .filter(|e| e.validating())
         .collect();
     for seed in 0..600u64 {
@@ -129,8 +133,9 @@ fn prop_validating_engines_agree_with_std_on_byte_soup() {
 #[test]
 fn prop_non_validating_engines_are_total_on_byte_soup() {
     let engines: Vec<&dyn Utf8ToUtf16> = Registry::global()
-        .all_utf8()
-        .into_iter()
+        .utf8_entries()
+        .iter()
+        .map(|e| e.engine.as_ref())
         .filter(|e| !e.validating())
         .collect();
     for seed in 0..300u64 {
