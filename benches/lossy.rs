@@ -1,0 +1,89 @@
+//! `cargo bench --bench lossy` — the dirty-input workload.
+//!
+//! Sweeps **lossy** conversion (`convert_lossy`, WHATWG U+FFFD
+//! replacement) over every validating registry engine, on the paper's
+//! lipsum corpora both clean and under each corruption profile of
+//! [`simdutf_rs::corpus::DIRT_PROFILES`]. Two claims are on display:
+//!
+//! * on **clean** input, lossy throughput equals strict throughput
+//!   (the resume loop costs one `convert` call — the head-to-head
+//!   table at the end makes the comparison explicit);
+//! * on **dirty** input, throughput degrades smoothly with the
+//!   corruption rate (each error pays a bounded scalar re-scan, not a
+//!   restart).
+//!
+//! Budget per cell via `SIMDUTF_BENCH_BUDGET_MS` (default 200 ms).
+
+use simdutf_rs::corpus::{generate_collection, Collection, DirtProfile, DIRT_PROFILES};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::harness;
+
+fn main() {
+    let corpora = generate_collection(Collection::Lipsum);
+    let r = Registry::global();
+
+    // One pseudo-profile for the clean pass, then the real ones.
+    let passes: Vec<(String, Option<DirtProfile>)> =
+        std::iter::once(("clean".to_string(), None))
+            .chain(DIRT_PROFILES.iter().map(|&p| (p.label.to_string(), Some(p))))
+            .collect();
+
+    for (label, profile) in &passes {
+        println!("Lossy UTF-8→UTF-16 (input MB/s), lipsum, {label}");
+        for entry in r.utf8_lossy_entries() {
+            print!("  {:>10}", entry.key);
+            for corpus in &corpora {
+                let bytes = match profile {
+                    None => corpus.utf8.clone(),
+                    Some(p) => corpus.dirty_utf8(*p, 0xD1A7),
+                };
+                let v = harness::bench_utf8_engine_lossy_mbps(entry.engine.as_ref(), &bytes);
+                print!("  {:>9}", format!("{v:.0}"));
+            }
+            println!();
+        }
+        print!("  {:>10}", "");
+        for corpus in &corpora {
+            print!("  {:>9}", corpus.name());
+        }
+        println!("\n");
+    }
+
+    for (label, profile) in &passes {
+        println!("Lossy UTF-16→UTF-8 (input MB/s), lipsum, {label}");
+        for entry in r.utf16_lossy_entries() {
+            print!("  {:>10}", entry.key);
+            for corpus in &corpora {
+                let words = match profile {
+                    None => corpus.utf16.clone(),
+                    Some(p) => corpus.dirty_utf16(*p, 0xD1A7),
+                };
+                let v = harness::bench_utf16_engine_lossy_mbps(entry.engine.as_ref(), &words);
+                print!("  {:>9}", format!("{v:.0}"));
+            }
+            println!();
+        }
+        print!("  {:>10}", "");
+        for corpus in &corpora {
+            print!("  {:>9}", corpus.name());
+        }
+        println!("\n");
+    }
+
+    // Head-to-head on valid input: the lossy wrapper must be free.
+    println!("Valid-input overhead check, `best` engine (strict vs lossy MB/s)");
+    let best = r.get_utf8("best").expect("registry always has best");
+    for corpus in &corpora {
+        let strict = harness::bench_utf8_engine_mbps(best, corpus);
+        let l = harness::bench_utf8_engine_lossy_mbps(best, &corpus.utf8);
+        if let Some(s) = strict {
+            println!(
+                "  {:>9}  strict {:>8}  lossy {:>8}  ratio {:.3}",
+                corpus.name(),
+                format!("{s:.0}"),
+                format!("{l:.0}"),
+                l / s
+            );
+        }
+    }
+}

@@ -34,6 +34,21 @@ fn main() {
     assert_eq!(err.position, std::str::from_utf8(&corrupted).unwrap_err().valid_up_to());
     println!("corrupted input rejected with `{err}`: ok");
 
+    // --- lossy conversion: repair instead of reject ---
+    // `convert` reports the first error; `convert_lossy` replaces each
+    // maximal invalid subpart with U+FFFD (exactly like
+    // `String::from_utf8_lossy`) and keeps going.
+    let (repaired, info) = engine.convert_lossy_to_vec(&corrupted).expect("lossy is total");
+    assert_eq!(
+        String::from_utf16(&repaired).unwrap(),
+        String::from_utf8_lossy(&corrupted)
+    );
+    println!(
+        "lossy conversion replaced {} subpart(s), first error at {}: ok",
+        info.replacements,
+        info.first_error.expect("input was corrupted").position
+    );
+
     // --- streaming: arbitrary chunk boundaries, same results ---
     let mut stream = StreamingUtf8ToUtf16::new();
     let mut streamed = Vec::new();

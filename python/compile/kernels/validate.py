@@ -178,37 +178,38 @@ ERROR_KINDS = (
 def _decode_one(data, p):
     """Strict scalar decode of one character at ``data[p:]``.
 
-    Returns ``(length, None)`` on success or ``(None, kind)`` on error —
-    the same classification as Rust ``scalar::decode_utf8_char``.
+    Returns ``(length, cp, None)`` on success or ``(None, None, kind)``
+    on error — the same classification as Rust
+    ``scalar::decode_utf8_char``.
     """
     b0 = data[p]
     if b0 < 0x80:
-        return 1, None
+        return 1, b0, None
     if b0 < 0xC0:
-        return None, "too_long"
+        return None, None, "too_long"
     if b0 < 0xC2:
-        return None, "overlong"
+        return None, None, "overlong"
     if 0xF5 <= b0 < 0xF8:
-        return None, "too_large"
+        return None, None, "too_large"
     if b0 >= 0xF8:
-        return None, "header_bits"
+        return None, None, "header_bits"
     n = 2 if b0 < 0xE0 else 3 if b0 < 0xF0 else 4
     cp = b0 & (0x7F >> n)
     for i in range(1, n):
         if p + i >= len(data) or (data[p + i] & 0xC0) != 0x80:
-            return None, "too_short"
+            return None, None, "too_short"
         cp = (cp << 6) | (data[p + i] & 0x3F)
     if n == 3:
         if cp < 0x800:
-            return None, "overlong"
+            return None, None, "overlong"
         if 0xD800 <= cp <= 0xDFFF:
-            return None, "surrogate"
+            return None, None, "surrogate"
     elif n == 4:
         if cp < 0x10000:
-            return None, "overlong"
+            return None, None, "overlong"
         if cp > 0x10FFFF:
-            return None, "too_large"
-    return n, None
+            return None, None, "too_large"
+    return n, cp, None
 
 
 def classify_utf8_error(data):
@@ -221,11 +222,94 @@ def classify_utf8_error(data):
     data = bytes(data)
     p = 0
     while p < len(data):
-        length, kind = _decode_one(data, p)
+        length, _cp, kind = _decode_one(data, p)
         if kind is not None:
             return {"kind": kind, "position": p}
         p += length
     return None
+
+
+# ---------------------------------------------------------------------------
+# Lossy transcoding mirror.
+
+#: U+FFFD REPLACEMENT CHARACTER as a UTF-16 code unit.
+REPLACEMENT = 0xFFFD
+
+
+def _maximal_subpart_len(data, p):
+    """Length of the maximal invalid subpart at ``data[p]``.
+
+    Mirror of Rust ``scalar::utf8_maximal_subpart_len`` (the WHATWG
+    "U+FFFD substitution of maximal subparts" policy CPython's
+    ``errors='replace'`` also implements): one replacement covers the
+    longest prefix of a well-formed sequence, or a single byte when the
+    lead (or its first continuation) can start nothing.
+    """
+    b0 = data[p]
+    if 0xC2 <= b0 <= 0xDF:
+        lo, hi, n = 0x80, 0xBF, 2
+    elif b0 == 0xE0:
+        lo, hi, n = 0xA0, 0xBF, 3
+    elif 0xE1 <= b0 <= 0xEC or 0xEE <= b0 <= 0xEF:
+        lo, hi, n = 0x80, 0xBF, 3
+    elif b0 == 0xED:
+        lo, hi, n = 0x80, 0x9F, 3
+    elif b0 == 0xF0:
+        lo, hi, n = 0x90, 0xBF, 4
+    elif 0xF1 <= b0 <= 0xF3:
+        lo, hi, n = 0x80, 0xBF, 4
+    elif b0 == 0xF4:
+        lo, hi, n = 0x80, 0x8F, 4
+    else:
+        return 1
+    if p + 1 >= len(data) or not (lo <= data[p + 1] <= hi):
+        return 1
+    i = 2
+    while p + i < len(data) and i < n:
+        if (data[p + i] & 0xC0) != 0x80:
+            return i
+        i += 1
+    return min(i, len(data) - p)
+
+
+def _encode_utf16(cp):
+    if cp < 0x10000:
+        return [cp]
+    v = cp - 0x10000
+    return [0xD800 + (v >> 10), 0xDC00 + (v & 0x3FF)]
+
+
+def transcode_lossy(data):
+    """Lossy UTF-8 → UTF-16: mirror of Rust ``Utf8ToUtf16::convert_lossy``.
+
+    Replaces each maximal invalid subpart with U+FFFD (WHATWG policy,
+    identical to ``bytes(data).decode('utf-8', errors='replace')`` and
+    Rust's ``String::from_utf8_lossy``) and returns::
+
+        {"utf16": [code units], "replacements": n,
+         "first_error": {"kind", "position"} | None}
+
+    matching the fields of the Rust ``LossyResult`` — so Python and Rust
+    harness records for the dirty-input workload are directly
+    comparable.
+    """
+    data = bytes(data)
+    out = []
+    replacements = 0
+    first_error = None
+    p = 0
+    while p < len(data):
+        length, cp, kind = _decode_one(data, p)
+        if kind is None:
+            out.extend(_encode_utf16(cp))
+            p += length
+        else:
+            if first_error is None:
+                first_error = {"kind": kind, "position": p}
+            out.append(REPLACEMENT)
+            replacements += 1
+            p += _maximal_subpart_len(data, p)
+    return {"utf16": out, "replacements": replacements, "first_error": first_error}
 
 
 def error_records(blocks, lengths):

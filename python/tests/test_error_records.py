@@ -4,14 +4,18 @@ Standalone from test_kernel.py so it runs without `hypothesis`; only the
 `error_records` test needs the (jax) validation kernel.
 """
 
+import random
+
 import numpy as np
 import pytest
 
 from compile.kernels import ref
 from compile.kernels.validate import (
     ERROR_KINDS,
+    REPLACEMENT,
     classify_utf8_error,
     error_records,
+    transcode_lossy,
 )
 from compile.kernels.utf8_to_utf16 import BLOCK_ROWS
 
@@ -67,6 +71,61 @@ def test_classifier_kinds_match_rust_convention():
 def test_classifier_accepts_valid_text():
     for text in ["", "ascii", "héllo wörld", "漢字テスト", "🙂🚀"]:
         assert classify_utf8_error(text.encode("utf-8")) is None, text
+
+
+def _cpython_lossy_utf16(data: bytes):
+    """Oracle: CPython's WHATWG replacement decode, as UTF-16 units."""
+    s = data.decode("utf-8", errors="replace")
+    out = []
+    for ch in s:
+        cp = ord(ch)
+        if cp < 0x10000:
+            out.append(cp)
+        else:
+            v = cp - 0x10000
+            out.extend([0xD800 + (v >> 10), 0xDC00 + (v & 0x3FF)])
+    return out
+
+
+@pytest.mark.parametrize("bad", BAD_SEQUENCES, ids=range(len(BAD_SEQUENCES)))
+def test_transcode_lossy_matches_cpython_replace(bad):
+    """The Rust `convert_lossy` mirror == errors='replace', unit for unit."""
+    for prefix in [b"", b"xy", "héllo ".encode("utf-8")]:
+        for suffix in [b"", b" tail", "🙂".encode("utf-8")]:
+            data = prefix + bad + suffix
+            res = transcode_lossy(data)
+            assert res["utf16"] == _cpython_lossy_utf16(data), data
+            # None of the constructed inputs contain a literal U+FFFD.
+            assert res["replacements"] == res["utf16"].count(REPLACEMENT), data
+            rec = classify_utf8_error(data)
+            assert res["first_error"] == rec, data
+
+
+def test_transcode_lossy_clean_input():
+    for text in ["", "ascii", "héllo wörld", "漢字テスト", "🙂🚀"]:
+        res = transcode_lossy(text.encode("utf-8"))
+        assert res["replacements"] == 0
+        assert res["first_error"] is None
+        assert res["utf16"] == _cpython_lossy_utf16(text.encode("utf-8"))
+
+
+def test_transcode_lossy_random_corruption_seeds():
+    """Seeded fuzz (no hypothesis dependency): random byte corruption of
+    mixed-script text must match CPython's replacement decode exactly —
+    the same differential the Rust suite runs engine by engine."""
+    base = bytearray(("mixed é漢字🙂 ελληνικά русский text " * 8).encode("utf-8"))
+    for seed in range(400):
+        rng = random.Random(seed)
+        data = bytearray(base)
+        for _ in range(rng.randrange(1, 30)):
+            data[rng.randrange(len(data))] = rng.randrange(256)
+        res = transcode_lossy(bytes(data))
+        assert res["utf16"] == _cpython_lossy_utf16(bytes(data)), seed
+        try:
+            bytes(data).decode("utf-8")
+            assert res["first_error"] is None, seed
+        except UnicodeDecodeError as e:
+            assert res["first_error"]["position"] == e.start, seed
 
 
 def test_error_records_for_rejected_rows():

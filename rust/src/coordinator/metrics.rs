@@ -14,6 +14,8 @@ pub struct ServiceStats {
     pub bytes_out: AtomicU64,
     /// Characters transcoded (the paper's throughput unit).
     pub chars: AtomicU64,
+    /// U+FFFD replacements emitted by lossy requests.
+    pub replacements: AtomicU64,
     /// Total service latency in nanoseconds (queue + convert).
     pub latency_ns_total: AtomicU64,
     /// Maximum single-request latency in nanoseconds.
@@ -37,6 +39,13 @@ impl ServiceStats {
         self.latency_ns_max.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Count U+FFFD replacements emitted by a lossy request.
+    pub fn record_replacements(&self, n: usize) {
+        if n > 0 {
+            self.replacements.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> StatsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let total_ns = self.latency_ns_total.load(Ordering::Relaxed);
@@ -48,6 +57,7 @@ impl ServiceStats {
             bytes_in: self.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
             chars: self.chars.load(Ordering::Relaxed),
+            replacements: self.replacements.load(Ordering::Relaxed),
             mean_latency: if completed > 0 {
                 Duration::from_nanos(total_ns / completed)
             } else {
@@ -68,6 +78,9 @@ pub struct StatsSnapshot {
     pub bytes_in: u64,
     pub bytes_out: u64,
     pub chars: u64,
+    /// U+FFFD replacements emitted by lossy requests (0 when the
+    /// workload is strict or clean).
+    pub replacements: u64,
     pub mean_latency: Duration,
     pub max_latency: Duration,
 }
@@ -77,7 +90,7 @@ impl std::fmt::Display for StatsSnapshot {
         write!(
             f,
             "requests={} completed={} rejected={} invalid={} bytes_in={} bytes_out={} \
-             chars={} mean_latency={:?} max_latency={:?}",
+             chars={} replacements={} mean_latency={:?} max_latency={:?}",
             self.requests,
             self.completed,
             self.rejected,
@@ -85,6 +98,7 @@ impl std::fmt::Display for StatsSnapshot {
             self.bytes_in,
             self.bytes_out,
             self.chars,
+            self.replacements,
             self.mean_latency,
             self.max_latency,
         )

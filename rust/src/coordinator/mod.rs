@@ -26,5 +26,5 @@ mod service;
 pub use metrics::{ServiceStats, StatsSnapshot};
 pub use service::{
     Direction, EngineChoice, Output, Payload, Request, Response, ServiceConfig, ServiceError,
-    TranscodeService,
+    SubmitError, TranscodeService,
 };

@@ -54,15 +54,33 @@ pub enum Payload {
 pub struct Request {
     pub id: u64,
     pub payload: Payload,
+    /// Lossy mode: invalid input is transcoded anyway, each maximal
+    /// invalid subpart / unpaired surrogate replaced with U+FFFD; the
+    /// response reports the replacement count instead of an error.
+    /// (WHATWG semantics require a validating worker engine; over a
+    /// non-validating engine — `Simd { validate: false }`, `"ours-nv"` —
+    /// the conversion degrades to the engine's best effort.)
+    pub lossy: bool,
 }
 
 impl Request {
     pub fn utf8(id: u64, data: Vec<u8>) -> Request {
-        Request { id, payload: Payload::Utf8(data) }
+        Request { id, payload: Payload::Utf8(data), lossy: false }
     }
 
     pub fn utf16(id: u64, data: Vec<u16>) -> Request {
-        Request { id, payload: Payload::Utf16(data) }
+        Request { id, payload: Payload::Utf16(data), lossy: false }
+    }
+
+    /// A lossy UTF-8 → UTF-16 request (WHATWG replacement policy).
+    pub fn utf8_lossy(id: u64, data: Vec<u8>) -> Request {
+        Request { id, payload: Payload::Utf8(data), lossy: true }
+    }
+
+    /// A lossy UTF-16 → UTF-8 request (one U+FFFD per unpaired
+    /// surrogate).
+    pub fn utf16_lossy(id: u64, data: Vec<u16>) -> Request {
+        Request { id, payload: Payload::Utf16(data), lossy: true }
     }
 
     pub fn direction(&self) -> Direction {
@@ -93,6 +111,9 @@ pub enum Output {
 pub struct Response {
     pub id: u64,
     pub result: Result<Output, TranscodeError>,
+    /// U+FFFD replacements in the output (always 0 for strict requests;
+    /// for lossy requests, 0 iff the input was valid).
+    pub replacements: usize,
 }
 
 impl Response {
@@ -135,6 +156,35 @@ impl Response {
         match self.result {
             Ok(Output::Utf8(b)) => Some(b),
             _ => None,
+        }
+    }
+}
+
+/// Why [`TranscodeService::try_submit`] returned the request to the
+/// caller instead of queueing it. Either way the request comes back
+/// unconsumed, so the caller can retry, reroute or drop it.
+pub enum SubmitError {
+    /// The bounded queue is full — load was shed (backpressure).
+    Full(Request),
+    /// The worker channel is disconnected (the service has shut down or
+    /// every worker exited). Retrying on this handle cannot succeed.
+    Shutdown(Request),
+}
+
+impl SubmitError {
+    /// Recover the request regardless of the reason.
+    pub fn into_request(self) -> Request {
+        match self {
+            SubmitError::Full(r) | SubmitError::Shutdown(r) => r,
+        }
+    }
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full(r) => write!(f, "Full(request {})", r.id),
+            SubmitError::Shutdown(r) => write!(f, "Shutdown(request {})", r.id),
         }
     }
 }
@@ -255,17 +305,26 @@ impl TranscodeService {
     }
 
     /// Submit without blocking; `Err` returns the request when the queue
-    /// is full (the caller sheds load).
-    pub fn try_submit(&self, request: Request) -> Result<Receiver<Response>, Request> {
+    /// is full (the caller sheds load) or when the service has shut
+    /// down — never panics under load-shed.
+    pub fn try_submit(&self, request: Request) -> Result<Receiver<Response>, SubmitError> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(Job::Work(request, tx)) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(Job::Work(req, _))) => {
                 self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(req)
+                Err(SubmitError::Full(req))
             }
-            Err(_) => panic!("service shut down"),
+            Err(TrySendError::Disconnected(Job::Work(req, _))) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Shutdown(req))
+            }
+            // Shutdown jobs are only ever sent by `shutdown`, never here.
+            Err(TrySendError::Full(Job::Shutdown))
+            | Err(TrySendError::Disconnected(Job::Shutdown)) => {
+                unreachable!("try_submit only sends Work jobs")
+            }
         }
     }
 
@@ -343,6 +402,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
         };
         if response.ok() {
             stats.record_completion(input_bytes, out_bytes, chars, start.elapsed());
+            stats.record_replacements(response.replacements);
         } else {
             stats.invalid.fetch_add(1, Ordering::Relaxed);
         }
@@ -355,26 +415,57 @@ fn count_chars_utf16(words: &[u16]) -> usize {
 }
 
 fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
+    let mut replacements = 0usize;
     let result = match (&request.payload, engine) {
         (Payload::Utf8(src), WorkerEngine::Native { to16, .. }) => {
             let mut dst = vec![0u16; utf16_capacity_for(src.len())];
-            to16.convert(src, &mut dst).map(|n| {
-                dst.truncate(n);
-                Output::Utf16(dst)
-            })
+            if request.lossy {
+                to16.convert_lossy(src, &mut dst).map(|r| {
+                    replacements = r.replacements;
+                    dst.truncate(r.written);
+                    Output::Utf16(dst)
+                })
+            } else {
+                to16.convert(src, &mut dst).map(|n| {
+                    dst.truncate(n);
+                    Output::Utf16(dst)
+                })
+            }
         }
         (Payload::Utf16(src), WorkerEngine::Native { to8, .. }) => {
             let mut dst = vec![0u8; utf8_capacity_for(src.len())];
-            to8.convert(src, &mut dst).map(|n| {
-                dst.truncate(n);
-                Output::Utf8(dst)
-            })
+            if request.lossy {
+                to8.convert_lossy(src, &mut dst).map(|r| {
+                    replacements = r.replacements;
+                    dst.truncate(r.written);
+                    Output::Utf8(dst)
+                })
+            } else {
+                to8.convert(src, &mut dst).map(|n| {
+                    dst.truncate(n);
+                    Output::Utf8(dst)
+                })
+            }
         }
         (Payload::Utf8(src), WorkerEngine::Xla(engine)) => {
             match engine.utf8_to_utf16_stream(src) {
                 Ok(Some(words)) => Ok(Output::Utf16(words)),
-                // The graph's validation kernel rejects per block; the
-                // scalar reference scan recovers the canonical position.
+                // The graph's validation kernel rejects per block. For a
+                // lossy request, dirty input falls back to the native
+                // `best` engine's resume loop (the batch graph has no
+                // replacement path); strict requests get the canonical
+                // error from the scalar reference scan.
+                Ok(None) if request.lossy => {
+                    let to16 = Registry::global()
+                        .get_utf8_arc("best")
+                        .expect("registry always has best");
+                    let mut dst = vec![0u16; utf16_capacity_for(src.len())];
+                    to16.convert_lossy(src, &mut dst).map(|r| {
+                        replacements = r.replacements;
+                        dst.truncate(r.written);
+                        Output::Utf16(dst)
+                    })
+                }
                 Ok(None) => Err(crate::transcode::utf8_error(src)
                     .unwrap_or(TranscodeError::new(ErrorKind::Other, 0))),
                 Err(e) => {
@@ -386,6 +477,17 @@ fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
         (Payload::Utf16(src), WorkerEngine::Xla(engine)) => {
             match engine.utf16_to_utf8_stream(src) {
                 Ok(Some(bytes)) => Ok(Output::Utf8(bytes)),
+                Ok(None) if request.lossy => {
+                    let to8 = Registry::global()
+                        .get_utf16_arc("best")
+                        .expect("registry always has best");
+                    let mut dst = vec![0u8; utf8_capacity_for(src.len())];
+                    to8.convert_lossy(src, &mut dst).map(|r| {
+                        replacements = r.replacements;
+                        dst.truncate(r.written);
+                        Output::Utf8(dst)
+                    })
+                }
                 Ok(None) => Err(crate::transcode::utf16_error(src)
                     .unwrap_or(TranscodeError::new(ErrorKind::Other, 0))),
                 Err(e) => {
@@ -395,7 +497,7 @@ fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
             }
         }
     };
-    Response { id: request.id, result }
+    Response { id: request.id, result, replacements }
 }
 
 #[cfg(test)]
@@ -484,6 +586,63 @@ mod tests {
         })
         .expect_err("must reject unknown engine");
         assert!(err.to_string().contains("unknown engine"), "{err}");
+    }
+
+    #[test]
+    fn lossy_requests_replace_instead_of_failing() {
+        let svc = service(EngineChoice::Simd { validate: true });
+        let mut dirty = b"prefix ".to_vec();
+        dirty.extend_from_slice(&[0xFF, 0xFF]);
+        dirty.extend_from_slice(b" suffix");
+        let expected: Vec<u16> = String::from_utf8_lossy(&dirty).encode_utf16().collect();
+
+        // The same payload fails strictly…
+        let strict = svc.transcode(Request::utf8(1, dirty.clone()));
+        assert!(!strict.ok());
+        assert_eq!(strict.replacements, 0);
+        // …and succeeds lossily, with the replacement count reported.
+        let lossy = svc.transcode(Request::utf8_lossy(2, dirty.clone()));
+        assert_eq!(lossy.utf16().unwrap(), &expected[..]);
+        assert_eq!(lossy.replacements, 2);
+
+        // UTF-16 direction.
+        let lossy16 = svc.transcode(Request::utf16_lossy(3, vec![0x41, 0xDC00, 0x42]));
+        assert_eq!(lossy16.utf8().unwrap(), "A\u{FFFD}B".as_bytes());
+        assert_eq!(lossy16.replacements, 1);
+
+        // Clean lossy input replaces nothing.
+        let clean = svc.transcode(Request::utf8_lossy(4, b"all clean".to_vec()));
+        assert_eq!(clean.replacements, 0);
+
+        let snap = svc.stats();
+        assert_eq!(snap.replacements, 3);
+        assert_eq!(snap.invalid, 1, "only the strict request counts as invalid");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn try_submit_returns_request_after_shutdown() {
+        // A zero-worker service drops the queue receiver inside
+        // `start`, leaving the channel disconnected — exactly the state
+        // a shut-down service is in. `try_submit` used to panic here;
+        // it must hand the request back instead.
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 0,
+            queue_depth: 4,
+            engine: EngineChoice::Simd { validate: true },
+        })
+        .expect("zero-worker service starts");
+        match svc.try_submit(Request::utf8(7, b"hello".to_vec())) {
+            Err(SubmitError::Shutdown(req)) => {
+                assert_eq!(req.id, 7);
+                let Payload::Utf8(data) = req.payload else {
+                    panic!("payload must come back unconsumed");
+                };
+                assert_eq!(data, b"hello");
+            }
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
+        assert_eq!(svc.stats().rejected, 1);
     }
 
     #[test]

@@ -167,6 +167,89 @@ impl Corpus {
     }
 }
 
+/// A named corruption rate for the dirty-input workload (per-mille of
+/// input units mutated). The labels appear in `bench-json` cell names
+/// and in the differential suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DirtProfile {
+    pub label: &'static str,
+    /// Mutated units per 1000 (a unit is a byte for UTF-8, a word for
+    /// UTF-16).
+    pub permille: u32,
+}
+
+/// The dirty-input profiles: from "one bad byte per kilobyte" (log
+/// files with the occasional mojibake) to "5% garbage" (binary data
+/// mis-tagged as text). Real traffic from millions of users sits at the
+/// light end; the heavy end stresses the resume loop's error path.
+pub const DIRT_PROFILES: &[DirtProfile] = &[
+    DirtProfile { label: "dirty1", permille: 1 },
+    DirtProfile { label: "dirty10", permille: 10 },
+    DirtProfile { label: "dirty50", permille: 50 },
+];
+
+/// Deterministically corrupt ~`permille`/1000 of `bytes` (at least one
+/// byte when `permille > 0`). The mutation mix is chosen to hit every
+/// UTF-8 error class: stray continuations, random leads (including
+/// `0xC0`/`0xC1` overlongs and `0xF5..=0xFF`), arbitrary bytes, and
+/// ASCII overwrites that truncate multi-byte sequences mid-way.
+/// The result is usually invalid but occasionally still valid — lossy
+/// conversion must handle both, so that is a feature.
+pub fn corrupt_utf8(bytes: &[u8], permille: u32, seed: u64) -> Vec<u8> {
+    let mut out = bytes.to_vec();
+    if out.is_empty() || permille == 0 {
+        return out;
+    }
+    let mut rng = SplitMix64::new(seed ^ 0x8BADF00D_u64.rotate_left(17));
+    let hits = ((out.len() as u64 * permille as u64) / 1000).max(1);
+    for _ in 0..hits {
+        let i = rng.below(out.len() as u64) as usize;
+        out[i] = match rng.below(4) {
+            0 => 0x80 | rng.below(0x40) as u8,  // stray continuation
+            1 => 0xC0 | rng.below(0x40) as u8,  // random lead / C0 / F5..FF
+            2 => rng.below(0x100) as u8,        // anything at all
+            _ => b'A' + rng.below(26) as u8,    // ASCII mid-sequence
+        };
+    }
+    out
+}
+
+/// Deterministically corrupt ~`permille`/1000 of `words`, biased toward
+/// the surrogate range (the only way UTF-16 goes wrong) with some
+/// arbitrary-word overwrites mixed in.
+pub fn corrupt_utf16(words: &[u16], permille: u32, seed: u64) -> Vec<u16> {
+    let mut out = words.to_vec();
+    if out.is_empty() || permille == 0 {
+        return out;
+    }
+    let mut rng = SplitMix64::new(seed ^ 0x5EED16_u64.rotate_left(29));
+    let hits = ((out.len() as u64 * permille as u64) / 1000).max(1);
+    for _ in 0..hits {
+        let i = rng.below(out.len() as u64) as usize;
+        out[i] = match rng.below(4) {
+            0 => 0xD800 + rng.below(0x400) as u16, // lone high (or run)
+            1 => 0xDC00 + rng.below(0x400) as u16, // lone low
+            2 => 0xD800 + rng.below(0x800) as u16, // anywhere in the gap
+            _ => rng.below(0x1_0000) as u16,       // arbitrary word
+        };
+    }
+    out
+}
+
+impl Corpus {
+    /// This corpus' UTF-8 bytes with a deterministic corruption pass
+    /// (see [`corrupt_utf8`]).
+    pub fn dirty_utf8(&self, profile: DirtProfile, seed: u64) -> Vec<u8> {
+        corrupt_utf8(&self.utf8, profile.permille, seed)
+    }
+
+    /// This corpus' UTF-16 words with a deterministic corruption pass
+    /// (see [`corrupt_utf16`]).
+    pub fn dirty_utf16(&self, profile: DirtProfile, seed: u64) -> Vec<u16> {
+        corrupt_utf16(&self.utf16, profile.permille, seed)
+    }
+}
+
 /// Generate every corpus of a collection.
 pub fn generate_collection(collection: Collection) -> Vec<Corpus> {
     let langs = match collection {
@@ -257,6 +340,46 @@ mod tests {
     }
 
     #[test]
+    fn corruption_is_deterministic_and_dirty() {
+        let corpus = Corpus::generate(Language::Russian, Collection::Lipsum);
+        for &profile in DIRT_PROFILES {
+            let a = corpus.dirty_utf8(profile, 42);
+            let b = corpus.dirty_utf8(profile, 42);
+            assert_eq!(a, b, "{}: same seed, same corruption", profile.label);
+            let c = corpus.dirty_utf8(profile, 43);
+            assert_ne!(a, c, "{}: different seed, different corruption", profile.label);
+            assert_eq!(a.len(), corpus.utf8.len(), "corruption mutates in place");
+            // The byte-level mutation count is bounded by the profile.
+            let mutated = a.iter().zip(&corpus.utf8).filter(|(x, y)| x != y).count();
+            assert!(
+                mutated <= (corpus.utf8.len() * profile.permille as usize) / 1000 + 1,
+                "{}: {mutated} mutations",
+                profile.label
+            );
+            assert!(mutated > 0, "{}: must corrupt something", profile.label);
+            let w = corpus.dirty_utf16(profile, 42);
+            assert_eq!(w, corpus.dirty_utf16(profile, 42));
+            assert_eq!(w.len(), corpus.utf16.len());
+        }
+        // Zero rate / empty input are no-ops.
+        assert_eq!(corrupt_utf8(&corpus.utf8, 0, 1), corpus.utf8);
+        assert_eq!(corrupt_utf8(&[], 50, 1), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn heavy_corruption_actually_invalidates() {
+        // At 5% corruption a ~96 KiB file is statistically certain to be
+        // invalid in both encodings (this is what the dirty benches and
+        // the differential suite rely on).
+        let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
+        let heavy = DIRT_PROFILES[DIRT_PROFILES.len() - 1];
+        let dirty8 = corpus.dirty_utf8(heavy, 7);
+        assert!(std::str::from_utf8(&dirty8).is_err());
+        let dirty16 = corpus.dirty_utf16(heavy, 7);
+        assert!(char::decode_utf16(dirty16.iter().copied()).any(|r| r.is_err()));
+    }
+
+    #[test]
     fn all_engines_agree_on_every_corpus() {
         // The cross-implementation agreement test: every UTF-8→UTF-16
         // engine must produce identical output on every dataset.
@@ -277,7 +400,7 @@ mod tests {
                 let mut dst = vec![0u16; utf16_capacity_for(corpus.utf8.len())];
                 let n = engine
                     .convert(&corpus.utf8, &mut dst)
-                    .unwrap_or_else(|| panic!("{} failed on {}", engine.name(), corpus.name()));
+                    .unwrap_or_else(|e| panic!("{} failed on {}: {e}", engine.name(), corpus.name()));
                 assert_eq!(&dst[..n], &expected[..], "{} on {}", engine.name(), corpus.name());
             }
             // Inoue: BMP-only, skip Emoji as the paper does (Table 5
@@ -302,7 +425,7 @@ mod tests {
             for engine in &engines {
                 let out = engine
                     .convert_to_vec(&corpus.utf16)
-                    .unwrap_or_else(|| panic!("{} failed on {}", engine.name(), corpus.name()));
+                    .unwrap_or_else(|e| panic!("{} failed on {}: {e}", engine.name(), corpus.name()));
                 assert_eq!(out, corpus.utf8, "{} on {}", engine.name(), corpus.name());
             }
         }

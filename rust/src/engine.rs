@@ -189,6 +189,22 @@ impl Registry {
             .collect()
     }
 
+    /// The UTF-8 → UTF-16 entries eligible for **lossy** conversion:
+    /// the validating engines (WHATWG replacement semantics require
+    /// error detection — `convert_lossy` over a non-validating engine
+    /// replaces nothing it cannot see), width-explicit keys and the
+    /// `best` alias included. The lossy differential suite and the
+    /// dirty-input benches enumerate engines through this accessor.
+    pub fn utf8_lossy_entries(&self) -> Vec<&Utf8Entry> {
+        self.utf8.iter().filter(|e| e.engine.validating()).collect()
+    }
+
+    /// The UTF-16 → UTF-8 entries eligible for lossy conversion (see
+    /// [`Registry::utf8_lossy_entries`]).
+    pub fn utf16_lossy_entries(&self) -> Vec<&Utf16Entry> {
+        self.utf16.iter().filter(|e| e.engine.validating()).collect()
+    }
+
     /// Look up a UTF-8 → UTF-16 engine by registry key (case-insensitive).
     pub fn get_utf8(&self, key: &str) -> Option<&dyn Utf8ToUtf16> {
         self.utf8
@@ -308,6 +324,30 @@ mod tests {
         for e in r.utf16_entries() {
             let out = e.engine.convert_to_vec(&expected).expect("valid input");
             assert_eq!(out, text.as_bytes(), "{}", e.key);
+        }
+    }
+
+    #[test]
+    fn lossy_entries_are_exactly_the_validating_engines() {
+        let r = Registry::global();
+        for e in r.utf8_lossy_entries() {
+            assert!(e.engine.validating(), "{}", e.key);
+        }
+        assert!(
+            r.utf8_lossy_entries().len()
+                < r.utf8_entries().len(),
+            "non-validating keys must be excluded"
+        );
+        // `best` dispatch participates in the lossy set.
+        assert!(r.utf8_lossy_entries().iter().any(|e| e.key == "best"));
+        assert!(r.utf16_lossy_entries().iter().any(|e| e.key == "best"));
+        // ...and lossy conversion works through the trait objects.
+        let dirty = b"ab\xFFcd";
+        let expected: Vec<u16> = String::from_utf8_lossy(dirty).encode_utf16().collect();
+        for e in r.utf8_lossy_entries() {
+            let (out, res) = e.engine.convert_lossy_to_vec(dirty).expect("lossy is total");
+            assert_eq!(out, expected, "{}", e.key);
+            assert_eq!(res.replacements, 1, "{}", e.key);
         }
     }
 

@@ -424,6 +424,58 @@ pub fn xla_ablation(artifacts_dir: &std::path::Path) -> String {
     )
 }
 
+/// Measure one UTF-8→UTF-16 engine converting `bytes` **lossily**.
+///
+/// No supplemental-plane gate: the lossy sweeps enumerate
+/// [`Registry::utf8_lossy_entries`] (validating engines only), and the
+/// one engine without supplemental support — Inoue — is non-validating,
+/// so it can never appear here.
+fn measure_utf8_lossy(
+    engine: &dyn Utf8ToUtf16,
+    bytes: &[u8],
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    let mut dst = vec![0u16; crate::transcode::utf16_capacity_for(bytes.len())];
+    measure(
+        || {
+            let r = engine.convert_lossy(bytes, &mut dst).expect("capacity contract");
+            std::hint::black_box(r.written);
+        },
+        budget,
+        3,
+    )
+}
+
+/// Measure one UTF-16→UTF-8 engine converting `words` lossily.
+fn measure_utf16_lossy(
+    engine: &dyn Utf16ToUtf8,
+    words: &[u16],
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    let mut dst = vec![0u8; crate::transcode::utf8_capacity_for(words.len())];
+    measure(
+        || {
+            let r = engine.convert_lossy(words, &mut dst).expect("capacity contract");
+            std::hint::black_box(r.written);
+        },
+        budget,
+        3,
+    )
+}
+
+/// Lossy UTF-8→UTF-16 throughput on arbitrary bytes in input MB/s
+/// (dirty-input benches).
+pub fn bench_utf8_engine_lossy_mbps(engine: &dyn Utf8ToUtf16, bytes: &[u8]) -> f64 {
+    let r = measure_utf8_lossy(engine, bytes, default_budget());
+    bytes.len() as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// Lossy UTF-16→UTF-8 throughput on arbitrary words in input MB/s.
+pub fn bench_utf16_engine_lossy_mbps(engine: &dyn Utf16ToUtf8, words: &[u16]) -> f64 {
+    let r = measure_utf16_lossy(engine, words, default_budget());
+    (words.len() * 2) as f64 / r.min.as_secs_f64() / 1e6
+}
+
 /// Benchmark one UTF-8→UTF-16 engine on one corpus in **input MB/s**
 /// (the unit of the machine-readable smoke artifact; the paper's tables
 /// use Gc/s). Same measurement core as [`bench_utf8_engine`].
@@ -483,6 +535,31 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
 
     let corpora = generate_collection(Collection::Lipsum);
     let r = Registry::global();
+
+    // Lossy sweep inputs: every lipsum corpus clean (valid-input lossy
+    // throughput must sit within noise of strict `convert` — the
+    // resume loop's zero-cost claim) and with a 1% corruption pass
+    // (the error path's bounded re-scan under realistic dirt).
+    let dirt = crate::corpus::DIRT_PROFILES[1];
+    let utf8_inputs: Vec<(String, Vec<u8>)> = corpora
+        .iter()
+        .flat_map(|c| {
+            [
+                (c.name().to_string(), c.utf8.clone()),
+                (format!("{}+{}", c.name(), dirt.label), c.dirty_utf8(dirt, 0xBEEF)),
+            ]
+        })
+        .collect();
+    let utf16_inputs: Vec<(String, Vec<u16>)> = corpora
+        .iter()
+        .flat_map(|c| {
+            [
+                (c.name().to_string(), c.utf16.clone()),
+                (format!("{}+{}", c.name(), dirt.label), c.dirty_utf16(dirt, 0xBEEF)),
+            ]
+        })
+        .collect();
+
     let utf8_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = r
         .utf8_entries()
         .iter()
@@ -514,13 +591,46 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
         })
         .collect();
 
+    let lossy8_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = r
+        .utf8_lossy_entries()
+        .iter()
+        .map(|e| {
+            let cells = utf8_inputs
+                .iter()
+                .map(|(name, bytes)| {
+                    let res = measure_utf8_lossy(e.engine.as_ref(), bytes, budget);
+                    let mbps = bytes.len() as f64 / res.min.as_secs_f64() / 1e6;
+                    (name.clone(), Some(mbps))
+                })
+                .collect();
+            (e.key, cells)
+        })
+        .collect();
+    let lossy16_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = r
+        .utf16_lossy_entries()
+        .iter()
+        .map(|e| {
+            let cells = utf16_inputs
+                .iter()
+                .map(|(name, words)| {
+                    let res = measure_utf16_lossy(e.engine.as_ref(), words, budget);
+                    let mbps = (words.len() * 2) as f64 / res.min.as_secs_f64() / 1e6;
+                    (name.clone(), Some(mbps))
+                })
+                .collect();
+            (e.key, cells)
+        })
+        .collect();
+
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"simdutf-rs-bench-v1\",\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v2\",\n");
     out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
     out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
     out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
     emit_section(&mut out, "utf8_to_utf16", &utf8_rows, true);
-    emit_section(&mut out, "utf16_to_utf8", &utf16_rows, false);
+    emit_section(&mut out, "utf16_to_utf8", &utf16_rows, true);
+    emit_section(&mut out, "utf8_to_utf16_lossy", &lossy8_rows, true);
+    emit_section(&mut out, "utf16_to_utf8_lossy", &lossy16_rows, false);
     out.push_str("}\n");
     out
 }
@@ -582,6 +692,12 @@ mod tests {
         assert!(json.contains("\"utf8_to_utf16\"") && json.contains("\"utf16_to_utf8\""));
         // Inoue × Emoji is the one unsupported cell.
         assert!(json.contains("null"), "expected an unsupported cell:\n{json}");
+        // Lossy sweep: validating engines over clean + dirty cells.
+        assert!(
+            json.contains("\"utf8_to_utf16_lossy\"") && json.contains("\"utf16_to_utf8_lossy\""),
+            "missing lossy sections:\n{json}"
+        );
+        assert!(json.contains("+dirty10"), "missing dirty cells:\n{json}");
     }
 
     #[test]

@@ -17,10 +17,15 @@
 //!   Conversions return rich results
 //!   ([`transcode::TranscodeResult`]): the output length, or a
 //!   [`transcode::TranscodeError`] carrying the error class and the
-//!   input position of the first invalid sequence.
+//!   input position of the first invalid sequence. For dirty input,
+//!   every engine also offers **lossy** conversion (`convert_lossy`):
+//!   U+FFFD replacement per the WHATWG policy, identical to
+//!   `String::from_utf8_lossy` / `char::decode_utf16`, with the
+//!   replacement count in the [`transcode::LossyResult`].
 //! * [`transcode::streaming`] — chunk-at-a-time transcoding across
 //!   arbitrary chunk boundaries (carrying partial characters between
-//!   pushes), equivalent split-for-split to one-shot conversion.
+//!   pushes), equivalent split-for-split to one-shot conversion; lossy
+//!   mode (`push_lossy`) never poisons the stream.
 //! * [`validate`] — Keiser–Lemire UTF-8 validation and UTF-16 surrogate
 //!   validation.
 //! * [`baselines`] — every comparison system from the paper's evaluation,
@@ -56,6 +61,18 @@
 //!
 //! let err = engine.convert_to_vec(&[b'a', 0xED, 0xA0, 0x80]).unwrap_err();
 //! assert_eq!((err.kind, err.position), (ErrorKind::Surrogate, 1));
+//!
+//! // Lossy conversion for dirty input: `convert` *reports* the first
+//! // error; `convert_lossy` *repairs* — each maximal invalid subpart
+//! // becomes U+FFFD (exactly `String::from_utf8_lossy`) and you learn
+//! // how much was replaced. Use strict when invalid input must be
+//! // rejected (security boundaries, strict protocols); use lossy when
+//! // the text must flow anyway (log pipelines, user-generated content).
+//! let dirty = b"ok \xFF then fine";
+//! let (words, info) = engine.convert_lossy_to_vec(dirty).unwrap();
+//! assert_eq!(String::from_utf16(&words).unwrap(), "ok \u{FFFD} then fine");
+//! assert_eq!(info.replacements, 1);
+//! assert_eq!(info.first_error.unwrap().position, 3);
 //!
 //! // Streaming: split anywhere, same outputs, same errors.
 //! let mut stream = StreamingUtf8ToUtf16::new();
@@ -115,15 +132,16 @@ pub mod prelude {
         llvm::LlvmTranscoder, steagall::SteagallTranscoder, utf8lut::Utf8LutTranscoder,
     };
     pub use crate::corpus::{
-        Collection, Corpus, CorpusStats, Language, LIPSUM_LANGUAGES, WIKI_LANGUAGES,
+        corrupt_utf16, corrupt_utf8, Collection, Corpus, CorpusStats, DirtProfile, Language,
+        DIRT_PROFILES, LIPSUM_LANGUAGES, WIKI_LANGUAGES,
     };
     pub use crate::engine::Registry;
     pub use crate::simd::{best_key, VectorBackend, V128, V256};
     pub use crate::transcode::{
-        streaming::{FeedResult, StreamingUtf16ToUtf8, StreamingUtf8ToUtf16},
+        streaming::{FeedResult, LossyFeedResult, StreamingUtf16ToUtf8, StreamingUtf8ToUtf16},
         utf16_capacity_for, utf16_to_utf8::OurUtf16ToUtf8, utf8_capacity_for,
-        utf8_to_utf16::OurUtf8ToUtf16, ErrorKind, TranscodeError, TranscodeResult, Utf16ToUtf8,
-        Utf8ToUtf16,
+        utf8_to_utf16::OurUtf8ToUtf16, ErrorKind, LossyResult, TranscodeError, TranscodeResult,
+        Utf16ToUtf8, Utf8ToUtf16,
     };
     pub use crate::validate::{validate_utf16le, validate_utf8, Utf8Validator};
 }

@@ -5,12 +5,16 @@
 //! ```text
 //! simdutf-cli harness [section|all] [--artifacts DIR]
 //!     Regenerate the paper's tables/figures (table4..table10, fig5..fig7, xla).
-//! simdutf-cli transcode --direction 8to16|16to8 [--engine KEY] <file>
+//! simdutf-cli transcode --direction 8to16|16to8 [--engine KEY] [--lossy] <file>
 //!     Transcode a file to stdout (UTF-16 side is little-endian bytes).
-//!     On invalid input, prints the error kind and byte/word position.
-//! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla|KEY]
+//!     On invalid input, prints the error kind and byte/word position —
+//!     or, with --lossy, replaces invalid input with U+FFFD per the
+//!     WHATWG policy and reports the replacement count on stderr.
+//! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla|KEY] [--lossy]
 //!     Run the streaming service against a synthetic workload and print
 //!     throughput/latency stats. KEY is any registry engine (see `engines`).
+//!     With --lossy the workload is 1%-corrupted and requests use the
+//!     lossy mode (the stats line reports total replacements).
 //! simdutf-cli engines
 //!     List every registered engine (key, name, validation, directions),
 //!     including the width-explicit `simd128`/`simd256` backends and the
@@ -53,6 +57,10 @@ fn main() {
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 fn cmd_harness(args: &[String]) -> i32 {
@@ -114,6 +122,7 @@ fn cmd_transcode(args: &[String]) -> i32 {
     // Default to the runtime-dispatched alias: the widest backend the
     // CPU supports. `--engine simd128`/`simd256` (or any key) pins one.
     let engine_key = flag_value(args, "--engine").unwrap_or_else(|| "best".to_string());
+    let lossy = has_flag(args, "--lossy");
     let path = match args.iter().rev().find(|a| !a.starts_with("--")) {
         Some(p) => p.clone(),
         None => {
@@ -136,16 +145,39 @@ fn cmd_transcode(args: &[String]) -> i32 {
                 eprintln!("transcode: unknown engine {engine_key} (see `simdutf-cli engines`)");
                 return 2;
             };
-            match engine.convert_to_vec(&data) {
-                Ok(words) => {
-                    for w in words {
-                        out.write_all(&w.to_le_bytes()).unwrap();
+            if lossy {
+                match engine.convert_lossy_to_vec(&data) {
+                    Ok((words, info)) => {
+                        for w in words {
+                            out.write_all(&w.to_le_bytes()).unwrap();
+                        }
+                        if info.replacements > 0 {
+                            eprintln!(
+                                "transcode: replaced {} invalid subpart(s) with U+FFFD \
+                                 (first error: {})",
+                                info.replacements,
+                                info.first_error.expect("dirty input has a first error")
+                            );
+                        }
+                        0
                     }
-                    0
+                    Err(e) => {
+                        eprintln!("transcode: {e}");
+                        1
+                    }
                 }
-                Err(e) => {
-                    eprintln!("transcode: invalid UTF-8 input: {e}");
-                    1
+            } else {
+                match engine.convert_to_vec(&data) {
+                    Ok(words) => {
+                        for w in words {
+                            out.write_all(&w.to_le_bytes()).unwrap();
+                        }
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("transcode: invalid UTF-8 input: {e}");
+                        1
+                    }
                 }
             }
         }
@@ -156,14 +188,35 @@ fn cmd_transcode(args: &[String]) -> i32 {
                 eprintln!("transcode: unknown engine {engine_key} (see `simdutf-cli engines`)");
                 return 2;
             };
-            match engine.convert_to_vec(&words) {
-                Ok(bytes) => {
-                    out.write_all(&bytes).unwrap();
-                    0
+            if lossy {
+                match engine.convert_lossy_to_vec(&words) {
+                    Ok((bytes, info)) => {
+                        out.write_all(&bytes).unwrap();
+                        if info.replacements > 0 {
+                            eprintln!(
+                                "transcode: replaced {} unpaired surrogate(s) with U+FFFD \
+                                 (first error: {})",
+                                info.replacements,
+                                info.first_error.expect("dirty input has a first error")
+                            );
+                        }
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("transcode: {e}");
+                        1
+                    }
                 }
-                Err(e) => {
-                    eprintln!("transcode: invalid UTF-16 input: {e}");
-                    1
+            } else {
+                match engine.convert_to_vec(&words) {
+                    Ok(bytes) => {
+                        out.write_all(&bytes).unwrap();
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("transcode: invalid UTF-16 input: {e}");
+                        1
+                    }
                 }
             }
         }
@@ -178,6 +231,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let workers = flag_value(args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(4);
     let requests: usize =
         flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let lossy = has_flag(args, "--lossy");
     let engine = match flag_value(args, "--engine").as_deref() {
         None | Some("simd") => EngineChoice::Simd { validate: true },
         Some("scalar") => EngineChoice::Scalar,
@@ -199,16 +253,30 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         };
 
-    // Synthetic mixed workload drawn from the paper's corpora.
+    // Synthetic mixed workload drawn from the paper's corpora; with
+    // --lossy each payload takes a 1% corruption pass (dirty-input
+    // traffic) and the requests never fail.
     let corpora = simdutf_rs::corpus::generate_collection(Collection::WikipediaMars);
+    let dirt = simdutf_rs::corpus::DIRT_PROFILES[1];
     let started = Instant::now();
     let mut pending = Vec::with_capacity(requests);
     for i in 0..requests {
         let corpus = &corpora[i % corpora.len()];
-        let req = if i % 2 == 0 {
-            Request::utf8(i as u64, corpus.utf8_prefix(8192).to_vec())
-        } else {
-            Request::utf16(i as u64, corpus.utf16_prefix(4096).to_vec())
+        let req = match (i % 2 == 0, lossy) {
+            (true, false) => Request::utf8(i as u64, corpus.utf8_prefix(8192).to_vec()),
+            (false, false) => Request::utf16(i as u64, corpus.utf16_prefix(4096).to_vec()),
+            (true, true) => Request::utf8_lossy(
+                i as u64,
+                simdutf_rs::corpus::corrupt_utf8(corpus.utf8_prefix(8192), dirt.permille, i as u64),
+            ),
+            (false, true) => Request::utf16_lossy(
+                i as u64,
+                simdutf_rs::corpus::corrupt_utf16(
+                    corpus.utf16_prefix(4096),
+                    dirt.permille,
+                    i as u64,
+                ),
+            ),
         };
         pending.push(service.submit(req));
     }

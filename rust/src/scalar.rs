@@ -141,6 +141,66 @@ pub fn encode_utf8_char(cp: u32, dst: &mut [u8]) -> usize {
     }
 }
 
+/// Length in bytes of the **maximal subpart of an ill-formed subsequence**
+/// starting at `src[0]` (WHATWG "U+FFFD substitution of maximal subparts",
+/// the policy `String::from_utf8_lossy` implements).
+///
+/// `src[0]` must be the first byte of an invalid sequence (the position a
+/// validating engine reports). The returned length is how many bytes one
+/// U+FFFD replaces before decoding resumes:
+///
+/// * a byte that cannot begin any sequence (stray continuation, `0xC0`/
+///   `0xC1`, `0xF5..=0xFF`) — 1 byte;
+/// * a lead whose *first* continuation byte is outside its constrained
+///   range (`0xE0` needs `0xA0..=0xBF`, `0xED` needs `0x80..=0x9F`,
+///   `0xF0` needs `0x90..=0xBF`, `0xF4` needs `0x80..=0x8F`) — 1 byte,
+///   the lead alone;
+/// * otherwise — the lead plus every consecutive continuation byte that
+///   is present, i.e. the longest prefix of a well-formed sequence
+///   (truncation at end of input replaces the whole partial sequence
+///   with a single U+FFFD, exactly like `String::from_utf8_lossy`).
+///
+/// Never returns 0 (lossy decoding always makes progress).
+#[inline]
+pub fn utf8_maximal_subpart_len(src: &[u8]) -> usize {
+    let Some(&b0) = src.first() else { return 1 };
+    // Allowed range of the second byte, per lead; bytes that cannot
+    // begin a sequence at all fall through to the 1-byte arm.
+    let (lo, hi) = match b0 {
+        0xC2..=0xDF => (0x80, 0xBF),
+        0xE0 => (0xA0, 0xBF),
+        0xE1..=0xEC | 0xEE..=0xEF => (0x80, 0xBF),
+        0xED => (0x80, 0x9F),
+        0xF0 => (0x90, 0xBF),
+        0xF1..=0xF3 => (0x80, 0xBF),
+        0xF4 => (0x80, 0x8F),
+        _ => return 1,
+    };
+    let declared = if b0 < 0xE0 {
+        2
+    } else if b0 < 0xF0 {
+        3
+    } else {
+        4
+    };
+    match src.get(1) {
+        None => 1, // lead alone at end of input
+        Some(&b1) if !(lo..=hi).contains(&b1) => 1,
+        Some(_) => {
+            let mut i = 2;
+            while i < declared.min(src.len()) {
+                if (src[i] & 0xC0) != 0x80 {
+                    return i;
+                }
+                i += 1;
+            }
+            // Truncated at end of input (or, defensively, a sequence
+            // that was actually well-formed): consume what is present.
+            i.min(src.len())
+        }
+    }
+}
+
 /// Encode a code point (including lone surrogates) as generalized UTF-8
 /// (WTF-8). Used by the non-validating UTF-16 → UTF-8 engine to stay
 /// total on garbage input; identical to [`encode_utf8_char`] on scalar
@@ -306,6 +366,35 @@ mod tests {
         let mut utf8 = vec![0u8; n16 * 3];
         let n8 = utf16_to_utf8(&utf16[..n16], &mut utf8).unwrap();
         assert_eq!(&utf8[..n8], bytes);
+    }
+
+    #[test]
+    fn maximal_subpart_matches_std_lossy() {
+        // (input, expected subpart length at position 0)
+        let cases: &[(&[u8], usize)] = &[
+            (&[0x80], 1),                   // stray continuation
+            (&[0xC0, 0x80], 1),             // C0 can start nothing
+            (&[0xFF, 0x80], 1),             // header bits
+            (&[0xC2], 1),                   // truncated 2-byte at end
+            (&[0xE0, 0x80, 0x80], 1),       // E0 second byte out of range
+            (&[0xE0, 0xA0], 2),             // truncated but consistent
+            (&[0xED, 0xA0, 0x80], 1),       // surrogate: ED second byte > 0x9F
+            (&[0xF0, 0x90, 0x41], 2),       // third byte breaks the sequence
+            (&[0xF0, 0x90, 0x80], 3),       // truncated 4-byte at end
+            (&[0xF4, 0x90, 0x80, 0x80], 1), // too large: F4 second byte > 0x8F
+            (&[0xF5, 0x80], 1),             // F5 can start nothing
+        ];
+        for &(src, want) in cases {
+            assert_eq!(utf8_maximal_subpart_len(src), want, "{src:02x?}");
+            // Cross-check against std: one U+FFFD replaces exactly the
+            // subpart, then std resumes — so the lossy decoding of `src`
+            // must start with U+FFFD followed by the lossy decoding of
+            // the bytes past the subpart.
+            let lossy: Vec<char> = String::from_utf8_lossy(src).chars().collect();
+            assert_eq!(lossy[0], char::REPLACEMENT_CHARACTER, "{src:02x?}");
+            let rest: Vec<char> = String::from_utf8_lossy(&src[want..]).chars().collect();
+            assert_eq!(&lossy[1..], &rest[..], "{src:02x?}");
+        }
     }
 
     #[test]

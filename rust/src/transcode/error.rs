@@ -118,6 +118,32 @@ impl std::error::Error for TranscodeError {}
 /// error with kind and position.
 pub type TranscodeResult<T = usize> = Result<T, TranscodeError>;
 
+/// Outcome of a **lossy** conversion
+/// ([`crate::transcode::Utf8ToUtf16::convert_lossy`] /
+/// [`crate::transcode::Utf16ToUtf8::convert_lossy`]): invalid input does
+/// not fail the conversion, it is replaced with U+FFFD per the WHATWG
+/// policy, and the caller learns how much was replaced and where the
+/// first problem was.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LossyResult {
+    /// Output units written, replacement characters included.
+    pub written: usize,
+    /// Number of U+FFFD replacement characters emitted: one per maximal
+    /// invalid subpart (UTF-8 input) or per unpaired surrogate (UTF-16
+    /// input). Zero iff the input was valid.
+    pub replacements: usize,
+    /// The first encoding error encountered — same kind/position
+    /// convention as the strict `convert` — or `None` on valid input.
+    pub first_error: Option<TranscodeError>,
+}
+
+impl LossyResult {
+    /// True iff the input was fully valid (nothing was replaced).
+    pub fn clean(&self) -> bool {
+        self.replacements == 0
+    }
+}
+
 /// Scalar reference scan: find the first UTF-8 error at or after `from`.
 ///
 /// `from` must be a character boundary with a valid prefix (the engines

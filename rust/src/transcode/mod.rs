@@ -13,6 +13,15 @@
 //! See [`error`] for the exact position convention and how the SIMD
 //! engines recover positions with a bounded scalar re-scan.
 //!
+//! `convert_lossy` never fails on malformed input: it replaces each
+//! maximal invalid subpart (UTF-8) or unpaired surrogate (UTF-16) with
+//! U+FFFD per the WHATWG policy — identical output to
+//! `String::from_utf8_lossy` / `char::decode_utf16` with
+//! `REPLACEMENT_CHARACTER` — and returns a [`LossyResult`] with the
+//! replacement count and the first error. Valid input runs the SIMD
+//! engine once, at full speed; each error pays one extra engine pass
+//! over the valid run preceding it plus a bounded scalar subpart scan.
+//!
 //! ### Buffer contract
 //!
 //! Output buffers must satisfy [`utf16_capacity_for`] /
@@ -38,9 +47,15 @@ pub mod utf32;
 pub mod utf8_to_utf16;
 
 pub use error::{
-    classify_utf16_error, classify_utf8_error, utf16_error, utf8_error, ErrorKind,
+    classify_utf16_error, classify_utf8_error, utf16_error, utf8_error, ErrorKind, LossyResult,
     TranscodeError, TranscodeResult,
 };
+
+/// U+FFFD REPLACEMENT CHARACTER as a UTF-16 code unit.
+pub const REPLACEMENT_UTF16: u16 = 0xFFFD;
+
+/// U+FFFD REPLACEMENT CHARACTER encoded as UTF-8.
+pub const REPLACEMENT_UTF8: [u8; 3] = [0xEF, 0xBF, 0xBD];
 
 /// Required UTF-16 output capacity (in words) to transcode `src_len`
 /// UTF-8 bytes: one word per input byte plus register slack.
@@ -85,6 +100,76 @@ pub trait Utf8ToUtf16: Send + Sync {
         dst.truncate(n);
         Ok(dst)
     }
+
+    /// **Lossy** conversion: invalid input does not fail, each *maximal
+    /// invalid subpart* is replaced with one U+FFFD (the WHATWG policy,
+    /// byte-for-byte identical to `String::from_utf8_lossy`), and
+    /// conversion resumes after it.
+    ///
+    /// Implemented as a resume loop over the validating [`convert`]
+    /// (`Utf8ToUtf16::convert`): **valid input costs exactly one
+    /// `convert` call**, i.e. nothing over the strict API. Each error
+    /// costs one extra engine pass over the valid run preceding it
+    /// (a failed `convert` reports where, but not how much it wrote,
+    /// so the valid prefix is re-converted) plus the bounded scalar
+    /// maximal-subpart scan — so dirty input degrades with the error
+    /// density, never with the input length.
+    ///
+    /// The buffer contract is the same as `convert`
+    /// ([`utf16_capacity_for`]): a replacement writes one word for at
+    /// least one consumed byte, so lossy output never exceeds the strict
+    /// worst case. `Err` is only returned for
+    /// [`ErrorKind::OutputBuffer`] (undersized `dst`); encoding errors
+    /// are *consumed* and surfaced as `replacements`/`first_error` in
+    /// the [`LossyResult`].
+    ///
+    /// With a **non-validating** engine this degrades gracefully: errors
+    /// the engine does not detect are not replaced (the output is the
+    /// engine's best-effort transcoding). WHATWG semantics require
+    /// `validating() == true`.
+    fn convert_lossy(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult<LossyResult> {
+        let mut pos = 0usize; // input frontier (bytes)
+        let mut written = 0usize; // output frontier (words)
+        let mut replacements = 0usize;
+        let mut first_error = None;
+        loop {
+            match self.convert(&src[pos..], &mut dst[written..]) {
+                Ok(n) => {
+                    return Ok(LossyResult { written: written + n, replacements, first_error })
+                }
+                Err(e) if e.kind == ErrorKind::OutputBuffer => return Err(e.offset(pos)),
+                Err(e) => {
+                    if first_error.is_none() {
+                        first_error = Some(e.offset(pos));
+                    }
+                    // `position` is `valid_up_to`: everything before it
+                    // is valid, so this re-conversion cannot fail with
+                    // an encoding error (and the capacity contract is
+                    // preserved — written ≤ bytes consumed).
+                    let split = pos + e.position.min(src.len() - pos);
+                    written += self
+                        .convert(&src[pos..split], &mut dst[written..])
+                        .map_err(|pe| pe.offset(pos))?;
+                    if written >= dst.len() {
+                        return Err(TranscodeError::output_buffer(split));
+                    }
+                    dst[written] = REPLACEMENT_UTF16;
+                    written += 1;
+                    replacements += 1;
+                    pos = (split + crate::scalar::utf8_maximal_subpart_len(&src[split..]))
+                        .min(src.len());
+                }
+            }
+        }
+    }
+
+    /// Convenience: lossy conversion into a fresh, exactly-sized vector.
+    fn convert_lossy_to_vec(&self, src: &[u8]) -> TranscodeResult<(Vec<u16>, LossyResult)> {
+        let mut dst = vec![0u16; utf16_capacity_for(src.len())];
+        let r = self.convert_lossy(src, &mut dst)?;
+        dst.truncate(r.written);
+        Ok((dst, r))
+    }
 }
 
 /// Shared handles transcode too: lets a registry engine (e.g. the
@@ -104,6 +189,11 @@ impl<T: Utf8ToUtf16 + ?Sized> Utf8ToUtf16 for std::sync::Arc<T> {
     fn supports_supplemental(&self) -> bool {
         (**self).supports_supplemental()
     }
+    // Forwarded so an engine that overrides the default lossy loop keeps
+    // its override behind the shared handle.
+    fn convert_lossy(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult<LossyResult> {
+        (**self).convert_lossy(src, dst)
+    }
 }
 
 /// A UTF-16 → UTF-8 transcoding engine.
@@ -122,6 +212,59 @@ pub trait Utf16ToUtf8: Send + Sync {
         dst.truncate(n);
         Ok(dst)
     }
+
+    /// **Lossy** conversion: each *unpaired surrogate* is replaced with
+    /// one U+FFFD and conversion resumes with the next word — exactly
+    /// `char::decode_utf16(..).map(|r|
+    /// r.unwrap_or(char::REPLACEMENT_CHARACTER))`.
+    ///
+    /// Same structure, contract and cost model as
+    /// [`Utf8ToUtf16::convert_lossy`]: a resume loop over the validating
+    /// [`convert`](Utf16ToUtf8::convert) — valid input pays nothing,
+    /// each error re-runs the engine over the preceding valid run. The
+    /// [`utf8_capacity_for`] buffer contract is unchanged (U+FFFD is 3
+    /// bytes for one consumed word), and `Err` is only
+    /// [`ErrorKind::OutputBuffer`].
+    fn convert_lossy(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult<LossyResult> {
+        let mut pos = 0usize; // input frontier (words)
+        let mut written = 0usize; // output frontier (bytes)
+        let mut replacements = 0usize;
+        let mut first_error = None;
+        loop {
+            match self.convert(&src[pos..], &mut dst[written..]) {
+                Ok(n) => {
+                    return Ok(LossyResult { written: written + n, replacements, first_error })
+                }
+                Err(e) if e.kind == ErrorKind::OutputBuffer => return Err(e.offset(pos)),
+                Err(e) => {
+                    if first_error.is_none() {
+                        first_error = Some(e.offset(pos));
+                    }
+                    let split = pos + e.position.min(src.len() - pos);
+                    written += self
+                        .convert(&src[pos..split], &mut dst[written..])
+                        .map_err(|pe| pe.offset(pos))?;
+                    if written + REPLACEMENT_UTF8.len() > dst.len() {
+                        return Err(TranscodeError::output_buffer(split));
+                    }
+                    dst[written..written + 3].copy_from_slice(&REPLACEMENT_UTF8);
+                    written += 3;
+                    replacements += 1;
+                    // The maximal invalid subpart of malformed UTF-16 is
+                    // always the single unpaired surrogate word.
+                    pos = (split + 1).min(src.len());
+                }
+            }
+        }
+    }
+
+    /// Convenience: lossy conversion into a fresh, exactly-sized vector.
+    fn convert_lossy_to_vec(&self, src: &[u16]) -> TranscodeResult<(Vec<u8>, LossyResult)> {
+        let mut dst = vec![0u8; utf8_capacity_for(src.len())];
+        let r = self.convert_lossy(src, &mut dst)?;
+        dst.truncate(r.written);
+        Ok((dst, r))
+    }
 }
 
 /// See the [`Utf8ToUtf16`] blanket impl for `Arc`.
@@ -134,6 +277,9 @@ impl<T: Utf16ToUtf8 + ?Sized> Utf16ToUtf8 for std::sync::Arc<T> {
     }
     fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
         (**self).convert(src, dst)
+    }
+    fn convert_lossy(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult<LossyResult> {
+        (**self).convert_lossy(src, dst)
     }
 }
 
@@ -217,5 +363,82 @@ mod tests {
         let mut dst = vec![0u8; utf8_capacity_for(bad.len())];
         let n = Utf16ToUtf8::convert(&engine, &bad, &mut dst).expect("total on garbage");
         assert_eq!(n, utf8_len_from_utf16(&bad));
+    }
+
+    #[test]
+    fn lossy_utf8_matches_std_from_utf8_lossy() {
+        let engine = utf8_to_utf16::OurUtf8ToUtf16::validating();
+        let cases: &[&[u8]] = &[
+            b"",
+            b"clean ascii",
+            "clean é漢🙂".as_bytes(),
+            &[0x80],
+            &[0xFF, 0xFF],
+            b"a\xC2",                            // truncated at end
+            b"x\xE0\x80y",                       // lead + bad continuation
+            b"s\xED\xA0\x80t",                   // encoded surrogate: 3 U+FFFD
+            b"q\xF4\x90\x80\x80r",               // too large: 4 U+FFFD
+            b"mix \xF0\x90\x41 and \xC0\xAF end",
+        ];
+        for src in cases {
+            let expected: Vec<u16> =
+                String::from_utf8_lossy(src).encode_utf16().collect();
+            let (out, r) = engine.convert_lossy_to_vec(src).expect("lossy is total");
+            assert_eq!(out, expected, "{src:02x?}");
+            assert_eq!(r.written, expected.len(), "{src:02x?}");
+            // None of the cases contain a literal U+FFFD, so the count
+            // is exactly the number of replacement characters emitted.
+            assert_eq!(
+                r.replacements,
+                expected.iter().filter(|&&w| w == REPLACEMENT_UTF16).count(),
+                "{src:02x?}"
+            );
+            assert_eq!(r.clean(), std::str::from_utf8(src).is_ok(), "{src:02x?}");
+            if let Err(std_err) = std::str::from_utf8(src) {
+                assert_eq!(
+                    r.first_error.expect("dirty input has a first error").position,
+                    std_err.valid_up_to(),
+                    "{src:02x?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_utf16_matches_std_decode_utf16() {
+        let engine = utf16_to_utf8::OurUtf16ToUtf8::validating();
+        let cases: &[&[u16]] = &[
+            &[],
+            &[0x41, 0x42],
+            &[0xD83D, 0xDE42],          // valid pair
+            &[0xDC00],                  // lone low
+            &[0xD800],                  // lone high at end
+            &[0x41, 0xD800, 0x42],      // high + non-low
+            &[0xD800, 0xD800, 0xDC00],  // high then valid pair
+            &[0xDC00, 0xD800],          // reversed pair: 2 replacements
+            &[0x48, 0xD800, 0xD801, 0xD802, 0x49],
+        ];
+        for src in cases {
+            let expected: Vec<u8> = char::decode_utf16(src.iter().copied())
+                .map(|r| r.unwrap_or(char::REPLACEMENT_CHARACTER))
+                .collect::<String>()
+                .into_bytes();
+            let (out, r) = engine.convert_lossy_to_vec(src).expect("lossy is total");
+            assert_eq!(out, expected, "{src:04x?}");
+            let unpaired = char::decode_utf16(src.iter().copied())
+                .filter(|r| r.is_err())
+                .count();
+            assert_eq!(r.replacements, unpaired, "{src:04x?}");
+            assert_eq!(r.first_error.is_some(), unpaired > 0, "{src:04x?}");
+        }
+    }
+
+    #[test]
+    fn lossy_propagates_output_buffer_exhaustion() {
+        let engine = utf8_to_utf16::OurUtf8ToUtf16::validating();
+        let src = b"0123456789 repeated ".repeat(8);
+        let mut tiny = [0u16; 4]; // far below utf16_capacity_for(len)
+        let err = engine.convert_lossy(&src, &mut tiny).expect_err("must not fit");
+        assert_eq!(err.kind, ErrorKind::OutputBuffer);
     }
 }

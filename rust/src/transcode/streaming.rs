@@ -35,11 +35,39 @@
 //!
 //! After an error the transcoder is poisoned: further pushes fail with
 //! [`ErrorKind::Other`].
+//!
+//! ### Lossy mode
+//!
+//! `push_lossy` / `finish_lossy` are the streaming counterparts of
+//! [`crate::transcode::Utf8ToUtf16::convert_lossy`]: encoding errors
+//! never fail a push and **never poison the stream** — each maximal
+//! invalid subpart (UTF-8) or unpaired surrogate (UTF-16) becomes one
+//! U+FFFD in the output, counted in
+//! [`LossyFeedResult::replacements`]. Concatenating the lossy outputs
+//! of any chunking (plus `finish_lossy`) equals the one-shot
+//! `convert_lossy` of the concatenated input, which in turn equals
+//! `String::from_utf8_lossy` / `char::decode_utf16` +
+//! `REPLACEMENT_CHARACTER`.
+//!
+//! The per-push buffer contract is the same as strict `push`; unlike
+//! strict `finish`, **`finish_lossy` writes output** (a dangling
+//! partial character at end of stream becomes U+FFFD — up to 3
+//! replacements from the ≤ 3 carried bytes), so it takes a `dst` sized
+//! for the carried units (the capacity function of 3 bytes / 1 word is
+//! always enough). Only [`ErrorKind::OutputBuffer`] is ever returned,
+//! and — exactly like the strict path — it **poisons** the stream: it
+//! signals a broken buffer contract, not dirty data, and by the time it
+//! is detected part of the chunk may already be consumed, so a retry
+//! could not resume coherently. "Never poisons" is a guarantee about
+//! *encoding* errors only. Drive a stream either strict or lossy; a
+//! stream poisoned by a strict error rejects lossy pushes too.
 
 use crate::scalar;
 use crate::transcode::utf16_to_utf8::OurUtf16ToUtf8;
 use crate::transcode::utf8_to_utf16::OurUtf8ToUtf16;
-use crate::transcode::{ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16};
+use crate::transcode::{
+    ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16, REPLACEMENT_UTF16, REPLACEMENT_UTF8,
+};
 
 /// What one `push` did.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,6 +77,18 @@ pub struct FeedResult {
     /// Input units carried over to the next push (0..=3 bytes for UTF-8,
     /// 0..=1 words for UTF-16).
     pub pending: usize,
+}
+
+/// What one `push_lossy` / `finish_lossy` did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LossyFeedResult {
+    /// Output units written to `dst` by this call (replacements
+    /// included).
+    pub written: usize,
+    /// Input units carried over to the next push.
+    pub pending: usize,
+    /// U+FFFD replacement characters emitted by this call.
+    pub replacements: usize,
 }
 
 /// Declared sequence length from a UTF-8 lead byte. Bytes that cannot
@@ -173,7 +213,13 @@ impl<E: Utf8ToUtf16> StreamingUtf8ToUtf16<E> {
             }
             match scalar::decode_utf8_char(&self.pending[..need]) {
                 Ok((cp, _)) => {
-                    if dst.len() < 2 {
+                    // Headroom audit: the pending completion runs before
+                    // any body conversion, so `written == 0` and
+                    // `dst.len()` *is* the remaining headroom. The old
+                    // `dst.len() < 2` guard was safe but inexact — it
+                    // spuriously rejected a 1-word BMP completion into a
+                    // 1-word buffer; check the character's actual width.
+                    if dst.len() < if cp < 0x10000 { 1 } else { 2 } {
                         self.failed = true;
                         return Err(TranscodeError::output_buffer(start_abs));
                     }
@@ -217,6 +263,121 @@ impl<E: Utf8ToUtf16> StreamingUtf8ToUtf16<E> {
             return Err(TranscodeError::new(ErrorKind::TooShort, pos));
         }
         Ok(())
+    }
+
+    /// Lossy [`push`](Self::push): encoding errors become U+FFFD instead
+    /// of failing, and the stream is never poisoned (see the module
+    /// docs). Only [`ErrorKind::OutputBuffer`] is ever returned.
+    pub fn push_lossy(
+        &mut self,
+        chunk: &[u8],
+        dst: &mut [u16],
+    ) -> Result<LossyFeedResult, TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        let base = self.received;
+        self.received += chunk.len();
+        let mut written = 0usize;
+        let mut replacements = 0usize;
+        let mut offset = 0usize;
+
+        // Drain carried bytes through the strict scalar decoder,
+        // replacing maximal invalid subparts as they are exposed. Unlike
+        // the strict path, a failed completion consumes only the subpart:
+        // the remaining carried bytes are re-examined — they may start
+        // another character, or another subpart.
+        while self.pending_len > 0 {
+            let need = utf8_seq_len(self.pending[0]);
+            while self.pending_len < need && offset < chunk.len() {
+                self.pending[self.pending_len] = chunk[offset];
+                self.pending_len += 1;
+                offset += 1;
+            }
+            if self.pending_len < need {
+                // Chunk exhausted before the sequence completed.
+                return Ok(LossyFeedResult { written, pending: self.pending_len, replacements });
+            }
+            let consumed = match scalar::decode_utf8_char(&self.pending[..need]) {
+                Ok((cp, len)) => {
+                    if dst.len() - written < if cp < 0x10000 { 1 } else { 2 } {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(base + offset));
+                    }
+                    written += scalar::encode_utf16_char(cp, &mut dst[written..]);
+                    len
+                }
+                Err(_) => {
+                    if written >= dst.len() {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(base + offset));
+                    }
+                    dst[written] = REPLACEMENT_UTF16;
+                    written += 1;
+                    replacements += 1;
+                    scalar::utf8_maximal_subpart_len(&self.pending[..need])
+                }
+            };
+            self.pending.copy_within(consumed..self.pending_len, 0);
+            self.pending_len -= consumed;
+        }
+
+        // Hold back a trailing incomplete sequence, lossy-convert the
+        // rest through the engine's full-speed resume loop.
+        let body = &chunk[offset..];
+        let hold = utf8_holdback(body);
+        let end = body.len() - hold;
+        let r = match self.engine.convert_lossy(&body[..end], &mut dst[written..]) {
+            Ok(r) => r,
+            Err(e) => {
+                self.failed = true;
+                return Err(e.offset(base + offset));
+            }
+        };
+        written += r.written;
+        replacements += r.replacements;
+        self.pending[..hold].copy_from_slice(&body[end..]);
+        self.pending_len = hold;
+        Ok(LossyFeedResult { written, pending: hold, replacements })
+    }
+
+    /// Lossy end of stream: a dangling partial character becomes
+    /// U+FFFD output (one per maximal subpart of the ≤ 3 carried bytes)
+    /// instead of an error. `dst` sized for the carried units —
+    /// [`crate::transcode::utf16_capacity_for`]`(3)` always suffices.
+    pub fn finish_lossy(&mut self, dst: &mut [u16]) -> Result<LossyFeedResult, TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        let mut written = 0usize;
+        let mut replacements = 0usize;
+        while self.pending_len > 0 {
+            let consumed = match scalar::decode_utf8_char(&self.pending[..self.pending_len]) {
+                // Defensive: carried bytes are always an *incomplete*
+                // prefix, but decode them strictly anyway.
+                Ok((cp, len)) => {
+                    if dst.len() - written < if cp < 0x10000 { 1 } else { 2 } {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(self.received));
+                    }
+                    written += scalar::encode_utf16_char(cp, &mut dst[written..]);
+                    len
+                }
+                Err(_) => {
+                    if written >= dst.len() {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(self.received));
+                    }
+                    dst[written] = REPLACEMENT_UTF16;
+                    written += 1;
+                    replacements += 1;
+                    scalar::utf8_maximal_subpart_len(&self.pending[..self.pending_len])
+                }
+            };
+            self.pending.copy_within(consumed..self.pending_len, 0);
+            self.pending_len -= consumed;
+        }
+        Ok(LossyFeedResult { written, pending: 0, replacements })
     }
 }
 
@@ -287,6 +448,11 @@ impl<E: Utf16ToUtf8> StreamingUtf16ToUtf8<E> {
             let pair = [high, chunk[0]];
             match scalar::decode_utf16_char(&pair) {
                 Ok((cp, _)) => {
+                    // Headroom audit: `written == 0` here (pair
+                    // completion precedes body conversion), so
+                    // `dst.len()` is the remaining headroom — and a
+                    // completed pair always encodes to exactly 4 bytes,
+                    // so unlike the UTF-8 side this guard is exact.
                     if dst.len() < 4 {
                         self.failed = true;
                         return Err(TranscodeError::output_buffer(base - 1));
@@ -343,6 +509,105 @@ impl<E: Utf16ToUtf8> StreamingUtf16ToUtf8<E> {
             return Err(TranscodeError::new(ErrorKind::TooShort, self.received - 1));
         }
         Ok(())
+    }
+
+    /// Lossy [`push`](Self::push): unpaired surrogates become U+FFFD
+    /// instead of failing, and the stream is never poisoned (see the
+    /// module docs). Only [`ErrorKind::OutputBuffer`] is ever returned.
+    pub fn push_lossy(
+        &mut self,
+        chunk: &[u16],
+        dst: &mut [u8],
+    ) -> Result<LossyFeedResult, TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        let base = self.received;
+        self.received += chunk.len();
+        let mut written = 0usize;
+        let mut replacements = 0usize;
+        let mut offset = 0usize;
+
+        if let Some(high) = self.pending_high {
+            if chunk.is_empty() {
+                return Ok(LossyFeedResult { written: 0, pending: 1, replacements: 0 });
+            }
+            let pair = [high, chunk[0]];
+            match scalar::decode_utf16_char(&pair) {
+                Ok((cp, _)) => {
+                    if dst.len() < 4 {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(base - 1));
+                    }
+                    written += scalar::encode_utf8_char(cp, dst);
+                    offset = 1;
+                }
+                Err(_) => {
+                    // The carried high surrogate is unpaired: replace
+                    // it. `chunk[0]` was not consumed — the body
+                    // conversion below re-examines it.
+                    if dst.len() < 3 {
+                        self.failed = true;
+                        return Err(TranscodeError::output_buffer(base - 1));
+                    }
+                    dst[..3].copy_from_slice(&REPLACEMENT_UTF8);
+                    written += 3;
+                    replacements += 1;
+                }
+            }
+            self.pending_high = None;
+        }
+
+        let body = &chunk[offset..];
+        let run = body
+            .iter()
+            .rev()
+            .take_while(|w| (0xD800..0xDC00).contains(*w))
+            .count();
+        let end = body.len() - run;
+        let r = match self.engine.convert_lossy(&body[..end], &mut dst[written..]) {
+            Ok(r) => r,
+            Err(e) => {
+                self.failed = true;
+                return Err(e.offset(base + offset));
+            }
+        };
+        written += r.written;
+        replacements += r.replacements;
+        if run > 0 {
+            // All but the last high of a trailing run are decided
+            // already — each is followed by another high, hence
+            // unpaired. The last may still pair with the next chunk.
+            for _ in 0..run - 1 {
+                if dst.len() - written < 3 {
+                    self.failed = true;
+                    return Err(TranscodeError::output_buffer(base + offset + end));
+                }
+                dst[written..written + 3].copy_from_slice(&REPLACEMENT_UTF8);
+                written += 3;
+                replacements += 1;
+            }
+            self.pending_high = Some(body[body.len() - 1]);
+        }
+        Ok(LossyFeedResult { written, pending: usize::from(run > 0), replacements })
+    }
+
+    /// Lossy end of stream: a still-pending high surrogate becomes one
+    /// U+FFFD in `dst` (3 bytes always suffice) instead of an error.
+    pub fn finish_lossy(&mut self, dst: &mut [u8]) -> Result<LossyFeedResult, TranscodeError> {
+        if self.failed {
+            return Err(TranscodeError::new(ErrorKind::Other, self.received));
+        }
+        if self.pending_high.is_some() {
+            if dst.len() < 3 {
+                self.failed = true;
+                return Err(TranscodeError::output_buffer(self.received - 1));
+            }
+            self.pending_high = None;
+            dst[..3].copy_from_slice(&REPLACEMENT_UTF8);
+            return Ok(LossyFeedResult { written: 3, pending: 0, replacements: 1 });
+        }
+        Ok(LossyFeedResult { written: 0, pending: 0, replacements: 0 })
     }
 }
 
@@ -451,5 +716,105 @@ mod tests {
         assert!(s.push(b"\xFFabc", &mut dst).is_err());
         let again = s.push(b"abc", &mut dst).expect_err("poisoned");
         assert_eq!(again.kind, ErrorKind::Other);
+    }
+
+    #[test]
+    fn pending_completion_into_exact_one_word_buffer() {
+        // Regression for the old `dst.len() < 2` guard: a carried 2-byte
+        // character (BMP, one output word) must complete into a 1-word
+        // buffer instead of reporting a spurious OutputBuffer.
+        let mut s = StreamingUtf8ToUtf16::new();
+        let mut big = vec![0u16; utf16_capacity_for(1)];
+        let e = "é".as_bytes(); // [0xC3, 0xA9]
+        let r = s.push(&e[..1], &mut big).expect("lead held back");
+        assert_eq!((r.written, r.pending), (0, 1));
+        let mut one = [0u16; 1];
+        let r = s.push(&e[1..], &mut one).expect("must fit in exactly one word");
+        assert_eq!((r.written, r.pending), (1, 0));
+        assert_eq!(one[0], 0xE9);
+        s.finish().expect("complete");
+        // A carried supplemental character still needs (and gets
+        // rejected without) two words.
+        let mut s = StreamingUtf8ToUtf16::new();
+        let emoji = "🙂".as_bytes();
+        s.push(&emoji[..2], &mut big).expect("held back");
+        let err = s.push(&emoji[2..], &mut one).expect_err("needs two words");
+        assert_eq!(err.kind, ErrorKind::OutputBuffer);
+    }
+
+    #[test]
+    fn lossy_stream_matches_one_shot_lossy() {
+        let dirty = b"ok \xFF mid \xE0\x80 tail \xF0\x9F\x99\x82 \xED\xA0\x80 end \xC2";
+        let expected: Vec<u16> =
+            String::from_utf8_lossy(dirty).encode_utf16().collect();
+        let expected_repl =
+            expected.iter().filter(|&&w| w == REPLACEMENT_UTF16).count();
+        for chunk_len in 1..=dirty.len() {
+            let mut s = StreamingUtf8ToUtf16::new();
+            let mut out = Vec::new();
+            let mut repl = 0usize;
+            let mut dst = vec![0u16; utf16_capacity_for(chunk_len + 3)];
+            for chunk in dirty.chunks(chunk_len) {
+                let r = s.push_lossy(chunk, &mut dst).expect("lossy never fails");
+                out.extend_from_slice(&dst[..r.written]);
+                repl += r.replacements;
+            }
+            let r = s.finish_lossy(&mut dst).expect("lossy finish");
+            out.extend_from_slice(&dst[..r.written]);
+            repl += r.replacements;
+            assert_eq!(out, expected, "chunk_len {chunk_len}");
+            assert_eq!(repl, expected_repl, "chunk_len {chunk_len}");
+        }
+    }
+
+    #[test]
+    fn lossy_stream_never_poisons() {
+        let mut s = StreamingUtf8ToUtf16::new();
+        let mut dst = vec![0u16; utf16_capacity_for(16)];
+        let r = s.push_lossy(b"\xFF\xFE bad", &mut dst).expect("consumed");
+        assert_eq!(r.replacements, 2);
+        let r = s.push_lossy(b" fine", &mut dst).expect("not poisoned");
+        assert_eq!(r.replacements, 0);
+        let r = s.finish_lossy(&mut dst).expect("clean finish");
+        assert_eq!((r.written, r.replacements), (0, 0));
+    }
+
+    #[test]
+    fn lossy_utf16_stream_replaces_dangling_high() {
+        let units = [0x41u16, 0xD83D]; // 'A' + lone high at end of stream
+        let mut s = StreamingUtf16ToUtf8::new();
+        let mut dst = vec![0u8; utf8_capacity_for(4)];
+        let mut out = Vec::new();
+        let r = s.push_lossy(&units, &mut dst).expect("held back");
+        out.extend_from_slice(&dst[..r.written]);
+        assert_eq!(r.pending, 1);
+        let r = s.finish_lossy(&mut dst).expect("lossy finish");
+        out.extend_from_slice(&dst[..r.written]);
+        assert_eq!((r.replacements, r.pending), (1, 0));
+        assert_eq!(out, "A\u{FFFD}".as_bytes());
+    }
+
+    #[test]
+    fn lossy_utf16_stream_matches_one_shot_lossy() {
+        // Mixed garbage: lone lows, a surrogate run, a split pair.
+        let units: Vec<u16> = vec![
+            0x48, 0xDC00, 0x69, 0xD800, 0xD801, 0xD802, 0xDC05, 0x21, 0xD83D, 0xDE42, 0xD800,
+        ];
+        let expected: Vec<u8> = char::decode_utf16(units.iter().copied())
+            .map(|r| r.unwrap_or(char::REPLACEMENT_CHARACTER))
+            .collect::<String>()
+            .into_bytes();
+        for chunk_len in 1..=units.len() {
+            let mut s = StreamingUtf16ToUtf8::new();
+            let mut out = Vec::new();
+            let mut dst = vec![0u8; utf8_capacity_for(chunk_len + 1)];
+            for chunk in units.chunks(chunk_len) {
+                let r = s.push_lossy(chunk, &mut dst).expect("lossy never fails");
+                out.extend_from_slice(&dst[..r.written]);
+            }
+            let r = s.finish_lossy(&mut dst).expect("lossy finish");
+            out.extend_from_slice(&dst[..r.written]);
+            assert_eq!(out, expected, "chunk_len {chunk_len}");
+        }
     }
 }

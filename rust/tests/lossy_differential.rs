@@ -1,0 +1,259 @@
+//! The lossy differential suite.
+//!
+//! `convert_lossy` must be **bit-identical to the standard library's
+//! WHATWG replacement decoding** for every validating registry engine:
+//!
+//! * UTF-8 → UTF-16 output equals `String::from_utf8_lossy(src)`
+//!   re-encoded to UTF-16, with one replacement per maximal invalid
+//!   subpart (`utf8_chunks` is the ground truth for the count — the
+//!   corpora can contain literal U+FFFD, so counting U+FFFD in the
+//!   output would overcount);
+//! * UTF-16 → UTF-8 output equals `char::decode_utf16` with
+//!   `REPLACEMENT_CHARACTER`, one replacement per unpaired surrogate;
+//! * `first_error` carries the strict conversion's kind/position
+//!   convention (`valid_up_to` for UTF-8).
+//!
+//! Inputs: every corpus of both collections, clean and under every
+//! [`DIRT_PROFILES`] corruption rate, plus 400+ random-corruption
+//! seeds, plus lossy streaming at random chunkings.
+
+use simdutf_rs::corpus::{
+    corrupt_utf16, corrupt_utf8, generate_collection, Collection, SplitMix64, DIRT_PROFILES,
+};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::prelude::*;
+use simdutf_rs::transcode::{utf16_capacity_for, utf8_capacity_for};
+
+/// std's lossy UTF-8 decoding: (UTF-16 output, replacements, first
+/// error position).
+fn expected_utf8_lossy(src: &[u8]) -> (Vec<u16>, usize, Option<usize>) {
+    let out: Vec<u16> = String::from_utf8_lossy(src).encode_utf16().collect();
+    let repl = src.utf8_chunks().filter(|c| !c.invalid().is_empty()).count();
+    let first = std::str::from_utf8(src).err().map(|e| e.valid_up_to());
+    (out, repl, first)
+}
+
+/// std's lossy UTF-16 decoding: (UTF-8 output, replacements, first
+/// unpaired-surrogate index).
+fn expected_utf16_lossy(src: &[u16]) -> (Vec<u8>, usize, Option<usize>) {
+    let out: Vec<u8> = char::decode_utf16(src.iter().copied())
+        .map(|r| r.unwrap_or(char::REPLACEMENT_CHARACTER))
+        .collect::<String>()
+        .into_bytes();
+    let repl = char::decode_utf16(src.iter().copied()).filter(|r| r.is_err()).count();
+    let mut first = None;
+    let mut p = 0usize;
+    while p < src.len() {
+        let w = src[p];
+        if !(0xD800..=0xDFFF).contains(&w) {
+            p += 1;
+        } else if w < 0xDC00 && p + 1 < src.len() && (0xDC00..=0xDFFF).contains(&src[p + 1]) {
+            p += 2;
+        } else {
+            first = Some(p);
+            break;
+        }
+    }
+    (out, repl, first)
+}
+
+fn check_utf8(engine: &dyn Utf8ToUtf16, src: &[u8], ctx: &str) {
+    let (want, want_repl, want_first) = expected_utf8_lossy(src);
+    let (got, r) = engine.convert_lossy_to_vec(src).expect("lossy is total");
+    assert_eq!(got, want, "{ctx}: output");
+    assert_eq!(r.written, want.len(), "{ctx}: written");
+    assert_eq!(r.replacements, want_repl, "{ctx}: replacements");
+    assert_eq!(r.first_error.map(|e| e.position), want_first, "{ctx}: first error");
+}
+
+fn check_utf16(engine: &dyn Utf16ToUtf8, src: &[u16], ctx: &str) {
+    let (want, want_repl, want_first) = expected_utf16_lossy(src);
+    let (got, r) = engine.convert_lossy_to_vec(src).expect("lossy is total");
+    assert_eq!(got, want, "{ctx}: output");
+    assert_eq!(r.replacements, want_repl, "{ctx}: replacements");
+    assert_eq!(r.first_error.map(|e| e.position), want_first, "{ctx}: first error");
+}
+
+#[test]
+fn every_engine_every_corpus_profile_utf8() {
+    let r = Registry::global();
+    for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+        for corpus in generate_collection(collection) {
+            // 8 KiB prefixes keep the full cross product fast while
+            // still crossing many 64-byte blocks and register widths.
+            let clean = corpus.utf8_prefix(8192).to_vec();
+            let mut inputs = vec![("clean".to_string(), clean.clone())];
+            for &profile in DIRT_PROFILES {
+                inputs.push((
+                    profile.label.to_string(),
+                    corrupt_utf8(&clean, profile.permille, 0xDEC0DE),
+                ));
+            }
+            for e in r.utf8_lossy_entries() {
+                for (label, bytes) in &inputs {
+                    check_utf8(
+                        e.engine.as_ref(),
+                        bytes,
+                        &format!("{} on {} {:?} {}", e.key, corpus.name(), collection, label),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_engine_every_corpus_profile_utf16() {
+    let r = Registry::global();
+    for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+        for corpus in generate_collection(collection) {
+            let clean = corpus.utf16_prefix(4096).to_vec();
+            let mut inputs = vec![("clean".to_string(), clean.clone())];
+            for &profile in DIRT_PROFILES {
+                inputs.push((
+                    profile.label.to_string(),
+                    corrupt_utf16(&clean, profile.permille, 0xDEC0DE),
+                ));
+            }
+            for e in r.utf16_lossy_entries() {
+                for (label, words) in &inputs {
+                    check_utf16(
+                        e.engine.as_ref(),
+                        words,
+                        &format!("{} on {} {:?} {}", e.key, corpus.name(), collection, label),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn four_hundred_random_corruption_seeds_utf8() {
+    let r = Registry::global();
+    let base = "mixed ascii é漢字🙂 ελληνικά русский العربية हिन्दी 🚀 end "
+        .repeat(24)
+        .into_bytes();
+    for seed in 0..400u64 {
+        // Vary both the corruption rate and the slice so every seed is
+        // a genuinely different dirty input.
+        let permille = 1 + (seed % 80) as u32;
+        let len = 512 + (seed as usize * 7) % (base.len() - 512);
+        let dirty = corrupt_utf8(&base[..len], permille, seed);
+        for e in r.utf8_lossy_entries() {
+            check_utf8(e.engine.as_ref(), &dirty, &format!("seed {seed} engine {}", e.key));
+        }
+    }
+}
+
+#[test]
+fn four_hundred_random_corruption_seeds_utf16() {
+    let r = Registry::global();
+    let base: Vec<u16> = "mixed ascii é漢字🙂 ελληνικά русский العربية हिन्दी 🚀 end "
+        .repeat(24)
+        .encode_utf16()
+        .collect();
+    for seed in 0..400u64 {
+        let permille = 1 + (seed % 80) as u32;
+        let len = 256 + (seed as usize * 11) % (base.len() - 256);
+        let dirty = corrupt_utf16(&base[..len], permille, seed);
+        for e in r.utf16_lossy_entries() {
+            check_utf16(e.engine.as_ref(), &dirty, &format!("seed {seed} engine {}", e.key));
+        }
+    }
+}
+
+#[test]
+fn truncated_tails_replace_like_std() {
+    // Every truncation point of multi-byte sequences at end of input:
+    // std replaces the whole incomplete sequence with a single U+FFFD.
+    let text = "abé漢🙂".as_bytes();
+    let engine = OurUtf8ToUtf16::validating();
+    for cut in 0..=text.len() {
+        check_utf8(&engine, &text[..cut], &format!("cut {cut}"));
+    }
+}
+
+#[test]
+fn lossy_equals_strict_on_clean_corpora() {
+    // On valid input the lossy path must be byte-identical to strict
+    // conversion with zero replacements (the throughput equivalence is
+    // asserted by the bench smoke run; correctness is asserted here).
+    let r = Registry::global();
+    for corpus in generate_collection(Collection::Lipsum) {
+        let bytes = corpus.utf8_prefix(8192);
+        for e in r.utf8_lossy_entries() {
+            let strict = e.engine.convert_to_vec(bytes).expect("corpus is valid");
+            let (lossy, res) = e.engine.convert_lossy_to_vec(bytes).expect("lossy is total");
+            assert_eq!(strict, lossy, "{} on {}", e.key, corpus.name());
+            assert_eq!(res.replacements, 0, "{} on {}", e.key, corpus.name());
+            assert!(res.first_error.is_none(), "{} on {}", e.key, corpus.name());
+        }
+        let words = corpus.utf16_prefix(4096);
+        for e in r.utf16_lossy_entries() {
+            let strict = e.engine.convert_to_vec(words).expect("corpus is valid");
+            let (lossy, res) = e.engine.convert_lossy_to_vec(words).expect("lossy is total");
+            assert_eq!(strict, lossy, "{} on {}", e.key, corpus.name());
+            assert_eq!(res.replacements, 0, "{} on {}", e.key, corpus.name());
+        }
+    }
+}
+
+#[test]
+fn lossy_streaming_matches_oneshot_on_dirty_streams() {
+    // Random chunkings of dirty input through the registry's `best`
+    // engine: concatenated lossy pushes + lossy finish must equal the
+    // one-shot lossy conversion (and therefore std).
+    let base = "stream é漢🙂 мир हिन्दी test ".repeat(40).into_bytes();
+    for seed in 0..60u64 {
+        let dirty = corrupt_utf8(&base, 20, seed);
+        let (want, want_repl, _) = expected_utf8_lossy(&dirty);
+        let mut rng = SplitMix64::new(seed ^ 0x57AEA);
+        let mut s = StreamingUtf8ToUtf16::best();
+        let mut out = Vec::new();
+        let mut repl = 0usize;
+        let mut p = 0usize;
+        while p < dirty.len() {
+            let n = 1 + rng.below(97) as usize;
+            let chunk = &dirty[p..(p + n).min(dirty.len())];
+            let mut dst = vec![0u16; utf16_capacity_for(chunk.len() + 3)];
+            let fed = s.push_lossy(chunk, &mut dst).expect("lossy never fails");
+            out.extend_from_slice(&dst[..fed.written]);
+            repl += fed.replacements;
+            p += chunk.len();
+        }
+        let mut dst = vec![0u16; utf16_capacity_for(3)];
+        let fed = s.finish_lossy(&mut dst).expect("lossy finish");
+        out.extend_from_slice(&dst[..fed.written]);
+        repl += fed.replacements;
+        assert_eq!(out, want, "seed {seed}");
+        assert_eq!(repl, want_repl, "seed {seed}");
+    }
+
+    // UTF-16 direction.
+    let base16: Vec<u16> = "stream é漢🙂 мир हिन्दी test ".repeat(40).encode_utf16().collect();
+    for seed in 0..60u64 {
+        let dirty = corrupt_utf16(&base16, 20, seed);
+        let (want, want_repl, _) = expected_utf16_lossy(&dirty);
+        let mut rng = SplitMix64::new(seed ^ 0x57AEB);
+        let mut s = StreamingUtf16ToUtf8::best();
+        let mut out = Vec::new();
+        let mut repl = 0usize;
+        let mut p = 0usize;
+        while p < dirty.len() {
+            let n = 1 + rng.below(53) as usize;
+            let chunk = &dirty[p..(p + n).min(dirty.len())];
+            let mut dst = vec![0u8; utf8_capacity_for(chunk.len() + 1)];
+            let fed = s.push_lossy(chunk, &mut dst).expect("lossy never fails");
+            out.extend_from_slice(&dst[..fed.written]);
+            repl += fed.replacements;
+            p += chunk.len();
+        }
+        let mut dst = vec![0u8; utf8_capacity_for(1)];
+        let fed = s.finish_lossy(&mut dst).expect("lossy finish");
+        out.extend_from_slice(&dst[..fed.written]);
+        repl += fed.replacements;
+        assert_eq!(out, want, "seed {seed}");
+        assert_eq!(repl, want_repl, "seed {seed}");
+    }
+}

@@ -172,6 +172,56 @@ fn corrupted_utf16_streams_report_the_oneshot_error_at_every_split() {
 }
 
 #[test]
+fn trailing_high_surrogate_runs_split_everywhere() {
+    // Runs of 2..=4 trailing high surrogates exercise the `run`/`hold`
+    // arithmetic and the error-position computation of the trailing-run
+    // branch: every high in a run except the last is decided (unpaired)
+    // the moment the next high is seen, and the strict error must land
+    // on the run's *first* high — exactly where one-shot `convert`
+    // reports it — for every possible chunking.
+    let highs = [0xD800u16, 0xDBFF, 0xD9AB, 0xD800];
+    let mut corpora: Vec<Vec<u16>> = Vec::new();
+    for run_len in 2..=4usize {
+        let run = &highs[..run_len];
+        // At end of stream.
+        corpora.push([&[0x41, 0x42][..], run].concat());
+        // Mid-stream, then BMP data.
+        corpora.push([&[0x41][..], run, &[0x42, 0x43][..]].concat());
+        // Resolved by a low surrogate: the run's last high pairs with
+        // it, the others stay unpaired — the first high still errors.
+        corpora.push([&[0x41][..], run, &[0xDC00, 0x44][..]].concat());
+        // After a valid pair.
+        corpora.push([&[0xD83D, 0xDE42][..], run].concat());
+        // The run alone.
+        corpora.push(run.to_vec());
+        // A long ASCII prefix pushes the run into the SIMD register
+        // path of the underlying engine.
+        let mut long = vec![0x78u16; 20];
+        long.extend_from_slice(run);
+        corpora.push(long);
+    }
+    for units in &corpora {
+        // Every two-chunk split.
+        for split in 0..=units.len() {
+            let (a, b) = units.split_at(split);
+            check_utf16_split(units, &[a, b]);
+        }
+        if units.len() <= 12 {
+            // Every three-chunk split (exhaustive for the short inputs).
+            for i in 0..=units.len() {
+                for j in i..=units.len() {
+                    check_utf16_split(units, &[&units[..i], &units[i..j], &units[j..]]);
+                }
+            }
+        } else {
+            // Degenerate chunking for the long ones.
+            let chunks: Vec<&[u16]> = units.chunks(1).collect();
+            check_utf16_split(units, &chunks);
+        }
+    }
+}
+
+#[test]
 fn random_multi_chunk_splits_match_oneshot() {
     let corpus = Corpus::generate(Language::Hebrew, Collection::Lipsum);
     let data = corpus.utf8_prefix(4096);
