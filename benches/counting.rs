@@ -1,0 +1,107 @@
+//! `cargo bench --bench counting` — the counting subsystem sweep.
+//!
+//! Two questions, per the exact-size allocation pitch (ISSUE 4 /
+//! *Unicode at Gigabytes per Second*):
+//!
+//! 1. How fast are the counting kernels themselves? Every registry
+//!    kernel set (`scalar` reference, `simd128`, `simd256`, `best`) ×
+//!    every lipsum corpus, all four kernels, input MB/s — the `scalar`
+//!    row is the baseline the SIMD speedup is read against.
+//! 2. What does the `*_to_vec` convenience path cost under each
+//!    allocation strategy? `zeroed` (the seed's `vec![0; worst_case]`)
+//!    vs `uninit` (`convert_to_vec`) vs `exact`
+//!    (`convert_to_vec_exact`), allocation deliberately inside the
+//!    timed region (the harness module docs call this exception out).
+//!
+//! Budget per cell via `SIMDUTF_BENCH_BUDGET_MS` (default 200 ms).
+
+use simdutf_rs::corpus::{generate_collection, Collection};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::harness::{
+    bench_alloc_utf16_mbps, bench_alloc_utf8_mbps, bench_count_utf16_mbps,
+    bench_count_utf8_mbps, AllocStrategy,
+};
+
+fn main() {
+    let corpora = generate_collection(Collection::Lipsum);
+    let r = Registry::global();
+
+    let corpus_header = |width: usize| {
+        print!("  {:>w$}", "", w = width);
+        for corpus in &corpora {
+            print!("  {:>10}", corpus.name());
+        }
+        println!();
+    };
+
+    println!(
+        "Counting kernels (input MB/s), lipsum; best = {}",
+        simdutf_rs::simd::best_key()
+    );
+    // Each row carries its accessor so the label can never drift from
+    // the kernel actually measured.
+    type Pick8 = fn(&simdutf_rs::count::CountKernels) -> fn(&[u8]) -> usize;
+    type Pick16 = fn(&simdutf_rs::count::CountKernels) -> fn(&[u16]) -> usize;
+    let utf8_kernels: [(&str, Pick8); 2] = [
+        ("utf16_len_from_utf8", |k| k.utf16_len_from_utf8),
+        ("count_utf8_code_points", |k| k.count_utf8_code_points),
+    ];
+    let utf16_kernels: [(&str, Pick16); 2] = [
+        ("utf8_len_from_utf16", |k| k.utf8_len_from_utf16),
+        ("count_utf16_code_points", |k| k.count_utf16_code_points),
+    ];
+    for (name, pick) in utf8_kernels {
+        println!("{name}:");
+        for k in r.count_entries() {
+            print!("  {:>8}", k.key);
+            for corpus in &corpora {
+                let v = bench_count_utf8_mbps(pick(k), &corpus.utf8);
+                print!("  {:>10}", format!("{v:.0}"));
+            }
+            println!();
+        }
+        corpus_header(8);
+        println!();
+    }
+    for (name, pick) in utf16_kernels {
+        println!("{name}:");
+        for k in r.count_entries() {
+            print!("  {:>8}", k.key);
+            for corpus in &corpora {
+                let v = bench_count_utf16_mbps(pick(k), &corpus.utf16);
+                print!("  {:>10}", format!("{v:.0}"));
+            }
+            println!();
+        }
+        corpus_header(8);
+        println!();
+    }
+
+    // Alloc-strategy head-to-head on the best engine (the perf claim of
+    // this subsystem: exact/uninit must beat the seed's zeroed path at
+    // least on the ASCII-heavy and mixed corpora).
+    let best8 = r.get_utf8("best").expect("registry always has best");
+    let best16 = r.get_utf16("best").expect("registry always has best");
+    println!("to_vec allocation strategies, UTF-8→UTF-16, `best` engine (input MB/s)");
+    for strategy in AllocStrategy::ALL {
+        print!("  {:>8}", strategy.key());
+        for corpus in &corpora {
+            let v = bench_alloc_utf8_mbps(best8, corpus, strategy);
+            print!("  {:>10}", format!("{v:.0}"));
+        }
+        println!();
+    }
+    corpus_header(8);
+    println!();
+
+    println!("to_vec allocation strategies, UTF-16→UTF-8, `best` engine (input MB/s)");
+    for strategy in AllocStrategy::ALL {
+        print!("  {:>8}", strategy.key());
+        for corpus in &corpora {
+            let v = bench_alloc_utf16_mbps(best16, corpus, strategy);
+            print!("  {:>10}", format!("{v:.0}"));
+        }
+        println!();
+    }
+    corpus_header(8);
+}

@@ -20,6 +20,38 @@ fn main() {
     assert_eq!(back, text.as_bytes());
     println!("UTF-16 → UTF-8: {} code units → {} bytes", utf16.len(), back.len());
 
+    // --- exact-size allocation via the SIMD counting kernels ---
+    // `convert_to_vec` allocates the worst case (uninitialized — no
+    // memset); `convert_to_vec_exact` SIMD-counts first and allocates
+    // precisely. Same output, and the length needed no truncation.
+    let exact = engine.convert_to_vec_exact(text.as_bytes()).expect("valid UTF-8");
+    assert_eq!(exact, utf16);
+    assert_eq!(exact.len(), utf16_len_from_utf8(text.as_bytes()));
+    assert_eq!(count_utf8_code_points(text.as_bytes()), text.chars().count());
+    let back_exact =
+        OurUtf16ToUtf8::validating().convert_to_vec_exact(&exact).expect("valid UTF-16");
+    assert_eq!(back_exact.len(), text.len()); // 3n+16 bound avoided entirely
+    println!(
+        "exact-size allocation: {} words counted (worst case would be {}), \
+         {} bytes counted (worst case {})",
+        exact.len(),
+        utf16_capacity_for(text.len()),
+        back_exact.len(),
+        utf8_capacity_for(exact.len()),
+    );
+
+    // The counting kernels are registry-enumerable per backend, like
+    // the engines (scalar reference, simd128, simd256, best).
+    for kernels in Registry::global().count_entries() {
+        assert_eq!(
+            (kernels.utf16_len_from_utf8)(text.as_bytes()),
+            utf16.len(),
+            "{}",
+            kernels.key
+        );
+    }
+    println!("counting kernels agree across scalar/simd128/simd256/best");
+
     // --- validation without transcoding ---
     assert!(validate_utf8(text.as_bytes()));
     assert!(!validate_utf8(&[0xC0, 0x80])); // overlong NUL — rejected

@@ -312,6 +312,70 @@ def transcode_lossy(data):
     return {"utf16": out, "replacements": replacements, "first_error": first_error}
 
 
+# ---------------------------------------------------------------------------
+# Counting mirror (Rust `count` module).
+#
+# The Rust side sizes exact allocations with SIMD counting kernels:
+# UTF-16 words from UTF-8 = #non-continuation bytes + #4-byte leads,
+# code points = #non-continuation bytes, and UTF-8 bytes from UTF-16 via
+# five range masks with a pair shift (`((high << 1) | carry) & low`).
+# The numpy formulations below are the same mask algebra, whole-array
+# instead of per-register, so Python and Rust compute identical numbers
+# for identical (arbitrary, not necessarily valid) input.
+
+
+def utf16_len_from_utf8(data):
+    """UTF-16 words needed for ``data`` (UTF-8 bytes, possibly invalid).
+
+    Mirror of Rust ``count::utf16_len_from_utf8``: one word per
+    non-continuation byte, one extra per ``>= 0xF0`` lead. For valid
+    input equals ``len(bytes(data).decode().encode('utf-16-le')) // 2``.
+    """
+    a = np.frombuffer(bytes(data), dtype=np.uint8)
+    if a.size == 0:
+        return 0
+    non_cont = (a & 0xC0) != 0x80
+    return int(non_cont.sum()) + int((a >= 0xF0).sum())
+
+
+def count_utf8_code_points(data):
+    """Code points in ``data`` (= non-continuation bytes; for valid
+    input equals ``len(bytes(data).decode())``)."""
+    a = np.frombuffer(bytes(data), dtype=np.uint8)
+    if a.size == 0:
+        return 0
+    return int(((a & 0xC0) != 0x80).sum())
+
+
+def utf8_len_from_utf16(words):
+    """UTF-8 bytes needed for ``words`` (UTF-16 code units).
+
+    Mirror of Rust ``count::utf8_len_from_utf16`` and its SIMD mask
+    algebra: every word counts ``1 + (w >= 0x80) + (w >= 0x800)`` — 3
+    for any surrogate, the width of both U+FFFD and raw WTF-8 — minus 2
+    for each high surrogate immediately followed by a low one (the pair
+    is one 4-byte character, not 3+3). Exact for valid input; an upper
+    bound under the unpaired-surrogate-counts-3 convention otherwise.
+    """
+    w = np.asarray(list(words), dtype=np.uint32)
+    if w.size == 0:
+        return 0
+    n = w.size + int((w >= 0x80).sum()) + int((w >= 0x800).sum())
+    high = (w >= 0xD800) & (w < 0xDC00)
+    low = (w >= 0xDC00) & (w < 0xE000)
+    pairs = int((high[:-1] & low[1:]).sum())
+    return n - 2 * pairs
+
+
+def count_utf16_code_points(words):
+    """Code points in ``words`` (words minus high surrogates — a pair's
+    high word starts the code point its low word completes)."""
+    w = np.asarray(list(words), dtype=np.uint32)
+    if w.size == 0:
+        return 0
+    return w.size - int(((w >= 0xD800) & (w < 0xDC00)).sum())
+
+
 def error_records(blocks, lengths):
     """Structured failure records for a validated batch.
 

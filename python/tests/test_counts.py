@@ -1,0 +1,120 @@
+"""Counting-kernel mirror: differential tests vs CPython.
+
+The Rust `count` module sizes exact allocations with SIMD counting
+kernels; `compile.kernels.validate` mirrors them as whole-array numpy
+mask algebra. CPython is the oracle for valid input
+(``len(b.decode())``, ``len(s.encode('utf-16-le')) // 2``,
+``decode('utf-16-le', errors='replace')`` re-encoded for the
+unpaired-surrogate convention); a scalar port of the Rust reference
+covers arbitrary invalid input.
+
+Standalone from test_kernel.py: needs neither `hypothesis` nor the jax
+validation kernel.
+"""
+
+import random
+import struct
+
+from compile.kernels.validate import (
+    count_utf16_code_points,
+    count_utf8_code_points,
+    utf16_len_from_utf8,
+    utf8_len_from_utf16,
+)
+
+SAMPLES = [
+    "",
+    "a",
+    "plain ascii, long enough to cross a sixty-four byte block boundary!!",
+    "héllo wörld",
+    "пример текста на русском языке",
+    "漢字テスト、これは長めの文字列です。",
+    "🙂🚀🌍💡🔥🎉",
+    "mixed é漢🙂 text with a bit of everything: ascii, éé, 漢字, 🚀🚀 end",
+]
+
+
+def scalar_utf8_len_from_utf16(words):
+    """Port of the Rust scalar reference (the seed predictor)."""
+    n = 0
+    i = 0
+    while i < len(words):
+        w = words[i]
+        if w < 0x80:
+            n += 1
+        elif w < 0x800:
+            n += 2
+        elif 0xD800 <= w < 0xDC00:
+            if i + 1 < len(words) and 0xDC00 <= words[i + 1] < 0xE000:
+                i += 1
+                n += 4
+            else:
+                n += 3
+        else:
+            n += 3
+        i += 1
+    return n
+
+
+def test_utf8_counts_match_cpython_on_valid_text():
+    for text in SAMPLES:
+        for repeats in (1, 7):
+            s = text * repeats
+            b = s.encode("utf-8")
+            assert utf16_len_from_utf8(b) == len(s.encode("utf-16-le")) // 2, s
+            assert count_utf8_code_points(b) == len(b.decode()), s
+
+
+def test_utf16_counts_match_cpython_on_valid_text():
+    for text in SAMPLES:
+        for repeats in (1, 7):
+            s = text * repeats
+            words = list(struct.unpack("<%dH" % (len(s.encode("utf-16-le")) // 2),
+                                       s.encode("utf-16-le")))
+            assert utf8_len_from_utf16(words) == len(s.encode("utf-8")), s
+            assert count_utf16_code_points(words) == len(s), s
+
+
+def test_utf8_counts_are_total_on_garbage():
+    rng = random.Random(0xC0017)
+    for _ in range(400):
+        data = bytes(rng.randrange(256) for _ in range(rng.randrange(0, 300)))
+        # Reference: the per-byte formula, byte at a time.
+        words = sum(((b & 0xC0) != 0x80) + (b >= 0xF0) for b in data)
+        cps = sum((b & 0xC0) != 0x80 for b in data)
+        assert utf16_len_from_utf8(data) == words
+        assert count_utf8_code_points(data) == cps
+
+
+def test_utf16_len_matches_replace_oracle_on_unpaired_surrogates():
+    # The 3-bytes-per-unpaired-surrogate convention is exactly the width
+    # of U+FFFD, so CPython's errors='replace' decode re-encoded as
+    # UTF-8 is an independent oracle for arbitrary word soup.
+    alphabet = [0x41, 0x7F, 0x80, 0x7FF, 0x800, 0xD7FF, 0xD800, 0xDBFF,
+                0xDC00, 0xDFFF, 0xE000, 0xFFFD, 0xFFFF]
+    rng = random.Random(0x5EED)
+    for _ in range(400):
+        n = rng.randrange(0, 120)
+        words = [rng.choice(alphabet) for _ in range(n)]
+        raw = struct.pack("<%dH" % n, *words)
+        oracle = len(raw.decode("utf-16-le", errors="replace").encode("utf-8"))
+        assert utf8_len_from_utf16(words) == oracle, words
+        assert utf8_len_from_utf16(words) == scalar_utf8_len_from_utf16(words), words
+
+
+def test_pair_detection_edges():
+    cases = [
+        ([0xDC00], 3),
+        ([0xD800], 3),
+        ([0xD800, 0x41], 4),
+        ([0xD83D, 0xDE42], 4),
+        ([0xDC00, 0xD800], 6),
+        ([0xD800, 0xD800, 0xDC00], 7),
+        ([0xD800, 0xDC00, 0xDC00], 7),
+    ]
+    for words, expected in cases:
+        assert utf8_len_from_utf16(words) == expected, words
+    # code points: high surrogates merge into their pair, lows stand.
+    assert count_utf16_code_points([0x41, 0xD83D, 0xDE42]) == 2
+    assert count_utf16_code_points([0xD800, 0xD800]) == 0
+    assert count_utf16_code_points([]) == 0

@@ -131,6 +131,10 @@ impl Utf8ToUtf16 for IcuLikeTranscoder {
         }
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf8!();
 }
 
 impl Utf16ToUtf8 for IcuLikeTranscoder {
@@ -179,6 +183,10 @@ impl Utf16ToUtf8 for IcuLikeTranscoder {
         }
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf16!();
 }
 
 #[cfg(test)]

@@ -161,6 +161,10 @@ impl Utf8ToUtf16 for InoueTranscoder {
         }
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf8!();
 }
 
 #[cfg(test)]

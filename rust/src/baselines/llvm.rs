@@ -160,6 +160,10 @@ impl Utf8ToUtf16 for LlvmTranscoder {
         }
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf8!();
 }
 
 impl Utf16ToUtf8 for LlvmTranscoder {
@@ -218,6 +222,10 @@ impl Utf16ToUtf8 for LlvmTranscoder {
         }
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf16!();
 }
 
 #[cfg(test)]

@@ -86,6 +86,10 @@ impl Utf8ToUtf16 for SteagallTranscoder {
         }
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf8!();
 }
 
 #[cfg(test)]

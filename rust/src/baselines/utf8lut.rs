@@ -206,12 +206,17 @@ impl Utf8ToUtf16 for Utf8LutTranscoder {
                 return Err(classify_utf8_error(src, from));
             }
         }
-        if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
+        // Scalar predictor: the tail is shorter than one window stride.
+        if q + crate::count::utf16_len_from_utf8_scalar(&src[p..]) > dst.len() {
             return Err(TranscodeError::output_buffer(p));
         }
         q += crate::scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf8!();
 }
 
 impl Utf16ToUtf8 for Utf8LutTranscoder {
@@ -272,6 +277,10 @@ impl Utf16ToUtf8 for Utf8LutTranscoder {
         }
         Ok(q)
     }
+
+    // `convert` is write-only over `dst` (audited): eligible for the
+    // uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf16!();
 }
 
 #[cfg(test)]

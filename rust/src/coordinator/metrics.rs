@@ -12,7 +12,9 @@ pub struct ServiceStats {
     pub invalid: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
-    /// Characters transcoded (the paper's throughput unit).
+    /// Code points transcoded (the paper's format-oblivious throughput
+    /// unit), counted by the shared [`crate::count`] kernels — a
+    /// surrogate pair is one, in both directions.
     pub chars: AtomicU64,
     /// U+FFFD replacements emitted by lossy requests.
     pub replacements: AtomicU64,
@@ -77,6 +79,8 @@ pub struct StatsSnapshot {
     pub invalid: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    /// Code points transcoded (surrogate pairs count one; see
+    /// [`ServiceStats::chars`]).
     pub chars: u64,
     /// U+FFFD replacements emitted by lossy requests (0 when the
     /// workload is strict or clean).

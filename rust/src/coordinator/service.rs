@@ -3,9 +3,7 @@
 use super::metrics::ServiceStats;
 use crate::engine::Registry;
 use crate::runtime::XlaEngine;
-use crate::transcode::{
-    utf16_capacity_for, utf8_capacity_for, ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16,
-};
+use crate::transcode::{ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16};
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
@@ -395,9 +393,12 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
         let start = Instant::now();
         let input_bytes = request.input_bytes();
         let response = run_one(&engine, &request);
+        // Code points via the shared SIMD counting kernels (this used
+        // to be a private scalar word loop; `StatsSnapshot::chars` is
+        // the code-point count in both directions now).
         let (out_bytes, chars) = match &response.result {
-            Ok(Output::Utf16(w)) => (w.len() * 2, count_chars_utf16(w)),
-            Ok(Output::Utf8(b)) => (b.len(), crate::transcode::utf16_len_from_utf8(b)),
+            Ok(Output::Utf16(w)) => (w.len() * 2, crate::count::count_utf16_code_points(w)),
+            Ok(Output::Utf8(b)) => (b.len(), crate::count::count_utf8_code_points(b)),
             Err(_) => (0, 0),
         };
         if response.ok() {
@@ -410,41 +411,43 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
     }
 }
 
-fn count_chars_utf16(words: &[u16]) -> usize {
-    words.len() - words.iter().filter(|&&w| (0xD800..0xDC00).contains(&w)).count()
-}
-
+/// One request through the worker's engine. Response buffers are sized
+/// **exactly** for strict requests on a validating engine (one SIMD
+/// counting pass, no worst-case allocation, no memset — see
+/// `Utf8ToUtf16::convert_to_vec_exact`); lossy requests and
+/// non-validating engines keep the worst-case capacity but drop the
+/// zero-initialization (`convert_to_vec`/`convert_lossy_to_vec` are
+/// uninit-backed). Note the per-request latency the stats record
+/// *includes* this allocation — which is exactly why it is no longer a
+/// zeroed worst-case buffer.
 fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
     let mut replacements = 0usize;
     let result = match (&request.payload, engine) {
         (Payload::Utf8(src), WorkerEngine::Native { to16, .. }) => {
-            let mut dst = vec![0u16; utf16_capacity_for(src.len())];
             if request.lossy {
-                to16.convert_lossy(src, &mut dst).map(|r| {
+                to16.convert_lossy_to_vec(src).map(|(words, r)| {
                     replacements = r.replacements;
-                    dst.truncate(r.written);
-                    Output::Utf16(dst)
+                    Output::Utf16(words)
                 })
+            } else if to16.validating() {
+                to16.convert_to_vec_exact(src).map(Output::Utf16)
             } else {
-                to16.convert(src, &mut dst).map(|n| {
-                    dst.truncate(n);
-                    Output::Utf16(dst)
-                })
+                // The exact predictor does not bound a non-validating
+                // engine's garbage output; keep the worst-case capacity
+                // so dirty payloads still get the best-effort output.
+                to16.convert_to_vec(src).map(Output::Utf16)
             }
         }
         (Payload::Utf16(src), WorkerEngine::Native { to8, .. }) => {
-            let mut dst = vec![0u8; utf8_capacity_for(src.len())];
             if request.lossy {
-                to8.convert_lossy(src, &mut dst).map(|r| {
+                to8.convert_lossy_to_vec(src).map(|(bytes, r)| {
                     replacements = r.replacements;
-                    dst.truncate(r.written);
-                    Output::Utf8(dst)
+                    Output::Utf8(bytes)
                 })
             } else {
-                to8.convert(src, &mut dst).map(|n| {
-                    dst.truncate(n);
-                    Output::Utf8(dst)
-                })
+                // The WTF-8 convention makes the UTF-16 predictor an
+                // upper bound for every engine: exact is always safe.
+                to8.convert_to_vec_exact(src).map(Output::Utf8)
             }
         }
         (Payload::Utf8(src), WorkerEngine::Xla(engine)) => {
@@ -459,11 +462,9 @@ fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
                     let to16 = Registry::global()
                         .get_utf8_arc("best")
                         .expect("registry always has best");
-                    let mut dst = vec![0u16; utf16_capacity_for(src.len())];
-                    to16.convert_lossy(src, &mut dst).map(|r| {
+                    to16.convert_lossy_to_vec(src).map(|(words, r)| {
                         replacements = r.replacements;
-                        dst.truncate(r.written);
-                        Output::Utf16(dst)
+                        Output::Utf16(words)
                     })
                 }
                 Ok(None) => Err(crate::transcode::utf8_error(src)
@@ -481,11 +482,9 @@ fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
                     let to8 = Registry::global()
                         .get_utf16_arc("best")
                         .expect("registry always has best");
-                    let mut dst = vec![0u8; utf8_capacity_for(src.len())];
-                    to8.convert_lossy(src, &mut dst).map(|r| {
+                    to8.convert_lossy_to_vec(src).map(|(bytes, r)| {
                         replacements = r.replacements;
-                        dst.truncate(r.written);
-                        Output::Utf8(dst)
+                        Output::Utf8(bytes)
                     })
                 }
                 Ok(None) => Err(crate::transcode::utf16_error(src)
@@ -520,7 +519,9 @@ mod tests {
         assert_eq!(resp2.utf8().unwrap(), text.as_bytes());
         let snap = svc.stats();
         assert_eq!(snap.completed, 2);
-        assert!(snap.chars > 0);
+        // `chars` is the code-point count (shared counting kernels),
+        // identical in both directions even with supplemental-plane 🙂.
+        assert_eq!(snap.chars, 2 * text.chars().count() as u64);
         svc.shutdown();
     }
 

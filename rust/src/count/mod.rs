@@ -1,0 +1,485 @@
+//! SIMD counting subsystem: exact-size output predictors and code-point
+//! counters, generic over the [`VectorBackend`] like the converters.
+//!
+//! The paper's follow-up (*Unicode at Gigabytes per Second*,
+//! arXiv:2111.08692) observes that UTF-8 length and code-point counting
+//! are themselves SIMD problems: a UTF-8 continuation byte is any byte
+//! `b` with `(b & 0xC0) == 0x80`, so code points are a movemask +
+//! popcount away, and the UTF-16 word a byte produces is fully
+//! determined by its top nibble. This module provides those kernels so
+//! the `*_to_vec_exact` allocation path (see
+//! [`crate::transcode::Utf8ToUtf16::convert_to_vec_exact`]) can size
+//! its output precisely at near-zero cost instead of allocating — and
+//! zero-initializing — the worst case.
+//!
+//! ### Kernels
+//!
+//! | function | counts | unit |
+//! |---|---|---|
+//! | [`utf16_len_from_utf8`] | non-continuation bytes + 4-byte leads | UTF-16 words |
+//! | [`utf8_len_from_utf16`] | 1/2/3 bytes per word, 4 per surrogate pair | UTF-8 bytes |
+//! | [`count_utf8_code_points`] | non-continuation bytes | code points |
+//! | [`count_utf16_code_points`] | words minus high surrogates | code points |
+//!
+//! Each exists in three flavors: a scalar reference (`*_scalar`), a
+//! backend-generic SIMD kernel (`*_with::<B>`), and a runtime-dispatched
+//! entry point (the bare name) that resolves the widest usable backend
+//! once — the same policy as the engine registry's `best` alias. The
+//! registry surfaces all of them per key via [`kernel_entries`] /
+//! `Registry::count_entries`.
+//!
+//! ### Semantics on invalid input
+//!
+//! The predictors are *total*: they accept arbitrary bytes/words and
+//! stay upper bounds for every engine in the crate. The conventions
+//! match the original scalar predictors exactly (asserted by the
+//! differential suite in `rust/tests/counting.rs`):
+//!
+//! * UTF-8: continuation bytes count 0 words, every other byte 1, bytes
+//!   `>= 0xF0` one extra (the low half of a surrogate pair).
+//! * UTF-16: every **unpaired** surrogate counts 3 bytes — the width of
+//!   both U+FFFD (lossy replacement) and the raw WTF-8 encoding the
+//!   non-validating engine emits; a proper pair counts 4.
+//!
+//! ### Algorithm notes
+//!
+//! The UTF-8 kernels reuse the converters' 64-byte all-ASCII block fast
+//! path ([`is_ascii_block`]: one OR-reduction instead of three
+//! classification movemasks), then classify a backend register at a
+//! time: `continuation = msb(b) & !(b >= 0xC0)` with the `>=`
+//! comparisons done as `saturating_sub` + movemask
+//! ([`SimdBytes::ge_mask`]).
+//!
+//! The UTF-16 kernel computes five `lt_mask` movemasks per register
+//! (`0x80`, `0x800`, and the three surrogate-range bounds) and counts
+//! `lanes + popcount(>= 0x80) + popcount(>= 0x800) - 2 * popcount(pairs)`
+//! where `pairs = ((high << 1) | carry) & low` — a high-surrogate lane
+//! immediately followed by a low-surrogate lane, with a one-bit carry
+//! across register boundaries (and a `-2` adjustment when the carry
+//! meets a low surrogate at the head of the scalar tail). This is exact
+//! for arbitrary input because a high surrogate can never itself be the
+//! second element of a pair, so "high followed by low" is precisely the
+//! paired case of the scalar reference.
+
+use crate::simd::{is_ascii_block, SimdBytes, SimdWords, VectorBackend, V128, V256};
+use std::sync::LazyLock;
+
+// ---------------------------------------------------------------------------
+// Scalar references.
+
+/// Scalar reference: UTF-16 words needed for `src` (see module docs for
+/// the invalid-input convention). One pass, byte at a time.
+pub fn utf16_len_from_utf8_scalar(src: &[u8]) -> usize {
+    // words = #non-continuation bytes + #4-byte leads
+    let mut n = 0usize;
+    for &b in src {
+        n += ((b & 0xC0) != 0x80) as usize;
+        n += (b >= 0xF0) as usize;
+    }
+    n
+}
+
+/// Scalar reference: code points in `src` (= non-continuation bytes;
+/// exact for valid UTF-8, total on garbage).
+pub fn count_utf8_code_points_scalar(src: &[u8]) -> usize {
+    let mut n = 0usize;
+    for &b in src {
+        n += ((b & 0xC0) != 0x80) as usize;
+    }
+    n
+}
+
+/// Scalar reference: UTF-8 bytes needed for `src`.
+///
+/// Exact for valid input (a surrogate *pair* contributes 4 bytes);
+/// every **unpaired** surrogate counts 3 (see module docs).
+pub fn utf8_len_from_utf16_scalar(src: &[u16]) -> usize {
+    let mut n = 0usize;
+    let mut i = 0usize;
+    while i < src.len() {
+        let w = src[i];
+        n += if w < 0x80 {
+            1
+        } else if w < 0x800 {
+            2
+        } else if (0xD800..0xDC00).contains(&w) {
+            if i + 1 < src.len() && (0xDC00..0xE000).contains(&src[i + 1]) {
+                // Properly paired: the pair is one 4-byte character.
+                i += 1;
+                4
+            } else {
+                3 // unpaired high surrogate
+            }
+        } else {
+            // BMP character, or an unpaired low surrogate (3 either way).
+            3
+        };
+        i += 1;
+    }
+    n
+}
+
+/// Scalar reference: code points in `src` (words minus high
+/// surrogates — each pair's high word starts a code point its low word
+/// completes; exact for valid UTF-16, total on garbage where it counts
+/// an unpaired low surrogate as one would-be replacement).
+pub fn count_utf16_code_points_scalar(src: &[u16]) -> usize {
+    src.len() - src.iter().filter(|&&w| (0xD800..0xDC00).contains(&w)).count()
+}
+
+// ---------------------------------------------------------------------------
+// Backend-generic SIMD kernels.
+
+/// SIMD [`utf16_len_from_utf8_scalar`] on backend `B`: 64-byte ASCII
+/// blocks short-circuit, otherwise one register = three movemasks and
+/// two popcounts. Identical result on arbitrary input.
+pub fn utf16_len_from_utf8_with<B: VectorBackend>(src: &[u8]) -> usize {
+    let w = B::WIDTH;
+    let mut n = 0usize;
+    let mut p = 0usize;
+    while p + 64 <= src.len() {
+        let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
+        if is_ascii_block(block) {
+            // 64 ASCII bytes are 64 words: one OR-reduce, no classify.
+            n += 64;
+            p += 64;
+            continue;
+        }
+        let mut off = 0usize;
+        while off + w <= 64 {
+            let v = <B::Bytes as SimdBytes>::load(&src[p + off..]);
+            let non_ascii = v.movemask();
+            let ge_c0 = v.ge_mask(0xC0);
+            let ge_f0 = v.ge_mask(0xF0);
+            // continuation <=> high bit set and below 0xC0
+            let cont = non_ascii & !ge_c0;
+            n += w - cont.count_ones() as usize + ge_f0.count_ones() as usize;
+            off += w;
+        }
+        p += 64;
+    }
+    n + utf16_len_from_utf8_scalar(&src[p..])
+}
+
+/// SIMD [`count_utf8_code_points_scalar`] on backend `B`.
+pub fn count_utf8_code_points_with<B: VectorBackend>(src: &[u8]) -> usize {
+    let w = B::WIDTH;
+    let mut n = 0usize;
+    let mut p = 0usize;
+    while p + 64 <= src.len() {
+        let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
+        if is_ascii_block(block) {
+            n += 64;
+            p += 64;
+            continue;
+        }
+        let mut off = 0usize;
+        while off + w <= 64 {
+            let v = <B::Bytes as SimdBytes>::load(&src[p + off..]);
+            let cont = v.movemask() & !v.ge_mask(0xC0);
+            n += w - cont.count_ones() as usize;
+            off += w;
+        }
+        p += 64;
+    }
+    n + count_utf8_code_points_scalar(&src[p..])
+}
+
+/// SIMD [`utf8_len_from_utf16_scalar`] on backend `B`: five `lt_mask`
+/// movemasks per register, pair detection by mask shift with a one-bit
+/// carry across registers (see module docs for why this is exact).
+pub fn utf8_len_from_utf16_with<B: VectorBackend>(src: &[u16]) -> usize {
+    let lanes = B::WIDTH / 2;
+    let all: u32 = if lanes == 32 { u32::MAX } else { (1u32 << lanes) - 1 };
+    let mut n = 0usize;
+    let mut p = 0usize;
+    // Set iff the last lane of the previous register held a high
+    // surrogate (a pair may straddle the register boundary).
+    let mut carry: u32 = 0;
+    while p + lanes <= src.len() {
+        let v = <B::Words as SimdWords>::load(&src[p..]);
+        let lt_80 = v.lt_mask(<B::Words as SimdWords>::splat(0x80)).movemask();
+        let lt_800 = v.lt_mask(<B::Words as SimdWords>::splat(0x800)).movemask();
+        let lt_d8 = v.lt_mask(<B::Words as SimdWords>::splat(0xD800)).movemask();
+        let lt_dc = v.lt_mask(<B::Words as SimdWords>::splat(0xDC00)).movemask();
+        let lt_e0 = v.lt_mask(<B::Words as SimdWords>::splat(0xE000)).movemask();
+        let ge_80 = all & !lt_80;
+        let ge_800 = all & !lt_800;
+        let high = lt_dc & !lt_d8;
+        let low = lt_e0 & !lt_dc;
+        // 1 + (>= 0x80) + (>= 0x800) counts every surrogate word as 3;
+        // each high-immediately-before-low pair is 4, not 6.
+        let pairs = ((high << 1) | carry) & low;
+        n += lanes + ge_80.count_ones() as usize + ge_800.count_ones() as usize
+            - 2 * pairs.count_ones() as usize;
+        carry = (high >> (lanes - 1)) & 1;
+        p += lanes;
+    }
+    n += utf8_len_from_utf16_scalar(&src[p..]);
+    if carry == 1 && p < src.len() && (0xDC00..0xE000).contains(&src[p]) {
+        // The tail counted this low surrogate as unpaired (3) and the
+        // SIMD part counted its high as unpaired (3); the pair is 4.
+        n -= 2;
+    }
+    n
+}
+
+/// SIMD [`count_utf16_code_points_scalar`] on backend `B` (no carry
+/// needed: the count only subtracts high-surrogate lanes).
+pub fn count_utf16_code_points_with<B: VectorBackend>(src: &[u16]) -> usize {
+    let lanes = B::WIDTH / 2;
+    let mut n = 0usize;
+    let mut p = 0usize;
+    while p + lanes <= src.len() {
+        let v = <B::Words as SimdWords>::load(&src[p..]);
+        let lt_d8 = v.lt_mask(<B::Words as SimdWords>::splat(0xD800)).movemask();
+        let lt_dc = v.lt_mask(<B::Words as SimdWords>::splat(0xDC00)).movemask();
+        let high = lt_dc & !lt_d8;
+        n += lanes - high.count_ones() as usize;
+        p += lanes;
+    }
+    n + count_utf16_code_points_scalar(&src[p..])
+}
+
+// ---------------------------------------------------------------------------
+// UTF-32 predictors (fixed-width input: the branch-free scalar loops
+// autovectorize; no table machinery is needed).
+
+/// UTF-8 bytes needed for UTF-32 input (exact for valid input; values
+/// above U+10FFFF or in the surrogate gap are counted by magnitude,
+/// keeping the estimate an upper bound).
+pub fn utf8_len_from_utf32(src: &[u32]) -> usize {
+    let mut n = 0usize;
+    for &c in src {
+        n += 1
+            + (c >= 0x80) as usize
+            + (c >= 0x800) as usize
+            + (c >= 0x10000) as usize;
+    }
+    n
+}
+
+/// UTF-16 words needed for UTF-32 input (2 per supplemental-plane
+/// value; exact for valid input).
+pub fn utf16_len_from_utf32(src: &[u32]) -> usize {
+    let mut n = src.len();
+    for &c in src {
+        n += (c >= 0x10000) as usize;
+    }
+    n
+}
+
+// ---------------------------------------------------------------------------
+// Runtime dispatch + registry surface.
+
+/// One named set of counting kernels (the counting analogue of a
+/// registry engine entry). `fn` pointers so the set is enumerable and
+/// benchable without generics.
+#[derive(Clone, Copy)]
+pub struct CountKernels {
+    /// `"scalar"`, `"simd128"`, `"simd256"` or `"best"`.
+    pub key: &'static str,
+    pub utf16_len_from_utf8: fn(&[u8]) -> usize,
+    pub utf8_len_from_utf16: fn(&[u16]) -> usize,
+    pub count_utf8_code_points: fn(&[u8]) -> usize,
+    pub count_utf16_code_points: fn(&[u16]) -> usize,
+}
+
+impl std::fmt::Debug for CountKernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CountKernels").field("key", &self.key).finish()
+    }
+}
+
+/// The scalar reference set.
+pub static SCALAR_KERNELS: CountKernels = CountKernels {
+    key: "scalar",
+    utf16_len_from_utf8: utf16_len_from_utf8_scalar,
+    utf8_len_from_utf16: utf8_len_from_utf16_scalar,
+    count_utf8_code_points: count_utf8_code_points_scalar,
+    count_utf16_code_points: count_utf16_code_points_scalar,
+};
+
+/// The 128-bit kernel set.
+pub static SIMD128_KERNELS: CountKernels = CountKernels {
+    key: "simd128",
+    utf16_len_from_utf8: utf16_len_from_utf8_with::<V128>,
+    utf8_len_from_utf16: utf8_len_from_utf16_with::<V128>,
+    count_utf8_code_points: count_utf8_code_points_with::<V128>,
+    count_utf16_code_points: count_utf16_code_points_with::<V128>,
+};
+
+/// The 256-bit kernel set.
+pub static SIMD256_KERNELS: CountKernels = CountKernels {
+    key: "simd256",
+    utf16_len_from_utf8: utf16_len_from_utf8_with::<V256>,
+    utf8_len_from_utf16: utf8_len_from_utf16_with::<V256>,
+    count_utf8_code_points: count_utf8_code_points_with::<V256>,
+    count_utf16_code_points: count_utf16_code_points_with::<V256>,
+};
+
+/// The `best` set: the widest backend worth running here, resolved once
+/// with the exact policy of the engine registry's `best` alias
+/// ([`crate::simd::best_key`] — AVX2 compiled in *and* detected).
+static BEST: LazyLock<CountKernels> = LazyLock::new(|| {
+    let resolved =
+        if crate::simd::best_key() == V256::KEY { SIMD256_KERNELS } else { SIMD128_KERNELS };
+    CountKernels { key: "best", ..resolved }
+});
+
+/// Every kernel set, in registry order (`scalar`, `simd128`, `simd256`,
+/// `best`). Benches, tests and `Registry::count_entries` enumerate this.
+pub fn kernel_entries() -> [&'static CountKernels; 4] {
+    [&SCALAR_KERNELS, &SIMD128_KERNELS, &SIMD256_KERNELS, &*BEST]
+}
+
+/// UTF-16 words needed for `src`, on the widest usable backend.
+#[inline]
+pub fn utf16_len_from_utf8(src: &[u8]) -> usize {
+    (BEST.utf16_len_from_utf8)(src)
+}
+
+/// UTF-8 bytes needed for `src`, on the widest usable backend.
+#[inline]
+pub fn utf8_len_from_utf16(src: &[u16]) -> usize {
+    (BEST.utf8_len_from_utf16)(src)
+}
+
+/// Code points in (valid) UTF-8, on the widest usable backend.
+#[inline]
+pub fn count_utf8_code_points(src: &[u8]) -> usize {
+    (BEST.count_utf8_code_points)(src)
+}
+
+/// Code points in (valid) UTF-16, on the widest usable backend.
+#[inline]
+pub fn count_utf16_code_points(src: &[u16]) -> usize {
+    (BEST.count_utf16_code_points)(src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLES: &[&str] = &[
+        "",
+        "a",
+        "plain ascii only, long enough to cross one 64-byte block boundary!!",
+        "héllo wörld",
+        "пример текста на русском языке, длиннее шестидесяти четырёх байт",
+        "漢字テスト、これは六十四バイトを超える長さの文字列です。続く。",
+        "🙂🚀🌍💡🔥🎉🙂🚀🌍💡🔥🎉🙂🚀🌍💡🔥🎉",
+        "mixed é漢🙂 text with a bit of everything: ascii, éé, 漢字, 🚀🚀 end",
+    ];
+
+    #[test]
+    fn utf8_kernels_match_std_on_valid_text() {
+        for text in SAMPLES {
+            let repeated = text.repeat(7);
+            let b = repeated.as_bytes();
+            let words = repeated.encode_utf16().count();
+            let cps = repeated.chars().count();
+            for k in kernel_entries() {
+                assert_eq!((k.utf16_len_from_utf8)(b), words, "{} {text}", k.key);
+                assert_eq!((k.count_utf8_code_points)(b), cps, "{} {text}", k.key);
+            }
+        }
+    }
+
+    #[test]
+    fn utf16_kernels_match_std_on_valid_text() {
+        for text in SAMPLES {
+            let repeated = text.repeat(7);
+            let units: Vec<u16> = repeated.encode_utf16().collect();
+            for k in kernel_entries() {
+                assert_eq!((k.utf8_len_from_utf16)(&units), repeated.len(), "{}", k.key);
+                assert_eq!(
+                    (k.count_utf16_code_points)(&units),
+                    repeated.chars().count(),
+                    "{}",
+                    k.key
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_on_garbage_bytes() {
+        let mut state = 0x1234_5678_9ABC_DEF0u64;
+        for len in [0usize, 1, 15, 16, 63, 64, 65, 127, 128, 200, 513] {
+            let mut soup = vec![0u8; len];
+            for b in soup.iter_mut() {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *b = (state >> 33) as u8;
+            }
+            let words = utf16_len_from_utf8_scalar(&soup);
+            let cps = count_utf8_code_points_scalar(&soup);
+            for k in kernel_entries() {
+                assert_eq!((k.utf16_len_from_utf8)(&soup), words, "{} len={len}", k.key);
+                assert_eq!((k.count_utf8_code_points)(&soup), cps, "{} len={len}", k.key);
+            }
+        }
+    }
+
+    #[test]
+    fn unpaired_surrogates_follow_the_three_byte_convention() {
+        let cases: &[(&[u16], usize)] = &[
+            (&[0xDC00], 3),                  // lone low
+            (&[0xD800], 3),                  // lone high at end
+            (&[0xD800, 0x41], 4),            // high + non-low
+            (&[0xD83D, 0xDE42], 4),          // proper pair
+            (&[0xDC00, 0xD800], 6),          // reversed: two unpaired
+            (&[0xD800, 0xD800, 0xDC00], 7),  // high then proper pair
+            (&[0xD800, 0xDC00, 0xDC00], 7),  // pair then lone low
+        ];
+        for &(words, expected) in cases {
+            for k in kernel_entries() {
+                assert_eq!((k.utf8_len_from_utf16)(words), expected, "{} {words:04x?}", k.key);
+            }
+        }
+    }
+
+    #[test]
+    fn surrogate_pairs_straddling_register_boundaries() {
+        // A pair split across lanes 7|8 and 15|16 (both widths'
+        // boundaries), plus the SIMD-part/scalar-tail seam.
+        for pos in 0..40 {
+            for pat in [
+                &[0xD800u16, 0xDC00][..],
+                &[0xD800, 0xD800, 0xDC00][..],
+                &[0xDC00, 0xD800][..],
+                &[0xD800][..],
+            ] {
+                let mut v = vec![0x41u16; pos];
+                v.extend_from_slice(pat);
+                v.extend(std::iter::repeat(0x42).take(7));
+                let expected = utf8_len_from_utf16_scalar(&v);
+                for k in kernel_entries() {
+                    assert_eq!(
+                        (k.utf8_len_from_utf16)(&v),
+                        expected,
+                        "{} pos={pos} pat={pat:04x?}",
+                        k.key
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn utf32_predictors_match_std() {
+        for text in SAMPLES {
+            let cps: Vec<u32> = text.chars().map(|c| c as u32).collect();
+            assert_eq!(utf8_len_from_utf32(&cps), text.len(), "{text}");
+            assert_eq!(utf16_len_from_utf32(&cps), text.encode_utf16().count(), "{text}");
+        }
+    }
+
+    #[test]
+    fn best_resolves_like_the_engine_registry() {
+        let best = kernel_entries()[3];
+        assert_eq!(best.key, "best");
+        assert_eq!(utf16_len_from_utf8(b"smoke"), 5);
+        assert_eq!(count_utf16_code_points(&[0x41, 0xD83D, 0xDE42]), 2);
+    }
+}

@@ -238,6 +238,16 @@ impl Registry {
             .map(|e| Arc::clone(&e.engine))
     }
 
+    /// The counting-kernel sets ([`crate::count`]) per backend key —
+    /// `scalar` (reference), `simd128`, `simd256` and the
+    /// runtime-dispatched `best` (resolved with the same policy as the
+    /// `best` engine alias). The counting benches and the differential
+    /// suite enumerate kernels through this accessor, exactly as the
+    /// conversion sweeps enumerate engines.
+    pub fn count_entries(&self) -> [&'static crate::count::CountKernels; 4] {
+        crate::count::kernel_entries()
+    }
+
     /// All registry keys with their directions, for CLI help/listings:
     /// `(key, display name, validating, has 8→16, has 16→8)`.
     pub fn describe(&self) -> Vec<(&'static str, &'static str, bool, bool, bool)> {
@@ -348,6 +358,51 @@ mod tests {
             let (out, res) = e.engine.convert_lossy_to_vec(dirty).expect("lossy is total");
             assert_eq!(out, expected, "{}", e.key);
             assert_eq!(res.replacements, 1, "{}", e.key);
+        }
+    }
+
+    #[test]
+    fn count_entries_cover_every_backend_and_agree() {
+        let r = Registry::global();
+        let entries = r.count_entries();
+        let keys: Vec<&str> = entries.iter().map(|k| k.key).collect();
+        assert_eq!(keys, ["scalar", "simd128", "simd256", "best"]);
+        let text = "counting parity: ascii, éé, 漢字, 🙂🚀 — ".repeat(9);
+        let words: Vec<u16> = text.encode_utf16().collect();
+        for k in entries {
+            assert_eq!((k.utf16_len_from_utf8)(text.as_bytes()), words.len(), "{}", k.key);
+            assert_eq!((k.utf8_len_from_utf16)(&words), text.len(), "{}", k.key);
+            assert_eq!(
+                (k.count_utf8_code_points)(text.as_bytes()),
+                text.chars().count(),
+                "{}",
+                k.key
+            );
+            assert_eq!(
+                (k.count_utf16_code_points)(&words),
+                text.chars().count(),
+                "{}",
+                k.key
+            );
+        }
+    }
+
+    #[test]
+    fn to_vec_exact_agrees_across_registry_engines() {
+        let r = Registry::global();
+        let text = "exact allocation parity: é漢🙂 plus ascii ".repeat(12);
+        let expected: Vec<u16> = text.encode_utf16().collect();
+        for e in r.utf8_entries() {
+            if !e.engine.supports_supplemental() {
+                continue;
+            }
+            let out = e.engine.convert_to_vec_exact(text.as_bytes()).expect("valid input");
+            assert_eq!(out, expected, "{}", e.key);
+        }
+        for e in r.utf16_entries() {
+            let out = e.engine.convert_to_vec_exact(&expected).expect("valid input");
+            assert_eq!(out, text.as_bytes(), "{}", e.key);
+            assert_eq!(out.len(), text.len(), "{} length is exact", e.key);
         }
     }
 

@@ -3,6 +3,12 @@
 //! timings, report the **minimum** after checking it is close to the
 //! mean ("we verify automatically that the difference between the
 //! minimum and the average is small").
+//!
+//! Callers own the timed region: whatever the closure does is billed to
+//! the cell. The harness convention (see the [`super`] module docs) is
+//! to allocate output buffers *outside* the closure so engine cells
+//! measure engine cost, not a worst-case-buffer memset; the
+//! alloc-strategy cells break that rule deliberately and say so.
 
 use std::time::{Duration, Instant};
 

@@ -10,6 +10,24 @@
 //!
 //! Engines the paper benchmarks but this repo does not rebuild (u8u16,
 //! utf8sse4) are absent from the tables; DESIGN.md records why.
+//!
+//! ### Timing policy: what is inside the measured region
+//!
+//! Every engine-throughput cell (`measure_utf8_conversion`,
+//! `measure_utf16_conversion`, the lossy variants, the counting-kernel
+//! cells) allocates its output buffer **outside** the timed closure and
+//! re-converts into it, so MB/s and Gc/s numbers are engine cost only —
+//! a `vec![0; capacity]` inside the loop would bill a worst-case-sized
+//! memset to the engine (for UTF-16→UTF-8, a memset over 3× the input).
+//! The audit that fixed this convention found one deliberate exception,
+//! which is labeled as such: the **alloc-strategy** cells
+//! ([`bench_alloc_utf8_mbps`] / [`bench_alloc_utf16_mbps`] and the
+//! `alloc_to_vec` section of [`bench_json`]) time allocation *plus*
+//! conversion on purpose — they exist to compare the `zeroed` (seed
+//! behavior), `uninit` and `exact` `*_to_vec` strategies head to head.
+//! End-to-end paths that inherently allocate per call (the coordinator
+//! service, the XLA stream API) report service latency, not engine
+//! throughput, and say so where they print.
 
 pub mod bench;
 
@@ -476,6 +494,165 @@ pub fn bench_utf16_engine_lossy_mbps(engine: &dyn Utf16ToUtf8, words: &[u16]) ->
     (words.len() * 2) as f64 / r.min.as_secs_f64() / 1e6
 }
 
+/// Measure one counting kernel over a byte input (buffer-free: the
+/// kernel reads, counts and returns — the timed region is exactly the
+/// kernel).
+fn measure_count_utf8(
+    f: fn(&[u8]) -> usize,
+    bytes: &[u8],
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    measure(
+        || {
+            std::hint::black_box(f(std::hint::black_box(bytes)));
+        },
+        budget,
+        3,
+    )
+}
+
+/// Measure one counting kernel over a word input.
+fn measure_count_utf16(
+    f: fn(&[u16]) -> usize,
+    words: &[u16],
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    measure(
+        || {
+            std::hint::black_box(f(std::hint::black_box(words)));
+        },
+        budget,
+        3,
+    )
+}
+
+/// Counting-kernel throughput on bytes, input MB/s.
+pub fn bench_count_utf8_mbps(f: fn(&[u8]) -> usize, bytes: &[u8]) -> f64 {
+    let r = measure_count_utf8(f, bytes, default_budget());
+    bytes.len() as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// Counting-kernel throughput on words, input MB/s.
+pub fn bench_count_utf16_mbps(f: fn(&[u16]) -> usize, words: &[u16]) -> f64 {
+    let r = measure_count_utf16(f, words, default_budget());
+    (words.len() * 2) as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// Output-allocation strategy for the `*_to_vec` head-to-head cells.
+///
+/// These cells deliberately time **allocation + conversion** (the
+/// documented exception to the timing policy — see the module docs):
+/// the point is to measure what the convenience path costs end to end
+/// under each strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocStrategy {
+    /// The seed behavior: `vec![0; worst_case]` + convert + truncate —
+    /// a zero-initialization pass over the worst-case buffer before the
+    /// engine runs.
+    Zeroed,
+    /// Worst-case capacity, allocated uninitialized
+    /// (`convert_to_vec`): the memset is gone, the over-allocation
+    /// stays.
+    Uninit,
+    /// SIMD-count first, allocate exactly (`convert_to_vec_exact`).
+    Exact,
+}
+
+impl AllocStrategy {
+    /// All strategies, in `bench_json` row order.
+    pub const ALL: [AllocStrategy; 3] =
+        [AllocStrategy::Zeroed, AllocStrategy::Uninit, AllocStrategy::Exact];
+
+    /// Row key in `bench_json` / bench tables.
+    pub fn key(self) -> &'static str {
+        match self {
+            AllocStrategy::Zeroed => "zeroed",
+            AllocStrategy::Uninit => "uninit",
+            AllocStrategy::Exact => "exact",
+        }
+    }
+}
+
+fn measure_alloc_utf8(
+    engine: &dyn Utf8ToUtf16,
+    bytes: &[u8],
+    strategy: AllocStrategy,
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    measure(
+        || {
+            let len = match strategy {
+                AllocStrategy::Zeroed => {
+                    let mut dst =
+                        vec![0u16; crate::transcode::utf16_capacity_for(bytes.len())];
+                    let n = engine.convert(bytes, &mut dst).expect("corpus is valid");
+                    dst.truncate(n);
+                    dst.len()
+                }
+                AllocStrategy::Uninit => {
+                    engine.convert_to_vec(bytes).expect("corpus is valid").len()
+                }
+                AllocStrategy::Exact => {
+                    engine.convert_to_vec_exact(bytes).expect("corpus is valid").len()
+                }
+            };
+            std::hint::black_box(len);
+        },
+        budget,
+        3,
+    )
+}
+
+fn measure_alloc_utf16(
+    engine: &dyn Utf16ToUtf8,
+    words: &[u16],
+    strategy: AllocStrategy,
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    measure(
+        || {
+            let len = match strategy {
+                AllocStrategy::Zeroed => {
+                    let mut dst = vec![0u8; crate::transcode::utf8_capacity_for(words.len())];
+                    let n = engine.convert(words, &mut dst).expect("corpus is valid");
+                    dst.truncate(n);
+                    dst.len()
+                }
+                AllocStrategy::Uninit => {
+                    engine.convert_to_vec(words).expect("corpus is valid").len()
+                }
+                AllocStrategy::Exact => {
+                    engine.convert_to_vec_exact(words).expect("corpus is valid").len()
+                }
+            };
+            std::hint::black_box(len);
+        },
+        budget,
+        3,
+    )
+}
+
+/// `*_to_vec` end-to-end throughput (allocation **included** — see
+/// [`AllocStrategy`]) for UTF-8→UTF-16 on the given engine, input MB/s.
+pub fn bench_alloc_utf8_mbps(
+    engine: &dyn Utf8ToUtf16,
+    corpus: &Corpus,
+    strategy: AllocStrategy,
+) -> f64 {
+    let r = measure_alloc_utf8(engine, &corpus.utf8, strategy, default_budget());
+    corpus.utf8.len() as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// `*_to_vec` end-to-end throughput for UTF-16→UTF-8, input MB/s.
+pub fn bench_alloc_utf16_mbps(
+    engine: &dyn Utf16ToUtf8,
+    corpus: &Corpus,
+    strategy: AllocStrategy,
+) -> f64 {
+    let r = measure_alloc_utf16(engine, &corpus.utf16, strategy, default_budget());
+    (corpus.utf16.len() * 2) as f64 / r.min.as_secs_f64() / 1e6
+}
+
 /// Benchmark one UTF-8→UTF-16 engine on one corpus in **input MB/s**
 /// (the unit of the machine-readable smoke artifact; the paper's tables
 /// use Gc/s). Same measurement core as [`bench_utf8_engine`].
@@ -502,15 +679,13 @@ pub fn bench_json() -> String {
 /// [`bench_json`] with an explicit per-cell budget (tests pass a tiny
 /// one directly instead of mutating the process-global env var).
 pub fn bench_json_with(budget: std::time::Duration) -> String {
-    fn emit_section(
+    fn emit_matrix(
         out: &mut String,
-        label: &str,
+        indent: &str,
         rows: &[(&str, Vec<(String, Option<f64>)>)],
-        trailing_comma: bool,
     ) {
-        out.push_str(&format!("  \"{label}\": {{\n"));
         for (i, (key, cells)) in rows.iter().enumerate() {
-            out.push_str(&format!("    \"{key}\": {{"));
+            out.push_str(&format!("{indent}\"{key}\": {{"));
             for (j, (name, cell)) in cells.iter().enumerate() {
                 match cell {
                     Some(v) => out.push_str(&format!("\"{name}\": {v:.1}")),
@@ -522,6 +697,41 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
             }
             out.push('}');
             if i + 1 < rows.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+    }
+
+    fn emit_section(
+        out: &mut String,
+        label: &str,
+        rows: &[(&str, Vec<(String, Option<f64>)>)],
+        trailing_comma: bool,
+    ) {
+        out.push_str(&format!("  \"{label}\": {{\n"));
+        emit_matrix(out, "    ", rows);
+        out.push_str("  }");
+        if trailing_comma {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+
+    /// A section whose values are themselves matrices (the `counts` and
+    /// `alloc_to_vec` sections of the v3 schema).
+    fn emit_nested_section(
+        out: &mut String,
+        label: &str,
+        subsections: &[(&str, Vec<(&str, Vec<(String, Option<f64>)>)>)],
+        trailing_comma: bool,
+    ) {
+        out.push_str(&format!("  \"{label}\": {{\n"));
+        for (i, (name, rows)) in subsections.iter().enumerate() {
+            out.push_str(&format!("    \"{name}\": {{\n"));
+            emit_matrix(out, "      ", rows);
+            out.push_str("    }");
+            if i + 1 < subsections.len() {
                 out.push(',');
             }
             out.push('\n');
@@ -622,15 +832,100 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
         })
         .collect();
 
+    // Counting kernels: every registry kernel set (scalar / simd128 /
+    // simd256 / best) per corpus, input MB/s. The scalar row is the
+    // baseline the SIMD speedup claim is read against.
+    let count8_rows = |pick: fn(&CountKernels) -> fn(&[u8]) -> usize|
+     -> Vec<(&'static str, Vec<(String, Option<f64>)>)> {
+            r.count_entries()
+                .iter()
+                .map(|k| {
+                    let cells = corpora
+                        .iter()
+                        .map(|c| {
+                            let res = measure_count_utf8(pick(k), &c.utf8, budget);
+                            let mbps = c.utf8.len() as f64 / res.min.as_secs_f64() / 1e6;
+                            (c.name().to_string(), Some(mbps))
+                        })
+                        .collect();
+                    (k.key, cells)
+                })
+                .collect()
+        };
+    let count16_rows = |pick: fn(&CountKernels) -> fn(&[u16]) -> usize|
+     -> Vec<(&'static str, Vec<(String, Option<f64>)>)> {
+            r.count_entries()
+                .iter()
+                .map(|k| {
+                    let cells = corpora
+                        .iter()
+                        .map(|c| {
+                            let res = measure_count_utf16(pick(k), &c.utf16, budget);
+                            let mbps =
+                                (c.utf16.len() * 2) as f64 / res.min.as_secs_f64() / 1e6;
+                            (c.name().to_string(), Some(mbps))
+                        })
+                        .collect();
+                    (k.key, cells)
+                })
+                .collect()
+        };
+    let counts_sections: Vec<(&str, Vec<(&str, Vec<(String, Option<f64>)>)>)> = vec![
+        ("utf16_len_from_utf8", count8_rows(|k| k.utf16_len_from_utf8)),
+        ("utf8_len_from_utf16", count16_rows(|k| k.utf8_len_from_utf16)),
+        ("count_utf8_code_points", count8_rows(|k| k.count_utf8_code_points)),
+        ("count_utf16_code_points", count16_rows(|k| k.count_utf16_code_points)),
+    ];
+
+    // Alloc-strategy head-to-head on the `best` engine: `zeroed` (seed
+    // `vec![0; worst_case]`), `uninit` (`convert_to_vec`), `exact`
+    // (`convert_to_vec_exact`). Allocation is *inside* the timed region
+    // by design — that is the comparison (see the module's timing
+    // policy).
+    let best8 = r.get_utf8("best").expect("registry always has best");
+    let best16 = r.get_utf16("best").expect("registry always has best");
+    let alloc8_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = AllocStrategy::ALL
+        .iter()
+        .map(|&s| {
+            let cells = corpora
+                .iter()
+                .map(|c| {
+                    let res = measure_alloc_utf8(best8, &c.utf8, s, budget);
+                    let mbps = c.utf8.len() as f64 / res.min.as_secs_f64() / 1e6;
+                    (c.name().to_string(), Some(mbps))
+                })
+                .collect();
+            (s.key(), cells)
+        })
+        .collect();
+    let alloc16_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = AllocStrategy::ALL
+        .iter()
+        .map(|&s| {
+            let cells = corpora
+                .iter()
+                .map(|c| {
+                    let res = measure_alloc_utf16(best16, &c.utf16, s, budget);
+                    let mbps = (c.utf16.len() * 2) as f64 / res.min.as_secs_f64() / 1e6;
+                    (c.name().to_string(), Some(mbps))
+                })
+                .collect();
+            (s.key(), cells)
+        })
+        .collect();
+    let alloc_sections: Vec<(&str, Vec<(&str, Vec<(String, Option<f64>)>)>)> =
+        vec![("utf8_to_utf16", alloc8_rows), ("utf16_to_utf8", alloc16_rows)];
+
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"simdutf-rs-bench-v2\",\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v3\",\n");
     out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
     out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
     out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
     emit_section(&mut out, "utf8_to_utf16", &utf8_rows, true);
     emit_section(&mut out, "utf16_to_utf8", &utf16_rows, true);
     emit_section(&mut out, "utf8_to_utf16_lossy", &lossy8_rows, true);
-    emit_section(&mut out, "utf16_to_utf8_lossy", &lossy16_rows, false);
+    emit_section(&mut out, "utf16_to_utf8_lossy", &lossy16_rows, true);
+    emit_nested_section(&mut out, "counts", &counts_sections, true);
+    emit_nested_section(&mut out, "alloc_to_vec", &alloc_sections, false);
     out.push_str("}\n");
     out
 }
@@ -698,6 +993,22 @@ mod tests {
             "missing lossy sections:\n{json}"
         );
         assert!(json.contains("+dirty10"), "missing dirty cells:\n{json}");
+        // v3: counting kernels and alloc-strategy head-to-head.
+        assert!(json.contains("\"simdutf-rs-bench-v3\""), "schema must be v3:\n{json}");
+        assert!(json.contains("\"counts\""), "missing counts section:\n{json}");
+        for sub in [
+            "utf16_len_from_utf8",
+            "utf8_len_from_utf16",
+            "count_utf8_code_points",
+            "count_utf16_code_points",
+        ] {
+            assert!(json.contains(&format!("\"{sub}\"")), "missing counts.{sub}:\n{json}");
+        }
+        assert!(json.contains("\"scalar\""), "missing scalar kernel rows:\n{json}");
+        assert!(json.contains("\"alloc_to_vec\""), "missing alloc section:\n{json}");
+        for strategy in ["zeroed", "uninit", "exact"] {
+            assert!(json.contains(&format!("\"{strategy}\"")), "missing {strategy}:\n{json}");
+        }
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //!   arbitrary chunk boundaries (carrying partial characters between
 //!   pushes), equivalent split-for-split to one-shot conversion; lossy
 //!   mode (`push_lossy`) never poisons the stream.
+//! * [`count`] — the SIMD counting subsystem: exact-size output
+//!   predictors (`utf16_len_from_utf8`, `utf8_len_from_utf16`) and
+//!   code-point counters, movemask+popcount kernels generic over the
+//!   same backends as the converters (scalar / `simd128` / `simd256` /
+//!   `best`), powering the allocation-free `*_to_vec_exact` paths.
 //! * [`validate`] — Keiser–Lemire UTF-8 validation and UTF-16 surrogate
 //!   validation.
 //! * [`baselines`] — every comparison system from the paper's evaluation,
@@ -74,6 +79,18 @@
 //! assert_eq!(info.replacements, 1);
 //! assert_eq!(info.first_error.unwrap().position, 3);
 //!
+//! // Exact-size allocation: for every engine in this crate,
+//! // `convert_to_vec` allocates the worst case *uninitialized* (no
+//! // memset — the engines are audited write-only over `dst`);
+//! // `convert_to_vec_exact` goes further — one SIMD counting pass
+//! // sizes the vector precisely, so multi-byte-heavy input stops
+//! // paying the 1×/3× worst-case over-allocation. Same outputs,
+//! // same errors.
+//! let exact = engine.convert_to_vec_exact(src).expect("valid UTF-8");
+//! assert_eq!(exact, utf16);
+//! assert_eq!(exact.len(), utf16_len_from_utf8(src)); // counted, not truncated
+//! assert_eq!(count_utf8_code_points(src), "héllo wörld — 漢字 🙂".chars().count());
+//!
 //! // Streaming: split anywhere, same outputs, same errors.
 //! let mut stream = StreamingUtf8ToUtf16::new();
 //! let mut out = Vec::new();
@@ -115,6 +132,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod corpus;
+pub mod count;
 pub mod counters;
 pub mod engine;
 pub mod harness;
@@ -134,6 +152,10 @@ pub mod prelude {
     pub use crate::corpus::{
         corrupt_utf16, corrupt_utf8, Collection, Corpus, CorpusStats, DirtProfile, Language,
         DIRT_PROFILES, LIPSUM_LANGUAGES, WIKI_LANGUAGES,
+    };
+    pub use crate::count::{
+        count_utf16_code_points, count_utf8_code_points, utf16_len_from_utf8,
+        utf8_len_from_utf16, CountKernels,
     };
     pub use crate::engine::Registry;
     pub use crate::simd::{best_key, VectorBackend, V128, V256};

@@ -74,6 +74,18 @@ pub trait SimdBytes: Copy + Send + Sync + std::fmt::Debug + 'static {
     /// True iff every lane is ASCII (MSB clear).
     fn is_ascii(self) -> bool;
 
+    /// Unsigned `>=` threshold mask: bit `i` of the result is set iff
+    /// lane `i` is `>= t`, for thresholds in the non-ASCII range
+    /// (`t >= 0x80`). One `psubusb` + `pmovmskb`: `x - (t - 0x80)`
+    /// saturates to a value with the MSB set exactly when `x >= t`.
+    /// The counting kernels ([`crate::count`]) classify lead and
+    /// continuation bytes with this.
+    #[inline]
+    fn ge_mask(self, t: u8) -> u64 {
+        debug_assert!(t >= 0x80, "ge_mask is defined for thresholds >= 0x80");
+        self.saturating_sub(Self::splat(t - 0x80)).movemask()
+    }
+
     /// Per-lane maxima for the Keiser–Lemire incomplete-at-end check: a
     /// register is complete unless its last three bytes start a longer
     /// sequence.
@@ -268,6 +280,24 @@ mod tests {
         assert_eq!(m32.0[29], 0xF0 - 1);
         assert_eq!(m32.0[30], 0xE0 - 1);
         assert_eq!(m32.0[31], 0xC0 - 1);
+    }
+
+    #[test]
+    fn ge_mask_matches_lane_comparison() {
+        let mut bytes = [0u8; 32];
+        for i in 0..32 {
+            bytes[i] = (i as u8).wrapping_mul(37).wrapping_add(0x60);
+        }
+        for t in [0x80u8, 0xC0, 0xE0, 0xF0, 0xFF] {
+            let m16 = U8x16(bytes[..16].try_into().unwrap()).ge_mask(t);
+            let m32 = U8x32(bytes).ge_mask(t);
+            for i in 0..16 {
+                assert_eq!((m16 >> i) & 1 == 1, bytes[i] >= t, "t={t:#x} lane {i}");
+            }
+            for i in 0..32 {
+                assert_eq!((m32 >> i) & 1 == 1, bytes[i] >= t, "t={t:#x} lane {i}");
+            }
+        }
     }
 
     #[test]

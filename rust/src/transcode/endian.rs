@@ -91,6 +91,16 @@ pub fn utf16be_to_utf8(data: &[u8], dst: &mut [u8]) -> crate::transcode::Transco
     crate::transcode::utf16_to_utf8::OurUtf16ToUtf8::validating().convert(&words, dst)
 }
 
+/// Transcode big-endian UTF-16 bytes to UTF-8 into an exactly-sized
+/// vector: byte-swap, SIMD-count ([`crate::count::utf8_len_from_utf16`])
+/// and convert with no worst-case zeroed buffer (see
+/// [`crate::transcode::Utf16ToUtf8::convert_to_vec_exact`]).
+pub fn utf16be_to_utf8_vec(data: &[u8]) -> crate::transcode::TranscodeResult<Vec<u8>> {
+    use crate::transcode::Utf16ToUtf8;
+    let words = utf16be_bytes_to_words(data);
+    crate::transcode::utf16_to_utf8::OurUtf16ToUtf8::validating().convert_to_vec_exact(&words)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +138,17 @@ mod tests {
         let mut dst = vec![0u8; crate::transcode::utf8_capacity_for(be_bytes.len() / 2)];
         let n = utf16be_to_utf8(&be_bytes, &mut dst).unwrap();
         assert_eq!(&dst[..n], text.as_bytes());
+    }
+
+    #[test]
+    fn utf16be_to_utf8_vec_is_exact() {
+        let text = "exact-size BE path: 漢字 🙂 with ascii tail";
+        let be_bytes: Vec<u8> =
+            text.encode_utf16().flat_map(|w| w.to_be_bytes()).collect();
+        let out = utf16be_to_utf8_vec(&be_bytes).unwrap();
+        assert_eq!(out, text.as_bytes());
+        assert_eq!(out.len(), text.len(), "length counted exactly");
+        assert!(utf16be_to_utf8_vec(&[0xD8, 0x00]).is_err());
     }
 
     #[test]

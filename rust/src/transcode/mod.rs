@@ -57,6 +57,121 @@ pub const REPLACEMENT_UTF16: u16 = 0xFFFD;
 /// U+FFFD REPLACEMENT CHARACTER encoded as UTF-8.
 pub const REPLACEMENT_UTF8: [u8; 3] = [0xEF, 0xBF, 0xBD];
 
+/// Extra output capacity (in units) the exact-size `*_to_vec_exact`
+/// allocations add on top of the counted output length.
+///
+/// The engines' inner loops guard with full-register look-ahead (the
+/// largest is the UTF-16→UTF-8 kernel's `q + 2 * WIDTH <= dst.len()`
+/// check, 64 bytes at the 256-bit width, taken when as little as half a
+/// register of input — contributing as little as `WIDTH / 2` output
+/// units — remains). 64 units of slack therefore guarantee that **no
+/// engine in the crate can report `OutputBuffer` before it reports an
+/// encoding error or finishes**: at every guard point the engine has
+/// written `q <= exact` units (the predictors are per-unit monotone and
+/// exact on the valid prefix), so `q + 64 <= exact + 64` always holds.
+/// A constant, not proportional: the allocation stays exact-sized in
+/// the limit, against the 1×/3× proportional headroom of
+/// [`utf16_capacity_for`] / [`utf8_capacity_for`].
+///
+/// Derived from the widest shipped backend so a future width bump
+/// cannot silently shrink the margin; the UTF-16→UTF-8 kernel
+/// additionally carries an inline-const assertion tying its
+/// `q + 2 * WIDTH` guard to this constant at the point of use.
+pub const EXACT_SLACK: usize = 2 * <crate::simd::V256 as crate::simd::VectorBackend>::WIDTH;
+
+/// Marker for output-unit types that are plain old data: every bit
+/// pattern is a valid value, so a freshly allocated, *uninitialized*
+/// buffer of them can be handed to a write-only producer and the
+/// written prefix frozen afterwards.
+///
+/// # Safety
+///
+/// Implementors must have no invalid representations and no drop glue
+/// (primitive integers only).
+pub(crate) unsafe trait PodUnit: Copy + 'static {}
+unsafe impl PodUnit for u8 {}
+unsafe impl PodUnit for u16 {}
+unsafe impl PodUnit for u32 {}
+
+/// A conversion result that knows how many output units were written
+/// (the initialized prefix [`fill_uninit`] may expose).
+pub(crate) trait WrittenLen {
+    fn written_len(&self) -> usize;
+}
+
+impl WrittenLen for usize {
+    fn written_len(&self) -> usize {
+        *self
+    }
+}
+
+impl WrittenLen for LossyResult {
+    fn written_len(&self) -> usize {
+        self.written
+    }
+}
+
+/// Run `fill` over an **uninitialized** buffer of `cap` units and
+/// freeze the written prefix into a `Vec` — the allocation core of
+/// every `*_to_vec` convenience method. Replaces the former
+/// `vec![0; cap]` + `truncate`, eliminating the up-front `memset` pass
+/// over the worst-case buffer (for UTF-16→UTF-8 that pass touched 3×
+/// the input size before the engine ran).
+///
+/// # Safety argument
+///
+/// This hands `fill` a `&mut [T]` over memory that has not been
+/// initialized. That is sound here, and at every call site in this
+/// crate, because of three facts taken together:
+///
+/// 1. `T: PodUnit` — a primitive integer with no invalid bit patterns
+///    and no drop glue, so no value-level invariant can be violated by
+///    whatever bits the allocation happens to contain.
+/// 2. This function is `pub(crate)` and only ever invoked with the
+///    `convert`/`convert_lossy` of **this crate's own engines** (via
+///    the [`uninit_to_vec_utf8!`]/[`uninit_to_vec_utf16!`] overrides
+///    and the UTF-32/endian helpers), every one of which is audited to
+///    treat `dst` strictly as **write-only**: output is produced
+///    contiguously from index 0 and no path loads from `dst` (register
+///    stores may overshoot the frontier into slack that is then
+///    overwritten or discarded, but never read). Reading uninitialized
+///    memory as an integer would be undefined behavior — which is why
+///    the *public trait defaults* hand arbitrary downstream
+///    implementations a zeroed buffer instead and the uninit path is
+///    strictly opt-in, per audited engine.
+/// 3. `set_len` only covers the prefix the filler reports as written
+///    (checked against `cap`), which the contiguity property of (2)
+///    guarantees is fully initialized.
+///
+/// The contract in (2) is audit-enforced, not compiler-enforced — any
+/// future edit that makes an opted-in engine *read* `dst` would be
+/// undefined behavior with no build-time signal. When running the
+/// suite under Miri becomes possible for this crate, the `*_to_vec`
+/// differential tests in `rust/tests/counting.rs` are the ones that
+/// would catch such a regression.
+// The `with_capacity` → write-through-raw-slice → `set_len` sequence is
+// exactly what this function exists to encapsulate; the lint cannot see
+// that `fill` initializes the prefix `set_len` freezes.
+#[allow(clippy::uninit_vec)]
+pub(crate) fn fill_uninit<T: PodUnit, R: WrittenLen>(
+    cap: usize,
+    fill: impl FnOnce(&mut [T]) -> TranscodeResult<R>,
+) -> TranscodeResult<(Vec<T>, R)> {
+    let mut v: Vec<T> = Vec::with_capacity(cap);
+    let r = {
+        // SAFETY: see the function-level safety argument — T is a
+        // primitive integer and `fill` is write-only over the slice.
+        let spare = unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr(), cap) };
+        fill(spare)?
+    };
+    let written = r.written_len();
+    assert!(written <= cap, "engine reported writing past its buffer");
+    // SAFETY: the first `written` units were written by `fill`
+    // (contiguous-prefix contract), and `written <= cap <= capacity`.
+    unsafe { v.set_len(written) };
+    Ok((v, r))
+}
+
 /// Required UTF-16 output capacity (in words) to transcode `src_len`
 /// UTF-8 bytes: one word per input byte plus register slack.
 #[inline]
@@ -84,6 +199,15 @@ pub trait Utf8ToUtf16: Send + Sync {
     /// and byte position if the engine validates and the input is
     /// invalid, or with [`ErrorKind::OutputBuffer`] if `dst` is too
     /// small (see module docs).
+    ///
+    /// Every engine in this crate treats `dst` as **write-only** and
+    /// produces output as a contiguous prefix (register stores may
+    /// overshoot the frontier into slack, but nothing is *loaded* from
+    /// `dst`) — which is what lets them override the `*_to_vec`
+    /// convenience methods with the uninitialized-buffer fast path
+    /// (`uninit_to_vec_utf8!`). The trait itself imposes no such
+    /// requirement: the default `*_to_vec` methods hand arbitrary
+    /// implementations a zeroed buffer.
     fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult;
 
     /// Whether the engine supports inputs with 4-byte (supplemental
@@ -93,9 +217,45 @@ pub trait Utf8ToUtf16: Send + Sync {
         true
     }
 
-    /// Convenience: transcode into a fresh, exactly-sized vector.
+    /// Convenience: transcode into a fresh vector sized by the
+    /// worst-case capacity contract, trimmed to the written length.
+    ///
+    /// This default is safe for arbitrary implementations (zeroed
+    /// buffer). Every engine in this crate overrides it — via
+    /// `uninit_to_vec_utf8!` — with the **uninitialized**-buffer fast
+    /// path (no `memset` pass; see `fill_uninit` for the safety
+    /// argument), which is sound because their `convert` is audited to
+    /// be write-only over `dst`. When the output is expected to be much
+    /// smaller than the worst case — any multi-byte-heavy input —
+    /// prefer [`convert_to_vec_exact`](Utf8ToUtf16::convert_to_vec_exact),
+    /// which SIMD-counts first and allocates precisely.
     fn convert_to_vec(&self, src: &[u8]) -> TranscodeResult<Vec<u16>> {
         let mut dst = vec![0u16; utf16_capacity_for(src.len())];
+        let n = self.convert(src, &mut dst)?;
+        dst.truncate(n);
+        Ok(dst)
+    }
+
+    /// Transcode into a fresh, **exactly-sized** vector: one SIMD
+    /// counting pass ([`crate::count::utf16_len_from_utf8`]) sizes the
+    /// allocation, one `convert` call fills it — no proportional
+    /// over-allocation (a constant [`EXACT_SLACK`] of spare *capacity*
+    /// covers the engines' full-register store slack; the returned
+    /// length is exact). In-crate engines additionally skip the
+    /// zero-initialization (`uninit_to_vec_utf8!` override); this
+    /// default zeroes the (exactly-counted) buffer so it stays safe for
+    /// arbitrary implementations.
+    ///
+    /// For a validating engine this never reports
+    /// [`ErrorKind::OutputBuffer`]: the predictor is exact on the valid
+    /// prefix, so the engine either finishes into the counted size or
+    /// fails with the encoding error first (see [`EXACT_SLACK`]). With
+    /// a **non-validating** engine on *invalid* input the predictor is
+    /// not an output bound and the call may return `OutputBuffer`
+    /// instead of garbage output — never memory unsafety.
+    fn convert_to_vec_exact(&self, src: &[u8]) -> TranscodeResult<Vec<u16>> {
+        let exact = crate::count::utf16_len_from_utf8(src);
+        let mut dst = vec![0u16; exact + EXACT_SLACK];
         let n = self.convert(src, &mut dst)?;
         dst.truncate(n);
         Ok(dst)
@@ -163,7 +323,11 @@ pub trait Utf8ToUtf16: Send + Sync {
         }
     }
 
-    /// Convenience: lossy conversion into a fresh, exactly-sized vector.
+    /// Convenience: lossy conversion into a fresh vector (worst-case
+    /// capacity — lossy output length depends on the replacement
+    /// pattern, so there is no exact sibling). Zeroed here; in-crate
+    /// engines override with the uninitialized fast path
+    /// (`uninit_to_vec_utf8!`).
     fn convert_lossy_to_vec(&self, src: &[u8]) -> TranscodeResult<(Vec<u16>, LossyResult)> {
         let mut dst = vec![0u16; utf16_capacity_for(src.len())];
         let r = self.convert_lossy(src, &mut dst)?;
@@ -171,6 +335,93 @@ pub trait Utf8ToUtf16: Send + Sync {
         Ok((dst, r))
     }
 }
+
+/// Overrides the three buffer-allocating `Utf8ToUtf16` convenience
+/// methods with the **uninitialized**-buffer fast path (`fill_uninit`:
+/// no memset, and `convert_to_vec_exact` allocates the counted size).
+/// Invoke inside an `impl Utf8ToUtf16 for …` block.
+///
+/// Only for engines in this crate whose `convert`/`convert_lossy` are
+/// audited **write-only** over `dst` — that is what makes handing them
+/// uninitialized memory sound (see `fill_uninit`). The macro is
+/// `pub(crate)` precisely so the opt-in cannot leak to unaudited
+/// downstream implementations, which keep the zeroed trait defaults.
+macro_rules! uninit_to_vec_utf8 {
+    () => {
+        fn convert_to_vec(
+            &self,
+            src: &[u8],
+        ) -> crate::transcode::TranscodeResult<Vec<u16>> {
+            crate::transcode::fill_uninit(
+                crate::transcode::utf16_capacity_for(src.len()),
+                |dst| <Self as crate::transcode::Utf8ToUtf16>::convert(self, src, dst),
+            )
+            .map(|(v, _)| v)
+        }
+
+        fn convert_to_vec_exact(
+            &self,
+            src: &[u8],
+        ) -> crate::transcode::TranscodeResult<Vec<u16>> {
+            let exact = crate::count::utf16_len_from_utf8(src);
+            crate::transcode::fill_uninit(exact + crate::transcode::EXACT_SLACK, |dst| {
+                <Self as crate::transcode::Utf8ToUtf16>::convert(self, src, dst)
+            })
+            .map(|(v, _)| v)
+        }
+
+        fn convert_lossy_to_vec(
+            &self,
+            src: &[u8],
+        ) -> crate::transcode::TranscodeResult<(Vec<u16>, crate::transcode::LossyResult)>
+        {
+            crate::transcode::fill_uninit(
+                crate::transcode::utf16_capacity_for(src.len()),
+                |dst| <Self as crate::transcode::Utf8ToUtf16>::convert_lossy(self, src, dst),
+            )
+        }
+    };
+}
+pub(crate) use uninit_to_vec_utf8;
+
+/// [`uninit_to_vec_utf8!`] for the `Utf16ToUtf8` direction.
+macro_rules! uninit_to_vec_utf16 {
+    () => {
+        fn convert_to_vec(
+            &self,
+            src: &[u16],
+        ) -> crate::transcode::TranscodeResult<Vec<u8>> {
+            crate::transcode::fill_uninit(
+                crate::transcode::utf8_capacity_for(src.len()),
+                |dst| <Self as crate::transcode::Utf16ToUtf8>::convert(self, src, dst),
+            )
+            .map(|(v, _)| v)
+        }
+
+        fn convert_to_vec_exact(
+            &self,
+            src: &[u16],
+        ) -> crate::transcode::TranscodeResult<Vec<u8>> {
+            let exact = crate::count::utf8_len_from_utf16(src);
+            crate::transcode::fill_uninit(exact + crate::transcode::EXACT_SLACK, |dst| {
+                <Self as crate::transcode::Utf16ToUtf8>::convert(self, src, dst)
+            })
+            .map(|(v, _)| v)
+        }
+
+        fn convert_lossy_to_vec(
+            &self,
+            src: &[u16],
+        ) -> crate::transcode::TranscodeResult<(Vec<u8>, crate::transcode::LossyResult)>
+        {
+            crate::transcode::fill_uninit(
+                crate::transcode::utf8_capacity_for(src.len()),
+                |dst| <Self as crate::transcode::Utf16ToUtf8>::convert_lossy(self, src, dst),
+            )
+        }
+    };
+}
+pub(crate) use uninit_to_vec_utf16;
 
 /// Shared handles transcode too: lets a registry engine (e.g. the
 /// runtime-dispatched `best` key, obtained as `Arc<dyn Utf8ToUtf16>`)
@@ -194,6 +445,20 @@ impl<T: Utf8ToUtf16 + ?Sized> Utf8ToUtf16 for std::sync::Arc<T> {
     fn convert_lossy(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult<LossyResult> {
         (**self).convert_lossy(src, dst)
     }
+    // The `*_to_vec` methods are all forwarded: every in-crate engine
+    // overrides them with the uninit fast path, and an Arc handle (how
+    // the registry and the coordinator hold every engine) must not
+    // silently fall back to the zeroed defaults — nor bypass a
+    // downstream engine's own overrides.
+    fn convert_to_vec(&self, src: &[u8]) -> TranscodeResult<Vec<u16>> {
+        (**self).convert_to_vec(src)
+    }
+    fn convert_to_vec_exact(&self, src: &[u8]) -> TranscodeResult<Vec<u16>> {
+        (**self).convert_to_vec_exact(src)
+    }
+    fn convert_lossy_to_vec(&self, src: &[u8]) -> TranscodeResult<(Vec<u16>, LossyResult)> {
+        (**self).convert_lossy_to_vec(src)
+    }
 }
 
 /// A UTF-16 → UTF-8 transcoding engine.
@@ -204,10 +469,39 @@ pub trait Utf16ToUtf8: Send + Sync {
     /// Transcode `src` (native word order) into `dst`, returning the
     /// number of bytes written, or the first error's kind and word
     /// position.
+    ///
+    /// As for [`Utf8ToUtf16::convert`]: in-crate engines are write-only
+    /// over `dst` (which is what lets them opt into the
+    /// uninitialized-buffer `*_to_vec` overrides via
+    /// `uninit_to_vec_utf16!`), while the trait's own `*_to_vec`
+    /// defaults hand arbitrary implementations a zeroed buffer.
     fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult;
 
+    /// Convenience: transcode into a fresh vector sized by the
+    /// worst-case capacity contract (3 bytes per word). Zeroed default,
+    /// safe for arbitrary implementations; in-crate engines override
+    /// with the uninitialized fast path (`uninit_to_vec_utf16!`) that
+    /// skips the `memset` pass over 3× the input size. See
+    /// [`Utf8ToUtf16::convert_to_vec`].
     fn convert_to_vec(&self, src: &[u16]) -> TranscodeResult<Vec<u8>> {
         let mut dst = vec![0u8; utf8_capacity_for(src.len())];
+        let n = self.convert(src, &mut dst)?;
+        dst.truncate(n);
+        Ok(dst)
+    }
+
+    /// Transcode into a fresh, **exactly-sized** vector: one SIMD
+    /// counting pass ([`crate::count::utf8_len_from_utf16`]) sizes the
+    /// allocation, one `convert` call fills it. The predictor's
+    /// unpaired-surrogate-counts-3 convention makes it an upper bound
+    /// for *every* engine in the crate (3 bytes is the width of both
+    /// U+FFFD and the non-validating engine's raw WTF-8 output), so
+    /// unlike the UTF-8 direction this is exact-or-better even for
+    /// non-validating engines on garbage. See
+    /// [`Utf8ToUtf16::convert_to_vec_exact`] and [`EXACT_SLACK`].
+    fn convert_to_vec_exact(&self, src: &[u16]) -> TranscodeResult<Vec<u8>> {
+        let exact = crate::count::utf8_len_from_utf16(src);
+        let mut dst = vec![0u8; exact + EXACT_SLACK];
         let n = self.convert(src, &mut dst)?;
         dst.truncate(n);
         Ok(dst)
@@ -258,7 +552,9 @@ pub trait Utf16ToUtf8: Send + Sync {
         }
     }
 
-    /// Convenience: lossy conversion into a fresh, exactly-sized vector.
+    /// Convenience: lossy conversion into a fresh vector (worst-case
+    /// capacity; zeroed default, uninit in-crate override — see
+    /// [`Utf8ToUtf16::convert_lossy_to_vec`]).
     fn convert_lossy_to_vec(&self, src: &[u16]) -> TranscodeResult<(Vec<u8>, LossyResult)> {
         let mut dst = vec![0u8; utf8_capacity_for(src.len())];
         let r = self.convert_lossy(src, &mut dst)?;
@@ -281,18 +577,28 @@ impl<T: Utf16ToUtf8 + ?Sized> Utf16ToUtf8 for std::sync::Arc<T> {
     fn convert_lossy(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult<LossyResult> {
         (**self).convert_lossy(src, dst)
     }
+    // See the `Utf8ToUtf16` blanket impl for why all `*_to_vec`
+    // methods forward.
+    fn convert_to_vec(&self, src: &[u16]) -> TranscodeResult<Vec<u8>> {
+        (**self).convert_to_vec(src)
+    }
+    fn convert_to_vec_exact(&self, src: &[u16]) -> TranscodeResult<Vec<u8>> {
+        (**self).convert_to_vec_exact(src)
+    }
+    fn convert_lossy_to_vec(&self, src: &[u16]) -> TranscodeResult<(Vec<u8>, LossyResult)> {
+        (**self).convert_lossy_to_vec(src)
+    }
 }
 
 /// Number of UTF-16 words needed to represent valid UTF-8 input
-/// (counting surrogate pairs as two). Vectorizable single pass.
+/// (counting surrogate pairs as two).
+///
+/// Dispatches to the widest SIMD counting kernel the CPU supports —
+/// see [`crate::count`] for the kernel family (scalar reference and
+/// width-pinned variants included). Total on arbitrary bytes.
+#[inline]
 pub fn utf16_len_from_utf8(src: &[u8]) -> usize {
-    // words = #non-continuation bytes + #4-byte leads
-    let mut n = 0usize;
-    for &b in src {
-        n += ((b & 0xC0) != 0x80) as usize;
-        n += (b >= 0xF0) as usize;
-    }
-    n
+    crate::count::utf16_len_from_utf8(src)
 }
 
 /// Number of UTF-8 bytes needed to represent UTF-16 input.
@@ -303,30 +609,12 @@ pub fn utf16_len_from_utf8(src: &[u8]) -> usize {
 /// counts 3 bytes, the width of both U+FFFD (replacement) and the raw
 /// WTF-8 encoding the non-validating engine emits. This keeps the
 /// estimate an upper bound for every engine in the crate.
+///
+/// Dispatches to the widest SIMD counting kernel the CPU supports
+/// ([`crate::count`]).
+#[inline]
 pub fn utf8_len_from_utf16(src: &[u16]) -> usize {
-    let mut n = 0usize;
-    let mut i = 0usize;
-    while i < src.len() {
-        let w = src[i];
-        n += if w < 0x80 {
-            1
-        } else if w < 0x800 {
-            2
-        } else if (0xD800..0xDC00).contains(&w) {
-            if i + 1 < src.len() && (0xDC00..0xE000).contains(&src[i + 1]) {
-                // Properly paired: the pair is one 4-byte character.
-                i += 1;
-                4
-            } else {
-                3 // unpaired high surrogate
-            }
-        } else {
-            // BMP character, or an unpaired low surrogate (3 either way).
-            3
-        };
-        i += 1;
-    }
-    n
+    crate::count::utf8_len_from_utf16(src)
 }
 
 #[cfg(test)]
@@ -431,6 +719,36 @@ mod tests {
             assert_eq!(r.replacements, unpaired, "{src:04x?}");
             assert_eq!(r.first_error.is_some(), unpaired > 0, "{src:04x?}");
         }
+    }
+
+    #[test]
+    fn to_vec_exact_matches_worst_case_to_vec() {
+        let to16 = utf8_to_utf16::OurUtf8ToUtf16::validating();
+        let to8 = utf16_to_utf8::OurUtf16ToUtf8::validating();
+        for text in ["", "a", "héllo wörld", "漢字テスト".repeat(40).as_str(),
+            "🙂🚀🌍".repeat(30).as_str(), "mixed é漢🙂 text ".repeat(25).as_str()]
+        {
+            let exact = to16.convert_to_vec_exact(text.as_bytes()).expect("valid");
+            assert_eq!(exact, to16.convert_to_vec(text.as_bytes()).unwrap(), "{text:.20}");
+            assert_eq!(exact.len(), text.encode_utf16().count(), "{text:.20}");
+            let back = to8.convert_to_vec_exact(&exact).expect("valid");
+            assert_eq!(back, text.as_bytes(), "{text:.20}");
+            assert_eq!(back.len(), text.len());
+        }
+        // Dirty input through a validating engine: identical structured
+        // error, never a spurious OutputBuffer (see EXACT_SLACK).
+        let mut bad = "é".repeat(100).into_bytes();
+        bad[77] = 0xFF;
+        assert_eq!(
+            to16.convert_to_vec_exact(&bad).unwrap_err(),
+            to16.convert_to_vec(&bad).unwrap_err()
+        );
+        // The WTF-8 upper-bound convention makes the UTF-16 exact path
+        // total even for the non-validating engine on garbage.
+        let garbage = [0x41u16, 0xD800, 0x42, 0xDC00, 0xD83D, 0xDE42];
+        let nv = utf16_to_utf8::OurUtf16ToUtf8::non_validating();
+        let out = nv.convert_to_vec_exact(&garbage).expect("WTF-8 bound");
+        assert_eq!(out.len(), utf8_len_from_utf16(&garbage));
     }
 
     #[test]

@@ -80,6 +80,10 @@ impl<B: VectorBackend> Utf16ToUtf8 for OurUtf16ToUtf8<B> {
     fn convert(&self, src: &[u16], dst: &mut [u8]) -> TranscodeResult {
         convert_impl::<B, false>(src, dst, self.validate, &mut Counters::disabled())
     }
+
+    // `convert_impl` is write-only over `dst` at every width: eligible
+    // for the uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf16!();
 }
 
 /// Convert with instrumentation (Table 8 support; default backend).
@@ -259,6 +263,11 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
     let lanes = B::WIDTH / 2;
     let mut p = 0usize;
     let mut q = 0usize;
+    // The exact-size allocation path depends on this kernel's largest
+    // look-ahead fitting inside the constant slack; adding a wider
+    // backend must grow EXACT_SLACK in lockstep, and this makes that a
+    // compile error instead of a spurious runtime OutputBuffer.
+    const { assert!(2 * B::WIDTH <= crate::transcode::EXACT_SLACK) };
 
     while p + lanes <= src.len() {
         // Each register writes at most `3 * lanes` bytes, plus 16 bytes

@@ -7,9 +7,10 @@
 //! compaction when encoding, which reuses the same class-mask machinery
 //! as Algorithm 4.
 
+use crate::count;
 use crate::scalar;
 use crate::simd::{SimdBytes, VectorBackend, V128};
-use crate::transcode::{ErrorKind, TranscodeError, TranscodeResult};
+use crate::transcode::{fill_uninit, ErrorKind, TranscodeError, TranscodeResult, EXACT_SLACK};
 
 /// First invalid UTF-32 value at or after `from`, if any.
 fn utf32_error(input: &[u32], from: usize) -> Option<TranscodeError> {
@@ -122,6 +123,43 @@ pub fn utf32_to_utf16(src: &[u32], dst: &mut [u16]) -> TranscodeResult {
     Ok(q)
 }
 
+// ---------------------------------------------------------------------------
+// Exact-size allocation helpers: one counting pass sizes the vector,
+// one conversion fills it uninitialized (`fill_uninit`); no worst-case
+// zeroed buffer. The counting kernels are the [`crate::count`]
+// subsystem; `EXACT_SLACK` spare *capacity* absorbs the vectorized
+// ASCII fast path's full-register look-ahead, the returned length is
+// exact.
+
+/// UTF-8 → UTF-32 into an exactly-sized vector
+/// (`count::count_utf8_code_points` sizes it — code points *are* the
+/// UTF-32 length).
+pub fn utf8_to_utf32_vec(src: &[u8]) -> TranscodeResult<Vec<u32>> {
+    let exact = count::count_utf8_code_points(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| utf8_to_utf32(src, dst)).map(|(v, _)| v)
+}
+
+/// UTF-16 → UTF-32 into an exactly-sized vector
+/// (`count::count_utf16_code_points` sizes it).
+pub fn utf16_to_utf32_vec(src: &[u16]) -> TranscodeResult<Vec<u32>> {
+    let exact = count::count_utf16_code_points(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| utf16_to_utf32(src, dst)).map(|(v, _)| v)
+}
+
+/// UTF-32 → UTF-8 into an exactly-sized vector
+/// (`count::utf8_len_from_utf32` sizes it).
+pub fn utf32_to_utf8_vec(src: &[u32]) -> TranscodeResult<Vec<u8>> {
+    let exact = count::utf8_len_from_utf32(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| utf32_to_utf8(src, dst)).map(|(v, _)| v)
+}
+
+/// UTF-32 → UTF-16 into an exactly-sized vector
+/// (`count::utf16_len_from_utf32` sizes it).
+pub fn utf32_to_utf16_vec(src: &[u32]) -> TranscodeResult<Vec<u16>> {
+    let exact = count::utf16_len_from_utf32(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| utf32_to_utf16(src, dst)).map(|(v, _)| v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +192,26 @@ mod tests {
             let m = utf32_to_utf16(&dst[..n], &mut back).unwrap();
             assert_eq!(&back[..m], &units[..]);
         }
+    }
+
+    #[test]
+    fn exact_vec_helpers_match_buffer_conversions() {
+        for text in SAMPLES {
+            let expected32: Vec<u32> = text.chars().map(|c| c as u32).collect();
+            let v32 = utf8_to_utf32_vec(text.as_bytes()).unwrap();
+            assert_eq!(v32, expected32, "{text}");
+            let units: Vec<u16> = text.encode_utf16().collect();
+            assert_eq!(utf16_to_utf32_vec(&units).unwrap(), expected32, "{text}");
+            let v8 = utf32_to_utf8_vec(&expected32).unwrap();
+            assert_eq!(v8, text.as_bytes(), "{text}");
+            assert_eq!(v8.len(), text.len(), "exact length, {text}");
+            let v16 = utf32_to_utf16_vec(&expected32).unwrap();
+            assert_eq!(v16, units, "{text}");
+            assert_eq!(v16.len(), units.len(), "exact length, {text}");
+        }
+        // Invalid input still yields the structured error.
+        assert!(utf32_to_utf8_vec(&[0x41, 0xD800]).is_err());
+        assert!(utf8_to_utf32_vec(&[0xC0, 0x80]).is_err());
     }
 
     #[test]

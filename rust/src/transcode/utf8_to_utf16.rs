@@ -82,6 +82,10 @@ impl<B: VectorBackend> Utf8ToUtf16 for OurUtf8ToUtf16<B> {
     fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
         convert_impl::<B, false>(src, dst, self.validate, &mut Counters::disabled())
     }
+
+    // `convert_impl` is write-only over `dst` at every width: eligible
+    // for the uninitialized-buffer `*_to_vec` fast paths.
+    crate::transcode::uninit_to_vec_utf8!();
 }
 
 /// Convert with instrumentation (Table 8 support; default backend).
@@ -513,7 +517,9 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
             return Err(classify_utf8_error(src, from));
         }
     }
-    if q + crate::transcode::utf16_len_from_utf8(&src[p..]) > dst.len() {
+    // Scalar predictor on purpose: the tail is shorter than one block
+    // plus margin, below the SIMD counting kernels' break-even.
+    if q + crate::count::utf16_len_from_utf8_scalar(&src[p..]) > dst.len() {
         return Err(TranscodeError::output_buffer(p));
     }
     q += scalar::utf8_to_utf16_unchecked(&src[p..], &mut dst[q..]);

@@ -1,0 +1,320 @@
+//! Differential suite for the counting subsystem (`simdutf_rs::count`)
+//! and the allocation-free `*_to_vec` pipeline.
+//!
+//! Oracles, in increasing independence:
+//!
+//! * the scalar reference kernels (`*_scalar` — the exact code the seed
+//!   predictors ran);
+//! * `std`: `str::encode_utf16().count()`, `str::chars().count()`,
+//!   `char::decode_utf16` widths (`Ok(c) → c.len_utf8()`, `Err → 3` —
+//!   the crate's unpaired-surrogate-counts-3 convention is exactly the
+//!   U+FFFD width);
+//! * the engines themselves: `convert_to_vec_exact` must equal
+//!   `convert_to_vec` must equal the seed's zeroed-buffer path, output
+//!   for output and error for error.
+
+use simdutf_rs::corpus::{generate_collection, Collection, SplitMix64, DIRT_PROFILES};
+use simdutf_rs::count;
+use simdutf_rs::engine::Registry;
+use simdutf_rs::prelude::*;
+
+/// Independent `std` oracle for the UTF-16 → UTF-8 byte predictor.
+fn std_utf8_len_oracle(words: &[u16]) -> usize {
+    char::decode_utf16(words.iter().copied())
+        .map(|r| match r {
+            Ok(c) => c.len_utf8(),
+            Err(_) => 3, // one unpaired surrogate = one U+FFFD = 3 bytes
+        })
+        .sum()
+}
+
+#[test]
+fn kernels_agree_on_every_corpus_profile() {
+    let r = Registry::global();
+    for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+        for corpus in &generate_collection(collection) {
+            // Clean pass: scalar reference AND std agree with every kernel.
+            let text = std::str::from_utf8(&corpus.utf8).expect("corpora are valid");
+            let std_words = text.encode_utf16().count();
+            let std_cps = text.chars().count();
+            for k in r.count_entries() {
+                assert_eq!(
+                    (k.utf16_len_from_utf8)(&corpus.utf8),
+                    std_words,
+                    "{} {}",
+                    k.key,
+                    corpus.name()
+                );
+                assert_eq!(
+                    (k.count_utf8_code_points)(&corpus.utf8),
+                    std_cps,
+                    "{} {}",
+                    k.key,
+                    corpus.name()
+                );
+                assert_eq!(
+                    (k.utf8_len_from_utf16)(&corpus.utf16),
+                    corpus.utf8.len(),
+                    "{} {}",
+                    k.key,
+                    corpus.name()
+                );
+                assert_eq!(
+                    (k.count_utf16_code_points)(&corpus.utf16),
+                    std_cps,
+                    "{} {}",
+                    k.key,
+                    corpus.name()
+                );
+            }
+            // Dirty passes: the kernels are total — every backend must
+            // match the scalar reference on corrupted input too.
+            for (i, &profile) in DIRT_PROFILES.iter().enumerate() {
+                let dirty8 = corpus.dirty_utf8(profile, 0xC0_0317 + i as u64);
+                let dirty16 = corpus.dirty_utf16(profile, 0xC0_0317 + i as u64);
+                let ref_words = count::utf16_len_from_utf8_scalar(&dirty8);
+                let ref_cps8 = count::count_utf8_code_points_scalar(&dirty8);
+                let ref_bytes = count::utf8_len_from_utf16_scalar(&dirty16);
+                let ref_cps16 = count::count_utf16_code_points_scalar(&dirty16);
+                assert_eq!(ref_bytes, std_utf8_len_oracle(&dirty16), "std oracle agrees");
+                for k in r.count_entries() {
+                    assert_eq!(
+                        (k.utf16_len_from_utf8)(&dirty8),
+                        ref_words,
+                        "{} {} {}",
+                        k.key,
+                        corpus.name(),
+                        profile.label
+                    );
+                    assert_eq!(
+                        (k.count_utf8_code_points)(&dirty8),
+                        ref_cps8,
+                        "{} {} {}",
+                        k.key,
+                        corpus.name(),
+                        profile.label
+                    );
+                    assert_eq!(
+                        (k.utf8_len_from_utf16)(&dirty16),
+                        ref_bytes,
+                        "{} {} {}",
+                        k.key,
+                        corpus.name(),
+                        profile.label
+                    );
+                    assert_eq!(
+                        (k.count_utf16_code_points)(&dirty16),
+                        ref_cps16,
+                        "{} {} {}",
+                        k.key,
+                        corpus.name(),
+                        profile.label
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn four_hundred_random_byte_seeds_match_the_scalar_reference() {
+    let r = Registry::global();
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(0xDEAD_0000 + seed);
+        let len = rng.below(700) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() >> 29) as u8).collect();
+        let ref_words = count::utf16_len_from_utf8_scalar(&bytes);
+        let ref_cps = count::count_utf8_code_points_scalar(&bytes);
+        for k in r.count_entries() {
+            assert_eq!((k.utf16_len_from_utf8)(&bytes), ref_words, "{} seed {seed}", k.key);
+            assert_eq!((k.count_utf8_code_points)(&bytes), ref_cps, "{} seed {seed}", k.key);
+        }
+    }
+}
+
+#[test]
+fn four_hundred_random_word_seeds_match_scalar_and_std() {
+    // Surrogate-biased alphabet: the pair/unpaired classification is
+    // the only data-dependent part of the word kernel.
+    const ALPHABET: &[u16] = &[
+        0x0041, 0x007F, 0x0080, 0x07FF, 0x0800, 0xD7FF, 0xD800, 0xDBFF, 0xDC00, 0xDFFF,
+        0xE000, 0xFFFD, 0xFFFF, 0xD800, 0xDC00, 0xDBFF,
+    ];
+    let r = Registry::global();
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(0xBEEF_0000 + seed);
+        let len = rng.below(300) as usize;
+        let words: Vec<u16> =
+            (0..len).map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize]).collect();
+        let ref_bytes = count::utf8_len_from_utf16_scalar(&words);
+        assert_eq!(ref_bytes, std_utf8_len_oracle(&words), "seed {seed}");
+        let ref_cps = count::count_utf16_code_points_scalar(&words);
+        for k in r.count_entries() {
+            assert_eq!((k.utf8_len_from_utf16)(&words), ref_bytes, "{} seed {seed}", k.key);
+            assert_eq!(
+                (k.count_utf16_code_points)(&words),
+                ref_cps,
+                "{} seed {seed}",
+                k.key
+            );
+        }
+    }
+}
+
+#[test]
+fn lane_boundary_and_unpaired_surrogate_edges() {
+    let r = Registry::global();
+    // Pairs, runs and lone surrogates at every offset across the 8- and
+    // 16-lane register boundaries and the SIMD/scalar-tail seam.
+    let patterns: &[&[u16]] = &[
+        &[0xD800, 0xDC00],
+        &[0xD800],
+        &[0xDC00],
+        &[0xD800, 0xD800, 0xDC00],
+        &[0xD800, 0xDC00, 0xDC00],
+        &[0xDC00, 0xD800],
+        &[0xD800, 0xD800, 0xD800],
+        &[0xD800, 0xDC00, 0xD800, 0xDC00],
+    ];
+    for pos in 0..48 {
+        for tail in [0usize, 1, 5, 9] {
+            for pat in patterns {
+                let mut v = vec![0x41u16; pos];
+                v.extend_from_slice(pat);
+                v.extend(std::iter::repeat(0x4242).take(tail));
+                let expected = count::utf8_len_from_utf16_scalar(&v);
+                assert_eq!(expected, std_utf8_len_oracle(&v), "pos={pos} pat={pat:04x?}");
+                for k in r.count_entries() {
+                    assert_eq!(
+                        (k.utf8_len_from_utf16)(&v),
+                        expected,
+                        "{} pos={pos} tail={tail} pat={pat:04x?}",
+                        k.key
+                    );
+                }
+            }
+        }
+    }
+    // UTF-8 side: multi-byte sequences straddling the 64-byte block and
+    // register boundaries (the ASCII fast path must hand over exactly).
+    for pad in 0..80 {
+        let text = format!("{}é漢🙂{}", "x".repeat(pad), "y".repeat(90));
+        let words = text.encode_utf16().count();
+        let cps = text.chars().count();
+        for k in r.count_entries() {
+            assert_eq!((k.utf16_len_from_utf8)(text.as_bytes()), words, "{} pad={pad}", k.key);
+            assert_eq!(
+                (k.count_utf8_code_points)(text.as_bytes()),
+                cps,
+                "{} pad={pad}",
+                k.key
+            );
+        }
+    }
+}
+
+#[test]
+fn convert_to_vec_exact_equals_written_for_every_validating_engine() {
+    let r = Registry::global();
+    for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+        for corpus in &generate_collection(collection) {
+            let expected_words = count::utf16_len_from_utf8(&corpus.utf8);
+            for e in r.utf8_entries() {
+                if !e.engine.validating() || !e.engine.supports_supplemental() {
+                    continue;
+                }
+                let exact = e.engine.convert_to_vec_exact(&corpus.utf8).expect("valid corpus");
+                assert_eq!(
+                    exact.len(),
+                    expected_words,
+                    "{} {}: exact length == counted length",
+                    e.key,
+                    corpus.name()
+                );
+                assert_eq!(
+                    exact,
+                    e.engine.convert_to_vec(&corpus.utf8).unwrap(),
+                    "{} {}",
+                    e.key,
+                    corpus.name()
+                );
+            }
+            let expected_bytes = count::utf8_len_from_utf16(&corpus.utf16);
+            assert_eq!(expected_bytes, corpus.utf8.len());
+            for e in r.utf16_entries() {
+                let exact = e.engine.convert_to_vec_exact(&corpus.utf16).expect("valid corpus");
+                assert_eq!(exact.len(), expected_bytes, "{} {}", e.key, corpus.name());
+                assert_eq!(exact, corpus.utf8, "{} {}", e.key, corpus.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn to_vec_outputs_and_errors_are_identical_to_the_seed_zeroed_path() {
+    // The allocation rework must be invisible: same outputs on clean
+    // input, same structured errors on dirty input, for strict and
+    // lossy, across every validating engine.
+    let r = Registry::global();
+    let corpora = generate_collection(Collection::Lipsum);
+    let profile = DIRT_PROFILES[1];
+    for corpus in corpora.iter().take(4) {
+        let dirty8 = corpus.dirty_utf8(profile, 0x5EED);
+        let dirty16 = corpus.dirty_utf16(profile, 0x5EED);
+        for e in r.utf8_entries() {
+            if !e.engine.validating() {
+                continue;
+            }
+            // Seed path, reconstructed by hand.
+            let mut zeroed = vec![0u16; utf16_capacity_for(dirty8.len())];
+            let seed_result = e.engine.convert(&dirty8, &mut zeroed).map(|n| {
+                zeroed.truncate(n);
+                zeroed
+            });
+            match (seed_result, e.engine.convert_to_vec(&dirty8)) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{}", e.key),
+                (Err(ea), Err(eb)) => assert_eq!(ea, eb, "{}", e.key),
+                (a, b) => panic!("{}: divergent results {a:?} vs {b:?}", e.key),
+            }
+            // Exact path agrees too (validating engine: same error or
+            // same output, never a spurious OutputBuffer).
+            match (e.engine.convert_to_vec(&dirty8), e.engine.convert_to_vec_exact(&dirty8)) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{}", e.key),
+                (Err(ea), Err(eb)) => assert_eq!(ea, eb, "{}", e.key),
+                (a, b) => panic!("{}: divergent exact results {a:?} vs {b:?}", e.key),
+            }
+            // Lossy: byte-identical to std's replacement decoding.
+            let (lossy, info) = e.engine.convert_lossy_to_vec(&dirty8).expect("lossy is total");
+            let expected: Vec<u16> =
+                String::from_utf8_lossy(&dirty8).encode_utf16().collect();
+            assert_eq!(lossy, expected, "{}", e.key);
+            assert_eq!(lossy.len(), info.written, "{}", e.key);
+        }
+        for e in r.utf16_lossy_entries() {
+            let (lossy, info) = e.engine.convert_lossy_to_vec(&dirty16).expect("lossy is total");
+            let expected: Vec<u8> = char::decode_utf16(dirty16.iter().copied())
+                .map(|r| r.unwrap_or(char::REPLACEMENT_CHARACTER))
+                .collect::<String>()
+                .into_bytes();
+            assert_eq!(lossy, expected, "{}", e.key);
+            assert_eq!(lossy.len(), info.written, "{}", e.key);
+        }
+    }
+}
+
+#[test]
+fn utf32_and_endian_exact_vec_helpers() {
+    use simdutf_rs::transcode::{endian, utf32};
+    let text = "utf32 path: ascii é漢🙂 mixed ".repeat(9);
+    let cps: Vec<u32> = text.chars().map(|c| c as u32).collect();
+    let v32 = utf32::utf8_to_utf32_vec(text.as_bytes()).unwrap();
+    assert_eq!(v32, cps);
+    assert_eq!(utf32::utf32_to_utf8_vec(&cps).unwrap(), text.as_bytes());
+    let units: Vec<u16> = text.encode_utf16().collect();
+    assert_eq!(utf32::utf16_to_utf32_vec(&units).unwrap(), cps);
+    assert_eq!(utf32::utf32_to_utf16_vec(&cps).unwrap(), units);
+    let be: Vec<u8> = text.encode_utf16().flat_map(|w| w.to_be_bytes()).collect();
+    let out = endian::utf16be_to_utf8_vec(&be).unwrap();
+    assert_eq!(out, text.as_bytes());
+    assert_eq!(out.len(), text.len());
+}
