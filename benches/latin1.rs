@@ -1,0 +1,132 @@
+//! `cargo bench --bench latin1` — the Latin-1 subsystem sweep.
+//!
+//! Latin-1 is the crate's pure expand/compress workload (ISSUE 5 /
+//! *Unicode at Gigabytes per Second*): every kernel set (`scalar`
+//! reference, `simd128`, `simd256`, `best`) across the four
+//! `latin1 ⇄ utf8/utf16` directions, on two corpora:
+//!
+//! * `mixed` — [`Corpus::latin1`]: word-like ASCII with ~15% of
+//!   characters in `U+00C0..=U+00FF`, so the interleave/compress cores
+//!   do real work;
+//! * `ascii` — the paper's pure-ASCII Latin lipsum profile, where the
+//!   64-byte block fast path should dominate and all kernels converge.
+//!
+//! The `scalar` row is the baseline the SIMD speedup is read against.
+//! Ends with the exact-allocation head-to-head (`latin1_to_utf8_vec`
+//! vs a worst-case zeroed buffer), the one set of cells that times
+//! allocation + conversion together on purpose.
+//!
+//! Budget per cell via `SIMDUTF_BENCH_BUDGET_MS` (default 200 ms).
+
+use simdutf_rs::corpus::{Collection, Corpus, Language};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::harness::{
+    bench_latin1_to_utf16_mbps, bench_latin1_to_utf8_mbps, bench_utf16_to_latin1_mbps,
+    bench_utf8_to_latin1_mbps,
+};
+
+fn main() {
+    let mixed = Corpus::latin1(Collection::Lipsum);
+    let ascii = Corpus::generate(Language::Latin, Collection::Lipsum);
+    let inputs: Vec<(&str, Vec<u8>, &Corpus)> = vec![
+        ("mixed", mixed.latin1_bytes().expect("convertible by construction"), &mixed),
+        ("ascii", ascii.latin1_bytes().expect("pure ASCII"), &ascii),
+    ];
+    let r = Registry::global();
+
+    let header = || {
+        print!("  {:>8}", "");
+        for (label, _, _) in &inputs {
+            print!("  {:>10}", label);
+        }
+        println!();
+    };
+
+    println!(
+        "Latin-1 kernels (input MB/s), lipsum-sized corpora; best = {}",
+        simdutf_rs::simd::best_key()
+    );
+
+    println!("latin1_to_utf8 (expand):");
+    for k in r.latin1_entries() {
+        print!("  {:>8}", k.key);
+        for (_, latin1, _) in &inputs {
+            let v = bench_latin1_to_utf8_mbps(k.latin1_to_utf8, latin1);
+            print!("  {:>10}", format!("{v:.0}"));
+        }
+        println!();
+    }
+    header();
+    println!();
+
+    println!("utf8_to_latin1 (compress):");
+    for k in r.latin1_entries() {
+        print!("  {:>8}", k.key);
+        for (_, _, corpus) in &inputs {
+            let v = bench_utf8_to_latin1_mbps(k.utf8_to_latin1, &corpus.utf8);
+            print!("  {:>10}", format!("{v:.0}"));
+        }
+        println!();
+    }
+    header();
+    println!();
+
+    println!("latin1_to_utf16 (zero-extend):");
+    for k in r.latin1_entries() {
+        print!("  {:>8}", k.key);
+        for (_, latin1, _) in &inputs {
+            let v = bench_latin1_to_utf16_mbps(k.latin1_to_utf16, latin1);
+            print!("  {:>10}", format!("{v:.0}"));
+        }
+        println!();
+    }
+    header();
+    println!();
+
+    println!("utf16_to_latin1 (narrow):");
+    for k in r.latin1_entries() {
+        print!("  {:>8}", k.key);
+        for (_, _, corpus) in &inputs {
+            let v = bench_utf16_to_latin1_mbps(k.utf16_to_latin1, &corpus.utf16);
+            print!("  {:>10}", format!("{v:.0}"));
+        }
+        println!();
+    }
+    header();
+    println!();
+
+    // Allocation head-to-head: the exact-size uninit path vs the seed
+    // idiom (zeroed worst case + truncate). Allocation deliberately
+    // inside the timed region — that is the comparison.
+    use simdutf_rs::transcode::latin1::{latin1_to_utf8_vec, utf8_capacity_for_latin1};
+    use std::time::Instant;
+    let budget_ms: u64 = std::env::var("SIMDUTF_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    println!("latin1_to_utf8 allocation strategies (input MB/s, alloc inside the timed region)");
+    for (label, latin1, _) in &inputs {
+        let time = |f: &dyn Fn() -> usize| {
+            let deadline = Instant::now() + std::time::Duration::from_millis(budget_ms);
+            let mut best = f64::INFINITY;
+            loop {
+                let t0 = Instant::now();
+                std::hint::black_box(f());
+                best = best.min(t0.elapsed().as_secs_f64());
+                if Instant::now() >= deadline {
+                    break;
+                }
+            }
+            latin1.len() as f64 / best / 1e6
+        };
+        let zeroed = time(&|| {
+            let mut dst = vec![0u8; utf8_capacity_for_latin1(latin1.len())];
+            let n = simdutf_rs::transcode::latin1::latin1_to_utf8(latin1, &mut dst)
+                .expect("total");
+            dst.truncate(n);
+            dst.len()
+        });
+        let exact = time(&|| latin1_to_utf8_vec(latin1).expect("total").len());
+        println!("  {label:>8}  zeroed-worst-case {zeroed:>8.0}  exact-uninit {exact:>8.0}");
+    }
+}

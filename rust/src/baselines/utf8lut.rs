@@ -110,10 +110,12 @@ pub struct Utf8LutTranscoder {
 }
 
 impl Utf8LutTranscoder {
+    /// The validating configuration (the paper's Table 6 column).
     pub const fn validating() -> Self {
         Utf8LutTranscoder { mode: LutMode::Validate }
     }
 
+    /// The non-validating "full" configuration (Table 5).
     pub const fn full() -> Self {
         Utf8LutTranscoder { mode: LutMode::Full }
     }

@@ -6,11 +6,17 @@ use std::time::Duration;
 /// Shared, lock-free service statistics.
 #[derive(Default)]
 pub struct ServiceStats {
+    /// Requests submitted (accepted or not).
     pub requests: AtomicU64,
+    /// Requests transcoded successfully.
     pub completed: AtomicU64,
+    /// Requests shed by backpressure (or submitted after shutdown).
     pub rejected: AtomicU64,
+    /// Requests rejected for invalid input (strict mode).
     pub invalid: AtomicU64,
+    /// Input bytes of completed requests.
     pub bytes_in: AtomicU64,
+    /// Output bytes of completed requests.
     pub bytes_out: AtomicU64,
     /// Code points transcoded (the paper's format-oblivious throughput
     /// unit), counted by the shared [`crate::count`] kernels — a
@@ -25,6 +31,8 @@ pub struct ServiceStats {
 }
 
 impl ServiceStats {
+    /// Record one successful conversion (bytes, code points and the
+    /// request latency).
     pub fn record_completion(
         &self,
         bytes_in: usize,
@@ -48,6 +56,7 @@ impl ServiceStats {
         }
     }
 
+    /// A consistent-enough copy of the counters for reporting.
     pub fn snapshot(&self) -> StatsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let total_ns = self.latency_ns_total.load(Ordering::Relaxed);
@@ -73,11 +82,17 @@ impl ServiceStats {
 /// A point-in-time copy of the service counters.
 #[derive(Clone, Copy, Debug)]
 pub struct StatsSnapshot {
+    /// Requests submitted (accepted or not).
     pub requests: u64,
+    /// Requests transcoded successfully.
     pub completed: u64,
+    /// Requests shed by backpressure (or submitted after shutdown).
     pub rejected: u64,
+    /// Requests rejected for invalid input (strict mode).
     pub invalid: u64,
+    /// Input bytes of completed requests.
     pub bytes_in: u64,
+    /// Output bytes of completed requests.
     pub bytes_out: u64,
     /// Code points transcoded (surrogate pairs count one; see
     /// [`ServiceStats::chars`]).
@@ -85,7 +100,9 @@ pub struct StatsSnapshot {
     /// U+FFFD replacements emitted by lossy requests (0 when the
     /// workload is strict or clean).
     pub replacements: u64,
+    /// Mean per-request service latency (queue + conversion).
     pub mean_latency: Duration,
+    /// Worst per-request service latency seen.
     pub max_latency: Duration,
 }
 

@@ -14,8 +14,15 @@ use std::time::Instant;
 /// Transcoding direction of a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
+    /// UTF-8 payload → UTF-16 output.
     Utf8ToUtf16,
+    /// UTF-16 payload → UTF-8 output.
     Utf16ToUtf8,
+    /// Latin-1 payload → UTF-8 output (legacy-data ingest).
+    Latin1ToUtf8,
+    /// UTF-8 payload → Latin-1 output (legacy-system egress; strict —
+    /// fails on code points above `U+00FF`).
+    Utf8ToLatin1,
 }
 
 /// Which engine the worker pool runs.
@@ -47,10 +54,22 @@ pub enum Payload {
     Utf8(Vec<u8>),
     /// Native-order UTF-16 words to convert to UTF-8.
     Utf16(Vec<u16>),
+    /// Latin-1 bytes to convert to UTF-8. Total (every byte sequence is
+    /// valid Latin-1); the `lossy` flag is irrelevant.
+    Latin1(Vec<u8>),
+    /// UTF-8 bytes to convert **strictly** to Latin-1: fails with
+    /// [`crate::transcode::ErrorKind::TooLarge`] at the first code
+    /// point above `U+00FF` (there is no lossy Latin-1 mode — U+FFFD
+    /// itself does not fit in Latin-1, so the `lossy` flag is ignored).
+    Utf8ToLatin1(Vec<u8>),
 }
 
+/// One transcoding request: a payload (which implies the direction)
+/// plus the conversion policy.
 pub struct Request {
+    /// Caller-chosen id, echoed in the [`Response`].
     pub id: u64,
+    /// The input and its encoding (see [`Payload`]).
     pub payload: Payload,
     /// Lossy mode: invalid input is transcoded anyway, each maximal
     /// invalid subpart / unpaired surrogate replaced with U+FFFD; the
@@ -62,10 +81,12 @@ pub struct Request {
 }
 
 impl Request {
+    /// A strict UTF-8 → UTF-16 request.
     pub fn utf8(id: u64, data: Vec<u8>) -> Request {
         Request { id, payload: Payload::Utf8(data), lossy: false }
     }
 
+    /// A strict UTF-16 → UTF-8 request.
     pub fn utf16(id: u64, data: Vec<u16>) -> Request {
         Request { id, payload: Payload::Utf16(data), lossy: false }
     }
@@ -81,33 +102,54 @@ impl Request {
         Request { id, payload: Payload::Utf16(data), lossy: true }
     }
 
+    /// A Latin-1 → UTF-8 request (total — cannot fail on content).
+    pub fn latin1(id: u64, data: Vec<u8>) -> Request {
+        Request { id, payload: Payload::Latin1(data), lossy: false }
+    }
+
+    /// A strict UTF-8 → Latin-1 request (fails on code points above
+    /// `U+00FF`).
+    pub fn utf8_to_latin1(id: u64, data: Vec<u8>) -> Request {
+        Request { id, payload: Payload::Utf8ToLatin1(data), lossy: false }
+    }
+
+    /// The conversion this request asks for (implied by the payload).
     pub fn direction(&self) -> Direction {
         match self.payload {
             Payload::Utf8(_) => Direction::Utf8ToUtf16,
             Payload::Utf16(_) => Direction::Utf16ToUtf8,
+            Payload::Latin1(_) => Direction::Latin1ToUtf8,
+            Payload::Utf8ToLatin1(_) => Direction::Utf8ToLatin1,
         }
     }
 
     fn input_bytes(&self) -> usize {
         match &self.payload {
-            Payload::Utf8(b) => b.len(),
+            Payload::Utf8(b) | Payload::Latin1(b) | Payload::Utf8ToLatin1(b) => b.len(),
             Payload::Utf16(w) => w.len() * 2,
         }
     }
 }
 
-/// Successful conversion output (the opposite encoding of the payload).
+/// Successful conversion output (the target encoding of the payload).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Output {
+    /// UTF-16 words (from a [`Payload::Utf8`] request).
     Utf16(Vec<u16>),
+    /// UTF-8 bytes (from a [`Payload::Utf16`] or [`Payload::Latin1`]
+    /// request).
     Utf8(Vec<u8>),
+    /// Latin-1 bytes (from a [`Payload::Utf8ToLatin1`] request).
+    Latin1(Vec<u8>),
 }
 
 /// A transcoding response: the output, or the structured error (kind +
 /// input position) the engine reported.
 #[derive(Debug)]
 pub struct Response {
+    /// The id of the request this answers.
     pub id: u64,
+    /// The output, or the structured error the engine reported.
     pub result: Result<Output, TranscodeError>,
     /// U+FFFD replacements in the output (always 0 for strict requests;
     /// for lossy requests, 0 iff the input was valid).
@@ -153,6 +195,23 @@ impl Response {
     pub fn into_utf8(self) -> Option<Vec<u8>> {
         match self.result {
             Ok(Output::Utf8(b)) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Latin-1 output bytes (for a [`Payload::Utf8ToLatin1`] request
+    /// that succeeded).
+    pub fn latin1(&self) -> Option<&[u8]> {
+        match &self.result {
+            Ok(Output::Latin1(b)) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Consume the response, returning Latin-1 output if present.
+    pub fn into_latin1(self) -> Option<Vec<u8>> {
+        match self.result {
+            Ok(Output::Latin1(b)) => Some(b),
             _ => None,
         }
     }
@@ -206,6 +265,7 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Bounded queue depth — the backpressure knob.
     pub queue_depth: usize,
+    /// The engine the worker pool runs (see [`EngineChoice`]).
     pub engine: EngineChoice,
 }
 
@@ -331,6 +391,7 @@ impl TranscodeService {
         self.submit(request).recv().expect("worker alive")
     }
 
+    /// A snapshot of the service counters.
     pub fn stats(&self) -> super::StatsSnapshot {
         self.stats.snapshot()
     }
@@ -347,12 +408,31 @@ impl TranscodeService {
 }
 
 enum WorkerEngine {
-    /// Any pair of registry engines behind trait objects.
-    Native { to16: Arc<dyn Utf8ToUtf16>, to8: Arc<dyn Utf16ToUtf8> },
+    /// Any pair of registry engines behind trait objects, plus the
+    /// Latin-1 kernel set serving [`Payload::Latin1`] /
+    /// [`Payload::Utf8ToLatin1`] requests (kernels, not engines — the
+    /// set is pinned by key when the worker's engine key names one,
+    /// `best` otherwise).
+    Native {
+        to16: Arc<dyn Utf8ToUtf16>,
+        to8: Arc<dyn Utf16ToUtf8>,
+        latin1: &'static crate::transcode::latin1::Latin1Kernels,
+    },
     Xla(Box<XlaEngine>),
 }
 
-fn resolve_native(to16_key: &str, to8_key: &str) -> WorkerEngine {
+/// The Latin-1 kernel set for a worker keyed `key`: the matching
+/// registry entry (`scalar`/`simd128`/`simd256`/`best`), or `best` for
+/// engine keys with no Latin-1 analogue (`icu`, `llvm`, ...).
+fn resolve_latin1(key: &str) -> &'static crate::transcode::latin1::Latin1Kernels {
+    let entries = crate::transcode::latin1::kernel_entries();
+    entries
+        .into_iter()
+        .find(|k| k.key.eq_ignore_ascii_case(key))
+        .unwrap_or(entries[3]) // `best`
+}
+
+fn resolve_native(to16_key: &str, to8_key: &str, latin1_key: &str) -> WorkerEngine {
     let r = Registry::global();
     WorkerEngine::Native {
         to16: r
@@ -363,16 +443,17 @@ fn resolve_native(to16_key: &str, to8_key: &str) -> WorkerEngine {
             .get_utf16_arc(to8_key)
             .or_else(|| r.get_utf16_arc("ours"))
             .expect("registry always has ours"),
+        latin1: resolve_latin1(latin1_key),
     }
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: EngineChoice) {
     let engine = match &choice {
         EngineChoice::Simd { validate } => {
-            resolve_native(if *validate { "best" } else { "best-nv" }, "best")
+            resolve_native(if *validate { "best" } else { "best-nv" }, "best", "best")
         }
-        EngineChoice::Scalar => resolve_native("icu", "icu"),
-        EngineChoice::Named(name) => resolve_native(name, name),
+        EngineChoice::Scalar => resolve_native("icu", "icu", "scalar"),
+        EngineChoice::Named(name) => resolve_native(name, name, name),
         EngineChoice::Xla { artifacts_dir } => match XlaEngine::load(artifacts_dir) {
             Ok(engine) => WorkerEngine::Xla(Box::new(engine)),
             Err(e) => {
@@ -399,6 +480,8 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
         let (out_bytes, chars) = match &response.result {
             Ok(Output::Utf16(w)) => (w.len() * 2, crate::count::count_utf16_code_points(w)),
             Ok(Output::Utf8(b)) => (b.len(), crate::count::count_utf8_code_points(b)),
+            // Latin-1 is one code point per byte by construction.
+            Ok(Output::Latin1(b)) => (b.len(), b.len()),
             Err(_) => (0, 0),
         };
         if response.ok() {
@@ -423,6 +506,33 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
 fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
     let mut replacements = 0usize;
     let result = match (&request.payload, engine) {
+        // Latin-1 legs: direction-less kernel sets, not per-engine
+        // trait objects — the XLA graph has no Latin-1 path, so those
+        // workers use the `best` set. Strict responses are exact-sized
+        // (one counting pass + an uninitialized, slack-capacity fill),
+        // like every other strict arm.
+        (Payload::Latin1(src), eng) => {
+            let k: &'static crate::transcode::latin1::Latin1Kernels = match eng {
+                WorkerEngine::Native { latin1, .. } => *latin1,
+                WorkerEngine::Xla(_) => resolve_latin1("best"),
+            };
+            let exact = (k.utf8_len_from_latin1)(src);
+            crate::transcode::fill_uninit(exact + crate::transcode::EXACT_SLACK, |dst| {
+                (k.latin1_to_utf8)(src, dst)
+            })
+            .map(|(v, _)| Output::Utf8(v))
+        }
+        (Payload::Utf8ToLatin1(src), eng) => {
+            let k: &'static crate::transcode::latin1::Latin1Kernels = match eng {
+                WorkerEngine::Native { latin1, .. } => *latin1,
+                WorkerEngine::Xla(_) => resolve_latin1("best"),
+            };
+            let exact = crate::count::latin1_len_from_utf8(src);
+            crate::transcode::fill_uninit(exact + crate::transcode::EXACT_SLACK, |dst| {
+                (k.utf8_to_latin1)(src, dst)
+            })
+            .map(|(v, _)| Output::Latin1(v))
+        }
         (Payload::Utf8(src), WorkerEngine::Native { to16, .. }) => {
             if request.lossy {
                 to16.convert_lossy_to_vec(src).map(|(words, r)| {
@@ -619,6 +729,35 @@ mod tests {
         assert_eq!(snap.replacements, 3);
         assert_eq!(snap.invalid, 1, "only the strict request counts as invalid");
         svc.shutdown();
+    }
+
+    #[test]
+    fn latin1_requests_round_trip_with_structured_errors() {
+        let svc = service(EngineChoice::Simd { validate: true });
+        // Every byte value, several times over: the ingest leg is total.
+        let latin1: Vec<u8> = (0u8..=255).cycle().take(1000).collect();
+        let expected_utf8: Vec<u8> =
+            latin1.iter().map(|&b| b as char).collect::<String>().into_bytes();
+        let resp = svc.transcode(Request::latin1(1, latin1.clone()));
+        assert_eq!(resp.utf8().expect("latin1 ingest yields UTF-8"), &expected_utf8[..]);
+        assert!(resp.latin1().is_none(), "ingest output is UTF-8, not Latin-1");
+        // Egress leg: back to the exact Latin-1 bytes.
+        let resp2 = svc.transcode(Request::utf8_to_latin1(2, expected_utf8.clone()));
+        assert_eq!(resp2.latin1().expect("convertible"), &latin1[..]);
+        // Non-convertible UTF-8 fails with TooLarge at the right byte.
+        let bad = "ab\u{0100}cd".to_string().into_bytes();
+        let resp3 = svc.transcode(Request::utf8_to_latin1(3, bad));
+        let err = resp3.error().expect("structured error");
+        assert_eq!((err.kind, err.position), (ErrorKind::TooLarge, 2));
+        // Stats: Latin-1 output counts one code point per byte.
+        let snap = svc.stats();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.invalid, 1);
+        assert_eq!(snap.chars, 2 * latin1.len() as u64);
+        svc.shutdown();
+        // Direction is implied by the payload.
+        assert_eq!(Request::latin1(9, vec![]).direction(), Direction::Latin1ToUtf8);
+        assert_eq!(Request::utf8_to_latin1(9, vec![]).direction(), Direction::Utf8ToLatin1);
     }
 
     #[test]

@@ -44,9 +44,13 @@ impl Collection {
 /// A generated dataset in both encodings.
 #[derive(Clone)]
 pub struct Corpus {
+    /// The language whose Table 4 profile generated this corpus.
     pub language: Language,
+    /// Which collection's profile was used.
     pub collection: Collection,
+    /// The corpus text in UTF-8.
     pub utf8: Vec<u8>,
+    /// The same text in UTF-16 (native word order).
     pub utf16: Vec<u16>,
 }
 
@@ -64,14 +68,22 @@ pub struct CorpusStats {
 }
 
 impl Corpus {
-    /// Generate the corpus for `language` in `collection`.
-    pub fn generate(language: Language, collection: Collection) -> Corpus {
-        let profile = language.profile(collection);
+    /// The generation core every corpus constructor funnels through:
+    /// characters drawn i.i.d. from `profile`, the ASCII budget spent
+    /// on word-like text (a space every ~6 characters), seeded by
+    /// FNV-1a over `seed_name` + the collection so each dataset is
+    /// deterministic and distinct.
+    fn generate_with(
+        profile: profiles::Profile,
+        seed_name: &str,
+        language: Language,
+        collection: Collection,
+    ) -> Corpus {
         let target = collection.target_utf8_bytes();
         let seed = {
             // FNV-1a over the dataset identity for a stable seed.
             let mut h = 0xcbf29ce484222325u64;
-            for b in language.name().bytes().chain(format!("{collection:?}").bytes()) {
+            for b in seed_name.bytes().chain(format!("{collection:?}").bytes()) {
                 h ^= b as u64;
                 h = h.wrapping_mul(0x100000001b3);
             }
@@ -102,6 +114,16 @@ impl Corpus {
         let text = String::from_utf8(utf8).expect("generator emits valid UTF-8");
         let utf16: Vec<u16> = text.encode_utf16().collect();
         Corpus { language, collection, utf8: text.into_bytes(), utf16 }
+    }
+
+    /// Generate the corpus for `language` in `collection`.
+    pub fn generate(language: Language, collection: Collection) -> Corpus {
+        Corpus::generate_with(
+            language.profile(collection),
+            language.name(),
+            language,
+            collection,
+        )
     }
 
     /// Dataset name as the paper prints it.
@@ -146,6 +168,39 @@ impl Corpus {
         }
     }
 
+    /// The Latin-1 exercise corpus: word-like ASCII with ~15% of
+    /// characters drawn from `U+00C0..=U+00FF` — the Latin profile's
+    /// 2-byte budget **clamped to the Latin-1 range** (the paper's
+    /// Latin lipsum dataset is pure ASCII, which would leave the
+    /// expand/compress paths of [`crate::transcode::latin1`] cold).
+    /// The `utf8`/`utf16` fields hold the usual encodings; the Latin-1
+    /// encoding itself comes from [`Corpus::latin1_bytes`] (always
+    /// `Some` for this corpus). Deterministic, like every generator
+    /// here.
+    pub fn latin1(collection: Collection) -> Corpus {
+        Corpus::generate_with(
+            profiles::Profile {
+                pct: [85.0, 15.0, 0.0, 0.0],
+                two_byte: &[(0x00C0, 0x00FF)],
+                // Unreachable at 0%; any single-point ranges satisfy
+                // the class-length invariants.
+                three_byte: &[(0x0800, 0x0800)],
+                four_byte: &[(0x1F300, 0x1F300)],
+            },
+            "Latin-1",
+            Language::Latin,
+            collection,
+        )
+    }
+
+    /// The Latin-1 encoding of this corpus, when every code point fits
+    /// (`<= U+00FF`): `Some` for [`Corpus::latin1`] and the pure-ASCII
+    /// Latin lipsum dataset, `None` for every multi-script corpus.
+    pub fn latin1_bytes(&self) -> Option<Vec<u8>> {
+        let s = std::str::from_utf8(&self.utf8).ok()?;
+        s.chars().map(|c| u8::try_from(c as u32).ok()).collect()
+    }
+
     /// A UTF-8 prefix of at most `n` bytes, trimmed back to a character
     /// boundary (used by the Fig. 7 input-size sweep).
     pub fn utf8_prefix(&self, n: usize) -> &[u8] {
@@ -172,6 +227,7 @@ impl Corpus {
 /// and in the differential suite.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DirtProfile {
+    /// Cell-name suffix in `bench-json` (`dirty1`, `dirty10`, ...).
     pub label: &'static str,
     /// Mutated units per 1000 (a unit is a byte for UTF-8, a word for
     /// UTF-16).
@@ -337,6 +393,32 @@ mod tests {
     fn latin_corpus_is_pure_ascii() {
         let corpus = Corpus::generate(Language::Latin, Collection::Lipsum);
         assert!(crate::simd::is_ascii(&corpus.utf8));
+    }
+
+    #[test]
+    fn latin1_corpus_is_convertible_and_mixed() {
+        for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+            let corpus = Corpus::latin1(collection);
+            assert!(std::str::from_utf8(&corpus.utf8).is_ok());
+            assert!(crate::validate::validate_latin1_convertible(&corpus.utf8));
+            assert!(crate::validate::utf16_latin1_convertible(&corpus.utf16));
+            let latin1 = corpus.latin1_bytes().expect("convertible by construction");
+            // The whole point: both byte classes are exercised.
+            assert!(latin1.iter().any(|&b| b < 0x80));
+            assert!(latin1.iter().any(|&b| b >= 0x80));
+            assert_eq!(latin1.len(), corpus.utf16.len(), "one word per Latin-1 byte");
+            // Deterministic and distinct across collections.
+            assert_eq!(corpus.utf8, Corpus::latin1(collection).utf8);
+            // Encoding round trip through the latin1 kernels.
+            let again = crate::transcode::latin1::latin1_to_utf8_vec(&latin1).unwrap();
+            assert_eq!(again, corpus.utf8);
+        }
+        // Multi-script corpora have no Latin-1 encoding.
+        assert!(Corpus::generate(Language::Japanese, Collection::Lipsum)
+            .latin1_bytes()
+            .is_none());
+        // The pure-ASCII Latin lipsum dataset trivially has one.
+        assert!(Corpus::generate(Language::Latin, Collection::Lipsum).latin1_bytes().is_some());
     }
 
     #[test]

@@ -6,6 +6,7 @@ use super::Collection;
 
 /// The languages of Table 4 (union of both collections).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // the variants are the Table 4 dataset names
 pub enum Language {
     Arabic,
     Chinese,

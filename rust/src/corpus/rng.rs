@@ -8,11 +8,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// A generator seeded with `seed` (same seed, same stream).
     pub fn new(seed: u64) -> SplitMix64 {
         SplitMix64 { state: seed }
     }
 
     #[inline]
+    /// The next 64 uniformly distributed bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;

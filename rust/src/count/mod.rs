@@ -20,6 +20,8 @@
 //! | [`utf8_len_from_utf16`] | 1/2/3 bytes per word, 4 per surrogate pair | UTF-8 bytes |
 //! | [`count_utf8_code_points`] | non-continuation bytes | code points |
 //! | [`count_utf16_code_points`] | words minus high surrogates | code points |
+//! | [`utf8_len_from_latin1`] | 1 per ASCII byte, 2 per `>= 0x80` | UTF-8 bytes |
+//! | [`latin1_len_from_utf8`] | code points (= non-continuation bytes) | Latin-1 bytes |
 //!
 //! Each exists in three flavors: a scalar reference (`*_scalar`), a
 //! backend-generic SIMD kernel (`*_with::<B>`), and a runtime-dispatched
@@ -242,6 +244,91 @@ pub fn count_utf16_code_points_with<B: VectorBackend>(src: &[u16]) -> usize {
 }
 
 // ---------------------------------------------------------------------------
+// Latin-1 predictors. Latin-1 is a fixed-width superset-of-ASCII byte
+// encoding, so its predictors are one movemask away: a Latin-1 byte
+// becomes 1 UTF-8 byte when ASCII and 2 otherwise, and always exactly
+// one UTF-16 word / UTF-32 value.
+
+/// Scalar reference: UTF-8 bytes needed for Latin-1 input (1 per ASCII
+/// byte, 2 per byte `>= 0x80`). Total — every byte slice is valid
+/// Latin-1.
+pub fn utf8_len_from_latin1_scalar(src: &[u8]) -> usize {
+    let mut n = src.len();
+    for &b in src {
+        n += (b >= 0x80) as usize;
+    }
+    n
+}
+
+/// SIMD [`utf8_len_from_latin1_scalar`] on backend `B`: 64-byte ASCII
+/// blocks short-circuit, otherwise one movemask + popcount per
+/// register.
+pub fn utf8_len_from_latin1_with<B: VectorBackend>(src: &[u8]) -> usize {
+    let w = B::WIDTH;
+    let mut n = 0usize;
+    let mut p = 0usize;
+    while p + 64 <= src.len() {
+        let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
+        if is_ascii_block(block) {
+            n += 64;
+            p += 64;
+            continue;
+        }
+        let mut off = 0usize;
+        while off + w <= 64 {
+            let v = <B::Bytes as SimdBytes>::load(&src[p + off..]);
+            n += w + v.movemask().count_ones() as usize;
+            off += w;
+        }
+        p += 64;
+    }
+    n + utf8_len_from_latin1_scalar(&src[p..])
+}
+
+/// UTF-8 bytes needed for Latin-1 input, on the widest usable backend.
+#[inline]
+pub fn utf8_len_from_latin1(src: &[u8]) -> usize {
+    if crate::simd::best_key() == V256::KEY {
+        utf8_len_from_latin1_with::<V256>(src)
+    } else {
+        utf8_len_from_latin1_with::<V128>(src)
+    }
+}
+
+/// Scalar reference: Latin-1 bytes needed for UTF-8 input — one per
+/// code point, i.e. exactly [`count_utf8_code_points_scalar`]. An
+/// upper bound on what [`crate::transcode::latin1::utf8_to_latin1`]
+/// writes for *any* input (conversion stops at the first
+/// non-convertible sequence).
+#[inline]
+pub fn latin1_len_from_utf8_scalar(src: &[u8]) -> usize {
+    count_utf8_code_points_scalar(src)
+}
+
+/// Latin-1 bytes needed for UTF-8 input, on the widest usable backend
+/// (the code-point count — see [`latin1_len_from_utf8_scalar`]).
+#[inline]
+pub fn latin1_len_from_utf8(src: &[u8]) -> usize {
+    count_utf8_code_points(src)
+}
+
+/// UTF-16 words needed for Latin-1 input: exactly one per byte (no
+/// Latin-1 value needs a surrogate pair).
+#[inline]
+pub fn utf16_len_from_latin1(src: &[u8]) -> usize {
+    src.len()
+}
+
+/// Latin-1 bytes needed for UTF-16 input: one per word — exact for
+/// convertible input (every code point `<= U+00FF` is one word and one
+/// byte) and an upper bound otherwise (conversion stops at the first
+/// out-of-range word).
+#[inline]
+pub fn latin1_len_from_utf16(src: &[u16]) -> usize {
+    src.len()
+}
+
+// ---------------------------------------------------------------------------
 // UTF-32 predictors (fixed-width input: the branch-free scalar loops
 // autovectorize; no table machinery is needed).
 
@@ -279,9 +366,13 @@ pub fn utf16_len_from_utf32(src: &[u32]) -> usize {
 pub struct CountKernels {
     /// `"scalar"`, `"simd128"`, `"simd256"` or `"best"`.
     pub key: &'static str,
+    /// UTF-16 words needed for UTF-8 input.
     pub utf16_len_from_utf8: fn(&[u8]) -> usize,
+    /// UTF-8 bytes needed for UTF-16 input.
     pub utf8_len_from_utf16: fn(&[u16]) -> usize,
+    /// Code points in UTF-8 input.
     pub count_utf8_code_points: fn(&[u8]) -> usize,
+    /// Code points in UTF-16 input.
     pub count_utf16_code_points: fn(&[u16]) -> usize,
 }
 
@@ -472,6 +563,29 @@ mod tests {
             let cps: Vec<u32> = text.chars().map(|c| c as u32).collect();
             assert_eq!(utf8_len_from_utf32(&cps), text.len(), "{text}");
             assert_eq!(utf16_len_from_utf32(&cps), text.encode_utf16().count(), "{text}");
+        }
+    }
+
+    #[test]
+    fn latin1_predictors_match_std() {
+        // Every byte value is valid Latin-1; `b as char` is the oracle.
+        let mut state = 0x0DDB_A11_5EEDu64;
+        for len in [0usize, 1, 15, 16, 17, 63, 64, 65, 127, 200, 513] {
+            let mut bytes = vec![0u8; len];
+            for b in bytes.iter_mut() {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *b = (state >> 33) as u8;
+            }
+            let text: String = bytes.iter().map(|&b| b as char).collect();
+            let expected = text.len(); // UTF-8 length
+            assert_eq!(utf8_len_from_latin1_scalar(&bytes), expected, "len={len}");
+            assert_eq!(utf8_len_from_latin1_with::<V128>(&bytes), expected, "len={len}");
+            assert_eq!(utf8_len_from_latin1_with::<V256>(&bytes), expected, "len={len}");
+            assert_eq!(utf8_len_from_latin1(&bytes), expected, "len={len}");
+            assert_eq!(latin1_len_from_utf8(text.as_bytes()), bytes.len(), "len={len}");
+            assert_eq!(utf16_len_from_latin1(&bytes), text.encode_utf16().count());
+            let words: Vec<u16> = text.encode_utf16().collect();
+            assert_eq!(latin1_len_from_utf16(&words), bytes.len());
         }
     }
 

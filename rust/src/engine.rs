@@ -61,6 +61,7 @@ use std::sync::{Arc, LazyLock};
 pub struct Utf8Entry {
     /// Stable registry key (lower-case, unique).
     pub key: &'static str,
+    /// The engine, shared (workers clone the handle).
     pub engine: Arc<dyn Utf8ToUtf16>,
     /// True iff the entry belongs to the paper's evaluation column sets
     /// (width-explicit aliases of our engine do not).
@@ -69,8 +70,12 @@ pub struct Utf8Entry {
 
 /// A registered UTF-16 → UTF-8 engine.
 pub struct Utf16Entry {
+    /// Stable registry key (lower-case, unique).
     pub key: &'static str,
+    /// The engine, shared (workers clone the handle).
     pub engine: Arc<dyn Utf16ToUtf8>,
+    /// True iff the entry belongs to the paper's evaluation column
+    /// sets (see [`Utf8Entry::paper`]).
     pub paper: bool,
 }
 
@@ -248,6 +253,16 @@ impl Registry {
         crate::count::kernel_entries()
     }
 
+    /// The Latin-1 kernel sets ([`crate::transcode::latin1`]) per
+    /// backend key — `scalar` (reference), `simd128`, `simd256` and the
+    /// runtime-dispatched `best`, exactly like
+    /// [`Registry::count_entries`]. The Latin-1 benches, the CLI's
+    /// `transcode --from/--to latin1` and the differential suite
+    /// enumerate kernels through this accessor.
+    pub fn latin1_entries(&self) -> [&'static crate::transcode::latin1::Latin1Kernels; 4] {
+        crate::transcode::latin1::kernel_entries()
+    }
+
     /// All registry keys with their directions, for CLI help/listings:
     /// `(key, display name, validating, has 8→16, has 16→8)`.
     pub fn describe(&self) -> Vec<(&'static str, &'static str, bool, bool, bool)> {
@@ -384,6 +399,26 @@ mod tests {
                 "{}",
                 k.key
             );
+        }
+    }
+
+    #[test]
+    fn latin1_entries_cover_every_backend_and_agree() {
+        let r = Registry::global();
+        let entries = r.latin1_entries();
+        let keys: Vec<&str> = entries.iter().map(|k| k.key).collect();
+        assert_eq!(keys, ["scalar", "simd128", "simd256", "best"]);
+        let latin1: Vec<u8> = (0u8..=255).cycle().take(700).collect();
+        let text: String = latin1.iter().map(|&b| b as char).collect();
+        for k in entries {
+            let mut dst =
+                vec![0u8; crate::transcode::latin1::utf8_capacity_for_latin1(latin1.len())];
+            let n = (k.latin1_to_utf8)(&latin1, &mut dst).expect("total");
+            assert_eq!(&dst[..n], text.as_bytes(), "{}", k.key);
+            let mut back = vec![0u8; crate::transcode::latin1::latin1_capacity_for(n)];
+            let nb = (k.utf8_to_latin1)(&dst[..n], &mut back).expect("convertible");
+            assert_eq!(&back[..nb], &latin1[..], "{}", k.key);
+            assert_eq!((k.utf8_len_from_latin1)(&latin1), text.len(), "{}", k.key);
         }
     }
 

@@ -15,8 +15,11 @@ use std::time::{Duration, Instant};
 /// One measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchResult {
+    /// Fastest single iteration (the number the tables report).
     pub min: Duration,
+    /// Mean over all iterations.
     pub mean: Duration,
+    /// Iterations executed within the budget.
     pub iters: u64,
 }
 

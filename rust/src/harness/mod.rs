@@ -532,6 +532,98 @@ pub fn bench_count_utf8_mbps(f: fn(&[u8]) -> usize, bytes: &[u8]) -> f64 {
     bytes.len() as f64 / r.min.as_secs_f64() / 1e6
 }
 
+/// Measure one byte→byte Latin-1 kernel (either direction); the output
+/// buffer is allocated outside the timed closure, per the timing
+/// policy.
+fn measure_latin1_bytes(
+    f: fn(&[u8], &mut [u8]) -> crate::transcode::TranscodeResult,
+    src: &[u8],
+    cap: usize,
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    let mut dst = vec![0u8; cap];
+    measure(
+        || {
+            let n = f(std::hint::black_box(src), &mut dst).expect("input is convertible");
+            std::hint::black_box(n);
+        },
+        budget,
+        3,
+    )
+}
+
+/// Latin-1 → UTF-8 kernel throughput, input MB/s.
+pub fn bench_latin1_to_utf8_mbps(
+    f: fn(&[u8], &mut [u8]) -> crate::transcode::TranscodeResult,
+    latin1: &[u8],
+) -> f64 {
+    let cap = crate::transcode::latin1::utf8_capacity_for_latin1(latin1.len());
+    let r = measure_latin1_bytes(f, latin1, cap, default_budget());
+    latin1.len() as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// UTF-8 → Latin-1 kernel throughput, input MB/s.
+pub fn bench_utf8_to_latin1_mbps(
+    f: fn(&[u8], &mut [u8]) -> crate::transcode::TranscodeResult,
+    utf8: &[u8],
+) -> f64 {
+    let cap = crate::transcode::latin1::latin1_capacity_for(utf8.len());
+    let r = measure_latin1_bytes(f, utf8, cap, default_budget());
+    utf8.len() as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// Measure the Latin-1 → UTF-16 (widening) kernel.
+fn measure_latin1_widen(
+    f: fn(&[u8], &mut [u16]) -> crate::transcode::TranscodeResult,
+    src: &[u8],
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    let mut dst = vec![0u16; crate::transcode::utf16_capacity_for(src.len())];
+    measure(
+        || {
+            let n = f(std::hint::black_box(src), &mut dst).expect("total");
+            std::hint::black_box(n);
+        },
+        budget,
+        3,
+    )
+}
+
+/// Measure the UTF-16 → Latin-1 (narrowing) kernel.
+fn measure_latin1_narrow(
+    f: fn(&[u16], &mut [u8]) -> crate::transcode::TranscodeResult,
+    words: &[u16],
+    budget: std::time::Duration,
+) -> bench::BenchResult {
+    let mut dst = vec![0u8; crate::transcode::latin1::latin1_capacity_for(words.len())];
+    measure(
+        || {
+            let n = f(std::hint::black_box(words), &mut dst).expect("input is convertible");
+            std::hint::black_box(n);
+        },
+        budget,
+        3,
+    )
+}
+
+/// Latin-1 → UTF-16 kernel throughput, input MB/s.
+pub fn bench_latin1_to_utf16_mbps(
+    f: fn(&[u8], &mut [u16]) -> crate::transcode::TranscodeResult,
+    latin1: &[u8],
+) -> f64 {
+    let r = measure_latin1_widen(f, latin1, default_budget());
+    latin1.len() as f64 / r.min.as_secs_f64() / 1e6
+}
+
+/// UTF-16 → Latin-1 kernel throughput, input MB/s.
+pub fn bench_utf16_to_latin1_mbps(
+    f: fn(&[u16], &mut [u8]) -> crate::transcode::TranscodeResult,
+    words: &[u16],
+) -> f64 {
+    let r = measure_latin1_narrow(f, words, default_budget());
+    (words.len() * 2) as f64 / r.min.as_secs_f64() / 1e6
+}
+
 /// Counting-kernel throughput on words, input MB/s.
 pub fn bench_count_utf16_mbps(f: fn(&[u16]) -> usize, words: &[u16]) -> f64 {
     let r = measure_count_utf16(f, words, default_budget());
@@ -915,8 +1007,93 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
     let alloc_sections: Vec<(&str, Vec<(&str, Vec<(String, Option<f64>)>)>)> =
         vec![("utf8_to_utf16", alloc8_rows), ("utf16_to_utf8", alloc16_rows)];
 
+    // Latin-1 kernel sweep (new in v4): every kernel set (`scalar` /
+    // `simd128` / `simd256` / `best`) over two corpora — `mixed`
+    // ([`Corpus::latin1`]: ~15% high bytes, the expand/compress work
+    // load) and `ascii` (the paper's pure-ASCII Latin lipsum profile,
+    // where the 64-byte block fast path should dominate) — for all
+    // four `latin1 ⇄ utf8/utf16` directions, input MB/s.
+    let l1_mixed = Corpus::latin1(Collection::Lipsum);
+    let l1_ascii = Corpus::generate(Language::Latin, Collection::Lipsum);
+    let l1_inputs: Vec<(&str, Vec<u8>, Vec<u8>, Vec<u16>)> = [&l1_mixed, &l1_ascii]
+        .iter()
+        .zip(["mixed", "ascii"])
+        .map(|(c, label)| {
+            (
+                label,
+                c.latin1_bytes().expect("both corpora are Latin-1-convertible"),
+                c.utf8.clone(),
+                c.utf16.clone(),
+            )
+        })
+        .collect();
+    let latin1_kernels = r.latin1_entries();
+    let l1_expand_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = latin1_kernels
+        .iter()
+        .map(|k| {
+            let cells = l1_inputs
+                .iter()
+                .map(|(label, latin1, _, _)| {
+                    let cap = crate::transcode::latin1::utf8_capacity_for_latin1(latin1.len());
+                    let res = measure_latin1_bytes(k.latin1_to_utf8, latin1, cap, budget);
+                    (label.to_string(), Some(latin1.len() as f64 / res.min.as_secs_f64() / 1e6))
+                })
+                .collect();
+            (k.key, cells)
+        })
+        .collect();
+    let l1_compress_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = latin1_kernels
+        .iter()
+        .map(|k| {
+            let cells = l1_inputs
+                .iter()
+                .map(|(label, _, utf8, _)| {
+                    let cap = crate::transcode::latin1::latin1_capacity_for(utf8.len());
+                    let res = measure_latin1_bytes(k.utf8_to_latin1, utf8, cap, budget);
+                    (label.to_string(), Some(utf8.len() as f64 / res.min.as_secs_f64() / 1e6))
+                })
+                .collect();
+            (k.key, cells)
+        })
+        .collect();
+    let l1_widen_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = latin1_kernels
+        .iter()
+        .map(|k| {
+            let cells = l1_inputs
+                .iter()
+                .map(|(label, latin1, _, _)| {
+                    let res = measure_latin1_widen(k.latin1_to_utf16, latin1, budget);
+                    (label.to_string(), Some(latin1.len() as f64 / res.min.as_secs_f64() / 1e6))
+                })
+                .collect();
+            (k.key, cells)
+        })
+        .collect();
+    let l1_narrow_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = latin1_kernels
+        .iter()
+        .map(|k| {
+            let cells = l1_inputs
+                .iter()
+                .map(|(label, _, _, utf16)| {
+                    let res = measure_latin1_narrow(k.utf16_to_latin1, utf16, budget);
+                    (
+                        label.to_string(),
+                        Some((utf16.len() * 2) as f64 / res.min.as_secs_f64() / 1e6),
+                    )
+                })
+                .collect();
+            (k.key, cells)
+        })
+        .collect();
+    let latin1_sections: Vec<(&str, Vec<(&str, Vec<(String, Option<f64>)>)>)> = vec![
+        ("latin1_to_utf8", l1_expand_rows),
+        ("utf8_to_latin1", l1_compress_rows),
+        ("latin1_to_utf16", l1_widen_rows),
+        ("utf16_to_latin1", l1_narrow_rows),
+    ];
+
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"simdutf-rs-bench-v3\",\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v4\",\n");
     out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
     out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
     out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
@@ -925,7 +1102,8 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
     emit_section(&mut out, "utf8_to_utf16_lossy", &lossy8_rows, true);
     emit_section(&mut out, "utf16_to_utf8_lossy", &lossy16_rows, true);
     emit_nested_section(&mut out, "counts", &counts_sections, true);
-    emit_nested_section(&mut out, "alloc_to_vec", &alloc_sections, false);
+    emit_nested_section(&mut out, "alloc_to_vec", &alloc_sections, true);
+    emit_nested_section(&mut out, "latin1", &latin1_sections, false);
     out.push_str("}\n");
     out
 }
@@ -994,7 +1172,7 @@ mod tests {
         );
         assert!(json.contains("+dirty10"), "missing dirty cells:\n{json}");
         // v3: counting kernels and alloc-strategy head-to-head.
-        assert!(json.contains("\"simdutf-rs-bench-v3\""), "schema must be v3:\n{json}");
+        assert!(json.contains("\"simdutf-rs-bench-v4\""), "schema must be v4:\n{json}");
         assert!(json.contains("\"counts\""), "missing counts section:\n{json}");
         for sub in [
             "utf16_len_from_utf8",
@@ -1008,6 +1186,14 @@ mod tests {
         assert!(json.contains("\"alloc_to_vec\""), "missing alloc section:\n{json}");
         for strategy in ["zeroed", "uninit", "exact"] {
             assert!(json.contains(&format!("\"{strategy}\"")), "missing {strategy}:\n{json}");
+        }
+        // v4: the Latin-1 kernel sweep.
+        assert!(json.contains("\"latin1\""), "missing latin1 section:\n{json}");
+        for sub in ["latin1_to_utf8", "utf8_to_latin1", "latin1_to_utf16", "utf16_to_latin1"] {
+            assert!(json.contains(&format!("\"{sub}\"")), "missing latin1.{sub}:\n{json}");
+        }
+        for cell in ["mixed", "ascii"] {
+            assert!(json.contains(&format!("\"{cell}\"")), "missing latin1 cell {cell}:\n{json}");
         }
     }
 

@@ -31,6 +31,11 @@
 //!   code-point counters, movemask+popcount kernels generic over the
 //!   same backends as the converters (scalar / `simd128` / `simd256` /
 //!   `best`), powering the allocation-free `*_to_vec_exact` paths.
+//! * [`transcode::latin1`] — the Latin-1 leg: `latin1 ⇄ utf8/utf16/
+//!   utf32` expand/compress kernels over the same backends, enumerable
+//!   per key (`Registry::latin1_entries`), with exact-allocation `_vec`
+//!   helpers, convertibility validators ([`validate`]), a coordinator
+//!   payload pair and CLI `transcode --from/--to latin1`.
 //! * [`validate`] — Keiser–Lemire UTF-8 validation and UTF-16 surrogate
 //!   validation.
 //! * [`baselines`] — every comparison system from the paper's evaluation,
@@ -128,6 +133,9 @@
 // arrays and paired src/dst indexing (they autovectorize predictably);
 // keep clippy from pushing iterator rewrites onto the hot paths.
 #![allow(clippy::needless_range_loop, clippy::manual_memcpy)]
+// Every public item carries documentation — enforced here and by the
+// CI docs leg (`cargo doc --no-deps` with warnings denied).
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod coordinator;
@@ -160,10 +168,18 @@ pub mod prelude {
     pub use crate::engine::Registry;
     pub use crate::simd::{best_key, VectorBackend, V128, V256};
     pub use crate::transcode::{
+        latin1::{
+            latin1_capacity_for, latin1_to_utf16, latin1_to_utf16_vec, latin1_to_utf8,
+            latin1_to_utf8_vec, utf16_to_latin1, utf16_to_latin1_vec, utf8_capacity_for_latin1,
+            utf8_to_latin1, utf8_to_latin1_vec, Latin1Kernels,
+        },
         streaming::{FeedResult, LossyFeedResult, StreamingUtf16ToUtf8, StreamingUtf8ToUtf16},
         utf16_capacity_for, utf16_to_utf8::OurUtf16ToUtf8, utf8_capacity_for,
         utf8_to_utf16::OurUtf8ToUtf16, ErrorKind, LossyResult, TranscodeError, TranscodeResult,
         Utf16ToUtf8, Utf8ToUtf16,
     };
-    pub use crate::validate::{validate_utf16le, validate_utf8, Utf8Validator};
+    pub use crate::validate::{
+        utf16_latin1_convertible, validate_latin1_convertible, validate_utf16le, validate_utf8,
+        Utf8Validator,
+    };
 }

@@ -5,11 +5,17 @@
 //! ```text
 //! simdutf-cli harness [section|all] [--artifacts DIR]
 //!     Regenerate the paper's tables/figures (table4..table10, fig5..fig7, xla).
-//! simdutf-cli transcode --direction 8to16|16to8 [--engine KEY] [--lossy] <file>
-//!     Transcode a file to stdout (UTF-16 side is little-endian bytes).
-//!     On invalid input, prints the error kind and byte/word position —
-//!     or, with --lossy, replaces invalid input with U+FFFD per the
-//!     WHATWG policy and reports the replacement count on stderr.
+//! simdutf-cli transcode [--from ENC] [--to ENC] [--engine KEY] [--lossy] <file>
+//!     Transcode a file to stdout. ENC is utf8, utf16 or latin1 (UTF-16
+//!     is little-endian bytes on both sides); a missing side defaults
+//!     to utf8 (or utf16 when the other side is utf8), and the legacy
+//!     `--direction 8to16|16to8` spelling still works. On invalid
+//!     input, prints the error kind and byte/word position — or, with
+//!     --lossy, replaces invalid input with U+FFFD per the WHATWG
+//!     policy and reports the replacement count on stderr (UTF-8⇄UTF-16
+//!     only: Latin-1 cannot encode U+FFFD, so its conversions are
+//!     always strict). Latin-1 legs take --engine
+//!     scalar|simd128|simd256|best (kernel sets, default best).
 //! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla|KEY] [--lossy]
 //!     Run the streaming service against a synthetic workload and print
 //!     throughput/latency stats. KEY is any registry engine (see `engines`).
@@ -118,7 +124,36 @@ fn cmd_bench_json(args: &[String]) -> i32 {
 }
 
 fn cmd_transcode(args: &[String]) -> i32 {
-    let direction = flag_value(args, "--direction").unwrap_or_else(|| "8to16".to_string());
+    // Encoding pair: --from/--to (utf8 | utf16 | latin1), with the
+    // legacy --direction spelling kept as an alias. A missing side
+    // defaults to utf8, or utf16 when the named side already is utf8.
+    let (from, to) = {
+        let from = flag_value(args, "--from");
+        let to = flag_value(args, "--to");
+        let other =
+            |side: &str| (if side == "utf8" { "utf16" } else { "utf8" }).to_string();
+        match (from, to) {
+            (Some(f), Some(t)) => (f, t),
+            (Some(f), None) => {
+                let t = other(&f);
+                (f, t)
+            }
+            (None, Some(t)) => {
+                let f = other(&t);
+                (f, t)
+            }
+            (None, None) => {
+                match flag_value(args, "--direction").as_deref().unwrap_or("8to16") {
+                    "16to8" => ("utf16".to_string(), "utf8".to_string()),
+                    "8to16" => ("utf8".to_string(), "utf16".to_string()),
+                    dir => {
+                        eprintln!("transcode: unknown direction {dir} (use 8to16|16to8)");
+                        return 2;
+                    }
+                }
+            }
+        }
+    };
     // Default to the runtime-dispatched alias: the widest backend the
     // CPU supports. `--engine simd128`/`simd256` (or any key) pins one.
     let engine_key = flag_value(args, "--engine").unwrap_or_else(|| "best".to_string());
@@ -139,8 +174,11 @@ fn cmd_transcode(args: &[String]) -> i32 {
     };
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
-    match direction.as_str() {
-        "8to16" => {
+    if from == "latin1" || to == "latin1" {
+        return cmd_transcode_latin1(&from, &to, &engine_key, lossy, &data, &mut out);
+    }
+    match (from.as_str(), to.as_str()) {
+        ("utf8", "utf16") => {
             let Some(engine) = Registry::global().get_utf8(&engine_key) else {
                 eprintln!("transcode: unknown engine {engine_key} (see `simdutf-cli engines`)");
                 return 2;
@@ -181,7 +219,7 @@ fn cmd_transcode(args: &[String]) -> i32 {
                 }
             }
         }
-        "16to8" => {
+        ("utf16", "utf8") => {
             let words: Vec<u16> =
                 data.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
             let Some(engine) = Registry::global().get_utf16(&engine_key) else {
@@ -220,8 +258,87 @@ fn cmd_transcode(args: &[String]) -> i32 {
                 }
             }
         }
-        other => {
-            eprintln!("transcode: unknown direction {other} (use 8to16|16to8)");
+        (f, t) => {
+            eprintln!(
+                "transcode: unsupported conversion {f} -> {t} (encodings: utf8, utf16, latin1)"
+            );
+            2
+        }
+    }
+}
+
+/// The Latin-1 legs of `transcode`: kernel-set dispatch
+/// (`Registry::latin1_entries`), always strict.
+fn cmd_transcode_latin1(
+    from: &str,
+    to: &str,
+    engine_key: &str,
+    lossy: bool,
+    data: &[u8],
+    out: &mut impl Write,
+) -> i32 {
+    if lossy {
+        eprintln!(
+            "transcode: Latin-1 conversions have no lossy mode \
+             (U+FFFD does not fit in Latin-1); drop --lossy"
+        );
+        return 2;
+    }
+    let entries = Registry::global().latin1_entries();
+    let Some(k) = entries.iter().find(|k| k.key.eq_ignore_ascii_case(engine_key)) else {
+        let keys: Vec<&str> = entries.iter().map(|k| k.key).collect();
+        eprintln!("transcode: unknown Latin-1 kernel set {engine_key} (known: {keys:?})");
+        return 2;
+    };
+    use simdutf_rs::transcode::latin1::{latin1_capacity_for, utf8_capacity_for_latin1};
+    match (from, to) {
+        ("latin1", "utf8") => {
+            let mut dst = vec![0u8; utf8_capacity_for_latin1(data.len())];
+            // Total: Latin-1 -> UTF-8 cannot fail on content.
+            let n = (k.latin1_to_utf8)(data, &mut dst).expect("contract-sized buffer");
+            out.write_all(&dst[..n]).unwrap();
+            0
+        }
+        ("latin1", "utf16") => {
+            let mut dst = vec![0u16; utf16_capacity_for(data.len())];
+            let n = (k.latin1_to_utf16)(data, &mut dst).expect("contract-sized buffer");
+            for w in &dst[..n] {
+                out.write_all(&w.to_le_bytes()).unwrap();
+            }
+            0
+        }
+        ("utf8", "latin1") => {
+            let mut dst = vec![0u8; latin1_capacity_for(data.len())];
+            match (k.utf8_to_latin1)(data, &mut dst) {
+                Ok(n) => {
+                    out.write_all(&dst[..n]).unwrap();
+                    0
+                }
+                Err(e) => {
+                    eprintln!("transcode: input is not Latin-1-convertible UTF-8: {e}");
+                    1
+                }
+            }
+        }
+        ("utf16", "latin1") => {
+            let words: Vec<u16> =
+                data.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+            let mut dst = vec![0u8; latin1_capacity_for(words.len())];
+            match (k.utf16_to_latin1)(&words, &mut dst) {
+                Ok(n) => {
+                    out.write_all(&dst[..n]).unwrap();
+                    0
+                }
+                Err(e) => {
+                    eprintln!("transcode: input is not Latin-1-convertible UTF-16: {e}");
+                    1
+                }
+            }
+        }
+        (f, t) => {
+            eprintln!(
+                "transcode: unsupported conversion {f} -> {t} (encodings: utf8, utf16, latin1)"
+            );
             2
         }
     }

@@ -12,6 +12,7 @@ use crate::transcode::ErrorKind;
 /// error class (the *position* is the offset the caller decoded at).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CodingError {
+    /// The error class (same taxonomy as the full transcoders).
     pub kind: ErrorKind,
 }
 

@@ -40,18 +40,23 @@ pub trait SimdBytes: Copy + Send + Sync + std::fmt::Debug + 'static {
     /// Number of 8-bit lanes (16 or 32).
     const LANES: usize;
 
+    /// The all-zero vector.
     fn zero() -> Self;
     /// Load `LANES` bytes from the front of `src` (`src.len() >= LANES`).
     fn load(src: &[u8]) -> Self;
     /// Store `LANES` bytes to the front of `dst` (`dst.len() >= LANES`).
     fn store(self, dst: &mut [u8]);
+    /// Broadcast one byte to all lanes.
     fn splat(b: u8) -> Self;
     /// Build a vector lane-by-lane (table/constant construction only —
     /// not a hot-path operation).
     fn from_fn(f: impl FnMut(usize) -> u8) -> Self;
 
+    /// Lane-wise bitwise AND.
     fn and(self, rhs: Self) -> Self;
+    /// Lane-wise bitwise OR.
     fn or(self, rhs: Self) -> Self;
+    /// Lane-wise bitwise XOR.
     fn xor(self, rhs: Self) -> Self;
     /// Lane-wise unsigned saturating subtraction (`psubusb`).
     fn saturating_sub(self, rhs: Self) -> Self;
@@ -60,6 +65,16 @@ pub trait SimdBytes: Copy + Send + Sync + std::fmt::Debug + 'static {
 
     /// `pmovmskb`: bit `i` of the result is the MSB of lane `i`.
     fn movemask(self) -> u64;
+    /// Byte interleave, low half (`punpcklbw`-style, but **sequential**
+    /// across the whole register at every width): lane `2i` of the
+    /// result is `self[i]`, lane `2i + 1` is `rhs[i]`, for
+    /// `i < LANES / 2`. The Latin-1 expansion kernel pairs lead bytes
+    /// with payload bytes this way before its compaction shuffle.
+    fn interleave_lo(self, rhs: Self) -> Self;
+    /// Byte interleave, high half: like [`SimdBytes::interleave_lo`]
+    /// for `i >= LANES / 2` (lane `2i` of the result is
+    /// `self[LANES / 2 + i]`).
+    fn interleave_hi(self, rhs: Self) -> Self;
     /// `pshufb` (per 16-byte half at 32 lanes — see the module docs).
     fn shuffle(self, idx: Self) -> Self;
     /// Nibble-table lookup: every lane must be in `[0, 16)`; the 16-byte
@@ -167,20 +182,28 @@ pub trait SimdWords: Copy + Send + Sync + std::fmt::Debug + 'static {
     fn load(src: &[u16]) -> Self;
     /// Load `LANES` little-endian words from `2 * LANES` bytes.
     fn load_le_bytes(src: &[u8]) -> Self;
+    /// Broadcast one word to all lanes.
     fn splat(w: u16) -> Self;
+    /// Store `LANES` words to the front of `dst` (`dst.len() >= LANES`).
     fn store(self, dst: &mut [u16]);
     /// Reinterpret as bytes (little-endian lane order).
     fn to_bytes(self) -> Self::Bytes;
 
+    /// Lane-wise bitwise AND.
     fn and(self, rhs: Self) -> Self;
+    /// Lane-wise bitwise OR.
     fn or(self, rhs: Self) -> Self;
+    /// Lane-wise bitwise NOT.
     fn not(self) -> Self;
+    /// Lane-wise logical shift right by a constant.
     fn shr<const N: u32>(self) -> Self;
+    /// Lane-wise shift left by a constant.
     fn shl<const N: u32>(self) -> Self;
     /// Lane-wise unsigned less-than mask: `0xFFFF` where `self < rhs`.
     fn lt_mask(self, rhs: Self) -> Self;
     /// Bit `i` of the result is the MSB of lane `i`.
     fn movemask(self) -> u32;
+    /// OR-reduction of all lanes.
     fn reduce_or(self) -> u16;
     /// True iff any word is in the surrogate range `0xD800..=0xDFFF`.
     fn has_surrogate(self) -> bool;
@@ -198,7 +221,9 @@ pub trait VectorBackend:
     /// Display name used by engines on this backend.
     const ENGINE_NAME: &'static str;
 
+    /// The byte-lane vector of this width.
     type Bytes: SimdBytes;
+    /// The word-lane vector of this width.
     type Words: SimdWords<Bytes = Self::Bytes>;
 }
 

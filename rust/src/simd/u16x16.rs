@@ -11,6 +11,7 @@ use super::U8x32;
 pub struct U16x16(pub [u16; 16]);
 
 impl U16x16 {
+    /// The all-zero vector.
     pub const ZERO: U16x16 = U16x16([0; 16]);
 
     /// Load 16 little-endian 16-bit words from 32 bytes.
@@ -31,11 +32,13 @@ impl U16x16 {
         U16x16(v)
     }
 
+    /// Broadcast one word to all lanes.
     #[inline]
     pub fn splat(w: u16) -> U16x16 {
         U16x16([w; 16])
     }
 
+    /// Store all lanes to the front of `dst` (`dst.len() >= 16`).
     #[inline]
     pub fn store(self, dst: &mut [u16]) {
         dst[..16].copy_from_slice(&self.0);
@@ -53,6 +56,7 @@ impl U16x16 {
         U8x32(v)
     }
 
+    /// Lane-wise bitwise AND.
     #[inline]
     pub fn and(self, rhs: U16x16) -> U16x16 {
         let mut v = [0u16; 16];
@@ -62,6 +66,7 @@ impl U16x16 {
         U16x16(v)
     }
 
+    /// Lane-wise bitwise OR.
     #[inline]
     pub fn or(self, rhs: U16x16) -> U16x16 {
         let mut v = [0u16; 16];

@@ -9,6 +9,7 @@ use super::U8x16;
 pub struct U16x8(pub [u16; 8]);
 
 impl U16x8 {
+    /// The all-zero vector.
     pub const ZERO: U16x8 = U16x8([0; 8]);
 
     /// Load 8 little-endian 16-bit words from 16 bytes.
@@ -29,11 +30,13 @@ impl U16x8 {
         U16x8(v)
     }
 
+    /// Broadcast one word to all lanes.
     #[inline]
     pub fn splat(w: u16) -> U16x8 {
         U16x8([w; 8])
     }
 
+    /// Store all lanes to the front of `dst` (`dst.len() >= 8`).
     #[inline]
     pub fn store(self, dst: &mut [u16]) {
         dst[..8].copy_from_slice(&self.0);
@@ -51,6 +54,7 @@ impl U16x8 {
         U8x16(v)
     }
 
+    /// Lane-wise bitwise AND.
     #[inline]
     pub fn and(self, rhs: U16x8) -> U16x8 {
         let mut v = [0u16; 8];
@@ -60,6 +64,7 @@ impl U16x8 {
         U16x8(v)
     }
 
+    /// Lane-wise bitwise OR.
     #[inline]
     pub fn or(self, rhs: U16x8) -> U16x8 {
         let mut v = [0u16; 8];

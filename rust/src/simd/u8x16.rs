@@ -18,6 +18,7 @@ use super::backend::{kl_step_portable, SimdBytes};
 pub struct U8x16(pub [u8; 16]);
 
 impl U8x16 {
+    /// The all-zero vector.
     pub const ZERO: U8x16 = U8x16([0; 16]);
 
     /// Load 16 bytes from the start of `src` (must have length >= 16).
@@ -40,6 +41,7 @@ impl U8x16 {
         dst[..16].copy_from_slice(&self.0);
     }
 
+    /// Lane-wise bitwise AND (`pand`).
     #[inline]
     pub fn and(self, rhs: U8x16) -> U8x16 {
         let mut v = [0u8; 16];
@@ -49,6 +51,7 @@ impl U8x16 {
         U8x16(v)
     }
 
+    /// Lane-wise bitwise OR (`por`).
     #[inline]
     pub fn or(self, rhs: U8x16) -> U8x16 {
         let mut v = [0u8; 16];
@@ -58,6 +61,7 @@ impl U8x16 {
         U8x16(v)
     }
 
+    /// Lane-wise bitwise XOR (`pxor`).
     #[inline]
     pub fn xor(self, rhs: U8x16) -> U8x16 {
         let mut v = [0u8; 16];
@@ -233,6 +237,56 @@ impl U8x16 {
         }
     }
 
+    /// Byte interleave, low half (`punpcklbw`): result lane `2i` is
+    /// `self[i]`, lane `2i + 1` is `rhs[i]`, for `i < 8`.
+    #[inline]
+    pub fn interleave_lo(self, rhs: U8x16) -> U8x16 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
+            let b = _mm_loadu_si128(rhs.0.as_ptr() as *const __m128i);
+            let r = _mm_unpacklo_epi8(a, b);
+            let mut out = [0u8; 16];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 16];
+            for i in 0..8 {
+                v[2 * i] = self.0[i];
+                v[2 * i + 1] = rhs.0[i];
+            }
+            U8x16(v)
+        }
+    }
+
+    /// Byte interleave, high half (`punpckhbw`): result lane `2i` is
+    /// `self[8 + i]`, lane `2i + 1` is `rhs[8 + i]`, for `i < 8`.
+    #[inline]
+    pub fn interleave_hi(self, rhs: U8x16) -> U8x16 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
+            let b = _mm_loadu_si128(rhs.0.as_ptr() as *const __m128i);
+            let r = _mm_unpackhi_epi8(a, b);
+            let mut out = [0u8; 16];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 16];
+            for i in 0..8 {
+                v[2 * i] = self.0[8 + i];
+                v[2 * i + 1] = rhs.0[8 + i];
+            }
+            U8x16(v)
+        }
+    }
+
     /// True iff any lane is non-zero.
     #[inline]
     pub fn any(self) -> bool {
@@ -322,6 +376,14 @@ impl SimdBytes for U8x16 {
     #[inline]
     fn prev<const N: usize>(self, prev_block: Self) -> Self {
         U8x16::prev::<N>(self, prev_block)
+    }
+    #[inline]
+    fn interleave_lo(self, rhs: Self) -> Self {
+        U8x16::interleave_lo(self, rhs)
+    }
+    #[inline]
+    fn interleave_hi(self, rhs: Self) -> Self {
+        U8x16::interleave_hi(self, rhs)
     }
     #[inline]
     fn any(self) -> bool {
@@ -438,6 +500,21 @@ mod tests {
         assert_eq!(cur.prev::<2>(prev).0[0], 14);
         assert_eq!(cur.prev::<3>(prev).0[0], 13);
         assert_eq!(cur.prev::<3>(prev).0[15], 28);
+    }
+
+    #[test]
+    fn interleave_matches_punpck() {
+        let a = U8x16([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]);
+        let b =
+            U8x16([100, 101, 102, 103, 104, 105, 106, 107, 108, 109, 110, 111, 112, 113, 114, 115]);
+        assert_eq!(
+            a.interleave_lo(b).0,
+            [0, 100, 1, 101, 2, 102, 3, 103, 4, 104, 5, 105, 6, 106, 7, 107]
+        );
+        assert_eq!(
+            a.interleave_hi(b).0,
+            [8, 108, 9, 109, 10, 110, 11, 111, 12, 112, 13, 113, 14, 114, 15, 115]
+        );
     }
 
     #[test]

@@ -20,6 +20,7 @@ use super::U8x16;
 pub struct U8x32(pub [u8; 32]);
 
 impl U8x32 {
+    /// The all-zero vector.
     pub const ZERO: U8x32 = U8x32([0; 32]);
 
     /// Load 32 bytes from the start of `src` (must have length >= 32).
@@ -52,6 +53,7 @@ impl U8x32 {
         (U8x16(lo), U8x16(hi))
     }
 
+    /// Lane-wise bitwise AND (`pand`).
     #[inline]
     pub fn and(self, rhs: U8x32) -> U8x32 {
         let mut v = [0u8; 32];
@@ -61,6 +63,7 @@ impl U8x32 {
         U8x32(v)
     }
 
+    /// Lane-wise bitwise OR (`por`).
     #[inline]
     pub fn or(self, rhs: U8x32) -> U8x32 {
         let mut v = [0u8; 32];
@@ -70,6 +73,7 @@ impl U8x32 {
         U8x32(v)
     }
 
+    /// Lane-wise bitwise XOR (`pxor`).
     #[inline]
     pub fn xor(self, rhs: U8x32) -> U8x32 {
         let mut v = [0u8; 32];
@@ -209,6 +213,34 @@ impl U8x32 {
         }
     }
 
+    /// Byte interleave, low half, **sequential** across the register
+    /// (the [`SimdBytes::interleave_lo`] convention): result lane `2i`
+    /// is `self[i]`, lane `2i + 1` is `rhs[i]`, for `i < 16`. This is
+    /// deliberately *not* `vpunpcklbw` (which interleaves per 128-bit
+    /// half); the loop form is what the sequential semantics need, and
+    /// LLVM synthesizes the shuffle from it.
+    #[inline]
+    pub fn interleave_lo(self, rhs: U8x32) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..16 {
+            v[2 * i] = self.0[i];
+            v[2 * i + 1] = rhs.0[i];
+        }
+        U8x32(v)
+    }
+
+    /// Byte interleave, high half (sequential — see
+    /// [`U8x32::interleave_lo`]): result lane `2i` is `self[16 + i]`.
+    #[inline]
+    pub fn interleave_hi(self, rhs: U8x32) -> U8x32 {
+        let mut v = [0u8; 32];
+        for i in 0..16 {
+            v[2 * i] = self.0[16 + i];
+            v[2 * i + 1] = rhs.0[16 + i];
+        }
+        U8x32(v)
+    }
+
     /// True iff any lane is non-zero.
     #[inline]
     pub fn any(self) -> bool {
@@ -300,6 +332,14 @@ impl SimdBytes for U8x32 {
         U8x32::prev::<N>(self, prev_block)
     }
     #[inline]
+    fn interleave_lo(self, rhs: Self) -> Self {
+        U8x32::interleave_lo(self, rhs)
+    }
+    #[inline]
+    fn interleave_hi(self, rhs: Self) -> Self {
+        U8x32::interleave_hi(self, rhs)
+    }
+    #[inline]
     fn any(self) -> bool {
         U8x32::any(self)
     }
@@ -373,6 +413,20 @@ mod tests {
         let m = v.movemask();
         for i in 0..32 {
             assert_eq!((m >> i) & 1 == 1, i % 3 == 0, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn interleave_is_sequential_not_per_half() {
+        let a = U8x32::from_fn(|i| i as u8);
+        let b = U8x32::from_fn(|i| 100 + i as u8);
+        let lo = a.interleave_lo(b);
+        let hi = a.interleave_hi(b);
+        for i in 0..16 {
+            assert_eq!(lo.0[2 * i], i as u8, "lo lane {i}");
+            assert_eq!(lo.0[2 * i + 1], 100 + i as u8, "lo lane {i}");
+            assert_eq!(hi.0[2 * i], 16 + i as u8, "hi lane {i}");
+            assert_eq!(hi.0[2 * i + 1], 116 + i as u8, "hi lane {i}");
         }
     }
 

@@ -11,16 +11,25 @@
 //! continuation runs, the OR-reduction over the input is zero iff the
 //! input is valid UTF-8.
 
-/// Error-class bits. Names follow the original publication.
-pub const TOO_SHORT: u8 = 1 << 0; // lead byte followed by another lead/ASCII
-pub const TOO_LONG: u8 = 1 << 1; // ASCII followed by a continuation byte
-pub const OVERLONG_3: u8 = 1 << 2; // E0 followed by 80..9F
-pub const TOO_LARGE: u8 = 1 << 3; // F4 followed by 90..BF etc. (> U+10FFFF)
-pub const SURROGATE: u8 = 1 << 4; // ED followed by A0..BF
-pub const OVERLONG_2: u8 = 1 << 5; // C0/C1: value < 0x80 in 2 bytes
-pub const TOO_LARGE_1000: u8 = 1 << 6; // F5..FF or F4 9x: >= 0x140000
-pub const OVERLONG_4: u8 = 1 << 6; // F0 followed by 80..8F (shares the bit)
-pub const TWO_CONTS: u8 = 1 << 7; // two continuation bytes (carried)
+/// Error-class bit: lead byte followed by another lead/ASCII. (All
+/// class names follow the original publication.)
+pub const TOO_SHORT: u8 = 1 << 0;
+/// ASCII followed by a continuation byte.
+pub const TOO_LONG: u8 = 1 << 1;
+/// E0 followed by 80..9F (overlong 3-byte encoding).
+pub const OVERLONG_3: u8 = 1 << 2;
+/// F4 followed by 90..BF etc. (> U+10FFFF).
+pub const TOO_LARGE: u8 = 1 << 3;
+/// ED followed by A0..BF (encoded surrogate).
+pub const SURROGATE: u8 = 1 << 4;
+/// C0/C1 lead: value < 0x80 in 2 bytes.
+pub const OVERLONG_2: u8 = 1 << 5;
+/// F5..FF lead or F4 9x: >= 0x140000.
+pub const TOO_LARGE_1000: u8 = 1 << 6;
+/// F0 followed by 80..8F (shares the bit with [`TOO_LARGE_1000`]).
+pub const OVERLONG_4: u8 = 1 << 6;
+/// Two continuation bytes in a row (resolved by the carry check).
+pub const TWO_CONTS: u8 = 1 << 7;
 
 /// Classes that must propagate through the second table unconditionally.
 pub const CARRY: u8 = TOO_SHORT | TOO_LONG | TWO_CONTS;

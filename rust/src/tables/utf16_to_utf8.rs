@@ -19,7 +19,9 @@ use std::sync::LazyLock;
 /// A shuffle mask plus the number of output bytes it produces.
 #[derive(Clone, Copy, Debug)]
 pub struct CompressEntry {
+    /// The `pshufb` compression mask.
     pub mask: [u8; 16],
+    /// Output bytes the mask produces.
     pub count: u8,
 }
 

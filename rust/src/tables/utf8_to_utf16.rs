@@ -35,7 +35,9 @@ pub const CASE3_START: u8 = 145;
 /// the shuffle mask to apply.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Entry {
+    /// Input bytes consumed by this 12-byte window.
     pub consumed: u8,
+    /// Index of the shuffle mask to apply.
     pub idx: u8,
 }
 
@@ -46,7 +48,9 @@ pub struct Entry {
 /// never selected) so that indexing with the `u8` mask index provably
 /// needs no bounds check in the hot loop.
 pub struct Utf8ToUtf16Tables {
+    /// The 4096-entry main table.
     pub main: [Entry; 4096],
+    /// The 16-byte shuffle masks `main` refers to.
     pub shuf: [[u8; 16]; 256],
 }
 

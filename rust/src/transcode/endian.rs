@@ -31,6 +31,7 @@ impl Bom {
         }
     }
 
+    /// True for [`Bom::None`] (no marker bytes to skip).
     pub fn is_empty(self) -> bool {
         self.len() == 0
     }

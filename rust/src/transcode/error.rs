@@ -90,6 +90,7 @@ pub struct TranscodeError {
 }
 
 impl TranscodeError {
+    /// An error of class `kind` at input-unit index `position`.
     pub const fn new(kind: ErrorKind, position: usize) -> TranscodeError {
         TranscodeError { kind, position }
     }

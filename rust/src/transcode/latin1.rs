@@ -1,0 +1,974 @@
+//! Latin-1 (ISO-8859-1) transcoding: `latin1 ⇄ utf8 / utf16 / utf32`.
+//!
+//! The paper's follow-on work (*Unicode at Gigabytes per Second*,
+//! arXiv:2111.08692, and *Transcoding Unicode Characters with AVX-512
+//! Instructions*, arXiv:2212.05098) treats Latin-1 as a first-class
+//! transcoding workload, and the simdutf library the paper ships now
+//! exposes the full `latin1 ⇄ utf8/utf16/utf32` surface. Latin-1 is the
+//! byte encoding whose 256 values are exactly the first 256 Unicode
+//! code points, which makes it the ideal SIMD workload: every
+//! conversion is a fixed-width expand or compress.
+//!
+//! ### Kernels
+//!
+//! | function | direction | failure modes |
+//! |---|---|---|
+//! | [`latin1_to_utf8`] | expand 1 → 1..=2 bytes | total (`OutputBuffer` only) |
+//! | [`utf8_to_latin1`] | compress 1..=2 → 1 byte | any UTF-8 error, or [`ErrorKind::TooLarge`] at the first code point `> U+00FF` |
+//! | [`latin1_to_utf16`] | zero-extend bytes to words | total (`OutputBuffer` only) |
+//! | [`utf16_to_latin1`] | narrow words to bytes | [`ErrorKind::TooLarge`] at the first word `> 0x00FF` (surrogates included, as in simdutf) |
+//! | [`latin1_to_utf32`] | zero-extend bytes to `u32` | total (`OutputBuffer` only) |
+//! | [`utf32_to_latin1`] | narrow `u32` to bytes | [`ErrorKind::TooLarge`] at the first value `> 0x00FF` |
+//!
+//! Like the counting subsystem ([`crate::count`]), each kernel exists
+//! as a scalar reference (`*_scalar`), a backend-generic SIMD form
+//! (`*_with::<B>`), and a runtime-dispatched entry point (the bare
+//! name, resolved once with the registry's `best` policy). The sets are
+//! enumerable per key through [`kernel_entries`] /
+//! `Registry::latin1_entries` (`scalar` / `simd128` / `simd256` /
+//! `best`), exactly like `Registry::count_entries`.
+//!
+//! ### The expand/compress cores
+//!
+//! Both UTF-8 cores reuse the converters' 64-byte all-ASCII block fast
+//! path and wide-register ASCII stores, then work a 16-byte register at
+//! a time:
+//!
+//! * **Expand** (`latin1 → utf8`): one `movemask` classifies the
+//!   register; non-ASCII lanes are split into a lead byte
+//!   (`0xC0 | b >> 6`) and a payload byte (`b & 0xBF`, computed as
+//!   "clear bit 6 where the MSB is set" so ASCII lanes pass through
+//!   unchanged), the two vectors are byte-interleaved
+//!   ([`SimdBytes::interleave_lo`]/[`interleave_hi`](SimdBytes::interleave_hi)),
+//!   and one `pshufb` per 8-lane half — indexed by that half's mask
+//!   through the 256-entry `EXPAND_SHUFFLE` table — compacts the
+//!   pairs so ASCII lanes contribute one byte and non-ASCII lanes two.
+//! * **Compress** (`utf8 → latin1`): mask algebra proves the register
+//!   is Latin-1-convertible without decoding — every non-ASCII byte
+//!   must be a `0xC2`/`0xC3` lead or a continuation exactly one lane
+//!   after a lead (`cont == lead << 1`); anything `>= 0xC4` (a code
+//!   point `> U+00FF` or invalid UTF-8) and any `0xC0`/`0xC1` overlong
+//!   fails the check and falls back to the scalar step, which produces
+//!   the canonical error kind and position. A register ending in a lead
+//!   is processed as 15 bytes so the pair is never split. The transform
+//!   `(b & 0x7F) | ((lead & 3) << 6)` is evaluated with two nibble
+//!   lookups gated on "previous byte is a lead", and a per-half
+//!   compress shuffle (`COMPRESS_SHUFFLE`) drops the lead lanes.
+//!
+//! Both cores store whole 16-byte registers and advance by the real
+//! output length — the standard overshoot-into-slack idiom; see the
+//! capacity functions below and [`crate::transcode::EXACT_SLACK`].
+//!
+//! ### Capacity contract
+//!
+//! [`utf8_capacity_for_latin1`] (2 bytes per input byte + register
+//! slack) for the expand direction; [`latin1_capacity_for`] (1 output
+//! byte per input unit + slack) for every conversion *into* Latin-1;
+//! [`crate::transcode::utf16_capacity_for`] works unchanged for
+//! `latin1 → utf16`. When the fast paths lack headroom they degrade to
+//! the scalar tail (exact per-unit guards) rather than reporting a
+//! spurious `OutputBuffer`, so the `*_vec` helpers can allocate
+//! exactly: counted size + `EXACT_SLACK`.
+
+use crate::count;
+use crate::scalar;
+use crate::simd::{is_ascii_block, SimdBytes, SimdWords, U8x16, VectorBackend, V128, V256};
+use crate::transcode::{fill_uninit, ErrorKind, TranscodeError, TranscodeResult, EXACT_SLACK};
+use std::sync::LazyLock;
+
+/// Required UTF-8 output capacity (in bytes) to transcode `src_len`
+/// Latin-1 bytes: two bytes per input byte plus register slack.
+#[inline]
+pub const fn utf8_capacity_for_latin1(src_len: usize) -> usize {
+    2 * src_len + 16
+}
+
+/// Required Latin-1 output capacity (in bytes) to transcode `src_len`
+/// input units (UTF-8 bytes, UTF-16 words or UTF-32 values): one byte
+/// per unit plus register slack.
+#[inline]
+pub const fn latin1_capacity_for(src_len: usize) -> usize {
+    src_len + 16
+}
+
+// ---------------------------------------------------------------------------
+// Shuffle tables.
+
+/// Per-half expansion shuffle: entry `m` (the 8-bit non-ASCII mask of
+/// an 8-lane half) selects, from the interleaved `[lead0, payload0,
+/// lead1, payload1, ...]` register, the lead+payload pair for non-ASCII
+/// lanes and the payload alone for ASCII lanes, packed to the left;
+/// unused lanes are `0x80` (`pshufb` zero). Output length is
+/// `8 + popcount(m)`.
+const fn build_expand_shuffle() -> [[u8; 16]; 256] {
+    let mut t = [[0x80u8; 16]; 256];
+    let mut m = 0usize;
+    while m < 256 {
+        let mut k = 0usize;
+        let mut i = 0usize;
+        while i < 8 {
+            if (m >> i) & 1 == 1 {
+                t[m][k] = (2 * i) as u8;
+                k += 1;
+            }
+            t[m][k] = (2 * i + 1) as u8;
+            k += 1;
+            i += 1;
+        }
+        m += 1;
+    }
+    t
+}
+
+/// See `build_expand_shuffle`.
+static EXPAND_SHUFFLE: [[u8; 16]; 256] = build_expand_shuffle();
+
+/// Per-half compression shuffle: entry `m` (the 8-bit drop mask of an
+/// 8-lane half) packs the lanes *not* in `m` to the left; unused lanes
+/// are `0x80`. Output length is `8 - popcount(m)`. For the high half
+/// the indices are offset by ORing `0x08` in (valid entries are `< 8`,
+/// pad entries keep their high bit).
+const fn build_compress_shuffle() -> [[u8; 16]; 256] {
+    let mut t = [[0x80u8; 16]; 256];
+    let mut m = 0usize;
+    while m < 256 {
+        let mut k = 0usize;
+        let mut i = 0usize;
+        while i < 8 {
+            if (m >> i) & 1 == 0 {
+                t[m][k] = i as u8;
+                k += 1;
+            }
+            i += 1;
+        }
+        m += 1;
+    }
+    t
+}
+
+/// See `build_compress_shuffle`.
+static COMPRESS_SHUFFLE: [[u8; 16]; 256] = build_compress_shuffle();
+
+/// Nibble gate for the compress transform: `0xFF` only at index `0xC`,
+/// the high nibble of a `0xC2`/`0xC3` lead. In the mask-validated path
+/// no other byte class can precede a continuation, and no ASCII lane's
+/// predecessor has a `0xC` high nibble (leads are never followed by
+/// ASCII there), so the gate isolates exactly the continuation lanes.
+const PREV_IS_LEAD_GATE: [u8; 16] = [0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0xFF, 0, 0, 0];
+
+/// Top-bit contribution of the lead to the decoded Latin-1 byte,
+/// indexed by the lead's low nibble: `(0xC2 & 3) << 6 = 0x80`,
+/// `(0xC3 & 3) << 6 = 0xC0`. Other indices are unreachable behind the
+/// gate but harmlessly zero.
+const LEAD_TOP_BITS: [u8; 16] = [0, 0, 0x80, 0xC0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+
+// ---------------------------------------------------------------------------
+// Scalar references.
+
+/// Scalar reference: Latin-1 → UTF-8 (1 byte per ASCII input byte, 2
+/// otherwise). Total; fails only with [`ErrorKind::OutputBuffer`].
+pub fn latin1_to_utf8_scalar(src: &[u8], dst: &mut [u8]) -> TranscodeResult {
+    let mut q = 0usize;
+    for (p, &b) in src.iter().enumerate() {
+        if b < 0x80 {
+            if q >= dst.len() {
+                return Err(TranscodeError::output_buffer(p));
+            }
+            dst[q] = b;
+            q += 1;
+        } else {
+            if q + 2 > dst.len() {
+                return Err(TranscodeError::output_buffer(p));
+            }
+            dst[q] = 0xC0 | (b >> 6);
+            dst[q + 1] = 0x80 | (b & 0x3F);
+            q += 2;
+        }
+    }
+    Ok(q)
+}
+
+/// Scalar reference: UTF-8 → Latin-1. Fails with the usual UTF-8 error
+/// kinds on malformed input, or [`ErrorKind::TooLarge`] at the first
+/// (valid) code point above `U+00FF`; the position convention is the
+/// first byte of the offending sequence, exactly as
+/// [`crate::transcode::classify_utf8_error`] reports it.
+pub fn utf8_to_latin1_scalar(src: &[u8], dst: &mut [u8]) -> TranscodeResult {
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < src.len() {
+        let (cp, len) =
+            scalar::decode_utf8_char(&src[p..]).map_err(|e| TranscodeError::new(e.kind, p))?;
+        if cp > 0xFF {
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p));
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = cp as u8;
+        q += 1;
+        p += len;
+    }
+    Ok(q)
+}
+
+/// Scalar reference: Latin-1 → UTF-16 (zero-extend each byte). Total.
+pub fn latin1_to_utf16_scalar(src: &[u8], dst: &mut [u16]) -> TranscodeResult {
+    for (p, &b) in src.iter().enumerate() {
+        if p >= dst.len() {
+            // Everything before `p` was transcoded, per the position
+            // convention for OutputBuffer.
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[p] = b as u16;
+    }
+    Ok(src.len())
+}
+
+/// Scalar reference: UTF-16 → Latin-1 (narrow each word). Fails with
+/// [`ErrorKind::TooLarge`] at the first word above `0x00FF` — including
+/// surrogates, which cannot begin a `<= U+00FF` code point (the same
+/// convention simdutf's `convert_utf16_to_latin1` uses).
+pub fn utf16_to_latin1_scalar(src: &[u16], dst: &mut [u8]) -> TranscodeResult {
+    let mut q = 0usize;
+    for (p, &w) in src.iter().enumerate() {
+        if w > 0xFF {
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p));
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = w as u8;
+        q += 1;
+    }
+    Ok(q)
+}
+
+/// Scalar reference: Latin-1 → UTF-32 (zero-extend each byte). Total.
+pub fn latin1_to_utf32_scalar(src: &[u8], dst: &mut [u32]) -> TranscodeResult {
+    for (p, &b) in src.iter().enumerate() {
+        if p >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[p] = b as u32;
+    }
+    Ok(src.len())
+}
+
+/// Scalar reference: UTF-32 → Latin-1 (narrow each value). Fails with
+/// [`ErrorKind::TooLarge`] at the first value above `0x00FF`.
+pub fn utf32_to_latin1_scalar(src: &[u32], dst: &mut [u8]) -> TranscodeResult {
+    let mut q = 0usize;
+    for (p, &c) in src.iter().enumerate() {
+        if c > 0xFF {
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p));
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = c as u8;
+        q += 1;
+    }
+    Ok(q)
+}
+
+// ---------------------------------------------------------------------------
+// Backend-generic SIMD kernels.
+
+/// Register-level convertibility proof shared by the compress kernel
+/// and [`crate::validate::validate_latin1_convertible`] — kept in one
+/// place because the two must stay bit-identical for the validator's
+/// verdict to match what the converter accepts.
+///
+/// Returns `Some((lead_mask, consumed))` when every byte of the
+/// register belongs to a Latin-1-convertible sequence: `lead_mask` has
+/// a bit per `0xC2`/`0xC3` lead lane (0 for a pure-ASCII register) and
+/// `consumed` is 15 when the last lane is a lead whose continuation
+/// lives in the next register (the caller re-examines it from the
+/// lead), 16 otherwise. Returns `None` when an error or a non-Latin-1
+/// character lies within the register.
+#[inline]
+pub(crate) fn latin1_register_check(v: U8x16) -> Option<(u32, usize)> {
+    let non_ascii = (v.movemask() as u32) & 0xFFFF;
+    let ge_c0 = (v.ge_mask(0xC0) as u32) & 0xFFFF;
+    let ge_c2 = (v.ge_mask(0xC2) as u32) & 0xFFFF;
+    let ge_c4 = (v.ge_mask(0xC4) as u32) & 0xFFFF;
+    let cont = non_ascii & !ge_c0; // true continuations 0x80..=0xBF
+    let lead = ge_c2 & !ge_c4; // 0xC2 / 0xC3
+    let bad = (ge_c0 & !ge_c2) | ge_c4; // C0/C1 overlongs, >= C4
+    if bad == 0 && cont == ((lead << 1) & 0xFFFF) {
+        Some((lead, if lead & 0x8000 != 0 { 15 } else { 16 }))
+    } else {
+        None
+    }
+}
+
+/// SIMD Latin-1 → UTF-8 on backend `B`: 64-byte ASCII blocks and
+/// backend-width ASCII registers are copied verbatim; mixed 16-byte
+/// registers go through the movemask + interleave + `EXPAND_SHUFFLE`
+/// core (see the module docs). Identical output to
+/// [`latin1_to_utf8_scalar`] on every input.
+pub fn latin1_to_utf8_with<B: VectorBackend>(src: &[u8], dst: &mut [u8]) -> TranscodeResult {
+    let n = src.len();
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < n {
+        if p + 64 <= n && q + 64 <= dst.len() {
+            let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
+            if is_ascii_block(block) {
+                dst[q..q + 64].copy_from_slice(block);
+                p += 64;
+                q += 64;
+                continue;
+            }
+        }
+        if p + B::WIDTH <= n && q + B::WIDTH <= dst.len() {
+            let v = <B::Bytes as SimdBytes>::load(&src[p..]);
+            if v.is_ascii() {
+                v.store(&mut dst[q..]);
+                p += B::WIDTH;
+                q += B::WIDTH;
+                continue;
+            }
+        }
+        // Worst case for a 16-byte register is 32 output bytes; the two
+        // half-stores each write a whole register into that headroom.
+        if p + 16 <= n && q + 32 <= dst.len() {
+            let v = U8x16::load(&src[p..]);
+            let mask = (v.movemask() as u32) & 0xFFFF;
+            if mask == 0 {
+                v.store(&mut dst[q..]);
+                p += 16;
+                q += 16;
+                continue;
+            }
+            // Clear bit 6 of non-ASCII lanes (0x80 | (b & 0x3F) == b & 0xBF
+            // there); identity on ASCII lanes.
+            let clear6 = v.and(U8x16::splat(0x80)).shr::<1>();
+            let payload = v.and(clear6.xor(U8x16::splat(0xFF)));
+            let lead = U8x16::splat(0xC0).or(v.shr::<6>());
+            let halves = [lead.interleave_lo(payload), lead.interleave_hi(payload)];
+            let mut m = mask;
+            for inter in halves {
+                let hm = (m & 0xFF) as usize;
+                inter.shuffle(U8x16(EXPAND_SHUFFLE[hm])).store(&mut dst[q..]);
+                q += 8 + (hm as u32).count_ones() as usize;
+                m >>= 8;
+            }
+            p += 16;
+            continue;
+        }
+        // Scalar tail — also the degraded path when `dst` headroom is
+        // below a full register, so short buffers fail exactly.
+        let b = src[p];
+        if b < 0x80 {
+            if q >= dst.len() {
+                return Err(TranscodeError::output_buffer(p));
+            }
+            dst[q] = b;
+            q += 1;
+        } else {
+            if q + 2 > dst.len() {
+                return Err(TranscodeError::output_buffer(p));
+            }
+            dst[q] = 0xC0 | (b >> 6);
+            dst[q + 1] = 0x80 | (b & 0x3F);
+            q += 2;
+        }
+        p += 1;
+    }
+    Ok(q)
+}
+
+/// SIMD UTF-8 → Latin-1 on backend `B`: ASCII fast paths as in
+/// [`latin1_to_utf8_with`]; mixed 16-byte registers are
+/// mask-validated (`cont == lead << 1`, nothing `>= 0xC4`, no
+/// `0xC0`/`0xC1`) and compressed through `COMPRESS_SHUFFLE`; a
+/// register that fails the check contains an error within 16 bytes and
+/// falls back to the scalar step, which reports the canonical kind and
+/// position (identical to [`utf8_to_latin1_scalar`]).
+pub fn utf8_to_latin1_with<B: VectorBackend>(src: &[u8], dst: &mut [u8]) -> TranscodeResult {
+    let n = src.len();
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < n {
+        if p + 64 <= n && q + 64 <= dst.len() {
+            let block: &[u8; 64] = src[p..p + 64].try_into().unwrap();
+            if is_ascii_block(block) {
+                dst[q..q + 64].copy_from_slice(block);
+                p += 64;
+                q += 64;
+                continue;
+            }
+        }
+        if p + B::WIDTH <= n && q + B::WIDTH <= dst.len() {
+            let v = <B::Bytes as SimdBytes>::load(&src[p..]);
+            if v.is_ascii() {
+                v.store(&mut dst[q..]);
+                p += B::WIDTH;
+                q += B::WIDTH;
+                continue;
+            }
+        }
+        // The two half-stores start at most 8 output bytes apart.
+        if p + 16 <= n && q + 24 <= dst.len() {
+            let v = U8x16::load(&src[p..]);
+            // `in_len` is 15 when the register ends in a lead whose
+            // continuation lives in the next register: consuming 15
+            // bytes keeps `p` on a character boundary (the compress
+            // drops the lead lane either way).
+            if let Some((lead, in_len)) = latin1_register_check(v) {
+                if lead == 0 {
+                    // Pure ASCII (a lead-free register has no
+                    // continuations either, by the check).
+                    v.store(&mut dst[q..]);
+                    p += 16;
+                    q += 16;
+                    continue;
+                }
+                let prev1 = v.prev::<1>(U8x16::ZERO);
+                let gate = prev1.shr::<4>().lookup16(&PREV_IS_LEAD_GATE);
+                let top = prev1.and(U8x16::splat(0x0F)).lookup16(&LEAD_TOP_BITS);
+                // (b & 0x7F) is the identity on ASCII lanes and the low
+                // six payload bits on continuation lanes (their bit 6 is
+                // always clear); the gated lookup adds the lead's two
+                // bits back.
+                let t = v.and(U8x16::splat(0x7F)).or(gate.and(top));
+                let lo = (lead & 0xFF) as usize;
+                t.shuffle(U8x16(COMPRESS_SHUFFLE[lo])).store(&mut dst[q..]);
+                q += 8 - (lo as u32).count_ones() as usize;
+                let hi = ((lead >> 8) & 0xFF) as usize;
+                t.shuffle(U8x16(COMPRESS_SHUFFLE[hi]).or(U8x16::splat(0x08)))
+                    .store(&mut dst[q..]);
+                q += 8 - (hi as u32).count_ones() as usize;
+                p += in_len;
+                continue;
+            }
+            // Check failed: an error (or a non-Latin-1 character) lies
+            // within the next 16 bytes — the scalar step below reaches
+            // it in bounded time with the canonical position.
+        }
+        let (cp, len) =
+            scalar::decode_utf8_char(&src[p..]).map_err(|e| TranscodeError::new(e.kind, p))?;
+        if cp > 0xFF {
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p));
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = cp as u8;
+        q += 1;
+        p += len;
+    }
+    Ok(q)
+}
+
+/// SIMD Latin-1 → UTF-16 on backend `B`: zero-extend a backend-width
+/// run of bytes to words per stride (the loop compiles to the
+/// `punpcklbw`-with-zero / `vpmovzxbw` widening at `opt-level=3`).
+/// Total; fails only with [`ErrorKind::OutputBuffer`].
+pub fn latin1_to_utf16_with<B: VectorBackend>(src: &[u8], dst: &mut [u16]) -> TranscodeResult {
+    let w = B::WIDTH;
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < src.len() {
+        if p + w <= src.len() && q + w <= dst.len() {
+            for i in 0..w {
+                dst[q + i] = src[p + i] as u16;
+            }
+            p += w;
+            q += w;
+            continue;
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = src[p] as u16;
+        p += 1;
+        q += 1;
+    }
+    Ok(q)
+}
+
+/// SIMD UTF-16 → Latin-1 on backend `B`: one `lt_mask(0x100)` movemask
+/// proves a whole register narrows losslessly, then a saturating-free
+/// narrowing store (the loop compiles to `packuswb`-style narrowing);
+/// an out-of-range word is reported as [`ErrorKind::TooLarge`] at its
+/// exact lane. Identical results to [`utf16_to_latin1_scalar`].
+pub fn utf16_to_latin1_with<B: VectorBackend>(src: &[u16], dst: &mut [u8]) -> TranscodeResult {
+    let lanes = B::WIDTH / 2;
+    let all: u32 = (1u32 << lanes) - 1;
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < src.len() {
+        if p + lanes <= src.len() && q + lanes <= dst.len() {
+            let v = <B::Words as SimdWords>::load(&src[p..]);
+            let fits = v.lt_mask(<B::Words as SimdWords>::splat(0x100)).movemask() & all;
+            if fits == all {
+                for i in 0..lanes {
+                    dst[q + i] = src[p + i] as u8;
+                }
+                p += lanes;
+                q += lanes;
+                continue;
+            }
+            let off = fits.trailing_ones() as usize;
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p + off));
+        }
+        let w0 = src[p];
+        if w0 > 0xFF {
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p));
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = w0 as u8;
+        p += 1;
+        q += 1;
+    }
+    Ok(q)
+}
+
+/// SIMD Latin-1 → UTF-32 on backend `B` (zero-extend per stride;
+/// total).
+pub fn latin1_to_utf32_with<B: VectorBackend>(src: &[u8], dst: &mut [u32]) -> TranscodeResult {
+    let w = B::WIDTH;
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < src.len() {
+        if p + w <= src.len() && q + w <= dst.len() {
+            for i in 0..w {
+                dst[q + i] = src[p + i] as u32;
+            }
+            p += w;
+            q += w;
+            continue;
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = src[p] as u32;
+        p += 1;
+        q += 1;
+    }
+    Ok(q)
+}
+
+/// SIMD UTF-32 → Latin-1 on backend `B`: a branch-free OR-reduction
+/// proves a whole stride narrows losslessly; an out-of-range value is
+/// reported as [`ErrorKind::TooLarge`] at its exact position.
+pub fn utf32_to_latin1_with<B: VectorBackend>(src: &[u32], dst: &mut [u8]) -> TranscodeResult {
+    let w = B::WIDTH;
+    let mut p = 0usize;
+    let mut q = 0usize;
+    while p < src.len() {
+        if p + w <= src.len() && q + w <= dst.len() {
+            let mut acc = 0u32;
+            for i in 0..w {
+                acc |= src[p + i];
+            }
+            if acc <= 0xFF {
+                for i in 0..w {
+                    dst[q + i] = src[p + i] as u8;
+                }
+                p += w;
+                q += w;
+                continue;
+            }
+            let off = src[p..p + w]
+                .iter()
+                .position(|&c| c > 0xFF)
+                .expect("the OR-reduction saw an out-of-range value");
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p + off));
+        }
+        let c = src[p];
+        if c > 0xFF {
+            return Err(TranscodeError::new(ErrorKind::TooLarge, p));
+        }
+        if q >= dst.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        dst[q] = c as u8;
+        p += 1;
+        q += 1;
+    }
+    Ok(q)
+}
+
+// ---------------------------------------------------------------------------
+// Runtime dispatch + registry surface.
+
+/// One named set of Latin-1 kernels (the Latin-1 analogue of a registry
+/// engine entry — see [`crate::count::CountKernels`] for the pattern).
+/// `fn` pointers so the set is enumerable and benchable without
+/// generics.
+#[derive(Clone, Copy)]
+pub struct Latin1Kernels {
+    /// `"scalar"`, `"simd128"`, `"simd256"` or `"best"`.
+    pub key: &'static str,
+    /// Latin-1 → UTF-8 (expand; total).
+    pub latin1_to_utf8: fn(&[u8], &mut [u8]) -> TranscodeResult,
+    /// UTF-8 → Latin-1 (compress; fails on malformed or `> U+00FF`).
+    pub utf8_to_latin1: fn(&[u8], &mut [u8]) -> TranscodeResult,
+    /// Latin-1 → UTF-16 (zero-extend; total).
+    pub latin1_to_utf16: fn(&[u8], &mut [u16]) -> TranscodeResult,
+    /// UTF-16 → Latin-1 (narrow; fails on words `> 0x00FF`).
+    pub utf16_to_latin1: fn(&[u16], &mut [u8]) -> TranscodeResult,
+    /// Latin-1 → UTF-32 (zero-extend; total).
+    pub latin1_to_utf32: fn(&[u8], &mut [u32]) -> TranscodeResult,
+    /// UTF-32 → Latin-1 (narrow; fails on values `> 0x00FF`).
+    pub utf32_to_latin1: fn(&[u32], &mut [u8]) -> TranscodeResult,
+    /// The matching exact-size predictor ([`crate::count`]).
+    pub utf8_len_from_latin1: fn(&[u8]) -> usize,
+}
+
+impl std::fmt::Debug for Latin1Kernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Latin1Kernels").field("key", &self.key).finish()
+    }
+}
+
+/// The scalar reference set.
+pub static SCALAR_KERNELS: Latin1Kernels = Latin1Kernels {
+    key: "scalar",
+    latin1_to_utf8: latin1_to_utf8_scalar,
+    utf8_to_latin1: utf8_to_latin1_scalar,
+    latin1_to_utf16: latin1_to_utf16_scalar,
+    utf16_to_latin1: utf16_to_latin1_scalar,
+    latin1_to_utf32: latin1_to_utf32_scalar,
+    utf32_to_latin1: utf32_to_latin1_scalar,
+    utf8_len_from_latin1: count::utf8_len_from_latin1_scalar,
+};
+
+/// The 128-bit kernel set.
+pub static SIMD128_KERNELS: Latin1Kernels = Latin1Kernels {
+    key: "simd128",
+    latin1_to_utf8: latin1_to_utf8_with::<V128>,
+    utf8_to_latin1: utf8_to_latin1_with::<V128>,
+    latin1_to_utf16: latin1_to_utf16_with::<V128>,
+    utf16_to_latin1: utf16_to_latin1_with::<V128>,
+    latin1_to_utf32: latin1_to_utf32_with::<V128>,
+    utf32_to_latin1: utf32_to_latin1_with::<V128>,
+    utf8_len_from_latin1: count::utf8_len_from_latin1_with::<V128>,
+};
+
+/// The 256-bit kernel set.
+pub static SIMD256_KERNELS: Latin1Kernels = Latin1Kernels {
+    key: "simd256",
+    latin1_to_utf8: latin1_to_utf8_with::<V256>,
+    utf8_to_latin1: utf8_to_latin1_with::<V256>,
+    latin1_to_utf16: latin1_to_utf16_with::<V256>,
+    utf16_to_latin1: utf16_to_latin1_with::<V256>,
+    latin1_to_utf32: latin1_to_utf32_with::<V256>,
+    utf32_to_latin1: utf32_to_latin1_with::<V256>,
+    utf8_len_from_latin1: count::utf8_len_from_latin1_with::<V256>,
+};
+
+/// The `best` set: the widest backend worth running here, resolved once
+/// with the engine registry's `best` policy ([`crate::simd::best_key`]).
+static BEST: LazyLock<Latin1Kernels> = LazyLock::new(|| {
+    let resolved =
+        if crate::simd::best_key() == V256::KEY { SIMD256_KERNELS } else { SIMD128_KERNELS };
+    Latin1Kernels { key: "best", ..resolved }
+});
+
+/// Every kernel set, in registry order (`scalar`, `simd128`, `simd256`,
+/// `best`). Benches, tests and `Registry::latin1_entries` enumerate
+/// this.
+pub fn kernel_entries() -> [&'static Latin1Kernels; 4] {
+    [&SCALAR_KERNELS, &SIMD128_KERNELS, &SIMD256_KERNELS, &*BEST]
+}
+
+/// Latin-1 → UTF-8 on the widest usable backend.
+#[inline]
+pub fn latin1_to_utf8(src: &[u8], dst: &mut [u8]) -> TranscodeResult {
+    (BEST.latin1_to_utf8)(src, dst)
+}
+
+/// UTF-8 → Latin-1 on the widest usable backend.
+#[inline]
+pub fn utf8_to_latin1(src: &[u8], dst: &mut [u8]) -> TranscodeResult {
+    (BEST.utf8_to_latin1)(src, dst)
+}
+
+/// Latin-1 → UTF-16 on the widest usable backend.
+#[inline]
+pub fn latin1_to_utf16(src: &[u8], dst: &mut [u16]) -> TranscodeResult {
+    (BEST.latin1_to_utf16)(src, dst)
+}
+
+/// UTF-16 → Latin-1 on the widest usable backend.
+#[inline]
+pub fn utf16_to_latin1(src: &[u16], dst: &mut [u8]) -> TranscodeResult {
+    (BEST.utf16_to_latin1)(src, dst)
+}
+
+/// Latin-1 → UTF-32 on the widest usable backend.
+#[inline]
+pub fn latin1_to_utf32(src: &[u8], dst: &mut [u32]) -> TranscodeResult {
+    (BEST.latin1_to_utf32)(src, dst)
+}
+
+/// UTF-32 → Latin-1 on the widest usable backend.
+#[inline]
+pub fn utf32_to_latin1(src: &[u32], dst: &mut [u8]) -> TranscodeResult {
+    (BEST.utf32_to_latin1)(src, dst)
+}
+
+// ---------------------------------------------------------------------------
+// Exact-size allocation helpers: one counting pass sizes the vector,
+// one conversion fills it uninitialized (`fill_uninit` — the kernels
+// are write-only over `dst`); `EXACT_SLACK` spare capacity absorbs the
+// full-register stores, the returned length is exact.
+
+/// Latin-1 → UTF-8 into an exactly-sized vector
+/// ([`count::utf8_len_from_latin1`] sizes it). Total: the conversion
+/// cannot fail.
+pub fn latin1_to_utf8_vec(src: &[u8]) -> TranscodeResult<Vec<u8>> {
+    let exact = count::utf8_len_from_latin1(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| latin1_to_utf8(src, dst)).map(|(v, _)| v)
+}
+
+/// UTF-8 → Latin-1 into an exactly-sized vector
+/// ([`count::latin1_len_from_utf8`] — the code-point count — sizes it;
+/// an upper bound even when the conversion stops at an error).
+pub fn utf8_to_latin1_vec(src: &[u8]) -> TranscodeResult<Vec<u8>> {
+    let exact = count::latin1_len_from_utf8(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| utf8_to_latin1(src, dst)).map(|(v, _)| v)
+}
+
+/// Latin-1 → UTF-16 into an exactly-sized vector (one word per byte).
+pub fn latin1_to_utf16_vec(src: &[u8]) -> TranscodeResult<Vec<u16>> {
+    let exact = count::utf16_len_from_latin1(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| latin1_to_utf16(src, dst)).map(|(v, _)| v)
+}
+
+/// UTF-16 → Latin-1 into an exactly-sized vector (one byte per word —
+/// an upper bound when the conversion stops at an out-of-range word).
+pub fn utf16_to_latin1_vec(src: &[u16]) -> TranscodeResult<Vec<u8>> {
+    let exact = count::latin1_len_from_utf16(src);
+    fill_uninit(exact + EXACT_SLACK, |dst| utf16_to_latin1(src, dst)).map(|(v, _)| v)
+}
+
+/// Latin-1 → UTF-32 into an exactly-sized vector (one value per byte).
+pub fn latin1_to_utf32_vec(src: &[u8]) -> TranscodeResult<Vec<u32>> {
+    fill_uninit(src.len() + EXACT_SLACK, |dst| latin1_to_utf32(src, dst)).map(|(v, _)| v)
+}
+
+/// UTF-32 → Latin-1 into an exactly-sized vector (one byte per value).
+pub fn utf32_to_latin1_vec(src: &[u32]) -> TranscodeResult<Vec<u8>> {
+    fill_uninit(src.len() + EXACT_SLACK, |dst| utf32_to_latin1(src, dst)).map(|(v, _)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The std oracle: Latin-1 bytes are the first 256 code points.
+    fn latin1_to_string(src: &[u8]) -> String {
+        src.iter().map(|&b| b as char).collect()
+    }
+
+    fn sample_inputs() -> Vec<Vec<u8>> {
+        let mut inputs: Vec<Vec<u8>> = vec![
+            vec![],
+            b"pure ascii, long enough to cross the sixty-four byte block line!!!".to_vec(),
+            (0u8..=255).collect(),
+            vec![0xE9; 100],
+            b"caf\xE9 na\xEFve \xC0\xFF mixed".to_vec(),
+        ];
+        // Deterministic soup at lane-boundary lengths.
+        let mut state = 0x1357_9BDF_2468_ACE0u64;
+        for len in [1usize, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 200] {
+            let mut v = vec![0u8; len];
+            for b in v.iter_mut() {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *b = (state >> 33) as u8;
+            }
+            inputs.push(v);
+        }
+        inputs
+    }
+
+    #[test]
+    fn expand_matches_std_on_every_kernel() {
+        for src in sample_inputs() {
+            let expected = latin1_to_string(&src).into_bytes();
+            for k in kernel_entries() {
+                let mut dst = vec![0u8; utf8_capacity_for_latin1(src.len())];
+                let n = (k.latin1_to_utf8)(&src, &mut dst).expect("total");
+                assert_eq!(&dst[..n], &expected[..], "{} len={}", k.key, src.len());
+            }
+        }
+    }
+
+    #[test]
+    fn round_trips_through_every_encoding() {
+        for src in sample_inputs() {
+            let text = latin1_to_string(&src);
+            for k in kernel_entries() {
+                // latin1 -> utf8 -> latin1
+                let mut u8buf = vec![0u8; utf8_capacity_for_latin1(src.len())];
+                let n8 = (k.latin1_to_utf8)(&src, &mut u8buf).unwrap();
+                let mut back = vec![0u8; latin1_capacity_for(n8)];
+                let nb = (k.utf8_to_latin1)(&u8buf[..n8], &mut back).expect("convertible");
+                assert_eq!(&back[..nb], &src[..], "{} utf8 round trip", k.key);
+                // latin1 -> utf16 -> latin1
+                let mut u16buf = vec![0u16; src.len() + 16];
+                let n16 = (k.latin1_to_utf16)(&src, &mut u16buf).unwrap();
+                assert_eq!(
+                    &u16buf[..n16],
+                    &text.encode_utf16().collect::<Vec<_>>()[..],
+                    "{}",
+                    k.key
+                );
+                let mut back16 = vec![0u8; latin1_capacity_for(n16)];
+                let nb16 = (k.utf16_to_latin1)(&u16buf[..n16], &mut back16).unwrap();
+                assert_eq!(&back16[..nb16], &src[..], "{} utf16 round trip", k.key);
+                // latin1 -> utf32 -> latin1
+                let mut u32buf = vec![0u32; src.len() + 32];
+                let n32 = (k.latin1_to_utf32)(&src, &mut u32buf).unwrap();
+                assert_eq!(
+                    &u32buf[..n32],
+                    &text.chars().map(|c| c as u32).collect::<Vec<_>>()[..],
+                    "{}",
+                    k.key
+                );
+                let mut back32 = vec![0u8; latin1_capacity_for(n32)];
+                let nb32 = (k.utf32_to_latin1)(&u32buf[..n32], &mut back32).unwrap();
+                assert_eq!(&back32[..nb32], &src[..], "{} utf32 round trip", k.key);
+            }
+        }
+    }
+
+    #[test]
+    fn non_convertible_utf8_reports_the_scalar_error() {
+        // Valid UTF-8 above U+00FF, invalid UTF-8, and straddles at
+        // every alignment: every kernel must agree with the scalar
+        // reference exactly (kind and position).
+        let patterns: &[&[u8]] = &[
+            "Ā".as_bytes(),            // U+0100: first non-Latin-1 cp
+            "漢".as_bytes(),           // 3-byte
+            "🙂".as_bytes(),           // 4-byte
+            &[0xC3],                   // truncated pair
+            &[0x80],                   // stray continuation
+            &[0xC0, 0xAF],             // overlong
+            &[0xC2, 0x41],             // lead + non-continuation
+            &[0xFF],                   // header bits
+        ];
+        for pos in 0..40 {
+            for pat in patterns {
+                let mut src = vec![b'a'; pos];
+                src.extend_from_slice("é".as_bytes());
+                src.extend_from_slice(pat);
+                src.extend_from_slice(b"zz tail zz");
+                let mut dst_ref = vec![0u8; latin1_capacity_for(src.len())];
+                let reference = utf8_to_latin1_scalar(&src, &mut dst_ref);
+                for k in kernel_entries() {
+                    let mut dst = vec![0u8; latin1_capacity_for(src.len())];
+                    let got = (k.utf8_to_latin1)(&src, &mut dst);
+                    assert_eq!(got, reference, "{} pos={pos} pat={pat:02x?}", k.key);
+                    if let (Ok(nr), Ok(ng)) = (reference, got) {
+                        assert_eq!(&dst[..ng], &dst_ref[..nr]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_utf16_and_utf32_report_too_large_at_position() {
+        for pos in 0..36 {
+            for bad in [0x100u32, 0x7FF, 0xD800, 0xFFFF, 0x10000] {
+                let mut w: Vec<u16> = vec![0x41; pos];
+                if bad <= 0xFFFF {
+                    w.push(bad as u16);
+                    w.extend(std::iter::repeat(0xE9).take(9));
+                    for k in kernel_entries() {
+                        let mut dst = vec![0u8; latin1_capacity_for(w.len())];
+                        let err = (k.utf16_to_latin1)(&w, &mut dst).unwrap_err();
+                        assert_eq!(
+                            (err.kind, err.position),
+                            (ErrorKind::TooLarge, pos),
+                            "{} pos={pos} bad={bad:#x}",
+                            k.key
+                        );
+                    }
+                }
+                let mut c: Vec<u32> = vec![0x41; pos];
+                c.push(bad);
+                c.extend(std::iter::repeat(0xE9).take(9));
+                for k in kernel_entries() {
+                    let mut dst = vec![0u8; latin1_capacity_for(c.len())];
+                    let err = (k.utf32_to_latin1)(&c, &mut dst).unwrap_err();
+                    assert_eq!(
+                        (err.kind, err.position),
+                        (ErrorKind::TooLarge, pos),
+                        "{} pos={pos} bad={bad:#x}",
+                        k.key
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_vec_helpers_are_exact() {
+        for src in sample_inputs() {
+            let text = latin1_to_string(&src);
+            let v8 = latin1_to_utf8_vec(&src).expect("total");
+            assert_eq!(v8, text.as_bytes());
+            assert_eq!(
+                v8.len(),
+                crate::count::utf8_len_from_latin1(&src),
+                "counted, not truncated"
+            );
+            let back = utf8_to_latin1_vec(&v8).expect("convertible");
+            assert_eq!(back, src);
+            assert_eq!(back.len(), src.len());
+            let v16 = latin1_to_utf16_vec(&src).expect("total");
+            assert_eq!(v16, text.encode_utf16().collect::<Vec<_>>());
+            assert_eq!(utf16_to_latin1_vec(&v16).expect("convertible"), src);
+            let v32 = latin1_to_utf32_vec(&src).expect("total");
+            assert_eq!(v32, text.chars().map(|c| c as u32).collect::<Vec<_>>());
+            assert_eq!(utf32_to_latin1_vec(&v32).expect("convertible"), src);
+        }
+        // Errors come through the exact path unchanged.
+        assert_eq!(
+            utf8_to_latin1_vec("abĀcd".as_bytes()).unwrap_err(),
+            TranscodeError::new(ErrorKind::TooLarge, 2)
+        );
+        assert_eq!(
+            utf16_to_latin1_vec(&[0x41, 0x100]).unwrap_err(),
+            TranscodeError::new(ErrorKind::TooLarge, 1)
+        );
+    }
+
+    #[test]
+    fn undersized_buffers_fail_exactly() {
+        // 200 bytes of é need 400 output bytes; a 100-byte buffer must
+        // report OutputBuffer at the 50th input byte (scalar-degraded
+        // tail, not a register-guard overestimate).
+        let src = vec![0xE9u8; 200];
+        for k in kernel_entries() {
+            let mut dst = vec![0u8; 100];
+            let err = (k.latin1_to_utf8)(&src, &mut dst).unwrap_err();
+            assert_eq!(err.kind, ErrorKind::OutputBuffer, "{}", k.key);
+            assert_eq!(err.position, 50, "{}", k.key);
+        }
+        // Zero-sized output, non-empty input.
+        for k in kernel_entries() {
+            let err = (k.latin1_to_utf16)(b"x", &mut []).unwrap_err();
+            assert_eq!(err.kind, ErrorKind::OutputBuffer, "{}", k.key);
+        }
+    }
+
+    #[test]
+    fn best_resolves_to_a_registered_width() {
+        let best = kernel_entries()[3];
+        assert_eq!(best.key, "best");
+        let mut dst = vec![0u8; utf8_capacity_for_latin1(5)];
+        assert_eq!(latin1_to_utf8(b"smoke", &mut dst), Ok(5));
+        assert_eq!(&dst[..5], b"smoke");
+    }
+}

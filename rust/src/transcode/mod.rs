@@ -41,6 +41,7 @@
 pub mod endian;
 pub mod error;
 pub mod interleaved;
+pub mod latin1;
 pub mod streaming;
 pub mod utf16_to_utf8;
 pub mod utf32;
@@ -463,7 +464,9 @@ impl<T: Utf8ToUtf16 + ?Sized> Utf8ToUtf16 for std::sync::Arc<T> {
 
 /// A UTF-16 → UTF-8 transcoding engine.
 pub trait Utf16ToUtf8: Send + Sync {
+    /// Engine name as used in the paper's tables.
     fn name(&self) -> &'static str;
+    /// Whether this engine validates its input.
     fn validating(&self) -> bool;
 
     /// Transcode `src` (native word order) into `dst`, returning the

@@ -416,6 +416,8 @@ impl Default for StreamingUtf16ToUtf8<OurUtf16ToUtf8> {
 }
 
 impl<E: Utf16ToUtf8> StreamingUtf16ToUtf8<E> {
+    /// A streaming transcoder over an explicit engine (see
+    /// [`StreamingUtf8ToUtf16::with_engine`]).
     pub fn with_engine(engine: E) -> Self {
         StreamingUtf16ToUtf8 { engine, pending_high: None, received: 0, failed: false }
     }

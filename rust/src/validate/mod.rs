@@ -12,6 +12,10 @@
 //! * [`validate_utf16le`] — UTF-16 validation: surrogate words must form
 //!   properly ordered pairs (§3). Vectorized scan for the common
 //!   surrogate-free case, scalar pairing check otherwise.
+//! * [`validate_latin1_convertible`] / [`utf16_latin1_convertible`] —
+//!   Latin-1 convertibility checks for the `latin1` transcoding leg
+//!   ([`crate::transcode::latin1`]): is this UTF-8/UTF-16 input made of
+//!   code points `<= U+00FF` only?
 
 use crate::simd::{SimdBytes, VectorBackend, V128};
 use crate::tables::keiser_lemire::{BYTE_1_HIGH, BYTE_1_LOW, BYTE_2_HIGH};
@@ -37,6 +41,7 @@ impl<B: VectorBackend> Default for Utf8Validator<B> {
 }
 
 impl<B: VectorBackend> Utf8Validator<B> {
+    /// A fresh validator (no input seen yet).
     pub fn new() -> Self {
         Utf8Validator {
             error: <B::Bytes as SimdBytes>::zero(),
@@ -139,6 +144,47 @@ pub fn validate_utf8_with<B: VectorBackend>(input: &[u8]) -> bool {
     let mut v = Utf8Validator::<B>::new();
     v.push_tail(input);
     v.finish()
+}
+
+/// True iff `input` is valid UTF-8 **and** every code point fits in
+/// Latin-1 (`<= U+00FF`) — i.e.
+/// [`crate::transcode::latin1::utf8_to_latin1`] will convert it
+/// losslessly.
+///
+/// Register-at-a-time: the *same* mask-algebra proof as the conversion
+/// kernel (`transcode::latin1::latin1_register_check` — shared, so the
+/// validator's verdict cannot drift from what the converter accepts),
+/// with a scalar decode for the tail. A register ending in a lead is
+/// re-examined from the lead so a 2-byte character straddling
+/// registers is never misjudged.
+pub fn validate_latin1_convertible(input: &[u8]) -> bool {
+    use crate::simd::U8x16;
+    use crate::transcode::latin1::latin1_register_check;
+    let mut p = 0usize;
+    while p + 16 <= input.len() {
+        match latin1_register_check(U8x16::load(&input[p..])) {
+            Some((_, consumed)) => p += consumed,
+            None => return false,
+        }
+    }
+    while p < input.len() {
+        match crate::scalar::decode_utf8_char(&input[p..]) {
+            Ok((cp, len)) if cp <= 0xFF => p += len,
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// True iff every word of `input` fits in Latin-1 (`<= 0x00FF`) — i.e.
+/// [`crate::transcode::latin1::utf16_to_latin1`] will convert it
+/// losslessly. A branch-free OR-reduction; autovectorizes.
+pub fn utf16_latin1_convertible(input: &[u16]) -> bool {
+    let mut acc = 0u16;
+    for &w in input {
+        acc |= w;
+    }
+    acc <= 0xFF
 }
 
 /// Validate a UTF-16 (native word order) slice: every high surrogate is
@@ -302,6 +348,49 @@ mod tests {
         bad[70] = 0xFF;
         assert!(!by_blocks::<V128>(&bad));
         assert!(!by_blocks::<V256>(&bad));
+    }
+
+    #[test]
+    fn latin1_convertibility_matches_the_definition() {
+        // The oracle: valid UTF-8 whose chars all fit in a byte.
+        fn oracle(bytes: &[u8]) -> bool {
+            match std::str::from_utf8(bytes) {
+                Ok(s) => s.chars().all(|c| (c as u32) <= 0xFF),
+                Err(_) => false,
+            }
+        }
+        let cases: &[(&[u8], bool)] = &[
+            (b"", true),
+            (b"plain ascii only, well past a single sixteen-byte register", true),
+            ("café naïve àéîöü ÿ".as_bytes(), true),
+            ("Ā".as_bytes(), false),          // U+0100
+            ("漢字".as_bytes(), false),
+            ("🙂".as_bytes(), false),
+            (&[0xC3], false),                  // truncated
+            (&[0x80], false),                  // stray continuation
+            (&[0xC0, 0xAF], false),            // overlong
+            (&[0xC2, 0x41], false),            // lead + ASCII
+        ];
+        for &(bytes, expected) in cases {
+            assert_eq!(validate_latin1_convertible(bytes), expected, "{bytes:02x?}");
+            assert_eq!(oracle(bytes), expected, "oracle drifted: {bytes:02x?}");
+        }
+        // Slide a 2-byte char and a violation across register seams.
+        for pos in 0..40 {
+            let mut ok = vec![b'a'; pos];
+            ok.extend_from_slice("é".as_bytes());
+            ok.extend(std::iter::repeat(b'b').take(40 - pos));
+            assert!(validate_latin1_convertible(&ok), "pos={pos}");
+            assert_eq!(validate_latin1_convertible(&ok), oracle(&ok));
+            let mut nope = ok.clone();
+            nope.extend_from_slice("Ā".as_bytes());
+            assert!(!validate_latin1_convertible(&nope), "pos={pos}");
+        }
+        // UTF-16 side.
+        assert!(utf16_latin1_convertible(&[]));
+        assert!(utf16_latin1_convertible(&[0x41, 0xE9, 0xFF]));
+        assert!(!utf16_latin1_convertible(&[0x41, 0x100]));
+        assert!(!utf16_latin1_convertible(&[0xD800]));
     }
 
     #[test]

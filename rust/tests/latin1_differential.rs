@@ -1,0 +1,264 @@
+//! Differential suite for the Latin-1 subsystem (ISSUE 5).
+//!
+//! Every Latin-1 kernel set in the registry (`scalar` / `simd128` /
+//! `simd256` / `best`) against the std oracle — Latin-1 bytes are the
+//! first 256 Unicode code points, so `b as char` *is* the decoder and
+//! `u8::try_from(c as u32)` the encoder — over:
+//!
+//! * the Latin-1 corpora (`Corpus::latin1`, both collections) and the
+//!   pure-ASCII Latin lipsum dataset;
+//! * round trips `latin1 → utf8 → latin1`, `latin1 → utf16 → latin1`
+//!   and `latin1 → utf32 → latin1`, bit-identical;
+//! * error positions and kinds on non-Latin-1 input, equal to the
+//!   scalar reference on every backend;
+//! * 400 random seeds of byte soup (every value 0..=255 is valid
+//!   Latin-1) and corrupted UTF-8;
+//! * lane-boundary lengths (15/16/17, 31/32/33, and the 63/64/65 block
+//!   seams).
+
+use simdutf_rs::corpus::{Collection, Corpus, Language, SplitMix64};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::prelude::*;
+use simdutf_rs::transcode::latin1 as l1;
+
+/// The std decoder: Latin-1 bytes are code points.
+fn oracle_decode(latin1: &[u8]) -> String {
+    latin1.iter().map(|&b| b as char).collect()
+}
+
+/// The std encoder: `None` when any char is above U+00FF.
+fn oracle_encode(s: &str) -> Option<Vec<u8>> {
+    s.chars().map(|c| u8::try_from(c as u32).ok()).collect()
+}
+
+fn corpora() -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    for collection in [Collection::Lipsum, Collection::WikipediaMars] {
+        let corpus = Corpus::latin1(collection);
+        out.push((
+            format!("latin1-{collection:?}"),
+            corpus.latin1_bytes().expect("convertible by construction"),
+        ));
+    }
+    let ascii = Corpus::generate(Language::Latin, Collection::Lipsum);
+    out.push(("Latin-ascii".into(), ascii.latin1_bytes().expect("pure ASCII")));
+    // Lane-boundary lengths around the 16/32-byte registers and the
+    // 64-byte block, with the high byte adjacent to each seam.
+    for len in [0usize, 1, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129] {
+        let mut v: Vec<u8> = (0..len).map(|i| b'a' + (i % 26) as u8).collect();
+        if len > 0 {
+            v[len - 1] = 0xE9;
+            v[len / 2] = 0xC0;
+        }
+        out.push((format!("seam-{len}"), v));
+    }
+    out
+}
+
+#[test]
+fn every_kernel_matches_the_std_oracle_on_every_corpus() {
+    for (name, latin1) in corpora() {
+        let text = oracle_decode(&latin1);
+        let expected_utf8 = text.as_bytes();
+        let expected_utf16: Vec<u16> = text.encode_utf16().collect();
+        let expected_utf32: Vec<u32> = text.chars().map(|c| c as u32).collect();
+        for k in Registry::global().latin1_entries() {
+            let mut dst8 = vec![0u8; l1::utf8_capacity_for_latin1(latin1.len())];
+            let n8 = (k.latin1_to_utf8)(&latin1, &mut dst8).expect("total");
+            assert_eq!(&dst8[..n8], expected_utf8, "{} on {name}", k.key);
+
+            let mut dst16 = vec![0u16; utf16_capacity_for(latin1.len())];
+            let n16 = (k.latin1_to_utf16)(&latin1, &mut dst16).expect("total");
+            assert_eq!(&dst16[..n16], &expected_utf16[..], "{} on {name}", k.key);
+
+            let mut dst32 = vec![0u32; latin1.len() + 32];
+            let n32 = (k.latin1_to_utf32)(&latin1, &mut dst32).expect("total");
+            assert_eq!(&dst32[..n32], &expected_utf32[..], "{} on {name}", k.key);
+
+            // Round trips: bit-identical back to the Latin-1 bytes.
+            let mut back = vec![0u8; l1::latin1_capacity_for(n8)];
+            let nb = (k.utf8_to_latin1)(&dst8[..n8], &mut back).expect("convertible");
+            assert_eq!(&back[..nb], &latin1[..], "{} utf8 round trip on {name}", k.key);
+            let nb = (k.utf16_to_latin1)(&dst16[..n16], &mut back).expect("convertible");
+            assert_eq!(&back[..nb], &latin1[..], "{} utf16 round trip on {name}", k.key);
+            let nb = (k.utf32_to_latin1)(&dst32[..n32], &mut back).expect("convertible");
+            assert_eq!(&back[..nb], &latin1[..], "{} utf32 round trip on {name}", k.key);
+
+            // The predictor agrees with the oracle's UTF-8 length.
+            assert_eq!((k.utf8_len_from_latin1)(&latin1), expected_utf8.len(), "{}", k.key);
+        }
+        // The convertibility validators agree with the oracle.
+        assert!(validate_latin1_convertible(expected_utf8), "{name}");
+        assert!(utf16_latin1_convertible(&expected_utf16), "{name}");
+        // And the oracle encoder closes the loop.
+        assert_eq!(oracle_encode(&text).as_deref(), Some(&latin1[..]), "{name}");
+    }
+}
+
+#[test]
+fn four_hundred_random_seeds_round_trip_on_every_kernel() {
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(0xBEEF_0000 + seed);
+        let len = (rng.below(513)) as usize;
+        let mode = rng.below(3);
+        let latin1: Vec<u8> = (0..len)
+            .map(|_| match mode {
+                0 => rng.below(256) as u8,                  // full byte soup
+                1 => (rng.below(95) + 0x20) as u8,          // printable ASCII
+                _ => (rng.below(64) + 0xC0) as u8,          // dense high bytes
+            })
+            .collect();
+        let text = oracle_decode(&latin1);
+        for k in Registry::global().latin1_entries() {
+            let mut dst8 = vec![0u8; l1::utf8_capacity_for_latin1(latin1.len())];
+            let n8 = (k.latin1_to_utf8)(&latin1, &mut dst8).expect("total");
+            assert_eq!(&dst8[..n8], text.as_bytes(), "{} seed={seed}", k.key);
+            let mut back = vec![0u8; l1::latin1_capacity_for(n8)];
+            let nb = (k.utf8_to_latin1)(&dst8[..n8], &mut back).expect("convertible");
+            assert_eq!(&back[..nb], &latin1[..], "{} seed={seed}", k.key);
+
+            let mut dst16 = vec![0u16; utf16_capacity_for(latin1.len())];
+            let n16 = (k.latin1_to_utf16)(&latin1, &mut dst16).expect("total");
+            let nb16 = (k.utf16_to_latin1)(&dst16[..n16], &mut back).expect("convertible");
+            assert_eq!(&back[..nb16], &latin1[..], "{} seed={seed}", k.key);
+        }
+    }
+}
+
+#[test]
+fn corrupted_utf8_gets_the_scalar_error_on_every_backend() {
+    // Arbitrary corruption of convertible UTF-8: whatever the scalar
+    // reference reports (Ok or the exact error kind + position), every
+    // SIMD backend must report identically — including the written
+    // prefix when the result is Ok.
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(0xD1FF_0000 + seed);
+        let len = (rng.below(300) + 1) as usize;
+        let latin1: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let mut utf8 = oracle_decode(&latin1).into_bytes();
+        for _ in 0..(rng.below(4) + 1) {
+            let i = rng.below(utf8.len() as u64) as usize;
+            utf8[i] = rng.below(256) as u8;
+        }
+        let mut dst_ref = vec![0u8; l1::latin1_capacity_for(utf8.len())];
+        let reference = l1::utf8_to_latin1_scalar(&utf8, &mut dst_ref);
+        for k in Registry::global().latin1_entries() {
+            let mut dst = vec![0u8; l1::latin1_capacity_for(utf8.len())];
+            let got = (k.utf8_to_latin1)(&utf8, &mut dst);
+            assert_eq!(got, reference, "{} seed={seed} input={utf8:02x?}", k.key);
+            if let (Ok(nr), Ok(ng)) = (reference, got) {
+                assert_eq!(&dst[..ng], &dst_ref[..nr], "{} seed={seed}", k.key);
+            }
+        }
+        // The scalar result itself must agree with std's view.
+        match std::str::from_utf8(&utf8) {
+            Ok(s) => {
+                let convertible = s.chars().all(|c| (c as u32) <= 0xFF);
+                assert_eq!(reference.is_ok(), convertible, "seed={seed}");
+                assert_eq!(validate_latin1_convertible(&utf8), convertible, "seed={seed}");
+            }
+            Err(e) => {
+                let err = reference.expect_err("std rejects this input");
+                // A valid-prefix error position can sit past
+                // valid_up_to only when std stopped at a char that is
+                // merely non-Latin-1 — impossible here: invalid UTF-8
+                // errors carry std's exact valid_up_to unless an
+                // earlier char already failed conversion (TooLarge).
+                if err.kind != ErrorKind::TooLarge {
+                    assert_eq!(err.position, e.valid_up_to(), "seed={seed} {utf8:02x?}");
+                } else {
+                    assert!(err.position <= e.valid_up_to(), "seed={seed}");
+                }
+                assert!(!validate_latin1_convertible(&utf8), "seed={seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn non_latin1_characters_report_too_large_at_every_alignment() {
+    // A non-Latin-1 character (valid UTF-8, cp > U+00FF) slid across
+    // every register and block seam: TooLarge at the first byte of its
+    // sequence, on every backend.
+    for pad in 0..70 {
+        for ch in ["Ā", "€", "漢", "🙂"] {
+            let mut src = vec![b'x'; pad];
+            src.extend_from_slice("é".as_bytes()); // keep the SIMD path honest
+            src.extend_from_slice(ch.as_bytes());
+            src.extend_from_slice(b"tail");
+            let expected_pos = pad + 2; // 'x' * pad + 2-byte é
+            for k in Registry::global().latin1_entries() {
+                let mut dst = vec![0u8; l1::latin1_capacity_for(src.len())];
+                let err = (k.utf8_to_latin1)(&src, &mut dst).unwrap_err();
+                assert_eq!(
+                    (err.kind, err.position),
+                    (ErrorKind::TooLarge, expected_pos),
+                    "{} pad={pad} ch={ch}",
+                    k.key
+                );
+            }
+            assert!(!validate_latin1_convertible(&src), "pad={pad} ch={ch}");
+        }
+    }
+    // UTF-16 and UTF-32: the out-of-range unit's exact index.
+    for pad in 0..40 {
+        let mut words = vec![0xE9u16; pad];
+        words.push(0x100);
+        words.extend_from_slice(&[0x41; 5]);
+        let mut values: Vec<u32> = words.iter().map(|&w| w as u32).collect();
+        values[pad] = 0x1F600;
+        for k in Registry::global().latin1_entries() {
+            let mut dst = vec![0u8; l1::latin1_capacity_for(words.len())];
+            let err = (k.utf16_to_latin1)(&words, &mut dst).unwrap_err();
+            assert_eq!((err.kind, err.position), (ErrorKind::TooLarge, pad), "{}", k.key);
+            let err = (k.utf32_to_latin1)(&values, &mut dst).unwrap_err();
+            assert_eq!((err.kind, err.position), (ErrorKind::TooLarge, pad), "{}", k.key);
+        }
+        assert!(!utf16_latin1_convertible(&words), "pad={pad}");
+    }
+}
+
+#[test]
+fn exact_vec_helpers_agree_with_buffer_kernels() {
+    let corpus = Corpus::latin1(Collection::Lipsum);
+    let latin1 = corpus.latin1_bytes().expect("convertible");
+    let text = oracle_decode(&latin1);
+
+    let v8 = l1::latin1_to_utf8_vec(&latin1).expect("total");
+    assert_eq!(v8, text.as_bytes());
+    assert_eq!(v8.len(), text.len(), "exact length, no truncation slack");
+    assert_eq!(l1::utf8_to_latin1_vec(&v8).expect("convertible"), latin1);
+
+    let v16 = l1::latin1_to_utf16_vec(&latin1).expect("total");
+    assert_eq!(v16, text.encode_utf16().collect::<Vec<_>>());
+    assert_eq!(l1::utf16_to_latin1_vec(&v16).expect("convertible"), latin1);
+
+    let v32 = l1::latin1_to_utf32_vec(&latin1).expect("total");
+    assert_eq!(l1::utf32_to_latin1_vec(&v32).expect("convertible"), latin1);
+
+    // Error pass-through on the exact path.
+    let err = l1::utf8_to_latin1_vec("xĀ".as_bytes()).unwrap_err();
+    assert_eq!((err.kind, err.position), (ErrorKind::TooLarge, 1));
+}
+
+#[test]
+fn coordinator_and_cli_surface_agree_with_the_kernels() {
+    // The service's Latin-1 arms produce the same bytes as the kernels
+    // (exact-sized responses included).
+    use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
+    let corpus = Corpus::latin1(Collection::Lipsum);
+    let latin1 = corpus.latin1_bytes().expect("convertible");
+    let svc = TranscodeService::start(ServiceConfig {
+        workers: 2,
+        queue_depth: 16,
+        engine: EngineChoice::Simd { validate: true },
+    })
+    .expect("service");
+    let resp = svc.transcode(Request::latin1(1, latin1.clone()));
+    assert_eq!(resp.utf8().expect("ok"), &corpus.utf8[..]);
+    let resp2 = svc.transcode(Request::utf8_to_latin1(2, corpus.utf8.clone()));
+    assert_eq!(resp2.latin1().expect("ok"), &latin1[..]);
+    let resp3 = svc.transcode(Request::utf8_to_latin1(3, "漢".as_bytes().to_vec()));
+    assert_eq!(resp3.error().expect("structured").kind, ErrorKind::TooLarge);
+    svc.shutdown();
+}
