@@ -1,0 +1,105 @@
+//! `cargo bench --bench parallel` — the parallel-pipeline thread sweep.
+//!
+//! Every `Registry::parallel_entries` cell — the validating
+//! width-explicit engines (`simd128`, `simd256`, `best`) × the fixed
+//! {1, 2, 4, 8} thread ladder — running `par_convert_to_vec` end to end
+//! (boundary-safe split, count-first planning, allocation, scoped
+//! workers) on one tiled corpus, both strict directions plus the
+//! `latin1 → utf8` leg. The `@1` rows are the baseline the scaling is
+//! read against; `@1` vs the one-shot `convert_to_vec_exact` row
+//! isolates the pipeline's fixed overhead (split + per-chunk counting).
+//!
+//! Corpus size: 1 GiB by default ([`Corpus::tiled`] over the first
+//! lipsum profile), overridable with `SIMDUTF_PAR_BENCH_BYTES` — CI
+//! smoke runs pass a few MiB. Budget per cell via
+//! `SIMDUTF_BENCH_BUDGET_MS` (default 200 ms).
+
+use simdutf_rs::corpus::{generate_collection, Collection, Corpus};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::prelude::*;
+use std::time::{Duration, Instant};
+
+fn budget() -> Duration {
+    let ms: u64 = std::env::var("SIMDUTF_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    Duration::from_millis(ms)
+}
+
+/// Min-of-iterations MB/s for `f` over `input_bytes` of input.
+fn mbps(input_bytes: usize, budget: Duration, f: &dyn Fn() -> usize) -> f64 {
+    std::hint::black_box(f()); // warmup
+    let deadline = Instant::now() + budget;
+    let mut best = f64::INFINITY;
+    loop {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+        if Instant::now() >= deadline {
+            break;
+        }
+    }
+    input_bytes as f64 / best / 1e6
+}
+
+fn main() {
+    let target: usize = std::env::var("SIMDUTF_PAR_BENCH_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 30);
+    let base = &generate_collection(Collection::Lipsum)[0];
+    let corpus = Corpus::tiled(base, target);
+    let latin1: Vec<u8> = corpus.utf8.iter().map(|&b| b & 0x7F).collect();
+    let budget = budget();
+    let r = Registry::global();
+
+    println!(
+        "parallel pipeline sweep: {} tiled to {} bytes, budget {:?}/cell, best = {}",
+        corpus.name(),
+        corpus.utf8.len(),
+        budget,
+        simdutf_rs::simd::best_key()
+    );
+
+    println!("utf8_to_utf16 strict (input MB/s):");
+    for e in r.parallel_entries() {
+        let engine = r.get_utf8(e.engine).expect("parallel entries resolve");
+        let opts = ParallelOptions::with_threads(e.threads);
+        let v = mbps(corpus.utf8.len(), budget, &|| {
+            engine.par_convert_to_vec(&corpus.utf8, opts).expect("tiled corpus is valid").len()
+        });
+        println!("  {:>12}  {v:>8.0}", e.key);
+    }
+    // One-shot reference: what `@1` pays for the pipeline machinery.
+    let best8 = r.get_utf8("best").expect("registry has best");
+    let v = mbps(corpus.utf8.len(), budget, &|| {
+        best8.convert_to_vec_exact(&corpus.utf8).expect("valid").len()
+    });
+    println!("  {:>12}  {v:>8.0}", "best oneshot");
+
+    println!("utf16_to_utf8 strict (input MB/s):");
+    for e in r.parallel_entries() {
+        let engine = r.get_utf16(e.engine).expect("parallel entries resolve");
+        let opts = ParallelOptions::with_threads(e.threads);
+        let v = mbps(corpus.utf16.len() * 2, budget, &|| {
+            engine.par_convert_to_vec(&corpus.utf16, opts).expect("tiled corpus is valid").len()
+        });
+        println!("  {:>12}  {v:>8.0}", e.key);
+    }
+    let best16 = r.get_utf16("best").expect("registry has best");
+    let v = mbps(corpus.utf16.len() * 2, budget, &|| {
+        best16.convert_to_vec_exact(&corpus.utf16).expect("valid").len()
+    });
+    println!("  {:>12}  {v:>8.0}", "best oneshot");
+
+    println!("latin1_to_utf8 (input MB/s, ASCII-masked corpus):");
+    let kernels = r.latin1_entries()[3]; // `best`
+    for threads in [1usize, 2, 4, 8] {
+        let opts = ParallelOptions::with_threads(threads);
+        let v = mbps(latin1.len(), budget, &|| {
+            par_latin1_to_utf8_vec(kernels, &latin1, opts).expect("latin1 is total").len()
+        });
+        println!("  {:>12}  {v:>8.0}", format!("best@{threads}"));
+    }
+}

@@ -2,6 +2,9 @@
 
 use super::metrics::ServiceStats;
 use crate::engine::Registry;
+use crate::parallel::{
+    par_latin1_to_utf8_vec, ParallelOptions, ParallelUtf16ToUtf8, ParallelUtf8ToUtf16,
+};
 use crate::runtime::XlaEngine;
 use crate::transcode::{ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16};
 use std::path::PathBuf;
@@ -267,6 +270,14 @@ pub struct ServiceConfig {
     pub queue_depth: usize,
     /// The engine the worker pool runs (see [`EngineChoice`]).
     pub engine: EngineChoice,
+    /// Requests whose payload exceeds this many **bytes** run through
+    /// the [`crate::parallel`] pipeline instead of the one-shot path
+    /// (native engines only; the XLA path batches internally). Default:
+    /// 8 MiB. `usize::MAX` disables parallel routing.
+    pub parallel_threshold: usize,
+    /// Executor knobs for oversized requests (thread cap + minimum
+    /// chunk size — see [`ParallelOptions`]).
+    pub parallel: ParallelOptions,
 }
 
 impl Default for ServiceConfig {
@@ -275,6 +286,8 @@ impl Default for ServiceConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
             queue_depth: 1024,
             engine: EngineChoice::Simd { validate: true },
+            parallel_threshold: 8 << 20,
+            parallel: ParallelOptions::default(),
         }
     }
 }
@@ -343,10 +356,10 @@ impl TranscodeService {
         for w in 0..config.workers {
             let rx = Arc::clone(&rx);
             let stats = Arc::clone(&stats);
-            let engine = config.engine.clone();
+            let cfg = config.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("transcode-worker-{w}"))
-                .spawn(move || worker_loop(rx, stats, engine))
+                .spawn(move || worker_loop(rx, stats, cfg))
                 .map_err(|e| ServiceError(format!("spawn worker: {e}")))?;
             workers.push(handle);
         }
@@ -447,8 +460,8 @@ fn resolve_native(to16_key: &str, to8_key: &str, latin1_key: &str) -> WorkerEngi
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: EngineChoice) {
-    let engine = match &choice {
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, config: ServiceConfig) {
+    let engine = match &config.engine {
         EngineChoice::Simd { validate } => {
             resolve_native(if *validate { "best" } else { "best-nv" }, "best", "best")
         }
@@ -473,7 +486,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
         };
         let start = Instant::now();
         let input_bytes = request.input_bytes();
-        let response = run_one(&engine, &request);
+        let response = run_one(&engine, &request, config.parallel_threshold, config.parallel);
         // Code points via the shared SIMD counting kernels (this used
         // to be a private scalar word loop; `StatsSnapshot::chars` is
         // the code-point count in both directions now).
@@ -503,8 +516,20 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, choice: 
 /// uninit-backed). Note the per-request latency the stats record
 /// *includes* this allocation — which is exactly why it is no longer a
 /// zeroed worst-case buffer.
-fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
+///
+/// Payloads larger than `threshold` bytes route through the
+/// [`crate::parallel`] pipeline (same outputs, same replacement counts,
+/// same global error positions — the differential suite holds that
+/// equivalence), except UTF-8 → Latin-1 (compress has no parallel leg
+/// yet) and the XLA engine (which batches internally).
+fn run_one(
+    engine: &WorkerEngine,
+    request: &Request,
+    threshold: usize,
+    par: ParallelOptions,
+) -> Response {
     let mut replacements = 0usize;
+    let oversized = request.input_bytes() > threshold;
     let result = match (&request.payload, engine) {
         // Latin-1 legs: direction-less kernel sets, not per-engine
         // trait objects — the XLA graph has no Latin-1 path, so those
@@ -516,11 +541,15 @@ fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
                 WorkerEngine::Native { latin1, .. } => *latin1,
                 WorkerEngine::Xla(_) => resolve_latin1("best"),
             };
-            let exact = (k.utf8_len_from_latin1)(src);
-            crate::transcode::fill_uninit(exact + crate::transcode::EXACT_SLACK, |dst| {
-                (k.latin1_to_utf8)(src, dst)
-            })
-            .map(|(v, _)| Output::Utf8(v))
+            if oversized {
+                par_latin1_to_utf8_vec(k, src, par).map(Output::Utf8)
+            } else {
+                let exact = (k.utf8_len_from_latin1)(src);
+                crate::transcode::fill_uninit(exact + crate::transcode::EXACT_SLACK, |dst| {
+                    (k.latin1_to_utf8)(src, dst)
+                })
+                .map(|(v, _)| Output::Utf8(v))
+            }
         }
         (Payload::Utf8ToLatin1(src), eng) => {
             let k: &'static crate::transcode::latin1::Latin1Kernels = match eng {
@@ -535,10 +564,20 @@ fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
         }
         (Payload::Utf8(src), WorkerEngine::Native { to16, .. }) => {
             if request.lossy {
-                to16.convert_lossy_to_vec(src).map(|(words, r)| {
+                // `par_convert_lossy_to_vec` falls back to the one-shot
+                // path itself for non-validating engines, so the
+                // oversized branch is unconditional here.
+                if oversized {
+                    to16.par_convert_lossy_to_vec(src, par)
+                } else {
+                    to16.convert_lossy_to_vec(src)
+                }
+                .map(|(words, r)| {
                     replacements = r.replacements;
                     Output::Utf16(words)
                 })
+            } else if oversized {
+                to16.par_convert_to_vec(src, par).map(Output::Utf16)
             } else if to16.validating() {
                 to16.convert_to_vec_exact(src).map(Output::Utf16)
             } else {
@@ -550,10 +589,17 @@ fn run_one(engine: &WorkerEngine, request: &Request) -> Response {
         }
         (Payload::Utf16(src), WorkerEngine::Native { to8, .. }) => {
             if request.lossy {
-                to8.convert_lossy_to_vec(src).map(|(bytes, r)| {
+                if oversized {
+                    to8.par_convert_lossy_to_vec(src, par)
+                } else {
+                    to8.convert_lossy_to_vec(src)
+                }
+                .map(|(bytes, r)| {
                     replacements = r.replacements;
                     Output::Utf8(bytes)
                 })
+            } else if oversized {
+                to8.par_convert_to_vec(src, par).map(Output::Utf8)
             } else {
                 // The WTF-8 convention makes the UTF-16 predictor an
                 // upper bound for every engine: exact is always safe.
@@ -614,8 +660,8 @@ mod tests {
     use super::*;
 
     fn service(engine: EngineChoice) -> TranscodeService {
-        TranscodeService::start(ServiceConfig { workers: 4, queue_depth: 64, engine })
-            .expect("service")
+        let config = ServiceConfig { workers: 4, queue_depth: 64, engine, ..Default::default() };
+        TranscodeService::start(config).expect("service")
     }
 
     #[test]
@@ -694,6 +740,7 @@ mod tests {
             workers: 1,
             queue_depth: 4,
             engine: EngineChoice::Named("definitely-not-an-engine".into()),
+            ..Default::default()
         })
         .expect_err("must reject unknown engine");
         assert!(err.to_string().contains("unknown engine"), "{err}");
@@ -761,6 +808,55 @@ mod tests {
     }
 
     #[test]
+    fn oversized_requests_route_through_parallel() {
+        // A threshold tiny enough that every request below goes through
+        // the parallel pipeline (with a min_chunk low enough to really
+        // split), and the responses must be indistinguishable from the
+        // one-shot path: same output, same replacement counts, same
+        // *global* error positions.
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 2,
+            queue_depth: 16,
+            engine: EngineChoice::Simd { validate: true },
+            parallel_threshold: 1024,
+            parallel: ParallelOptions { threads: 4, min_chunk: 512 },
+        })
+        .expect("service");
+
+        let text = "routé 漢字 🙂 through the parallel pipeline ".repeat(300);
+        let units: Vec<u16> = text.encode_utf16().collect();
+
+        // Strict, both directions.
+        let resp = svc.transcode(Request::utf8(1, text.clone().into_bytes()));
+        assert_eq!(resp.utf16().expect("clean oversized utf8"), &units[..]);
+        let resp = svc.transcode(Request::utf16(2, units.clone()));
+        assert_eq!(resp.utf8().expect("clean oversized utf16"), text.as_bytes());
+
+        // A dirty byte deep inside an oversized payload: the strict
+        // error position must be in global document coordinates, and
+        // the lossy output must match the WHATWG reference.
+        let mut dirty = text.clone().into_bytes();
+        let bad_at = dirty.len();
+        dirty.push(0xFF);
+        dirty.extend_from_slice("trailing clean ascii ".repeat(200).as_bytes());
+        let resp = svc.transcode(Request::utf8(3, dirty.clone()));
+        let err = resp.error().expect("structured error");
+        assert_eq!((err.kind, err.position), (ErrorKind::HeaderBits, bad_at));
+        let expected: Vec<u16> = String::from_utf8_lossy(&dirty).encode_utf16().collect();
+        let resp = svc.transcode(Request::utf8_lossy(4, dirty));
+        assert_eq!(resp.utf16().expect("lossy oversized"), &expected[..]);
+        assert_eq!(resp.replacements, 1);
+
+        // Latin-1 ingest routes too (total, so only output to check).
+        let latin1: Vec<u8> = (0u8..=255).cycle().take(8192).collect();
+        let expected: Vec<u8> =
+            latin1.iter().map(|&b| b as char).collect::<String>().into_bytes();
+        let resp = svc.transcode(Request::latin1(5, latin1));
+        assert_eq!(resp.utf8().expect("latin1 oversized"), &expected[..]);
+        svc.shutdown();
+    }
+
+    #[test]
     fn try_submit_returns_request_after_shutdown() {
         // A zero-worker service drops the queue receiver inside
         // `start`, leaving the channel disconnected — exactly the state
@@ -770,6 +866,7 @@ mod tests {
             workers: 0,
             queue_depth: 4,
             engine: EngineChoice::Simd { validate: true },
+            ..Default::default()
         })
         .expect("zero-worker service starts");
         match svc.try_submit(Request::utf8(7, b"hello".to_vec())) {
@@ -792,6 +889,7 @@ mod tests {
             workers: 1,
             queue_depth: 2,
             engine: EngineChoice::Simd { validate: true },
+            ..Default::default()
         })
         .unwrap();
         let big = "x".repeat(4_000_000).into_bytes();

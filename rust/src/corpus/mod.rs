@@ -193,6 +193,27 @@ impl Corpus {
         )
     }
 
+    /// Tile `base` end-to-end until the UTF-8 encoding reaches at least
+    /// `target_bytes` — the constructor the ≥ 1 GB parallel benches use
+    /// instead of generating gigabyte corpora character-by-character
+    /// (tiling is a handful of `memcpy`-speed extends; regeneration
+    /// would dominate the benchmark setup). Whole-corpus repetition
+    /// trivially preserves character-boundary alignment and validity in
+    /// both encodings, and keeps the byte-class distribution (Table 4)
+    /// bit-exact, so per-character throughput is comparable with the
+    /// untiled dataset.
+    pub fn tiled(base: &Corpus, target_bytes: usize) -> Corpus {
+        assert!(!base.utf8.is_empty(), "cannot tile an empty corpus");
+        let reps = target_bytes.div_ceil(base.utf8.len()).max(1);
+        let mut utf8 = Vec::with_capacity(reps * base.utf8.len());
+        let mut utf16 = Vec::with_capacity(reps * base.utf16.len());
+        for _ in 0..reps {
+            utf8.extend_from_slice(&base.utf8);
+            utf16.extend_from_slice(&base.utf16);
+        }
+        Corpus { language: base.language, collection: base.collection, utf8, utf16 }
+    }
+
     /// The Latin-1 encoding of this corpus, when every code point fits
     /// (`<= U+00FF`): `Some` for [`Corpus::latin1`] and the pure-ASCII
     /// Latin lipsum dataset, `None` for every multi-script corpus.
@@ -379,6 +400,28 @@ mod tests {
             let w = corpus.utf16_prefix(n);
             assert!(validate_utf16le(w), "prefix {n}");
         }
+    }
+
+    #[test]
+    fn tiled_corpus_reaches_target_and_stays_aligned() {
+        let base = Corpus::generate(Language::Japanese, Collection::Lipsum);
+        let big = Corpus::tiled(&base, 3 * base.utf8.len() / 2);
+        // ceil(1.5) = 2 repetitions, both encodings in lockstep.
+        assert_eq!(big.utf8.len(), 2 * base.utf8.len());
+        assert_eq!(big.utf16.len(), 2 * base.utf16.len());
+        assert!(big.utf8.len() >= 3 * base.utf8.len() / 2);
+        assert_eq!(&big.utf8[..base.utf8.len()], &base.utf8[..]);
+        assert_eq!(&big.utf8[base.utf8.len()..], &base.utf8[..]);
+        // Validity survives tiling (the seam is a character boundary).
+        assert!(std::str::from_utf8(&big.utf8).is_ok());
+        assert!(validate_utf16le(&big.utf16));
+        // Byte-class distribution is bit-exact.
+        let (bs, ts) = (base.stats(), big.stats());
+        assert_eq!(ts.chars, 2 * bs.chars);
+        assert_eq!(ts.pct_by_len, bs.pct_by_len);
+        // Sub-tile targets still produce at least one full repetition.
+        let small = Corpus::tiled(&base, 1);
+        assert_eq!(small.utf8, base.utf8);
     }
 
     #[test]

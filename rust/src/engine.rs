@@ -79,6 +79,20 @@ pub struct Utf16Entry {
     pub paper: bool,
 }
 
+/// One cell of the parallel sweep: an engine key crossed with a worker
+/// thread count (see [`Registry::parallel_entries`]).
+pub struct ParallelEntry {
+    /// Composite display key, `"<engine>@<threads>"` (e.g. `"best@4"`) —
+    /// the cell name used by the `parallel` bench-json section and the
+    /// differential suite.
+    pub key: String,
+    /// The underlying engine's registry key (always a validating,
+    /// both-direction key: the parallel planner requires validation).
+    pub engine: &'static str,
+    /// Worker thread count for this cell.
+    pub threads: usize,
+}
+
 /// The engine registry. Usually accessed through [`Registry::global`].
 pub struct Registry {
     utf8: Vec<Utf8Entry>,
@@ -263,6 +277,26 @@ impl Registry {
         crate::transcode::latin1::kernel_entries()
     }
 
+    /// The parallel-pipeline sweep cells ([`crate::parallel`]): the
+    /// width-explicit validating engines plus the `best` alias, each
+    /// crossed with a **fixed** thread ladder `{1, 2, 4, 8}`. Fixed —
+    /// not derived from `available_parallelism` — so the differential
+    /// suite and the bench-json `parallel` section enumerate identical,
+    /// machine-independent cells everywhere (oversubscribing a smaller
+    /// machine is harmless: scoped threads are cheap and correctness is
+    /// thread-count-oblivious). Non-validating keys are excluded for
+    /// the same reason they are excluded from the lossy set: the
+    /// count-first planner needs validated sizes.
+    pub fn parallel_entries(&self) -> Vec<ParallelEntry> {
+        let mut cells = Vec::new();
+        for engine in ["simd128", "simd256", "best"] {
+            for threads in [1usize, 2, 4, 8] {
+                cells.push(ParallelEntry { key: format!("{engine}@{threads}"), engine, threads });
+            }
+        }
+        cells
+    }
+
     /// All registry keys with their directions, for CLI help/listings:
     /// `(key, display name, validating, has 8→16, has 16→8)`.
     pub fn describe(&self) -> Vec<(&'static str, &'static str, bool, bool, bool)> {
@@ -419,6 +453,23 @@ mod tests {
             let nb = (k.utf8_to_latin1)(&dst[..n], &mut back).expect("convertible");
             assert_eq!(&back[..nb], &latin1[..], "{}", k.key);
             assert_eq!((k.utf8_len_from_latin1)(&latin1), text.len(), "{}", k.key);
+        }
+    }
+
+    #[test]
+    fn parallel_entries_cover_validating_widths_and_thread_ladder() {
+        let r = Registry::global();
+        let cells = r.parallel_entries();
+        assert_eq!(cells.len(), 12, "3 engines x 4 thread counts");
+        let mut seen = std::collections::HashSet::new();
+        for cell in &cells {
+            assert!(seen.insert(cell.key.clone()), "duplicate cell {}", cell.key);
+            assert_eq!(cell.key, format!("{}@{}", cell.engine, cell.threads));
+            assert!([1, 2, 4, 8].contains(&cell.threads), "{}", cell.key);
+            // Every cell resolves in BOTH directions, and validates —
+            // the planner's prerequisite.
+            assert!(r.get_utf8(cell.engine).unwrap().validating(), "{}", cell.key);
+            assert!(r.get_utf16(cell.engine).unwrap().validating(), "{}", cell.key);
         }
     }
 

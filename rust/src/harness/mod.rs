@@ -761,9 +761,11 @@ pub fn bench_utf16_engine_mbps(engine: &dyn Utf16ToUtf8, corpus: &Corpus) -> f64
 
 /// Machine-readable engine × corpus throughput matrix: every registry
 /// entry (paper engines **and** the width-explicit `simd128`/`simd256`/
-/// `best` keys), each lipsum corpus profile, input MB/s. This is what
-/// CI writes to `BENCH_<n>.json` in smoke mode
-/// (`SIMDUTF_BENCH_BUDGET_MS` small) to seed the perf trajectory.
+/// `best` keys), each lipsum corpus profile, input MB/s — plus (v5) the
+/// `parallel` thread-sweep section over `Registry::parallel_entries` on
+/// a [`Corpus::tiled`] GB-scale corpus. This is what CI writes to
+/// `BENCH_<n>.json` in smoke mode (`SIMDUTF_BENCH_BUDGET_MS` small) to
+/// seed the perf trajectory.
 pub fn bench_json() -> String {
     bench_json_with(default_budget())
 }
@@ -1092,8 +1094,71 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
         ("utf16_to_latin1", l1_narrow_rows),
     ];
 
+    // Parallel thread sweep (new in v5): every `Registry::
+    // parallel_entries` cell — the validating width-explicit engines ×
+    // the fixed {1, 2, 4, 8} thread ladder — on one tiled corpus
+    // ([`Corpus::tiled`]), both strict directions, end-to-end
+    // `par_convert_to_vec` (planning, allocation and threads all inside
+    // the timed region). Full runs (per-cell budget ≥ 1 s) tile to the
+    // 1 GiB regime the pipeline targets; smoke runs tile to 8 MiB so CI
+    // and the test suite stay fast. `SIMDUTF_PAR_BENCH_BYTES` overrides
+    // the size either way; `SIMDUTF_PAR_MAX_THREADS` truncates the
+    // ladder (the CLI's `bench-json --threads N`).
+    let par_target = std::env::var("SIMDUTF_PAR_BENCH_BYTES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(if budget.as_millis() >= 1000 { 1 << 30 } else { 8 << 20 });
+    let par_max_threads = std::env::var("SIMDUTF_PAR_MAX_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(usize::MAX);
+    let par_corpus = Corpus::tiled(&corpora[0], par_target);
+    let par_entries: Vec<crate::engine::ParallelEntry> = r
+        .parallel_entries()
+        .into_iter()
+        .filter(|e| e.threads <= par_max_threads.max(1))
+        .collect();
+    let par8_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = par_entries
+        .iter()
+        .map(|e| {
+            let engine = r.get_utf8(e.engine).expect("parallel entries resolve");
+            let opts = ParallelOptions::with_threads(e.threads);
+            let res = measure(
+                || {
+                    let v = engine
+                        .par_convert_to_vec(&par_corpus.utf8, opts)
+                        .expect("tiled corpus is valid");
+                    std::hint::black_box(v.len());
+                },
+                budget,
+                1,
+            );
+            let mbps = par_corpus.utf8.len() as f64 / res.min.as_secs_f64() / 1e6;
+            (e.key.as_str(), vec![(par_corpus.name().to_string(), Some(mbps))])
+        })
+        .collect();
+    let par16_rows: Vec<(&str, Vec<(String, Option<f64>)>)> = par_entries
+        .iter()
+        .map(|e| {
+            let engine = r.get_utf16(e.engine).expect("parallel entries resolve");
+            let opts = ParallelOptions::with_threads(e.threads);
+            let res = measure(
+                || {
+                    let v = engine
+                        .par_convert_to_vec(&par_corpus.utf16, opts)
+                        .expect("tiled corpus is valid");
+                    std::hint::black_box(v.len());
+                },
+                budget,
+                1,
+            );
+            let mbps = (par_corpus.utf16.len() * 2) as f64 / res.min.as_secs_f64() / 1e6;
+            (e.key.as_str(), vec![(par_corpus.name().to_string(), Some(mbps))])
+        })
+        .collect();
+
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"simdutf-rs-bench-v4\",\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v5\",\n");
     out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
     out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
     out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
@@ -1103,7 +1168,16 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
     emit_section(&mut out, "utf16_to_utf8_lossy", &lossy16_rows, true);
     emit_nested_section(&mut out, "counts", &counts_sections, true);
     emit_nested_section(&mut out, "alloc_to_vec", &alloc_sections, true);
-    emit_nested_section(&mut out, "latin1", &latin1_sections, false);
+    emit_nested_section(&mut out, "latin1", &latin1_sections, true);
+    out.push_str("  \"parallel\": {\n");
+    out.push_str(&format!("    \"corpus_bytes\": {},\n", par_corpus.utf8.len()));
+    out.push_str("    \"utf8_to_utf16\": {\n");
+    emit_matrix(&mut out, "      ", &par8_rows);
+    out.push_str("    },\n");
+    out.push_str("    \"utf16_to_utf8\": {\n");
+    emit_matrix(&mut out, "      ", &par16_rows);
+    out.push_str("    }\n");
+    out.push_str("  }\n");
     out.push_str("}\n");
     out
 }
@@ -1172,7 +1246,7 @@ mod tests {
         );
         assert!(json.contains("+dirty10"), "missing dirty cells:\n{json}");
         // v3: counting kernels and alloc-strategy head-to-head.
-        assert!(json.contains("\"simdutf-rs-bench-v4\""), "schema must be v4:\n{json}");
+        assert!(json.contains("\"simdutf-rs-bench-v5\""), "schema must be v5:\n{json}");
         assert!(json.contains("\"counts\""), "missing counts section:\n{json}");
         for sub in [
             "utf16_len_from_utf8",
@@ -1194,6 +1268,13 @@ mod tests {
         }
         for cell in ["mixed", "ascii"] {
             assert!(json.contains(&format!("\"{cell}\"")), "missing latin1 cell {cell}:\n{json}");
+        }
+        // v5: the parallel thread sweep — every engine × thread-ladder
+        // cell, plus the tiled corpus size.
+        assert!(json.contains("\"parallel\""), "missing parallel section:\n{json}");
+        assert!(json.contains("\"corpus_bytes\""), "missing corpus_bytes:\n{json}");
+        for e in Registry::global().parallel_entries() {
+            assert!(json.contains(&format!("\"{}\"", e.key)), "missing parallel {}:\n{json}", e.key);
         }
     }
 

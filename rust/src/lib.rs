@@ -49,9 +49,15 @@
 //! * [`corpus`] — synthetic corpus generators reproducing the byte-class
 //!   distributions of the paper's lipsum and wikipedia-Mars datasets
 //!   (Table 4).
+//! * [`parallel`] — GB-scale multi-threaded transcoding: boundary-safe
+//!   chunking, count-first exact planning, and scoped-thread workers
+//!   writing in place into one allocation (zero stitch-up copies), with
+//!   error positions in global document coordinates
+//!   (`par_convert_to_vec`, strict and lossy, plus `latin1 → utf8`).
 //! * [`coordinator`] — a transcoding service (router, batcher, worker
 //!   pool, backpressure, metrics) that serves any registry engine and
-//!   surfaces structured errors in its responses.
+//!   surfaces structured errors in its responses; oversized requests
+//!   route through [`parallel`].
 //! * [`runtime`] — a PJRT client that loads the AOT-compiled JAX/Pallas
 //!   batch transcoding graph (`artifacts/*.hlo.txt`) for batch offload
 //!   (stubbed out unless built with `--cfg pjrt_runtime`).
@@ -144,6 +150,7 @@ pub mod count;
 pub mod counters;
 pub mod engine;
 pub mod harness;
+pub mod parallel;
 pub mod runtime;
 pub mod scalar;
 pub mod simd;
@@ -166,6 +173,10 @@ pub mod prelude {
         utf8_len_from_utf16, CountKernels,
     };
     pub use crate::engine::Registry;
+    pub use crate::parallel::{
+        par_latin1_to_utf8_vec, split_utf16, split_utf8, ParallelOptions, ParallelUtf16ToUtf8,
+        ParallelUtf8ToUtf16,
+    };
     pub use crate::simd::{best_key, VectorBackend, V128, V256};
     pub use crate::transcode::{
         latin1::{

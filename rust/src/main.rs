@@ -5,7 +5,7 @@
 //! ```text
 //! simdutf-cli harness [section|all] [--artifacts DIR]
 //!     Regenerate the paper's tables/figures (table4..table10, fig5..fig7, xla).
-//! simdutf-cli transcode [--from ENC] [--to ENC] [--engine KEY] [--lossy] <file>
+//! simdutf-cli transcode [--from ENC] [--to ENC] [--engine KEY] [--lossy] [--threads N] <file>
 //!     Transcode a file to stdout. ENC is utf8, utf16 or latin1 (UTF-16
 //!     is little-endian bytes on both sides); a missing side defaults
 //!     to utf8 (or utf16 when the other side is utf8), and the legacy
@@ -16,6 +16,9 @@
 //!     only: Latin-1 cannot encode U+FFFD, so its conversions are
 //!     always strict). Latin-1 legs take --engine
 //!     scalar|simd128|simd256|best (kernel sets, default best).
+//!     --threads N runs the conversion through the parallel pipeline
+//!     (UTF-8⇄UTF-16 and latin1→utf8; same outputs, same errors in
+//!     global coordinates — see the `parallel` module).
 //! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla|KEY] [--lossy]
 //!     Run the streaming service against a synthetic workload and print
 //!     throughput/latency stats. KEY is any registry engine (see `engines`).
@@ -25,11 +28,14 @@
 //!     List every registered engine (key, name, validation, directions),
 //!     including the width-explicit `simd128`/`simd256` backends and the
 //!     runtime-dispatched `best` alias.
-//! simdutf-cli bench-json [--out FILE]
+//! simdutf-cli bench-json [--out FILE] [--threads N]
 //!     Emit the machine-readable engine × corpus throughput matrix
-//!     (input MB/s for every registry key; see harness::bench_json).
-//!     CI runs this in smoke mode (SIMDUTF_BENCH_BUDGET_MS=5) to write
-//!     BENCH_<n>.json.
+//!     (input MB/s for every registry key; see harness::bench_json),
+//!     including the v5 `parallel` thread-sweep section on a tiled
+//!     GB-scale corpus (smoke runs shrink it; override with
+//!     SIMDUTF_PAR_BENCH_BYTES). --threads N caps the sweep's thread
+//!     ladder. CI runs this in smoke mode (SIMDUTF_BENCH_BUDGET_MS=5)
+//!     to write BENCH_<n>.json.
 //! simdutf-cli validate <file>
 //!     Validate a file as UTF-8; reports the error kind and position
 //!     (exit code 1 when invalid).
@@ -109,6 +115,11 @@ fn cmd_engines() -> i32 {
 }
 
 fn cmd_bench_json(args: &[String]) -> i32 {
+    // The thread-ladder cap travels by env var (the harness also honors
+    // it when invoked directly); set before the sweep runs.
+    if let Some(n) = flag_value(args, "--threads") {
+        std::env::set_var("SIMDUTF_PAR_MAX_THREADS", n);
+    }
     let json = simdutf_rs::harness::bench_json();
     match flag_value(args, "--out") {
         Some(path) => {
@@ -158,6 +169,9 @@ fn cmd_transcode(args: &[String]) -> i32 {
     // CPU supports. `--engine simd128`/`simd256` (or any key) pins one.
     let engine_key = flag_value(args, "--engine").unwrap_or_else(|| "best".to_string());
     let lossy = has_flag(args, "--lossy");
+    // 0 (the default) keeps the one-shot path; N > 0 routes through the
+    // parallel pipeline with a cap of N worker threads.
+    let threads: usize = flag_value(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
     let path = match args.iter().rev().find(|a| !a.starts_with("--")) {
         Some(p) => p.clone(),
         None => {
@@ -175,7 +189,7 @@ fn cmd_transcode(args: &[String]) -> i32 {
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
     if from == "latin1" || to == "latin1" {
-        return cmd_transcode_latin1(&from, &to, &engine_key, lossy, &data, &mut out);
+        return cmd_transcode_latin1(&from, &to, &engine_key, lossy, threads, &data, &mut out);
     }
     match (from.as_str(), to.as_str()) {
         ("utf8", "utf16") => {
@@ -184,7 +198,12 @@ fn cmd_transcode(args: &[String]) -> i32 {
                 return 2;
             };
             if lossy {
-                match engine.convert_lossy_to_vec(&data) {
+                let result = if threads > 0 {
+                    engine.par_convert_lossy_to_vec(&data, ParallelOptions::with_threads(threads))
+                } else {
+                    engine.convert_lossy_to_vec(&data)
+                };
+                match result {
                     Ok((words, info)) => {
                         for w in words {
                             out.write_all(&w.to_le_bytes()).unwrap();
@@ -205,7 +224,12 @@ fn cmd_transcode(args: &[String]) -> i32 {
                     }
                 }
             } else {
-                match engine.convert_to_vec(&data) {
+                let result = if threads > 0 {
+                    engine.par_convert_to_vec(&data, ParallelOptions::with_threads(threads))
+                } else {
+                    engine.convert_to_vec(&data)
+                };
+                match result {
                     Ok(words) => {
                         for w in words {
                             out.write_all(&w.to_le_bytes()).unwrap();
@@ -227,7 +251,12 @@ fn cmd_transcode(args: &[String]) -> i32 {
                 return 2;
             };
             if lossy {
-                match engine.convert_lossy_to_vec(&words) {
+                let result = if threads > 0 {
+                    engine.par_convert_lossy_to_vec(&words, ParallelOptions::with_threads(threads))
+                } else {
+                    engine.convert_lossy_to_vec(&words)
+                };
+                match result {
                     Ok((bytes, info)) => {
                         out.write_all(&bytes).unwrap();
                         if info.replacements > 0 {
@@ -246,7 +275,12 @@ fn cmd_transcode(args: &[String]) -> i32 {
                     }
                 }
             } else {
-                match engine.convert_to_vec(&words) {
+                let result = if threads > 0 {
+                    engine.par_convert_to_vec(&words, ParallelOptions::with_threads(threads))
+                } else {
+                    engine.convert_to_vec(&words)
+                };
+                match result {
                     Ok(bytes) => {
                         out.write_all(&bytes).unwrap();
                         0
@@ -268,12 +302,15 @@ fn cmd_transcode(args: &[String]) -> i32 {
 }
 
 /// The Latin-1 legs of `transcode`: kernel-set dispatch
-/// (`Registry::latin1_entries`), always strict.
+/// (`Registry::latin1_entries`), always strict. `--threads` applies to
+/// the `latin1 → utf8` leg (the one with a parallel pipeline) and is
+/// ignored elsewhere.
 fn cmd_transcode_latin1(
     from: &str,
     to: &str,
     engine_key: &str,
     lossy: bool,
+    threads: usize,
     data: &[u8],
     out: &mut impl Write,
 ) -> i32 {
@@ -293,10 +330,16 @@ fn cmd_transcode_latin1(
     use simdutf_rs::transcode::latin1::{latin1_capacity_for, utf8_capacity_for_latin1};
     match (from, to) {
         ("latin1", "utf8") => {
-            let mut dst = vec![0u8; utf8_capacity_for_latin1(data.len())];
             // Total: Latin-1 -> UTF-8 cannot fail on content.
-            let n = (k.latin1_to_utf8)(data, &mut dst).expect("contract-sized buffer");
-            out.write_all(&dst[..n]).unwrap();
+            if threads > 0 {
+                let v = par_latin1_to_utf8_vec(k, data, ParallelOptions::with_threads(threads))
+                    .expect("latin1 ingest is total");
+                out.write_all(&v).unwrap();
+            } else {
+                let mut dst = vec![0u8; utf8_capacity_for_latin1(data.len())];
+                let n = (k.latin1_to_utf8)(data, &mut dst).expect("contract-sized buffer");
+                out.write_all(&dst[..n]).unwrap();
+            }
             0
         }
         ("latin1", "utf16") => {
@@ -361,14 +404,14 @@ fn cmd_serve(args: &[String]) -> i32 {
     };
 
     println!("starting service: workers={workers} engine={engine:?} requests={requests}");
-    let service =
-        match TranscodeService::start(ServiceConfig { workers, queue_depth: 1024, engine }) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("serve: {e:#}");
-                return 1;
-            }
-        };
+    let config = ServiceConfig { workers, queue_depth: 1024, engine, ..Default::default() };
+    let service = match TranscodeService::start(config) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: {e:#}");
+            return 1;
+        }
+    };
 
     // Synthetic mixed workload drawn from the paper's corpora; with
     // --lossy each payload takes a 1% corruption pass (dirty-input

@@ -1,0 +1,1120 @@
+//! Parallel GB-scale transcoding: boundary-safe chunking, count-first
+//! planning, scoped-thread execution with zero stitch-up copies.
+//!
+//! Every engine in this crate is single-threaded; a modern NVMe disk or
+//! NIC is not. This module turns any validating engine into a
+//! multi-core pipeline for huge documents, in three stages:
+//!
+//! 1. **Boundary-safe splitting** ([`split_utf8`] / [`split_utf16`]).
+//!    The input is cut into roughly equal chunks, and each cut is
+//!    *snapped* backwards so it can never divide a character:
+//!    [`snap_utf8`] rewinds over continuation bytes to the nearest lead
+//!    byte (the trailing-lead rewind discipline of
+//!    [`crate::transcode::latin1`] and the streaming carry logic),
+//!    [`snap_utf16`] steps off a high↔low surrogate pair. With every
+//!    chunk starting on a non-continuation unit, no character *and no
+//!    WHATWG maximal invalid subpart* straddles a cut, so per-chunk
+//!    decoding — strict or lossy — is exactly global decoding of the
+//!    same units (the differential suite proves this at every offset).
+//!
+//! 2. **Count-first planning.** The [`crate::count`] kernels compute
+//!    each chunk's **exact** output size (in parallel, ~an order of
+//!    magnitude faster than transcoding). The predictors are additive
+//!    per input unit, so the chunk sums equal the one-shot exact size,
+//!    and they are monotone prefix-exact, which is what lets a worker
+//!    recover precisely from an engine's conservative buffer guard
+//!    (below).
+//!
+//! 3. **In-place assembly.** One uninitialized allocation of the exact
+//!    total ([`crate::transcode`]'s `fill_uninit` core) is partitioned
+//!    into per-chunk sub-slices via `split_at_mut`; scoped threads
+//!    ([`std::thread::scope`]) run one worker per chunk, each writing
+//!    its result **directly into its pre-sized sub-slice**. Success
+//!    means every worker filled its slice exactly, so the buffer is
+//!    complete the moment the scope joins — there is no concatenation
+//!    or compaction pass, zero bytes are copied after conversion.
+//!
+//! ### Workers and the slack problem
+//!
+//! The SIMD engines guard their inner loops with full-register
+//! look-ahead (up to [`crate::transcode::EXACT_SLACK`] output units),
+//! so handing one an *exactly*-sized buffer risks a spurious
+//! [`ErrorKind::OutputBuffer`] near the end. Workers therefore run the
+//! engine over the chunk minus a small tail (sized so the tail's
+//! remaining output always covers the guard), then finish the tail with
+//! exact per-unit scalar code — the same degrade-to-scalar-tail
+//! discipline the Latin-1 kernels use. If the engine still reports
+//! `OutputBuffer` (possible only on pathologically dirty tails in the
+//! UTF-8 direction), the worker recovers via the crate's frontier
+//! contract: the reported position is a character boundary whose prefix
+//! was fully transcoded, so one counting pass over the prefix yields
+//! the exact output frontier and the scalar finisher resumes there.
+//!
+//! ### Global error coordinates
+//!
+//! Chunks before the first failing chunk converted successfully, hence
+//! are valid; and no sequence straddles a cut — so the earliest
+//! chunk-local error *is* the global first error. Its position is
+//! rebased to document coordinates and its kind canonicalized with
+//! [`crate::transcode::classify_utf8_error`] /
+//! [`classify_utf16_error`](crate::transcode::classify_utf16_error)
+//! (a chunk ending in a lone high surrogate reports `TooShort` locally
+//! but `Surrogate` globally when the next chunk starts with a
+//! non-low-surrogate word). Lossy conversion likewise sums per-chunk
+//! replacement counts and canonicalizes the earliest first-error, so
+//! [`ParallelUtf8ToUtf16::par_convert_lossy_to_vec`] is bit-identical
+//! to the one-shot API on arbitrary input.
+//!
+//! ### Non-validating engines
+//!
+//! The planner's exact sizes bound the output of *validating* engines
+//! only (a non-validating engine's garbage output on invalid input has
+//! no predictable size), so the `par_*` methods fall back to the
+//! one-shot path when `validating()` is false.
+
+use crate::transcode::latin1::Latin1Kernels;
+use crate::transcode::{
+    classify_utf16_error, classify_utf8_error, fill_uninit, ErrorKind, LossyResult, PodUnit,
+    TranscodeError, TranscodeResult, Utf16ToUtf8, Utf8ToUtf16, EXACT_SLACK, REPLACEMENT_UTF16,
+    REPLACEMENT_UTF8,
+};
+
+/// Input units (bytes) a UTF-8 chunk worker leaves for its scalar tail:
+/// a valid tail this long yields at least `EXACT_SLACK` output words
+/// (4 bytes per word worst case), so the engine's buffer guard cannot
+/// trip while the bulk is still running.
+const PAR_TAIL_UTF8: usize = 4 * EXACT_SLACK;
+
+/// Input units (words) a UTF-16 chunk worker leaves for its scalar
+/// tail: every word yields at least one output byte, so `EXACT_SLACK`
+/// words of tail keep the guard satisfied even on garbage input.
+const PAR_TAIL_UTF16: usize = EXACT_SLACK;
+
+/// Bytes a Latin-1 chunk worker leaves for its scalar tail (one output
+/// byte per input byte minimum).
+const PAR_TAIL_LATIN1: usize = EXACT_SLACK;
+
+/// Tuning knobs for the parallel executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelOptions {
+    /// Worker thread cap. `0` (the default) resolves to
+    /// [`std::thread::available_parallelism`].
+    pub threads: usize,
+    /// Minimum chunk size in **input units** (bytes for UTF-8/Latin-1
+    /// sources, words for UTF-16). Inputs at or below this run the
+    /// one-shot path; larger inputs use at most
+    /// `len / min_chunk` chunks so no thread is spawned for trivial
+    /// work. Default: 1 MiUnit.
+    pub min_chunk: usize,
+}
+
+impl Default for ParallelOptions {
+    fn default() -> Self {
+        ParallelOptions { threads: 0, min_chunk: 1 << 20 }
+    }
+}
+
+impl ParallelOptions {
+    /// Options pinned to exactly `threads` workers (still subject to
+    /// the `min_chunk` floor).
+    pub fn with_threads(threads: usize) -> ParallelOptions {
+        ParallelOptions { threads, ..ParallelOptions::default() }
+    }
+
+    /// Number of chunks the executor will actually use for an input of
+    /// `len` units: `threads` (resolved), capped by the `min_chunk`
+    /// floor, never zero.
+    pub fn plan_chunks(&self, len: usize) -> usize {
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        threads.min(len / self.min_chunk.max(1)).max(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Splitter
+// ---------------------------------------------------------------------------
+
+/// Snap a candidate UTF-8 cut backwards to the nearest non-continuation
+/// byte (a lead byte, an ASCII byte, or position 0). The rewind is
+/// unbounded on purpose: a run of stray continuation bytes is *invalid*
+/// input, and bounding the rewind would let a cut land inside the run,
+/// splitting one WHATWG maximal subpart into two and changing the lossy
+/// replacement count versus one-shot conversion.
+pub fn snap_utf8(src: &[u8], pos: usize) -> usize {
+    let mut pos = pos.min(src.len());
+    while pos > 0 && pos < src.len() && src[pos] & 0xC0 == 0x80 {
+        pos -= 1;
+    }
+    pos
+}
+
+/// Snap a candidate UTF-16 cut so it cannot divide a surrogate pair:
+/// steps back one word iff the cut sits between a high surrogate and a
+/// low surrogate. (A high surrogate followed by anything else is
+/// already an *unpaired* surrogate — one word, nothing to split.)
+pub fn snap_utf16(src: &[u16], pos: usize) -> usize {
+    let pos = pos.min(src.len());
+    if pos > 0
+        && pos < src.len()
+        && (0xD800..0xDC00).contains(&src[pos - 1])
+        && (0xDC00..0xE000).contains(&src[pos])
+    {
+        pos - 1
+    } else {
+        pos
+    }
+}
+
+fn bounds_from(
+    len: usize,
+    cuts: impl Iterator<Item = usize>,
+    snap: impl Fn(usize) -> usize,
+) -> Vec<usize> {
+    let mut bounds = vec![0];
+    for cut in cuts {
+        let b = snap(cut.min(len));
+        if b > *bounds.last().expect("bounds start non-empty") && b < len {
+            bounds.push(b);
+        }
+    }
+    bounds.push(len);
+    bounds
+}
+
+/// Split `src` into at most `parts` chunks of roughly equal size, every
+/// boundary snapped to a character-safe position ([`snap_utf8`]).
+/// Returns the ascending boundary offsets, starting with `0` and ending
+/// with `src.len()` (duplicates collapsed, so fewer than `parts` chunks
+/// may result on small or pathological inputs).
+pub fn split_utf8(src: &[u8], parts: usize) -> Vec<usize> {
+    let parts = parts.max(1);
+    bounds_from(src.len(), (1..parts).map(|i| i * src.len() / parts), |p| snap_utf8(src, p))
+}
+
+/// [`split_utf8`] for UTF-16 input: boundaries never divide a surrogate
+/// pair ([`snap_utf16`]).
+pub fn split_utf16(src: &[u16], parts: usize) -> Vec<usize> {
+    let parts = parts.max(1);
+    bounds_from(src.len(), (1..parts).map(|i| i * src.len() / parts), |p| snap_utf16(src, p))
+}
+
+fn bounds_at_utf8(src: &[u8], cuts: &[usize]) -> Vec<usize> {
+    let mut cuts = cuts.to_vec();
+    cuts.sort_unstable();
+    bounds_from(src.len(), cuts.into_iter(), |p| snap_utf8(src, p))
+}
+
+fn bounds_at_utf16(src: &[u16], cuts: &[usize]) -> Vec<usize> {
+    let mut cuts = cuts.to_vec();
+    cuts.sort_unstable();
+    bounds_from(src.len(), cuts.into_iter(), |p| snap_utf16(src, p))
+}
+
+// ---------------------------------------------------------------------------
+// Scoped-thread plumbing
+// ---------------------------------------------------------------------------
+
+/// Run `f(0..n)` across scoped threads, results in index order. `n == 1`
+/// runs inline (the common one-shot fallback must not pay a spawn).
+fn par_map<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    if n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        for (i, slot) in out.iter_mut().enumerate() {
+            s.spawn(move || *slot = Some(f(i)));
+        }
+    });
+    out.into_iter().map(|r| r.expect("scoped worker always fills its slot")).collect()
+}
+
+/// Partition `dst` into consecutive sub-slices of the planned sizes
+/// (which sum to `dst.len()` by construction).
+fn partition<'a, T>(mut dst: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
+    let mut parts = Vec::with_capacity(sizes.len());
+    for &sz in sizes {
+        let (head, rest) = std::mem::take(&mut dst).split_at_mut(sz);
+        parts.push(head);
+        dst = rest;
+    }
+    parts
+}
+
+/// The assembly core shared by every direction: allocate the exact
+/// total uninitialized, partition it, run one worker per chunk in a
+/// thread scope, and reduce the per-chunk outcomes. `join` sees the
+/// outcomes in chunk order and either produces the aggregate result
+/// (success freezes the buffer — every worker filled its slice exactly)
+/// or the canonical global error (which discards it).
+fn assemble<U, R, A>(
+    sizes: &[usize],
+    worker: impl Fn(usize, &mut [U]) -> Result<R, TranscodeError> + Sync,
+    join: impl FnOnce(Vec<Result<R, TranscodeError>>) -> TranscodeResult<A>,
+) -> TranscodeResult<(Vec<U>, A)>
+where
+    U: PodUnit + Send,
+    R: Send,
+    A: crate::transcode::WrittenLen,
+{
+    let total: usize = sizes.iter().sum();
+    fill_uninit(total, |dst| {
+        let parts = partition(dst, sizes);
+        let mut outcomes: Vec<Option<Result<R, TranscodeError>>> =
+            (0..parts.len()).map(|_| None).collect();
+        if parts.len() == 1 {
+            for (i, part) in parts.into_iter().enumerate() {
+                outcomes[i] = Some(worker(i, part));
+            }
+        } else {
+            std::thread::scope(|s| {
+                let worker = &worker;
+                for ((i, part), slot) in parts.into_iter().enumerate().zip(outcomes.iter_mut()) {
+                    s.spawn(move || *slot = Some(worker(i, part)));
+                }
+            });
+        }
+        let outcomes: Vec<Result<R, TranscodeError>> = outcomes
+            .into_iter()
+            .map(|r| r.expect("scoped worker always fills its slot"))
+            .collect();
+        join(outcomes)
+    })
+}
+
+/// Rebase a chunk-local error to document coordinates with a canonical
+/// kind: encoding errors re-classify at the global position (the prefix
+/// is valid — earlier chunks converted successfully and cuts are
+/// character-safe — so the scalar scan terminates right there); the
+/// buffer/internal kinds, which no reachable path produces, just shift.
+fn globalize_utf8(src: &[u8], chunk_start: usize, e: TranscodeError) -> TranscodeError {
+    match e.kind {
+        ErrorKind::OutputBuffer | ErrorKind::Other => e.offset(chunk_start),
+        _ => classify_utf8_error(src, chunk_start + e.position),
+    }
+}
+
+/// [`globalize_utf8`] for UTF-16 input. This is where a chunk-final
+/// lone high surrogate's local `TooShort` becomes the global
+/// `Surrogate` when the next chunk begins with a non-low word.
+fn globalize_utf16(src: &[u16], chunk_start: usize, e: TranscodeError) -> TranscodeError {
+    match e.kind {
+        ErrorKind::OutputBuffer | ErrorKind::Other => e.offset(chunk_start),
+        _ => classify_utf16_error(src, chunk_start + e.position),
+    }
+}
+
+/// Reduce strict per-chunk outcomes: the earliest failing chunk (its
+/// local error globalized by `globalize`) or success.
+fn join_strict(
+    outcomes: Vec<Result<(), TranscodeError>>,
+    total: usize,
+    mut globalize: impl FnMut(usize, TranscodeError) -> TranscodeError,
+) -> TranscodeResult<usize> {
+    for (i, outcome) in outcomes.into_iter().enumerate() {
+        if let Err(e) = outcome {
+            return Err(globalize(i, e));
+        }
+    }
+    Ok(total)
+}
+
+/// Per-chunk lossy outcome: replacement count and local first error, or
+/// a (defensively unreachable) hard failure.
+type LossyOutcome = Result<(usize, Option<TranscodeError>), TranscodeError>;
+
+/// Reduce lossy per-chunk outcomes: sum replacements, keep the earliest
+/// first-error (globalized), or propagate a (defensive) hard failure.
+fn join_lossy(
+    outcomes: Vec<LossyOutcome>,
+    total: usize,
+    mut globalize: impl FnMut(usize, TranscodeError) -> TranscodeError,
+) -> TranscodeResult<LossyResult> {
+    let mut replacements = 0;
+    let mut first_error = None;
+    for (i, outcome) in outcomes.into_iter().enumerate() {
+        let (reps, first) = outcome.map_err(|e| globalize(i, e))?;
+        replacements += reps;
+        if first_error.is_none() {
+            first_error = first.map(|e| globalize(i, e));
+        }
+    }
+    Ok(LossyResult { written: total, replacements, first_error })
+}
+
+// ---------------------------------------------------------------------------
+// UTF-8 → UTF-16 workers
+// ---------------------------------------------------------------------------
+
+/// Exact output size of a **lossy** UTF-8 → UTF-16 conversion of
+/// `chunk`. Valid chunks take the SIMD counting kernel (exact on valid
+/// input); dirty chunks pay one scalar WHATWG walk — one or two words
+/// per decoded character, one word per maximal invalid subpart.
+fn lossy_utf16_len(chunk: &[u8]) -> usize {
+    if crate::validate::validate_utf8(chunk) {
+        return crate::count::utf16_len_from_utf8(chunk);
+    }
+    let (mut n, mut p) = (0usize, 0usize);
+    while p < chunk.len() {
+        match crate::scalar::decode_utf8_char(&chunk[p..]) {
+            Ok((cp, len)) => {
+                n += if cp >= 0x10000 { 2 } else { 1 };
+                p += len;
+            }
+            Err(_) => {
+                n += 1;
+                p += crate::scalar::utf8_maximal_subpart_len(&chunk[p..]);
+            }
+        }
+    }
+    n
+}
+
+/// Scalar strict finisher: transcode `chunk[p..]` into `out[q..]` with
+/// exact per-unit bounds checks, and require the chunk to land exactly
+/// on `out.len()` (anything else would leave uninitialized output —
+/// unreachable for a validating engine with an exact plan, turned into
+/// a hard error rather than trusted).
+fn finish16_strict(
+    chunk: &[u8],
+    mut p: usize,
+    out: &mut [u16],
+    mut q: usize,
+) -> Result<(), TranscodeError> {
+    while p < chunk.len() {
+        match crate::scalar::decode_utf8_char(&chunk[p..]) {
+            Ok((cp, len)) => {
+                let width = if cp >= 0x10000 { 2 } else { 1 };
+                if q + width > out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                q += crate::scalar::encode_utf16_char(cp, &mut out[q..]);
+                p += len;
+            }
+            Err(e) => return Err(TranscodeError::new(e.kind, p)),
+        }
+    }
+    if q != out.len() {
+        return Err(TranscodeError::new(ErrorKind::Other, p));
+    }
+    Ok(())
+}
+
+/// Strict chunk worker: engine over the bulk, scalar over the tail,
+/// frontier recovery if the engine's guard trips anyway. On success the
+/// chunk's exact output fills `out` completely.
+fn chunk16_strict<T: Utf8ToUtf16 + ?Sized>(
+    engine: &T,
+    chunk: &[u8],
+    out: &mut [u16],
+) -> Result<(), TranscodeError> {
+    let bulk_end = snap_utf8(chunk, chunk.len().saturating_sub(PAR_TAIL_UTF8));
+    let (q, p) = match engine.convert(&chunk[..bulk_end], out) {
+        Ok(n) => (n, bulk_end),
+        Err(e) if e.kind == ErrorKind::OutputBuffer => {
+            // Frontier recovery: `position` is a character boundary and
+            // everything before it was transcoded, so the prefix count
+            // is the exact output frontier.
+            (crate::count::utf16_len_from_utf8(&chunk[..e.position]), e.position)
+        }
+        Err(e) => return Err(e),
+    };
+    finish16_strict(chunk, p, out, q)
+}
+
+/// Lossy chunk worker: resume loop over the strict engine on the bulk
+/// (the same structure as the trait's `convert_lossy`, but writing into
+/// an exact sub-slice with frontier recovery), scalar WHATWG loop over
+/// the tail. Returns the chunk's replacement count and local first
+/// error.
+fn chunk16_lossy<T: Utf8ToUtf16 + ?Sized>(
+    engine: &T,
+    chunk: &[u8],
+    out: &mut [u16],
+) -> LossyOutcome {
+    let bulk_end = snap_utf8(chunk, chunk.len().saturating_sub(PAR_TAIL_UTF8));
+    let mut p = 0usize;
+    let mut q = 0usize;
+    let mut replacements = 0usize;
+    let mut first_error: Option<TranscodeError> = None;
+    'bulk: while p < bulk_end {
+        match engine.convert(&chunk[p..bulk_end], &mut out[q..]) {
+            Ok(n) => {
+                q += n;
+                p = bulk_end;
+            }
+            Err(e) if e.kind == ErrorKind::OutputBuffer => {
+                q += crate::count::utf16_len_from_utf8(&chunk[p..p + e.position]);
+                p += e.position;
+                break 'bulk;
+            }
+            Err(e) => {
+                if first_error.is_none() {
+                    first_error = Some(e.offset(p));
+                }
+                let split = p + e.position.min(bulk_end - p);
+                match engine.convert(&chunk[p..split], &mut out[q..]) {
+                    Ok(n) => q += n,
+                    Err(e2) if e2.kind == ErrorKind::OutputBuffer => {
+                        q += crate::count::utf16_len_from_utf8(&chunk[p..p + e2.position]);
+                        p += e2.position;
+                        break 'bulk;
+                    }
+                    Err(e2) => return Err(e2.offset(p)),
+                }
+                p = split;
+                if q >= out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                out[q] = REPLACEMENT_UTF16;
+                q += 1;
+                replacements += 1;
+                // The subpart cannot cross `bulk_end`: its non-lead
+                // bytes are all continuations and the snapped boundary
+                // byte is not one.
+                p += crate::scalar::utf8_maximal_subpart_len(&chunk[p..]);
+            }
+        }
+    }
+    // Scalar WHATWG finisher over whatever remains (tail, or the rest
+    // of the chunk after a frontier recovery).
+    while p < chunk.len() {
+        match crate::scalar::decode_utf8_char(&chunk[p..]) {
+            Ok((cp, len)) => {
+                let width = if cp >= 0x10000 { 2 } else { 1 };
+                if q + width > out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                q += crate::scalar::encode_utf16_char(cp, &mut out[q..]);
+                p += len;
+            }
+            Err(e) => {
+                if first_error.is_none() {
+                    first_error = Some(TranscodeError::new(e.kind, p));
+                }
+                if q + 1 > out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                out[q] = REPLACEMENT_UTF16;
+                q += 1;
+                replacements += 1;
+                p += crate::scalar::utf8_maximal_subpart_len(&chunk[p..]);
+            }
+        }
+    }
+    if q != out.len() {
+        return Err(TranscodeError::new(ErrorKind::Other, p));
+    }
+    Ok((replacements, first_error))
+}
+
+// ---------------------------------------------------------------------------
+// UTF-16 → UTF-8 workers
+// ---------------------------------------------------------------------------
+
+fn utf8_width(cp: u32) -> usize {
+    if cp < 0x80 {
+        1
+    } else if cp < 0x800 {
+        2
+    } else if cp < 0x10000 {
+        3
+    } else {
+        4
+    }
+}
+
+/// Scalar strict finisher for the UTF-16 → UTF-8 direction (see
+/// [`finish16_strict`]).
+fn finish8_strict(
+    chunk: &[u16],
+    mut p: usize,
+    out: &mut [u8],
+    mut q: usize,
+) -> Result<(), TranscodeError> {
+    while p < chunk.len() {
+        match crate::scalar::decode_utf16_char(&chunk[p..]) {
+            Ok((cp, len)) => {
+                if q + utf8_width(cp) > out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                q += crate::scalar::encode_utf8_char(cp, &mut out[q..]);
+                p += len;
+            }
+            Err(e) => return Err(TranscodeError::new(e.kind, p)),
+        }
+    }
+    if q != out.len() {
+        return Err(TranscodeError::new(ErrorKind::Other, p));
+    }
+    Ok(())
+}
+
+/// Strict chunk worker, UTF-16 → UTF-8 (see [`chunk16_strict`]). The
+/// planner's predictor is at-least-one-byte-per-word, so with the tail
+/// held back the engine's guard cannot trip even on garbage — the
+/// recovery arm is purely defensive here.
+fn chunk8_strict<T: Utf16ToUtf8 + ?Sized>(
+    engine: &T,
+    chunk: &[u16],
+    out: &mut [u8],
+) -> Result<(), TranscodeError> {
+    let bulk_end = snap_utf16(chunk, chunk.len().saturating_sub(PAR_TAIL_UTF16));
+    let (q, p) = match engine.convert(&chunk[..bulk_end], out) {
+        Ok(n) => (n, bulk_end),
+        Err(e) if e.kind == ErrorKind::OutputBuffer => {
+            (crate::count::utf8_len_from_utf16(&chunk[..e.position]), e.position)
+        }
+        Err(e) => return Err(e),
+    };
+    finish8_strict(chunk, p, out, q)
+}
+
+/// Lossy chunk worker, UTF-16 → UTF-8 (see [`chunk16_lossy`]). The
+/// maximal invalid subpart of malformed UTF-16 is always the single
+/// unpaired surrogate word, and the predictor counts it at exactly
+/// U+FFFD's width, so the plan is exact on arbitrary input.
+fn chunk8_lossy<T: Utf16ToUtf8 + ?Sized>(
+    engine: &T,
+    chunk: &[u16],
+    out: &mut [u8],
+) -> LossyOutcome {
+    let bulk_end = snap_utf16(chunk, chunk.len().saturating_sub(PAR_TAIL_UTF16));
+    let mut p = 0usize;
+    let mut q = 0usize;
+    let mut replacements = 0usize;
+    let mut first_error: Option<TranscodeError> = None;
+    'bulk: while p < bulk_end {
+        match engine.convert(&chunk[p..bulk_end], &mut out[q..]) {
+            Ok(n) => {
+                q += n;
+                p = bulk_end;
+            }
+            Err(e) if e.kind == ErrorKind::OutputBuffer => {
+                q += crate::count::utf8_len_from_utf16(&chunk[p..p + e.position]);
+                p += e.position;
+                break 'bulk;
+            }
+            Err(e) => {
+                if first_error.is_none() {
+                    first_error = Some(e.offset(p));
+                }
+                let split = p + e.position.min(bulk_end - p);
+                match engine.convert(&chunk[p..split], &mut out[q..]) {
+                    Ok(n) => q += n,
+                    Err(e2) if e2.kind == ErrorKind::OutputBuffer => {
+                        q += crate::count::utf8_len_from_utf16(&chunk[p..p + e2.position]);
+                        p += e2.position;
+                        break 'bulk;
+                    }
+                    Err(e2) => return Err(e2.offset(p)),
+                }
+                p = split;
+                if q + REPLACEMENT_UTF8.len() > out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                out[q..q + 3].copy_from_slice(&REPLACEMENT_UTF8);
+                q += 3;
+                replacements += 1;
+                p += 1; // the unpaired surrogate word
+            }
+        }
+    }
+    while p < chunk.len() {
+        match crate::scalar::decode_utf16_char(&chunk[p..]) {
+            Ok((cp, len)) => {
+                if q + utf8_width(cp) > out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                q += crate::scalar::encode_utf8_char(cp, &mut out[q..]);
+                p += len;
+            }
+            Err(e) => {
+                if first_error.is_none() {
+                    first_error = Some(TranscodeError::new(e.kind, p));
+                }
+                if q + REPLACEMENT_UTF8.len() > out.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
+                out[q..q + 3].copy_from_slice(&REPLACEMENT_UTF8);
+                q += 3;
+                replacements += 1;
+                p += 1;
+            }
+        }
+    }
+    if q != out.len() {
+        return Err(TranscodeError::new(ErrorKind::Other, p));
+    }
+    Ok((replacements, first_error))
+}
+
+// ---------------------------------------------------------------------------
+// Pipelines
+// ---------------------------------------------------------------------------
+
+fn chunk_of<'a, T>(src: &'a [T], bounds: &[usize], i: usize) -> &'a [T] {
+    &src[bounds[i]..bounds[i + 1]]
+}
+
+fn run16_strict<T: Utf8ToUtf16 + ?Sized>(
+    engine: &T,
+    src: &[u8],
+    bounds: &[usize],
+) -> TranscodeResult<Vec<u16>> {
+    let n = bounds.len() - 1;
+    let sizes = par_map(n, |i| crate::count::utf16_len_from_utf8(chunk_of(src, bounds, i)));
+    let total: usize = sizes.iter().sum();
+    assemble(
+        &sizes,
+        |i, out| chunk16_strict(engine, chunk_of(src, bounds, i), out),
+        |outcomes| join_strict(outcomes, total, |i, e| globalize_utf8(src, bounds[i], e)),
+    )
+    .map(|(v, _)| v)
+}
+
+fn run16_lossy<T: Utf8ToUtf16 + ?Sized>(
+    engine: &T,
+    src: &[u8],
+    bounds: &[usize],
+) -> TranscodeResult<(Vec<u16>, LossyResult)> {
+    let n = bounds.len() - 1;
+    let sizes = par_map(n, |i| lossy_utf16_len(chunk_of(src, bounds, i)));
+    let total: usize = sizes.iter().sum();
+    assemble(
+        &sizes,
+        |i, out| chunk16_lossy(engine, chunk_of(src, bounds, i), out),
+        |outcomes| join_lossy(outcomes, total, |i, e| globalize_utf8(src, bounds[i], e)),
+    )
+}
+
+fn run8_strict<T: Utf16ToUtf8 + ?Sized>(
+    engine: &T,
+    src: &[u16],
+    bounds: &[usize],
+) -> TranscodeResult<Vec<u8>> {
+    let n = bounds.len() - 1;
+    let sizes = par_map(n, |i| crate::count::utf8_len_from_utf16(chunk_of(src, bounds, i)));
+    let total: usize = sizes.iter().sum();
+    assemble(
+        &sizes,
+        |i, out| chunk8_strict(engine, chunk_of(src, bounds, i), out),
+        |outcomes| join_strict(outcomes, total, |i, e| globalize_utf16(src, bounds[i], e)),
+    )
+    .map(|(v, _)| v)
+}
+
+fn run8_lossy<T: Utf16ToUtf8 + ?Sized>(
+    engine: &T,
+    src: &[u16],
+    bounds: &[usize],
+) -> TranscodeResult<(Vec<u8>, LossyResult)> {
+    let n = bounds.len() - 1;
+    let sizes = par_map(n, |i| crate::count::utf8_len_from_utf16(chunk_of(src, bounds, i)));
+    let total: usize = sizes.iter().sum();
+    assemble(
+        &sizes,
+        |i, out| chunk8_lossy(engine, chunk_of(src, bounds, i), out),
+        |outcomes| join_lossy(outcomes, total, |i, e| globalize_utf16(src, bounds[i], e)),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Public API: extension traits
+// ---------------------------------------------------------------------------
+
+/// Parallel conveniences for any UTF-8 → UTF-16 engine
+/// (blanket-implemented; bring the trait into scope and every
+/// [`Utf8ToUtf16`] — including registry `Arc` handles — gains them).
+pub trait ParallelUtf8ToUtf16: Utf8ToUtf16 {
+    /// Strict conversion across threads: output, and error positions in
+    /// **global document coordinates**, bit-identical to
+    /// [`Utf8ToUtf16::convert_to_vec_exact`]. Inputs at or below
+    /// `opts.min_chunk` (and non-validating engines — see the module
+    /// docs) take the one-shot path.
+    fn par_convert_to_vec(&self, src: &[u8], opts: ParallelOptions) -> TranscodeResult<Vec<u16>> {
+        if !self.validating() {
+            return self.convert_to_vec(src);
+        }
+        let parts = opts.plan_chunks(src.len());
+        if parts <= 1 {
+            return self.convert_to_vec_exact(src);
+        }
+        run16_strict(self, src, &split_utf8(src, parts))
+    }
+
+    /// Lossy (U+FFFD) conversion across threads: output, replacement
+    /// count and global first-error identical to
+    /// [`Utf8ToUtf16::convert_lossy_to_vec`].
+    fn par_convert_lossy_to_vec(
+        &self,
+        src: &[u8],
+        opts: ParallelOptions,
+    ) -> TranscodeResult<(Vec<u16>, LossyResult)> {
+        if !self.validating() {
+            return self.convert_lossy_to_vec(src);
+        }
+        let parts = opts.plan_chunks(src.len());
+        if parts <= 1 {
+            return self.convert_lossy_to_vec(src);
+        }
+        run16_lossy(self, src, &split_utf8(src, parts))
+    }
+
+    /// Strict conversion chunked at the given candidate cut offsets
+    /// (snapped, sorted, deduplicated internally). The executor and the
+    /// split-sweep differential suite both funnel through this: it runs
+    /// the full planner/worker/join machinery even for a single chunk.
+    fn par_convert_to_vec_at(&self, src: &[u8], cuts: &[usize]) -> TranscodeResult<Vec<u16>> {
+        if !self.validating() {
+            return self.convert_to_vec(src);
+        }
+        run16_strict(self, src, &bounds_at_utf8(src, cuts))
+    }
+
+    /// [`ParallelUtf8ToUtf16::par_convert_to_vec_at`], lossy.
+    fn par_convert_lossy_to_vec_at(
+        &self,
+        src: &[u8],
+        cuts: &[usize],
+    ) -> TranscodeResult<(Vec<u16>, LossyResult)> {
+        if !self.validating() {
+            return self.convert_lossy_to_vec(src);
+        }
+        run16_lossy(self, src, &bounds_at_utf8(src, cuts))
+    }
+}
+
+impl<T: Utf8ToUtf16 + ?Sized> ParallelUtf8ToUtf16 for T {}
+
+/// Parallel conveniences for any UTF-16 → UTF-8 engine (see
+/// [`ParallelUtf8ToUtf16`]).
+pub trait ParallelUtf16ToUtf8: Utf16ToUtf8 {
+    /// Strict conversion across threads; see
+    /// [`ParallelUtf8ToUtf16::par_convert_to_vec`].
+    fn par_convert_to_vec(&self, src: &[u16], opts: ParallelOptions) -> TranscodeResult<Vec<u8>> {
+        if !self.validating() {
+            return self.convert_to_vec(src);
+        }
+        let parts = opts.plan_chunks(src.len());
+        if parts <= 1 {
+            return self.convert_to_vec_exact(src);
+        }
+        run8_strict(self, src, &split_utf16(src, parts))
+    }
+
+    /// Lossy conversion across threads; see
+    /// [`ParallelUtf8ToUtf16::par_convert_lossy_to_vec`].
+    fn par_convert_lossy_to_vec(
+        &self,
+        src: &[u16],
+        opts: ParallelOptions,
+    ) -> TranscodeResult<(Vec<u8>, LossyResult)> {
+        if !self.validating() {
+            return self.convert_lossy_to_vec(src);
+        }
+        let parts = opts.plan_chunks(src.len());
+        if parts <= 1 {
+            return self.convert_lossy_to_vec(src);
+        }
+        run8_lossy(self, src, &split_utf16(src, parts))
+    }
+
+    /// Strict conversion at explicit candidate cuts; see
+    /// [`ParallelUtf8ToUtf16::par_convert_to_vec_at`].
+    fn par_convert_to_vec_at(&self, src: &[u16], cuts: &[usize]) -> TranscodeResult<Vec<u8>> {
+        if !self.validating() {
+            return self.convert_to_vec(src);
+        }
+        run8_strict(self, src, &bounds_at_utf16(src, cuts))
+    }
+
+    /// [`ParallelUtf16ToUtf8::par_convert_to_vec_at`], lossy.
+    fn par_convert_lossy_to_vec_at(
+        &self,
+        src: &[u16],
+        cuts: &[usize],
+    ) -> TranscodeResult<(Vec<u8>, LossyResult)> {
+        if !self.validating() {
+            return self.convert_lossy_to_vec(src);
+        }
+        run8_lossy(self, src, &bounds_at_utf16(src, cuts))
+    }
+}
+
+impl<T: Utf16ToUtf8 + ?Sized> ParallelUtf16ToUtf8 for T {}
+
+// ---------------------------------------------------------------------------
+// Latin-1 → UTF-8
+// ---------------------------------------------------------------------------
+
+/// Latin-1 chunk worker: kernel over the bulk (its output sub-slice
+/// keeps at least `EXACT_SLACK` bytes of tail headroom, matching the
+/// `*_vec` helpers' contract, so it cannot spuriously run out), exact
+/// scalar expansion over the tail. Latin-1 is fixed-width: no snapping,
+/// no encoding errors.
+fn chunk_latin1(k: &Latin1Kernels, chunk: &[u8], out: &mut [u8]) -> Result<(), TranscodeError> {
+    let bulk_end = chunk.len().saturating_sub(PAR_TAIL_LATIN1);
+    let (mut q, mut p) = match (k.latin1_to_utf8)(&chunk[..bulk_end], out) {
+        Ok(n) => (n, bulk_end),
+        Err(e) if e.kind == ErrorKind::OutputBuffer => {
+            (crate::count::utf8_len_from_latin1(&chunk[..e.position]), e.position)
+        }
+        Err(e) => return Err(e),
+    };
+    while p < chunk.len() {
+        let b = chunk[p];
+        let width = if b < 0x80 { 1 } else { 2 };
+        if q + width > out.len() {
+            return Err(TranscodeError::output_buffer(p));
+        }
+        if b < 0x80 {
+            out[q] = b;
+        } else {
+            out[q] = 0xC0 | (b >> 6);
+            out[q + 1] = 0x80 | (b & 0x3F);
+        }
+        q += width;
+        p += 1;
+    }
+    if q != out.len() {
+        return Err(TranscodeError::new(ErrorKind::Other, p));
+    }
+    Ok(())
+}
+
+fn run_latin1(k: &Latin1Kernels, src: &[u8], bounds: &[usize]) -> TranscodeResult<Vec<u8>> {
+    let n = bounds.len() - 1;
+    let sizes = par_map(n, |i| crate::count::utf8_len_from_latin1(chunk_of(src, bounds, i)));
+    let total: usize = sizes.iter().sum();
+    assemble(
+        &sizes,
+        |i, out| chunk_latin1(k, chunk_of(src, bounds, i), out),
+        |outcomes| join_strict(outcomes, total, |i, e| e.offset(bounds[i])),
+    )
+    .map(|(v, _)| v)
+}
+
+/// Latin-1 → UTF-8 across threads with the given kernel set: identical
+/// output to [`crate::transcode::latin1::latin1_to_utf8_vec`]. Latin-1
+/// is fixed-width, so any cut is boundary-safe and the conversion is
+/// total.
+pub fn par_latin1_to_utf8_vec(
+    kernels: &Latin1Kernels,
+    src: &[u8],
+    opts: ParallelOptions,
+) -> TranscodeResult<Vec<u8>> {
+    let parts = opts.plan_chunks(src.len());
+    let bounds = bounds_from(src.len(), (1..parts).map(|i| i * src.len() / parts), |p| p);
+    run_latin1(kernels, src, &bounds)
+}
+
+/// [`par_latin1_to_utf8_vec`] at explicit cut offsets (sorted and
+/// deduplicated internally; no snapping needed for a fixed-width
+/// source).
+pub fn par_latin1_to_utf8_vec_at(
+    kernels: &Latin1Kernels,
+    src: &[u8],
+    cuts: &[usize],
+) -> TranscodeResult<Vec<u8>> {
+    let mut cuts = cuts.to_vec();
+    cuts.sort_unstable();
+    let bounds = bounds_from(src.len(), cuts.into_iter(), |p| p);
+    run_latin1(kernels, src, &bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{Collection, Corpus, Language, DIRT_PROFILES};
+    use crate::transcode::latin1;
+    use crate::transcode::utf16_to_utf8::OurUtf16ToUtf8;
+    use crate::transcode::utf8_to_utf16::OurUtf8ToUtf16;
+
+    fn small_opts(threads: usize) -> ParallelOptions {
+        ParallelOptions { threads, min_chunk: 64 }
+    }
+
+    #[test]
+    fn snap_utf8_lands_on_non_continuation_bytes() {
+        let src = "aé漢🙂é!".as_bytes();
+        for pos in 0..=src.len() {
+            let b = snap_utf8(src, pos);
+            assert!(b == 0 || b == src.len() || src[b] & 0xC0 != 0x80, "pos {pos} -> {b}");
+            assert!(b <= pos);
+        }
+        // Unbounded rewind over a stray continuation run.
+        let dirty = [b'a', 0x80, 0x80, 0x80, 0x80, b'b'];
+        assert_eq!(snap_utf8(&dirty, 3), 1);
+    }
+
+    #[test]
+    fn snap_utf16_never_splits_a_pair() {
+        let src: Vec<u16> = "a🙂b🚀".encode_utf16().collect();
+        for pos in 0..=src.len() {
+            let b = snap_utf16(&src, pos);
+            let splits_pair = b > 0
+                && b < src.len()
+                && (0xD800..0xDC00).contains(&src[b - 1])
+                && (0xDC00..0xE000).contains(&src[b]);
+            assert!(!splits_pair, "pos {pos} -> {b}");
+        }
+        // A lone high followed by a non-low word is not a pair: no snap.
+        assert_eq!(snap_utf16(&[0xD800, 0x41], 1), 1);
+    }
+
+    #[test]
+    fn split_bounds_are_strictly_increasing_and_cover() {
+        let corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
+        for parts in [1, 2, 3, 7, 16] {
+            let b8 = split_utf8(&corpus.utf8, parts);
+            assert_eq!(*b8.first().unwrap(), 0);
+            assert_eq!(*b8.last().unwrap(), corpus.utf8.len());
+            assert!(b8.windows(2).all(|w| w[0] < w[1]));
+            assert!(b8.len() <= parts + 1);
+            let b16 = split_utf16(&corpus.utf16, parts);
+            assert_eq!(*b16.last().unwrap(), corpus.utf16.len());
+            assert!(b16.windows(2).all(|w| w[0] < w[1]));
+        }
+        // Empty input: a single empty chunk, no panic.
+        assert_eq!(split_utf8(&[], 4), vec![0, 0]);
+    }
+
+    #[test]
+    fn parallel_matches_one_shot_on_clean_corpora() {
+        let to16 = OurUtf8ToUtf16::validating();
+        let to8 = OurUtf16ToUtf8::validating();
+        let corpus = Corpus::generate(Language::Russian, Collection::Lipsum);
+        let ref16 = to16.convert_to_vec_exact(&corpus.utf8).unwrap();
+        let ref8 = to8.convert_to_vec_exact(&corpus.utf16).unwrap();
+        for threads in [1, 2, 4, 8] {
+            let opts = small_opts(threads);
+            assert_eq!(to16.par_convert_to_vec(&corpus.utf8, opts).unwrap(), ref16, "{threads}");
+            assert_eq!(to8.par_convert_to_vec(&corpus.utf16, opts).unwrap(), ref8, "{threads}");
+            let (l16, r16) = to16.par_convert_lossy_to_vec(&corpus.utf8, opts).unwrap();
+            assert_eq!(l16, ref16);
+            assert!(r16.clean() && r16.written == ref16.len());
+            let (l8, r8) = to8.par_convert_lossy_to_vec(&corpus.utf16, opts).unwrap();
+            assert_eq!(l8, ref8);
+            assert!(r8.clean());
+        }
+    }
+
+    #[test]
+    fn parallel_reports_global_error_positions() {
+        let to16 = OurUtf8ToUtf16::validating();
+        let corpus = Corpus::generate(Language::Arabic, Collection::Lipsum);
+        for &profile in DIRT_PROFILES {
+            let dirty = corpus.dirty_utf8(profile, 11);
+            let expected = to16.convert_to_vec_exact(&dirty).map(|_| ());
+            for threads in [2, 4, 8] {
+                let got = to16.par_convert_to_vec(&dirty, small_opts(threads)).map(|_| ());
+                match (&expected, &got) {
+                    (Err(a), Err(b)) => assert_eq!(a, b, "{} x{threads}", profile.label),
+                    (Ok(()), Ok(())) => {}
+                    other => panic!("{} x{threads}: {other:?}", profile.label),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_lossy_matches_one_shot_on_dirty_input() {
+        let to16 = OurUtf8ToUtf16::validating();
+        let to8 = OurUtf16ToUtf8::validating();
+        let corpus = Corpus::generate(Language::Korean, Collection::Lipsum);
+        for &profile in DIRT_PROFILES {
+            let dirty8 = corpus.dirty_utf8(profile, 5);
+            let (ref16, refr16) = to16.convert_lossy_to_vec(&dirty8).unwrap();
+            let dirty16 = corpus.dirty_utf16(profile, 5);
+            let (ref8, refr8) = to8.convert_lossy_to_vec(&dirty16).unwrap();
+            for threads in [2, 4, 8] {
+                let opts = small_opts(threads);
+                let (out, r) = to16.par_convert_lossy_to_vec(&dirty8, opts).unwrap();
+                assert_eq!(out, ref16, "{} x{threads}", profile.label);
+                assert_eq!(r.replacements, refr16.replacements, "{} x{threads}", profile.label);
+                assert_eq!(r.first_error, refr16.first_error, "{} x{threads}", profile.label);
+                assert_eq!(r.written, refr16.written);
+                let (out, r) = to8.par_convert_lossy_to_vec(&dirty16, opts).unwrap();
+                assert_eq!(out, ref8, "{} x{threads}", profile.label);
+                assert_eq!(r.replacements, refr8.replacements, "{} x{threads}", profile.label);
+                assert_eq!(r.first_error, refr8.first_error, "{} x{threads}", profile.label);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_final_lone_high_surrogate_classifies_globally() {
+        // Chunk-local TooShort must become the global Surrogate error.
+        let to8 = OurUtf16ToUtf8::validating();
+        let mut words: Vec<u16> = "abcdefgh".encode_utf16().collect();
+        words.push(0xD800); // lone high right at the cut...
+        words.extend("ijklmnop".encode_utf16()); // ...followed by a non-low
+        let expected = to8.convert_to_vec_exact(&words).unwrap_err();
+        let got = to8.par_convert_to_vec_at(&words, &[9]).unwrap_err();
+        assert_eq!(got, expected);
+        assert_eq!(got.kind, ErrorKind::Surrogate);
+    }
+
+    #[test]
+    fn explicit_cuts_are_normalized() {
+        let to16 = OurUtf8ToUtf16::validating();
+        let src = "héllo 漢字 wörld 🙂!".as_bytes();
+        let reference = to16.convert_to_vec_exact(src).unwrap();
+        // Unsorted, duplicated, mid-character and out-of-range cuts.
+        let out = to16
+            .par_convert_to_vec_at(src, &[src.len() + 100, 7, 7, 3, 0, 11])
+            .unwrap();
+        assert_eq!(out, reference);
+    }
+
+    #[test]
+    fn one_shot_fallback_below_min_chunk() {
+        let to16 = OurUtf8ToUtf16::validating();
+        let src = "short input é漢🙂".as_bytes();
+        // Default min_chunk (1 MiB) forces the one-shot path.
+        let out = to16.par_convert_to_vec(src, ParallelOptions::default()).unwrap();
+        assert_eq!(out, to16.convert_to_vec_exact(src).unwrap());
+        assert_eq!(ParallelOptions::default().plan_chunks(src.len()), 1);
+        assert_eq!(ParallelOptions::with_threads(8).plan_chunks(1 << 30), 8);
+    }
+
+    #[test]
+    fn non_validating_engines_fall_back_to_one_shot() {
+        let nv = OurUtf8ToUtf16::non_validating();
+        let corpus = Corpus::generate(Language::Chinese, Collection::Lipsum);
+        let out = nv.par_convert_to_vec(&corpus.utf8, small_opts(4)).unwrap();
+        assert_eq!(out, nv.convert_to_vec(&corpus.utf8).unwrap());
+    }
+
+    #[test]
+    fn latin1_parallel_matches_one_shot() {
+        let corpus = Corpus::latin1(Collection::Lipsum);
+        let latin1 = corpus.latin1_bytes().unwrap();
+        let reference = latin1::latin1_to_utf8_vec(&latin1).unwrap();
+        for k in latin1::kernel_entries() {
+            for threads in [1, 2, 4, 8] {
+                let out = par_latin1_to_utf8_vec(k, &latin1, small_opts(threads)).unwrap();
+                assert_eq!(out, reference, "{} x{threads}", k.key);
+            }
+            let out = par_latin1_to_utf8_vec_at(k, &latin1, &[1, 63, 64, 65, 1000]).unwrap();
+            assert_eq!(out, reference, "{} explicit cuts", k.key);
+        }
+    }
+
+    #[test]
+    fn arc_handles_get_the_parallel_methods() {
+        // The registry hands out Arc<dyn …>; the blanket impl must cover
+        // them (this is a compile-time property exercised at runtime).
+        let r = crate::engine::Registry::global();
+        let engine = r.get_utf8_arc("best").unwrap();
+        let src = "arc handle test é漢🙂 ".repeat(50);
+        let out = engine.par_convert_to_vec_at(src.as_bytes(), &[257]).unwrap();
+        assert_eq!(out, engine.convert_to_vec_exact(src.as_bytes()).unwrap());
+    }
+}

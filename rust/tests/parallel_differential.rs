@@ -1,0 +1,349 @@
+//! The parallel differential suite.
+//!
+//! The parallel pipeline's contract is **bit-identical equivalence with
+//! the one-shot paths at every split granularity**: same output, same
+//! replacement counts, and error positions in global document
+//! coordinates — for every validating registry engine, strict and
+//! lossy, in both UTF-8 ⇄ UTF-16 directions, plus `latin1 → utf8`.
+//!
+//! The suite drives the explicit-cut entry points
+//! (`par_convert_to_vec_at` and friends), which run the full
+//! planner/worker/join machinery even for a single chunk, so an
+//! **exhaustive sweep over every cut offset** of boundary-adversarial
+//! corpora exercises every chunk-edge case: cuts inside multi-byte
+//! sequences (snapped back), cuts inside maximal invalid subparts, cuts
+//! between a surrogate pair's halves, errors in non-first chunks
+//! (global coordinates), and chunk-final truncations (error-kind
+//! canonicalization at the join).
+
+use simdutf_rs::corpus::{corrupt_utf16, corrupt_utf8, generate_collection, Collection};
+use simdutf_rs::engine::Registry;
+use simdutf_rs::parallel::{par_latin1_to_utf8_vec_at, ParallelUtf16ToUtf8, ParallelUtf8ToUtf16};
+use simdutf_rs::prelude::*;
+
+// ---------------------------------------------------------------------------
+// Equivalence helpers (one-shot is the oracle)
+// ---------------------------------------------------------------------------
+
+fn check_strict_utf8(engine: &dyn Utf8ToUtf16, src: &[u8], cuts: &[usize], ctx: &str) {
+    let want = engine.convert_to_vec_exact(src);
+    let got = engine.par_convert_to_vec_at(src, cuts);
+    match (&want, &got) {
+        (Ok(w), Ok(g)) => assert_eq!(w, g, "{ctx}: strict output"),
+        (Err(w), Err(g)) => {
+            assert_eq!((w.kind, w.position), (g.kind, g.position), "{ctx}: strict error");
+        }
+        _ => panic!("{ctx}: strict divergence: one-shot {want:?} vs parallel {got:?}"),
+    }
+}
+
+fn check_lossy_utf8(engine: &dyn Utf8ToUtf16, src: &[u8], cuts: &[usize], ctx: &str) {
+    let (want, wr) = engine.convert_lossy_to_vec(src).expect("lossy is total");
+    let (got, gr) = engine.par_convert_lossy_to_vec_at(src, cuts).expect("parallel lossy");
+    assert_eq!(got, want, "{ctx}: lossy output");
+    assert_eq!(gr.written, wr.written, "{ctx}: lossy written");
+    assert_eq!(gr.replacements, wr.replacements, "{ctx}: lossy replacements");
+    assert_eq!(
+        gr.first_error.map(|e| (e.kind, e.position)),
+        wr.first_error.map(|e| (e.kind, e.position)),
+        "{ctx}: lossy first error"
+    );
+}
+
+fn check_strict_utf16(engine: &dyn Utf16ToUtf8, src: &[u16], cuts: &[usize], ctx: &str) {
+    let want = engine.convert_to_vec_exact(src);
+    let got = engine.par_convert_to_vec_at(src, cuts);
+    match (&want, &got) {
+        (Ok(w), Ok(g)) => assert_eq!(w, g, "{ctx}: strict output"),
+        (Err(w), Err(g)) => {
+            assert_eq!((w.kind, w.position), (g.kind, g.position), "{ctx}: strict error");
+        }
+        _ => panic!("{ctx}: strict divergence: one-shot {want:?} vs parallel {got:?}"),
+    }
+}
+
+fn check_lossy_utf16(engine: &dyn Utf16ToUtf8, src: &[u16], cuts: &[usize], ctx: &str) {
+    let (want, wr) = engine.convert_lossy_to_vec(src).expect("lossy is total");
+    let (got, gr) = engine.par_convert_lossy_to_vec_at(src, cuts).expect("parallel lossy");
+    assert_eq!(got, want, "{ctx}: lossy output");
+    assert_eq!(gr.written, wr.written, "{ctx}: lossy written");
+    assert_eq!(gr.replacements, wr.replacements, "{ctx}: lossy replacements");
+    assert_eq!(
+        gr.first_error.map(|e| (e.kind, e.position)),
+        wr.first_error.map(|e| (e.kind, e.position)),
+        "{ctx}: lossy first error"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Boundary-adversarial corpora
+// ---------------------------------------------------------------------------
+
+/// Small UTF-8 inputs dense in chunk-edge hazards: width transitions on
+/// every cut, truncations, lone continuations, overlongs, encoded
+/// surrogates, header garbage, and long continuation runs. Small enough
+/// that *every* cut offset is swept for *every* engine.
+fn utf8_corpora() -> Vec<(&'static str, Vec<u8>)> {
+    let mut v: Vec<(&'static str, Vec<u8>)> = vec![
+        ("empty", vec![]),
+        ("ascii", b"the quick brown fox jumps over the lazy dog 0123456789".to_vec()),
+        ("two-byte", "\u{e9}\u{e8}\u{ea}\u{eb}\u{f1}\u{e7}".repeat(6).into_bytes()),
+        ("three-byte", "\u{6f22}\u{5b57}\u{304b}\u{306a}\u{d55c}".repeat(5).into_bytes()),
+        ("four-byte", "\u{1f642}\u{1f680}\u{10348}".repeat(6).into_bytes()),
+        ("width-mix", "a\u{e9}\u{6f22}\u{1f642}z".repeat(8).into_bytes()),
+        ("literal-fffd", "ok \u{fffd} literal \u{fffd}".repeat(3).into_bytes()),
+    ];
+    // Dirty variants built from raw bytes.
+    let mut b = "clean prefix \u{e9}\u{6f22}".as_bytes().to_vec();
+    b.extend_from_slice(&[0xE2, 0x82]); // truncated 3-byte at the end
+    v.push(("truncated-tail", b));
+    let mut b = b"a".to_vec();
+    b.extend_from_slice(&[0x80, 0x80, 0x80, 0x80, 0x80]); // lone continuations
+    b.extend_from_slice("z\u{1f642}".as_bytes());
+    v.push(("continuation-run", b));
+    let mut b = b"xy".to_vec();
+    b.extend_from_slice(&[0xC0, 0xAF]); // overlong '/'
+    b.extend_from_slice(&[0xE0, 0x80, 0x80]); // overlong NUL
+    b.extend_from_slice("tail \u{6f22}".as_bytes());
+    v.push(("overlong", b));
+    let mut b = "pre \u{e9}".as_bytes().to_vec();
+    b.extend_from_slice(&[0xED, 0xA0, 0x80]); // encoded high surrogate
+    b.extend_from_slice(&[0xED, 0xB0, 0x80]); // encoded low surrogate
+    b.extend_from_slice(b" post");
+    v.push(("encoded-surrogate", b));
+    let mut b = b"hdr".to_vec();
+    b.extend_from_slice(&[0xFF, 0xFE, 0xFF]); // header garbage
+    b.extend_from_slice("\u{1f680} end".as_bytes());
+    v.push(("header-bits", b));
+    let mut b = [0xF0, 0x9F, 0x98].to_vec(); // truncated 4-byte at the start,
+    b.extend_from_slice(&[0x80; 8]); // bleeding into a continuation run
+    b.extend_from_slice("mid \u{6f22}\u{5b57} end".as_bytes());
+    v.push(("leading-subpart", b));
+    v
+}
+
+/// Small UTF-16 inputs dense in surrogate hazards: pairs on every cut,
+/// lone highs/lows at the edges and interior, and a high directly
+/// before a real pair (the snapped boundary must not re-pair it).
+fn utf16_corpora() -> Vec<(&'static str, Vec<u16>)> {
+    let enc = |s: &str| s.encode_utf16().collect::<Vec<u16>>();
+    let mut v: Vec<(&'static str, Vec<u16>)> = vec![
+        ("empty", vec![]),
+        ("ascii", enc("plain ascii words only 0123456789")),
+        ("bmp", enc("\u{e9}\u{6f22}\u{5b57}\u{d55c}\u{fffd}").repeat(6)),
+        ("pairs", enc("\u{1f642}\u{1f680}\u{10348}").repeat(8)),
+        ("pair-mix", enc("a\u{6f22}\u{1f642}z").repeat(8)),
+    ];
+    let mut w = enc("pre \u{1f642}");
+    w.push(0xD800); // lone high, interior
+    w.extend(enc(" mid "));
+    w.push(0xDC00); // lone low, interior
+    w.extend(enc("\u{1f680} post"));
+    v.push(("lone-interior", w));
+    let mut w = vec![0xDC00]; // lone low at the very start
+    w.extend(enc("body \u{6f22}"));
+    w.push(0xD800); // lone high at the very end
+    v.push(("lone-edges", w));
+    let mut w = enc("x");
+    w.extend([0xD800, 0xD800, 0xDC00]); // lone high + real pair back-to-back
+    w.extend([0xDBFF, 0xDFFF, 0xDC00]); // real pair + lone low
+    w.extend(enc("y"));
+    v.push(("adjacent-surrogates", w));
+    v
+}
+
+fn validating_utf8(r: &Registry) -> Vec<(&'static str, std::sync::Arc<dyn Utf8ToUtf16>)> {
+    r.utf8_entries()
+        .iter()
+        .filter(|e| e.engine.validating())
+        .map(|e| (e.key, e.engine.clone()))
+        .collect()
+}
+
+fn validating_utf16(r: &Registry) -> Vec<(&'static str, std::sync::Arc<dyn Utf16ToUtf8>)> {
+    r.utf16_entries()
+        .iter()
+        .filter(|e| e.engine.validating())
+        .map(|e| (e.key, e.engine.clone()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Exhaustive split-offset sweeps
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_cut_every_engine_utf8() {
+    let r = Registry::global();
+    let engines = validating_utf8(r);
+    for (name, src) in utf8_corpora() {
+        for (key, engine) in &engines {
+            for cut in 0..=src.len() {
+                let ctx = format!("{key} on {name} cut {cut}");
+                check_strict_utf8(engine.as_ref(), &src, &[cut], &ctx);
+                check_lossy_utf8(engine.as_ref(), &src, &[cut], &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_cut_every_engine_utf16() {
+    let r = Registry::global();
+    let engines = validating_utf16(r);
+    for (name, src) in utf16_corpora() {
+        for (key, engine) in &engines {
+            for cut in 0..=src.len() {
+                let ctx = format!("{key} on {name} cut {cut}");
+                check_strict_utf16(engine.as_ref(), &src, &[cut], &ctx);
+                check_lossy_utf16(engine.as_ref(), &src, &[cut], &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_cut_grids_match_oneshot() {
+    // Three-cut grids (including adjacent, duplicate and mid-character
+    // candidates — the normalizer must sort/snap/dedup them) on the
+    // `best` engines, both directions, strict + lossy.
+    let to16 = Registry::global().get_utf8("best").expect("registry has best");
+    let to8 = Registry::global().get_utf16("best").expect("registry has best");
+    for (name, src) in utf8_corpora() {
+        let len = src.len();
+        for a in (0..=len).step_by(3) {
+            for b in [a, a + 1, len / 2, len.saturating_sub(1)] {
+                let cuts = [a, b, (a + len * 2 / 3).min(len)];
+                let ctx = format!("utf8 {name} cuts {cuts:?}");
+                check_strict_utf8(to16, &src, &cuts, &ctx);
+                check_lossy_utf8(to16, &src, &cuts, &ctx);
+            }
+        }
+    }
+    for (name, src) in utf16_corpora() {
+        let len = src.len();
+        for a in (0..=len).step_by(3) {
+            for b in [a, a + 1, len / 2, len.saturating_sub(1)] {
+                let cuts = [a, b, (a + len * 2 / 3).min(len)];
+                let ctx = format!("utf16 {name} cuts {cuts:?}");
+                check_strict_utf16(to8, &src, &cuts, &ctx);
+                check_lossy_utf16(to8, &src, &cuts, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn corpus_dirt_profiles_survive_arbitrary_cuts() {
+    // Realistic corpora under every corruption profile, cut at sampled
+    // offsets: the sweep above proves the edge cases, this proves the
+    // composition at scale (multi-KiB inputs, many errors per chunk).
+    let to16 = Registry::global().get_utf8("best").expect("registry has best");
+    let to8 = Registry::global().get_utf16("best").expect("registry has best");
+    for corpus in generate_collection(Collection::WikipediaMars) {
+        let clean8 = corpus.utf8_prefix(8192).to_vec();
+        let clean16 = corpus.utf16_prefix(4096).to_vec();
+        for &profile in DIRT_PROFILES {
+            let dirty8 = corrupt_utf8(&clean8, profile.permille, 0xFACADE);
+            let dirty16 = corrupt_utf16(&clean16, profile.permille, 0xFACADE);
+            for parts in [2usize, 3, 5, 8] {
+                let cuts8: Vec<usize> =
+                    (1..parts).map(|i| i * dirty8.len() / parts + i).collect();
+                let ctx = format!("{} {} {parts}-way", corpus.name(), profile.label);
+                check_strict_utf8(to16, &dirty8, &cuts8, &ctx);
+                check_lossy_utf8(to16, &dirty8, &cuts8, &ctx);
+                let cuts16: Vec<usize> =
+                    (1..parts).map(|i| i * dirty16.len() / parts + i).collect();
+                check_strict_utf16(to8, &dirty16, &cuts16, &ctx);
+                check_lossy_utf16(to8, &dirty16, &cuts16, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_ladder_matches_oneshot_on_generated_corpora() {
+    // The executor entry points (auto split + scoped threads) across
+    // every `Registry::parallel_entries` cell, on a corpus big enough
+    // to really split: clean strict both directions, dirty lossy UTF-8.
+    let r = Registry::global();
+    let corpus = &generate_collection(Collection::Lipsum)[0];
+    let src8 = corpus.utf8_prefix(65536).to_vec();
+    let src16 = corpus.utf16_prefix(32768).to_vec();
+    let dirty8 = corrupt_utf8(&src8, 10, 0xC0FFEE);
+    for e in r.parallel_entries() {
+        let opts = ParallelOptions { threads: e.threads, min_chunk: 1024 };
+        let to16 = r.get_utf8(e.engine).expect("parallel entries resolve");
+        let to8 = r.get_utf16(e.engine).expect("parallel entries resolve");
+        let want = to16.convert_to_vec_exact(&src8).expect("corpus is valid");
+        let got = to16.par_convert_to_vec(&src8, opts).expect("parallel strict");
+        assert_eq!(got, want, "{} utf8→utf16", e.key);
+        let want = to8.convert_to_vec_exact(&src16).expect("corpus is valid");
+        let got = to8.par_convert_to_vec(&src16, opts).expect("parallel strict");
+        assert_eq!(got, want, "{} utf16→utf8", e.key);
+        let (want, wr) = to16.convert_lossy_to_vec(&dirty8).expect("lossy is total");
+        let (got, gr) = to16.par_convert_lossy_to_vec(&dirty8, opts).expect("parallel lossy");
+        assert_eq!(got, want, "{} lossy output", e.key);
+        assert_eq!(gr.replacements, wr.replacements, "{} lossy replacements", e.key);
+        assert_eq!(
+            gr.first_error.map(|x| (x.kind, x.position)),
+            wr.first_error.map(|x| (x.kind, x.position)),
+            "{} lossy first error",
+            e.key
+        );
+    }
+}
+
+#[test]
+fn latin1_every_cut_every_kernel_set() {
+    // Latin-1 → UTF-8 is total, so the only contract is the bytes: the
+    // parallel assembly must equal the scalar reference at every cut
+    // (including cuts between a high byte's two output bytes — output
+    // offsets are what the planner must get exactly right here).
+    let src: Vec<u8> = (0u8..=255).cycle().take(300).collect();
+    let want: Vec<u8> = src.iter().map(|&b| b as char).collect::<String>().into_bytes();
+    for k in Registry::global().latin1_entries() {
+        for cut in 0..=src.len() {
+            let got = par_latin1_to_utf8_vec_at(k, &src, &[cut]).expect("latin1 is total");
+            assert_eq!(got, want, "{} cut {cut}", k.key);
+        }
+        // And a handful of multi-cut grids.
+        for a in (0..=src.len()).step_by(17) {
+            let cuts = [a, a + 1, src.len() / 2, src.len() * 3 / 4];
+            let got = par_latin1_to_utf8_vec_at(k, &src, &cuts).expect("latin1 is total");
+            assert_eq!(got, want, "{} cuts {cuts:?}", k.key);
+        }
+    }
+}
+
+#[test]
+fn global_error_positions_cross_chunk_boundaries() {
+    // Place the single error in every chunk position of a 4-way split:
+    // the reported position must always be the global byte/word index,
+    // and the kind must match the one-shot classification — including
+    // the chunk-final lone-high-surrogate case, where the chunk-local
+    // scan sees a truncation but the document-level answer is
+    // `Surrogate`.
+    let to16 = Registry::global().get_utf8("best").expect("registry has best");
+    let to8 = Registry::global().get_utf16("best").expect("registry has best");
+    let clean = "abcdefgh\u{e9}\u{6f22}\u{1f642}".repeat(16).into_bytes();
+    for at in (0..clean.len()).step_by(7) {
+        let mut dirty = clean.clone();
+        dirty[at] = 0xFF;
+        let cuts: Vec<usize> = (1..4).map(|i| i * dirty.len() / 4).collect();
+        let want = to16.convert_to_vec_exact(&dirty).expect_err("0xFF never validates");
+        let got = to16.par_convert_to_vec_at(&dirty, &cuts).expect_err("parallel agrees");
+        assert_eq!((got.kind, got.position), (want.kind, want.position), "utf8 at {at}");
+    }
+    let clean16: Vec<u16> = "abcdefgh\u{e9}\u{6f22}\u{1f642}".repeat(16).encode_utf16().collect();
+    for at in (0..clean16.len() - 1).step_by(5) {
+        let mut dirty = clean16.clone();
+        dirty[at] = 0xD800; // lone high (next word is never a low here
+        dirty[at + 1] = 0x41; // because we overwrite it with ASCII)
+        let cuts: Vec<usize> = (1..4).map(|i| i * dirty.len() / 4).collect();
+        let want = to8.convert_to_vec_exact(&dirty).expect_err("lone high never validates");
+        let got = to8.par_convert_to_vec_at(&dirty, &cuts).expect_err("parallel agrees");
+        assert_eq!((got.kind, got.position), (want.kind, want.position), "utf16 at {at}");
+        assert_eq!(got.kind, ErrorKind::Surrogate, "utf16 at {at}");
+    }
+}
