@@ -4,7 +4,8 @@
 //! *Unicode at Gigabytes per Second*):
 //!
 //! 1. How fast are the counting kernels themselves? Every registry
-//!    kernel set (`scalar` reference, `simd128`, `simd256`, `best`) ×
+//!    kernel set (`scalar` reference, `simd128`, `simd256`, `simd512`,
+//!    `best`) ×
 //!    every lipsum corpus, all four kernels, input MB/s — the `scalar`
 //!    row is the baseline the SIMD speedup is read against.
 //! 2. What does the `*_to_vec` convenience path cost under each

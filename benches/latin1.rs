@@ -2,7 +2,7 @@
 //!
 //! Latin-1 is the crate's pure expand/compress workload (ISSUE 5 /
 //! *Unicode at Gigabytes per Second*): every kernel set (`scalar`
-//! reference, `simd128`, `simd256`, `best`) across the four
+//! reference, `simd128`, `simd256`, `simd512`, `best`) across the four
 //! `latin1 ⇄ utf8/utf16` directions, on two corpora:
 //!
 //! * `mixed` — [`Corpus::latin1`]: word-like ASCII with ~15% of

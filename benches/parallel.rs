@@ -1,7 +1,8 @@
 //! `cargo bench --bench parallel` — the parallel-pipeline thread sweep.
 //!
 //! Every `Registry::parallel_entries` cell — the validating
-//! width-explicit engines (`simd128`, `simd256`, `best`) × the fixed
+//! width-explicit engines (`simd128`, `simd256`, `simd512`, `best`) ×
+//! the fixed
 //! {1, 2, 4, 8} thread ladder — running `par_convert_to_vec` end to end
 //! (boundary-safe split, count-first planning, allocation, scoped
 //! workers) on one tiled corpus, both strict directions plus the

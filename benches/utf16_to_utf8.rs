@@ -2,7 +2,7 @@
 //! → UTF-8 evaluation: Table 9 (lipsum), Figure 6 (bar subset), Table 10
 //! (wikipedia-Mars), plus Figure 7 (speed vs input length, both
 //! directions) — then a sweep over every `engine::Registry` UTF-16→UTF-8
-//! entry, including `simd128`/`simd256`/`best`.
+//! entry, including `simd128`/`simd256`/`simd512`/`best`.
 
 use simdutf_rs::corpus::{generate_collection, Collection};
 use simdutf_rs::engine::Registry;

@@ -3,8 +3,8 @@
 //! (validating, lipsum), Figure 5 (bar subset), Table 7 (validating,
 //! wikipedia-Mars) and Table 8 (path counters, Arabic lipsum) — then a
 //! full engine × corpus sweep over **every** `engine::Registry` entry,
-//! including the width-explicit `simd128`/`simd256` backends and the
-//! runtime-dispatched `best` alias.
+//! including the width-explicit `simd128`/`simd256`/`simd512` backends
+//! and the runtime-dispatched `best` alias.
 //!
 //! Methodology follows §6.1: repeated in-memory conversions, minimum
 //! timing, gigacharacters per second. Budget per cell is controlled by

@@ -34,8 +34,8 @@ pub enum EngineChoice {
     /// The paper's vectorized transcoders (default), at the widest
     /// register width the CPU supports: resolves the registry's `best`
     /// (or `best-nv`) alias rather than naming a width. Use
-    /// `Named("simd128")` / `Named("simd256")` to pin a width for A/B
-    /// comparisons.
+    /// `Named("simd128")` / `Named("simd256")` / `Named("simd512")` to
+    /// pin a width for A/B comparisons.
     Simd { validate: bool },
     /// The ICU-like scalar baseline (for A/B service comparisons).
     Scalar,
@@ -435,7 +435,8 @@ enum WorkerEngine {
 }
 
 /// The Latin-1 kernel set for a worker keyed `key`: the matching
-/// registry entry (`scalar`/`simd128`/`simd256`/`best`), or `best` for
+/// registry entry (`scalar`/`simd128`/`simd256`/`simd512`/`best`), or
+/// `best` for
 /// engine keys with no Latin-1 analogue (`icu`, `llvm`, ...).
 fn resolve_latin1(key: &str) -> &'static crate::transcode::latin1::Latin1Kernels {
     let entries = crate::transcode::latin1::kernel_entries();
@@ -725,7 +726,9 @@ mod tests {
         let simd = service(EngineChoice::Simd { validate: true });
         let text = "A/B: ünïcode 文字 🙂 ".repeat(30);
         let reference = simd.transcode(Request::utf8(1, text.clone().into_bytes()));
-        for key in ["icu", "llvm", "steagall", "utf8lut", "simd128", "simd256", "best"] {
+        for key in
+            ["icu", "llvm", "steagall", "utf8lut", "simd128", "simd256", "simd512", "best"]
+        {
             let named = service(EngineChoice::Named(key.to_string()));
             let b = named.transcode(Request::utf8(1, text.clone().into_bytes()));
             assert_eq!(reference.utf16(), b.utf16(), "{key}");

@@ -63,7 +63,7 @@
 //! second element of a pair, so "high followed by low" is precisely the
 //! paired case of the scalar reference.
 
-use crate::simd::{is_ascii_block, SimdBytes, SimdWords, VectorBackend, V128, V256};
+use crate::simd::{is_ascii_block, SimdBytes, SimdWords, VectorBackend, V128, V256, V512};
 use std::sync::LazyLock;
 
 // ---------------------------------------------------------------------------
@@ -288,10 +288,10 @@ pub fn utf8_len_from_latin1_with<B: VectorBackend>(src: &[u8]) -> usize {
 /// UTF-8 bytes needed for Latin-1 input, on the widest usable backend.
 #[inline]
 pub fn utf8_len_from_latin1(src: &[u8]) -> usize {
-    if crate::simd::best_key() == V256::KEY {
-        utf8_len_from_latin1_with::<V256>(src)
-    } else {
-        utf8_len_from_latin1_with::<V128>(src)
+    match crate::simd::best_key() {
+        k if k == V512::KEY => utf8_len_from_latin1_with::<V512>(src),
+        k if k == V256::KEY => utf8_len_from_latin1_with::<V256>(src),
+        _ => utf8_len_from_latin1_with::<V128>(src),
     }
 }
 
@@ -364,7 +364,7 @@ pub fn utf16_len_from_utf32(src: &[u32]) -> usize {
 /// benchable without generics.
 #[derive(Clone, Copy)]
 pub struct CountKernels {
-    /// `"scalar"`, `"simd128"`, `"simd256"` or `"best"`.
+    /// `"scalar"`, `"simd128"`, `"simd256"`, `"simd512"` or `"best"`.
     pub key: &'static str,
     /// UTF-16 words needed for UTF-8 input.
     pub utf16_len_from_utf8: fn(&[u8]) -> usize,
@@ -409,19 +409,32 @@ pub static SIMD256_KERNELS: CountKernels = CountKernels {
     count_utf16_code_points: count_utf16_code_points_with::<V256>,
 };
 
+/// The 512-bit kernel set.
+pub static SIMD512_KERNELS: CountKernels = CountKernels {
+    key: "simd512",
+    utf16_len_from_utf8: utf16_len_from_utf8_with::<V512>,
+    utf8_len_from_utf16: utf8_len_from_utf16_with::<V512>,
+    count_utf8_code_points: count_utf8_code_points_with::<V512>,
+    count_utf16_code_points: count_utf16_code_points_with::<V512>,
+};
+
 /// The `best` set: the widest backend worth running here, resolved once
 /// with the exact policy of the engine registry's `best` alias
-/// ([`crate::simd::best_key`] — AVX2 compiled in *and* detected).
+/// ([`crate::simd::best_key`] — the ISA compiled in *and* detected).
 static BEST: LazyLock<CountKernels> = LazyLock::new(|| {
-    let resolved =
-        if crate::simd::best_key() == V256::KEY { SIMD256_KERNELS } else { SIMD128_KERNELS };
+    let resolved = match crate::simd::best_key() {
+        k if k == V512::KEY => SIMD512_KERNELS,
+        k if k == V256::KEY => SIMD256_KERNELS,
+        _ => SIMD128_KERNELS,
+    };
     CountKernels { key: "best", ..resolved }
 });
 
 /// Every kernel set, in registry order (`scalar`, `simd128`, `simd256`,
-/// `best`). Benches, tests and `Registry::count_entries` enumerate this.
-pub fn kernel_entries() -> [&'static CountKernels; 4] {
-    [&SCALAR_KERNELS, &SIMD128_KERNELS, &SIMD256_KERNELS, &*BEST]
+/// `simd512`, `best`). Benches, tests and `Registry::count_entries`
+/// enumerate this.
+pub fn kernel_entries() -> [&'static CountKernels; 5] {
+    [&SCALAR_KERNELS, &SIMD128_KERNELS, &SIMD256_KERNELS, &SIMD512_KERNELS, &*BEST]
 }
 
 /// UTF-16 words needed for `src`, on the widest usable backend.
@@ -581,6 +594,7 @@ mod tests {
             assert_eq!(utf8_len_from_latin1_scalar(&bytes), expected, "len={len}");
             assert_eq!(utf8_len_from_latin1_with::<V128>(&bytes), expected, "len={len}");
             assert_eq!(utf8_len_from_latin1_with::<V256>(&bytes), expected, "len={len}");
+            assert_eq!(utf8_len_from_latin1_with::<V512>(&bytes), expected, "len={len}");
             assert_eq!(utf8_len_from_latin1(&bytes), expected, "len={len}");
             assert_eq!(latin1_len_from_utf8(text.as_bytes()), bytes.len(), "len={len}");
             assert_eq!(utf16_len_from_latin1(&bytes), text.encode_utf16().count());
@@ -591,7 +605,7 @@ mod tests {
 
     #[test]
     fn best_resolves_like_the_engine_registry() {
-        let best = kernel_entries()[3];
+        let best = kernel_entries()[4];
         assert_eq!(best.key, "best");
         assert_eq!(utf16_len_from_utf8(b"smoke"), 5);
         assert_eq!(count_utf16_code_points(&[0x41, 0xD83D, 0xDE42]), 2);

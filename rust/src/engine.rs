@@ -33,15 +33,17 @@
 //! |---|---|---|---|
 //! | `simd128` | `V128` (same engine as `ours`) | yes | both |
 //! | `simd256` | `V256` | yes | both |
-//! | `best` | widest usable here (AVX2 compiled in + CPU support) | yes | both |
+//! | `simd512` | `V512` | yes | both |
+//! | `best` | widest usable here (ISA compiled in + CPU support) | yes | both |
 //! | `simd128-nv` | `V128` (same as `ours-nv`) | no | 8→16 |
 //! | `simd256-nv` | `V256` | no | 8→16 |
+//! | `simd512-nv` | `V512` | no | 8→16 |
 //! | `best-nv` | widest usable here | no | 8→16 |
 //!
 //! `best` is resolved **once**, when the registry is built, from
-//! [`crate::simd::best_key`] — it needs both the AVX2 paths compiled in
-//! *and* a CPU that reports AVX2, else it stays on `simd128` (CPU
-//! features do not change at runtime).
+//! [`crate::simd::best_key`] — the ladder is `simd512` (AVX-512BW
+//! compiled in *and* detected), `simd256` (AVX2 compiled in and
+//! detected), else `simd128` (CPU features do not change at runtime).
 //! The width-explicit and `best` entries are marked `paper: false` so
 //! the paper-table engine sets (Tables 5–10) keep the paper's exact
 //! columns; everything else — property tests, benches, the service —
@@ -51,7 +53,7 @@ use crate::baselines::{
     finite::FiniteTranscoder, icu_like::IcuLikeTranscoder, inoue::InoueTranscoder,
     llvm::LlvmTranscoder, steagall::SteagallTranscoder, utf8lut::Utf8LutTranscoder,
 };
-use crate::simd::{best_key, V256};
+use crate::simd::{best_key, V256, V512};
 use crate::transcode::{
     utf16_to_utf8::OurUtf16ToUtf8, utf8_to_utf16::OurUtf8ToUtf16, Utf16ToUtf8, Utf8ToUtf16,
 };
@@ -121,16 +123,34 @@ impl Registry {
         let ours128_nv = Arc::new(OurUtf8ToUtf16::non_validating());
         let ours256 = Arc::new(OurUtf8ToUtf16::<V256>::validating_on());
         let ours256_nv = Arc::new(OurUtf8ToUtf16::<V256>::non_validating_on());
+        let ours512 = Arc::new(OurUtf8ToUtf16::<V512>::validating_on());
+        let ours512_nv = Arc::new(OurUtf8ToUtf16::<V512>::non_validating_on());
         let ours16_128 = Arc::new(OurUtf16ToUtf8::validating());
         let ours16_256 = Arc::new(OurUtf16ToUtf8::<V256>::validating_on());
+        let ours16_512 = Arc::new(OurUtf16ToUtf8::<V512>::validating_on());
 
-        let wide = best_key() == V256::KEY;
-        let best8: Arc<dyn Utf8ToUtf16> =
-            if wide { ours256.clone() } else { ours128.clone() };
-        let best8_nv: Arc<dyn Utf8ToUtf16> =
-            if wide { ours256_nv.clone() } else { ours128_nv.clone() };
-        let best16: Arc<dyn Utf16ToUtf8> =
-            if wide { ours16_256.clone() } else { ours16_128.clone() };
+        let best = best_key();
+        let best8: Arc<dyn Utf8ToUtf16> = if best == V512::KEY {
+            ours512.clone()
+        } else if best == V256::KEY {
+            ours256.clone()
+        } else {
+            ours128.clone()
+        };
+        let best8_nv: Arc<dyn Utf8ToUtf16> = if best == V512::KEY {
+            ours512_nv.clone()
+        } else if best == V256::KEY {
+            ours256_nv.clone()
+        } else {
+            ours128_nv.clone()
+        };
+        let best16: Arc<dyn Utf16ToUtf8> = if best == V512::KEY {
+            ours16_512.clone()
+        } else if best == V256::KEY {
+            ours16_256.clone()
+        } else {
+            ours16_128.clone()
+        };
 
         Registry {
             utf8: vec![
@@ -149,9 +169,11 @@ impl Registry {
                 Utf8Entry { key: "ours-nv", engine: ours128_nv.clone(), paper: true },
                 Utf8Entry { key: "simd128", engine: ours128, paper: false },
                 Utf8Entry { key: "simd256", engine: ours256, paper: false },
+                Utf8Entry { key: "simd512", engine: ours512, paper: false },
                 Utf8Entry { key: "best", engine: best8, paper: false },
                 Utf8Entry { key: "simd128-nv", engine: ours128_nv, paper: false },
                 Utf8Entry { key: "simd256-nv", engine: ours256_nv, paper: false },
+                Utf8Entry { key: "simd512-nv", engine: ours512_nv, paper: false },
                 Utf8Entry { key: "best-nv", engine: best8_nv, paper: false },
             ],
             utf16: vec![
@@ -161,6 +183,7 @@ impl Registry {
                 Utf16Entry { key: "ours", engine: ours16_128.clone(), paper: true },
                 Utf16Entry { key: "simd128", engine: ours16_128, paper: false },
                 Utf16Entry { key: "simd256", engine: ours16_256, paper: false },
+                Utf16Entry { key: "simd512", engine: ours16_512, paper: false },
                 Utf16Entry { key: "best", engine: best16, paper: false },
             ],
         }
@@ -258,22 +281,22 @@ impl Registry {
     }
 
     /// The counting-kernel sets ([`crate::count`]) per backend key —
-    /// `scalar` (reference), `simd128`, `simd256` and the
+    /// `scalar` (reference), `simd128`, `simd256`, `simd512` and the
     /// runtime-dispatched `best` (resolved with the same policy as the
     /// `best` engine alias). The counting benches and the differential
     /// suite enumerate kernels through this accessor, exactly as the
     /// conversion sweeps enumerate engines.
-    pub fn count_entries(&self) -> [&'static crate::count::CountKernels; 4] {
+    pub fn count_entries(&self) -> [&'static crate::count::CountKernels; 5] {
         crate::count::kernel_entries()
     }
 
     /// The Latin-1 kernel sets ([`crate::transcode::latin1`]) per
-    /// backend key — `scalar` (reference), `simd128`, `simd256` and the
-    /// runtime-dispatched `best`, exactly like
+    /// backend key — `scalar` (reference), `simd128`, `simd256`,
+    /// `simd512` and the runtime-dispatched `best`, exactly like
     /// [`Registry::count_entries`]. The Latin-1 benches, the CLI's
     /// `transcode --from/--to latin1` and the differential suite
     /// enumerate kernels through this accessor.
-    pub fn latin1_entries(&self) -> [&'static crate::transcode::latin1::Latin1Kernels; 4] {
+    pub fn latin1_entries(&self) -> [&'static crate::transcode::latin1::Latin1Kernels; 5] {
         crate::transcode::latin1::kernel_entries()
     }
 
@@ -289,7 +312,7 @@ impl Registry {
     /// count-first planner needs validated sizes.
     pub fn parallel_entries(&self) -> Vec<ParallelEntry> {
         let mut cells = Vec::new();
-        for engine in ["simd128", "simd256", "best"] {
+        for engine in ["simd128", "simd256", "simd512", "best"] {
             for threads in [1usize, 2, 4, 8] {
                 cells.push(ParallelEntry { key: format!("{engine}@{threads}"), engine, threads });
             }
@@ -339,19 +362,19 @@ mod tests {
     #[test]
     fn width_keys_and_best_alias_are_registered() {
         let r = Registry::global();
-        for key in ["simd128", "simd256", "best"] {
+        for key in ["simd128", "simd256", "simd512", "best"] {
             assert!(r.get_utf8(key).is_some(), "missing utf8 {key}");
             assert!(r.get_utf16(key).is_some(), "missing utf16 {key}");
         }
-        for key in ["simd128-nv", "simd256-nv", "best-nv"] {
+        for key in ["simd128-nv", "simd256-nv", "simd512-nv", "best-nv"] {
             assert!(r.get_utf8(key).is_some(), "missing utf8 {key}");
             assert!(!r.get_utf8(key).unwrap().validating(), "{key} must not validate");
         }
-        // `best` resolves to whichever width the CPU prefers.
+        // `best` resolves to whichever width the CPU prefers — and
+        // best_key() can name any of the three registered widths.
         let best = r.get_utf8("best").unwrap();
-        let resolved =
-            if best_key() == "simd256" { r.get_utf8("simd256") } else { r.get_utf8("simd128") };
-        assert_eq!(best.name(), resolved.unwrap().name());
+        let resolved = r.get_utf8(best_key()).expect("best_key names a registered key");
+        assert_eq!(best.name(), resolved.name());
         assert!(best.validating());
     }
 
@@ -415,7 +438,7 @@ mod tests {
         let r = Registry::global();
         let entries = r.count_entries();
         let keys: Vec<&str> = entries.iter().map(|k| k.key).collect();
-        assert_eq!(keys, ["scalar", "simd128", "simd256", "best"]);
+        assert_eq!(keys, ["scalar", "simd128", "simd256", "simd512", "best"]);
         let text = "counting parity: ascii, éé, 漢字, 🙂🚀 — ".repeat(9);
         let words: Vec<u16> = text.encode_utf16().collect();
         for k in entries {
@@ -441,7 +464,7 @@ mod tests {
         let r = Registry::global();
         let entries = r.latin1_entries();
         let keys: Vec<&str> = entries.iter().map(|k| k.key).collect();
-        assert_eq!(keys, ["scalar", "simd128", "simd256", "best"]);
+        assert_eq!(keys, ["scalar", "simd128", "simd256", "simd512", "best"]);
         let latin1: Vec<u8> = (0u8..=255).cycle().take(700).collect();
         let text: String = latin1.iter().map(|&b| b as char).collect();
         for k in entries {
@@ -460,7 +483,7 @@ mod tests {
     fn parallel_entries_cover_validating_widths_and_thread_ladder() {
         let r = Registry::global();
         let cells = r.parallel_entries();
-        assert_eq!(cells.len(), 12, "3 engines x 4 thread counts");
+        assert_eq!(cells.len(), 16, "4 engines x 4 thread counts");
         let mut seen = std::collections::HashSet::new();
         for cell in &cells {
             assert!(seen.insert(cell.key.clone()), "duplicate cell {}", cell.key);
@@ -497,15 +520,14 @@ mod tests {
         let r = Registry::global();
         let text = "width parity: ascii, éé, 漢字, 🙂🚀 — ".repeat(20);
         let narrow = r.get_utf8("simd128").unwrap();
-        let wide = r.get_utf8("simd256").unwrap();
-        assert_eq!(
-            narrow.convert_to_vec(text.as_bytes()).unwrap(),
-            wide.convert_to_vec(text.as_bytes()).unwrap()
-        );
         let mut bad = text.clone().into_bytes();
         bad[100] = 0xFF;
-        let e1 = narrow.convert_to_vec(&bad).unwrap_err();
-        let e2 = wide.convert_to_vec(&bad).unwrap_err();
-        assert_eq!(e1, e2);
+        let expected = narrow.convert_to_vec(text.as_bytes()).unwrap();
+        let expected_err = narrow.convert_to_vec(&bad).unwrap_err();
+        for key in ["simd256", "simd512"] {
+            let wide = r.get_utf8(key).unwrap();
+            assert_eq!(wide.convert_to_vec(text.as_bytes()).unwrap(), expected, "{key}");
+            assert_eq!(wide.convert_to_vec(&bad).unwrap_err(), expected_err, "{key}");
+        }
     }
 }

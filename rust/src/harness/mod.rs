@@ -761,11 +761,14 @@ pub fn bench_utf16_engine_mbps(engine: &dyn Utf16ToUtf8, corpus: &Corpus) -> f64
 
 /// Machine-readable engine × corpus throughput matrix: every registry
 /// entry (paper engines **and** the width-explicit `simd128`/`simd256`/
-/// `best` keys), each lipsum corpus profile, input MB/s — plus (v5) the
-/// `parallel` thread-sweep section over `Registry::parallel_entries` on
-/// a [`Corpus::tiled`] GB-scale corpus. This is what CI writes to
-/// `BENCH_<n>.json` in smoke mode (`SIMDUTF_BENCH_BUDGET_MS` small) to
-/// seed the perf trajectory.
+/// `simd512`/`best` keys), each lipsum corpus profile, input MB/s —
+/// plus (v5) the `parallel` thread-sweep section over
+/// `Registry::parallel_entries` on a [`Corpus::tiled`] GB-scale corpus,
+/// and (v6) a top-level `backend` field naming the detected ISA
+/// ([`crate::simd::detected_isa`]) so a perf trajectory row records the
+/// hardware it measured. This is what CI writes to `BENCH_<n>.json` in
+/// smoke mode (`SIMDUTF_BENCH_BUDGET_MS` small) to seed the perf
+/// trajectory.
 pub fn bench_json() -> String {
     bench_json_with(default_budget())
 }
@@ -927,7 +930,7 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
         .collect();
 
     // Counting kernels: every registry kernel set (scalar / simd128 /
-    // simd256 / best) per corpus, input MB/s. The scalar row is the
+    // simd256 / simd512 / best) per corpus, input MB/s. The scalar row is the
     // baseline the SIMD speedup claim is read against.
     let count8_rows = |pick: fn(&CountKernels) -> fn(&[u8]) -> usize|
      -> Vec<(&'static str, Vec<(String, Option<f64>)>)> {
@@ -1010,7 +1013,7 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
         vec![("utf8_to_utf16", alloc8_rows), ("utf16_to_utf8", alloc16_rows)];
 
     // Latin-1 kernel sweep (new in v4): every kernel set (`scalar` /
-    // `simd128` / `simd256` / `best`) over two corpora — `mixed`
+    // `simd128` / `simd256` / `simd512` / `best`) over two corpora — `mixed`
     // ([`Corpus::latin1`]: ~15% high bytes, the expand/compress work
     // load) and `ascii` (the paper's pure-ASCII Latin lipsum profile,
     // where the 64-byte block fast path should dominate) — for all
@@ -1158,10 +1161,11 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
         .collect();
 
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"simdutf-rs-bench-v5\",\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v6\",\n");
     out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
     out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
     out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
+    out.push_str(&format!("  \"backend\": \"{}\",\n", crate::simd::detected_isa()));
     emit_section(&mut out, "utf8_to_utf16", &utf8_rows, true);
     emit_section(&mut out, "utf16_to_utf8", &utf16_rows, true);
     emit_section(&mut out, "utf8_to_utf16_lossy", &lossy8_rows, true);
@@ -1233,7 +1237,7 @@ mod tests {
         for e in Registry::global().utf8_entries() {
             assert!(json.contains(&format!("\"{}\"", e.key)), "missing {}:\n{json}", e.key);
         }
-        for key in ["simd128", "simd256", "best"] {
+        for key in ["simd128", "simd256", "simd512", "best"] {
             assert!(json.contains(&format!("\"{key}\"")), "missing width key {key}");
         }
         assert!(json.contains("\"utf8_to_utf16\"") && json.contains("\"utf16_to_utf8\""));
@@ -1246,7 +1250,13 @@ mod tests {
         );
         assert!(json.contains("+dirty10"), "missing dirty cells:\n{json}");
         // v3: counting kernels and alloc-strategy head-to-head.
-        assert!(json.contains("\"simdutf-rs-bench-v5\""), "schema must be v5:\n{json}");
+        assert!(json.contains("\"simdutf-rs-bench-v6\""), "schema must be v6:\n{json}");
+        // v6: the detected-ISA backend field.
+        assert!(json.contains("\"backend\""), "missing backend field:\n{json}");
+        assert!(
+            json.contains(&format!("\"{}\"", crate::simd::detected_isa())),
+            "backend must name the detected ISA:\n{json}"
+        );
         assert!(json.contains("\"counts\""), "missing counts section:\n{json}");
         for sub in [
             "utf16_len_from_utf8",

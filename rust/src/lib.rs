@@ -10,10 +10,11 @@
 //!   (Algorithms 2, 3 and 4), validating and non-validating, built on a
 //!   portable **width-generic** SIMD substrate ([`simd`]) and small
 //!   lookup tables ([`tables`]). The kernels are generic over
-//!   [`simd::VectorBackend`] and ship at two widths — [`simd::V128`]
-//!   (16-byte registers, the paper's formulation) and [`simd::V256`]
-//!   (32-byte registers) — surfaced in the engine registry as
-//!   `simd128`, `simd256` and the runtime-dispatched `best`.
+//!   [`simd::VectorBackend`] and ship at three widths — [`simd::V128`]
+//!   (16-byte registers, the paper's formulation; SSE on x86-64, NEON
+//!   on aarch64), [`simd::V256`] (32-byte registers) and [`simd::V512`]
+//!   (64-byte AVX-512 registers) — surfaced in the engine registry as
+//!   `simd128`, `simd256`, `simd512` and the runtime-dispatched `best`.
 //!   Conversions return rich results
 //!   ([`transcode::TranscodeResult`]): the output length, or a
 //!   [`transcode::TranscodeError`] carrying the error class and the
@@ -30,7 +31,8 @@
 //!   predictors (`utf16_len_from_utf8`, `utf8_len_from_utf16`) and
 //!   code-point counters, movemask+popcount kernels generic over the
 //!   same backends as the converters (scalar / `simd128` / `simd256` /
-//!   `best`), powering the allocation-free `*_to_vec_exact` paths.
+//!   `simd512` / `best`), powering the allocation-free `*_to_vec_exact`
+//!   paths.
 //! * [`transcode::latin1`] — the Latin-1 leg: `latin1 ⇄ utf8/utf16/
 //!   utf32` expand/compress kernels over the same backends, enumerable
 //!   per key (`Registry::latin1_entries`), with exact-allocation `_vec`
@@ -127,8 +129,8 @@
 //!
 //! | registry key | what you get |
 //! |---|---|
-//! | `best` | our engine on the widest usable backend (AVX2 compiled in + detected → 256-bit) |
-//! | `simd128` / `simd256` | our engine pinned to a register width |
+//! | `best` | our engine on the widest usable backend (AVX-512BW → 512-bit, else AVX2 → 256-bit, else 128-bit) |
+//! | `simd128` / `simd256` / `simd512` | our engine pinned to a register width |
 //! | `ours` | alias of `simd128` (the paper's configuration) |
 //! | `icu`, `llvm`, `finite`, … | the paper's baselines |
 //!

@@ -15,7 +15,7 @@
 //!     policy and reports the replacement count on stderr (UTF-8⇄UTF-16
 //!     only: Latin-1 cannot encode U+FFFD, so its conversions are
 //!     always strict). Latin-1 legs take --engine
-//!     scalar|simd128|simd256|best (kernel sets, default best).
+//!     scalar|simd128|simd256|simd512|best (kernel sets, default best).
 //!     --threads N runs the conversion through the parallel pipeline
 //!     (UTF-8⇄UTF-16 and latin1→utf8; same outputs, same errors in
 //!     global coordinates — see the `parallel` module).
@@ -26,8 +26,8 @@
 //!     lossy mode (the stats line reports total replacements).
 //! simdutf-cli engines
 //!     List every registered engine (key, name, validation, directions),
-//!     including the width-explicit `simd128`/`simd256` backends and the
-//!     runtime-dispatched `best` alias.
+//!     including the width-explicit `simd128`/`simd256`/`simd512`
+//!     backends and the runtime-dispatched `best` alias.
 //! simdutf-cli bench-json [--out FILE] [--threads N]
 //!     Emit the machine-readable engine × corpus throughput matrix
 //!     (input MB/s for every registry key; see harness::bench_json),
@@ -166,7 +166,8 @@ fn cmd_transcode(args: &[String]) -> i32 {
         }
     };
     // Default to the runtime-dispatched alias: the widest backend the
-    // CPU supports. `--engine simd128`/`simd256` (or any key) pins one.
+    // CPU supports. `--engine simd128`/`simd256`/`simd512` (or any
+    // key) pins one.
     let engine_key = flag_value(args, "--engine").unwrap_or_else(|| "best".to_string());
     let lossy = has_flag(args, "--lossy");
     // 0 (the default) keeps the one-shot path; N > 0 routes through the

@@ -14,22 +14,28 @@
 //!   same width together and names the backend ([`V128`], [`V256`]).
 //!
 //! `V128` is backed by the original [`U8x16`]/[`U16x8`] types (with
-//! their SSSE3 intrinsic paths); `V256` by [`U8x32`]/[`U16x16`]
-//! (loop-based, with AVX2 intrinsic paths for the operations LLVM
-//! cannot synthesize from loops: `shuffle`, `lookup16`, `prev`,
-//! `movemask`). [`best_key`] picks the widest backend the running CPU
-//! supports, which is how the `best` engine-registry alias dispatches.
+//! their SSSE3 intrinsic paths on x64 and NEON paths on aarch64);
+//! `V256` by [`U8x32`]/[`U16x16`] (loop-based, with AVX2 intrinsic
+//! paths for the operations LLVM cannot synthesize from loops:
+//! `shuffle`, `lookup16`, `prev`, `movemask`); [`V512`] by
+//! [`U8x64`]/[`U16x32`] (loop-based, with AVX-512BW/VBMI paths:
+//! `vpmovb2m` movemask, `vpermt2b` two-source permute for `prev`, and
+//! masked loads/stores for exact tails). [`best_key`] picks the widest
+//! backend the running CPU supports, which is how the `best`
+//! engine-registry alias dispatches.
 //!
-//! ### 256-bit shuffle semantics
+//! ### Wide shuffle semantics
 //!
-//! [`SimdBytes::shuffle`] and [`SimdBytes::lookup16`] follow the AVX2
-//! `vpshufb` convention at 32 lanes: the shuffle is **per 16-byte
-//! half** (lane `i` selects from its own half via `idx[i] & 0x0F`).
-//! Nibble lookups are unaffected (the 16-byte table is logically
-//! broadcast to both halves); code that needs a true cross-half
-//! permute uses [`super::shuffle32`] (two-source) explicitly.
+//! [`SimdBytes::shuffle`] and [`SimdBytes::lookup16`] follow the
+//! `vpshufb` convention at every width: the shuffle is **per 16-byte
+//! group** (lane `i` selects from its own half at 32 lanes, its own
+//! quarter at 64, via `idx[i] & 0x0F`). Nibble lookups are unaffected
+//! (the 16-byte table is logically broadcast to every group); code that
+//! needs a true cross-group permute uses [`super::shuffle32`]
+//! (two-source, 16-byte result) or [`U8x64::permute2`] (two-source, 64
+//! lanes) explicitly.
 
-use super::{U16x16, U16x8, U8x16, U8x32};
+use super::{U16x16, U16x32, U16x8, U8x16, U8x32, U8x64};
 
 /// A vector of `u8` lanes exposing the paper's primitive set.
 ///
@@ -37,7 +43,7 @@ use super::{U16x16, U16x8, U8x16, U8x32};
 /// loop-based implementations are bit-exact with the intrinsic paths
 /// (asserted by the `simd` unit tests).
 pub trait SimdBytes: Copy + Send + Sync + std::fmt::Debug + 'static {
-    /// Number of 8-bit lanes (16 or 32).
+    /// Number of 8-bit lanes (16, 32 or 64).
     const LANES: usize;
 
     /// The all-zero vector.
@@ -88,6 +94,31 @@ pub trait SimdBytes: Copy + Send + Sync + std::fmt::Debug + 'static {
     fn any(self) -> bool;
     /// True iff every lane is ASCII (MSB clear).
     fn is_ascii(self) -> bool;
+
+    /// Load `src.len()` bytes (must be `<= LANES`) into the low lanes,
+    /// zero-filling the rest — the masked-tail load. The default is a
+    /// zero-padded copy through a stack buffer; [`U8x64`] overrides it
+    /// with one AVX-512BW masked load (`vmovdqu8 {k}{z}`). Zero padding
+    /// is ASCII, so validators can feed the result directly.
+    #[inline]
+    fn load_partial(src: &[u8]) -> Self {
+        debug_assert!(src.len() <= Self::LANES);
+        let mut buf = [0u8; 64]; // covers every backend width
+        buf[..src.len()].copy_from_slice(src);
+        Self::load(&buf)
+    }
+
+    /// Store the low `dst.len().min(LANES)` lanes — the masked-tail
+    /// store, which never writes past `dst`. The default copies through
+    /// a stack buffer; [`U8x64`] overrides it with one AVX-512BW masked
+    /// store (`vmovdqu8 {k}`).
+    #[inline]
+    fn store_partial(self, dst: &mut [u8]) {
+        let n = dst.len().min(Self::LANES);
+        let mut buf = [0u8; 64];
+        self.store(&mut buf);
+        dst[..n].copy_from_slice(&buf[..n]);
+    }
 
     /// Unsigned `>=` threshold mask: bit `i` of the result is set iff
     /// lane `i` is `>= t`, for thresholds in the non-ASCII range
@@ -173,7 +204,7 @@ pub(crate) fn kl_step_portable<V: SimdBytes>(
 
 /// A vector of `u16` lanes (the UTF-16 side of the transcoders).
 pub trait SimdWords: Copy + Send + Sync + std::fmt::Debug + 'static {
-    /// Number of 16-bit lanes (8 or 16).
+    /// Number of 16-bit lanes (8, 16 or 32).
     const LANES: usize;
     /// The byte vector of the same total width.
     type Bytes: SimdBytes;
@@ -216,7 +247,7 @@ pub trait VectorBackend:
 {
     /// Vector width in bytes (== `Bytes::LANES` == `2 * Words::LANES`).
     const WIDTH: usize;
-    /// Engine-registry key (`"simd128"` / `"simd256"`).
+    /// Engine-registry key (`"simd128"` / `"simd256"` / `"simd512"`).
     const KEY: &'static str;
     /// Display name used by engines on this backend.
     const ENGINE_NAME: &'static str;
@@ -253,23 +284,47 @@ impl VectorBackend for V256 {
     type Words = U16x16;
 }
 
+/// The 512-bit backend: 64-lane vectors, loop-based with AVX-512BW/VBMI
+/// intrinsic paths (`vpmovb2m` movemask, `vpshufb`-per-quarter shuffle,
+/// `vpermt2b` two-source permute behind `prev`, masked tail
+/// loads/stores).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct V512;
+
+impl VectorBackend for V512 {
+    const WIDTH: usize = 64;
+    const KEY: &'static str = "simd512";
+    const ENGINE_NAME: &'static str = "ours-512";
+    type Bytes = U8x64;
+    type Words = U16x32;
+}
+
 /// Registry key of the widest backend that is *worth running* here —
 /// what the `best` registry alias resolves to at process start.
 ///
-/// Two conditions must both hold for `simd256` to win, and they are
-/// different in kind:
+/// Two conditions must both hold for a wide backend to win, and they
+/// are different in kind:
 ///
-/// * **compile-time**: the build enabled AVX2 codegen
-///   (`-C target-cpu=native` or `target-feature=+avx2`), so the
-///   `U8x32` intrinsic paths actually exist. In a portable build the
-///   V256 backend is correct but loop-based — typically no faster than
-///   the tuned 128-bit engine — so `best` stays on `simd128` there.
-/// * **runtime**: the CPU reports AVX2, so those compiled paths can
-///   execute.
+/// * **compile-time**: the build enabled the matching codegen
+///   (`-C target-cpu=native`, or `target-feature=+avx2` /
+///   `+avx512bw`), so the `U8x32`/`U8x64` intrinsic paths actually
+///   exist. In a portable build the wide backends are correct but
+///   loop-based — typically no faster than the tuned 128-bit engine —
+///   so `best` stays on `simd128` there.
+/// * **runtime**: the CPU reports the feature, so those compiled paths
+///   can execute.
 ///
-/// `simd256` remains individually selectable in every build for A/B
+/// The ladder is `simd512` (AVX-512BW compiled in *and* detected),
+/// then `simd256` (AVX2 compiled in and detected), then `simd128`.
+/// Every key remains individually selectable in every build for A/B
 /// measurement regardless of what `best` picks.
 pub fn best_key() -> &'static str {
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx512bw") {
+            return V512::KEY;
+        }
+    }
     #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
@@ -281,10 +336,50 @@ pub fn best_key() -> &'static str {
 
 /// Width in bytes of the backend [`best_key`] names.
 pub fn best_width() -> usize {
-    if best_key() == V256::KEY {
-        V256::WIDTH
-    } else {
-        V128::WIDTH
+    match best_key() {
+        k if k == V512::KEY => V512::WIDTH,
+        k if k == V256::KEY => V256::WIDTH,
+        _ => V128::WIDTH,
+    }
+}
+
+/// Short name of the instruction set the selected [`best_key`] backend
+/// actually runs on — what the bench-json schema v6 `backend` field
+/// reports, so a perf trajectory row names the ISA it measured.
+///
+/// Unlike [`best_key`] (a registry key), this names hardware: e.g. a
+/// portable x64 build reports `"x86-64-portable"` even though `best`
+/// resolves to `simd128`, because the SSSE3 paths are not compiled in.
+pub fn detected_isa() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        #[cfg(all(target_feature = "avx512bw", target_feature = "avx512vbmi"))]
+        if std::arch::is_x86_feature_detected!("avx512vbmi") {
+            return "avx512bw+vbmi";
+        }
+        #[cfg(target_feature = "avx512bw")]
+        if std::arch::is_x86_feature_detected!("avx512bw") {
+            return "avx512bw";
+        }
+        #[cfg(target_feature = "avx2")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+        #[cfg(target_feature = "ssse3")]
+        if std::arch::is_x86_feature_detected!("ssse3") {
+            return "ssse3";
+        }
+        return "x86-64-portable";
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is baseline on aarch64; the intrinsic paths are always
+        // compiled in there.
+        return "neon";
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        return "portable";
     }
 }
 
@@ -305,6 +400,34 @@ mod tests {
         assert_eq!(m32.0[29], 0xF0 - 1);
         assert_eq!(m32.0[30], 0xE0 - 1);
         assert_eq!(m32.0[31], 0xC0 - 1);
+        let m64 = <U8x64 as SimdBytes>::incomplete_max();
+        assert_eq!(m64.0[60], 0xFF);
+        assert_eq!(m64.0[61], 0xF0 - 1);
+        assert_eq!(m64.0[62], 0xE0 - 1);
+        assert_eq!(m64.0[63], 0xC0 - 1);
+    }
+
+    #[test]
+    fn partial_defaults_match_overrides_at_every_width() {
+        let src: Vec<u8> = (0..64u8).map(|i| i.wrapping_mul(41).wrapping_add(3)).collect();
+        fn check<V: SimdBytes>(src: &[u8]) {
+            for n in [0usize, 1, 7, 15, V::LANES / 2, V::LANES - 1, V::LANES] {
+                let v = V::load_partial(&src[..n]);
+                let mut out = [0u8; 64];
+                v.store(&mut out);
+                for i in 0..V::LANES {
+                    let expected = if i < n { src[i] } else { 0 };
+                    assert_eq!(out[i], expected, "lanes={} n={n} lane {i}", V::LANES);
+                }
+                let full = V::load(src);
+                let mut short = vec![0xEEu8; n];
+                full.store_partial(&mut short);
+                assert_eq!(&short[..], &src[..n], "lanes={} n={n}", V::LANES);
+            }
+        }
+        check::<U8x16>(&src);
+        check::<U8x32>(&src);
+        check::<U8x64>(&src);
     }
 
     #[test]
@@ -327,8 +450,20 @@ mod tests {
 
     #[test]
     fn best_key_names_a_registered_width() {
-        assert!(["simd128", "simd256"].contains(&best_key()));
+        assert!(["simd128", "simd256", "simd512"].contains(&best_key()));
         assert_eq!(best_width() == 32, best_key() == "simd256");
+        assert_eq!(best_width() == 64, best_key() == "simd512");
+        // The ISA name is always one of the known strings.
+        assert!([
+            "avx512bw+vbmi",
+            "avx512bw",
+            "avx2",
+            "ssse3",
+            "x86-64-portable",
+            "neon",
+            "portable"
+        ]
+        .contains(&detected_isa()));
     }
 
     #[test]
@@ -337,5 +472,7 @@ mod tests {
         assert_eq!(V128::WIDTH, 2 * <U16x8 as SimdWords>::LANES);
         assert_eq!(V256::WIDTH, <U8x32 as SimdBytes>::LANES);
         assert_eq!(V256::WIDTH, 2 * <U16x16 as SimdWords>::LANES);
+        assert_eq!(V512::WIDTH, <U8x64 as SimdBytes>::LANES);
+        assert_eq!(V512::WIDTH, 2 * <U16x32 as SimdWords>::LANES);
     }
 }

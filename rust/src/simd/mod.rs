@@ -11,10 +11,14 @@
 //!   transcode kernels and the Keiser–Lemire validator are generic
 //!   over, plus the two shipped backends:
 //!   * [`V128`] — 16-byte vectors ([`U8x16`], [`U16x8`]), the paper's
-//!     SSE/NEON-width formulation, with SSSE3 intrinsic paths.
+//!     SSE/NEON-width formulation, with SSSE3 intrinsic paths on x64
+//!     and NEON intrinsic paths on aarch64.
 //!   * [`V256`] — 32-byte vectors ([`U8x32`], [`U16x16`]), loop-based
 //!     with AVX2 intrinsic paths for the operations LLVM cannot
 //!     synthesize from loops.
+//!   * [`V512`] — 64-byte vectors ([`U8x64`], [`U16x32`]), loop-based
+//!     with AVX-512BW/VBMI intrinsic paths (`vpmovb2m` movemask,
+//!     `vpermt2b` two-source permute, masked tail loads/stores).
 //! * **Value types** — fixed-width types implemented in safe,
 //!   loop-based Rust. At `opt-level=3` the loops autovectorize into the
 //!   corresponding machine SIMD on x64 (SSE/AVX2) and aarch64 (NEON);
@@ -35,22 +39,28 @@
 //! * [`U8x16::lookup16`] is the nibble-table lookup used by the
 //!   Keiser–Lemire validator (a `pshufb` against a constant table).
 //!
-//! Which backend should a caller use? Usually neither directly: the
+//! Which backend should a caller use? Usually none directly: the
 //! engine registry's `best` alias resolves to the widest backend the
-//! running CPU supports (see [`best_key`]), and `simd128` / `simd256`
-//! name the widths explicitly.
+//! running CPU supports (see [`best_key`]), and `simd128` / `simd256` /
+//! `simd512` name the widths explicitly.
 
 pub mod backend;
 mod u16x16;
+mod u16x32;
 mod u16x8;
 mod u8x16;
 mod u8x32;
+mod u8x64;
 
-pub use backend::{best_key, best_width, SimdBytes, SimdWords, VectorBackend, V128, V256};
+pub use backend::{
+    best_key, best_width, detected_isa, SimdBytes, SimdWords, VectorBackend, V128, V256, V512,
+};
 pub use u16x16::U16x16;
+pub use u16x32::U16x32;
 pub use u16x8::U16x8;
 pub use u8x16::U8x16;
 pub use u8x32::U8x32;
+pub use u8x64::U8x64;
 
 /// 32-lane byte permute (the POWER `vperm` / AVX2 two-source shuffle the
 /// Inoue et al. transcoder relies on): lane `i` of the result is

@@ -1,0 +1,257 @@
+//! 32-lane 16-bit vector (the 512-bit UTF-16 side).
+
+use super::backend::SimdWords;
+use super::U8x64;
+
+/// A 32-lane vector of 16-bit code units. Loop-based; every operation
+/// autovectorizes to AVX-512BW at `opt-level=3` when compiled for a CPU
+/// that has it, and stays correct scalar code elsewhere. `movemask`
+/// carries the explicit `vpmovw2m` path (the one operation LLVM does
+/// not reliably synthesize from the shift-or loop) — at 32 lanes the
+/// mask exactly fills the `u32` the [`SimdWords`] trait already speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct U16x32(pub [u16; 32]);
+
+impl U16x32 {
+    /// The all-zero vector.
+    pub const ZERO: U16x32 = U16x32([0; 32]);
+
+    /// Load 32 little-endian 16-bit words from 64 bytes.
+    #[inline]
+    pub fn load_le_bytes(src: &[u8]) -> U16x32 {
+        let mut v = [0u16; 32];
+        for i in 0..32 {
+            v[i] = u16::from_le_bytes([src[2 * i], src[2 * i + 1]]);
+        }
+        U16x32(v)
+    }
+
+    /// Load 32 words from a `&[u16]` slice (length >= 32).
+    #[inline]
+    pub fn load(src: &[u16]) -> U16x32 {
+        let mut v = [0u16; 32];
+        v.copy_from_slice(&src[..32]);
+        U16x32(v)
+    }
+
+    /// Broadcast one word to all lanes.
+    #[inline]
+    pub fn splat(w: u16) -> U16x32 {
+        U16x32([w; 32])
+    }
+
+    /// Store all lanes to the front of `dst` (`dst.len() >= 32`).
+    #[inline]
+    pub fn store(self, dst: &mut [u16]) {
+        dst[..32].copy_from_slice(&self.0);
+    }
+
+    /// Reinterpret as 64 bytes (little-endian lane order).
+    #[inline]
+    pub fn to_bytes(self) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..32 {
+            let [lo, hi] = self.0[i].to_le_bytes();
+            v[2 * i] = lo;
+            v[2 * i + 1] = hi;
+        }
+        U8x64(v)
+    }
+
+    /// Lane-wise bitwise AND.
+    #[inline]
+    pub fn and(self, rhs: U16x32) -> U16x32 {
+        let mut v = [0u16; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] & rhs.0[i];
+        }
+        U16x32(v)
+    }
+
+    /// Lane-wise bitwise OR.
+    #[inline]
+    pub fn or(self, rhs: U16x32) -> U16x32 {
+        let mut v = [0u16; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] | rhs.0[i];
+        }
+        U16x32(v)
+    }
+
+    /// Lane-wise bitwise NOT.
+    #[inline]
+    pub fn not(self) -> U16x32 {
+        let mut v = [0u16; 32];
+        for i in 0..32 {
+            v[i] = !self.0[i];
+        }
+        U16x32(v)
+    }
+
+    /// Lane-wise logical shift right by a constant (`vpsrlw`).
+    #[inline]
+    pub fn shr<const N: u32>(self) -> U16x32 {
+        let mut v = [0u16; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] >> N;
+        }
+        U16x32(v)
+    }
+
+    /// Lane-wise shift left by a constant (`vpsllw`).
+    #[inline]
+    pub fn shl<const N: u32>(self) -> U16x32 {
+        let mut v = [0u16; 32];
+        for i in 0..32 {
+            v[i] = self.0[i] << N;
+        }
+        U16x32(v)
+    }
+
+    /// Lane-wise unsigned less-than mask: `0xFFFF` where `self < rhs`.
+    #[inline]
+    pub fn lt_mask(self, rhs: U16x32) -> U16x32 {
+        let mut v = [0u16; 32];
+        for i in 0..32 {
+            v[i] = if self.0[i] < rhs.0[i] { 0xFFFF } else { 0 };
+        }
+        U16x32(v)
+    }
+
+    /// 32-bit mask: bit `i` = MSB of lane `i` (`vpmovw2m`).
+    #[inline]
+    pub fn movemask(self) -> u32 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
+            return _mm512_movepi16_mask(a);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut m = 0u32;
+            for i in 0..32 {
+                m |= ((self.0[i] >> 15) as u32) << i;
+            }
+            m
+        }
+    }
+
+    /// OR-reduction of all lanes.
+    #[inline]
+    pub fn reduce_or(self) -> u16 {
+        let mut acc = 0u16;
+        for i in 0..32 {
+            acc |= self.0[i];
+        }
+        acc
+    }
+
+    /// True iff any word is in the surrogate range `0xD800..=0xDFFF`.
+    #[inline]
+    pub fn has_surrogate(self) -> bool {
+        let mut any = false;
+        for i in 0..32 {
+            any |= (self.0[i] & 0xF800) == 0xD800;
+        }
+        any
+    }
+}
+
+impl SimdWords for U16x32 {
+    const LANES: usize = 32;
+    type Bytes = U8x64;
+
+    #[inline]
+    fn load(src: &[u16]) -> Self {
+        U16x32::load(src)
+    }
+    #[inline]
+    fn load_le_bytes(src: &[u8]) -> Self {
+        U16x32::load_le_bytes(src)
+    }
+    #[inline]
+    fn splat(w: u16) -> Self {
+        U16x32::splat(w)
+    }
+    #[inline]
+    fn store(self, dst: &mut [u16]) {
+        U16x32::store(self, dst)
+    }
+    #[inline]
+    fn to_bytes(self) -> U8x64 {
+        U16x32::to_bytes(self)
+    }
+    #[inline]
+    fn and(self, rhs: Self) -> Self {
+        U16x32::and(self, rhs)
+    }
+    #[inline]
+    fn or(self, rhs: Self) -> Self {
+        U16x32::or(self, rhs)
+    }
+    #[inline]
+    fn not(self) -> Self {
+        U16x32::not(self)
+    }
+    #[inline]
+    fn shr<const N: u32>(self) -> Self {
+        U16x32::shr::<N>(self)
+    }
+    #[inline]
+    fn shl<const N: u32>(self) -> Self {
+        U16x32::shl::<N>(self)
+    }
+    #[inline]
+    fn lt_mask(self, rhs: Self) -> Self {
+        U16x32::lt_mask(self, rhs)
+    }
+    #[inline]
+    fn movemask(self) -> u32 {
+        U16x32::movemask(self)
+    }
+    #[inline]
+    fn reduce_or(self) -> u16 {
+        U16x32::reduce_or(self)
+    }
+    #[inline]
+    fn has_surrogate(self) -> bool {
+        U16x32::has_surrogate(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn le_byte_roundtrip() {
+        let bytes: Vec<u8> = (0..64).collect();
+        let v = U16x32::load_le_bytes(&bytes);
+        assert_eq!(v.0[0], 0x0100);
+        assert_eq!(v.0[31], 0x3F3E);
+        assert_eq!(v.to_bytes().0.to_vec(), bytes);
+    }
+
+    #[test]
+    fn movemask_fills_the_full_u32() {
+        let mut w = [0u16; 32];
+        w[1] = 0x8000;
+        w[17] = 0xFFFF;
+        w[31] = 0x8001;
+        assert_eq!(U16x32(w).movemask(), (1 << 1) | (1 << 17) | (1u32 << 31));
+        assert_eq!(U16x32::splat(0xFFFF).movemask(), u32::MAX);
+        assert_eq!(U16x32::ZERO.movemask(), 0);
+    }
+
+    #[test]
+    fn surrogate_detection() {
+        let mut w = [0x41u16; 32];
+        assert!(!U16x32(w).has_surrogate());
+        w[30] = 0xD800;
+        assert!(U16x32(w).has_surrogate());
+        assert!(!U16x32([0xD7FF; 32]).has_surrogate());
+        assert!(U16x32([0xDFFF; 32]).has_surrogate());
+    }
+}

@@ -105,14 +105,28 @@ impl U16x8 {
     }
 
     /// 8-bit mask: bit `i` = MSB of lane `i` (the `packs`+`pmovmskb`
-    /// idiom used to build the per-word bitsets of Algorithm 4).
+    /// idiom used to build the per-word bitsets of Algorithm 4). NEON
+    /// has no `pmovmskb`; there the idiom is sign-shift, multiply by
+    /// per-lane bit weights and a horizontal `addv` reduction.
     #[inline]
     pub fn movemask(self) -> u8 {
-        let mut m = 0u8;
-        for i in 0..8 {
-            m |= ((self.0[i] >> 15) as u8) << i;
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            use core::arch::aarch64::*;
+            const WEIGHTS: [u16; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+            let v = vld1q_u16(self.0.as_ptr());
+            let bits = vshrq_n_u16(v, 15);
+            let weighted = vmulq_u16(bits, vld1q_u16(WEIGHTS.as_ptr()));
+            return vaddvq_u16(weighted) as u8;
         }
-        m
+        #[allow(unreachable_code)]
+        {
+            let mut m = 0u8;
+            for i in 0..8 {
+                m |= ((self.0[i] >> 15) as u8) << i;
+            }
+            m
+        }
     }
 
     /// OR-reduction of all lanes.

@@ -9,8 +9,12 @@ use super::backend::{kl_step_portable, SimdBytes};
 /// cannot synthesize from loops — `shuffle`/`lookup16` (`pshufb`),
 /// `prev` (`palignr`), `movemask` (`pmovmskb`) — carry explicit
 /// `core::arch` implementations gated on `target_feature = "ssse3"`
-/// (enabled by the workspace's `target-cpu=native`), with the portable
-/// loop as the fallback on other targets. This mirrors the paper's
+/// (enabled by the workspace's `target-cpu=native`) **and**, on
+/// aarch64, NEON implementations (`vqtbl1q_u8` for the shuffles,
+/// `ext` for `prev`, the weighted-bit `addv` reduction for
+/// `movemask`, `zip1`/`zip2` for the interleaves — NEON is baseline on
+/// aarch64, so no feature gate is needed), with the portable loop as
+/// the fallback on other targets. This mirrors the paper's
 /// multi-backend C++ (§6.1: "a high-level C++ approach which allows us
 /// to easily support multiple processor instruction sets").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -142,6 +146,19 @@ impl U8x16 {
             let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
             return _mm_movemask_epi8(a) as u16;
         }
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            use core::arch::aarch64::*;
+            // NEON has no pmovmskb: isolate each MSB as a 0/1, weight
+            // lane i of each half by 2^(i % 8), then one addv horizontal
+            // sum per half builds the two mask bytes.
+            const WEIGHTS: [u8; 16] = [1, 2, 4, 8, 16, 32, 64, 128, 1, 2, 4, 8, 16, 32, 64, 128];
+            let v = vld1q_u8(self.0.as_ptr());
+            let bits = vmulq_u8(vshrq_n_u8(v, 7), vld1q_u8(WEIGHTS.as_ptr()));
+            let lo = vaddv_u8(vget_low_u8(bits)) as u16;
+            let hi = vaddv_u8(vget_high_u8(bits)) as u16;
+            return lo | (hi << 8);
+        }
         #[allow(unreachable_code)]
         {
             let mut m = 0u16;
@@ -164,6 +181,20 @@ impl U8x16 {
             let r = _mm_shuffle_epi8(a, b);
             let mut out = [0u8; 16];
             _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            use core::arch::aarch64::*;
+            // tbl returns 0 for any index >= 16, so masking the index to
+            // its low nibble plus the pshufb zero bit (0x8F) reproduces
+            // pshufb exactly: a set high bit keeps the index >= 0x80,
+            // well out of range.
+            let v = vld1q_u8(self.0.as_ptr());
+            let m = vandq_u8(vld1q_u8(idx.0.as_ptr()), vdupq_n_u8(0x8F));
+            let r = vqtbl1q_u8(v, m);
+            let mut out = [0u8; 16];
+            vst1q_u8(out.as_mut_ptr(), r);
             return U8x16(out);
         }
         #[allow(unreachable_code)]
@@ -191,6 +222,16 @@ impl U8x16 {
             let r = _mm_shuffle_epi8(t, i);
             let mut out = [0u8; 16];
             _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            use core::arch::aarch64::*;
+            // Callers guarantee lanes < 16, so a bare tbl is the lookup.
+            let t = vld1q_u8(table.as_ptr());
+            let r = vqtbl1q_u8(t, vld1q_u8(self.0.as_ptr()));
+            let mut out = [0u8; 16];
+            vst1q_u8(out.as_mut_ptr(), r);
             return U8x16(out);
         }
         #[allow(unreachable_code)]
@@ -224,6 +265,23 @@ impl U8x16 {
             _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
             return U8x16(out);
         }
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            use core::arch::aarch64::*;
+            // ext concatenates prev:cur and extracts 16 bytes starting
+            // at lane 16 - N — the palignr idiom, one instruction.
+            let prv = vld1q_u8(prev_block.0.as_ptr());
+            let cur = vld1q_u8(self.0.as_ptr());
+            let r = match N {
+                1 => vextq_u8(prv, cur, 15),
+                2 => vextq_u8(prv, cur, 14),
+                3 => vextq_u8(prv, cur, 13),
+                _ => unreachable!("prev<N> only used with N in 1..=3"),
+            };
+            let mut out = [0u8; 16];
+            vst1q_u8(out.as_mut_ptr(), r);
+            return U8x16(out);
+        }
         #[allow(unreachable_code)]
         {
             let mut cat = [0u8; 32];
@@ -251,6 +309,14 @@ impl U8x16 {
             _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
             return U8x16(out);
         }
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            use core::arch::aarch64::*;
+            let r = vzip1q_u8(vld1q_u8(self.0.as_ptr()), vld1q_u8(rhs.0.as_ptr()));
+            let mut out = [0u8; 16];
+            vst1q_u8(out.as_mut_ptr(), r);
+            return U8x16(out);
+        }
         #[allow(unreachable_code)]
         {
             let mut v = [0u8; 16];
@@ -274,6 +340,14 @@ impl U8x16 {
             let r = _mm_unpackhi_epi8(a, b);
             let mut out = [0u8; 16];
             _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+            return U8x16(out);
+        }
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            use core::arch::aarch64::*;
+            let r = vzip2q_u8(vld1q_u8(self.0.as_ptr()), vld1q_u8(rhs.0.as_ptr()));
+            let mut out = [0u8; 16];
+            vst1q_u8(out.as_mut_ptr(), r);
             return U8x16(out);
         }
         #[allow(unreachable_code)]

@@ -1,0 +1,583 @@
+//! 64-lane byte vector (the 512-bit side of the backend layer).
+
+use super::backend::{kl_step_portable, SimdBytes};
+use super::{U8x16, U8x32};
+
+/// A 64-byte SIMD value with AVX-512BW/VBMI-equivalent semantics.
+///
+/// Loop-based operations autovectorize at `opt-level=3`; the operations
+/// LLVM cannot synthesize from loops carry explicit `core::arch`
+/// implementations:
+///
+/// * `movemask` — `vpmovb2m` (one `kmov`-able 64-bit mask per register),
+///   gated on `target_feature = "avx512bw"`.
+/// * `shuffle` / `lookup16` — `vpshufb` at 512 bits (per 16-byte
+///   quarter), gated on `avx512bw`.
+/// * `prev` / [`U8x64::permute2`] — the `vpermt2b`-class two-source
+///   64-lane permute (`_mm512_permutex2var_epi8`), gated on
+///   `avx512vbmi`. This is the cross-register byte permute Clausecker &
+///   Lemire's AVX-512 transcoder is built around.
+/// * [`U8x64::load_partial`] / [`U8x64::store_partial`] — masked
+///   loads/stores (`vmovdqu8` with a `k` mask), gated on `avx512bw`, so
+///   tails shorter than a register cost one masked memory operation
+///   instead of a scalar loop.
+///
+/// Note the `vpshufb` convention: at 64 lanes [`U8x64::shuffle`] and
+/// [`U8x64::lookup16`] operate **per 16-byte quarter** (lane `i`
+/// selects from its own quarter), exactly like `_mm512_shuffle_epi8`.
+/// Cross-quarter permutes go through [`U8x64::permute2`] explicitly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct U8x64(pub [u8; 64]);
+
+impl U8x64 {
+    /// The all-zero vector.
+    pub const ZERO: U8x64 = U8x64([0; 64]);
+
+    /// Load 64 bytes from the start of `src` (must have length >= 64).
+    #[inline]
+    pub fn load(src: &[u8]) -> U8x64 {
+        let mut v = [0u8; 64];
+        v.copy_from_slice(&src[..64]);
+        U8x64(v)
+    }
+
+    /// Load `src.len()` bytes (must be <= 64) into the low lanes; the
+    /// remaining lanes are zero. On AVX-512BW this is one masked load
+    /// (`vmovdqu8 {k}{z}`) — the "exact tail" primitive — and a
+    /// zero-padded copy elsewhere.
+    #[inline]
+    pub fn load_partial(src: &[u8]) -> U8x64 {
+        debug_assert!(src.len() <= 64);
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let n = src.len().min(64);
+            let mask: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+            let r = _mm512_maskz_loadu_epi8(mask, src.as_ptr() as *const i8);
+            let mut out = [0u8; 64];
+            _mm512_storeu_si512(out.as_mut_ptr() as *mut __m512i, r);
+            return U8x64(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 64];
+            v[..src.len()].copy_from_slice(src);
+            U8x64(v)
+        }
+    }
+
+    /// Broadcast a single byte to all lanes.
+    #[inline]
+    pub fn splat(b: u8) -> U8x64 {
+        U8x64([b; 64])
+    }
+
+    /// Store into the start of `dst` (must have length >= 64).
+    #[inline]
+    pub fn store(self, dst: &mut [u8]) {
+        dst[..64].copy_from_slice(&self.0);
+    }
+
+    /// Store the low `dst.len().min(64)` lanes. On AVX-512BW this is one
+    /// masked store (`vmovdqu8 {k}`), so a short destination costs no
+    /// scalar loop and no over-write beyond `dst`.
+    #[inline]
+    pub fn store_partial(self, dst: &mut [u8]) {
+        let n = dst.len().min(64);
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let mask: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+            let v = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
+            _mm512_mask_storeu_epi8(dst.as_mut_ptr() as *mut i8, mask, v);
+            return;
+        }
+        #[allow(unreachable_code)]
+        dst[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    /// The two 32-byte halves, low half first.
+    #[inline]
+    pub fn to_halves(self) -> (U8x32, U8x32) {
+        let mut lo = [0u8; 32];
+        let mut hi = [0u8; 32];
+        lo.copy_from_slice(&self.0[..32]);
+        hi.copy_from_slice(&self.0[32..]);
+        (U8x32(lo), U8x32(hi))
+    }
+
+    /// The four 16-byte quarters, in lane order.
+    #[inline]
+    pub fn to_quarters(self) -> [U8x16; 4] {
+        core::array::from_fn(|q| {
+            let mut v = [0u8; 16];
+            v.copy_from_slice(&self.0[16 * q..16 * q + 16]);
+            U8x16(v)
+        })
+    }
+
+    /// Lane-wise bitwise AND (`vpandq`).
+    #[inline]
+    pub fn and(self, rhs: U8x64) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..64 {
+            v[i] = self.0[i] & rhs.0[i];
+        }
+        U8x64(v)
+    }
+
+    /// Lane-wise bitwise OR (`vporq`).
+    #[inline]
+    pub fn or(self, rhs: U8x64) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..64 {
+            v[i] = self.0[i] | rhs.0[i];
+        }
+        U8x64(v)
+    }
+
+    /// Lane-wise bitwise XOR (`vpxorq`).
+    #[inline]
+    pub fn xor(self, rhs: U8x64) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..64 {
+            v[i] = self.0[i] ^ rhs.0[i];
+        }
+        U8x64(v)
+    }
+
+    /// Lane-wise unsigned saturating subtraction (`vpsubusb`).
+    #[inline]
+    pub fn saturating_sub(self, rhs: U8x64) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..64 {
+            v[i] = self.0[i].saturating_sub(rhs.0[i]);
+        }
+        U8x64(v)
+    }
+
+    /// Lane-wise logical shift right by a constant.
+    #[inline]
+    pub fn shr<const N: u32>(self) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..64 {
+            v[i] = self.0[i] >> N;
+        }
+        U8x64(v)
+    }
+
+    /// `vpmovb2m`: bit `i` of the result is the MSB of lane `i`. At 64
+    /// lanes the mask exactly fills a `u64` — the width the 64-byte
+    /// block algorithms (Algorithm 3's end-of-character bitsets) want,
+    /// with no widening step.
+    #[inline]
+    pub fn movemask(self) -> u64 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
+            return _mm512_movepi8_mask(a);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut m = 0u64;
+            for i in 0..64 {
+                m |= ((self.0[i] >> 7) as u64) << i;
+            }
+            m
+        }
+    }
+
+    /// `vpshufb` at 512 bits: per 16-byte quarter, lane `i` is zero when
+    /// `idx[i] & 0x80` is set, else byte `idx[i] & 0x0F` of lane `i`'s
+    /// own quarter (the `_mm512_shuffle_epi8` convention).
+    #[inline]
+    pub fn shuffle(self, idx: U8x64) -> U8x64 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
+            let b = _mm512_loadu_si512(idx.0.as_ptr() as *const __m512i);
+            let r = _mm512_shuffle_epi8(a, b);
+            let mut out = [0u8; 64];
+            _mm512_storeu_si512(out.as_mut_ptr() as *mut __m512i, r);
+            return U8x64(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 64];
+            for i in 0..64 {
+                let j = idx.0[i];
+                v[i] = if j & 0x80 != 0 {
+                    0
+                } else {
+                    self.0[(i & 0x30) | (j & 0x0F) as usize]
+                };
+            }
+            U8x64(v)
+        }
+    }
+
+    /// Nibble-table lookup: the 16-byte table broadcast to all four
+    /// quarters, then `vpshufb`. Every lane of `self` must be in
+    /// `[0, 16)`.
+    #[inline]
+    pub fn lookup16(self, table: &[u8; 16]) -> U8x64 {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let t128 = _mm_loadu_si128(table.as_ptr() as *const __m128i);
+            let t = _mm512_broadcast_i32x4(t128);
+            let i = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
+            let r = _mm512_shuffle_epi8(t, i);
+            let mut out = [0u8; 64];
+            _mm512_storeu_si512(out.as_mut_ptr() as *mut __m512i, r);
+            return U8x64(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut v = [0u8; 64];
+            for i in 0..64 {
+                v[i] = table[(self.0[i] & 0x0F) as usize];
+            }
+            U8x64(v)
+        }
+    }
+
+    /// `vpermt2b`-style two-source 64-lane permute (the AVX-512VBMI
+    /// primitive the Clausecker–Lemire transcoder builds its compress
+    /// steps from): lane `i` of the result is
+    /// `concat(self, rhs)[idx[i] & 0x7F]`, or zero when `idx[i] & 0x80`
+    /// is set (the `pshufb` zeroing convention, realized as a
+    /// zero-masked `_mm512_maskz_permutex2var_epi8`).
+    #[inline]
+    pub fn permute2(self, rhs: U8x64, idx: U8x64) -> U8x64 {
+        #[cfg(all(
+            target_arch = "x86_64",
+            target_feature = "avx512bw",
+            target_feature = "avx512vbmi"
+        ))]
+        unsafe {
+            use core::arch::x86_64::*;
+            let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
+            let b = _mm512_loadu_si512(rhs.0.as_ptr() as *const __m512i);
+            let ix = _mm512_loadu_si512(idx.0.as_ptr() as *const __m512i);
+            // Zero the lanes whose index has the high bit set.
+            let keep = !_mm512_movepi8_mask(ix);
+            let r = _mm512_maskz_permutex2var_epi8(keep, a, ix, b);
+            let mut out = [0u8; 64];
+            _mm512_storeu_si512(out.as_mut_ptr() as *mut __m512i, r);
+            return U8x64(out);
+        }
+        #[allow(unreachable_code)]
+        {
+            let mut cat = [0u8; 128];
+            cat[..64].copy_from_slice(&self.0);
+            cat[64..].copy_from_slice(&rhs.0);
+            let mut v = [0u8; 64];
+            for i in 0..64 {
+                let j = idx.0[i];
+                v[i] = if j & 0x80 != 0 { 0 } else { cat[(j & 0x7F) as usize] };
+            }
+            U8x64(v)
+        }
+    }
+
+    /// Cross-register lag: lane `i` is the byte `N` positions before
+    /// lane `i` in the concatenated stream `prev_block ++ self`. Unlike
+    /// [`U8x64::shuffle`], this crosses the 128-bit quarters — realized
+    /// as one [`U8x64::permute2`] with the constant index
+    /// `64 - N + i` (the AVX-512VBMI idiom; on AVX2 this takes a
+    /// permute *and* an align per register).
+    #[inline]
+    pub fn prev<const N: usize>(self, prev_block: U8x64) -> U8x64 {
+        debug_assert!(N >= 1 && N <= 3);
+        let mut idx = [0u8; 64];
+        let mut i = 0;
+        while i < 64 {
+            idx[i] = (64 - N + i) as u8;
+            i += 1;
+        }
+        prev_block.permute2(self, U8x64(idx))
+    }
+
+    /// Byte interleave, low half, **sequential** across the register
+    /// (the [`SimdBytes::interleave_lo`] convention): result lane `2i`
+    /// is `self[i]`, lane `2i + 1` is `rhs[i]`, for `i < 32`. Loop form
+    /// only — LLVM synthesizes the two-source shuffle, and the
+    /// sequential semantics are deliberately *not* `vpunpcklbw` (which
+    /// interleaves per 128-bit quarter).
+    #[inline]
+    pub fn interleave_lo(self, rhs: U8x64) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..32 {
+            v[2 * i] = self.0[i];
+            v[2 * i + 1] = rhs.0[i];
+        }
+        U8x64(v)
+    }
+
+    /// Byte interleave, high half (sequential — see
+    /// [`U8x64::interleave_lo`]): result lane `2i` is `self[32 + i]`.
+    #[inline]
+    pub fn interleave_hi(self, rhs: U8x64) -> U8x64 {
+        let mut v = [0u8; 64];
+        for i in 0..32 {
+            v[2 * i] = self.0[32 + i];
+            v[2 * i + 1] = rhs.0[32 + i];
+        }
+        U8x64(v)
+    }
+
+    /// True iff any lane is non-zero.
+    #[inline]
+    pub fn any(self) -> bool {
+        let mut acc = 0u8;
+        for i in 0..64 {
+            acc |= self.0[i];
+        }
+        acc != 0
+    }
+
+    /// OR-reduction of all lanes.
+    #[inline]
+    pub fn reduce_or(self) -> u8 {
+        let mut acc = 0u8;
+        for i in 0..64 {
+            acc |= self.0[i];
+        }
+        acc
+    }
+
+    /// True iff every lane is ASCII (MSB clear).
+    #[inline]
+    pub fn is_ascii(self) -> bool {
+        self.reduce_or() < 0x80
+    }
+}
+
+impl SimdBytes for U8x64 {
+    const LANES: usize = 64;
+
+    #[inline]
+    fn zero() -> Self {
+        U8x64::ZERO
+    }
+    #[inline]
+    fn load(src: &[u8]) -> Self {
+        U8x64::load(src)
+    }
+    #[inline]
+    fn store(self, dst: &mut [u8]) {
+        U8x64::store(self, dst)
+    }
+    #[inline]
+    fn splat(b: u8) -> Self {
+        U8x64::splat(b)
+    }
+    #[inline]
+    fn from_fn(mut f: impl FnMut(usize) -> u8) -> Self {
+        let mut v = [0u8; 64];
+        for (i, lane) in v.iter_mut().enumerate() {
+            *lane = f(i);
+        }
+        U8x64(v)
+    }
+    #[inline]
+    fn and(self, rhs: Self) -> Self {
+        U8x64::and(self, rhs)
+    }
+    #[inline]
+    fn or(self, rhs: Self) -> Self {
+        U8x64::or(self, rhs)
+    }
+    #[inline]
+    fn xor(self, rhs: Self) -> Self {
+        U8x64::xor(self, rhs)
+    }
+    #[inline]
+    fn saturating_sub(self, rhs: Self) -> Self {
+        U8x64::saturating_sub(self, rhs)
+    }
+    #[inline]
+    fn shr<const N: u32>(self) -> Self {
+        U8x64::shr::<N>(self)
+    }
+    #[inline]
+    fn movemask(self) -> u64 {
+        U8x64::movemask(self)
+    }
+    #[inline]
+    fn shuffle(self, idx: Self) -> Self {
+        U8x64::shuffle(self, idx)
+    }
+    #[inline]
+    fn lookup16(self, table: &[u8; 16]) -> Self {
+        U8x64::lookup16(self, table)
+    }
+    #[inline]
+    fn prev<const N: usize>(self, prev_block: Self) -> Self {
+        U8x64::prev::<N>(self, prev_block)
+    }
+    #[inline]
+    fn interleave_lo(self, rhs: Self) -> Self {
+        U8x64::interleave_lo(self, rhs)
+    }
+    #[inline]
+    fn interleave_hi(self, rhs: Self) -> Self {
+        U8x64::interleave_hi(self, rhs)
+    }
+    #[inline]
+    fn any(self) -> bool {
+        U8x64::any(self)
+    }
+    #[inline]
+    fn is_ascii(self) -> bool {
+        U8x64::is_ascii(self)
+    }
+    #[inline]
+    fn load_partial(src: &[u8]) -> Self {
+        U8x64::load_partial(src)
+    }
+    #[inline]
+    fn store_partial(self, dst: &mut [u8]) {
+        U8x64::store_partial(self, dst)
+    }
+
+    #[inline]
+    fn kl_step(
+        self,
+        prev_block: Self,
+        prev_incomplete: Self,
+        error_acc: Self,
+        t1h: &[u8; 16],
+        t1l: &[u8; 16],
+        t2h: &[u8; 16],
+    ) -> (Self, Self) {
+        // The per-op AVX-512 intrinsics (prev via permute2, lookup16 via
+        // broadcast + vpshufb) keep the portable formulation
+        // register-resident; no fused path needed.
+        kl_step_portable(self, prev_block, prev_incomplete, error_acc, t1h, t1l, t2h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuffle_is_per_quarter_vpshufb() {
+        let v = U8x64::from_fn(|i| 100u8.wrapping_add(i as u8));
+        // Reverse within each quarter.
+        let idx = U8x64::from_fn(|i| (15 - (i & 0x0F)) as u8);
+        let out = v.shuffle(idx);
+        for i in 0..64 {
+            let quarter = i & 0x30;
+            let expected = 100u8.wrapping_add((quarter + (15 - (i & 0x0F))) as u8);
+            assert_eq!(out.0[i], expected, "lane {i}");
+        }
+        // High bit zeroes.
+        assert_eq!(v.shuffle(U8x64::splat(0x80)), U8x64::ZERO);
+    }
+
+    #[test]
+    fn lookup16_broadcasts_the_table() {
+        let table: [u8; 16] = core::array::from_fn(|i| (i * 5) as u8);
+        let idx = U8x64::from_fn(|i| (i % 16) as u8);
+        let out = idx.lookup16(&table);
+        for i in 0..64 {
+            assert_eq!(out.0[i], table[i % 16], "lane {i}");
+        }
+    }
+
+    #[test]
+    fn prev_crosses_every_quarter_boundary() {
+        let prev = U8x64::from_fn(|i| i as u8);
+        let cur = U8x64::from_fn(|i| 64 + i as u8);
+        for (n, got) in
+            [(1usize, cur.prev::<1>(prev)), (2, cur.prev::<2>(prev)), (3, cur.prev::<3>(prev))]
+        {
+            for i in 0..64 {
+                let expected = (64 + i - n) as u8;
+                assert_eq!(got.0[i], expected, "N={n} lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn permute2_selects_across_both_sources_and_zeroes() {
+        let a = U8x64::from_fn(|i| i as u8);
+        let b = U8x64::from_fn(|i| 64 + i as u8);
+        // Even lanes from `b` reversed, odd lanes zeroed.
+        let idx = U8x64::from_fn(|i| {
+            if i % 2 == 0 {
+                (64 + (63 - i)) as u8
+            } else {
+                0x80
+            }
+        });
+        let out = a.permute2(b, idx);
+        for i in 0..64 {
+            let expected = if i % 2 == 0 { (64 + (63 - i)) as u8 } else { 0 };
+            assert_eq!(out.0[i], expected, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn movemask_matches_definition() {
+        let v = U8x64::from_fn(|i| if i % 5 == 0 { 0x80 } else { 0x7F });
+        let m = v.movemask();
+        for i in 0..64 {
+            assert_eq!((m >> i) & 1 == 1, i % 5 == 0, "bit {i}");
+        }
+        assert_eq!(U8x64::splat(0xFF).movemask(), u64::MAX);
+        assert_eq!(U8x64::ZERO.movemask(), 0);
+    }
+
+    #[test]
+    fn partial_load_store_match_the_copy_semantics() {
+        let src: Vec<u8> = (0..64u8).map(|i| i.wrapping_mul(37).wrapping_add(1)).collect();
+        for n in [0usize, 1, 7, 15, 16, 31, 32, 33, 63, 64] {
+            let v = U8x64::load_partial(&src[..n]);
+            for i in 0..64 {
+                let expected = if i < n { src[i] } else { 0 };
+                assert_eq!(v.0[i], expected, "load n={n} lane {i}");
+            }
+            let full = U8x64::load(&src);
+            let mut out = vec![0xAAu8; n];
+            full.store_partial(&mut out);
+            assert_eq!(&out[..], &src[..n], "store n={n}");
+        }
+    }
+
+    #[test]
+    fn interleave_is_sequential_not_per_quarter() {
+        let a = U8x64::from_fn(|i| i as u8);
+        let b = U8x64::from_fn(|i| 100u8.wrapping_add(i as u8));
+        let lo = a.interleave_lo(b);
+        let hi = a.interleave_hi(b);
+        for i in 0..32 {
+            assert_eq!(lo.0[2 * i], i as u8, "lo lane {i}");
+            assert_eq!(lo.0[2 * i + 1], 100u8.wrapping_add(i as u8), "lo lane {i}");
+            assert_eq!(hi.0[2 * i], 32 + i as u8, "hi lane {i}");
+            assert_eq!(hi.0[2 * i + 1], 100u8.wrapping_add(32 + i as u8), "hi lane {i}");
+        }
+    }
+
+    #[test]
+    fn halves_and_quarters_round_trip() {
+        let v = U8x64::from_fn(|i| i as u8);
+        let (lo, hi) = v.to_halves();
+        assert_eq!(lo.0[0], 0);
+        assert_eq!(lo.0[31], 31);
+        assert_eq!(hi.0[0], 32);
+        assert_eq!(hi.0[31], 63);
+        let q = v.to_quarters();
+        for (qi, quarter) in q.iter().enumerate() {
+            for i in 0..16 {
+                assert_eq!(quarter.0[i], (16 * qi + i) as u8, "quarter {qi} lane {i}");
+            }
+        }
+    }
+}

@@ -26,7 +26,7 @@
 //! name, resolved once with the registry's `best` policy). The sets are
 //! enumerable per key through [`kernel_entries`] /
 //! `Registry::latin1_entries` (`scalar` / `simd128` / `simd256` /
-//! `best`), exactly like `Registry::count_entries`.
+//! `simd512` / `best`), exactly like `Registry::count_entries`.
 //!
 //! ### The expand/compress cores
 //!
@@ -72,7 +72,7 @@
 
 use crate::count;
 use crate::scalar;
-use crate::simd::{is_ascii_block, SimdBytes, SimdWords, U8x16, VectorBackend, V128, V256};
+use crate::simd::{is_ascii_block, SimdBytes, SimdWords, U8x16, VectorBackend, V128, V256, V512};
 use crate::transcode::{fill_uninit, ErrorKind, TranscodeError, TranscodeResult, EXACT_SLACK};
 use std::sync::LazyLock;
 
@@ -497,7 +497,9 @@ pub fn latin1_to_utf16_with<B: VectorBackend>(src: &[u8], dst: &mut [u16]) -> Tr
 /// exact lane. Identical results to [`utf16_to_latin1_scalar`].
 pub fn utf16_to_latin1_with<B: VectorBackend>(src: &[u16], dst: &mut [u8]) -> TranscodeResult {
     let lanes = B::WIDTH / 2;
-    let all: u32 = (1u32 << lanes) - 1;
+    // At the 512-bit width the 32-lane mask fills the whole u32, where
+    // `1 << 32` would overflow.
+    let all: u32 = if lanes == 32 { u32::MAX } else { (1u32 << lanes) - 1 };
     let mut p = 0usize;
     let mut q = 0usize;
     while p < src.len() {
@@ -604,7 +606,7 @@ pub fn utf32_to_latin1_with<B: VectorBackend>(src: &[u32], dst: &mut [u8]) -> Tr
 /// generics.
 #[derive(Clone, Copy)]
 pub struct Latin1Kernels {
-    /// `"scalar"`, `"simd128"`, `"simd256"` or `"best"`.
+    /// `"scalar"`, `"simd128"`, `"simd256"`, `"simd512"` or `"best"`.
     pub key: &'static str,
     /// Latin-1 → UTF-8 (expand; total).
     pub latin1_to_utf8: fn(&[u8], &mut [u8]) -> TranscodeResult,
@@ -664,19 +666,34 @@ pub static SIMD256_KERNELS: Latin1Kernels = Latin1Kernels {
     utf8_len_from_latin1: count::utf8_len_from_latin1_with::<V256>,
 };
 
+/// The 512-bit kernel set.
+pub static SIMD512_KERNELS: Latin1Kernels = Latin1Kernels {
+    key: "simd512",
+    latin1_to_utf8: latin1_to_utf8_with::<V512>,
+    utf8_to_latin1: utf8_to_latin1_with::<V512>,
+    latin1_to_utf16: latin1_to_utf16_with::<V512>,
+    utf16_to_latin1: utf16_to_latin1_with::<V512>,
+    latin1_to_utf32: latin1_to_utf32_with::<V512>,
+    utf32_to_latin1: utf32_to_latin1_with::<V512>,
+    utf8_len_from_latin1: count::utf8_len_from_latin1_with::<V512>,
+};
+
 /// The `best` set: the widest backend worth running here, resolved once
 /// with the engine registry's `best` policy ([`crate::simd::best_key`]).
 static BEST: LazyLock<Latin1Kernels> = LazyLock::new(|| {
-    let resolved =
-        if crate::simd::best_key() == V256::KEY { SIMD256_KERNELS } else { SIMD128_KERNELS };
+    let resolved = match crate::simd::best_key() {
+        k if k == V512::KEY => SIMD512_KERNELS,
+        k if k == V256::KEY => SIMD256_KERNELS,
+        _ => SIMD128_KERNELS,
+    };
     Latin1Kernels { key: "best", ..resolved }
 });
 
 /// Every kernel set, in registry order (`scalar`, `simd128`, `simd256`,
-/// `best`). Benches, tests and `Registry::latin1_entries` enumerate
-/// this.
-pub fn kernel_entries() -> [&'static Latin1Kernels; 4] {
-    [&SCALAR_KERNELS, &SIMD128_KERNELS, &SIMD256_KERNELS, &*BEST]
+/// `simd512`, `best`). Benches, tests and `Registry::latin1_entries`
+/// enumerate this.
+pub fn kernel_entries() -> [&'static Latin1Kernels; 5] {
+    [&SCALAR_KERNELS, &SIMD128_KERNELS, &SIMD256_KERNELS, &SIMD512_KERNELS, &*BEST]
 }
 
 /// Latin-1 → UTF-8 on the widest usable backend.
@@ -965,7 +982,7 @@ mod tests {
 
     #[test]
     fn best_resolves_to_a_registered_width() {
-        let best = kernel_entries()[3];
+        let best = kernel_entries()[4];
         assert_eq!(best.key, "best");
         let mut dst = vec![0u8; utf8_capacity_for_latin1(5)];
         assert_eq!(latin1_to_utf8(b"smoke", &mut dst), Ok(5));

@@ -63,22 +63,23 @@ pub const REPLACEMENT_UTF8: [u8; 3] = [0xEF, 0xBF, 0xBD];
 ///
 /// The engines' inner loops guard with full-register look-ahead (the
 /// largest is the UTF-16→UTF-8 kernel's `q + 2 * WIDTH <= dst.len()`
-/// check, 64 bytes at the 256-bit width, taken when as little as half a
-/// register of input — contributing as little as `WIDTH / 2` output
-/// units — remains). 64 units of slack therefore guarantee that **no
+/// check, 128 bytes at the 512-bit width, taken when as little as half
+/// a register of input — contributing as little as `WIDTH / 2` output
+/// units — remains). 128 units of slack therefore guarantee that **no
 /// engine in the crate can report `OutputBuffer` before it reports an
 /// encoding error or finishes**: at every guard point the engine has
 /// written `q <= exact` units (the predictors are per-unit monotone and
-/// exact on the valid prefix), so `q + 64 <= exact + 64` always holds.
-/// A constant, not proportional: the allocation stays exact-sized in
-/// the limit, against the 1×/3× proportional headroom of
+/// exact on the valid prefix), so `q + 128 <= exact + 128` always
+/// holds. A constant, not proportional: the allocation stays
+/// exact-sized in the limit, against the 1×/3× proportional headroom of
 /// [`utf16_capacity_for`] / [`utf8_capacity_for`].
 ///
-/// Derived from the widest shipped backend so a future width bump
-/// cannot silently shrink the margin; the UTF-16→UTF-8 kernel
-/// additionally carries an inline-const assertion tying its
-/// `q + 2 * WIDTH` guard to this constant at the point of use.
-pub const EXACT_SLACK: usize = 2 * <crate::simd::V256 as crate::simd::VectorBackend>::WIDTH;
+/// Derived from the widest shipped backend ([`crate::simd::V512`]) so a
+/// future width bump cannot silently shrink the margin; the
+/// UTF-16→UTF-8 kernel additionally carries an inline-const assertion
+/// tying its `q + 2 * WIDTH` guard to this constant at the point of
+/// use.
+pub const EXACT_SLACK: usize = 2 * <crate::simd::V512 as crate::simd::VectorBackend>::WIDTH;
 
 /// Marker for output-unit types that are plain old data: every bit
 /// pattern is a valid value, so a freshly allocated, *uninitialized*

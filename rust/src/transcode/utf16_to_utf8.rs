@@ -25,11 +25,11 @@ use std::marker::PhantomData;
 /// The paper's UTF-16 → UTF-8 transcoder ("ours" in Tables 9–10),
 /// generic over the SIMD backend.
 ///
-/// The backend parameter sets the classification width (8 or 16 words
-/// per dispatch) and the width of the ASCII pack; the 256-bit case-2
-/// path compresses through the widened [`ONE_TWO_HI`] table with a
-/// two-source permute, and case 3 reuses the shared half-register
-/// routine.
+/// The backend parameter sets the classification width (8, 16 or 32
+/// words per dispatch) and the width of the ASCII pack; the wide
+/// backends' case-2 path compresses 16-word groups through the widened
+/// [`ONE_TWO_HI`] table with a two-source permute, and case 3 reuses
+/// the shared half-register routine.
 ///
 /// Validation is effectively free: only registers containing surrogate
 /// candidates need any checking, so the paper reports a single
@@ -259,7 +259,8 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
     validate: bool,
     counters: &mut Counters,
 ) -> TranscodeResult {
-    // Words per register: 8 at 128-bit width, 16 at 256-bit.
+    // Words per register: 8 at 128-bit width, 16 at 256-bit, 32 at
+    // 512-bit.
     let lanes = B::WIDTH / 2;
     let mut p = 0usize;
     let mut q = 0usize;
@@ -271,11 +272,18 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
 
     while p + lanes <= src.len() {
         // Each register writes at most `3 * lanes` bytes, plus 16 bytes
-        // of slack for full-register stores: `2 * WIDTH` covers both
-        // widths (32 bytes at 128-bit — the original bound — and 64 at
-        // 256-bit).
+        // of slack for full-register stores: `2 * WIDTH` covers every
+        // width (32 bytes at 128-bit — the original bound — 64 at
+        // 256-bit, 128 at 512-bit). When the destination cannot take a
+        // full-register store, *degrade* to the scalar tail instead of
+        // erroring: the buffer may still fit the remaining output (a
+        // near-end ASCII run needs only `lanes` bytes, far less than the
+        // wide-store guard), and the tail loop's per-character checks
+        // report `OutputBuffer` only on genuine exhaustion. This keeps
+        // a `exact + h` destination spurious-free for every headroom
+        // `h`, not just `h >= EXACT_SLACK`.
         if q + 2 * B::WIDTH > dst.len() {
-            return Err(TranscodeError::output_buffer(p));
+            break;
         }
         let v = <B::Words as SimdWords>::load(&src[p..]);
         let acc = v.reduce_or();
@@ -289,11 +297,17 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
             continue;
         }
         if acc < 0x800 {
-            // Case 2: 1–2-byte characters only. The 256-bit backend
-            // compresses a whole register through the widened table;
-            // narrower widths use the 8-word routine.
+            // Case 2: 1–2-byte characters only. Wide backends compress
+            // 16-word groups through the widened table (two groups per
+            // register at 512-bit); the 128-bit backend uses the 8-word
+            // routine. `one_two_bytes_wide` consumes exactly 16 words
+            // per call, so the group loop covers every lane.
             if B::WIDTH >= 32 {
-                q += one_two_bytes_wide(&src[p..], &mut dst[q..]);
+                let mut g = 0;
+                while g < lanes {
+                    q += one_two_bytes_wide(&src[p + g..], &mut dst[q..]);
+                    g += 16;
+                }
             } else {
                 q += one_two_bytes(U16x8::load(&src[p..]), &mut dst[q..]);
             }
@@ -342,18 +356,31 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
         }
     }
 
-    // Scalar tail (fewer than 8 words).
+    // Scalar tail: fewer than `lanes` words left, or the main loop
+    // degraded here on a tight destination. Per-character output checks
+    // are exact, so `OutputBuffer` means the buffer genuinely cannot
+    // hold the next character.
     while p < src.len() {
-        if q + 4 > dst.len() {
-            return Err(TranscodeError::output_buffer(p));
-        }
         match scalar::decode_utf16_char(&src[p..]) {
             Ok((cp, n)) => {
+                let need = match cp {
+                    0..=0x7F => 1,
+                    0x80..=0x7FF => 2,
+                    0x800..=0xFFFF => 3,
+                    _ => 4,
+                };
+                if q + need > dst.len() {
+                    return Err(TranscodeError::output_buffer(p));
+                }
                 p += n;
                 q += scalar::encode_utf8_char(cp, &mut dst[q..]);
             }
             Err(e) => {
                 if !validate {
+                    // A lone surrogate round-trips as a 3-byte WTF-8 unit.
+                    if q + 3 > dst.len() {
+                        return Err(TranscodeError::output_buffer(p));
+                    }
                     let w = src[p] as u32;
                     q += scalar::encode_utf8_char_wtf8(w, &mut dst[q..]);
                     p += 1;
@@ -381,6 +408,10 @@ mod tests {
         let mut dst2 = vec![0u8; utf8_capacity_for(units.len())];
         let m = wide.convert(&units, &mut dst2).expect("valid input");
         assert_eq!(&dst2[..m], text.as_bytes(), "256-bit {text:?}");
+        let widest = OurUtf16ToUtf8::<crate::simd::V512>::validating_on();
+        let mut dst3 = vec![0u8; utf8_capacity_for(units.len())];
+        let k = widest.convert(&units, &mut dst3).expect("valid input");
+        assert_eq!(&dst3[..k], text.as_bytes(), "512-bit {text:?}");
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //!   works in chunks of 64 bytes"). ASCII blocks short-circuit. The
 //!   validator is generic over [`VectorBackend`]: `Utf8Validator<V128>`
 //!   (the default) steps in 16-byte registers with the fused SSSE3 path,
-//!   `Utf8Validator<V256>` in 32-byte registers — both produce identical
-//!   verdicts (asserted below and by `tests/backend_equivalence.rs`).
+//!   `Utf8Validator<V256>` in 32-byte registers, `Utf8Validator<V512>`
+//!   in 64-byte registers (one Keiser–Lemire step per block) — all
+//!   produce identical verdicts (asserted below and by
+//!   `tests/backend_equivalence.rs`).
 //! * [`validate_utf16le`] — UTF-16 validation: surrogate words must form
 //!   properly ordered pairs (§3). Vectorized scan for the common
 //!   surrogate-free case, scalar pairing check otherwise.
@@ -50,7 +52,7 @@ impl<B: VectorBackend> Utf8Validator<B> {
         }
     }
 
-    /// Process one backend-width register (16 or 32 bytes).
+    /// Process one backend-width register (16, 32 or 64 bytes).
     ///
     /// The per-register classification lives in [`SimdBytes::kl_step`]
     /// so each backend can fuse it (`U8x16` carries the SSSE3
@@ -104,7 +106,9 @@ impl<B: VectorBackend> Utf8Validator<B> {
     }
 
     /// Process an arbitrary-length tail (zero-padded to register size;
-    /// zero padding is ASCII and never masks an error).
+    /// zero padding is ASCII and never masks an error). The padding is a
+    /// masked-tail load ([`SimdBytes::load_partial`]) — one `vmovdqu8
+    /// {k}{z}` on AVX-512BW, a stack-buffer copy elsewhere.
     pub fn push_tail(&mut self, tail: &[u8]) {
         let mut chunks = tail.chunks_exact(B::WIDTH);
         for c in chunks.by_ref() {
@@ -112,9 +116,7 @@ impl<B: VectorBackend> Utf8Validator<B> {
         }
         let rem = chunks.remainder();
         if !rem.is_empty() {
-            let mut buf = [0u8; 64]; // covers every backend width
-            buf[..rem.len()].copy_from_slice(rem);
-            self.push_vec(<B::Bytes as SimdBytes>::load(&buf));
+            self.push_vec(<B::Bytes as SimdBytes>::load_partial(rem));
         }
     }
 
@@ -218,7 +220,7 @@ pub fn validate_utf16le(input: &[u16]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simd::V256;
+    use crate::simd::{V256, V512};
 
     fn check(bytes: &[u8]) {
         let expected = std::str::from_utf8(bytes).is_ok();
@@ -227,6 +229,11 @@ mod tests {
             validate_utf8_with::<V256>(bytes),
             expected,
             "256-bit backend disagrees on {bytes:02x?}"
+        );
+        assert_eq!(
+            validate_utf8_with::<V512>(bytes),
+            expected,
+            "512-bit backend disagrees on {bytes:02x?}"
         );
     }
 
@@ -300,6 +307,9 @@ mod tests {
         let mut v = Utf8Validator::<V256>::new();
         v.push_tail(&buf2);
         assert!(!v.finish());
+        let mut v = Utf8Validator::<V512>::new();
+        v.push_tail(&buf2);
+        assert!(!v.finish());
     }
 
     #[test]
@@ -315,6 +325,11 @@ mod tests {
                     validate_utf8_with::<V256>(&buf),
                     expected,
                     "256-bit {hi:02x} {lo:02x}"
+                );
+                assert_eq!(
+                    validate_utf8_with::<V512>(&buf),
+                    expected,
+                    "512-bit {hi:02x} {lo:02x}"
                 );
             }
         }
@@ -344,10 +359,12 @@ mod tests {
         }
         assert!(by_blocks::<V128>(&text));
         assert!(by_blocks::<V256>(&text));
+        assert!(by_blocks::<V512>(&text));
         let mut bad = text.clone();
         bad[70] = 0xFF;
         assert!(!by_blocks::<V128>(&bad));
         assert!(!by_blocks::<V256>(&bad));
+        assert!(!by_blocks::<V512>(&bad));
     }
 
     #[test]

@@ -1,19 +1,23 @@
 //! Differential property suite for the width-generic backend layer.
 //!
-//! Invariants (the acceptance gate for the `simd128`/`simd256`/`best`
-//! registry keys):
+//! Invariants (the acceptance gate for the `simd128`/`simd256`/`simd512`/
+//! `best` registry keys):
 //!
-//! 1. ∀ corpus profiles: every UTF-8→UTF-16 registry entry — both width
-//!    backends, the `best` alias and every baseline — produces output
-//!    byte-identical to the scalar/std reference, and likewise for
-//!    every UTF-16→UTF-8 entry.
-//! 2. ∀ inputs straddling 16- and 32-byte lane boundaries (and the
-//!    64-byte block and 80/96-byte margin boundaries): same property.
+//! 1. ∀ corpus profiles: every UTF-8→UTF-16 registry entry — all three
+//!    width backends, the `best` alias and every baseline — produces
+//!    output byte-identical to the scalar/std reference, and likewise
+//!    for every UTF-16→UTF-8 entry.
+//! 2. ∀ inputs straddling 16-, 32- and 64-byte lane boundaries (and the
+//!    80/96/128-byte margin boundaries), plus masked-tail lengths just
+//!    short of a full 64-byte register: same property.
 //! 3. ∀ corrupted inputs: every *validating* entry reports the same
 //!    `TranscodeError` — identical kind and identical position — as
 //!    `std::str::from_utf8` / the std UTF-16 decoder.
 //! 4. The streaming transcoders produce identical outputs when run over
 //!    an explicit width backend.
+//! 5. Destinations sized `exact + h` for any headroom `h` never report
+//!    `OutputBuffer` on any backend (the `EXACT_SLACK` contract after
+//!    the 512-bit widening).
 
 use simdutf_rs::corpus::SplitMix64;
 use simdutf_rs::prelude::*;
@@ -38,7 +42,17 @@ fn boundary_samples() -> Vec<String> {
             samples.push(unit.repeat(n));
         }
     }
-    // Mixed content exercising every window case at both widths.
+    // Masked-tail lengths: ASCII runs ending just short of (and exactly
+    // on) a full 64-byte register, so the V512 partial load/store paths
+    // and the scalar-tail handoff at narrower widths both fire.
+    for n in [57usize, 60, 61, 62, 63, 64, 65, 127, 128, 129] {
+        samples.push("x".repeat(n));
+        // Same lengths with a two-byte character as the final unit.
+        if n >= 2 {
+            samples.push(format!("{}é", "x".repeat(n - 2)));
+        }
+    }
+    // Mixed content exercising every window case at all widths.
     samples.push("ASCII → воскресенье → 漢字テスト → 🙂🚀🌍 → mixed tail xyz".repeat(9));
     samples
 }
@@ -110,6 +124,7 @@ fn utf8_error_positions_identical_across_backends() {
         .filter(|e| e.engine.validating())
         .collect();
     assert!(validating.iter().any(|e| e.key == "simd256"));
+    assert!(validating.iter().any(|e| e.key == "simd512"));
     for &bad_byte in &[0xFFu8, 0x80, 0xC0, 0xED, 0xF5] {
         for pos in [0usize, 15, 16, 31, 32, 51, 63, 64, 79, 80, 95, 96, 1000, 4000] {
             let mut data = base.clone();
@@ -185,21 +200,72 @@ fn utf16_error_positions_identical_across_backends() {
 
 #[test]
 fn streaming_over_wide_backend_matches_one_shot() {
-    use simdutf_rs::simd::V256;
+    use simdutf_rs::simd::{VectorBackend, V256, V512};
     use simdutf_rs::transcode::utf8_to_utf16::OurUtf8ToUtf16;
-    let text = "stream: ascii, éé, 漢字, 🙂 — ".repeat(40);
-    let expected: Vec<u16> = text.encode_utf16().collect();
-    for chunk_size in [1usize, 3, 16, 31, 32, 57] {
-        let mut stream = simdutf_rs::transcode::streaming::StreamingUtf8ToUtf16::with_engine(
-            OurUtf8ToUtf16::<V256>::validating_on(),
-        );
-        let mut out = Vec::new();
-        let mut buf = vec![0u16; utf16_capacity_for(chunk_size + 3)];
-        for chunk in text.as_bytes().chunks(chunk_size) {
-            let fed = stream.push(chunk, &mut buf).expect("valid");
-            out.extend_from_slice(&buf[..fed.written]);
+    fn check<B: VectorBackend>() {
+        let text = "stream: ascii, éé, 漢字, 🙂 — ".repeat(40);
+        let expected: Vec<u16> = text.encode_utf16().collect();
+        for chunk_size in [1usize, 3, 16, 31, 32, 57, 63, 64, 65] {
+            let mut stream = simdutf_rs::transcode::streaming::StreamingUtf8ToUtf16::with_engine(
+                OurUtf8ToUtf16::<B>::validating_on(),
+            );
+            let mut out = Vec::new();
+            let mut buf = vec![0u16; utf16_capacity_for(chunk_size + 3)];
+            for chunk in text.as_bytes().chunks(chunk_size) {
+                let fed = stream.push(chunk, &mut buf).expect("valid");
+                out.extend_from_slice(&buf[..fed.written]);
+            }
+            stream.finish().expect("complete");
+            assert_eq!(out, expected, "{} chunk={chunk_size}", B::KEY);
         }
-        stream.finish().expect("complete");
-        assert_eq!(out, expected, "chunk={chunk_size}");
+    }
+    check::<V256>();
+    check::<V512>();
+}
+
+/// `EXACT_SLACK` contract after the 512-bit widening: a destination with
+/// 33..63 units of headroom past the exact output length — which a
+/// backend that hard-required `2 * WIDTH` look-ahead space would refuse
+/// near the end of the input — must never report `OutputBuffer` on any
+/// of our width backends. The UTF-16→UTF-8 direction additionally
+/// degrades to exact per-character checks, so even zero headroom works.
+#[test]
+fn modest_headroom_never_reports_output_buffer() {
+    let ours = |key: &str| key.starts_with("simd") || key.starts_with("best");
+    // Varied content so the main loops end in every content class; the
+    // ASCII suffix makes the near-end output rate (1 unit per unit) far
+    // below the wide guards' full-register demands.
+    for text in [
+        "headroom: ascii, воскресенье, 漢字テスト, 🙂🚀 — ".repeat(20) + &"x".repeat(90),
+        "x".repeat(4096),
+        "é".repeat(700) + "tail",
+    ] {
+        let expected16: Vec<u16> = text.encode_utf16().collect();
+        for headroom in [33usize, 34, 47, 48, 63] {
+            let mut dst16 = vec![0u16; expected16.len() + headroom];
+            for entry in Registry::global().utf8_entries() {
+                if !ours(entry.key) {
+                    continue;
+                }
+                let written = entry.engine.convert(text.as_bytes(), &mut dst16).unwrap_or_else(
+                    |e| panic!("{} headroom={headroom}: unexpected {e:?}", entry.key),
+                );
+                assert_eq!(written, expected16.len(), "{} headroom={headroom}", entry.key);
+                assert_eq!(&dst16[..written], &expected16[..], "{} headroom={headroom}", entry.key);
+            }
+        }
+        for headroom in [0usize, 1, 33, 47, 63] {
+            let mut dst8 = vec![0u8; text.len() + headroom];
+            for entry in Registry::global().utf16_entries() {
+                if !ours(entry.key) {
+                    continue;
+                }
+                let written = entry.engine.convert(&expected16, &mut dst8).unwrap_or_else(
+                    |e| panic!("{} headroom={headroom}: unexpected {e:?}", entry.key),
+                );
+                assert_eq!(written, text.len(), "{} headroom={headroom}", entry.key);
+                assert_eq!(&dst8[..written], text.as_bytes(), "{} headroom={headroom}", entry.key);
+            }
+        }
     }
 }

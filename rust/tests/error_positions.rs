@@ -29,7 +29,8 @@ fn std_utf16_error_pos(units: &[u16]) -> Option<usize> {
 }
 
 // Enumerate the *full* registry entry list (not just the paper-table
-// set) so the width-explicit `simd128`/`simd256`/`best` backends are
+// set) so the width-explicit `simd128`/`simd256`/`simd512`/`best`
+// backends are
 // exercised by every property here.
 fn validating_utf8_engines() -> Vec<&'static dyn Utf8ToUtf16> {
     Registry::global()

@@ -1,7 +1,8 @@
 //! Differential suite for the Latin-1 subsystem (ISSUE 5).
 //!
 //! Every Latin-1 kernel set in the registry (`scalar` / `simd128` /
-//! `simd256` / `best`) against the std oracle — Latin-1 bytes are the
+//! `simd256` / `simd512` / `best`) against the std oracle — Latin-1
+//! bytes are the
 //! first 256 Unicode code points, so `b as char` *is* the decoder and
 //! `u8::try_from(c as u32)` the encoder — over:
 //!

@@ -34,7 +34,7 @@ fn random_string(rng: &mut SplitMix64, max_chars: u64) -> String {
 }
 
 /// Every UTF-8→UTF-16 engine — the registry's *full* entry list, so the
-/// width-explicit `simd128`/`simd256`/`best` backends are property-
+/// width-explicit `simd128`/`simd256`/`simd512`/`best` backends are property-
 /// tested alongside the paper set (Inoue excluded: it does not support
 /// the supplemental-plane strings generated here).
 fn utf8_engines() -> Vec<&'static dyn Utf8ToUtf16> {
