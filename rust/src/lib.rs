@@ -137,26 +137,37 @@
 //! Width-generic code can also instantiate the engines directly:
 //! `OurUtf8ToUtf16::<V256>::validating_on()`.
 
-// The SIMD substrate deliberately uses index loops over fixed-size
-// arrays and paired src/dst indexing (they autovectorize predictably);
-// keep clippy from pushing iterator rewrites onto the hot paths.
-#![allow(clippy::needless_range_loop, clippy::manual_memcpy)]
 // Every public item carries documentation — enforced here and by the
 // CI docs leg (`cargo doc --no-deps` with warnings denied).
 #![warn(missing_docs)]
+// Lint posture: `unsafe_op_in_unsafe_fn` and
+// `clippy::undocumented_unsafe_blocks` are denied crate-wide via the
+// Cargo.toml `[lints]` table. The index-loop allows below are scoped
+// to the modules whose hot paths rely on the idiom — the SIMD
+// substrate and the kernels/tables built on it deliberately use index
+// loops over fixed-size arrays and paired src/dst indexing (they
+// autovectorize predictably); keep clippy from pushing iterator
+// rewrites onto them without blanketing the whole crate.
 
+#[allow(clippy::needless_range_loop, clippy::manual_memcpy)]
 pub mod baselines;
+#[allow(clippy::needless_range_loop)]
 pub mod coordinator;
+#[allow(clippy::needless_range_loop, clippy::manual_memcpy)]
 pub mod corpus;
 pub mod count;
 pub mod counters;
 pub mod engine;
+#[allow(clippy::needless_range_loop)]
 pub mod harness;
 pub mod parallel;
 pub mod runtime;
 pub mod scalar;
+#[allow(clippy::needless_range_loop, clippy::manual_memcpy)]
 pub mod simd;
+#[allow(clippy::needless_range_loop)]
 pub mod tables;
+#[allow(clippy::needless_range_loop, clippy::manual_memcpy)]
 pub mod transcode;
 pub mod validate;
 

@@ -319,16 +319,23 @@ impl VectorBackend for V512 {
 /// Every key remains individually selectable in every build for A/B
 /// measurement regardless of what `best` picks.
 pub fn best_key() -> &'static str {
-    #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+    // Under Miri there is no host CPU to probe and the intrinsic paths
+    // are not meaningfully "usable": pin `best` to the portable 128-bit
+    // engine so interpreted runs are deterministic regardless of the
+    // RUSTFLAGS the build happened to carry.
+    #[cfg(not(miri))]
     {
-        if std::arch::is_x86_feature_detected!("avx512bw") {
-            return V512::KEY;
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx512bw") {
+                return V512::KEY;
+            }
         }
-    }
-    #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return V256::KEY;
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return V256::KEY;
+            }
         }
     }
     V128::KEY
@@ -351,7 +358,14 @@ pub fn best_width() -> usize {
 /// portable x64 build reports `"x86-64-portable"` even though `best`
 /// resolves to `simd128`, because the SSSE3 paths are not compiled in.
 pub fn detected_isa() -> &'static str {
-    #[cfg(target_arch = "x86_64")]
+    // Interpreted runs execute no intrinsics and cannot probe the host
+    // CPU; name them explicitly so a bench record produced under Miri
+    // can never be mistaken for a hardware measurement.
+    #[cfg(miri)]
+    {
+        return "miri";
+    }
+    #[cfg(all(not(miri), target_arch = "x86_64"))]
     {
         #[cfg(all(target_feature = "avx512bw", target_feature = "avx512vbmi"))]
         if std::arch::is_x86_feature_detected!("avx512vbmi") {
@@ -371,13 +385,13 @@ pub fn detected_isa() -> &'static str {
         }
         return "x86-64-portable";
     }
-    #[cfg(target_arch = "aarch64")]
+    #[cfg(all(not(miri), target_arch = "aarch64"))]
     {
         // NEON is baseline on aarch64; the intrinsic paths are always
         // compiled in there.
         return "neon";
     }
-    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[cfg(all(not(miri), not(any(target_arch = "x86_64", target_arch = "aarch64"))))]
     {
         return "portable";
     }

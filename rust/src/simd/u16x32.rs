@@ -123,6 +123,8 @@ impl U16x32 {
     #[inline]
     pub fn movemask(self) -> u32 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        // SAFETY: avx512bw is statically enabled by this cfg; the load
+        // reads exactly 64 bytes from `self.0`, a `[u16; 32]`.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);

@@ -111,6 +111,9 @@ impl U16x8 {
     #[inline]
     pub fn movemask(self) -> u8 {
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; the loads read 8 words
+        // (16 bytes) each from `self.0` and the constant weight table,
+        // both `[u16; 8]`.
         unsafe {
             use core::arch::aarch64::*;
             const WEIGHTS: [u16; 8] = [1, 2, 4, 8, 16, 32, 64, 128];

@@ -141,12 +141,17 @@ impl U8x16 {
     #[inline]
     pub fn movemask(self) -> u16 {
         #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+        // SAFETY: sse2 is statically enabled by this cfg, so the
+        // intrinsics are callable; the unaligned load reads exactly 16
+        // bytes from `self.0`, a `[u8; 16]`.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
             return _mm_movemask_epi8(a) as u16;
         }
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; the loads read 16 bytes
+        // from `self.0` and the constant weight table, both `[u8; 16]`.
         unsafe {
             use core::arch::aarch64::*;
             // NEON has no pmovmskb: isolate each MSB as a 0/1, weight
@@ -174,6 +179,9 @@ impl U8x16 {
     #[inline]
     pub fn shuffle(self, idx: U8x16) -> U8x16 {
         #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        // SAFETY: ssse3 is statically enabled by this cfg; the loads
+        // read 16 bytes each from `self.0`/`idx.0` (`[u8; 16]`) and the
+        // store writes 16 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
@@ -184,6 +192,9 @@ impl U8x16 {
             return U8x16(out);
         }
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; the loads read 16 bytes
+        // each from `self.0`/`idx.0` (`[u8; 16]`) and the store writes
+        // 16 bytes into the local `out` array.
         unsafe {
             use core::arch::aarch64::*;
             // tbl returns 0 for any index >= 16, so masking the index to
@@ -214,6 +225,9 @@ impl U8x16 {
     #[inline]
     pub fn lookup16(self, table: &[u8; 16]) -> U8x16 {
         #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        // SAFETY: ssse3 is statically enabled by this cfg; the loads
+        // read 16 bytes each from `table` and `self.0` (`[u8; 16]`) and
+        // the store writes 16 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let t = _mm_loadu_si128(table.as_ptr() as *const __m128i);
@@ -225,6 +239,9 @@ impl U8x16 {
             return U8x16(out);
         }
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; the loads read 16 bytes
+        // each from `table` and `self.0` (`[u8; 16]`) and the store
+        // writes 16 bytes into the local `out` array.
         unsafe {
             use core::arch::aarch64::*;
             // Callers guarantee lanes < 16, so a bare tbl is the lookup.
@@ -250,6 +267,9 @@ impl U8x16 {
     #[inline]
     pub fn prev<const N: usize>(self, prev_block: U8x16) -> U8x16 {
         #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        // SAFETY: ssse3 is statically enabled by this cfg; the loads
+        // read 16 bytes each from `self.0`/`prev_block.0` (`[u8; 16]`)
+        // and the store writes 16 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let cur = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
@@ -266,6 +286,9 @@ impl U8x16 {
             return U8x16(out);
         }
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; the loads read 16 bytes
+        // each from `prev_block.0`/`self.0` (`[u8; 16]`) and the store
+        // writes 16 bytes into the local `out` array.
         unsafe {
             use core::arch::aarch64::*;
             // ext concatenates prev:cur and extracts 16 bytes starting
@@ -300,6 +323,9 @@ impl U8x16 {
     #[inline]
     pub fn interleave_lo(self, rhs: U8x16) -> U8x16 {
         #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+        // SAFETY: sse2 is statically enabled by this cfg; the loads
+        // read 16 bytes each from `self.0`/`rhs.0` (`[u8; 16]`) and the
+        // store writes 16 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
@@ -310,6 +336,9 @@ impl U8x16 {
             return U8x16(out);
         }
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; the loads read 16 bytes
+        // each from `self.0`/`rhs.0` (`[u8; 16]`) and the store writes
+        // 16 bytes into the local `out` array.
         unsafe {
             use core::arch::aarch64::*;
             let r = vzip1q_u8(vld1q_u8(self.0.as_ptr()), vld1q_u8(rhs.0.as_ptr()));
@@ -333,6 +362,9 @@ impl U8x16 {
     #[inline]
     pub fn interleave_hi(self, rhs: U8x16) -> U8x16 {
         #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+        // SAFETY: sse2 is statically enabled by this cfg; the loads
+        // read 16 bytes each from `self.0`/`rhs.0` (`[u8; 16]`) and the
+        // store writes 16 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);
@@ -343,6 +375,9 @@ impl U8x16 {
             return U8x16(out);
         }
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; the loads read 16 bytes
+        // each from `self.0`/`rhs.0` (`[u8; 16]`) and the store writes
+        // 16 bytes into the local `out` array.
         unsafe {
             use core::arch::aarch64::*;
             let r = vzip2q_u8(vld1q_u8(self.0.as_ptr()), vld1q_u8(rhs.0.as_ptr()));
@@ -482,6 +517,10 @@ impl SimdBytes for U8x16 {
         t2h: &[u8; 16],
     ) -> (Self, Self) {
         #[cfg(all(target_arch = "x86_64", target_feature = "ssse3"))]
+        // SAFETY: ssse3 is statically enabled by this cfg; every load
+        // reads 16 bytes from a `[u8; 16]` (the four state vectors and
+        // the three classification tables) and the two stores write 16
+        // bytes each into the local `err_out`/`inc_out` arrays.
         unsafe {
             use core::arch::x86_64::*;
             let inp = _mm_loadu_si128(self.0.as_ptr() as *const __m128i);

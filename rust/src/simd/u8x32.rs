@@ -107,6 +107,9 @@ impl U8x32 {
     #[inline]
     pub fn movemask(self) -> u32 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        // SAFETY: avx2 is statically enabled by this cfg, so the
+        // intrinsics are callable; the unaligned load reads exactly 32
+        // bytes from `self.0`, a `[u8; 32]`.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm256_loadu_si256(self.0.as_ptr() as *const __m256i);
@@ -128,6 +131,9 @@ impl U8x32 {
     #[inline]
     pub fn shuffle(self, idx: U8x32) -> U8x32 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        // SAFETY: avx2 is statically enabled by this cfg; the loads
+        // read 32 bytes each from `self.0`/`idx.0` (`[u8; 32]`) and the
+        // store writes 32 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm256_loadu_si256(self.0.as_ptr() as *const __m256i);
@@ -157,6 +163,10 @@ impl U8x32 {
     #[inline]
     pub fn lookup16(self, table: &[u8; 16]) -> U8x32 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        // SAFETY: avx2 (which implies sse2) is statically enabled by
+        // this cfg; the loads read 16 bytes from `table` and 32 bytes
+        // from `self.0`, and the store writes 32 bytes into the local
+        // `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let t128 = _mm_loadu_si128(table.as_ptr() as *const __m128i);
@@ -184,6 +194,9 @@ impl U8x32 {
     #[inline]
     pub fn prev<const N: usize>(self, prev_block: U8x32) -> U8x32 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        // SAFETY: avx2 is statically enabled by this cfg; the loads
+        // read 32 bytes each from `self.0`/`prev_block.0` (`[u8; 32]`)
+        // and the store writes 32 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let cur = _mm256_loadu_si256(self.0.as_ptr() as *const __m256i);

@@ -50,6 +50,10 @@ impl U8x64 {
     pub fn load_partial(src: &[u8]) -> U8x64 {
         debug_assert!(src.len() <= 64);
         #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        // SAFETY: avx512bw is statically enabled by this cfg; the
+        // masked load reads only the `n` bytes whose mask bit is set
+        // (`(1 << n) - 1`, all of `src`; `u64::MAX` when n == 64), and
+        // the store writes 64 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let n = src.len().min(64);
@@ -86,6 +90,10 @@ impl U8x64 {
     pub fn store_partial(self, dst: &mut [u8]) {
         let n = dst.len().min(64);
         #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        // SAFETY: avx512bw is statically enabled by this cfg; the load
+        // reads 64 bytes from `self.0` (`[u8; 64]`) and the masked
+        // store writes only the `n = dst.len().min(64)` bytes whose
+        // mask bit is set — all within `dst`.
         unsafe {
             use core::arch::x86_64::*;
             let mask: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
@@ -174,6 +182,8 @@ impl U8x64 {
     #[inline]
     pub fn movemask(self) -> u64 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        // SAFETY: avx512bw is statically enabled by this cfg; the load
+        // reads exactly 64 bytes from `self.0`, a `[u8; 64]`.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
@@ -195,6 +205,9 @@ impl U8x64 {
     #[inline]
     pub fn shuffle(self, idx: U8x64) -> U8x64 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        // SAFETY: avx512bw is statically enabled by this cfg; the loads
+        // read 64 bytes each from `self.0`/`idx.0` (`[u8; 64]`) and the
+        // store writes 64 bytes into the local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);
@@ -225,6 +238,10 @@ impl U8x64 {
     #[inline]
     pub fn lookup16(self, table: &[u8; 16]) -> U8x64 {
         #[cfg(all(target_arch = "x86_64", target_feature = "avx512bw"))]
+        // SAFETY: avx512bw (which implies sse2) is statically enabled
+        // by this cfg; the loads read 16 bytes from `table` and 64
+        // bytes from `self.0`, and the store writes 64 bytes into the
+        // local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let t128 = _mm_loadu_si128(table.as_ptr() as *const __m128i);
@@ -258,6 +275,10 @@ impl U8x64 {
             target_feature = "avx512bw",
             target_feature = "avx512vbmi"
         ))]
+        // SAFETY: avx512bw + avx512vbmi are statically enabled by this
+        // cfg; the loads read 64 bytes each from `self.0`/`rhs.0`/
+        // `idx.0` (`[u8; 64]`) and the store writes 64 bytes into the
+        // local `out` array.
         unsafe {
             use core::arch::x86_64::*;
             let a = _mm512_loadu_si512(self.0.as_ptr() as *const __m512i);

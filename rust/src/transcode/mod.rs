@@ -90,10 +90,29 @@ pub const EXACT_SLACK: usize = 2 * <crate::simd::V512 as crate::simd::VectorBack
 ///
 /// Implementors must have no invalid representations and no drop glue
 /// (primitive integers only).
-pub(crate) unsafe trait PodUnit: Copy + 'static {}
-unsafe impl PodUnit for u8 {}
-unsafe impl PodUnit for u16 {}
-unsafe impl PodUnit for u32 {}
+pub(crate) unsafe trait PodUnit: Copy + PartialEq + 'static {
+    /// Debug-build poison pattern ([`fill_uninit`] pre-fills spare
+    /// capacity with this value and asserts that nothing beyond the
+    /// reported frontier plus the register-overshoot allowance was
+    /// written). `0xA5` repeated per byte: not ASCII, not a valid
+    /// UTF-16 surrogate half, unlikely to be produced by accident.
+    const POISON: Self;
+}
+// SAFETY: u8 is a primitive integer — every bit pattern is a valid
+// value and there is no drop glue.
+unsafe impl PodUnit for u8 {
+    const POISON: Self = 0xA5;
+}
+// SAFETY: u16 is a primitive integer — every bit pattern is a valid
+// value and there is no drop glue.
+unsafe impl PodUnit for u16 {
+    const POISON: Self = 0xA5A5;
+}
+// SAFETY: u32 is a primitive integer — every bit pattern is a valid
+// value and there is no drop glue.
+unsafe impl PodUnit for u32 {
+    const POISON: Self = 0xA5A5_A5A5;
+}
 
 /// A conversion result that knows how many output units were written
 /// (the initialized prefix [`fill_uninit`] may expose).
@@ -147,10 +166,18 @@ impl WrittenLen for LossyResult {
 ///
 /// The contract in (2) is audit-enforced, not compiler-enforced — any
 /// future edit that makes an opted-in engine *read* `dst` would be
-/// undefined behavior with no build-time signal. When running the
-/// suite under Miri becomes possible for this crate, the `*_to_vec`
-/// differential tests in `rust/tests/counting.rs` are the ones that
-/// would catch such a regression.
+/// undefined behavior with no build-time signal. Two mechanical
+/// defenses back the audit: the Miri CI leg runs the uninit-buffer,
+/// streaming and parallel suites with the allocation genuinely
+/// uninitialized (a read of `dst` is an instant Miri error), and in
+/// ordinary debug/test builds this function **poison-fills** the
+/// buffer (`0xA5` per byte) and asserts afterwards that every unit
+/// beyond `written + EXACT_SLACK` still holds the poison pattern — a
+/// filler that writes further than it reports (or reports less than
+/// it wrote) trips the assert instead of silently freezing or leaking
+/// out-of-contract bytes. The poison pass is skipped under Miri so the
+/// memory stays truly uninitialized there and Miri's tracking remains
+/// authoritative.
 // The `with_capacity` → write-through-raw-slice → `set_len` sequence is
 // exactly what this function exists to encapsulate; the lint cannot see
 // that `fill` initializes the prefix `set_len` freezes.
@@ -164,12 +191,33 @@ pub(crate) fn fill_uninit<T: PodUnit, R: WrittenLen>(
         // SAFETY: see the function-level safety argument — T is a
         // primitive integer and `fill` is write-only over the slice.
         let spare = unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr(), cap) };
+        #[cfg(all(debug_assertions, not(miri)))]
+        spare.fill(T::POISON);
         fill(spare)?
     };
     let written = r.written_len();
     assert!(written <= cap, "engine reported writing past its buffer");
+    #[cfg(all(debug_assertions, not(miri)))]
+    {
+        // Every engine may store whole registers past its reported
+        // frontier, but never further than EXACT_SLACK units beyond it
+        // (the same bound the exact-size allocations rely on — see
+        // [`EXACT_SLACK`]). Anything written past that fence means the
+        // filler violated the bounded-overshoot contract or
+        // under-reported `written`.
+        let fence = (written + EXACT_SLACK).min(cap);
+        // SAFETY: the whole buffer was poison-filled above, so all
+        // `cap` units are initialized and reading them back is sound.
+        let all = unsafe { std::slice::from_raw_parts(v.as_ptr(), cap) };
+        debug_assert!(
+            all[fence..].iter().all(|&u| u == T::POISON),
+            "filler wrote beyond written + EXACT_SLACK: reported {written}, cap {cap}"
+        );
+    }
     // SAFETY: the first `written` units were written by `fill`
     // (contiguous-prefix contract), and `written <= cap <= capacity`.
+    // Nothing past `written` is ever frozen: `set_len` is the only
+    // length change and it covers exactly the reported prefix.
     unsafe { v.set_len(written) };
     Ok((v, r))
 }
@@ -624,6 +672,50 @@ pub fn utf8_len_from_utf16(src: &[u16]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A filler that writes the whole buffer but reports a short prefix
+    /// must trip the poison fence: bytes past `written + EXACT_SLACK`
+    /// deviating from the poison pattern mean the bounded-overshoot
+    /// contract was violated (or `written` was under-reported).
+    #[test]
+    #[cfg(all(debug_assertions, not(miri)))]
+    #[should_panic(expected = "beyond written + EXACT_SLACK")]
+    fn poison_fence_trips_on_under_reported_written() {
+        let _ = fill_uninit::<u16, usize>(EXACT_SLACK + 64, |dst| {
+            for u in dst.iter_mut() {
+                *u = 0x41;
+            }
+            Ok(4) // wrote EXACT_SLACK + 64 units, reported 4
+        });
+    }
+
+    /// Register overshoot within the allowance is legal: a filler that
+    /// stores up to EXACT_SLACK units past its reported frontier must
+    /// pass the fence, and only the reported prefix is frozen.
+    #[test]
+    fn poison_fence_allows_bounded_overshoot() {
+        let cap = EXACT_SLACK + 64;
+        let (v, n) = fill_uninit::<u16, usize>(cap, |dst| {
+            let written = 32;
+            for u in dst[..written + EXACT_SLACK].iter_mut() {
+                *u = 0x41;
+            }
+            Ok(written)
+        })
+        .expect("in-contract filler");
+        assert_eq!(n, 32);
+        assert_eq!(v, vec![0x41u16; 32]);
+    }
+
+    /// A filler error propagates without freezing anything.
+    #[test]
+    fn fill_uninit_error_propagates() {
+        let err = fill_uninit::<u8, usize>(64, |_dst| {
+            Err(TranscodeError::new(ErrorKind::TooShort, 7))
+        })
+        .expect_err("filler failed");
+        assert_eq!((err.kind, err.position), (ErrorKind::TooShort, 7));
+    }
 
     #[test]
     fn length_estimates_match_std() {

@@ -166,6 +166,12 @@ fn one_two_three_half(words: &[u16], dst: &mut [u8]) -> usize {
     // bits … then complete the bit layout", §5). Bytes beyond a
     // character's length hold garbage the compress shuffle never reads.
     #[cfg(all(target_arch = "x86_64", target_feature = "sse4.1"))]
+    // SAFETY: sse4.1 is statically enabled by this cfg; the loads read
+    // 8 bytes from `words` (4 words) and 16 bytes from the compress
+    // table entry, and the full-register store writes 16 bytes at
+    // `dst[0..]` — both in-bounds per the caller-held preconditions
+    // asserted below in debug builds (callers guard with at least a
+    // `q + 2 * WIDTH <= dst.len()` look-ahead).
     unsafe {
         use core::arch::x86_64::*;
         debug_assert!(words.len() >= 4 && dst.len() >= 16);
@@ -234,6 +240,11 @@ pub fn one_two_three_half_pub(words: &[u16], dst: &mut [u8]) -> usize {
 fn pack_ascii(src: &[u16], dst: &mut [u8], n: usize) {
     debug_assert!(n % 8 == 0 && src.len() >= n && dst.len() >= n);
     #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    // SAFETY: sse2 is statically enabled by this cfg; per 8-word group
+    // the load reads 16 bytes at `src[g..]` and the 64-bit store
+    // writes 8 bytes at `dst[g..]`, with `g + 8 <= n` and the
+    // precondition `n % 8 == 0 && src.len() >= n && dst.len() >= n`
+    // asserted above in debug builds.
     unsafe {
         use core::arch::x86_64::*;
         let mut g = 0;

@@ -110,6 +110,11 @@ fn widen16(src: &[u8], dst: &mut [u16]) {
 #[inline]
 fn widen64(block: &[u8; 64], dst: &mut [u16]) {
     #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+    // SAFETY: avx2 is statically enabled by this cfg; the four loads
+    // read 16 bytes each from `block` (a `[u8; 64]`) and the four
+    // stores write 32 bytes each at `dst[16i..]` — 64 words total,
+    // in-bounds because the caller checked `q + 64 <= dst.len()`
+    // before slicing (asserted below in debug builds).
     unsafe {
         use core::arch::x86_64::*;
         debug_assert!(dst.len() >= 64);
@@ -133,6 +138,12 @@ fn widen64(block: &[u8; 64], dst: &mut [u16]) {
 #[inline]
 fn compose_case1(perm: U8x16, dst: &mut [u16]) -> usize {
     #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    // SAFETY: sse2 is statically enabled by this cfg; the load reads
+    // 16 bytes from `perm.0` (`[u8; 16]`) and the full-register store
+    // writes 8 words at `dst[0..]` — in-bounds because every caller
+    // holds the inner-loop guard `q + 16 <= dst.len()` (asserted below
+    // in debug builds); the two words past the 6 reported are slack
+    // the next write covers.
     unsafe {
         use core::arch::x86_64::*;
         debug_assert!(dst.len() >= 8);
@@ -174,6 +185,11 @@ fn perm_lane32(perm: U8x16, k: usize) -> u32 {
 #[inline]
 fn compose_case2(perm: U8x16, dst: &mut [u16]) -> usize {
     #[cfg(all(target_arch = "x86_64", target_feature = "sse4.1"))]
+    // SAFETY: sse4.1 is statically enabled by this cfg; the load reads
+    // 16 bytes from `perm.0` (`[u8; 16]`) and the 64-bit store writes
+    // exactly the 4 reported words at `dst[0..]` — in-bounds because
+    // every caller holds the inner-loop guard `q + 16 <= dst.len()`
+    // (asserted below in debug builds).
     unsafe {
         use core::arch::x86_64::*;
         debug_assert!(dst.len() >= 4);
@@ -205,6 +221,11 @@ fn compose_case2(perm: U8x16, dst: &mut [u16]) -> usize {
 #[inline]
 fn compose_case3(perm: U8x16, dst: &mut [u16]) -> usize {
     #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    // SAFETY: sse2 is statically enabled by this cfg; the load reads
+    // 16 bytes from `perm.0` (`[u8; 16]`), the register stores land in
+    // local `[u32; 4]` arrays, and the scalar writes go through `dst`
+    // indexing (bounds-checked; `dst.len() >= 6` asserted below covers
+    // the up-to-6 words written).
     unsafe {
         use core::arch::x86_64::*;
         debug_assert!(dst.len() >= 6);
@@ -409,6 +430,12 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
                 // Eight 2-byte characters (16 bytes): each 16-bit unit is
                 // [lead, cont] little-endian; composed = lead5 << 6 | cont6.
                 #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+                // SAFETY: sse2 is statically enabled by this cfg; the
+                // load reads 16 bytes from `w` (in-bounds: the outer
+                // loop keeps `p + 64 + WIDTH <= src.len()` with
+                // `off <= 51`) and the store writes 8 words at
+                // `dst[q..]`, covered by the inner-loop guard
+                // `q + 16 <= dst.len()`.
                 unsafe {
                     use core::arch::x86_64::*;
                     let v = _mm_loadu_si128(w.as_ptr() as *const __m128i);
@@ -449,6 +476,13 @@ fn convert_impl<B: VectorBackend, const COUNT: bool>(
                 // write three surrogate pairs unconditionally — the
                 // "many 4-byte characters" scenario the paper calls out
                 // as unoptimized in competing libraries (§6.4).
+                // SAFETY: sse2 is statically enabled by the cfg on the
+                // enclosing `if`; the loads read 16 bytes each from `w`
+                // (in-bounds: the outer loop keeps `p + 64 + WIDTH <=
+                // src.len()` with `off <= 51`) and the shuffle table,
+                // and the store writes 8 words at `dst[q..]`, covered
+                // by the inner-loop guard `q + 16 <= dst.len()` (6
+                // reported, 2 slack).
                 unsafe {
                     use core::arch::x86_64::*;
                     const FOUR_BYTE_SHUF: [u8; 16] =

@@ -29,6 +29,7 @@ fn std_utf8_len_oracle(words: &[u16]) -> usize {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full corpus sweep; miri_uninit_to_vec_smoke covers the kernels")]
 fn kernels_agree_on_every_corpus_profile() {
     let r = Registry::global();
     for collection in [Collection::Lipsum, Collection::WikipediaMars] {
@@ -117,6 +118,7 @@ fn kernels_agree_on_every_corpus_profile() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "400-seed sweep")]
 fn four_hundred_random_byte_seeds_match_the_scalar_reference() {
     let r = Registry::global();
     for seed in 0..400u64 {
@@ -133,6 +135,7 @@ fn four_hundred_random_byte_seeds_match_the_scalar_reference() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "400-seed sweep")]
 fn four_hundred_random_word_seeds_match_scalar_and_std() {
     // Surrogate-biased alphabet: the pair/unpaired classification is
     // the only data-dependent part of the word kernel.
@@ -162,6 +165,7 @@ fn four_hundred_random_word_seeds_match_scalar_and_std() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "offset x pattern sweep")]
 fn lane_boundary_and_unpaired_surrogate_edges() {
     let r = Registry::global();
     // Pairs, runs and lone surrogates at every offset across the 8- and
@@ -214,6 +218,7 @@ fn lane_boundary_and_unpaired_surrogate_edges() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full corpus x engine sweep")]
 fn convert_to_vec_exact_equals_written_for_every_validating_engine() {
     let r = Registry::global();
     for collection in [Collection::Lipsum, Collection::WikipediaMars] {
@@ -251,6 +256,7 @@ fn convert_to_vec_exact_equals_written_for_every_validating_engine() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "corpus x engine sweep")]
 fn to_vec_outputs_and_errors_are_identical_to_the_seed_zeroed_path() {
     // The allocation rework must be invisible: same outputs on clean
     // input, same structured errors on dirty input, for strict and
@@ -317,4 +323,44 @@ fn utf32_and_endian_exact_vec_helpers() {
     let out = endian::utf16be_to_utf8_vec(&be).unwrap();
     assert_eq!(out, text.as_bytes());
     assert_eq!(out.len(), text.len());
+}
+
+/// Miri-sized pass over the uninitialized-buffer `*_to_vec` pipeline.
+///
+/// Under Miri the `fill_uninit` buffer is genuinely uninitialized (the
+/// debug poison pre-fill is `cfg(not(miri))` so Miri's tracking stays
+/// authoritative): any engine read of `dst`, any write past the
+/// capacity, or a `set_len` freezing one uninitialized unit is an
+/// instant error. Small mixed-width inputs keep the interpreted run
+/// fast while still crossing every width class and the strict error
+/// path.
+#[test]
+fn miri_uninit_to_vec_smoke() {
+    let r = Registry::global();
+    let text = "miri smoke: ascii \u{e9}\u{6f22}\u{1f642} mixed ".repeat(4);
+    let words: Vec<u16> = text.encode_utf16().collect();
+    let expected_words = text.encode_utf16().count();
+    for key in ["best", "llvm"] {
+        let e = r.get_utf8(key).expect("registry key");
+        let v = e.convert_to_vec(text.as_bytes()).expect("valid input");
+        assert_eq!(v, words, "{key}");
+        let x = e.convert_to_vec_exact(text.as_bytes()).expect("valid input");
+        assert_eq!(x.len(), expected_words, "{key}");
+        assert_eq!(x, words, "{key}");
+        // Strict error path frees the never-frozen buffer.
+        let err = e.convert_to_vec(b"ok \xED\xA0\x80 bad").expect_err("encoded surrogate");
+        assert_eq!(err.kind, ErrorKind::Surrogate, "{key}");
+        // Lossy path through the same uninitialized assembly.
+        let (lossy, info) = e.convert_lossy_to_vec(b"a\xFFz").expect("lossy is total");
+        assert_eq!(String::from_utf16(&lossy).unwrap(), "a\u{fffd}z", "{key}");
+        assert_eq!(info.replacements, 1, "{key}");
+        let back = r.get_utf16(key).expect("registry key");
+        assert_eq!(back.convert_to_vec_exact(&words).expect("valid"), text.as_bytes(), "{key}");
+    }
+    // Counting kernels on the same input (they never touch dst at all,
+    // but they feed the exact-size allocations above).
+    for k in r.count_entries() {
+        assert_eq!((k.utf16_len_from_utf8)(text.as_bytes()), expected_words, "{}", k.key);
+        assert_eq!((k.utf8_len_from_utf16)(&words), text.len(), "{}", k.key);
+    }
 }

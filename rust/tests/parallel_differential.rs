@@ -173,6 +173,7 @@ fn validating_utf16(r: &Registry) -> Vec<(&'static str, std::sync::Arc<dyn Utf16
 // ---------------------------------------------------------------------------
 
 #[test]
+#[cfg_attr(miri, ignore = "exhaustive sweep; miri_parallel_smoke covers the machinery")]
 fn every_cut_every_engine_utf8() {
     let r = Registry::global();
     let engines = validating_utf8(r);
@@ -188,6 +189,7 @@ fn every_cut_every_engine_utf8() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "exhaustive sweep; miri_parallel_smoke covers the machinery")]
 fn every_cut_every_engine_utf16() {
     let r = Registry::global();
     let engines = validating_utf16(r);
@@ -203,6 +205,7 @@ fn every_cut_every_engine_utf16() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "exhaustive sweep; miri_parallel_smoke covers the machinery")]
 fn multi_cut_grids_match_oneshot() {
     // Three-cut grids (including adjacent, duplicate and mid-character
     // candidates — the normalizer must sort/snap/dedup them) on the
@@ -234,6 +237,7 @@ fn multi_cut_grids_match_oneshot() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "exhaustive sweep; miri_parallel_smoke covers the machinery")]
 fn corpus_dirt_profiles_survive_arbitrary_cuts() {
     // Realistic corpora under every corruption profile, cut at sampled
     // offsets: the sweep above proves the edge cases, this proves the
@@ -262,6 +266,7 @@ fn corpus_dirt_profiles_survive_arbitrary_cuts() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "exhaustive sweep; miri_parallel_smoke covers the machinery")]
 fn thread_ladder_matches_oneshot_on_generated_corpora() {
     // The executor entry points (auto split + scoped threads) across
     // every `Registry::parallel_entries` cell, on a corpus big enough
@@ -295,6 +300,7 @@ fn thread_ladder_matches_oneshot_on_generated_corpora() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "exhaustive sweep; miri_parallel_smoke covers the machinery")]
 fn latin1_every_cut_every_kernel_set() {
     // Latin-1 → UTF-8 is total, so the only contract is the bytes: the
     // parallel assembly must equal the scalar reference at every cut
@@ -317,6 +323,7 @@ fn latin1_every_cut_every_kernel_set() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "exhaustive sweep; miri_parallel_smoke covers the machinery")]
 fn global_error_positions_cross_chunk_boundaries() {
     // Place the single error in every chunk position of a 4-way split:
     // the reported position must always be the global byte/word index,
@@ -346,4 +353,89 @@ fn global_error_positions_cross_chunk_boundaries() {
         assert_eq!((got.kind, got.position), (want.kind, want.position), "utf16 at {at}");
         assert_eq!(got.kind, ErrorKind::Surrogate, "utf16 at {at}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Soundness tripwires
+// ---------------------------------------------------------------------------
+
+/// A conforming-looking engine that **under-reports** `written` by one
+/// word: the scalar finisher then lands short of the planned exact
+/// length, and the pipeline must turn that into the
+/// [`ErrorKind::Other`] hard error (the "never freeze a buffer a
+/// worker did not completely fill" guarantee) instead of returning a
+/// partially initialized vector.
+struct UnderReporting(OurUtf8ToUtf16);
+
+impl Utf8ToUtf16 for UnderReporting {
+    fn name(&self) -> &'static str {
+        "under-reporting"
+    }
+    fn validating(&self) -> bool {
+        true
+    }
+    fn convert(&self, src: &[u8], dst: &mut [u16]) -> TranscodeResult {
+        let n = self.0.convert(src, dst)?;
+        Ok(n.saturating_sub(1))
+    }
+}
+
+#[test]
+fn parallel_under_fill_is_a_hard_error() {
+    // Each chunk must be well past the scalar tail reserve (512 bytes)
+    // or the bulk engine — the part that under-reports — never runs.
+    let src = b"plain ascii payload, long enough to split twice over".repeat(64);
+    let engine = UnderReporting(OurUtf8ToUtf16::validating());
+    let err = engine
+        .par_convert_to_vec_at(&src, &[src.len() / 2])
+        .expect_err("an under-filled plan must not freeze");
+    assert_eq!(err.kind, ErrorKind::Other);
+    // The honest engine on the same input and cuts succeeds.
+    let ok = OurUtf8ToUtf16::validating()
+        .par_convert_to_vec_at(&src, &[src.len() / 2])
+        .expect("honest engine fills exactly");
+    assert_eq!(ok.len(), src.len());
+}
+
+// ---------------------------------------------------------------------------
+// Miri smoke: the full planner/worker/join machinery, interpreted
+// ---------------------------------------------------------------------------
+
+/// Small-scale parallel executor sweep that runs under Miri: scoped
+/// threads writing disjoint `split_at_mut` sub-slices of one
+/// uninitialized allocation, strict + lossy + latin1, clean + dirty,
+/// single- and multi-chunk. This is the suite's soundness core — under
+/// Miri the output buffer is genuinely uninitialized, so any worker
+/// read of its sub-slice (or write outside it) is an instant error.
+#[test]
+fn miri_parallel_smoke() {
+    let to16 = Registry::global().get_utf8("best").expect("registry has best");
+    let to8 = Registry::global().get_utf16("best").expect("registry has best");
+    for (name, src) in utf8_corpora().into_iter().take(4) {
+        let len = src.len();
+        for cuts in [vec![len / 2], vec![len / 3, 2 * len / 3]] {
+            let ctx = format!("miri utf8 {name} cuts {cuts:?}");
+            check_strict_utf8(to16, &src, &cuts, &ctx);
+            check_lossy_utf8(to16, &src, &cuts, &ctx);
+        }
+    }
+    for (name, src) in utf16_corpora().into_iter().take(3) {
+        let len = src.len();
+        let cuts = [len / 2];
+        let ctx = format!("miri utf16 {name}");
+        check_strict_utf16(to8, &src, &cuts, &ctx);
+        check_lossy_utf16(to8, &src, &cuts, &ctx);
+    }
+    // Latin-1 expansion through the same assembly.
+    let src: Vec<u8> = (0u8..=255).collect();
+    let want: Vec<u8> = src.iter().map(|&b| b as char).collect::<String>().into_bytes();
+    let k = Registry::global().latin1_entries()[0];
+    let got = par_latin1_to_utf8_vec_at(k, &src, &[100]).expect("latin1 is total");
+    assert_eq!(got, want);
+    // Executor entry point (auto split, 2 scoped threads).
+    let body = "auto split body \u{e9}\u{6f22}\u{1f642} ".repeat(64).into_bytes();
+    let opts = ParallelOptions { threads: 2, min_chunk: 64 };
+    let want = to16.convert_to_vec_exact(&body).expect("valid corpus");
+    let got = to16.par_convert_to_vec(&body, opts).expect("parallel strict");
+    assert_eq!(got, want);
 }

@@ -100,6 +100,7 @@ const SAMPLES: &[&str] = &[
 ];
 
 #[test]
+#[cfg_attr(miri, ignore = "every-boundary sweep; miri_streaming_smoke covers the machinery")]
 fn two_chunk_split_at_every_boundary_utf8() {
     for text in SAMPLES {
         let data = text.as_bytes();
@@ -111,6 +112,7 @@ fn two_chunk_split_at_every_boundary_utf8() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "every-boundary sweep")]
 fn two_chunk_split_at_every_boundary_utf16() {
     for text in SAMPLES {
         let units: Vec<u16> = text.encode_utf16().collect();
@@ -122,6 +124,7 @@ fn two_chunk_split_at_every_boundary_utf16() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "every-split sweep")]
 fn corrupted_streams_report_the_oneshot_error_at_every_split() {
     // Corruptions of every kind, at positions near chunk boundaries.
     let mut corpora: Vec<Vec<u8>> = Vec::new();
@@ -147,6 +150,7 @@ fn corrupted_streams_report_the_oneshot_error_at_every_split() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "every-split sweep")]
 fn corrupted_utf16_streams_report_the_oneshot_error_at_every_split() {
     let base: Vec<u16> = "x🙂y漢z".encode_utf16().collect();
     let mut corpora: Vec<Vec<u16>> = vec![
@@ -172,6 +176,7 @@ fn corrupted_utf16_streams_report_the_oneshot_error_at_every_split() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "every-split sweep")]
 fn trailing_high_surrogate_runs_split_everywhere() {
     // Runs of 2..=4 trailing high surrogates exercise the `run`/`hold`
     // arithmetic and the error-position computation of the trailing-run
@@ -222,6 +227,7 @@ fn trailing_high_surrogate_runs_split_everywhere() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "randomized multi-split sweep")]
 fn random_multi_chunk_splits_match_oneshot() {
     let corpus = Corpus::generate(Language::Hebrew, Collection::Lipsum);
     let data = corpus.utf8_prefix(4096);
@@ -264,6 +270,7 @@ fn random_multi_chunk_splits_match_oneshot() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "engine sweep")]
 fn streaming_over_baseline_engines_agrees() {
     // The streaming wrapper is engine-generic; spot-check a scalar
     // baseline produces identical streams.
@@ -279,4 +286,33 @@ fn streaming_over_baseline_engines_agrees() {
     }
     s.finish().expect("complete");
     assert_eq!(out, expected);
+}
+
+/// Miri-sized streaming pass: a few representative splits instead of
+/// every boundary — the carry-buffer handoff (partial characters held
+/// across pushes) is the part with pointer arithmetic worth running
+/// interpreted, and it is fully exercised by splits inside multi-byte
+/// sequences and surrogate pairs.
+#[test]
+fn miri_streaming_smoke() {
+    let text = "mix a \u{e9} \u{6f22} \u{1f642} end";
+    let data = text.as_bytes();
+    for at in [1, 8, data.len() - 3] {
+        let (a, b) = data.split_at(at);
+        check_utf8_split(data, &[a, b]);
+    }
+    let units: Vec<u16> = text.encode_utf16().collect();
+    for at in [1, units.len() / 2, units.len() - 1] {
+        let (a, b) = units.split_at(at);
+        check_utf16_split(&units, &[a, b]);
+    }
+    // A dangling sequence at finish() and a mid-stream hard error.
+    let mut bad = b"ok ".to_vec();
+    bad.extend_from_slice(&[0xE2, 0x82]); // truncated 3-byte sequence
+    let (a, b) = bad.split_at(4);
+    check_utf8_split(&bad, &[a, b]);
+    let mut bad = b"ok ".to_vec();
+    bad.extend_from_slice(&[0xED, 0xA0, 0x80, b'z']); // encoded surrogate
+    let (a, b) = bad.split_at(5);
+    check_utf8_split(&bad, &[a, b]);
 }

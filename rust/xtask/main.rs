@@ -1,0 +1,1373 @@
+//! `xtask` — the repo-invariant linter (`cargo xtask lint`).
+//!
+//! Enforces project rules no off-the-shelf tool knows, by parsing the
+//! source tree textually (no rustc, no external crates — the binary
+//! must build offline with zero dependencies, like the library):
+//!
+//! 1. **SAFETY comments** — every `unsafe` block and `unsafe impl` in
+//!    the tree is directly preceded by a `// SAFETY:` justification
+//!    (attributes and the comment block itself may sit between). This
+//!    mirrors `clippy::undocumented_unsafe_blocks` (denied in
+//!    `Cargo.toml`) so the invariant holds even on toolchains where
+//!    that clippy lint is unavailable.
+//! 2. **Registry enumeration completeness** — the engine keys declared
+//!    in `rust/src/engine.rs` are cross-checked against: the module-doc
+//!    key tables in the same file, the hardcoded engine array in
+//!    `parallel_entries`, the counting/Latin-1 kernel key sets, the
+//!    registry accessors each differential/equivalence suite and bench
+//!    must enumerate, and every literal `get_utf8("…")`-style lookup in
+//!    the tree (a typo'd or stale key fails the lint, not a test at
+//!    runtime).
+//! 3. **Portable mirrors** — every *positive* `#[cfg(target_feature =
+//!    …)]` intrinsic path has a portable alternative in scope: an
+//!    explicit `#[cfg(not(…))]` twin, a trailing
+//!    `#[allow(unreachable_code)]` portable block, or fall-through code
+//!    after the gated item. A site that genuinely has no mirror carries
+//!    a `// xtask: allow-no-portable-mirror (reason)` waiver.
+//! 4. **BENCH artifact schema** — every checked-in
+//!    `artifacts/BENCH_*.json` parses (hand-rolled JSON reader) and
+//!    validates against the documented schema v6
+//!    (`docs/BENCHMARKING.md`), with its engine/kernel/parallel row
+//!    sets tied to the keys parsed from `engine.rs` in rule 2 — the
+//!    artifacts cannot drift from the registry.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo xtask lint                 # whole-tree pass (CI runs this)
+//! cargo xtask bench-schema F.json  # validate one emitted bench file
+//! ```
+//!
+//! Diagnostics print as `path:line: message`; the exit code is
+//! non-zero iff any invariant failed. The checks themselves are pure
+//! functions over source text, unit-tested below with planted
+//! violations (see `cargo test --bin xtask`).
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut diags: Vec<String> = Vec::new();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = match args.iter().position(|a| a == "--root") {
+                Some(i) => PathBuf::from(args.get(i + 1).map(String::as_str).unwrap_or(".")),
+                None => repo_root(),
+            };
+            run_lint(&root, &mut diags);
+        }
+        Some("bench-schema") => {
+            let root = repo_root();
+            let keys = load_registry_keys(&root, &mut diags);
+            for file in &args[1..] {
+                match fs::read_to_string(file) {
+                    Ok(src) => check_bench_schema(file, &src, &keys, &mut diags),
+                    Err(e) => diags.push(format!("{file}: unreadable: {e}")),
+                }
+            }
+            if args.len() < 2 {
+                diags.push("bench-schema: no files given".to_string());
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint [--root DIR] | cargo xtask bench-schema FILE...");
+            return ExitCode::FAILURE;
+        }
+    }
+    if diags.is_empty() {
+        println!("xtask: all invariants hold");
+        ExitCode::SUCCESS
+    } else {
+        for d in &diags {
+            eprintln!("{d}");
+        }
+        eprintln!("xtask: {} violation(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// The repository root: the directory holding `Cargo.toml`, found from
+/// `CARGO_MANIFEST_DIR` (set by `cargo run`/`cargo xtask`) or the
+/// current directory.
+fn repo_root() -> PathBuf {
+    std::env::var_os("CARGO_MANIFEST_DIR").map(PathBuf::from).unwrap_or_else(|| ".".into())
+}
+
+/// The full lint pass over a repository checkout.
+fn run_lint(root: &Path, diags: &mut Vec<String>) {
+    // Rules 1 and 3 over every Rust source file.
+    for path in rust_files(root) {
+        let label = path.strip_prefix(root).unwrap_or(&path).display().to_string();
+        match fs::read_to_string(&path) {
+            Ok(src) => {
+                check_safety_comments(&label, &src, diags);
+                check_portable_mirrors(&label, &src, diags);
+            }
+            Err(e) => diags.push(format!("{label}: unreadable: {e}")),
+        }
+    }
+    // Rule 2 against the registry, then rule 4 against the artifacts.
+    let keys = load_registry_keys(root, diags);
+    check_registry_invariants(root, &keys, diags);
+    check_bench_artifacts(root, &keys, diags);
+}
+
+/// Every Rust source file the textual rules scan: the library, the
+/// binaries (this one included — the linter lints itself), the test
+/// suites and the benches.
+fn rust_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for dir in ["rust/src", "rust/xtask", "rust/tests", "benches", "examples"] {
+        walk(&root.join(dir), &mut out);
+    }
+    out.sort();
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared line-level scanning utilities
+// ---------------------------------------------------------------------------
+
+/// Strip string literals, char literals and line comments from one
+/// line of source, so brace counting and keyword scans cannot be
+/// fooled by `"{"`, `'{'` or commented-out code. Contents are blanked,
+/// delimiters kept. Lifetimes (`'a`, `'static`) are not char literals
+/// and pass through untouched.
+fn strip_line(line: &str) -> String {
+    let b: Vec<char> = line.chars().collect();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            '"' => {
+                out.push('"');
+                i += 1;
+                while i < b.len() && b[i] != '"' {
+                    i += if b[i] == '\\' { 2 } else { 1 };
+                }
+                out.push('"');
+                i += 1;
+            }
+            '\'' => {
+                // Char literal iff a closing quote follows one
+                // (possibly escaped) character; else it is a lifetime.
+                let close = if b.get(i + 1) == Some(&'\\') { i + 3 } else { i + 2 };
+                if close < b.len() && b[close] == '\'' {
+                    out.push_str("' '");
+                    i = close + 1;
+                } else {
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            '/' if b.get(i + 1) == Some(&'/') => break,
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Truncate a line at a `//` comment that starts outside any string
+/// literal, keeping string contents intact (rule 2e reads key
+/// literals out of them, so blanking strings would hide the payload).
+fn strip_comment(line: &str) -> String {
+    let b: Vec<char> = line.chars().collect();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            '"' => {
+                out.push('"');
+                i += 1;
+                while i < b.len() && b[i] != '"' {
+                    if b[i] == '\\' {
+                        out.push(b[i]);
+                        i += 1;
+                        if i < b.len() {
+                            out.push(b[i]);
+                            i += 1;
+                        }
+                    } else {
+                        out.push(b[i]);
+                        i += 1;
+                    }
+                }
+                if i < b.len() {
+                    out.push('"');
+                    i += 1;
+                }
+            }
+            '/' if b.get(i + 1) == Some(&'/') => break,
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// True if the stripped line is an attribute (single-line in this
+/// tree; the lint does not attempt multi-line attribute parsing).
+fn is_attr(trimmed: &str) -> bool {
+    trimmed.starts_with("#[") || trimmed.starts_with("#![")
+}
+
+fn is_comment(trimmed: &str) -> bool {
+    trimmed.starts_with("//")
+}
+
+/// Given `lines` and the index of the first line of a statement or
+/// item (past its attributes and comments), return the index just past
+/// its end: brace-matched for block items, the `;` line for
+/// expression statements.
+fn item_end(lines: &[&str], start: usize) -> usize {
+    let mut depth: i64 = 0;
+    let mut seen_brace = false;
+    let mut j = start;
+    while j < lines.len() {
+        let code = strip_line(lines[j]);
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    seen_brace = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if seen_brace && depth <= 0 {
+            return j + 1;
+        }
+        if !seen_brace && code.trim_end().ends_with(';') {
+            return j + 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: SAFETY comments on every unsafe block / unsafe impl
+// ---------------------------------------------------------------------------
+
+/// True if the stripped code line opens an `unsafe` block (`unsafe {`,
+/// possibly mid-line) or declares an `unsafe impl`. `unsafe fn` /
+/// `unsafe trait` declarations are not blocks and are exempt (the
+/// bodies' operations sit in their own audited blocks —
+/// `unsafe_op_in_unsafe_fn` is denied crate-wide).
+fn opens_unsafe(code: &str) -> bool {
+    let mut rest = code;
+    while let Some(pos) = rest.find("unsafe") {
+        let before_ok = pos == 0
+            || !rest[..pos].ends_with(|c: char| c.is_alphanumeric() || c == '_');
+        let after = rest[pos + "unsafe".len()..].trim_start();
+        if before_ok && (after.starts_with('{') || after.starts_with("impl")) {
+            return true;
+        }
+        rest = &rest[pos + "unsafe".len()..];
+    }
+    false
+}
+
+/// Rule 1 scanner: every line opening an unsafe block/impl must have a
+/// `// SAFETY:` line in the contiguous comment/attribute run directly
+/// above it.
+fn check_safety_comments(label: &str, src: &str, diags: &mut Vec<String>) {
+    let lines: Vec<&str> = src.lines().collect();
+    for (i, raw) in lines.iter().enumerate() {
+        let trimmed = raw.trim();
+        if is_comment(trimmed) || is_attr(trimmed) {
+            continue;
+        }
+        if !opens_unsafe(&strip_line(raw)) {
+            continue;
+        }
+        let mut documented = false;
+        let mut k = i;
+        while k > 0 {
+            k -= 1;
+            let t = lines[k].trim();
+            if is_attr(t) {
+                continue; // attributes may sit between comment and block
+            }
+            if is_comment(t) && !t.starts_with("///") && !t.starts_with("//!") {
+                if t.contains("SAFETY:") {
+                    documented = true;
+                    break;
+                }
+                continue; // earlier line of the same comment block
+            }
+            break; // any code line ends the run
+        }
+        if !documented {
+            diags.push(format!(
+                "{label}:{}: unsafe block without a `// SAFETY:` comment",
+                i + 1
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: every positive target_feature cfg has a portable mirror
+// ---------------------------------------------------------------------------
+
+const MIRROR_WAIVER: &str = "xtask: allow-no-portable-mirror";
+
+/// Statement-level starters that mean "we fell out of the gated item's
+/// scope into a new top-level item", i.e. no portable mirror exists.
+const ITEM_STARTERS: &[&str] = &[
+    "pub ", "fn ", "impl", "struct ", "enum ", "mod ", "trait ", "const ", "static ",
+    "macro_rules",
+];
+
+/// Rule 3 scanner. For each `#[cfg(…target_feature…)]` that is not
+/// `#[cfg(not(…))]`: skip the gated item, then accept the site if the
+/// next thing in scope is an explicit mirror (`#[cfg(not(…))]` /
+/// `#[allow(unreachable_code)]`), or plain fall-through code. Other
+/// attributes (further conditional paths, e.g. the NEON twin) are
+/// skipped together with their items. One closing brace may be popped
+/// (a gated block nested one level below its portable fall-through, as
+/// in `best_key`); popping into a new item is a violation.
+fn check_portable_mirrors(label: &str, src: &str, diags: &mut Vec<String>) {
+    let lines: Vec<&str> = src.lines().collect();
+    for (i, raw) in lines.iter().enumerate() {
+        let t = raw.trim();
+        if !t.starts_with("#[cfg")
+            || !t.contains("target_feature")
+            || t.starts_with("#[cfg(not(")
+        {
+            continue;
+        }
+        // Waiver in the comment/attribute run directly above the site.
+        let mut waived = false;
+        let mut k = i;
+        while k > 0 {
+            k -= 1;
+            let a = lines[k].trim();
+            if !is_comment(a) && !is_attr(a) {
+                break;
+            }
+            if a.contains(MIRROR_WAIVER) {
+                waived = true;
+                break;
+            }
+        }
+        if waived {
+            continue;
+        }
+        // Skip to the gated item and past it.
+        let mut j = i + 1;
+        while j < lines.len() && (is_attr(lines[j].trim()) || is_comment(lines[j].trim())) {
+            j += 1;
+        }
+        j = item_end(&lines, j);
+        // Scan forward for a mirror.
+        let mut popped = false;
+        let mut ok = false;
+        while j < lines.len() {
+            let s = lines[j].trim();
+            if s.is_empty() || is_comment(s) {
+                j += 1;
+                continue;
+            }
+            if !popped
+                && (s.starts_with("#[allow(unreachable_code)") || s.starts_with("#[cfg(not("))
+            {
+                ok = true;
+                break;
+            }
+            if !popped && is_attr(s) {
+                // Another conditional path; skip it and its item.
+                let mut jj = j;
+                while jj < lines.len()
+                    && (is_attr(lines[jj].trim())
+                        || is_comment(lines[jj].trim())
+                        || lines[jj].trim().is_empty())
+                {
+                    jj += 1;
+                }
+                j = item_end(&lines, jj);
+                continue;
+            }
+            if s == "}" || s == "}," || s == "});" {
+                if popped {
+                    break; // second pop: out of scope entirely
+                }
+                popped = true;
+                j += 1;
+                continue;
+            }
+            if popped && (is_attr(s) || ITEM_STARTERS.iter().any(|p| s.starts_with(p))) {
+                break; // popped straight into a new item: nothing follows
+            }
+            ok = true; // unconditional fall-through code
+            break;
+        }
+        if !ok {
+            diags.push(format!(
+                "{label}:{}: target_feature path without a portable mirror \
+                 (add a #[cfg(not(…))] twin, an #[allow(unreachable_code)] fallback, \
+                 fall-through code, or a `// {MIRROR_WAIVER} (reason)` waiver)",
+                i + 1
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: registry enumeration completeness
+// ---------------------------------------------------------------------------
+
+/// Engine keys parsed from `rust/src/engine.rs`.
+#[derive(Default)]
+struct RegistryKeys {
+    utf8: Vec<String>,
+    utf16: Vec<String>,
+}
+
+impl RegistryKeys {
+    fn all(&self) -> BTreeSet<&str> {
+        self.utf8.iter().chain(&self.utf16).map(String::as_str).collect()
+    }
+
+    /// The width-explicit validating keys registered in both
+    /// directions — `simd128`/`simd256`/`simd512`/`best` today, derived
+    /// (not hardcoded) so a new width propagates into every
+    /// cross-check automatically.
+    fn widths(&self) -> BTreeSet<&str> {
+        self.utf8
+            .iter()
+            .map(String::as_str)
+            .filter(|k| self.utf16.iter().any(|u| u == k))
+            .filter(|k| *k == "best" || k.starts_with("simd"))
+            .collect()
+    }
+
+    /// The kernel-set keys: the scalar reference plus every width.
+    fn kernel_keys(&self) -> BTreeSet<&str> {
+        let mut s = self.widths();
+        s.insert("scalar");
+        s
+    }
+}
+
+/// Extract the `key: "…"` names of the two `vec![…]` entry lists in
+/// `Registry::standard`, tracking bracket depth so only entries inside
+/// each list are counted.
+fn parse_registry_keys(engine_src: &str) -> RegistryKeys {
+    let mut keys = RegistryKeys::default();
+    let mut section: Option<bool> = None; // Some(true)=utf8, Some(false)=utf16
+    let mut depth: i64 = 0;
+    for line in engine_src.lines() {
+        let code = strip_line(line);
+        let trimmed = code.trim();
+        if section.is_none() {
+            if trimmed.starts_with("utf8: vec![") {
+                section = Some(true);
+                depth = 0;
+            } else if trimmed.starts_with("utf16: vec![") {
+                section = Some(false);
+                depth = 0;
+            } else {
+                continue;
+            }
+        }
+        if let Some(is_utf8) = section {
+            for k in extract_quoted_after(line, "key: ") {
+                if is_utf8 {
+                    keys.utf8.push(k);
+                } else {
+                    keys.utf16.push(k);
+                }
+            }
+            for c in code.chars() {
+                match c {
+                    '[' => depth += 1,
+                    ']' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if depth <= 0 {
+                section = None;
+            }
+        }
+    }
+    keys
+}
+
+/// Every `"…"` literal that directly follows `marker` on the line
+/// (e.g. `key: "ours"`). Multiple occurrences per line are all
+/// returned. Note this scans the *raw* line — the literal itself is
+/// the payload.
+fn extract_quoted_after(line: &str, marker: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(pos) = rest.find(marker) {
+        rest = &rest[pos + marker.len()..];
+        if let Some(stripped) = rest.strip_prefix('"') {
+            if let Some(end) = stripped.find('"') {
+                out.push(stripped[..end].to_string());
+            }
+        }
+    }
+    out
+}
+
+/// All string literals inside the bracketed list that follows
+/// `marker`, e.g. `for engine in ["simd128", …]`.
+fn extract_string_array_after(src: &str, marker: &str) -> Option<Vec<String>> {
+    let start = src.find(marker)? + marker.len();
+    let open = src[start..].find('[')? + start + 1;
+    let close = src[open..].find(']')? + open;
+    let mut out = Vec::new();
+    let mut rest = &src[open..close];
+    while let Some(q) = rest.find('"') {
+        let body = &rest[q + 1..];
+        let end = body.find('"')?;
+        out.push(body[..end].to_string());
+        rest = &body[end + 1..];
+    }
+    Some(out)
+}
+
+fn load_registry_keys(root: &Path, diags: &mut Vec<String>) -> RegistryKeys {
+    let path = root.join("rust/src/engine.rs");
+    match fs::read_to_string(&path) {
+        Ok(src) => {
+            let keys = parse_registry_keys(&src);
+            if keys.utf8.is_empty() || keys.utf16.is_empty() {
+                diags.push(
+                    "rust/src/engine.rs: could not parse registry entry lists".to_string(),
+                );
+            }
+            keys
+        }
+        Err(e) => {
+            diags.push(format!("rust/src/engine.rs: unreadable: {e}"));
+            RegistryKeys::default()
+        }
+    }
+}
+
+/// Which registry accessors each enumerating file must call. A suite
+/// that swaps an accessor for a hand-written key list stops covering
+/// newly registered engines — this pins the enumeration style itself.
+const REQUIRED_ACCESSORS: &[(&str, &[&str])] = &[
+    ("rust/src/harness/mod.rs", &[
+        "utf8_entries()",
+        "utf16_entries()",
+        "utf8_lossy_entries()",
+        "utf16_lossy_entries()",
+        "count_entries()",
+        "latin1_entries()",
+        "parallel_entries()",
+    ]),
+    ("rust/tests/backend_equivalence.rs", &["utf8_entries()", "utf16_entries()"]),
+    ("rust/tests/lossy_differential.rs", &["utf8_lossy_entries()", "utf16_lossy_entries()"]),
+    ("rust/tests/counting.rs", &["count_entries()"]),
+    ("rust/tests/latin1_differential.rs", &["latin1_entries()"]),
+    ("rust/tests/parallel_differential.rs", &[
+        "parallel_entries()",
+        "utf8_entries()",
+        "utf16_entries()",
+        "latin1_entries()",
+    ]),
+    ("benches/utf8_to_utf16.rs", &["utf8_entries()"]),
+    ("benches/utf16_to_utf8.rs", &["utf16_entries()"]),
+    ("benches/lossy.rs", &["utf8_lossy_entries()", "utf16_lossy_entries()"]),
+    ("benches/counting.rs", &["count_entries()"]),
+    ("benches/latin1.rs", &["latin1_entries()"]),
+    ("benches/parallel.rs", &["parallel_entries()"]),
+];
+
+const KEY_WAIVER: &str = "xtask: allow-unknown-key";
+
+fn check_registry_invariants(root: &Path, keys: &RegistryKeys, diags: &mut Vec<String>) {
+    // 2a. Every key is documented in the engine.rs module-doc tables.
+    if let Ok(src) = fs::read_to_string(root.join("rust/src/engine.rs")) {
+        let doc: String =
+            src.lines().filter(|l| l.trim().starts_with("//!")).collect::<Vec<_>>().join("\n");
+        for key in keys.all() {
+            if !doc.contains(&format!("`{key}`")) {
+                diags.push(format!(
+                    "rust/src/engine.rs: key \"{key}\" missing from the module-doc key tables"
+                ));
+            }
+        }
+        // 2b. The hardcoded parallel_entries engine array matches the
+        // width set derived from the entry lists.
+        match extract_string_array_after(&src, "for engine in ") {
+            Some(arr) => {
+                let got: BTreeSet<&str> = arr.iter().map(String::as_str).collect();
+                let want = keys.widths();
+                if got != want {
+                    diags.push(format!(
+                        "rust/src/engine.rs: parallel_entries engines {got:?} != registry \
+                         width keys {want:?}"
+                    ));
+                }
+            }
+            None => diags
+                .push("rust/src/engine.rs: could not find parallel_entries array".to_string()),
+        }
+    }
+    // 2c. Counting and Latin-1 kernel key sets are scalar + widths.
+    for (file, label) in [
+        ("rust/src/count/mod.rs", "counting"),
+        ("rust/src/transcode/latin1.rs", "latin1"),
+    ] {
+        match fs::read_to_string(root.join(file)) {
+            Ok(src) => {
+                let got: BTreeSet<String> = src
+                    .lines()
+                    .flat_map(|l| extract_quoted_after(l, "key: "))
+                    .collect();
+                let got: BTreeSet<&str> = got.iter().map(String::as_str).collect();
+                let want = keys.kernel_keys();
+                if got != want {
+                    diags.push(format!(
+                        "{file}: {label} kernel keys {got:?} != scalar + registry widths {want:?}"
+                    ));
+                }
+            }
+            Err(e) => diags.push(format!("{file}: unreadable: {e}")),
+        }
+    }
+    // 2d. Enumerating files call the accessors they are supposed to.
+    for (file, accessors) in REQUIRED_ACCESSORS {
+        match fs::read_to_string(root.join(file)) {
+            Ok(src) => {
+                for acc in *accessors {
+                    if !src.contains(acc) {
+                        diags.push(format!(
+                            "{file}: must enumerate the registry via {acc} (hand-written key \
+                             lists drift)"
+                        ));
+                    }
+                }
+            }
+            Err(e) => diags.push(format!("{file}: unreadable: {e}")),
+        }
+    }
+    // 2e. Literal engine-key lookups resolve. Negative-lookup tests
+    // either call .is_none() on the same line or carry a waiver.
+    let known = keys.all();
+    for path in rust_files(root) {
+        let label = path.strip_prefix(root).unwrap_or(&path).display().to_string();
+        let Ok(src) = fs::read_to_string(&path) else { continue };
+        for (i, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw);
+            let line = line.as_str();
+            for marker in
+                ["get_utf8(\"", "get_utf16(\"", "get_utf8_arc(\"", "get_utf16_arc(\""]
+            {
+                let mut rest = line;
+                while let Some(pos) = rest.find(marker) {
+                    rest = &rest[pos + marker.len()..];
+                    let Some(end) = rest.find('"') else { break };
+                    let key = rest[..end].to_ascii_lowercase();
+                    if !known.contains(key.as_str())
+                        && !line.contains("is_none")
+                        && !line.contains(KEY_WAIVER)
+                    {
+                        diags.push(format!(
+                            "{label}:{}: unknown registry key \"{key}\" (not in engine.rs; \
+                             append `// {KEY_WAIVER}` if a negative test)",
+                            i + 1
+                        ));
+                    }
+                    rest = &rest[end..];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON reader (rule 4 needs one; the crate has no dependencies)
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Objects keep insertion order (schema checks
+/// compare key *sets*, but error messages read better in file order).
+#[derive(Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn keys(&self) -> BTreeSet<&str> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => BTreeSet::new(),
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+fn parse_json(src: &str) -> Result<Json, String> {
+    let mut p = JsonParser { b: src.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+impl JsonParser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|&c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        while let Some(&c) = self.b.get(self.i) {
+            match c {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    let esc = *self.b.get(self.i + 1).ok_or("dangling escape")?;
+                    out.push(match esc {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'u' => {
+                            // \uXXXX — the bench artifacts are ASCII; decode
+                            // the code unit, reject surrogates.
+                            let hex = self
+                                .b
+                                .get(self.i + 2..self.i + 6)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or("bad \\u escape")?;
+                            self.i += 4;
+                            char::from_u32(hex).ok_or("surrogate \\u escape")?
+                        }
+                        other => other as char,
+                    });
+                    self.i += 2;
+                }
+                _ => {
+                    // Multi-byte UTF-8 passes through byte-wise intact
+                    // because the input is &str (already valid UTF-8).
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| "bad utf8".to_string())?;
+                    let ch = s.chars().next().ok_or("unexpected end")?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            out.push((key, self.value()?));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: BENCH artifact schema v6
+// ---------------------------------------------------------------------------
+
+const SCHEMA_V6: &str = "simdutf-rs-bench-v6";
+
+fn check_bench_artifacts(root: &Path, keys: &RegistryKeys, diags: &mut Vec<String>) {
+    let dir = root.join("artifacts");
+    let Ok(entries) = fs::read_dir(&dir) else {
+        diags.push("artifacts/: directory missing (BENCH_*.json artifacts are checked in)".to_string());
+        return;
+    };
+    let mut found = false;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+            continue;
+        }
+        found = true;
+        let label = format!("artifacts/{name}");
+        match fs::read_to_string(&path) {
+            Ok(src) => check_bench_schema(&label, &src, keys, diags),
+            Err(e) => diags.push(format!("{label}: unreadable: {e}")),
+        }
+    }
+    if !found {
+        diags.push("artifacts/: no BENCH_*.json checked in".to_string());
+    }
+}
+
+/// A bench matrix row: `null` (placeholder artifacts seeded without a
+/// toolchain) or an object of corpus → MB/s (or `null` for an
+/// unsupported engine × corpus cell, e.g. Inoue × Emoji).
+fn check_row(label: &str, section: &str, key: &str, row: &Json, diags: &mut Vec<String>) {
+    match row {
+        Json::Null => {}
+        Json::Obj(cells) => {
+            for (corpus, cell) in cells {
+                if !matches!(cell, Json::Num(_) | Json::Null) {
+                    diags.push(format!(
+                        "{label}: {section}.{key}.{corpus} must be a number or null"
+                    ));
+                }
+            }
+        }
+        _ => diags.push(format!("{label}: {section}.{key} must be an object or null")),
+    }
+}
+
+/// A flat section (engine key → row). `exact` pins the key set
+/// exactly; otherwise rows must be a superset of `must` within `may`.
+fn check_section(
+    label: &str,
+    name: &str,
+    v: Option<&Json>,
+    must: &BTreeSet<&str>,
+    may: &BTreeSet<&str>,
+    exact: bool,
+    diags: &mut Vec<String>,
+) {
+    let Some(obj @ Json::Obj(rows)) = v else {
+        diags.push(format!("{label}: missing or non-object section \"{name}\""));
+        return;
+    };
+    let got = obj.keys();
+    for k in must {
+        if !got.contains(k) {
+            diags.push(format!("{label}: {name} missing row \"{k}\""));
+        }
+    }
+    for k in &got {
+        if !may.contains(k) || (exact && !must.contains(k)) {
+            diags.push(format!("{label}: {name} has unknown row \"{k}\""));
+        }
+    }
+    for (k, row) in rows {
+        check_row(label, name, k, row, diags);
+    }
+}
+
+/// Validate one BENCH json document against schema v6
+/// (`docs/BENCHMARKING.md`), with the row sets tied to the engine keys
+/// parsed from `engine.rs`.
+fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut Vec<String>) {
+    let doc = match parse_json(src) {
+        Ok(d) => d,
+        Err(e) => {
+            diags.push(format!("{label}: json parse error: {e}"));
+            return;
+        }
+    };
+    match doc.get("schema") {
+        Some(Json::Str(s)) if s == SCHEMA_V6 => {}
+        other => {
+            diags.push(format!("{label}: schema must be \"{SCHEMA_V6}\", got {other:?}"));
+            return;
+        }
+    }
+    if !matches!(doc.get("unit"), Some(Json::Str(_))) {
+        diags.push(format!("{label}: missing string header field \"unit\""));
+    }
+    if !matches!(doc.get("budget_ms"), Some(Json::Num(_))) {
+        diags.push(format!("{label}: missing numeric header field \"budget_ms\""));
+    }
+    let widths = keys.widths();
+    match doc.get("best") {
+        Some(Json::Null) => {}
+        Some(Json::Str(s)) if widths.contains(s.as_str()) => {}
+        other => diags.push(format!(
+            "{label}: \"best\" must name a width key {widths:?} or be null, got {other:?}"
+        )),
+    }
+    if !matches!(doc.get("backend"), Some(Json::Str(_) | Json::Null)) {
+        diags.push(format!("{label}: \"backend\" must be a string or null (v6 header field)"));
+    }
+
+    let utf8: BTreeSet<&str> = keys.utf8.iter().map(String::as_str).collect();
+    let utf16: BTreeSet<&str> = keys.utf16.iter().map(String::as_str).collect();
+    // Strict engine sections: exactly the registry key sets.
+    check_section(label, "utf8_to_utf16", doc.get("utf8_to_utf16"), &utf8, &utf8, true, diags);
+    check_section(label, "utf16_to_utf8", doc.get("utf16_to_utf8"), &utf16, &utf16, true, diags);
+    // Lossy sections: the validating subset — at minimum every width
+    // key, never a key outside the registry.
+    check_section(
+        label,
+        "utf8_to_utf16_lossy",
+        doc.get("utf8_to_utf16_lossy"),
+        &widths,
+        &utf8,
+        false,
+        diags,
+    );
+    check_section(
+        label,
+        "utf16_to_utf8_lossy",
+        doc.get("utf16_to_utf8_lossy"),
+        &widths,
+        &utf16,
+        false,
+        diags,
+    );
+
+    // Nested sections: fixed subsection lists, kernel-key rows.
+    let kernels = keys.kernel_keys();
+    for (section, subsections, rows) in [
+        (
+            "counts",
+            &[
+                "utf16_len_from_utf8",
+                "utf8_len_from_utf16",
+                "count_utf8_code_points",
+                "count_utf16_code_points",
+            ][..],
+            &kernels,
+        ),
+        (
+            "latin1",
+            &["latin1_to_utf8", "utf8_to_latin1", "latin1_to_utf16", "utf16_to_latin1"][..],
+            &kernels,
+        ),
+        (
+            "alloc_to_vec",
+            &["utf8_to_utf16", "utf16_to_utf8"][..],
+            &["zeroed", "uninit", "exact"].into_iter().collect(),
+        ),
+    ] {
+        let Some(obj) = doc.get(section) else {
+            diags.push(format!("{label}: missing section \"{section}\""));
+            continue;
+        };
+        let want: BTreeSet<&str> = subsections.iter().copied().collect();
+        let got = obj.keys();
+        if got != want {
+            diags.push(format!(
+                "{label}: {section} subsections {got:?} != {want:?}"
+            ));
+        }
+        for sub in subsections {
+            let name = format!("{section}.{sub}");
+            check_section(label, &name, obj.get(sub), rows, rows, true, diags);
+        }
+    }
+
+    // Parallel section: <engine>@<threads> rows over the fixed ladder.
+    let Some(par) = doc.get("parallel") else {
+        diags.push(format!("{label}: missing section \"parallel\""));
+        return;
+    };
+    if !matches!(par.get("corpus_bytes"), Some(Json::Num(_) | Json::Null)) {
+        diags.push(format!("{label}: parallel.corpus_bytes must be a number or null"));
+    }
+    for dir in ["utf8_to_utf16", "utf16_to_utf8"] {
+        let Some(rows @ Json::Obj(pairs)) = par.get(dir) else {
+            diags.push(format!("{label}: parallel.{dir} missing or not an object"));
+            continue;
+        };
+        let mut engines_seen: BTreeSet<&str> = BTreeSet::new();
+        for k in rows.keys() {
+            match k.split_once('@') {
+                Some((engine, threads))
+                    if widths.contains(engine)
+                        && matches!(threads, "1" | "2" | "4" | "8") =>
+                {
+                    engines_seen.insert(engine);
+                }
+                _ => diags.push(format!(
+                    "{label}: parallel.{dir} row \"{k}\" is not <width>@<1|2|4|8>"
+                )),
+            }
+        }
+        // The thread ladder may be truncated (SIMDUTF_PAR_MAX_THREADS)
+        // but every engine must appear.
+        for e in &widths {
+            if !engines_seen.contains(e) {
+                diags.push(format!("{label}: parallel.{dir} has no rows for engine \"{e}\""));
+            }
+        }
+        for (k, row) in pairs {
+            check_row(label, &format!("parallel.{dir}"), k, row, diags);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests: every rule must fail on a planted violation and pass on
+// the real tree.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags_of(f: impl FnOnce(&mut Vec<String>)) -> Vec<String> {
+        let mut d = Vec::new();
+        f(&mut d);
+        d
+    }
+
+    // -- rule 1 --------------------------------------------------------
+
+    #[test]
+    fn undocumented_unsafe_block_is_rejected() {
+        let src = "fn f() {\n    let p = unsafe { *x };\n}\n";
+        let d = diags_of(|d| check_safety_comments("t.rs", src, d));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("t.rs:2"), "{d:?}");
+    }
+
+    #[test]
+    fn documented_unsafe_block_passes() {
+        let src = "fn f() {\n    // SAFETY: x is valid for reads.\n    let p = unsafe { *x };\n}\n";
+        assert!(diags_of(|d| check_safety_comments("t.rs", src, d)).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_crosses_attributes() {
+        let src = "// SAFETY: statically enabled.\n#[cfg(target_arch = \"x86_64\")]\nunsafe {\n    intrinsics();\n}\n";
+        assert!(diags_of(|d| check_safety_comments("t.rs", src, d)).is_empty());
+        // ...and attribute alone does not count as documentation.
+        let bad = "#[cfg(target_arch = \"x86_64\")]\nunsafe {\n    intrinsics();\n}\n";
+        assert_eq!(diags_of(|d| check_safety_comments("t.rs", bad, d)).len(), 1);
+    }
+
+    #[test]
+    fn unsafe_impl_requires_safety_comment() {
+        let bad = "unsafe impl Pod for u8 {}\n";
+        assert_eq!(diags_of(|d| check_safety_comments("t.rs", bad, d)).len(), 1);
+        let good = "// SAFETY: u8 has no invalid bit patterns.\nunsafe impl Pod for u8 {}\n";
+        assert!(diags_of(|d| check_safety_comments("t.rs", good, d)).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_declarations_and_mentions_are_exempt() {
+        let src = "pub unsafe fn danger(x: *const u8) -> u8 {\n    0\n}\n// this comment says unsafe { } and is ignored\nlet s = \"unsafe { in a string }\";\n";
+        assert!(diags_of(|d| check_safety_comments("t.rs", src, d)).is_empty());
+    }
+
+    // -- rule 3 --------------------------------------------------------
+
+    #[test]
+    fn gated_path_without_mirror_is_rejected() {
+        let src = "pub fn movemask() -> u16 {\n    #[cfg(all(target_arch = \"x86_64\", target_feature = \"sse2\"))]\n    unsafe {\n        return intrinsics();\n    }\n}\n";
+        let d = diags_of(|d| check_portable_mirrors("t.rs", src, d));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("portable mirror"), "{d:?}");
+    }
+
+    #[test]
+    fn cfg_not_twin_is_a_mirror() {
+        let src = "fn f() {\n    #[cfg(target_feature = \"sse2\")]\n    unsafe {\n        a();\n    }\n    #[cfg(not(target_feature = \"sse2\"))]\n    {\n        b();\n    }\n}\n";
+        assert!(diags_of(|d| check_portable_mirrors("t.rs", src, d)).is_empty());
+    }
+
+    #[test]
+    fn unreachable_code_fallback_is_a_mirror_even_past_other_arches() {
+        let src = "fn f() -> u16 {\n    #[cfg(target_feature = \"sse2\")]\n    unsafe {\n        return a();\n    }\n    #[cfg(target_arch = \"aarch64\")]\n    unsafe {\n        return b();\n    }\n    #[allow(unreachable_code)]\n    {\n        portable()\n    }\n}\n";
+        assert!(diags_of(|d| check_portable_mirrors("t.rs", src, d)).is_empty());
+    }
+
+    #[test]
+    fn fall_through_code_is_a_mirror_even_one_brace_up() {
+        // The best_key shape: gated ifs inside a #[cfg(not(miri))]
+        // block, with the portable default one level up.
+        let src = "pub fn best_key() -> &'static str {\n    #[cfg(not(miri))]\n    {\n        #[cfg(target_feature = \"avx2\")]\n        {\n            if detected() {\n                return V256;\n            }\n        }\n    }\n    V128\n}\n";
+        assert!(diags_of(|d| check_portable_mirrors("t.rs", src, d)).is_empty());
+    }
+
+    #[test]
+    fn popping_into_a_new_item_is_not_a_mirror() {
+        let src = "fn f() {\n    #[cfg(target_feature = \"sse2\")]\n    unsafe {\n        a();\n    }\n}\n\npub fn unrelated() {}\n";
+        assert_eq!(diags_of(|d| check_portable_mirrors("t.rs", src, d)).len(), 1);
+    }
+
+    #[test]
+    fn waiver_comment_suppresses_the_mirror_rule() {
+        let src = "fn f() {\n    // xtask: allow-no-portable-mirror (general path below covers it)\n    #[cfg(target_feature = \"sse2\")]\n    unsafe {\n        a();\n    }\n}\n";
+        assert!(diags_of(|d| check_portable_mirrors("t.rs", src, d)).is_empty());
+    }
+
+    #[test]
+    fn negative_cfg_sites_are_not_flagged() {
+        let src = "fn f() {\n    #[cfg(not(all(target_arch = \"x86_64\", target_feature = \"sse2\")))]\n    {\n        portable();\n    }\n}\n";
+        assert!(diags_of(|d| check_portable_mirrors("t.rs", src, d)).is_empty());
+    }
+
+    // -- rule 2 --------------------------------------------------------
+
+    const FAKE_ENGINE: &str = r#"
+        Registry {
+            utf8: vec![
+                Utf8Entry { key: "icu", engine: icu.clone(), paper: true },
+                Utf8Entry { key: "simd128", engine: ours, paper: false },
+                Utf8Entry { key: "best", engine: best8, paper: false },
+            ],
+            utf16: vec![
+                Utf16Entry { key: "icu", engine: icu, paper: true },
+                Utf16Entry { key: "simd128", engine: o16, paper: false },
+                Utf16Entry { key: "best", engine: best16, paper: false },
+            ],
+        }
+    "#;
+
+    #[test]
+    fn registry_parser_extracts_sectioned_keys() {
+        let keys = parse_registry_keys(FAKE_ENGINE);
+        assert_eq!(keys.utf8, ["icu", "simd128", "best"]);
+        assert_eq!(keys.utf16, ["icu", "simd128", "best"]);
+        assert_eq!(
+            keys.widths().into_iter().collect::<Vec<_>>(),
+            ["best", "simd128"],
+            "widths are the simd*/best keys registered in both directions"
+        );
+        assert!(keys.kernel_keys().contains("scalar"));
+    }
+
+    #[test]
+    fn string_array_extraction_reads_the_parallel_ladder() {
+        let src = "for engine in [\"simd128\", \"best\"] {";
+        assert_eq!(
+            extract_string_array_after(src, "for engine in ").unwrap(),
+            ["simd128", "best"]
+        );
+    }
+
+    // -- json reader ---------------------------------------------------
+
+    #[test]
+    fn json_reader_handles_the_bench_shapes() {
+        let doc = parse_json(
+            r#"{"a": 1.5, "b": null, "c": [1, 2], "d": {"k": "v"}, "e": true, "f": -3}"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("a"), Some(&Json::Num(1.5)));
+        assert_eq!(doc.get("b"), Some(&Json::Null));
+        assert_eq!(doc.get("c"), Some(&Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])));
+        assert_eq!(doc.get("d").unwrap().get("k"), Some(&Json::Str("v".to_string())));
+        assert_eq!(doc.get("e"), Some(&Json::Bool(true)));
+        assert_eq!(doc.get("f"), Some(&Json::Num(-3.0)));
+        assert!(parse_json("{\"unterminated\": ").is_err());
+        assert!(parse_json("{} trailing").is_err());
+    }
+
+    // -- rule 4 --------------------------------------------------------
+
+    fn fake_keys() -> RegistryKeys {
+        parse_registry_keys(FAKE_ENGINE)
+    }
+
+    fn minimal_bench(schema: &str, parallel_rows: &str) -> String {
+        format!(
+            r#"{{
+  "schema": "{schema}",
+  "unit": "input MB/s (min-of-iterations)",
+  "budget_ms": 5,
+  "best": null,
+  "backend": null,
+  "utf8_to_utf16": {{"icu": null, "simd128": null, "best": null}},
+  "utf16_to_utf8": {{"icu": null, "simd128": null, "best": null}},
+  "utf8_to_utf16_lossy": {{"simd128": null, "best": null}},
+  "utf16_to_utf8_lossy": {{"simd128": null, "best": null}},
+  "counts": {{
+    "utf16_len_from_utf8": {{"scalar": null, "simd128": null, "best": null}},
+    "utf8_len_from_utf16": {{"scalar": null, "simd128": null, "best": null}},
+    "count_utf8_code_points": {{"scalar": null, "simd128": null, "best": null}},
+    "count_utf16_code_points": {{"scalar": null, "simd128": null, "best": null}}
+  }},
+  "alloc_to_vec": {{
+    "utf8_to_utf16": {{"zeroed": null, "uninit": null, "exact": null}},
+    "utf16_to_utf8": {{"zeroed": null, "uninit": null, "exact": null}}
+  }},
+  "latin1": {{
+    "latin1_to_utf8": {{"scalar": null, "simd128": null, "best": null}},
+    "utf8_to_latin1": {{"scalar": null, "simd128": null, "best": null}},
+    "latin1_to_utf16": {{"scalar": null, "simd128": null, "best": null}},
+    "utf16_to_latin1": {{"scalar": null, "simd128": null, "best": null}}
+  }},
+  "parallel": {{
+    "corpus_bytes": null,
+    "utf8_to_utf16": {{{parallel_rows}}},
+    "utf16_to_utf8": {{{parallel_rows}}}
+  }}
+}}
+"#
+        )
+    }
+
+    #[test]
+    fn well_formed_v6_bench_passes() {
+        let src = minimal_bench(SCHEMA_V6, "\"simd128@1\": null, \"best@4\": null");
+        let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let src = minimal_bench("simdutf-rs-bench-v5", "\"simd128@1\": null, \"best@1\": null");
+        let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("schema must be"), "{d:?}");
+    }
+
+    #[test]
+    fn unknown_engine_row_is_rejected() {
+        let src = minimal_bench(SCHEMA_V6, "\"simd128@1\": null, \"best@1\": null")
+            .replace("\"icu\": null, \"simd128\": null", "\"typo\": null, \"simd128\": null");
+        let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("unknown row \"typo\"")), "{d:?}");
+        assert!(d.iter().any(|m| m.contains("missing row \"icu\"")), "{d:?}");
+    }
+
+    #[test]
+    fn malformed_parallel_cell_is_rejected() {
+        let src = minimal_bench(SCHEMA_V6, "\"simd128@3\": null, \"best@1\": null");
+        let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("simd128@3")), "{d:?}");
+        assert!(
+            d.iter().any(|m| m.contains("no rows for engine \"simd128\"")),
+            "{d:?}"
+        );
+    }
+
+    // -- the real tree -------------------------------------------------
+
+    #[test]
+    fn the_checked_in_tree_passes_the_full_lint() {
+        let root = repo_root();
+        let d = diags_of(|d| run_lint(&root, d));
+        assert!(d.is_empty(), "repo lint violations:\n{}", d.join("\n"));
+    }
+}
