@@ -16,6 +16,7 @@ fn run(workers: usize, requests: usize, corpora: &[Corpus]) -> (f64, f64) {
         workers,
         queue_depth: 1024,
         engine: EngineChoice::Simd { validate: true },
+        ..Default::default()
     })
     .expect("service");
     let started = Instant::now();
@@ -27,7 +28,7 @@ fn run(workers: usize, requests: usize, corpora: &[Corpus]) -> (f64, f64) {
         } else {
             Request::utf16(i as u64, corpus.utf16_prefix(8 * 1024).to_vec())
         };
-        pending.push(service.submit(req));
+        pending.push(service.submit(req).expect("admitted"));
     }
     for rx in pending {
         assert!(rx.recv().unwrap().ok());

@@ -68,7 +68,10 @@ fn main() {
         let engine = r.get_utf8(e.engine).expect("parallel entries resolve");
         let opts = ParallelOptions::with_threads(e.threads);
         let v = mbps(corpus.utf8.len(), budget, &|| {
-            engine.par_convert_to_vec(&corpus.utf8, opts).expect("tiled corpus is valid").len()
+            engine
+                .par_convert_to_vec(&corpus.utf8, opts.clone())
+                .expect("tiled corpus is valid")
+                .len()
         });
         println!("  {:>12}  {v:>8.0}", e.key);
     }
@@ -84,7 +87,10 @@ fn main() {
         let engine = r.get_utf16(e.engine).expect("parallel entries resolve");
         let opts = ParallelOptions::with_threads(e.threads);
         let v = mbps(corpus.utf16.len() * 2, budget, &|| {
-            engine.par_convert_to_vec(&corpus.utf16, opts).expect("tiled corpus is valid").len()
+            engine
+                .par_convert_to_vec(&corpus.utf16, opts.clone())
+                .expect("tiled corpus is valid")
+                .len()
         });
         println!("  {:>12}  {v:>8.0}", e.key);
     }
@@ -95,11 +101,17 @@ fn main() {
     println!("  {:>12}  {v:>8.0}", "best oneshot");
 
     println!("latin1_to_utf8 (input MB/s, ASCII-masked corpus):");
-    let kernels = r.latin1_entries()[3]; // `best`
+    // By key, not index: entry order is not a contract (index 3 is
+    // actually `simd512`).
+    let kernels = *r
+        .latin1_entries()
+        .iter()
+        .find(|k| k.key == "best")
+        .expect("registry has a best Latin-1 set");
     for threads in [1usize, 2, 4, 8] {
         let opts = ParallelOptions::with_threads(threads);
         let v = mbps(latin1.len(), budget, &|| {
-            par_latin1_to_utf8_vec(kernels, &latin1, opts).expect("latin1 is total").len()
+            par_latin1_to_utf8_vec(kernels, &latin1, opts.clone()).expect("latin1 is total").len()
         });
         println!("  {:>12}  {v:>8.0}", format!("best@{threads}"));
     }

@@ -26,6 +26,7 @@ fn main() {
         workers,
         queue_depth: 512,
         engine: EngineChoice::Simd { validate: true },
+        ..Default::default()
     })
     .expect("service start");
 
@@ -54,7 +55,7 @@ fn main() {
                 }
             }
         };
-        pending.push((i, service.submit(req)));
+        pending.push((i, service.submit(req).expect("admitted")));
     }
 
     let mut ok = 0u64;

@@ -52,11 +52,12 @@ fn main() {
         workers: 2,
         queue_depth: 64,
         engine: EngineChoice::Xla { artifacts_dir: artifacts.clone() },
+        ..Default::default()
     })
     .expect("service");
     let mut pending = Vec::new();
     for i in 0..16u64 {
-        pending.push(service.submit(Request::utf8(i, text.clone().into_bytes())));
+        pending.push(service.submit(Request::utf8(i, text.clone().into_bytes())).expect("admitted"));
     }
     for rx in pending {
         let resp = rx.recv().unwrap();

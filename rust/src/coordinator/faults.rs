@@ -1,0 +1,122 @@
+//! Deterministic fault injection for the chaos suite.
+//!
+//! Compiled only with the `chaos` cargo feature — release builds
+//! without it carry none of this code and `ServiceConfig` has no
+//! `faults` field, so the injection points are zero-cost, not merely
+//! disabled. A [`FaultPlan`] keys every fault on the worker pool's
+//! **dequeue sequence number** (the first job any worker pops is 1,
+//! the second 2, …, assigned under the queue lock), so a plan names
+//! exact, reproducible points in the service's execution rather than
+//! rolling dice: the chaos tests assert that counters reconcile with
+//! the *planned* fault counts.
+
+use std::time::Duration;
+
+/// A deterministic schedule of injected faults, carried by
+/// `ServiceConfig::faults` into every worker.
+///
+/// Sequence numbers are 1-based dequeue positions across the whole
+/// pool. A fault listed for sequence `n` fires exactly when the `n`-th
+/// popped job reaches that injection point.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Panic inside the conversion (under `catch_unwind`) for these
+    /// sequence numbers: exercises panic isolation — the caller must
+    /// get a `Fate::Panicked` response and the worker must survive.
+    pub panic_on: Vec<u64>,
+    /// Kill the worker thread outright (job in hand, reply channel
+    /// dropped) for these sequence numbers: exercises the supervisor
+    /// respawn path and the caller-notification guarantee.
+    pub abort_worker_on: Vec<u64>,
+    /// `(sequence, milliseconds)` pairs: sleep inside the conversion,
+    /// simulating a slow engine — exercises deadline expiry
+    /// mid-service and queue growth behind a stuck worker.
+    pub slow_on: Vec<(u64, u64)>,
+    /// Refuse the response allocation for these sequence numbers, as
+    /// if `try_reserve` failed: the caller gets a structured
+    /// `ErrorKind::OutputBuffer` error and the service steps down a
+    /// rung.
+    pub alloc_fail_on: Vec<u64>,
+    /// Milliseconds to stall *every* job between dequeue and the
+    /// deadline check — a blunt queue-stall knob for overload and
+    /// shed-policy scenarios (0 = no stall).
+    pub stall_dequeue_ms: u64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (same as `Default`).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Panic iff `seq` is on the panic schedule.
+    pub fn maybe_panic(&self, seq: u64) {
+        if self.panic_on.contains(&seq) {
+            panic!("chaos: injected panic at job {seq}");
+        }
+    }
+
+    /// True iff the worker should die with job `seq` in hand.
+    pub fn abort_worker(&self, seq: u64) -> bool {
+        self.abort_worker_on.contains(&seq)
+    }
+
+    /// Sleep if job `seq` is on the slow-conversion schedule.
+    pub fn slow_conversion(&self, seq: u64) {
+        if let Some(&(_, ms)) = self.slow_on.iter().find(|(s, _)| *s == seq) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    /// True iff the response allocation for job `seq` should be
+    /// refused.
+    pub fn alloc_fails(&self, seq: u64) -> bool {
+        self.alloc_fail_on.contains(&seq)
+    }
+
+    /// The between-dequeue-and-deadline-check stall, if configured.
+    pub fn stall_dequeue(&self) {
+        if self.stall_dequeue_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.stall_dequeue_ms));
+        }
+    }
+
+    /// Total faults this plan injects that consume a job's normal
+    /// completion (panics, worker aborts, allocation failures — not
+    /// slowdowns or stalls, which delay but do not divert). The chaos
+    /// suite reconciles service counters against this.
+    pub fn diverted_jobs(&self) -> usize {
+        self.panic_on.len() + self.abort_worker_on.len() + self.alloc_fail_on.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_fire_only_on_their_sequence() {
+        let plan = FaultPlan {
+            panic_on: vec![3],
+            abort_worker_on: vec![5],
+            alloc_fail_on: vec![7],
+            slow_on: vec![(2, 1)],
+            stall_dequeue_ms: 0,
+        };
+        plan.maybe_panic(1); // not 3: must not panic
+        assert!(!plan.abort_worker(3));
+        assert!(plan.abort_worker(5));
+        assert!(!plan.alloc_fails(5));
+        assert!(plan.alloc_fails(7));
+        plan.slow_conversion(9); // off-schedule: returns immediately
+        assert_eq!(plan.diverted_jobs(), 3);
+        assert_eq!(FaultPlan::none().diverted_jobs(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos: injected panic at job 4")]
+    fn scheduled_panic_fires() {
+        let plan = FaultPlan { panic_on: vec![4], ..FaultPlan::default() };
+        plan.maybe_panic(4);
+    }
+}

@@ -28,6 +28,23 @@ pub struct ServiceStats {
     pub latency_ns_total: AtomicU64,
     /// Maximum single-request latency in nanoseconds.
     pub latency_ns_max: AtomicU64,
+    /// Conversions that panicked and were isolated by `catch_unwind`
+    /// (the caller got a [`crate::coordinator::Fate::Panicked`]
+    /// response; the worker survived).
+    pub panics: AtomicU64,
+    /// Dead workers respawned by the supervisor (bounded by
+    /// `ServiceConfig::respawn_budget`).
+    pub respawns: AtomicU64,
+    /// Requests evicted (or refused admission) by the shed policies —
+    /// queue victims under `ShedOldest`/`Degrade` plus incoming
+    /// requests refused with `SubmitError::Shed`.
+    pub sheds: AtomicU64,
+    /// Requests whose deadline expired — at admission, at dequeue, or
+    /// mid-conversion via the cancellation token.
+    pub timeouts: AtomicU64,
+    /// Conversions served below the configured rung of the degradation
+    /// ladder (`Response::rung` ≠ `Rung::Configured`).
+    pub degraded: AtomicU64,
 }
 
 impl ServiceStats {
@@ -75,6 +92,11 @@ impl ServiceStats {
                 Duration::ZERO
             },
             max_latency: Duration::from_nanos(self.latency_ns_max.load(Ordering::Relaxed)),
+            panics: self.panics.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
         }
     }
 }
@@ -104,6 +126,18 @@ pub struct StatsSnapshot {
     pub mean_latency: Duration,
     /// Worst per-request service latency seen.
     pub max_latency: Duration,
+    /// Conversions that panicked and were isolated (see
+    /// [`ServiceStats::panics`]).
+    pub panics: u64,
+    /// Dead workers respawned by the supervisor.
+    pub respawns: u64,
+    /// Requests shed by the overload policies (victims plus refused
+    /// newcomers).
+    pub sheds: u64,
+    /// Requests whose deadline expired at any lifecycle point.
+    pub timeouts: u64,
+    /// Conversions served on a degraded rung of the ladder.
+    pub degraded: u64,
 }
 
 impl std::fmt::Display for StatsSnapshot {
@@ -111,7 +145,8 @@ impl std::fmt::Display for StatsSnapshot {
         write!(
             f,
             "requests={} completed={} rejected={} invalid={} bytes_in={} bytes_out={} \
-             chars={} replacements={} mean_latency={:?} max_latency={:?}",
+             chars={} replacements={} mean_latency={:?} max_latency={:?} \
+             panics={} respawns={} sheds={} timeouts={} degraded={}",
             self.requests,
             self.completed,
             self.rejected,
@@ -122,6 +157,11 @@ impl std::fmt::Display for StatsSnapshot {
             self.replacements,
             self.mean_latency,
             self.max_latency,
+            self.panics,
+            self.respawns,
+            self.sheds,
+            self.timeouts,
+            self.degraded,
         )
     }
 }
@@ -143,5 +183,25 @@ mod tests {
         assert_eq!(snap.chars, 100);
         assert_eq!(snap.mean_latency, Duration::from_micros(20));
         assert_eq!(snap.max_latency, Duration::from_micros(30));
+    }
+
+    #[test]
+    fn resilience_counters_flow_into_snapshot_and_display() {
+        let s = ServiceStats::default();
+        s.panics.fetch_add(2, Ordering::Relaxed);
+        s.respawns.fetch_add(1, Ordering::Relaxed);
+        s.sheds.fetch_add(5, Ordering::Relaxed);
+        s.timeouts.fetch_add(4, Ordering::Relaxed);
+        s.degraded.fetch_add(3, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.panics, 2);
+        assert_eq!(snap.respawns, 1);
+        assert_eq!(snap.sheds, 5);
+        assert_eq!(snap.timeouts, 4);
+        assert_eq!(snap.degraded, 3);
+        let line = snap.to_string();
+        for field in ["panics=2", "respawns=1", "sheds=5", "timeouts=4", "degraded=3"] {
+            assert!(line.contains(field), "missing {field} in {line}");
+        }
     }
 }

@@ -1,29 +1,58 @@
-//! L3 coordinator: a streaming transcoding service.
+//! L3 coordinator: a fault-tolerant streaming transcoding service.
 //!
 //! The deployable shape of the paper's contribution — an ingestion
 //! sidecar that normalizes text encodings at wire speed. Architecture:
 //!
 //! ```text
-//!  submit() ──► bounded queue ──► worker pool ──► responses
-//!     │        (backpressure)      │   │   │
-//!     └─ rejects when full         └── engine: SIMD / scalar / XLA batch
+//!  submit() ──► admission ──► bounded queue ──► worker pool ──► responses
+//!     │         control       (VecDeque +       │   │   │          │
+//!     │         (deadline,     2 condvars)      └── engine ladder: │
+//!     │         overload                            best → simd256 │
+//!     │         policy)       supervisor ──────►   → simd128 →    │
+//!     │            │          (respawns dead       scalar one-shot│
+//!     └─ typed     └─ shed victims answered         workers)      │
+//!        SubmitError   with Fate::Shed          catch_unwind ─────┘
 //! ```
 //!
-//! * **Router / queue** — a bounded MPMC queue (`std::sync::mpsc` behind
-//!   a mutex on the consumer side); `submit` blocks when the queue is
-//!   full, `try_submit` fails fast — explicit backpressure either way.
-//! * **Worker pool** — OS threads, each owning an engine instance.
-//!   (The offline crate set has no tokio; transcoding is CPU-bound, so a
-//!   thread-per-worker pool is the right shape anyway.)
+//! * **Admission control** — one path behind both `submit` (blocking,
+//!   bounded by the request [`Deadline`]) and `try_submit` (fail-fast):
+//!   expired deadlines, shutdown, full queues and shed decisions all
+//!   come back as typed [`SubmitError`]s. The queue is a hand-rolled
+//!   bounded `VecDeque` + condvar pair because [`OverloadPolicy`]
+//!   needs interior access (evicting a queued victim) that no channel
+//!   offers.
+//! * **Worker pool** — OS threads, each owning an engine instance per
+//!   rung of the degradation ladder; every job runs under
+//!   `catch_unwind`, so a panicking conversion answers its caller
+//!   ([`Fate::Panicked`]) instead of poisoning the pool. A supervisor
+//!   respawns dead workers up to `ServiceConfig::respawn_budget`.
+//! * **Degradation ladder** — under overload ([`OverloadPolicy::Degrade`]),
+//!   panic streaks, or memory pressure, the service steps
+//!   `best → simd256 → simd128 → scalar`, forcing one-shot conversion
+//!   (no parallel fan-out); the [`Rung`] is recorded on every
+//!   [`Response`] and outputs stay bit-identical across rungs.
 //! * **Engines** — any [`crate::transcode`] implementation, or the
 //!   [`crate::runtime::XlaEngine`] batch path, selected per service.
 //! * **Metrics** — atomic counters + latency aggregation, exported via
-//!   [`ServiceStats`].
+//!   [`ServiceStats`] (including `panics`, `respawns`, `sheds`,
+//!   `timeouts`, `degraded`).
+//! * **Fault injection** — with the `chaos` cargo feature, a
+//!   [`FaultPlan`](faults::FaultPlan) injects panics, worker deaths,
+//!   stalls and allocation failures at deterministic dequeue sequence
+//!   numbers; `rust/tests/chaos.rs` proves the exactly-one-response
+//!   invariant under it. Without the feature the injection points do
+//!   not exist.
 
+#[cfg(feature = "chaos")]
+pub mod faults;
 mod metrics;
+mod resilience;
 mod service;
 
+#[cfg(feature = "chaos")]
+pub use faults::FaultPlan;
 pub use metrics::{ServiceStats, StatsSnapshot};
+pub use resilience::{Deadline, Fate, OverloadPolicy, Priority, Rung};
 pub use service::{
     Direction, EngineChoice, Output, Payload, Request, Response, ServiceConfig, ServiceError,
     SubmitError, TranscodeService,

@@ -1,0 +1,297 @@
+//! Resilience policy types: deadlines, priorities, overload policies,
+//! degradation rungs and response fates.
+//!
+//! These are the *vocabulary* of the fault-tolerant service core — the
+//! mechanisms that consume them (admission control, the worker
+//! supervisor, the degradation ladder) live in
+//! [`super::TranscodeService`]. Everything here is plain data: `Copy`,
+//! deterministic, trivially testable.
+
+use std::time::{Duration, Instant};
+
+/// A per-request completion deadline.
+///
+/// `Deadline::none()` (the default) never expires. A finite deadline is
+/// enforced at three points in the request lifecycle:
+///
+/// 1. **Admission** — an already-expired request is refused with
+///    [`super::SubmitError::Timeout`]; a blocking
+///    [`super::TranscodeService::submit`] waits for queue space at most
+///    until the deadline.
+/// 2. **Dequeue** — a worker that pops an expired request answers it
+///    with a [`Fate::TimedOut`] response instead of converting (never a
+///    silent drop).
+/// 3. **Conversion** — oversized payloads route through the parallel
+///    pipeline with a [`crate::parallel::CancelToken`] carrying the
+///    deadline, so expiry is noticed between chunks mid-conversion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Deadline(Option<Instant>);
+
+impl Deadline {
+    /// No deadline: the request waits and runs as long as it takes.
+    pub const fn none() -> Deadline {
+        Deadline(None)
+    }
+
+    /// A deadline at the absolute instant `at`.
+    pub const fn at(at: Instant) -> Deadline {
+        Deadline(Some(at))
+    }
+
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline(Some(Instant::now() + budget))
+    }
+
+    /// True iff the deadline exists and has passed.
+    pub fn expired(&self) -> bool {
+        matches!(self.0, Some(at) if Instant::now() >= at)
+    }
+
+    /// Time left before expiry: `None` for no deadline,
+    /// `Some(Duration::ZERO)` once expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.0.map(|at| at.saturating_duration_since(Instant::now()))
+    }
+
+    /// The absolute expiry instant, if any.
+    pub fn instant(&self) -> Option<Instant> {
+        self.0
+    }
+}
+
+/// Request priority for overload decisions: under
+/// [`OverloadPolicy::ShedOldest`] the victim is the lowest-priority,
+/// oldest queued request — a `High` request is never shed to admit a
+/// `Normal` one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Shed first (bulk / background traffic).
+    Low,
+    /// The default.
+    #[default]
+    Normal,
+    /// Shed last (interactive / latency-sensitive traffic).
+    High,
+}
+
+/// What the service does when a request arrives and the bounded queue
+/// is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OverloadPolicy {
+    /// Refuse the *incoming* request:
+    /// [`super::TranscodeService::try_submit`] fails fast with
+    /// [`super::SubmitError::Full`]; the blocking
+    /// [`super::TranscodeService::submit`] waits for space (bounded by
+    /// the request deadline). The seed behavior.
+    #[default]
+    Reject,
+    /// Evict a queued victim to admit the newcomer: the lowest-priority,
+    /// oldest queued request with priority not above the incoming one is
+    /// answered with a [`Fate::Shed`] response and its slot is reused.
+    /// If every queued request outranks the newcomer, the newcomer
+    /// itself is shed ([`super::SubmitError::Shed`]).
+    ShedOldest,
+    /// [`OverloadPolicy::ShedOldest`], plus each overload event raises
+    /// the service's degradation level one rung (see [`Rung`]), trading
+    /// per-request cost for queue drain rate. The level decays back to
+    /// [`Rung::Configured`] as the queue recovers.
+    Degrade,
+}
+
+impl OverloadPolicy {
+    /// Stable lower-kebab name (CLI flag values, bench-json cells).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OverloadPolicy::Reject => "reject",
+            OverloadPolicy::ShedOldest => "shed-oldest",
+            OverloadPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+impl std::str::FromStr for OverloadPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<OverloadPolicy, String> {
+        match s {
+            "reject" => Ok(OverloadPolicy::Reject),
+            "shed" | "shed-oldest" => Ok(OverloadPolicy::ShedOldest),
+            "degrade" => Ok(OverloadPolicy::Degrade),
+            other => Err(format!(
+                "unknown overload policy {other:?} (use reject|shed|degrade)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for OverloadPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The graceful-degradation ladder. Every rung below
+/// [`Rung::Configured`] swaps the worker's engines for a narrower —
+/// cheaper to schedule, lower peak-memory — tier, and forces the
+/// one-shot path (no parallel fan-out) regardless of payload size. All
+/// rungs are *validating* engines, so outputs on any rung are
+/// bit-identical to one-shot `best` (the chaos suite holds that
+/// invariant); only throughput degrades.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Rung {
+    /// The engine the service was configured with, parallel routing
+    /// included. No degradation.
+    #[default]
+    Configured,
+    /// The 256-bit width-pinned engines, one-shot only.
+    Simd256,
+    /// The 128-bit width-pinned engines, one-shot only.
+    Simd128,
+    /// The scalar baseline (`icu` engines, `scalar` Latin-1 kernels),
+    /// one-shot only — the floor.
+    Scalar,
+}
+
+impl Rung {
+    /// All rungs, best to worst.
+    pub const LADDER: [Rung; 4] = [Rung::Configured, Rung::Simd256, Rung::Simd128, Rung::Scalar];
+
+    /// The rung for a shared degradation level counter (saturating: any
+    /// level ≥ 3 is the scalar floor).
+    pub fn from_level(level: u32) -> Rung {
+        match level {
+            0 => Rung::Configured,
+            1 => Rung::Simd256,
+            2 => Rung::Simd128,
+            _ => Rung::Scalar,
+        }
+    }
+
+    /// The level this rung sits at (inverse of [`Rung::from_level`]).
+    pub fn level(self) -> u32 {
+        match self {
+            Rung::Configured => 0,
+            Rung::Simd256 => 1,
+            Rung::Simd128 => 2,
+            Rung::Scalar => 3,
+        }
+    }
+
+    /// Stable lower-kebab name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Rung::Configured => "configured",
+            Rung::Simd256 => "simd256",
+            Rung::Simd128 => "simd128",
+            Rung::Scalar => "scalar",
+        }
+    }
+}
+
+impl std::fmt::Display for Rung {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How a request's lifecycle ended — the typed discriminator on every
+/// [`super::Response`]. The service's core invariant is that every
+/// admitted request gets **exactly one** response, and the fate says
+/// which path produced it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Fate {
+    /// The conversion ran: `result` is the engine's output or its
+    /// structured encoding error.
+    #[default]
+    Completed,
+    /// The request was refused at admission (full queue under
+    /// [`OverloadPolicy::Reject`], or a shut-down service). Only
+    /// synthesized by [`super::TranscodeService::transcode`] from a
+    /// [`super::SubmitError`]; queued requests are never rejected.
+    Rejected,
+    /// Evicted from the queue by the overload policy before running.
+    Shed,
+    /// The deadline expired before or during the conversion.
+    TimedOut,
+    /// The conversion panicked (or its worker died); the panic was
+    /// isolated and the pool survived.
+    Panicked,
+}
+
+impl Fate {
+    /// Stable lower-kebab name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Fate::Completed => "completed",
+            Fate::Rejected => "rejected",
+            Fate::Shed => "shed",
+            Fate::TimedOut => "timed-out",
+            Fate::Panicked => "panicked",
+        }
+    }
+}
+
+impl std::fmt::Display for Fate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expiry_and_remaining() {
+        let none = Deadline::none();
+        assert!(!none.expired());
+        assert_eq!(none.remaining(), None);
+        assert_eq!(none.instant(), None);
+
+        let future = Deadline::after(Duration::from_secs(3600));
+        assert!(!future.expired());
+        assert!(future.remaining().unwrap() > Duration::from_secs(3500));
+
+        let past = Deadline::at(Instant::now() - Duration::from_millis(1));
+        assert!(past.expired());
+        assert_eq!(past.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn priority_orders_for_shedding() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn overload_policy_parses_cli_spellings() {
+        assert_eq!("reject".parse::<OverloadPolicy>().unwrap(), OverloadPolicy::Reject);
+        assert_eq!("shed".parse::<OverloadPolicy>().unwrap(), OverloadPolicy::ShedOldest);
+        assert_eq!("shed-oldest".parse::<OverloadPolicy>().unwrap(), OverloadPolicy::ShedOldest);
+        assert_eq!("degrade".parse::<OverloadPolicy>().unwrap(), OverloadPolicy::Degrade);
+        assert!("chaos".parse::<OverloadPolicy>().is_err());
+        assert_eq!(OverloadPolicy::ShedOldest.to_string(), "shed-oldest");
+    }
+
+    #[test]
+    fn rung_level_round_trips_and_saturates() {
+        for rung in Rung::LADDER {
+            assert_eq!(Rung::from_level(rung.level()), rung);
+        }
+        assert_eq!(Rung::from_level(17), Rung::Scalar);
+        assert!(Rung::Configured < Rung::Scalar, "ladder orders best to worst");
+        assert_eq!(Rung::Simd128.to_string(), "simd128");
+    }
+
+    #[test]
+    fn fates_name_themselves() {
+        for fate in
+            [Fate::Completed, Fate::Rejected, Fate::Shed, Fate::TimedOut, Fate::Panicked]
+        {
+            assert!(!fate.as_str().is_empty());
+        }
+        assert_eq!(Fate::TimedOut.to_string(), "timed-out");
+    }
+}

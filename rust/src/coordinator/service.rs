@@ -1,18 +1,41 @@
-//! The transcoding service: bounded queue, worker pool, engines.
+//! The transcoding service: bounded admission queue, supervised worker
+//! pool, deadlines, overload policies and the degradation ladder.
+//!
+//! The queue is a hand-rolled `Mutex<VecDeque>` + two condvars rather
+//! than an mpsc channel because the overload policies need *interior*
+//! access to the queue: [`OverloadPolicy::ShedOldest`] evicts a queued
+//! victim, which no channel API offers. The service's core invariant:
+//! **every admitted request gets exactly one [`Response`], and every
+//! refused request gets exactly one typed [`SubmitError`]** — never a
+//! silent drop, never a panic in the caller's lap.
 
+#[cfg(feature = "chaos")]
+use super::faults::FaultPlan;
 use super::metrics::ServiceStats;
+use super::resilience::{Deadline, Fate, OverloadPolicy, Priority, Rung};
 use crate::engine::Registry;
 use crate::parallel::{
-    par_latin1_to_utf8_vec, ParallelOptions, ParallelUtf16ToUtf8, ParallelUtf8ToUtf16,
+    par_latin1_to_utf8_vec, CancelToken, ParallelOptions, ParallelUtf16ToUtf8, ParallelUtf8ToUtf16,
 };
 use crate::runtime::XlaEngine;
 use crate::transcode::{ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Consecutive panics on one worker before the service steps down a
+/// rung of the degradation ladder.
+const PANIC_ESCALATE: u32 = 3;
+/// Consecutive successful conversions (with the queue under half full)
+/// before a degraded service climbs back up one rung.
+const RECOVERY_WINDOW: u32 = 32;
+/// How often the supervisor polls the worker pool for dead threads.
+const SUPERVISOR_POLL: Duration = Duration::from_millis(10);
 
 /// Transcoding direction of a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,7 +59,11 @@ pub enum EngineChoice {
     /// (or `best-nv`) alias rather than naming a width. Use
     /// `Named("simd128")` / `Named("simd256")` / `Named("simd512")` to
     /// pin a width for A/B comparisons.
-    Simd { validate: bool },
+    Simd {
+        /// Validate input (reject/replace invalid sequences) or run the
+        /// faster non-validating variants.
+        validate: bool,
+    },
     /// The ICU-like scalar baseline (for A/B service comparisons).
     Scalar,
     /// Any engine from the [`Registry`], by key (e.g. `"llvm"`,
@@ -44,7 +71,10 @@ pub enum EngineChoice {
     /// fall back to `"ours"`.
     Named(String),
     /// The AOT-compiled JAX/Pallas batch path via PJRT.
-    Xla { artifacts_dir: PathBuf },
+    Xla {
+        /// Directory holding the compiled `*.hlo.txt` artifacts.
+        artifacts_dir: PathBuf,
+    },
 }
 
 /// A transcoding request: one payload, direction implied by encoding.
@@ -68,7 +98,7 @@ pub enum Payload {
 }
 
 /// One transcoding request: a payload (which implies the direction)
-/// plus the conversion policy.
+/// plus the conversion policy, deadline and priority.
 pub struct Request {
     /// Caller-chosen id, echoed in the [`Response`].
     pub id: u64,
@@ -81,39 +111,67 @@ pub struct Request {
     /// non-validating engine — `Simd { validate: false }`, `"ours-nv"` —
     /// the conversion degrades to the engine's best effort.)
     pub lossy: bool,
+    /// Completion deadline, enforced at admission, at dequeue, and
+    /// between parallel chunks mid-conversion. Default: none.
+    pub deadline: Deadline,
+    /// Priority for overload decisions (see [`OverloadPolicy`]).
+    /// Default: [`Priority::Normal`].
+    pub priority: Priority,
 }
 
 impl Request {
     /// A strict UTF-8 → UTF-16 request.
     pub fn utf8(id: u64, data: Vec<u8>) -> Request {
-        Request { id, payload: Payload::Utf8(data), lossy: false }
+        Request::new(id, Payload::Utf8(data), false)
     }
 
     /// A strict UTF-16 → UTF-8 request.
     pub fn utf16(id: u64, data: Vec<u16>) -> Request {
-        Request { id, payload: Payload::Utf16(data), lossy: false }
+        Request::new(id, Payload::Utf16(data), false)
     }
 
     /// A lossy UTF-8 → UTF-16 request (WHATWG replacement policy).
     pub fn utf8_lossy(id: u64, data: Vec<u8>) -> Request {
-        Request { id, payload: Payload::Utf8(data), lossy: true }
+        Request::new(id, Payload::Utf8(data), true)
     }
 
     /// A lossy UTF-16 → UTF-8 request (one U+FFFD per unpaired
     /// surrogate).
     pub fn utf16_lossy(id: u64, data: Vec<u16>) -> Request {
-        Request { id, payload: Payload::Utf16(data), lossy: true }
+        Request::new(id, Payload::Utf16(data), true)
     }
 
     /// A Latin-1 → UTF-8 request (total — cannot fail on content).
     pub fn latin1(id: u64, data: Vec<u8>) -> Request {
-        Request { id, payload: Payload::Latin1(data), lossy: false }
+        Request::new(id, Payload::Latin1(data), false)
     }
 
     /// A strict UTF-8 → Latin-1 request (fails on code points above
     /// `U+00FF`).
     pub fn utf8_to_latin1(id: u64, data: Vec<u8>) -> Request {
-        Request { id, payload: Payload::Utf8ToLatin1(data), lossy: false }
+        Request::new(id, Payload::Utf8ToLatin1(data), false)
+    }
+
+    fn new(id: u64, payload: Payload, lossy: bool) -> Request {
+        Request { id, payload, lossy, deadline: Deadline::none(), priority: Priority::default() }
+    }
+
+    /// Give the request a deadline `budget` from now (builder style).
+    pub fn with_deadline(mut self, budget: Duration) -> Request {
+        self.deadline = Deadline::after(budget);
+        self
+    }
+
+    /// Give the request an absolute deadline (builder style).
+    pub fn with_deadline_at(mut self, at: Instant) -> Request {
+        self.deadline = Deadline::at(at);
+        self
+    }
+
+    /// Set the request's overload priority (builder style).
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
+        self
     }
 
     /// The conversion this request asks for (implied by the payload).
@@ -147,7 +205,8 @@ pub enum Output {
 }
 
 /// A transcoding response: the output, or the structured error (kind +
-/// input position) the engine reported.
+/// input position) the engine reported, plus how the request's
+/// lifecycle ended ([`Fate`]) and the degradation rung it ran on.
 #[derive(Debug)]
 pub struct Response {
     /// The id of the request this answers.
@@ -157,9 +216,29 @@ pub struct Response {
     /// U+FFFD replacements in the output (always 0 for strict requests;
     /// for lossy requests, 0 iff the input was valid).
     pub replacements: usize,
+    /// The rung of the degradation ladder the conversion ran on
+    /// ([`Rung::Configured`] unless the service was degraded).
+    pub rung: Rung,
+    /// How the lifecycle ended. [`Fate::Completed`] means the engine
+    /// ran (successfully or with a structured encoding error); every
+    /// other fate means the conversion never finished and `result` is a
+    /// synthesized [`ErrorKind::Other`] error.
+    pub fate: Fate,
 }
 
 impl Response {
+    /// A synthesized non-`Completed` response (shed, timed out,
+    /// panicked, rejected): an `ErrorKind::Other` error, no output.
+    fn failure(id: u64, fate: Fate, rung: Rung) -> Response {
+        Response {
+            id,
+            result: Err(TranscodeError::new(ErrorKind::Other, 0)),
+            replacements: 0,
+            rung,
+            fate,
+        }
+    }
+
     /// True iff the input validated and was transcoded.
     pub fn ok(&self) -> bool {
         self.result.is_ok()
@@ -220,22 +299,32 @@ impl Response {
     }
 }
 
-/// Why [`TranscodeService::try_submit`] returned the request to the
-/// caller instead of queueing it. Either way the request comes back
-/// unconsumed, so the caller can retry, reroute or drop it.
+/// Why the service returned the request to the caller instead of
+/// queueing it. Either way the request comes back unconsumed, so the
+/// caller can retry, reroute or drop it.
 pub enum SubmitError {
     /// The bounded queue is full — load was shed (backpressure).
     Full(Request),
-    /// The worker channel is disconnected (the service has shut down or
-    /// every worker exited). Retrying on this handle cannot succeed.
+    /// The service has shut down (or started with zero workers).
+    /// Retrying on this handle cannot succeed.
     Shutdown(Request),
+    /// The request's deadline expired before it could be admitted
+    /// (already expired on arrival, or a blocking
+    /// [`TranscodeService::submit`] waited for queue space past it).
+    Timeout(Request),
+    /// The overload policy shed the *incoming* request: every queued
+    /// request outranks it (see [`OverloadPolicy::ShedOldest`]).
+    Shed(Request),
 }
 
 impl SubmitError {
     /// Recover the request regardless of the reason.
     pub fn into_request(self) -> Request {
         match self {
-            SubmitError::Full(r) | SubmitError::Shutdown(r) => r,
+            SubmitError::Full(r)
+            | SubmitError::Shutdown(r)
+            | SubmitError::Timeout(r)
+            | SubmitError::Shed(r) => r,
         }
     }
 }
@@ -245,9 +334,32 @@ impl std::fmt::Debug for SubmitError {
         match self {
             SubmitError::Full(r) => write!(f, "Full(request {})", r.id),
             SubmitError::Shutdown(r) => write!(f, "Shutdown(request {})", r.id),
+            SubmitError::Timeout(r) => write!(f, "Timeout(request {})", r.id),
+            SubmitError::Shed(r) => write!(f, "Shed(request {})", r.id),
         }
     }
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full(r) => {
+                write!(f, "queue full: request {} shed by backpressure", r.id)
+            }
+            SubmitError::Shutdown(r) => {
+                write!(f, "service shut down: request {} not accepted", r.id)
+            }
+            SubmitError::Timeout(r) => {
+                write!(f, "deadline expired: request {} timed out before admission", r.id)
+            }
+            SubmitError::Shed(r) => {
+                write!(f, "overloaded: request {} shed by policy", r.id)
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Service startup failure.
 #[derive(Debug)]
@@ -276,8 +388,23 @@ pub struct ServiceConfig {
     /// 8 MiB. `usize::MAX` disables parallel routing.
     pub parallel_threshold: usize,
     /// Executor knobs for oversized requests (thread cap + minimum
-    /// chunk size — see [`ParallelOptions`]).
+    /// chunk size — see [`ParallelOptions`]). The service threads the
+    /// request deadline into `parallel.cancel` itself.
     pub parallel: ParallelOptions,
+    /// What to do when a request arrives and the queue is full.
+    pub overload: OverloadPolicy,
+    /// How many dead workers the supervisor may respawn over the
+    /// service's lifetime (0 disables supervision). Default: 4.
+    pub respawn_budget: usize,
+    /// Preflight response allocations with `try_reserve` and answer
+    /// with [`ErrorKind::OutputBuffer`] (stepping the service down one
+    /// rung) instead of aborting on OOM. Advisory — the conversion
+    /// itself still allocates infallibly. Default: off.
+    pub fallible_alloc: bool,
+    /// Deterministic fault injection for the chaos suite (compiled only
+    /// with the `chaos` cargo feature; zero-cost otherwise).
+    #[cfg(feature = "chaos")]
+    pub faults: FaultPlan,
 }
 
 impl Default for ServiceConfig {
@@ -288,19 +415,85 @@ impl Default for ServiceConfig {
             engine: EngineChoice::Simd { validate: true },
             parallel_threshold: 8 << 20,
             parallel: ParallelOptions::default(),
+            overload: OverloadPolicy::default(),
+            respawn_budget: 4,
+            fallible_alloc: false,
+            #[cfg(feature = "chaos")]
+            faults: FaultPlan::default(),
         }
     }
 }
 
-enum Job {
-    Work(Request, Sender<Response>),
-    Shutdown,
+/// One queued unit of work: the request plus the caller's reply
+/// channel. Dropping a `Job` drops the `Sender`, which errors the
+/// caller's `recv()` — a dropped job always *notifies*.
+struct Job {
+    request: Request,
+    reply: Sender<Response>,
+}
+
+/// The queue proper, guarded by [`Shared::state`].
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// Accepting new requests? `false` once shutdown begins (or for a
+    /// zero-worker service, from the start).
+    open: bool,
+    /// Workers exit when the queue is empty and this is set.
+    draining: bool,
+}
+
+/// Everything the submitters, workers and supervisor share.
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Signaled when a job is pushed (workers wait here).
+    not_empty: Condvar,
+    /// Signaled when a job is popped (blocking submitters wait here).
+    not_full: Condvar,
+    depth: usize,
+    overload: OverloadPolicy,
+    /// Current degradation level (see [`Rung::from_level`]).
+    degrade: AtomicU32,
+    /// Consecutive calm completions since the last degradation event.
+    recovery: AtomicU32,
+    /// Dequeue sequence number — the deterministic clock the chaos
+    /// fault plans key on (first job popped is 1).
+    seq: AtomicU64,
+}
+
+/// Raise the degradation level one rung (saturating at the scalar
+/// floor) and restart the recovery window.
+fn raise_degrade(shared: &Shared) {
+    let _ = shared
+        .degrade
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |l| (l < 3).then_some(l + 1));
+    shared.recovery.store(0, Ordering::Relaxed);
+}
+
+/// Called after each successful conversion: once [`RECOVERY_WINDOW`]
+/// consecutive completions happen with the queue under half full, climb
+/// back up one rung.
+fn maybe_recover(shared: &Shared) {
+    if shared.degrade.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    let queued = shared.state.lock().expect("queue lock").jobs.len();
+    if queued * 2 >= shared.depth.max(1) {
+        shared.recovery.store(0, Ordering::Relaxed);
+        return;
+    }
+    if shared.recovery.fetch_add(1, Ordering::Relaxed) + 1 >= RECOVERY_WINDOW {
+        shared.recovery.store(0, Ordering::Relaxed);
+        let _ = shared
+            .degrade
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |l| l.checked_sub(1));
+    }
 }
 
 /// The streaming transcoding service.
 pub struct TranscodeService {
-    tx: SyncSender<Job>,
-    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    supervisor: Option<JoinHandle<()>>,
     stats: Arc<ServiceStats>,
 }
 
@@ -337,8 +530,8 @@ impl TranscodeService {
             }
             EngineChoice::Xla { artifacts_dir } => {
                 // Probe the load up front: a worker that cannot load its
-                // engine exits, and a service with zero consumers would
-                // deadlock the first blocking submit(). In stub builds
+                // engine exits, and a service whose whole pool died at
+                // startup would bounce every request. In stub builds
                 // (no --cfg pjrt_runtime) this fails immediately. In real
                 // PJRT builds the probe costs one extra graph compile at
                 // startup; workers still load their own engine because
@@ -349,59 +542,196 @@ impl TranscodeService {
             }
             _ => {}
         }
-        let (tx, rx) = sync_channel::<Job>(config.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::with_capacity(config.queue_depth.min(4096)),
+                // A zero-worker service is born shut down: nothing
+                // could ever answer, so admission must refuse
+                // (typed), not enqueue into the void.
+                open: config.workers > 0,
+                draining: config.workers == 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: config.queue_depth,
+            overload: config.overload,
+            degrade: AtomicU32::new(0),
+            recovery: AtomicU32::new(0),
+            seq: AtomicU64::new(0),
+        });
         let stats = Arc::new(ServiceStats::default());
-        let mut workers = Vec::with_capacity(config.workers);
+        let mut handles = Vec::with_capacity(config.workers);
         for w in 0..config.workers {
-            let rx = Arc::clone(&rx);
+            match spawn_worker(w, &shared, &stats, &config) {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // Unwind the part-started pool before reporting.
+                    {
+                        let mut state = shared.state.lock().expect("queue lock");
+                        state.open = false;
+                        state.draining = true;
+                    }
+                    shared.not_empty.notify_all();
+                    for handle in handles {
+                        let _ = handle.join();
+                    }
+                    return Err(ServiceError(format!("spawn worker: {e}")));
+                }
+            }
+        }
+        let workers = Arc::new(Mutex::new(handles));
+        let supervisor = if config.workers > 0 && config.respawn_budget > 0 {
+            let shared = Arc::clone(&shared);
             let stats = Arc::clone(&stats);
-            let cfg = config.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("transcode-worker-{w}"))
-                .spawn(move || worker_loop(rx, stats, cfg))
-                .map_err(|e| ServiceError(format!("spawn worker: {e}")))?;
-            workers.push(handle);
-        }
-        Ok(TranscodeService { tx, workers, stats })
+            let workers = Arc::clone(&workers);
+            let config = config.clone();
+            std::thread::Builder::new()
+                .name("transcode-supervisor".into())
+                .spawn(move || supervisor_loop(shared, workers, stats, config))
+                .ok()
+        } else {
+            None
+        };
+        Ok(TranscodeService { shared, workers, supervisor, stats })
     }
 
-    /// Submit a request, blocking while the queue is full (backpressure).
-    /// The response arrives on the returned channel.
-    pub fn submit(&self, request: Request) -> Receiver<Response> {
-        let (tx, rx) = std::sync::mpsc::channel();
+    /// The single admission path behind [`TranscodeService::submit`]
+    /// and [`TranscodeService::try_submit`]: deadline check, open
+    /// check, then either enqueue, wait (blocking mode under
+    /// [`OverloadPolicy::Reject`], bounded by the deadline), or apply
+    /// the overload policy.
+    fn admit(&self, request: Request, block: bool) -> Result<Receiver<Response>, SubmitError> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(Job::Work(request, tx)).expect("service alive");
-        rx
+        if request.deadline.expired() {
+            self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Timeout(request));
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut state = self.shared.state.lock().expect("queue lock");
+        loop {
+            if !state.open {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Shutdown(request));
+            }
+            if request.deadline.expired() {
+                self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Timeout(request));
+            }
+            if state.jobs.len() < self.shared.depth {
+                state.jobs.push_back(Job { request, reply: tx });
+                drop(state);
+                self.shared.not_empty.notify_one();
+                return Ok(rx);
+            }
+            match self.shared.overload {
+                OverloadPolicy::Reject if block => {
+                    // Wait for a pop (or shutdown), at most until the
+                    // deadline; the loop re-checks everything on wake.
+                    state = match request.deadline.instant() {
+                        Some(at) => {
+                            let wait = at.saturating_duration_since(Instant::now());
+                            self.shared
+                                .not_full
+                                .wait_timeout(state, wait)
+                                .expect("queue lock")
+                                .0
+                        }
+                        None => self.shared.not_full.wait(state).expect("queue lock"),
+                    };
+                }
+                OverloadPolicy::Reject => {
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(SubmitError::Full(request));
+                }
+                policy @ (OverloadPolicy::ShedOldest | OverloadPolicy::Degrade) => {
+                    if policy == OverloadPolicy::Degrade {
+                        raise_degrade(&self.shared);
+                    }
+                    // Victim: the lowest-priority, oldest queued request
+                    // not outranking the newcomer (front = oldest).
+                    let victim_at = state
+                        .jobs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, j)| j.request.priority <= request.priority)
+                        .min_by_key(|(i, j)| (j.request.priority, *i))
+                        .map(|(i, _)| i);
+                    match victim_at {
+                        Some(i) => {
+                            let victim = state.jobs.remove(i).expect("victim index in range");
+                            state.jobs.push_back(Job { request, reply: tx });
+                            drop(state);
+                            self.shared.not_empty.notify_one();
+                            self.stats.sheds.fetch_add(1, Ordering::Relaxed);
+                            let _ = victim.reply.send(Response::failure(
+                                victim.request.id,
+                                Fate::Shed,
+                                Rung::Configured,
+                            ));
+                            return Ok(rx);
+                        }
+                        None => {
+                            self.stats.sheds.fetch_add(1, Ordering::Relaxed);
+                            return Err(SubmitError::Shed(request));
+                        }
+                    }
+                }
+            }
+        }
     }
 
-    /// Submit without blocking; `Err` returns the request when the queue
-    /// is full (the caller sheds load) or when the service has shut
-    /// down — never panics under load-shed.
+    /// Submit a request, blocking while the queue is full
+    /// (backpressure) — at most until the request's deadline. The
+    /// response arrives on the returned channel. Unlike the historical
+    /// version this cannot block forever on a dead service or panic on
+    /// a disconnected channel: shutdown and expiry come back as typed
+    /// [`SubmitError`]s.
+    pub fn submit(&self, request: Request) -> Result<Receiver<Response>, SubmitError> {
+        self.admit(request, true)
+    }
+
+    /// Submit without blocking; `Err` returns the request when the
+    /// queue is full under [`OverloadPolicy::Reject`] (the caller sheds
+    /// load), when the overload policy sheds the newcomer, when the
+    /// deadline already expired, or when the service has shut down —
+    /// never panics under load-shed.
     pub fn try_submit(&self, request: Request) -> Result<Receiver<Response>, SubmitError> {
-        let (tx, rx) = std::sync::mpsc::channel();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(Job::Work(request, tx)) {
-            Ok(()) => Ok(rx),
-            Err(TrySendError::Full(Job::Work(req, _))) => {
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(SubmitError::Full(req))
+        self.admit(request, false)
+    }
+
+    /// Convenience: submit and wait. Admission refusals and worker
+    /// deaths come back as synthesized failure responses (matching
+    /// [`Fate`]), so this never panics.
+    pub fn transcode(&self, request: Request) -> Response {
+        let id = request.id;
+        match self.submit(request) {
+            // A dropped reply channel means the worker died mid-job
+            // (hard crash); answer like an isolated panic.
+            Ok(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| Response::failure(id, Fate::Panicked, Rung::Configured)),
+            Err(SubmitError::Full(_)) | Err(SubmitError::Shutdown(_)) => {
+                Response::failure(id, Fate::Rejected, Rung::Configured)
             }
-            Err(TrySendError::Disconnected(Job::Work(req, _))) => {
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(SubmitError::Shutdown(req))
+            Err(SubmitError::Timeout(_)) => {
+                Response::failure(id, Fate::TimedOut, Rung::Configured)
             }
-            // Shutdown jobs are only ever sent by `shutdown`, never here.
-            Err(TrySendError::Full(Job::Shutdown))
-            | Err(TrySendError::Disconnected(Job::Shutdown)) => {
-                unreachable!("try_submit only sends Work jobs")
-            }
+            Err(SubmitError::Shed(_)) => Response::failure(id, Fate::Shed, Rung::Configured),
         }
     }
 
-    /// Convenience: submit and wait.
-    pub fn transcode(&self, request: Request) -> Response {
-        self.submit(request).recv().expect("worker alive")
+    /// The rung new conversions run on right now.
+    pub fn degrade_rung(&self) -> Rung {
+        Rung::from_level(self.shared.degrade.load(Ordering::Relaxed))
+    }
+
+    /// Pin the degradation ladder at `rung` — an operational override
+    /// (and the chaos suite's lever for the bit-identity invariant).
+    /// The recovery window still decays it back toward
+    /// [`Rung::Configured`] afterwards.
+    pub fn force_degrade(&self, rung: Rung) {
+        self.shared.degrade.store(rung.level(), Ordering::Relaxed);
+        self.shared.recovery.store(0, Ordering::Relaxed);
     }
 
     /// A snapshot of the service counters.
@@ -409,14 +739,108 @@ impl TranscodeService {
         self.stats.snapshot()
     }
 
-    /// Drain the queue and join the workers.
+    /// Stop admissions, drain the queue, and join the workers: every
+    /// already-queued request still gets its response.
     pub fn shutdown(mut self) {
-        for _ in 0..self.workers.len() {
-            let _ = self.tx.send(Job::Shutdown);
+        self.teardown(true);
+    }
+
+    /// Stop admissions and drop the queue **with notification**: every
+    /// queued job's reply channel is dropped, so waiting callers see
+    /// `recv()` fail promptly instead of hanging. The in-flight
+    /// conversions (at most one per worker) still complete.
+    pub fn abort(mut self) {
+        self.teardown(false);
+    }
+
+    /// Idempotent shutdown core shared by [`TranscodeService::shutdown`],
+    /// [`TranscodeService::abort`] and `Drop`.
+    fn teardown(&mut self, graceful: bool) {
+        {
+            let mut state = self.shared.state.lock().expect("queue lock");
+            state.open = false;
+            state.draining = true;
+            if !graceful {
+                // Dropping a Job drops its reply Sender: every waiting
+                // caller's recv() errors promptly — dropped *with*
+                // notification, never leaked.
+                state.jobs.clear();
+            }
         }
-        for handle in self.workers.drain(..) {
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        if let Some(handle) = self.supervisor.take() {
             let _ = handle.join();
         }
+        let handles = std::mem::take(&mut *self.workers.lock().expect("worker handles"));
+        for handle in handles {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for TranscodeService {
+    /// Dropping the service without calling
+    /// [`TranscodeService::shutdown`] aborts (queued jobs dropped with
+    /// notification) — a no-op after an explicit shutdown/abort.
+    fn drop(&mut self) {
+        self.teardown(false);
+    }
+}
+
+fn spawn_worker(
+    index: usize,
+    shared: &Arc<Shared>,
+    stats: &Arc<ServiceStats>,
+    config: &ServiceConfig,
+) -> std::io::Result<JoinHandle<()>> {
+    let shared = Arc::clone(shared);
+    let stats = Arc::clone(stats);
+    let config = config.clone();
+    std::thread::Builder::new()
+        .name(format!("transcode-worker-{index}"))
+        .spawn(move || worker_loop(shared, stats, config))
+}
+
+/// Poll the pool for dead workers and respawn them, up to the budget.
+/// A worker only dies outside the supervisor's control when its job
+/// escapes `catch_unwind` (e.g. a `chaos` hard-crash injection, or an
+/// engine abort) — panics inside a conversion are already isolated in
+/// the worker loop and do not kill the thread.
+fn supervisor_loop(
+    shared: Arc<Shared>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    stats: Arc<ServiceStats>,
+    config: ServiceConfig,
+) {
+    let mut budget = config.respawn_budget;
+    loop {
+        if shared.state.lock().expect("queue lock").draining {
+            return;
+        }
+        if budget == 0 {
+            return;
+        }
+        {
+            let mut slots = workers.lock().expect("worker handles");
+            for (w, slot) in slots.iter_mut().enumerate() {
+                if budget == 0 {
+                    break;
+                }
+                if !slot.is_finished() {
+                    continue;
+                }
+                // The budget is spent even if the spawn fails, so a
+                // spawn-starved system cannot hot-loop here.
+                budget -= 1;
+                if let Ok(fresh) = spawn_worker(w, &shared, &stats, &config) {
+                    let dead = std::mem::replace(slot, fresh);
+                    let _ = dead.join();
+                    stats.respawns.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        std::thread::sleep(SUPERVISOR_POLL);
     }
 }
 
@@ -436,14 +860,16 @@ enum WorkerEngine {
 
 /// The Latin-1 kernel set for a worker keyed `key`: the matching
 /// registry entry (`scalar`/`simd128`/`simd256`/`simd512`/`best`), or
-/// `best` for
-/// engine keys with no Latin-1 analogue (`icu`, `llvm`, ...).
+/// `best` for engine keys with no Latin-1 analogue (`icu`, `llvm`,
+/// ...). Resolved by key, not index — the entry order is not a
+/// contract.
 fn resolve_latin1(key: &str) -> &'static crate::transcode::latin1::Latin1Kernels {
     let entries = crate::transcode::latin1::kernel_entries();
     entries
         .into_iter()
         .find(|k| k.key.eq_ignore_ascii_case(key))
-        .unwrap_or(entries[3]) // `best`
+        .or_else(|| entries.into_iter().find(|k| k.key == "best"))
+        .expect("registry always has a best Latin-1 kernel set")
 }
 
 fn resolve_native(to16_key: &str, to8_key: &str, latin1_key: &str) -> WorkerEngine {
@@ -461,33 +887,187 @@ fn resolve_native(to16_key: &str, to8_key: &str, latin1_key: &str) -> WorkerEngi
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, config: ServiceConfig) {
-    let engine = match &config.engine {
-        EngineChoice::Simd { validate } => {
-            resolve_native(if *validate { "best" } else { "best-nv" }, "best", "best")
-        }
-        EngineChoice::Scalar => resolve_native("icu", "icu", "scalar"),
-        EngineChoice::Named(name) => resolve_native(name, name, name),
-        EngineChoice::Xla { artifacts_dir } => match XlaEngine::load(artifacts_dir) {
-            Ok(engine) => WorkerEngine::Xla(Box::new(engine)),
-            Err(e) => {
-                eprintln!("worker failed to load XLA artifacts: {e:#}");
-                return;
-            }
-        },
-    };
+/// The worker's engine at every rung of the degradation ladder. The
+/// sub-`Configured` rungs are always validating width-pinned natives
+/// (scalar floor: `icu`), so degraded outputs stay bit-identical to
+/// the configured engine's — only throughput changes.
+struct RungEngines {
+    configured: WorkerEngine,
+    simd256: WorkerEngine,
+    simd128: WorkerEngine,
+    scalar: WorkerEngine,
+}
 
+impl RungEngines {
+    fn resolve(config: &ServiceConfig) -> Option<RungEngines> {
+        let configured = match &config.engine {
+            EngineChoice::Simd { validate } => {
+                resolve_native(if *validate { "best" } else { "best-nv" }, "best", "best")
+            }
+            EngineChoice::Scalar => resolve_native("icu", "icu", "scalar"),
+            EngineChoice::Named(name) => resolve_native(name, name, name),
+            EngineChoice::Xla { artifacts_dir } => match XlaEngine::load(artifacts_dir) {
+                Ok(engine) => WorkerEngine::Xla(Box::new(engine)),
+                Err(e) => {
+                    eprintln!("worker failed to load XLA artifacts: {e:#}");
+                    return None;
+                }
+            },
+        };
+        Some(RungEngines {
+            configured,
+            simd256: resolve_native("simd256", "simd256", "simd256"),
+            simd128: resolve_native("simd128", "simd128", "simd128"),
+            scalar: resolve_native("icu", "icu", "scalar"),
+        })
+    }
+
+    fn engine(&self, rung: Rung) -> &WorkerEngine {
+        match rung {
+            Rung::Configured => &self.configured,
+            Rung::Simd256 => &self.simd256,
+            Rung::Simd128 => &self.simd128,
+            Rung::Scalar => &self.scalar,
+        }
+    }
+}
+
+/// Advisory allocation preflight for `ServiceConfig::fallible_alloc`:
+/// can the response buffer's worst case be reserved right now? (The
+/// probe allocation is freed immediately; the conversion's own
+/// allocation can still race another thread to OOM — this narrows the
+/// window, it cannot close it.)
+fn preflight_alloc(request: &Request) -> bool {
+    let estimate = match &request.payload {
+        // UTF-16 output bytes worst case (one word per input byte).
+        Payload::Utf8(b) => b.len().saturating_mul(2),
+        // UTF-8 output worst case for UTF-16 input.
+        Payload::Utf16(w) => w.len().saturating_mul(3),
+        // Latin-1 → UTF-8 at most doubles.
+        Payload::Latin1(b) => b.len().saturating_mul(2),
+        // Compression: output ≤ input.
+        Payload::Utf8ToLatin1(b) => b.len(),
+    };
+    let mut probe = Vec::<u8>::new();
+    probe.try_reserve(estimate).is_ok()
+}
+
+fn worker_loop(shared: Arc<Shared>, stats: Arc<ServiceStats>, config: ServiceConfig) {
+    let Some(rungs) = RungEngines::resolve(&config) else {
+        return;
+    };
+    let mut panic_streak = 0u32;
     loop {
-        let job = {
-            let guard = rx.lock().expect("queue lock");
-            guard.recv()
+        #[cfg_attr(not(feature = "chaos"), allow(unused_variables))]
+        let (job, seq) = {
+            let mut state = shared.state.lock().expect("queue lock");
+            loop {
+                if let Some(job) = state.jobs.pop_front() {
+                    // Sequence numbers are assigned under the lock so
+                    // the chaos fault plans see a deterministic order.
+                    break (job, shared.seq.fetch_add(1, Ordering::Relaxed) + 1);
+                }
+                if state.draining {
+                    return;
+                }
+                state = shared.not_empty.wait(state).expect("queue lock");
+            }
         };
-        let Ok(Job::Work(request, reply)) = job else {
-            return; // Shutdown or channel closed
+        shared.not_full.notify_one();
+        let Job { request, reply } = job;
+
+        #[cfg(feature = "chaos")]
+        config.faults.stall_dequeue();
+
+        // Deadline at dequeue: an expired job is answered, never
+        // silently dropped.
+        if request.deadline.expired() {
+            stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Response::failure(request.id, Fate::TimedOut, Rung::Configured));
+            continue;
+        }
+
+        #[cfg(feature = "chaos")]
+        if config.faults.abort_worker(seq) {
+            // Simulated hard crash: the worker dies with the job in
+            // hand. Dropping `reply` notifies the caller; the
+            // supervisor respawns the thread.
+            return;
+        }
+
+        let rung = Rung::from_level(shared.degrade.load(Ordering::Relaxed));
+        let engine = rungs.engine(rung);
+        // Degraded rungs force the one-shot path: parallel fan-out is
+        // the first thing to give up under pressure.
+        let threshold =
+            if rung == Rung::Configured { config.parallel_threshold } else { usize::MAX };
+        let mut par = config.parallel.clone();
+        par.cancel = request.deadline.instant().map(CancelToken::with_deadline);
+
+        let alloc_refused = {
+            let pressured = config.fallible_alloc && !preflight_alloc(&request);
+            #[cfg(feature = "chaos")]
+            let pressured = pressured || config.faults.alloc_fails(seq);
+            pressured
         };
+        if alloc_refused {
+            // Memory pressure: refuse this conversion with a structured
+            // error and step the service down a rung so the next ones
+            // ask for less.
+            raise_degrade(&shared);
+            let _ = reply.send(Response {
+                id: request.id,
+                result: Err(TranscodeError::new(ErrorKind::OutputBuffer, 0)),
+                replacements: 0,
+                rung,
+                fate: Fate::Completed,
+            });
+            continue;
+        }
+
         let start = Instant::now();
         let input_bytes = request.input_bytes();
-        let response = run_one(&engine, &request, config.parallel_threshold, config.parallel);
+
+        #[cfg(feature = "chaos")]
+        config.faults.slow_conversion(seq);
+
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            #[cfg(feature = "chaos")]
+            config.faults.maybe_panic(seq);
+            run_one(engine, &request, threshold, par)
+        }));
+        let mut response = match outcome {
+            Ok(response) => response,
+            Err(_) => {
+                // Panic isolation: the caller gets a typed failure, the
+                // worker survives; a streak of panics steps the ladder
+                // down (the engine tier itself may be unhealthy).
+                stats.panics.fetch_add(1, Ordering::Relaxed);
+                panic_streak += 1;
+                if panic_streak >= PANIC_ESCALATE {
+                    raise_degrade(&shared);
+                    panic_streak = 0;
+                }
+                let _ = reply.send(Response::failure(request.id, Fate::Panicked, rung));
+                continue;
+            }
+        };
+        panic_streak = 0;
+
+        // A deadline that expired mid-conversion surfaces as the cancel
+        // token's ErrorKind::Other; report it as the timeout it is.
+        if matches!(&response.result, Err(e) if e.kind == ErrorKind::Other)
+            && request.deadline.expired()
+        {
+            stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Response::failure(request.id, Fate::TimedOut, rung));
+            continue;
+        }
+
+        response.rung = rung;
+        if rung != Rung::Configured {
+            stats.degraded.fetch_add(1, Ordering::Relaxed);
+        }
         // Code points via the shared SIMD counting kernels (this used
         // to be a private scalar word loop; `StatsSnapshot::chars` is
         // the code-point count in both directions now).
@@ -501,6 +1081,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, config: 
         if response.ok() {
             stats.record_completion(input_bytes, out_bytes, chars, start.elapsed());
             stats.record_replacements(response.replacements);
+            maybe_recover(&shared);
         } else {
             stats.invalid.fetch_add(1, Ordering::Relaxed);
         }
@@ -522,7 +1103,9 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, stats: Arc<ServiceStats>, config: 
 /// [`crate::parallel`] pipeline (same outputs, same replacement counts,
 /// same global error positions — the differential suite holds that
 /// equivalence), except UTF-8 → Latin-1 (compress has no parallel leg
-/// yet) and the XLA engine (which batches internally).
+/// yet) and the XLA engine (which batches internally). The `par`
+/// options carry the request's deadline as a cancellation token, so an
+/// oversized conversion notices expiry between chunks.
 fn run_one(
     engine: &WorkerEngine,
     request: &Request,
@@ -653,9 +1236,17 @@ fn run_one(
             }
         }
     };
-    Response { id: request.id, result, replacements }
+    Response {
+        id: request.id,
+        result,
+        replacements,
+        rung: Rung::Configured,
+        fate: Fate::Completed,
+    }
 }
 
+// The feature-gated chaos suite (rust/tests/chaos.rs) exercises the
+// fault-injection points; these tests cover the deterministic surface.
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -665,12 +1256,22 @@ mod tests {
         TranscodeService::start(config).expect("service")
     }
 
+    /// A payload big enough that the icu scalar engine chews on it for
+    /// tens of milliseconds — used to hold a worker busy while the
+    /// tests race deadlines and shed policies against the queue. The
+    /// configs pairing with it set `parallel_threshold: usize::MAX` so
+    /// the conversion stays one-shot (slow on purpose).
+    fn slow_payload() -> Vec<u8> {
+        "slow işçi 漢字 ".repeat(1 << 20).into_bytes() // ~21 MB, multi-byte heavy
+    }
+
     #[test]
     fn simd_service_round_trip() {
         let svc = service(EngineChoice::Simd { validate: true });
         let text = "service test: héllo 漢字 🙂 ".repeat(40);
         let resp = svc.transcode(Request::utf8(1, text.clone().into_bytes()));
         assert_eq!(resp.utf16().unwrap(), &text.encode_utf16().collect::<Vec<_>>()[..]);
+        assert_eq!((resp.fate, resp.rung), (Fate::Completed, Rung::Configured));
         let units: Vec<u16> = text.encode_utf16().collect();
         let resp2 = svc.transcode(Request::utf16(2, units));
         assert_eq!(resp2.utf8().unwrap(), text.as_bytes());
@@ -690,6 +1291,7 @@ mod tests {
         let expected_pos = 25;
         let resp = svc.transcode(Request::utf8(1, bad));
         assert!(!resp.ok());
+        assert_eq!(resp.fate, Fate::Completed, "a structured engine error is a completed run");
         let err = resp.error().expect("structured error");
         assert_eq!(err.kind, ErrorKind::HeaderBits);
         assert_eq!(err.position, expected_pos);
@@ -708,7 +1310,8 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..200u64 {
             let text = format!("request {i}: données 漢字 {} ", "x".repeat((i % 97) as usize));
-            rxs.push((text.clone(), svc.submit(Request::utf8(i, text.into_bytes()))));
+            let rx = svc.submit(Request::utf8(i, text.clone().into_bytes())).expect("admitted");
+            rxs.push((text, rx));
         }
         for (text, rx) in rxs {
             let resp = rx.recv().unwrap();
@@ -822,7 +1425,8 @@ mod tests {
             queue_depth: 16,
             engine: EngineChoice::Simd { validate: true },
             parallel_threshold: 1024,
-            parallel: ParallelOptions { threads: 4, min_chunk: 512 },
+            parallel: ParallelOptions { threads: 4, min_chunk: 512, ..Default::default() },
+            ..Default::default()
         })
         .expect("service");
 
@@ -861,10 +1465,9 @@ mod tests {
 
     #[test]
     fn try_submit_returns_request_after_shutdown() {
-        // A zero-worker service drops the queue receiver inside
-        // `start`, leaving the channel disconnected — exactly the state
-        // a shut-down service is in. `try_submit` used to panic here;
-        // it must hand the request back instead.
+        // A zero-worker service starts with the queue closed — exactly
+        // the state a shut-down service is in. `try_submit` used to
+        // panic here; it must hand the request back instead.
         let svc = TranscodeService::start(ServiceConfig {
             workers: 0,
             queue_depth: 4,
@@ -883,6 +1486,28 @@ mod tests {
             other => panic!("expected Shutdown, got {other:?}"),
         }
         assert_eq!(svc.stats().rejected, 1);
+    }
+
+    #[test]
+    fn blocking_submit_errors_on_zero_worker_service() {
+        // The historical blocking submit() would park forever (or
+        // panic) on a dead service; it must return the same typed error
+        // as try_submit, immediately.
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 0,
+            queue_depth: 4,
+            engine: EngineChoice::Simd { validate: true },
+            ..Default::default()
+        })
+        .expect("zero-worker service starts");
+        match svc.submit(Request::utf8(11, b"never queued".to_vec())) {
+            Err(SubmitError::Shutdown(req)) => assert_eq!(req.id, 11),
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
+        // And the synchronous convenience path synthesizes a response.
+        let resp = svc.transcode(Request::utf8(12, b"also never queued".to_vec()));
+        assert_eq!(resp.fate, Fate::Rejected);
+        assert!(!resp.ok());
     }
 
     #[test]
@@ -905,7 +1530,8 @@ mod tests {
                     accepted += 1;
                     rxs.push(rx);
                 }
-                Err(_) => rejected += 1,
+                Err(SubmitError::Full(_)) => rejected += 1,
+                Err(other) => panic!("expected Full, got {other:?}"),
             }
         }
         assert!(rejected > 0, "queue of 2 must reject under burst");
@@ -915,5 +1541,226 @@ mod tests {
         assert_eq!(svc.stats().completed, accepted);
         assert_eq!(svc.stats().rejected, rejected);
         svc.shutdown();
+    }
+
+    #[test]
+    fn submit_error_display_and_source() {
+        let make = || Request::utf8(42, b"payload".to_vec());
+        let cases: [(SubmitError, &str); 4] = [
+            (SubmitError::Full(make()), "queue full"),
+            (SubmitError::Shutdown(make()), "shut down"),
+            (SubmitError::Timeout(make()), "deadline expired"),
+            (SubmitError::Shed(make()), "overloaded"),
+        ];
+        for (err, needle) in cases {
+            let shown = err.to_string();
+            assert!(shown.contains(needle), "{shown:?} missing {needle:?}");
+            assert!(shown.contains("42"), "{shown:?} must name the request");
+            // Usable as a std error trait object.
+            let dynamic: &dyn std::error::Error = &err;
+            assert!(dynamic.source().is_none());
+            // The request always comes back unconsumed.
+            let req = err.into_request();
+            assert_eq!(req.id, 42);
+            let Payload::Utf8(data) = req.payload else { panic!("payload intact") };
+            assert_eq!(data, b"payload");
+        }
+    }
+
+    #[test]
+    fn expired_deadline_is_refused_at_admission() {
+        let svc = service(EngineChoice::Simd { validate: true });
+        let req = Request::utf8(5, b"too late".to_vec())
+            .with_deadline_at(Instant::now() - Duration::from_millis(1));
+        match svc.try_submit(req) {
+            Err(SubmitError::Timeout(r)) => assert_eq!(r.id, 5),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        let snap = svc.stats();
+        assert_eq!((snap.requests, snap.timeouts), (1, 1));
+        // transcode() synthesizes the matching fate.
+        let resp = svc.transcode(
+            Request::utf8(6, b"also late".to_vec())
+                .with_deadline_at(Instant::now() - Duration::from_millis(1)),
+        );
+        assert_eq!(resp.fate, Fate::TimedOut);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn queued_deadline_expires_at_dequeue() {
+        // One scalar worker held busy by a slow payload; a queued
+        // request whose deadline lapses while it waits must be
+        // *answered* with a timeout at dequeue, never dropped.
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 8,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            ..Default::default()
+        })
+        .expect("service");
+        let occupier = svc.submit(Request::utf8(1, slow_payload())).expect("admitted");
+        std::thread::sleep(Duration::from_millis(20)); // worker now mid-conversion
+        let victim = svc
+            .submit(Request::utf8(2, b"short but doomed".to_vec())
+                .with_deadline(Duration::from_millis(1)))
+            .expect("queued");
+        let resp = victim.recv().expect("answered, not dropped");
+        assert_eq!(resp.fate, Fate::TimedOut);
+        assert!(!resp.ok());
+        assert!(occupier.recv().expect("occupier completes").ok());
+        assert_eq!(svc.stats().timeouts, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn blocking_submit_times_out_on_a_full_queue() {
+        // Worker busy, queue full, Reject policy: a blocking submit
+        // with a deadline must give up with Timeout instead of parking
+        // forever.
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            ..Default::default()
+        })
+        .expect("service");
+        let occupier = svc.submit(Request::utf8(1, slow_payload())).expect("admitted");
+        std::thread::sleep(Duration::from_millis(20));
+        let filler = svc.submit(Request::utf8(2, b"fills the queue".to_vec())).expect("queued");
+        match svc.submit(
+            Request::utf8(3, b"cannot wait".to_vec()).with_deadline(Duration::from_millis(10)),
+        ) {
+            Err(SubmitError::Timeout(r)) => assert_eq!(r.id, 3),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert!(svc.stats().timeouts >= 1);
+        assert!(occupier.recv().unwrap().ok());
+        assert!(filler.recv().unwrap().ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shed_oldest_evicts_lowest_priority_first() {
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 2,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            overload: OverloadPolicy::ShedOldest,
+            ..Default::default()
+        })
+        .expect("service");
+        let occupier = svc.submit(Request::utf8(1, slow_payload())).expect("admitted");
+        std::thread::sleep(Duration::from_millis(20)); // worker mid-conversion
+        let low = svc
+            .submit(Request::utf8(2, b"bulk".to_vec()).with_priority(Priority::Low))
+            .expect("queued");
+        let normal = svc.submit(Request::utf8(3, b"normal".to_vec())).expect("queued");
+        // Queue full. A Normal newcomer evicts the Low straggler...
+        let newcomer = svc.submit(Request::utf8(4, b"newcomer".to_vec())).expect("admitted");
+        let resp = low.recv().expect("victim answered, not dropped");
+        assert_eq!(resp.fate, Fate::Shed);
+        // ...but a Low newcomer cannot evict the two Normals.
+        match svc.try_submit(Request::utf8(5, b"bulk 2".to_vec()).with_priority(Priority::Low)) {
+            Err(SubmitError::Shed(r)) => assert_eq!(r.id, 5),
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert_eq!(svc.stats().sheds, 2, "one victim + one refused newcomer");
+        assert!(occupier.recv().unwrap().ok());
+        assert!(normal.recv().unwrap().ok());
+        assert!(newcomer.recv().unwrap().ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn degrade_policy_raises_the_ladder_under_overload() {
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            overload: OverloadPolicy::Degrade,
+            ..Default::default()
+        })
+        .expect("service");
+        assert_eq!(svc.degrade_rung(), Rung::Configured);
+        let occupier = svc.submit(Request::utf8(1, slow_payload())).expect("admitted");
+        std::thread::sleep(Duration::from_millis(20));
+        let first = svc.submit(Request::utf8(2, b"queued".to_vec())).expect("queued");
+        // Queue now full: the next admission sheds AND degrades.
+        let second = svc.submit(Request::utf8(3, b"overload".to_vec())).expect("admitted");
+        assert_eq!(first.recv().expect("victim answered").fate, Fate::Shed);
+        assert!(svc.degrade_rung() > Rung::Configured, "overload must step the ladder down");
+        assert!(occupier.recv().unwrap().ok());
+        let served = second.recv().unwrap();
+        assert!(served.ok());
+        assert!(served.rung > Rung::Configured, "served on a degraded rung");
+        assert!(svc.stats().degraded >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn degraded_rungs_stay_bit_identical() {
+        let svc = service(EngineChoice::Simd { validate: true });
+        let text = "ladder: héllo wörld 漢字 🙂 ".repeat(50);
+        let units: Vec<u16> = text.encode_utf16().collect();
+        for rung in Rung::LADDER {
+            svc.force_degrade(rung);
+            let resp = svc.transcode(Request::utf8(rung.level() as u64, text.clone().into_bytes()));
+            assert_eq!(resp.rung, rung);
+            assert_eq!(resp.utf16().expect("clean input"), &units[..], "rung {rung}");
+            let resp = svc.transcode(Request::utf16(10 + rung.level() as u64, units.clone()));
+            assert_eq!(resp.utf8().expect("clean input"), text.as_bytes(), "rung {rung}");
+        }
+        // Three rungs sit below Configured; both directions ran on each.
+        assert_eq!(svc.stats().degraded, 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn abort_notifies_queued_callers_instead_of_leaking() {
+        // The worker loop's exit path drops queued jobs *with
+        // notification*: each waiting receiver errors out promptly.
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 16,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            ..Default::default()
+        })
+        .expect("service");
+        let occupier = svc.submit(Request::utf8(0, slow_payload())).expect("admitted");
+        std::thread::sleep(Duration::from_millis(20)); // worker mid-conversion
+        let queued: Vec<_> = (1..=8u64)
+            .map(|i| svc.submit(Request::utf8(i, b"queued then dropped".to_vec())).unwrap())
+            .collect();
+        svc.abort();
+        // The in-flight conversion still completes...
+        assert!(occupier.recv().expect("in-flight job completes").ok());
+        // ...and every queued caller is notified, not left hanging.
+        let notified =
+            queued.iter().filter(|rx| rx.recv_timeout(Duration::from_secs(5)).is_err()).count();
+        assert_eq!(notified, 8, "all queued jobs dropped with notification");
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_queued_jobs() {
+        let svc = TranscodeService::start(ServiceConfig {
+            workers: 2,
+            queue_depth: 64,
+            engine: EngineChoice::Simd { validate: true },
+            ..Default::default()
+        })
+        .expect("service");
+        let rxs: Vec<_> = (0..20u64)
+            .map(|i| svc.submit(Request::utf8(i, format!("drain {i}").into_bytes())).unwrap())
+            .collect();
+        svc.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().expect("drained before join").ok());
+        }
     }
 }

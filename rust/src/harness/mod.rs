@@ -764,11 +764,13 @@ pub fn bench_utf16_engine_mbps(engine: &dyn Utf16ToUtf8, corpus: &Corpus) -> f64
 /// `simd512`/`best` keys), each lipsum corpus profile, input MB/s —
 /// plus (v5) the `parallel` thread-sweep section over
 /// `Registry::parallel_entries` on a [`Corpus::tiled`] GB-scale corpus,
-/// and (v6) a top-level `backend` field naming the detected ISA
+/// (v6) a top-level `backend` field naming the detected ISA
 /// ([`crate::simd::detected_isa`]) so a perf trajectory row records the
-/// hardware it measured. This is what CI writes to `BENCH_<n>.json` in
-/// smoke mode (`SIMDUTF_BENCH_BUDGET_MS` small) to seed the perf
-/// trajectory.
+/// hardware it measured, and (v7) a `service` section profiling the L3
+/// coordinator: latency percentiles plus the shed/timeout rates its
+/// admission path produces under a deliberate overload burst. This is
+/// what CI writes to `BENCH_<n>.json` in smoke mode
+/// (`SIMDUTF_BENCH_BUDGET_MS` small) to seed the perf trajectory.
 pub fn bench_json() -> String {
     bench_json_with(default_budget())
 }
@@ -1129,7 +1131,7 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
             let res = measure(
                 || {
                     let v = engine
-                        .par_convert_to_vec(&par_corpus.utf8, opts)
+                        .par_convert_to_vec(&par_corpus.utf8, opts.clone())
                         .expect("tiled corpus is valid");
                     std::hint::black_box(v.len());
                 },
@@ -1148,7 +1150,7 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
             let res = measure(
                 || {
                     let v = engine
-                        .par_convert_to_vec(&par_corpus.utf16, opts)
+                        .par_convert_to_vec(&par_corpus.utf16, opts.clone())
                         .expect("tiled corpus is valid");
                     std::hint::black_box(v.len());
                 },
@@ -1160,8 +1162,68 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
         })
         .collect();
 
+    // Service resilience profile (new in v7): the L3 coordinator in two
+    // phases. (a) Calm: sequential round trips through a 2-worker
+    // service give the per-request latency distribution (p50/p99) and
+    // the service-path throughput. (b) Overload: a burst of
+    // short-deadline `try_submit`s against a 1-worker, tiny-queue,
+    // shed-oldest service; the shed/timeout *rates* come from the
+    // service's own counters, so the schema records how the admission
+    // path behaves at saturation, not just how fast the kernels are.
+    // Both phases scale with the budget so smoke runs stay fast.
+    let svc_requests: usize = if budget.as_millis() >= 1000 { 512 } else { 64 };
+    let svc_payload = corpora[0].utf8_prefix(2048).to_vec();
+    let service = crate::coordinator::TranscodeService::start(crate::coordinator::ServiceConfig {
+        workers: 2,
+        queue_depth: 64,
+        engine: crate::coordinator::EngineChoice::Simd { validate: true },
+        ..Default::default()
+    })
+    .expect("bench service starts");
+    let mut lat_us: Vec<f64> = Vec::with_capacity(svc_requests);
+    let svc_started = std::time::Instant::now();
+    for i in 0..svc_requests {
+        let t0 = std::time::Instant::now();
+        let resp = service
+            .transcode(crate::coordinator::Request::utf8(i as u64, svc_payload.clone()));
+        debug_assert!(resp.ok(), "calm-phase request failed");
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let svc_elapsed = svc_started.elapsed();
+    let svc_throughput_mbps =
+        (svc_requests * svc_payload.len()) as f64 / svc_elapsed.as_secs_f64() / 1e6;
+    service.shutdown();
+    lat_us.sort_by(f64::total_cmp);
+    let svc_pct = |p: f64| lat_us[((lat_us.len() - 1) as f64 * p).round() as usize];
+
+    let overload_policy = crate::coordinator::OverloadPolicy::ShedOldest;
+    let burst = crate::coordinator::TranscodeService::start(crate::coordinator::ServiceConfig {
+        workers: 1,
+        queue_depth: 8,
+        engine: crate::coordinator::EngineChoice::Simd { validate: true },
+        overload: overload_policy,
+        ..Default::default()
+    })
+    .expect("bench service starts");
+    let mut burst_replies = Vec::with_capacity(svc_requests);
+    for i in 0..svc_requests {
+        let req = crate::coordinator::Request::utf8(i as u64, svc_payload.clone())
+            .with_deadline(std::time::Duration::from_millis(20));
+        if let Ok(rx) = burst.try_submit(req) {
+            burst_replies.push(rx);
+        }
+    }
+    for rx in burst_replies {
+        let _ = rx.recv(); // shed in queue reads as a disconnect; fine
+    }
+    let burst_stats = burst.stats();
+    burst.shutdown();
+    let burst_total = burst_stats.requests.max(1) as f64;
+    let svc_shed_rate = burst_stats.sheds as f64 / burst_total;
+    let svc_timeout_rate = burst_stats.timeouts as f64 / burst_total;
+
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"simdutf-rs-bench-v6\",\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v7\",\n");
     out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
     out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
     out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
@@ -1181,6 +1243,17 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
     out.push_str("    \"utf16_to_utf8\": {\n");
     emit_matrix(&mut out, "      ", &par16_rows);
     out.push_str("    }\n");
+    out.push_str("  },\n");
+    out.push_str("  \"service\": {\n");
+    out.push_str(&format!("    \"requests\": {svc_requests},\n"));
+    out.push_str("    \"workers\": 2,\n");
+    out.push_str("    \"queue_depth\": 64,\n");
+    out.push_str(&format!("    \"overload_policy\": \"{overload_policy}\",\n"));
+    out.push_str(&format!("    \"p50_us\": {:.1},\n", svc_pct(0.50)));
+    out.push_str(&format!("    \"p99_us\": {:.1},\n", svc_pct(0.99)));
+    out.push_str(&format!("    \"shed_rate\": {svc_shed_rate:.4},\n"));
+    out.push_str(&format!("    \"timeout_rate\": {svc_timeout_rate:.4},\n"));
+    out.push_str(&format!("    \"throughput_mbps\": {svc_throughput_mbps:.1}\n"));
     out.push_str("  }\n");
     out.push_str("}\n");
     out
@@ -1250,7 +1323,7 @@ mod tests {
         );
         assert!(json.contains("+dirty10"), "missing dirty cells:\n{json}");
         // v3: counting kernels and alloc-strategy head-to-head.
-        assert!(json.contains("\"simdutf-rs-bench-v6\""), "schema must be v6:\n{json}");
+        assert!(json.contains("\"simdutf-rs-bench-v7\""), "schema must be v7:\n{json}");
         // v6: the detected-ISA backend field.
         assert!(json.contains("\"backend\""), "missing backend field:\n{json}");
         assert!(
@@ -1286,6 +1359,23 @@ mod tests {
         for e in Registry::global().parallel_entries() {
             assert!(json.contains(&format!("\"{}\"", e.key)), "missing parallel {}:\n{json}", e.key);
         }
+        // v7: the service resilience profile — latency percentiles from
+        // the calm phase, shed/timeout rates from the overload burst.
+        assert!(json.contains("\"service\""), "missing service section:\n{json}");
+        for field in [
+            "\"requests\"",
+            "\"workers\"",
+            "\"queue_depth\"",
+            "\"overload_policy\"",
+            "\"p50_us\"",
+            "\"p99_us\"",
+            "\"shed_rate\"",
+            "\"timeout_rate\"",
+            "\"throughput_mbps\"",
+        ] {
+            assert!(json.contains(field), "missing service.{field}:\n{json}");
+        }
+        assert!(json.contains("\"shed-oldest\""), "burst phase must record its policy:\n{json}");
     }
 
     #[test]

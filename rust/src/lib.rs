@@ -187,8 +187,8 @@ pub mod prelude {
     };
     pub use crate::engine::Registry;
     pub use crate::parallel::{
-        par_latin1_to_utf8_vec, split_utf16, split_utf8, ParallelOptions, ParallelUtf16ToUtf8,
-        ParallelUtf8ToUtf16,
+        par_latin1_to_utf8_vec, split_utf16, split_utf8, CancelToken, ParallelOptions,
+        ParallelUtf16ToUtf8, ParallelUtf8ToUtf16,
     };
     pub use crate::simd::{best_key, VectorBackend, V128, V256};
     pub use crate::transcode::{

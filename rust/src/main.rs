@@ -20,10 +20,16 @@
 //!     (UTF-8⇄UTF-16 and latin1→utf8; same outputs, same errors in
 //!     global coordinates — see the `parallel` module).
 //! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla|KEY] [--lossy]
+//!                   [--deadline-ms N] [--overload-policy reject|shed|degrade]
 //!     Run the streaming service against a synthetic workload and print
 //!     throughput/latency stats. KEY is any registry engine (see `engines`).
 //!     With --lossy the workload is 1%-corrupted and requests use the
 //!     lossy mode (the stats line reports total replacements).
+//!     --deadline-ms attaches a per-request deadline (expired requests
+//!     are refused or cut off and counted, not crashed on);
+//!     --overload-policy picks what a full queue does: reject the
+//!     newcomer (default), shed the oldest lower-priority request, or
+//!     shed and step the service down the degradation ladder.
 //! simdutf-cli engines
 //!     List every registered engine (key, name, validation, directions),
 //!     including the width-explicit `simd128`/`simd256`/`simd512`
@@ -31,7 +37,8 @@
 //! simdutf-cli bench-json [--out FILE] [--threads N]
 //!     Emit the machine-readable engine × corpus throughput matrix
 //!     (input MB/s for every registry key; see harness::bench_json),
-//!     including the v5 `parallel` thread-sweep section on a tiled
+//!     including the v5 `parallel` thread-sweep section and the v7
+//!     `service` resilience profile, on a tiled
 //!     GB-scale corpus (smoke runs shrink it; override with
 //!     SIMDUTF_PAR_BENCH_BYTES). --threads N caps the sweep's thread
 //!     ladder. CI runs this in smoke mode (SIMDUTF_BENCH_BUDGET_MS=5)
@@ -41,11 +48,13 @@
 //!     (exit code 1 when invalid).
 //! ```
 
-use simdutf_rs::coordinator::{EngineChoice, Request, ServiceConfig, TranscodeService};
+use simdutf_rs::coordinator::{
+    EngineChoice, OverloadPolicy, Request, ServiceConfig, TranscodeService,
+};
 use simdutf_rs::prelude::*;
 use std::io::Write;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -403,9 +412,26 @@ fn cmd_serve(args: &[String]) -> i32 {
         },
         Some(key) => EngineChoice::Named(key.to_string()),
     };
+    let deadline = flag_value(args, "--deadline-ms")
+        .and_then(|v| v.parse().ok())
+        .map(Duration::from_millis);
+    let overload = match flag_value(args, "--overload-policy") {
+        None => OverloadPolicy::default(),
+        Some(p) => match p.parse() {
+            Ok(policy) => policy,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                return 2;
+            }
+        },
+    };
 
-    println!("starting service: workers={workers} engine={engine:?} requests={requests}");
-    let config = ServiceConfig { workers, queue_depth: 1024, engine, ..Default::default() };
+    println!(
+        "starting service: workers={workers} engine={engine:?} requests={requests} \
+         overload={overload} deadline={deadline:?}"
+    );
+    let config =
+        ServiceConfig { workers, queue_depth: 1024, engine, overload, ..Default::default() };
     let service = match TranscodeService::start(config) {
         Ok(s) => s,
         Err(e) => {
@@ -421,6 +447,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let dirt = simdutf_rs::corpus::DIRT_PROFILES[1];
     let started = Instant::now();
     let mut pending = Vec::with_capacity(requests);
+    let mut refused = 0usize;
     for i in 0..requests {
         let corpus = &corpora[i % corpora.len()];
         let req = match (i % 2 == 0, lossy) {
@@ -439,21 +466,55 @@ fn cmd_serve(args: &[String]) -> i32 {
                 ),
             ),
         };
-        pending.push(service.submit(req));
+        let req = match deadline {
+            Some(d) => req.with_deadline(d),
+            None => req,
+        };
+        // Admission is fallible now: under a deadline or a shedding
+        // policy the service may refuse work instead of blocking
+        // forever. Refusals are workload results, not crashes.
+        match service.submit(req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => {
+                eprintln!("not admitted: {e}");
+                refused += 1;
+            }
+        }
     }
     let mut failures = 0usize;
+    let mut degraded = 0usize;
     for rx in pending {
-        let resp = rx.recv().expect("worker alive");
+        // A dropped reply (shed in queue, worker lost) reads as a
+        // disconnect, never a hang.
+        let Ok(resp) = rx.recv() else {
+            refused += 1;
+            continue;
+        };
+        if resp.rung != simdutf_rs::coordinator::Rung::Configured {
+            degraded += 1;
+        }
         if !resp.ok() {
-            if let Some(err) = resp.error() {
-                eprintln!("request {} failed: {err}", resp.id);
+            match resp.fate {
+                simdutf_rs::coordinator::Fate::Completed => {
+                    if let Some(err) = resp.error() {
+                        eprintln!("request {} failed: {err}", resp.id);
+                    }
+                    failures += 1;
+                }
+                fate => {
+                    eprintln!("request {}: {}", resp.id, fate.as_str());
+                    refused += 1;
+                }
             }
-            failures += 1;
         }
     }
     let elapsed = started.elapsed();
     let snap = service.stats();
-    println!("completed {requests} requests in {elapsed:?} ({failures} failures)");
+    println!(
+        "completed {} requests in {elapsed:?} ({failures} invalid, {refused} \
+         shed/expired, {degraded} on a degraded rung)",
+        requests - refused
+    );
     println!("{snap}");
     println!(
         "throughput: {:.3} Gchars/s, {:.1} MB/s in",

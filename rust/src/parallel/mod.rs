@@ -78,6 +78,9 @@ use crate::transcode::{
     TranscodeError, TranscodeResult, Utf16ToUtf8, Utf8ToUtf16, EXACT_SLACK, REPLACEMENT_UTF16,
     REPLACEMENT_UTF8,
 };
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Input units (bytes) a UTF-8 chunk worker leaves for its scalar tail:
 /// a valid tail this long yields at least `EXACT_SLACK` output words
@@ -94,8 +97,60 @@ const PAR_TAIL_UTF16: usize = EXACT_SLACK;
 /// byte per input byte minimum).
 const PAR_TAIL_LATIN1: usize = EXACT_SLACK;
 
+/// A cooperative cancellation handle shared between a caller and an
+/// in-flight parallel conversion.
+///
+/// Clones share one flag ([`Arc`] inside), so the caller keeps one
+/// clone and plants another in [`ParallelOptions::cancel`]. A token can
+/// also carry an absolute deadline; [`CancelToken::is_cancelled`] fires
+/// on whichever comes first. Chunk workers poll the token **between
+/// chunks** (at chunk entry, not per character): a tripped token makes
+/// the remaining workers fail fast with [`ErrorKind::Other`] at their
+/// chunk start, the joiner discards the partially-filled buffer, and
+/// the pipeline returns the error — cancellation is prompt at chunk
+/// granularity, and a cancelled conversion never yields output.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    cancelled: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A fresh token with no deadline; trips only via
+    /// [`CancelToken::cancel`].
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that trips automatically once `deadline` passes (and
+    /// still supports explicit [`CancelToken::cancel`]).
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken { cancelled: Arc::new(AtomicBool::new(false)), deadline: Some(deadline) }
+    }
+
+    /// Trip the token: every clone observes cancellation from now on.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// True once the token has been cancelled or its deadline passed.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+            || matches!(self.deadline, Some(at) if Instant::now() >= at)
+    }
+}
+
+/// The chunk-entry cancellation check: the error a cancelled worker
+/// fails with (`Other` at the chunk start once globalized).
+fn cancel_error(cancel: Option<&CancelToken>) -> Option<TranscodeError> {
+    match cancel {
+        Some(token) if token.is_cancelled() => Some(TranscodeError::new(ErrorKind::Other, 0)),
+        _ => None,
+    }
+}
+
 /// Tuning knobs for the parallel executor.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug)]
 pub struct ParallelOptions {
     /// Worker thread cap. `0` (the default) resolves to
     /// [`std::thread::available_parallelism`].
@@ -106,11 +161,17 @@ pub struct ParallelOptions {
     /// `len / min_chunk` chunks so no thread is spawned for trivial
     /// work. Default: 1 MiUnit.
     pub min_chunk: usize,
+    /// Optional cooperative cancellation: workers poll the token at
+    /// chunk entry and abandon the conversion once it trips (`None`,
+    /// the default, never cancels). The coordinator threads a
+    /// deadline-carrying token through here so an oversized request
+    /// notices its deadline *between* parallel chunks.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for ParallelOptions {
     fn default() -> Self {
-        ParallelOptions { threads: 0, min_chunk: 1 << 20 }
+        ParallelOptions { threads: 0, min_chunk: 1 << 20, cancel: None }
     }
 }
 
@@ -666,13 +727,17 @@ fn run16_strict<T: Utf8ToUtf16 + ?Sized>(
     engine: &T,
     src: &[u8],
     bounds: &[usize],
+    cancel: Option<&CancelToken>,
 ) -> TranscodeResult<Vec<u16>> {
     let n = bounds.len() - 1;
     let sizes = par_map(n, |i| crate::count::utf16_len_from_utf8(chunk_of(src, bounds, i)));
     let total: usize = sizes.iter().sum();
     assemble(
         &sizes,
-        |i, out| chunk16_strict(engine, chunk_of(src, bounds, i), out),
+        |i, out| match cancel_error(cancel) {
+            Some(e) => Err(e),
+            None => chunk16_strict(engine, chunk_of(src, bounds, i), out),
+        },
         |outcomes| join_strict(outcomes, total, |i, e| globalize_utf8(src, bounds[i], e)),
     )
     .map(|(v, _)| v)
@@ -682,13 +747,17 @@ fn run16_lossy<T: Utf8ToUtf16 + ?Sized>(
     engine: &T,
     src: &[u8],
     bounds: &[usize],
+    cancel: Option<&CancelToken>,
 ) -> TranscodeResult<(Vec<u16>, LossyResult)> {
     let n = bounds.len() - 1;
     let sizes = par_map(n, |i| lossy_utf16_len(chunk_of(src, bounds, i)));
     let total: usize = sizes.iter().sum();
     assemble(
         &sizes,
-        |i, out| chunk16_lossy(engine, chunk_of(src, bounds, i), out),
+        |i, out| match cancel_error(cancel) {
+            Some(e) => Err(e),
+            None => chunk16_lossy(engine, chunk_of(src, bounds, i), out),
+        },
         |outcomes| join_lossy(outcomes, total, |i, e| globalize_utf8(src, bounds[i], e)),
     )
 }
@@ -697,13 +766,17 @@ fn run8_strict<T: Utf16ToUtf8 + ?Sized>(
     engine: &T,
     src: &[u16],
     bounds: &[usize],
+    cancel: Option<&CancelToken>,
 ) -> TranscodeResult<Vec<u8>> {
     let n = bounds.len() - 1;
     let sizes = par_map(n, |i| crate::count::utf8_len_from_utf16(chunk_of(src, bounds, i)));
     let total: usize = sizes.iter().sum();
     assemble(
         &sizes,
-        |i, out| chunk8_strict(engine, chunk_of(src, bounds, i), out),
+        |i, out| match cancel_error(cancel) {
+            Some(e) => Err(e),
+            None => chunk8_strict(engine, chunk_of(src, bounds, i), out),
+        },
         |outcomes| join_strict(outcomes, total, |i, e| globalize_utf16(src, bounds[i], e)),
     )
     .map(|(v, _)| v)
@@ -713,13 +786,17 @@ fn run8_lossy<T: Utf16ToUtf8 + ?Sized>(
     engine: &T,
     src: &[u16],
     bounds: &[usize],
+    cancel: Option<&CancelToken>,
 ) -> TranscodeResult<(Vec<u8>, LossyResult)> {
     let n = bounds.len() - 1;
     let sizes = par_map(n, |i| crate::count::utf8_len_from_utf16(chunk_of(src, bounds, i)));
     let total: usize = sizes.iter().sum();
     assemble(
         &sizes,
-        |i, out| chunk8_lossy(engine, chunk_of(src, bounds, i), out),
+        |i, out| match cancel_error(cancel) {
+            Some(e) => Err(e),
+            None => chunk8_lossy(engine, chunk_of(src, bounds, i), out),
+        },
         |outcomes| join_lossy(outcomes, total, |i, e| globalize_utf16(src, bounds[i], e)),
     )
 }
@@ -736,8 +813,12 @@ pub trait ParallelUtf8ToUtf16: Utf8ToUtf16 {
     /// **global document coordinates**, bit-identical to
     /// [`Utf8ToUtf16::convert_to_vec_exact`]. Inputs at or below
     /// `opts.min_chunk` (and non-validating engines — see the module
-    /// docs) take the one-shot path.
+    /// docs) take the one-shot path. A tripped [`ParallelOptions::cancel`]
+    /// token fails with [`ErrorKind::Other`] instead of converting.
     fn par_convert_to_vec(&self, src: &[u8], opts: ParallelOptions) -> TranscodeResult<Vec<u16>> {
+        if let Some(e) = cancel_error(opts.cancel.as_ref()) {
+            return Err(e);
+        }
         if !self.validating() {
             return self.convert_to_vec(src);
         }
@@ -745,7 +826,7 @@ pub trait ParallelUtf8ToUtf16: Utf8ToUtf16 {
         if parts <= 1 {
             return self.convert_to_vec_exact(src);
         }
-        run16_strict(self, src, &split_utf8(src, parts))
+        run16_strict(self, src, &split_utf8(src, parts), opts.cancel.as_ref())
     }
 
     /// Lossy (U+FFFD) conversion across threads: output, replacement
@@ -756,6 +837,9 @@ pub trait ParallelUtf8ToUtf16: Utf8ToUtf16 {
         src: &[u8],
         opts: ParallelOptions,
     ) -> TranscodeResult<(Vec<u16>, LossyResult)> {
+        if let Some(e) = cancel_error(opts.cancel.as_ref()) {
+            return Err(e);
+        }
         if !self.validating() {
             return self.convert_lossy_to_vec(src);
         }
@@ -763,7 +847,7 @@ pub trait ParallelUtf8ToUtf16: Utf8ToUtf16 {
         if parts <= 1 {
             return self.convert_lossy_to_vec(src);
         }
-        run16_lossy(self, src, &split_utf8(src, parts))
+        run16_lossy(self, src, &split_utf8(src, parts), opts.cancel.as_ref())
     }
 
     /// Strict conversion chunked at the given candidate cut offsets
@@ -774,7 +858,7 @@ pub trait ParallelUtf8ToUtf16: Utf8ToUtf16 {
         if !self.validating() {
             return self.convert_to_vec(src);
         }
-        run16_strict(self, src, &bounds_at_utf8(src, cuts))
+        run16_strict(self, src, &bounds_at_utf8(src, cuts), None)
     }
 
     /// [`ParallelUtf8ToUtf16::par_convert_to_vec_at`], lossy.
@@ -786,7 +870,7 @@ pub trait ParallelUtf8ToUtf16: Utf8ToUtf16 {
         if !self.validating() {
             return self.convert_lossy_to_vec(src);
         }
-        run16_lossy(self, src, &bounds_at_utf8(src, cuts))
+        run16_lossy(self, src, &bounds_at_utf8(src, cuts), None)
     }
 }
 
@@ -798,6 +882,9 @@ pub trait ParallelUtf16ToUtf8: Utf16ToUtf8 {
     /// Strict conversion across threads; see
     /// [`ParallelUtf8ToUtf16::par_convert_to_vec`].
     fn par_convert_to_vec(&self, src: &[u16], opts: ParallelOptions) -> TranscodeResult<Vec<u8>> {
+        if let Some(e) = cancel_error(opts.cancel.as_ref()) {
+            return Err(e);
+        }
         if !self.validating() {
             return self.convert_to_vec(src);
         }
@@ -805,7 +892,7 @@ pub trait ParallelUtf16ToUtf8: Utf16ToUtf8 {
         if parts <= 1 {
             return self.convert_to_vec_exact(src);
         }
-        run8_strict(self, src, &split_utf16(src, parts))
+        run8_strict(self, src, &split_utf16(src, parts), opts.cancel.as_ref())
     }
 
     /// Lossy conversion across threads; see
@@ -815,6 +902,9 @@ pub trait ParallelUtf16ToUtf8: Utf16ToUtf8 {
         src: &[u16],
         opts: ParallelOptions,
     ) -> TranscodeResult<(Vec<u8>, LossyResult)> {
+        if let Some(e) = cancel_error(opts.cancel.as_ref()) {
+            return Err(e);
+        }
         if !self.validating() {
             return self.convert_lossy_to_vec(src);
         }
@@ -822,7 +912,7 @@ pub trait ParallelUtf16ToUtf8: Utf16ToUtf8 {
         if parts <= 1 {
             return self.convert_lossy_to_vec(src);
         }
-        run8_lossy(self, src, &split_utf16(src, parts))
+        run8_lossy(self, src, &split_utf16(src, parts), opts.cancel.as_ref())
     }
 
     /// Strict conversion at explicit candidate cuts; see
@@ -831,7 +921,7 @@ pub trait ParallelUtf16ToUtf8: Utf16ToUtf8 {
         if !self.validating() {
             return self.convert_to_vec(src);
         }
-        run8_strict(self, src, &bounds_at_utf16(src, cuts))
+        run8_strict(self, src, &bounds_at_utf16(src, cuts), None)
     }
 
     /// [`ParallelUtf16ToUtf8::par_convert_to_vec_at`], lossy.
@@ -843,7 +933,7 @@ pub trait ParallelUtf16ToUtf8: Utf16ToUtf8 {
         if !self.validating() {
             return self.convert_lossy_to_vec(src);
         }
-        run8_lossy(self, src, &bounds_at_utf16(src, cuts))
+        run8_lossy(self, src, &bounds_at_utf16(src, cuts), None)
     }
 }
 
@@ -888,13 +978,21 @@ fn chunk_latin1(k: &Latin1Kernels, chunk: &[u8], out: &mut [u8]) -> Result<(), T
     Ok(())
 }
 
-fn run_latin1(k: &Latin1Kernels, src: &[u8], bounds: &[usize]) -> TranscodeResult<Vec<u8>> {
+fn run_latin1(
+    k: &Latin1Kernels,
+    src: &[u8],
+    bounds: &[usize],
+    cancel: Option<&CancelToken>,
+) -> TranscodeResult<Vec<u8>> {
     let n = bounds.len() - 1;
     let sizes = par_map(n, |i| crate::count::utf8_len_from_latin1(chunk_of(src, bounds, i)));
     let total: usize = sizes.iter().sum();
     assemble(
         &sizes,
-        |i, out| chunk_latin1(k, chunk_of(src, bounds, i), out),
+        |i, out| match cancel_error(cancel) {
+            Some(e) => Err(e),
+            None => chunk_latin1(k, chunk_of(src, bounds, i), out),
+        },
         |outcomes| join_strict(outcomes, total, |i, e| e.offset(bounds[i])),
     )
     .map(|(v, _)| v)
@@ -909,9 +1007,12 @@ pub fn par_latin1_to_utf8_vec(
     src: &[u8],
     opts: ParallelOptions,
 ) -> TranscodeResult<Vec<u8>> {
+    if let Some(e) = cancel_error(opts.cancel.as_ref()) {
+        return Err(e);
+    }
     let parts = opts.plan_chunks(src.len());
     let bounds = bounds_from(src.len(), (1..parts).map(|i| i * src.len() / parts), |p| p);
-    run_latin1(kernels, src, &bounds)
+    run_latin1(kernels, src, &bounds, opts.cancel.as_ref())
 }
 
 /// [`par_latin1_to_utf8_vec`] at explicit cut offsets (sorted and
@@ -925,7 +1026,7 @@ pub fn par_latin1_to_utf8_vec_at(
     let mut cuts = cuts.to_vec();
     cuts.sort_unstable();
     let bounds = bounds_from(src.len(), cuts.into_iter(), |p| p);
-    run_latin1(kernels, src, &bounds)
+    run_latin1(kernels, src, &bounds, None)
 }
 
 #[cfg(test)]
@@ -937,7 +1038,7 @@ mod tests {
     use crate::transcode::utf8_to_utf16::OurUtf8ToUtf16;
 
     fn small_opts(threads: usize) -> ParallelOptions {
-        ParallelOptions { threads, min_chunk: 64 }
+        ParallelOptions { threads, min_chunk: 64, ..ParallelOptions::default() }
     }
 
     #[test]
@@ -994,9 +1095,17 @@ mod tests {
         let ref8 = to8.convert_to_vec_exact(&corpus.utf16).unwrap();
         for threads in [1, 2, 4, 8] {
             let opts = small_opts(threads);
-            assert_eq!(to16.par_convert_to_vec(&corpus.utf8, opts).unwrap(), ref16, "{threads}");
-            assert_eq!(to8.par_convert_to_vec(&corpus.utf16, opts).unwrap(), ref8, "{threads}");
-            let (l16, r16) = to16.par_convert_lossy_to_vec(&corpus.utf8, opts).unwrap();
+            assert_eq!(
+                to16.par_convert_to_vec(&corpus.utf8, opts.clone()).unwrap(),
+                ref16,
+                "{threads}"
+            );
+            assert_eq!(
+                to8.par_convert_to_vec(&corpus.utf16, opts.clone()).unwrap(),
+                ref8,
+                "{threads}"
+            );
+            let (l16, r16) = to16.par_convert_lossy_to_vec(&corpus.utf8, opts.clone()).unwrap();
             assert_eq!(l16, ref16);
             assert!(r16.clean() && r16.written == ref16.len());
             let (l8, r8) = to8.par_convert_lossy_to_vec(&corpus.utf16, opts).unwrap();
@@ -1035,7 +1144,7 @@ mod tests {
             let (ref8, refr8) = to8.convert_lossy_to_vec(&dirty16).unwrap();
             for threads in [2, 4, 8] {
                 let opts = small_opts(threads);
-                let (out, r) = to16.par_convert_lossy_to_vec(&dirty8, opts).unwrap();
+                let (out, r) = to16.par_convert_lossy_to_vec(&dirty8, opts.clone()).unwrap();
                 assert_eq!(out, ref16, "{} x{threads}", profile.label);
                 assert_eq!(r.replacements, refr16.replacements, "{} x{threads}", profile.label);
                 assert_eq!(r.first_error, refr16.first_error, "{} x{threads}", profile.label);
@@ -1105,6 +1214,54 @@ mod tests {
             let out = par_latin1_to_utf8_vec_at(k, &latin1, &[1, 63, 64, 65, 1000]).unwrap();
             assert_eq!(out, reference, "{} explicit cuts", k.key);
         }
+    }
+
+    #[test]
+    fn cancel_token_trips_on_flag_and_deadline() {
+        let token = CancelToken::new();
+        let peer = token.clone();
+        assert!(!token.is_cancelled());
+        peer.cancel(); // clones share the flag
+        assert!(token.is_cancelled());
+
+        let expired = CancelToken::with_deadline(Instant::now() - std::time::Duration::from_millis(1));
+        assert!(expired.is_cancelled());
+        let fresh =
+            CancelToken::with_deadline(Instant::now() + std::time::Duration::from_secs(3600));
+        assert!(!fresh.is_cancelled());
+    }
+
+    #[test]
+    fn tripped_token_aborts_the_conversion_with_no_output() {
+        let to16 = OurUtf8ToUtf16::validating();
+        let to8 = OurUtf16ToUtf8::validating();
+        let corpus = Corpus::generate(Language::Hindi, Collection::Lipsum);
+        let token = CancelToken::new();
+        token.cancel();
+        let opts =
+            ParallelOptions { threads: 4, min_chunk: 64, cancel: Some(token.clone()) };
+        let err = to16.par_convert_to_vec(&corpus.utf8, opts.clone()).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Other);
+        let err = to8.par_convert_to_vec(&corpus.utf16, opts.clone()).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Other);
+        let err = to16.par_convert_lossy_to_vec(&corpus.utf8, opts.clone()).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Other);
+        let latin1 = Corpus::latin1(Collection::Lipsum).latin1_bytes().unwrap();
+        let err = par_latin1_to_utf8_vec(latin1::kernel_entries()[0], &latin1, opts).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Other);
+    }
+
+    #[test]
+    fn untripped_token_is_a_no_op() {
+        let to16 = OurUtf8ToUtf16::validating();
+        let corpus = Corpus::generate(Language::Russian, Collection::Lipsum);
+        let reference = to16.convert_to_vec_exact(&corpus.utf8).unwrap();
+        let opts = ParallelOptions {
+            threads: 4,
+            min_chunk: 64,
+            cancel: Some(CancelToken::new()),
+        };
+        assert_eq!(to16.par_convert_to_vec(&corpus.utf8, opts).unwrap(), reference);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Chaos suite: drives the coordinator's deterministic fault-injection
+//! points (`--features chaos`) and proves the service's core
+//! invariants:
+//!
+//! 1. **Exactly one outcome** — every submitted request gets exactly
+//!    one response or one typed error: no deadlock, no silent drop,
+//!    even under injected panics, worker deaths, stalls, full queues
+//!    and allocation failures.
+//! 2. **Bit-identity** — outputs on every degraded rung are identical
+//!    to the one-shot `best` engine's.
+//! 3. **Reconciliation** — `StatsSnapshot` counters match the injected
+//!    fault counts (deterministic schedules) or the observed fates
+//!    (stress schedules).
+//!
+//! Fault plans key on the pool's dequeue sequence number, which is
+//! deterministic for a single-worker service fed synchronously — the
+//! deterministic tests below are built exactly that way.
+
+use simdutf_rs::coordinator::{
+    EngineChoice, Fate, FaultPlan, OverloadPolicy, Request, Response, Rung, ServiceConfig,
+    TranscodeService,
+};
+use simdutf_rs::prelude::*;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+/// A single-worker service whose dequeue order (and therefore fault
+/// schedule) is deterministic when fed synchronously.
+fn solo_service(faults: FaultPlan) -> TranscodeService {
+    TranscodeService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 16,
+        engine: EngineChoice::Simd { validate: true },
+        faults,
+        ..Default::default()
+    })
+    .expect("service")
+}
+
+fn text_payload(i: u64) -> Vec<u8> {
+    format!("chaos request {i}: héllo 漢字 🙂 {}", "x".repeat(64)).into_bytes()
+}
+
+#[test]
+fn injected_panics_are_isolated_and_counted() {
+    let svc = solo_service(FaultPlan { panic_on: vec![2, 4], ..FaultPlan::default() });
+    let mut outcomes = Vec::new();
+    for i in 1..=6u64 {
+        // Synchronous: job i is dequeue sequence i.
+        outcomes.push(svc.transcode(Request::utf8(i, text_payload(i))));
+    }
+    for (i, resp) in outcomes.iter().enumerate() {
+        let seq = (i + 1) as u64;
+        if seq == 2 || seq == 4 {
+            assert_eq!(resp.fate, Fate::Panicked, "job {seq} must be isolated");
+            assert!(!resp.ok());
+        } else {
+            assert_eq!(resp.fate, Fate::Completed, "job {seq} must complete normally");
+            assert!(resp.ok(), "the worker survives its neighbors' panics");
+        }
+    }
+    let snap = svc.stats();
+    assert_eq!(snap.panics, 2, "counter reconciles with the injected panic count");
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.respawns, 0, "caught panics never kill the worker");
+    svc.shutdown();
+}
+
+#[test]
+fn worker_death_notifies_caller_and_respawns() {
+    let svc = solo_service(FaultPlan { abort_worker_on: vec![2], ..FaultPlan::default() });
+    assert!(svc.transcode(Request::utf8(1, text_payload(1))).ok());
+    // Job 2 kills the worker with the job in hand: the dropped reply
+    // channel synthesizes a Panicked response — notified, not hung.
+    let died = svc.transcode(Request::utf8(2, text_payload(2)));
+    assert_eq!(died.fate, Fate::Panicked);
+    // The supervisor respawns the worker, so job 3 completes on the
+    // fresh thread (this recv would hang forever without supervision).
+    assert!(svc.transcode(Request::utf8(3, text_payload(3))).ok());
+    std::thread::sleep(Duration::from_millis(50)); // let the respawn counter land
+    let snap = svc.stats();
+    assert_eq!(snap.respawns, 1, "counter reconciles with the injected death count");
+    assert_eq!(snap.panics, 0, "a hard death is not a caught panic");
+    assert_eq!(snap.completed, 2);
+    svc.shutdown();
+}
+
+#[test]
+fn alloc_failure_diverts_with_structured_error_and_degrades() {
+    let svc = solo_service(FaultPlan { alloc_fail_on: vec![1], ..FaultPlan::default() });
+    assert_eq!(svc.degrade_rung(), Rung::Configured);
+    let refused = svc.transcode(Request::utf8(1, text_payload(1)));
+    assert_eq!(refused.fate, Fate::Completed, "an alloc refusal is a structured answer");
+    assert_eq!(refused.error().expect("refused").kind, ErrorKind::OutputBuffer);
+    // Memory pressure steps the ladder down one rung...
+    assert_eq!(svc.degrade_rung(), Rung::Simd256);
+    // ...and the next conversion both runs there and says so.
+    let degraded = svc.transcode(Request::utf8(2, text_payload(2)));
+    assert!(degraded.ok());
+    assert_eq!(degraded.rung, Rung::Simd256);
+    let snap = svc.stats();
+    assert_eq!(snap.degraded, 1);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.invalid, 0, "the payload was never invalid");
+    svc.shutdown();
+}
+
+#[test]
+fn slow_conversion_past_the_deadline_times_out_mid_flight() {
+    // An oversized payload routes through the parallel pipeline, whose
+    // cancel token carries the deadline; the injected slowdown burns
+    // the whole budget before the conversion starts, so the token is
+    // tripped at the first chunk and the worker reports a timeout.
+    let svc = TranscodeService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 16,
+        engine: EngineChoice::Simd { validate: true },
+        parallel_threshold: 1024,
+        parallel: ParallelOptions { threads: 2, min_chunk: 256, ..Default::default() },
+        faults: FaultPlan { slow_on: vec![(1, 80)], ..FaultPlan::default() },
+        ..Default::default()
+    })
+    .expect("service");
+    let payload = "deadline fodder 漢字 ".repeat(4096).into_bytes(); // ~90 KB, oversized
+    let resp = svc.transcode(
+        Request::utf8(1, payload).with_deadline(Duration::from_millis(10)),
+    );
+    assert_eq!(resp.fate, Fate::TimedOut, "expiry mid-service must be reported, not dropped");
+    assert!(!resp.ok());
+    assert_eq!(svc.stats().timeouts, 1, "counter reconciles with the injected slowdown");
+    // The service is still healthy afterwards.
+    assert!(svc.transcode(Request::utf8(2, b"after the storm".to_vec())).ok());
+    svc.shutdown();
+}
+
+#[test]
+fn queue_stalls_delay_but_never_drop() {
+    // Every job stalls 5 ms at dequeue; requests with generous
+    // deadlines all complete, requests with tiny deadlines all time
+    // out — nothing hangs, nothing disappears.
+    let svc = solo_service(FaultPlan { stall_dequeue_ms: 5, ..FaultPlan::default() });
+    let mut rxs = Vec::new();
+    for i in 1..=4u64 {
+        rxs.push((true, svc.submit(Request::utf8(i, text_payload(i))).expect("admitted")));
+    }
+    for i in 5..=8u64 {
+        let doomed = Request::utf8(i, text_payload(i)).with_deadline(Duration::from_millis(1));
+        rxs.push((false, svc.submit(doomed).expect("admitted")));
+    }
+    for (should_complete, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("answered, not dropped");
+        if should_complete {
+            assert_eq!(resp.fate, Fate::Completed);
+            assert!(resp.ok());
+        } else {
+            assert_eq!(resp.fate, Fate::TimedOut);
+        }
+    }
+    let snap = svc.stats();
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.timeouts, 4);
+    svc.shutdown();
+}
+
+#[test]
+fn every_request_gets_exactly_one_outcome_under_compound_chaos() {
+    // The stress invariant: panics, a worker death, an allocation
+    // failure and per-job stalls, against a tiny queue with the
+    // shed-oldest policy — every one of the 40 requests must resolve
+    // to exactly one response or typed error, and the counters must
+    // reconcile with the observed fates.
+    let svc = TranscodeService::start(ServiceConfig {
+        workers: 2,
+        queue_depth: 4,
+        engine: EngineChoice::Simd { validate: true },
+        overload: OverloadPolicy::ShedOldest,
+        respawn_budget: 4,
+        faults: FaultPlan {
+            panic_on: vec![3],
+            abort_worker_on: vec![6],
+            alloc_fail_on: vec![9],
+            stall_dequeue_ms: 2,
+            ..FaultPlan::default()
+        },
+        ..Default::default()
+    })
+    .expect("service");
+
+    const N: u64 = 40;
+    let mut rxs = Vec::new();
+    let mut submit_errors = 0u64;
+    for i in 0..N {
+        match svc.try_submit(Request::utf8(i, text_payload(i))) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => submit_errors += 1,
+        }
+        if i % 4 == 3 {
+            // Pace the burst so the pool actually dequeues deep enough
+            // for every scheduled fault to fire.
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    let mut completed = 0u64;
+    let mut panicked = 0u64;
+    let mut shed = 0u64;
+    let mut alloc_refused = 0u64;
+    let mut disconnected = 0u64;
+    for rx in &rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Response { fate: Fate::Completed, result: Ok(_), .. }) => completed += 1,
+            Ok(Response { fate: Fate::Completed, result: Err(e), .. }) => {
+                assert_eq!(e.kind, ErrorKind::OutputBuffer, "only injected alloc failures");
+                alloc_refused += 1;
+            }
+            Ok(Response { fate: Fate::Panicked, .. }) => panicked += 1,
+            Ok(Response { fate: Fate::Shed, .. }) => shed += 1,
+            Ok(Response { fate, .. }) => panic!("unexpected fate {fate} in this plan"),
+            // A dropped reply channel is the worker-death notification.
+            Err(RecvTimeoutError::Disconnected) => disconnected += 1,
+            Err(RecvTimeoutError::Timeout) => panic!("a request hung: silent drop"),
+        }
+    }
+    // Exactly one outcome each.
+    assert_eq!(
+        completed + panicked + shed + alloc_refused + disconnected + submit_errors,
+        N,
+        "every request resolves exactly once"
+    );
+
+    std::thread::sleep(Duration::from_millis(50)); // let respawn counters land
+    let snap = svc.stats();
+    assert_eq!(snap.requests, N);
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.panics, panicked, "panic counter reconciles with observed fates");
+    assert_eq!(snap.timeouts, 0, "no deadlines in this plan");
+    assert_eq!(snap.sheds, shed + submit_errors, "shed counter = victims + refused newcomers");
+    assert_eq!(snap.respawns, disconnected, "one respawn per worker death");
+    assert!(panicked >= 1, "the scheduled panic fired");
+    assert!(disconnected <= 1, "at most the one scheduled death");
+    svc.shutdown();
+}
+
+#[test]
+fn degraded_rungs_are_bit_identical_to_one_shot_best() {
+    // The ladder's contract: degrading changes throughput, never
+    // bytes. Reference outputs come straight from the registry's
+    // one-shot `best` engines.
+    let best8 = Registry::global().get_utf8("best").expect("best");
+    let best16 = Registry::global().get_utf16("best").expect("best");
+    let svc = solo_service(FaultPlan::none());
+    let text = "bit-identical? ünïcode 文字 🙂 ıİşŞğĞ ".repeat(200);
+    let utf8 = text.clone().into_bytes();
+    let units: Vec<u16> = text.encode_utf16().collect();
+    let ref16 = best8.convert_to_vec(&utf8).expect("valid");
+    let ref8 = best16.convert_to_vec(&units).expect("valid");
+    let latin1: Vec<u8> = (0u8..=255).cycle().take(4096).collect();
+    let ref_latin1_utf8 =
+        latin1.iter().map(|&b| b as char).collect::<String>().into_bytes();
+    for rung in Rung::LADDER {
+        svc.force_degrade(rung);
+        let r = svc.transcode(Request::utf8(1, utf8.clone()));
+        assert_eq!(r.rung, rung);
+        assert_eq!(r.utf16().expect("valid"), &ref16[..], "utf8→utf16 differs on {rung}");
+        let r = svc.transcode(Request::utf16(2, units.clone()));
+        assert_eq!(r.utf8().expect("valid"), &ref8[..], "utf16→utf8 differs on {rung}");
+        let r = svc.transcode(Request::latin1(3, latin1.clone()));
+        assert_eq!(r.utf8().expect("total"), &ref_latin1_utf8[..], "latin1 differs on {rung}");
+        // Dirty input: the structured error is rung-invariant too.
+        let r = svc.transcode(Request::utf8(4, vec![b'a', 0xED, 0xA0, 0x80]));
+        let err = r.error().expect("invalid on every rung");
+        assert_eq!((err.kind, err.position), (ErrorKind::Surrogate, 1), "error differs on {rung}");
+    }
+    svc.shutdown();
+}

@@ -277,14 +277,15 @@ fn thread_ladder_matches_oneshot_on_generated_corpora() {
     let src16 = corpus.utf16_prefix(32768).to_vec();
     let dirty8 = corrupt_utf8(&src8, 10, 0xC0FFEE);
     for e in r.parallel_entries() {
-        let opts = ParallelOptions { threads: e.threads, min_chunk: 1024 };
+        let opts =
+            ParallelOptions { threads: e.threads, min_chunk: 1024, ..Default::default() };
         let to16 = r.get_utf8(e.engine).expect("parallel entries resolve");
         let to8 = r.get_utf16(e.engine).expect("parallel entries resolve");
         let want = to16.convert_to_vec_exact(&src8).expect("corpus is valid");
-        let got = to16.par_convert_to_vec(&src8, opts).expect("parallel strict");
+        let got = to16.par_convert_to_vec(&src8, opts.clone()).expect("parallel strict");
         assert_eq!(got, want, "{} utf8→utf16", e.key);
         let want = to8.convert_to_vec_exact(&src16).expect("corpus is valid");
-        let got = to8.par_convert_to_vec(&src16, opts).expect("parallel strict");
+        let got = to8.par_convert_to_vec(&src16, opts.clone()).expect("parallel strict");
         assert_eq!(got, want, "{} utf16→utf8", e.key);
         let (want, wr) = to16.convert_lossy_to_vec(&dirty8).expect("lossy is total");
         let (got, gr) = to16.par_convert_lossy_to_vec(&dirty8, opts).expect("parallel lossy");
@@ -434,7 +435,7 @@ fn miri_parallel_smoke() {
     assert_eq!(got, want);
     // Executor entry point (auto split, 2 scoped threads).
     let body = "auto split body \u{e9}\u{6f22}\u{1f642} ".repeat(64).into_bytes();
-    let opts = ParallelOptions { threads: 2, min_chunk: 64 };
+    let opts = ParallelOptions { threads: 2, min_chunk: 64, ..Default::default() };
     let want = to16.convert_to_vec_exact(&body).expect("valid corpus");
     let got = to16.par_convert_to_vec(&body, opts).expect("parallel strict");
     assert_eq!(got, want);

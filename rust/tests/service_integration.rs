@@ -17,6 +17,7 @@ fn service_handles_every_corpus_in_both_directions() {
         workers: 4,
         queue_depth: 128,
         engine: EngineChoice::Simd { validate: true },
+        ..Default::default()
     })
     .unwrap();
     let mut pending = Vec::new();
@@ -24,12 +25,14 @@ fn service_handles_every_corpus_in_both_directions() {
     for (i, corpus) in corpora.iter().enumerate() {
         pending.push((
             corpus.utf16.clone(),
-            service.submit(Request::utf8(i as u64, corpus.utf8.clone())),
+            service.submit(Request::utf8(i as u64, corpus.utf8.clone())).expect("admitted"),
             true,
         ));
         pending.push((
             corpus.utf16.clone(),
-            service.submit(Request::utf16(1000 + i as u64, corpus.utf16.clone())),
+            service
+                .submit(Request::utf16(1000 + i as u64, corpus.utf16.clone()))
+                .expect("admitted"),
             false,
         ));
     }
@@ -56,12 +59,14 @@ fn xla_service_agrees_with_simd_service_when_artifacts_present() {
         workers: 1,
         queue_depth: 16,
         engine: EngineChoice::Xla { artifacts_dir: dir },
+        ..Default::default()
     })
     .unwrap();
     let simd = TranscodeService::start(ServiceConfig {
         workers: 1,
         queue_depth: 16,
         engine: EngineChoice::Simd { validate: true },
+        ..Default::default()
     })
     .unwrap();
     // Keep inputs modest: the interpret-mode kernels are CPU-emulated.

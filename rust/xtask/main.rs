@@ -26,10 +26,11 @@
 //!    a `// xtask: allow-no-portable-mirror (reason)` waiver.
 //! 4. **BENCH artifact schema** — every checked-in
 //!    `artifacts/BENCH_*.json` parses (hand-rolled JSON reader) and
-//!    validates against the documented schema v6
+//!    validates against the documented schema v7
 //!    (`docs/BENCHMARKING.md`), with its engine/kernel/parallel row
 //!    sets tied to the keys parsed from `engine.rs` in rule 2 — the
-//!    artifacts cannot drift from the registry.
+//!    artifacts cannot drift from the registry. v7 adds the `service`
+//!    resilience section (latency percentiles, shed/timeout rates).
 //!
 //! Usage:
 //!
@@ -901,10 +902,10 @@ impl JsonParser<'_> {
 }
 
 // ---------------------------------------------------------------------------
-// Rule 4: BENCH artifact schema v6
+// Rule 4: BENCH artifact schema v7
 // ---------------------------------------------------------------------------
 
-const SCHEMA_V6: &str = "simdutf-rs-bench-v6";
+const SCHEMA_V7: &str = "simdutf-rs-bench-v7";
 
 fn check_bench_artifacts(root: &Path, keys: &RegistryKeys, diags: &mut Vec<String>) {
     let dir = root.join("artifacts");
@@ -981,7 +982,7 @@ fn check_section(
     }
 }
 
-/// Validate one BENCH json document against schema v6
+/// Validate one BENCH json document against schema v7
 /// (`docs/BENCHMARKING.md`), with the row sets tied to the engine keys
 /// parsed from `engine.rs`.
 fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut Vec<String>) {
@@ -993,9 +994,9 @@ fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut V
         }
     };
     match doc.get("schema") {
-        Some(Json::Str(s)) if s == SCHEMA_V6 => {}
+        Some(Json::Str(s)) if s == SCHEMA_V7 => {}
         other => {
-            diags.push(format!("{label}: schema must be \"{SCHEMA_V6}\", got {other:?}"));
+            diags.push(format!("{label}: schema must be \"{SCHEMA_V7}\", got {other:?}"));
             return;
         }
     }
@@ -1082,6 +1083,39 @@ fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut V
             let name = format!("{section}.{sub}");
             check_section(label, &name, obj.get(sub), rows, rows, true, diags);
         }
+    }
+
+    // Service resilience section (v7): a fixed field set. Numeric
+    // fields may be null (placeholder artifacts seeded without a
+    // toolchain), and the policy must be a spellable
+    // `OverloadPolicy` or null.
+    match doc.get("service") {
+        Some(svc @ Json::Obj(_)) => {
+            for field in [
+                "requests",
+                "workers",
+                "queue_depth",
+                "p50_us",
+                "p99_us",
+                "shed_rate",
+                "timeout_rate",
+                "throughput_mbps",
+            ] {
+                if !matches!(svc.get(field), Some(Json::Num(_) | Json::Null)) {
+                    diags.push(format!("{label}: service.{field} must be a number or null"));
+                }
+            }
+            match svc.get("overload_policy") {
+                Some(Json::Null) => {}
+                Some(Json::Str(s))
+                    if matches!(s.as_str(), "reject" | "shed-oldest" | "degrade") => {}
+                other => diags.push(format!(
+                    "{label}: service.overload_policy must be \
+                     reject|shed-oldest|degrade or null, got {other:?}"
+                )),
+            }
+        }
+        _ => diags.push(format!("{label}: missing or non-object section \"service\" (v7)")),
     }
 
     // Parallel section: <engine>@<threads> rows over the fixed ladder.
@@ -1321,6 +1355,17 @@ mod tests {
     "corpus_bytes": null,
     "utf8_to_utf16": {{{parallel_rows}}},
     "utf16_to_utf8": {{{parallel_rows}}}
+  }},
+  "service": {{
+    "requests": null,
+    "workers": null,
+    "queue_depth": null,
+    "overload_policy": null,
+    "p50_us": null,
+    "p99_us": null,
+    "shed_rate": null,
+    "timeout_rate": null,
+    "throughput_mbps": null
   }}
 }}
 "#
@@ -1328,23 +1373,38 @@ mod tests {
     }
 
     #[test]
-    fn well_formed_v6_bench_passes() {
-        let src = minimal_bench(SCHEMA_V6, "\"simd128@1\": null, \"best@4\": null");
+    fn well_formed_v7_bench_passes() {
+        let src = minimal_bench(SCHEMA_V7, "\"simd128@1\": null, \"best@4\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert!(d.is_empty(), "{d:?}");
     }
 
     #[test]
     fn wrong_schema_version_is_rejected() {
-        let src = minimal_bench("simdutf-rs-bench-v5", "\"simd128@1\": null, \"best@1\": null");
+        let src = minimal_bench("simdutf-rs-bench-v6", "\"simd128@1\": null, \"best@1\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert_eq!(d.len(), 1, "{d:?}");
         assert!(d[0].contains("schema must be"), "{d:?}");
     }
 
     #[test]
+    fn missing_or_malformed_service_section_is_rejected() {
+        // Missing entirely…
+        let src = minimal_bench(SCHEMA_V7, "\"simd128@1\": null, \"best@1\": null");
+        let start = src.find("  \"service\"").unwrap();
+        let end = src[start..].find("}\n").unwrap() + start + 2;
+        let gutted = format!("{}{}", &src[..start - 2], &src[end..]); // also eat the ",\n"
+        let d = diags_of(|d| check_bench_schema("b.json", &gutted, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("\"service\"")), "{d:?}");
+        // …and with a misspelled policy.
+        let bad = src.replace("\"overload_policy\": null", "\"overload_policy\": \"drop\"");
+        let d = diags_of(|d| check_bench_schema("b.json", &bad, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("overload_policy")), "{d:?}");
+    }
+
+    #[test]
     fn unknown_engine_row_is_rejected() {
-        let src = minimal_bench(SCHEMA_V6, "\"simd128@1\": null, \"best@1\": null")
+        let src = minimal_bench(SCHEMA_V7, "\"simd128@1\": null, \"best@1\": null")
             .replace("\"icu\": null, \"simd128\": null", "\"typo\": null, \"simd128\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert!(d.iter().any(|m| m.contains("unknown row \"typo\"")), "{d:?}");
@@ -1353,7 +1413,7 @@ mod tests {
 
     #[test]
     fn malformed_parallel_cell_is_rejected() {
-        let src = minimal_bench(SCHEMA_V6, "\"simd128@3\": null, \"best@1\": null");
+        let src = minimal_bench(SCHEMA_V7, "\"simd128@3\": null, \"best@1\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert!(d.iter().any(|m| m.contains("simd128@3")), "{d:?}");
         assert!(
