@@ -41,6 +41,21 @@ pub struct FaultPlan {
     /// deadline check — a blunt queue-stall knob for overload and
     /// shed-policy scenarios (0 = no stall).
     pub stall_dequeue_ms: u64,
+    /// `(shard index, milliseconds)` pairs: the named shard's worker
+    /// sleeps this long at the top of every acquire loop *before*
+    /// taking its queue lock (sharded pool only) — the shard looks
+    /// stalled from outside and idle siblings steal its queued jobs.
+    pub stall_shard: Vec<(usize, u64)>,
+    /// Panic inside the conversion of a *stolen* job for these sequence
+    /// numbers: exercises panic isolation on the work-stealing path —
+    /// the original submitter (who hashed to a different shard) must
+    /// still get exactly one `Fate::Panicked` response.
+    pub panic_on_steal: Vec<u64>,
+    /// Refuse the batch *arena* allocation when any member of the
+    /// coalesced batch carries one of these sequence numbers: the batch
+    /// steps the ladder down a rung and every member re-runs one-shot
+    /// (all still complete — this diverts the batch, not the jobs).
+    pub batch_alloc_fail_on: Vec<u64>,
 }
 
 impl FaultPlan {
@@ -81,10 +96,37 @@ impl FaultPlan {
         }
     }
 
+    /// Sleep if `shard` is on the stalled-shard schedule (called by the
+    /// sharded pool's workers at the top of each acquire loop, before
+    /// the queue lock, so siblings can steal during the sleep).
+    pub fn stall_shard(&self, shard: usize) {
+        if let Some(&(_, ms)) = self.stall_shard.iter().find(|(s, _)| *s == shard) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    /// Panic iff `seq` is on the mid-steal panic schedule. Only called
+    /// for jobs that were actually stolen, so scheduling every sequence
+    /// here panics exactly the stolen ones.
+    pub fn panic_mid_steal(&self, seq: u64) {
+        if self.panic_on_steal.contains(&seq) {
+            panic!("chaos: injected panic at stolen job {seq}");
+        }
+    }
+
+    /// True iff a batch whose members carry these sequence numbers
+    /// should have its arena allocation refused.
+    pub fn batch_alloc_fails(&self, seqs: &[u64]) -> bool {
+        seqs.iter().any(|s| self.batch_alloc_fail_on.contains(s))
+    }
+
     /// Total faults this plan injects that consume a job's normal
     /// completion (panics, worker aborts, allocation failures — not
-    /// slowdowns or stalls, which delay but do not divert). The chaos
-    /// suite reconciles service counters against this.
+    /// slowdowns or stalls, which delay but do not divert). Scoped to
+    /// the single-queue pool: steal and batch faults either apply only
+    /// to the sharded pool or (batch alloc refusal) divert a batch
+    /// whose members still complete, so they are not counted here. The
+    /// chaos suite reconciles service counters against this.
     pub fn diverted_jobs(&self) -> usize {
         self.panic_on.len() + self.abort_worker_on.len() + self.alloc_fail_on.len()
     }
@@ -102,6 +144,7 @@ mod tests {
             alloc_fail_on: vec![7],
             slow_on: vec![(2, 1)],
             stall_dequeue_ms: 0,
+            ..FaultPlan::default()
         };
         plan.maybe_panic(1); // not 3: must not panic
         assert!(!plan.abort_worker(3));
@@ -111,6 +154,28 @@ mod tests {
         plan.slow_conversion(9); // off-schedule: returns immediately
         assert_eq!(plan.diverted_jobs(), 3);
         assert_eq!(FaultPlan::none().diverted_jobs(), 0);
+    }
+
+    #[test]
+    fn shard_schedules_fire_only_on_their_targets() {
+        let plan = FaultPlan {
+            batch_alloc_fail_on: vec![4, 9],
+            ..FaultPlan::default()
+        };
+        plan.stall_shard(0); // no schedule: returns immediately
+        plan.panic_mid_steal(4); // not on the steal schedule: must not panic
+        assert!(plan.batch_alloc_fails(&[1, 9]));
+        assert!(!plan.batch_alloc_fails(&[1, 2, 3]));
+        assert!(!plan.batch_alloc_fails(&[]));
+        // Shard faults never perturb single-queue reconciliation.
+        assert_eq!(plan.diverted_jobs(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos: injected panic at stolen job 6")]
+    fn scheduled_steal_panic_fires() {
+        let plan = FaultPlan { panic_on_steal: vec![6], ..FaultPlan::default() };
+        plan.panic_mid_steal(6);
     }
 
     #[test]

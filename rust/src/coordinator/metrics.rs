@@ -45,6 +45,19 @@ pub struct ServiceStats {
     /// Conversions served below the configured rung of the degradation
     /// ladder (`Response::rung` ≠ `Rung::Configured`).
     pub degraded: AtomicU64,
+    /// Jobs an idle shard worker took from a sibling shard's queue
+    /// (sharded pool only; always 0 on the single-queue service).
+    pub steals: AtomicU64,
+    /// Coalesced arena passes executed by the batching layer (each one
+    /// served two or more requests with a single allocation).
+    pub batches: AtomicU64,
+    /// Requests served *through* those arena passes (so the mean batch
+    /// occupancy is `batched_requests / batches`).
+    pub batched_requests: AtomicU64,
+    /// Assembled batches whose arena was refused (allocation pressure or
+    /// an injected fault) and whose members re-ran one-shot instead —
+    /// every member still completed, one request at a time.
+    pub batch_fallbacks: AtomicU64,
 }
 
 impl ServiceStats {
@@ -97,6 +110,10 @@ impl ServiceStats {
             sheds: self.sheds.load(Ordering::Relaxed),
             timeouts: self.timeouts.load(Ordering::Relaxed),
             degraded: self.degraded.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            batch_fallbacks: self.batch_fallbacks.load(Ordering::Relaxed),
         }
     }
 }
@@ -138,6 +155,16 @@ pub struct StatsSnapshot {
     pub timeouts: u64,
     /// Conversions served on a degraded rung of the ladder.
     pub degraded: u64,
+    /// Jobs stolen across shards (see [`ServiceStats::steals`]).
+    pub steals: u64,
+    /// Coalesced arena passes (see [`ServiceStats::batches`]).
+    pub batches: u64,
+    /// Requests served through arena passes (see
+    /// [`ServiceStats::batched_requests`]).
+    pub batched_requests: u64,
+    /// Batches that fell back to one-shot members (see
+    /// [`ServiceStats::batch_fallbacks`]).
+    pub batch_fallbacks: u64,
 }
 
 impl std::fmt::Display for StatsSnapshot {
@@ -146,7 +173,8 @@ impl std::fmt::Display for StatsSnapshot {
             f,
             "requests={} completed={} rejected={} invalid={} bytes_in={} bytes_out={} \
              chars={} replacements={} mean_latency={:?} max_latency={:?} \
-             panics={} respawns={} sheds={} timeouts={} degraded={}",
+             panics={} respawns={} sheds={} timeouts={} degraded={} \
+             steals={} batches={} batched_requests={} batch_fallbacks={}",
             self.requests,
             self.completed,
             self.rejected,
@@ -162,6 +190,10 @@ impl std::fmt::Display for StatsSnapshot {
             self.sheds,
             self.timeouts,
             self.degraded,
+            self.steals,
+            self.batches,
+            self.batched_requests,
+            self.batch_fallbacks,
         )
     }
 }
@@ -201,6 +233,24 @@ mod tests {
         assert_eq!(snap.degraded, 3);
         let line = snap.to_string();
         for field in ["panics=2", "respawns=1", "sheds=5", "timeouts=4", "degraded=3"] {
+            assert!(line.contains(field), "missing {field} in {line}");
+        }
+    }
+
+    #[test]
+    fn shard_counters_flow_into_snapshot_and_display() {
+        let s = ServiceStats::default();
+        s.steals.fetch_add(7, Ordering::Relaxed);
+        s.batches.fetch_add(2, Ordering::Relaxed);
+        s.batched_requests.fetch_add(9, Ordering::Relaxed);
+        s.batch_fallbacks.fetch_add(1, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.steals, 7);
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.batched_requests, 9);
+        assert_eq!(snap.batch_fallbacks, 1);
+        let line = snap.to_string();
+        for field in ["steals=7", "batches=2", "batched_requests=9", "batch_fallbacks=1"] {
             assert!(line.contains(field), "missing {field} in {line}");
         }
     }

@@ -42,18 +42,36 @@
 //!   numbers; `rust/tests/chaos.rs` proves the exactly-one-response
 //!   invariant under it. Without the feature the injection points do
 //!   not exist.
+//! * **Sharded scale-out** — [`ShardedService`] replaces the single
+//!   queue with per-core shards ([`shard_for`] hash admission), work
+//!   stealing between them ([`StealPolicy`]), and a batching layer
+//!   that coalesces queued small strict requests into one contiguous
+//!   arena pass over the [`crate::parallel`] chunk workers:
+//!
+//! ```text
+//!  submit() ─ shard_for(id) ─► shard deques ─► per-shard workers
+//!                                  │  ▲            │
+//!                                  │  └─ steal ────┘ (idle, highest
+//!                                  │                  priority first)
+//!                                  └─ coalesce small strict runs ──►
+//!                                     gather → one fill_uninit arena
+//!                                     → per-request sub-slices →
+//!                                     demux per-request Responses
+//! ```
 
 #[cfg(feature = "chaos")]
 pub mod faults;
 mod metrics;
 mod resilience;
 mod service;
+mod shards;
 
 #[cfg(feature = "chaos")]
 pub use faults::FaultPlan;
 pub use metrics::{ServiceStats, StatsSnapshot};
-pub use resilience::{Deadline, Fate, OverloadPolicy, Priority, Rung};
+pub use resilience::{Deadline, Fate, OverloadPolicy, Priority, Rung, StealPolicy};
 pub use service::{
     Direction, EngineChoice, Output, Payload, Request, Response, ServiceConfig, ServiceError,
     SubmitError, TranscodeService,
 };
+pub use shards::{shard_for, ShardedService};

@@ -7,7 +7,12 @@
 //! [`super::TranscodeService`]. Everything here is plain data: `Copy`,
 //! deterministic, trivially testable.
 
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::time::{Duration, Instant};
+
+/// Consecutive calm completions (queue under half full) before a
+/// degraded pool climbs back up one rung of the ladder.
+pub(crate) const RECOVERY_WINDOW: u32 = 32;
 
 /// A per-request completion deadline.
 ///
@@ -131,6 +136,55 @@ impl std::fmt::Display for OverloadPolicy {
     }
 }
 
+/// What an idle shard worker may take from its siblings' queues (see
+/// [`super::ShardedService`]). Stealing never changes a request's
+/// lifecycle guarantees — a stolen job runs the exact same execution
+/// path as a locally-popped one, so it still gets exactly one
+/// [`Fate`]; the policy only decides *whether* and *what* to steal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum StealPolicy {
+    /// Never steal: every request runs on the shard its id hashed to
+    /// (strict per-shard affinity; a stalled shard strands its queue).
+    Disabled,
+    /// Steal the most urgent waiting job — highest [`Priority`] first,
+    /// oldest within a priority class — from the first non-empty
+    /// sibling queue. The mirror image of the shed rule (which evicts
+    /// the *lowest*-priority, oldest victim): urgency is served first,
+    /// bulk traffic keeps its home-shard FIFO order. The default.
+    #[default]
+    UrgentFirst,
+}
+
+impl StealPolicy {
+    /// Stable lower-kebab name (CLI flag values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StealPolicy::Disabled => "disabled",
+            StealPolicy::UrgentFirst => "urgent-first",
+        }
+    }
+}
+
+impl std::str::FromStr for StealPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<StealPolicy, String> {
+        match s {
+            "disabled" | "off" => Ok(StealPolicy::Disabled),
+            "urgent-first" | "urgent" => Ok(StealPolicy::UrgentFirst),
+            other => Err(format!(
+                "unknown steal policy {other:?} (use disabled|urgent-first)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for StealPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// The graceful-degradation ladder. Every rung below
 /// [`Rung::Configured`] swaps the worker's engines for a narrower —
 /// cheaper to schedule, lower peak-memory — tier, and forces the
@@ -192,6 +246,77 @@ impl Rung {
 impl std::fmt::Display for Rung {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.as_str())
+    }
+}
+
+/// The shared mutable state of the degradation ladder: the current
+/// level plus the calm-completion counter that climbs back up. Owned by
+/// a worker pool (single-queue or sharded) and driven from three sides:
+/// overload events and alloc refusals [`LadderState::raise`] it, every
+/// successful conversion reports [`LadderState::calm_completion`], and
+/// operators may [`LadderState::force`] a rung. Extracted from the
+/// single-queue service so the sharded pool reuses the identical
+/// recovery dynamics instead of approximating them.
+#[derive(Debug, Default)]
+pub(crate) struct LadderState {
+    /// Current degradation level (see [`Rung::from_level`]).
+    degrade: AtomicU32,
+    /// Consecutive calm completions since the last degradation event.
+    recovery: AtomicU32,
+}
+
+impl LadderState {
+    /// A fresh ladder at [`Rung::Configured`].
+    pub(crate) fn new() -> LadderState {
+        LadderState::default()
+    }
+
+    /// The rung new conversions run on right now.
+    pub(crate) fn rung(&self) -> Rung {
+        Rung::from_level(self.degrade.load(Ordering::Relaxed))
+    }
+
+    /// True once any degradation is in effect (cheap pre-check so calm
+    /// completions skip the queue-pressure probe entirely at level 0).
+    pub(crate) fn is_degraded(&self) -> bool {
+        self.degrade.load(Ordering::Relaxed) != 0
+    }
+
+    /// Raise the degradation level one rung (saturating at the scalar
+    /// floor) and restart the recovery window.
+    pub(crate) fn raise(&self) {
+        let _ = self
+            .degrade
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |l| (l < 3).then_some(l + 1));
+        self.recovery.store(0, Ordering::Relaxed);
+    }
+
+    /// Pin the ladder at `rung` (operational override; the recovery
+    /// window still decays it back toward [`Rung::Configured`]).
+    pub(crate) fn force(&self, rung: Rung) {
+        self.degrade.store(rung.level(), Ordering::Relaxed);
+        self.recovery.store(0, Ordering::Relaxed);
+    }
+
+    /// Called after each successful conversion with the reporting
+    /// queue's current length and capacity: once [`RECOVERY_WINDOW`]
+    /// consecutive completions happen with the queue under half full,
+    /// climb back up one rung.
+    pub(crate) fn calm_completion(&self, queued: usize, depth: usize) {
+        let level = self.degrade.load(Ordering::Relaxed);
+        if level == 0 {
+            return;
+        }
+        if queued * 2 >= depth.max(1) {
+            self.recovery.store(0, Ordering::Relaxed);
+            return;
+        }
+        if self.recovery.fetch_add(1, Ordering::Relaxed) + 1 >= RECOVERY_WINDOW {
+            self.recovery.store(0, Ordering::Relaxed);
+            let _ = self
+                .degrade
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |l| l.checked_sub(1));
+        }
     }
 }
 
@@ -283,6 +408,47 @@ mod tests {
         assert_eq!(Rung::from_level(17), Rung::Scalar);
         assert!(Rung::Configured < Rung::Scalar, "ladder orders best to worst");
         assert_eq!(Rung::Simd128.to_string(), "simd128");
+    }
+
+    #[test]
+    fn steal_policy_parses_cli_spellings() {
+        assert_eq!("disabled".parse::<StealPolicy>().unwrap(), StealPolicy::Disabled);
+        assert_eq!("off".parse::<StealPolicy>().unwrap(), StealPolicy::Disabled);
+        assert_eq!("urgent-first".parse::<StealPolicy>().unwrap(), StealPolicy::UrgentFirst);
+        assert_eq!("urgent".parse::<StealPolicy>().unwrap(), StealPolicy::UrgentFirst);
+        assert!("random".parse::<StealPolicy>().is_err());
+        assert_eq!(StealPolicy::default(), StealPolicy::UrgentFirst);
+        assert_eq!(StealPolicy::UrgentFirst.to_string(), "urgent-first");
+    }
+
+    #[test]
+    fn ladder_raises_saturates_forces_and_recovers() {
+        let ladder = LadderState::new();
+        assert_eq!(ladder.rung(), Rung::Configured);
+        assert!(!ladder.is_degraded());
+        for _ in 0..10 {
+            ladder.raise();
+        }
+        assert_eq!(ladder.rung(), Rung::Scalar, "raise saturates at the scalar floor");
+        ladder.force(Rung::Simd256);
+        assert_eq!(ladder.rung(), Rung::Simd256);
+        assert!(ladder.is_degraded());
+        // A busy queue (at or above half full) resets the window: no
+        // amount of completions climbs while pressure persists.
+        for _ in 0..10 * RECOVERY_WINDOW {
+            ladder.calm_completion(8, 16);
+        }
+        assert_eq!(ladder.rung(), Rung::Simd256);
+        // Calm completions climb exactly one rung per window.
+        for _ in 0..RECOVERY_WINDOW {
+            ladder.calm_completion(0, 16);
+        }
+        assert_eq!(ladder.rung(), Rung::Configured);
+        // And level 0 is a fixed point.
+        for _ in 0..RECOVERY_WINDOW {
+            ladder.calm_completion(0, 16);
+        }
+        assert_eq!(ladder.rung(), Rung::Configured);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 #[cfg(feature = "chaos")]
 use super::faults::FaultPlan;
 use super::metrics::ServiceStats;
-use super::resilience::{Deadline, Fate, OverloadPolicy, Priority, Rung};
+use super::resilience::{Deadline, Fate, LadderState, OverloadPolicy, Priority, Rung, StealPolicy};
 use crate::engine::Registry;
 use crate::parallel::{
     par_latin1_to_utf8_vec, CancelToken, ParallelOptions, ParallelUtf16ToUtf8, ParallelUtf8ToUtf16,
@@ -22,18 +22,15 @@ use crate::transcode::{ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Consecutive panics on one worker before the service steps down a
-/// rung of the degradation ladder.
-const PANIC_ESCALATE: u32 = 3;
-/// Consecutive successful conversions (with the queue under half full)
-/// before a degraded service climbs back up one rung.
-const RECOVERY_WINDOW: u32 = 32;
+/// rung of the degradation ladder (shared with the sharded pool).
+pub(crate) const PANIC_ESCALATE: u32 = 3;
 /// How often the supervisor polls the worker pool for dead threads.
 const SUPERVISOR_POLL: Duration = Duration::from_millis(10);
 
@@ -184,7 +181,7 @@ impl Request {
         }
     }
 
-    fn input_bytes(&self) -> usize {
+    pub(crate) fn input_bytes(&self) -> usize {
         match &self.payload {
             Payload::Utf8(b) | Payload::Latin1(b) | Payload::Utf8ToLatin1(b) => b.len(),
             Payload::Utf16(w) => w.len() * 2,
@@ -229,7 +226,7 @@ pub struct Response {
 impl Response {
     /// A synthesized non-`Completed` response (shed, timed out,
     /// panicked, rejected): an `ErrorKind::Other` error, no output.
-    fn failure(id: u64, fate: Fate, rung: Rung) -> Response {
+    pub(crate) fn failure(id: u64, fate: Fate, rung: Rung) -> Response {
         Response {
             id,
             result: Err(TranscodeError::new(ErrorKind::Other, 0)),
@@ -401,6 +398,19 @@ pub struct ServiceConfig {
     /// rung) instead of aborting on OOM. Advisory — the conversion
     /// itself still allocates infallibly. Default: off.
     pub fallible_alloc: bool,
+    /// Shard count for [`super::ShardedService`] (one worker per
+    /// shard). `0` — the default — means "unsharded": the classic
+    /// single-queue [`TranscodeService`] ignores this field entirely,
+    /// and the sharded constructor clamps it to at least 1.
+    pub shards: usize,
+    /// Payloads at or below this many **input bytes** are eligible for
+    /// the sharded pool's batching layer, which coalesces consecutive
+    /// same-direction strict requests into one arena pass. `0` disables
+    /// batching. Ignored by the single-queue service.
+    pub batch_threshold: usize,
+    /// Work-stealing policy between shards (see [`StealPolicy`]).
+    /// Ignored by the single-queue service.
+    pub steal: StealPolicy,
     /// Deterministic fault injection for the chaos suite (compiled only
     /// with the `chaos` cargo feature; zero-cost otherwise).
     #[cfg(feature = "chaos")]
@@ -418,6 +428,9 @@ impl Default for ServiceConfig {
             overload: OverloadPolicy::default(),
             respawn_budget: 4,
             fallible_alloc: false,
+            shards: 0,
+            batch_threshold: 4096,
+            steal: StealPolicy::default(),
             #[cfg(feature = "chaos")]
             faults: FaultPlan::default(),
         }
@@ -426,10 +439,11 @@ impl Default for ServiceConfig {
 
 /// One queued unit of work: the request plus the caller's reply
 /// channel. Dropping a `Job` drops the `Sender`, which errors the
-/// caller's `recv()` — a dropped job always *notifies*.
-struct Job {
-    request: Request,
-    reply: Sender<Response>,
+/// caller's `recv()` — a dropped job always *notifies*. Crate-visible
+/// so the sharded pool queues the identical unit.
+pub(crate) struct Job {
+    pub(crate) request: Request,
+    pub(crate) reply: Sender<Response>,
 }
 
 /// The queue proper, guarded by [`Shared::state`].
@@ -451,42 +465,23 @@ struct Shared {
     not_full: Condvar,
     depth: usize,
     overload: OverloadPolicy,
-    /// Current degradation level (see [`Rung::from_level`]).
-    degrade: AtomicU32,
-    /// Consecutive calm completions since the last degradation event.
-    recovery: AtomicU32,
+    /// The degradation ladder (level + recovery window — see
+    /// [`LadderState`]; shared logic with the sharded pool).
+    ladder: LadderState,
     /// Dequeue sequence number — the deterministic clock the chaos
     /// fault plans key on (first job popped is 1).
     seq: AtomicU64,
 }
 
-/// Raise the degradation level one rung (saturating at the scalar
-/// floor) and restart the recovery window.
-fn raise_degrade(shared: &Shared) {
-    let _ = shared
-        .degrade
-        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |l| (l < 3).then_some(l + 1));
-    shared.recovery.store(0, Ordering::Relaxed);
-}
-
-/// Called after each successful conversion: once [`RECOVERY_WINDOW`]
-/// consecutive completions happen with the queue under half full, climb
-/// back up one rung.
+/// Called after each successful conversion: reports the queue pressure
+/// to the ladder's recovery window (see [`LadderState::calm_completion`];
+/// the level-0 pre-check skips the queue lock on the healthy path).
 fn maybe_recover(shared: &Shared) {
-    if shared.degrade.load(Ordering::Relaxed) == 0 {
+    if !shared.ladder.is_degraded() {
         return;
     }
     let queued = shared.state.lock().expect("queue lock").jobs.len();
-    if queued * 2 >= shared.depth.max(1) {
-        shared.recovery.store(0, Ordering::Relaxed);
-        return;
-    }
-    if shared.recovery.fetch_add(1, Ordering::Relaxed) + 1 >= RECOVERY_WINDOW {
-        shared.recovery.store(0, Ordering::Relaxed);
-        let _ = shared
-            .degrade
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |l| l.checked_sub(1));
-    }
+    shared.ladder.calm_completion(queued, shared.depth);
 }
 
 /// The streaming transcoding service.
@@ -503,45 +498,7 @@ impl TranscodeService {
     /// `EngineChoice::Xla` the artifacts must load (probed here, then
     /// loaded per worker).
     pub fn start(config: ServiceConfig) -> Result<TranscodeService, ServiceError> {
-        match &config.engine {
-            EngineChoice::Named(name) => {
-                let r = Registry::global();
-                if r.get_utf8(name).is_none() && r.get_utf16(name).is_none() {
-                    return Err(ServiceError(format!(
-                        "unknown engine {name:?}; known: {:?}",
-                        r.describe().iter().map(|d| d.0).collect::<Vec<_>>()
-                    )));
-                }
-                // One-directional engines fall back to "ours" for the
-                // other direction; make that visible so A/B numbers are
-                // not silently part-SIMD.
-                if r.get_utf8(name).is_none() {
-                    eprintln!(
-                        "service: engine {name:?} has no UTF-8→UTF-16 direction; \
-                         those requests will use \"ours\""
-                    );
-                }
-                if r.get_utf16(name).is_none() {
-                    eprintln!(
-                        "service: engine {name:?} has no UTF-16→UTF-8 direction; \
-                         those requests will use \"ours\""
-                    );
-                }
-            }
-            EngineChoice::Xla { artifacts_dir } => {
-                // Probe the load up front: a worker that cannot load its
-                // engine exits, and a service whose whole pool died at
-                // startup would bounce every request. In stub builds
-                // (no --cfg pjrt_runtime) this fails immediately. In real
-                // PJRT builds the probe costs one extra graph compile at
-                // startup; workers still load their own engine because
-                // the xla binding's types are not assumed to be Sync.
-                if let Err(e) = XlaEngine::load(artifacts_dir) {
-                    return Err(ServiceError(format!("XLA engine unavailable: {e}")));
-                }
-            }
-            _ => {}
-        }
+        validate_engine_choice(&config.engine)?;
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
                 jobs: VecDeque::with_capacity(config.queue_depth.min(4096)),
@@ -555,8 +512,7 @@ impl TranscodeService {
             not_full: Condvar::new(),
             depth: config.queue_depth,
             overload: config.overload,
-            degrade: AtomicU32::new(0),
-            recovery: AtomicU32::new(0),
+            ladder: LadderState::new(),
             seq: AtomicU64::new(0),
         });
         let stats = Arc::new(ServiceStats::default());
@@ -645,7 +601,7 @@ impl TranscodeService {
                 }
                 policy @ (OverloadPolicy::ShedOldest | OverloadPolicy::Degrade) => {
                     if policy == OverloadPolicy::Degrade {
-                        raise_degrade(&self.shared);
+                        self.shared.ladder.raise();
                     }
                     // Victim: the lowest-priority, oldest queued request
                     // not outranking the newcomer (front = oldest).
@@ -722,7 +678,7 @@ impl TranscodeService {
 
     /// The rung new conversions run on right now.
     pub fn degrade_rung(&self) -> Rung {
-        Rung::from_level(self.shared.degrade.load(Ordering::Relaxed))
+        self.shared.ladder.rung()
     }
 
     /// Pin the degradation ladder at `rung` — an operational override
@@ -730,8 +686,7 @@ impl TranscodeService {
     /// The recovery window still decays it back toward
     /// [`Rung::Configured`] afterwards.
     pub fn force_degrade(&self, rung: Rung) {
-        self.shared.degrade.store(rung.level(), Ordering::Relaxed);
-        self.shared.recovery.store(0, Ordering::Relaxed);
+        self.shared.ladder.force(rung);
     }
 
     /// A snapshot of the service counters.
@@ -786,6 +741,52 @@ impl Drop for TranscodeService {
     fn drop(&mut self) {
         self.teardown(false);
     }
+}
+
+/// Fail-fast engine validation shared by [`TranscodeService::start`]
+/// and the sharded pool's constructor: a `Named` key must exist in the
+/// registry (in at least one direction), and `Xla` artifacts must load.
+pub(crate) fn validate_engine_choice(engine: &EngineChoice) -> Result<(), ServiceError> {
+    match engine {
+        EngineChoice::Named(name) => {
+            let r = Registry::global();
+            if r.get_utf8(name).is_none() && r.get_utf16(name).is_none() {
+                return Err(ServiceError(format!(
+                    "unknown engine {name:?}; known: {:?}",
+                    r.describe().iter().map(|d| d.0).collect::<Vec<_>>()
+                )));
+            }
+            // One-directional engines fall back to "ours" for the
+            // other direction; make that visible so A/B numbers are
+            // not silently part-SIMD.
+            if r.get_utf8(name).is_none() {
+                eprintln!(
+                    "service: engine {name:?} has no UTF-8→UTF-16 direction; \
+                     those requests will use \"ours\""
+                );
+            }
+            if r.get_utf16(name).is_none() {
+                eprintln!(
+                    "service: engine {name:?} has no UTF-16→UTF-8 direction; \
+                     those requests will use \"ours\""
+                );
+            }
+        }
+        EngineChoice::Xla { artifacts_dir } => {
+            // Probe the load up front: a worker that cannot load its
+            // engine exits, and a service whose whole pool died at
+            // startup would bounce every request. In stub builds
+            // (no --cfg pjrt_runtime) this fails immediately. In real
+            // PJRT builds the probe costs one extra graph compile at
+            // startup; workers still load their own engine because
+            // the xla binding's types are not assumed to be Sync.
+            if let Err(e) = XlaEngine::load(artifacts_dir) {
+                return Err(ServiceError(format!("XLA engine unavailable: {e}")));
+            }
+        }
+        _ => {}
+    }
+    Ok(())
 }
 
 fn spawn_worker(
@@ -844,7 +845,7 @@ fn supervisor_loop(
     }
 }
 
-enum WorkerEngine {
+pub(crate) enum WorkerEngine {
     /// Any pair of registry engines behind trait objects, plus the
     /// Latin-1 kernel set serving [`Payload::Latin1`] /
     /// [`Payload::Utf8ToLatin1`] requests (kernels, not engines — the
@@ -863,7 +864,7 @@ enum WorkerEngine {
 /// `best` for engine keys with no Latin-1 analogue (`icu`, `llvm`,
 /// ...). Resolved by key, not index — the entry order is not a
 /// contract.
-fn resolve_latin1(key: &str) -> &'static crate::transcode::latin1::Latin1Kernels {
+pub(crate) fn resolve_latin1(key: &str) -> &'static crate::transcode::latin1::Latin1Kernels {
     let entries = crate::transcode::latin1::kernel_entries();
     entries
         .into_iter()
@@ -891,7 +892,7 @@ fn resolve_native(to16_key: &str, to8_key: &str, latin1_key: &str) -> WorkerEngi
 /// sub-`Configured` rungs are always validating width-pinned natives
 /// (scalar floor: `icu`), so degraded outputs stay bit-identical to
 /// the configured engine's — only throughput changes.
-struct RungEngines {
+pub(crate) struct RungEngines {
     configured: WorkerEngine,
     simd256: WorkerEngine,
     simd128: WorkerEngine,
@@ -899,7 +900,7 @@ struct RungEngines {
 }
 
 impl RungEngines {
-    fn resolve(config: &ServiceConfig) -> Option<RungEngines> {
+    pub(crate) fn resolve(config: &ServiceConfig) -> Option<RungEngines> {
         let configured = match &config.engine {
             EngineChoice::Simd { validate } => {
                 resolve_native(if *validate { "best" } else { "best-nv" }, "best", "best")
@@ -922,7 +923,7 @@ impl RungEngines {
         })
     }
 
-    fn engine(&self, rung: Rung) -> &WorkerEngine {
+    pub(crate) fn engine(&self, rung: Rung) -> &WorkerEngine {
         match rung {
             Rung::Configured => &self.configured,
             Rung::Simd256 => &self.simd256,
@@ -937,7 +938,7 @@ impl RungEngines {
 /// probe allocation is freed immediately; the conversion's own
 /// allocation can still race another thread to OOM — this narrows the
 /// window, it cannot close it.)
-fn preflight_alloc(request: &Request) -> bool {
+pub(crate) fn preflight_alloc(request: &Request) -> bool {
     let estimate = match &request.payload {
         // UTF-16 output bytes worst case (one word per input byte).
         Payload::Utf8(b) => b.len().saturating_mul(2),
@@ -995,7 +996,7 @@ fn worker_loop(shared: Arc<Shared>, stats: Arc<ServiceStats>, config: ServiceCon
             return;
         }
 
-        let rung = Rung::from_level(shared.degrade.load(Ordering::Relaxed));
+        let rung = shared.ladder.rung();
         let engine = rungs.engine(rung);
         // Degraded rungs force the one-shot path: parallel fan-out is
         // the first thing to give up under pressure.
@@ -1014,7 +1015,7 @@ fn worker_loop(shared: Arc<Shared>, stats: Arc<ServiceStats>, config: ServiceCon
             // Memory pressure: refuse this conversion with a structured
             // error and step the service down a rung so the next ones
             // ask for less.
-            raise_degrade(&shared);
+            shared.ladder.raise();
             let _ = reply.send(Response {
                 id: request.id,
                 result: Err(TranscodeError::new(ErrorKind::OutputBuffer, 0)),
@@ -1045,7 +1046,7 @@ fn worker_loop(shared: Arc<Shared>, stats: Arc<ServiceStats>, config: ServiceCon
                 stats.panics.fetch_add(1, Ordering::Relaxed);
                 panic_streak += 1;
                 if panic_streak >= PANIC_ESCALATE {
-                    raise_degrade(&shared);
+                    shared.ladder.raise();
                     panic_streak = 0;
                 }
                 let _ = reply.send(Response::failure(request.id, Fate::Panicked, rung));
@@ -1106,7 +1107,7 @@ fn worker_loop(shared: Arc<Shared>, stats: Arc<ServiceStats>, config: ServiceCon
 /// yet) and the XLA engine (which batches internally). The `par`
 /// options carry the request's deadline as a cancellation token, so an
 /// oversized conversion notices expiry between chunks.
-fn run_one(
+pub(crate) fn run_one(
     engine: &WorkerEngine,
     request: &Request,
     threshold: usize,

@@ -1,0 +1,1376 @@
+//! The sharded, batching worker pool: per-core shards with bounded
+//! local deques, hash admission, priority-aware work stealing, and a
+//! batching layer that coalesces queued small payloads into one
+//! contiguous arena pass.
+//!
+//! ```text
+//!   submit(req) ── shard_for(id) ──► shard 0 [deque] ──► worker 0 ─┐
+//!                                    shard 1 [deque] ──► worker 1 ─┼─► Response
+//!                                    shard 2 [deque] ──► worker 2 ─┤
+//!                                    shard 3 [deque] ──► worker 3 ─┘
+//!                                         ▲    │
+//!                                         └────┘ idle workers steal the
+//!                                                highest-priority oldest
+//!                                                job from a sibling
+//! ```
+//!
+//! Each worker drains its own deque front-first. A run of consecutive
+//! same-class small requests (strict, same direction, payload at or
+//! below `ServiceConfig::batch_threshold` input bytes) is coalesced
+//! into a **batch**: inputs gathered into one contiguous buffer, exact
+//! per-member output sizes computed by the SIMD counting kernels, and
+//! one [`crate::transcode::fill_uninit`] output arena carved into
+//! per-member sub-slices (via the parallel planner's `partition`) that
+//! the PR 6 chunk workers fill — the held-back scalar tail of
+//! [`crate::parallel`]'s `chunk16_strict`/`chunk8_strict` is what makes
+//! *exactly-sized, adjacent* segments sound: no kernel may store a
+//! whole register past its segment into its neighbor (the
+//! `EXACT_SLACK` overshoot allowance applies to a conversion's own
+//! trailing slack, which adjacent segments do not have). Latin-1
+//! batches genuinely run **one** kernel call over the whole gather:
+//! the conversion is stateless per byte, so concatenation commutes
+//! with transcoding. Per-member error positions are reported in arena
+//! coordinates by the fillers and re-localized to request coordinates
+//! by [`localize`]; on any member error the whole batch falls back to
+//! per-member one-shot execution, so failure answers are bit-identical
+//! to the unsharded service by construction.
+//!
+//! The service invariant is unchanged from the single-queue pool:
+//! **every admitted request gets exactly one [`Response`], every
+//! refused request exactly one typed [`SubmitError`]** — stealing
+//! moves a job between workers before execution (never during), and a
+//! batch that panics answers every member with `Fate::Panicked`.
+//!
+//! There is no supervisor thread: worker panics inside conversions are
+//! isolated per job (or per batch) by `catch_unwind`, and the chaos
+//! plan's `abort_worker_on` knob is ignored by this pool (a sharded
+//! worker has no respawn path; the single-queue service covers that
+//! scenario).
+
+use super::metrics::ServiceStats;
+use super::resilience::{Fate, LadderState, OverloadPolicy, Rung, StealPolicy};
+use super::service::{
+    preflight_alloc, run_one, validate_engine_choice, Job, Output, Payload, Request, Response,
+    RungEngines, ServiceConfig, ServiceError, SubmitError, WorkerEngine, PANIC_ESCALATE,
+};
+use crate::parallel::{chunk16_strict, chunk8_strict, chunk_latin1, partition, CancelToken};
+use crate::transcode::{fill_uninit, ErrorKind, TranscodeError, Utf16ToUtf8, Utf8ToUtf16};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Most members one batch may coalesce: bounds the gather allocation
+/// and the latency tail a queued request can absorb behind a batch.
+const BATCH_MAX: usize = 64;
+/// How long an idle worker parks before re-scanning its own deque and
+/// its siblings' (pushes only signal the home shard, so stealing and
+/// drain detection are polled).
+const IDLE_POLL: Duration = Duration::from_millis(1);
+
+/// The shard a request id hashes to, out of `shards` (clamped to at
+/// least 1). SplitMix64's finalizer over the id: sequential ids spread
+/// uniformly, and the mapping is a pure function — the same id always
+/// lands on the same shard, which keeps per-caller ordering within a
+/// shard and makes load tests reproducible.
+pub fn shard_for(id: u64, shards: usize) -> usize {
+    let n = shards.max(1) as u64;
+    (crate::corpus::SplitMix64::new(id).next_u64() % n) as usize
+}
+
+/// One shard's queue, guarded by [`Shard::state`].
+struct ShardState {
+    jobs: VecDeque<Job>,
+    /// Accepting new requests? `false` once shutdown begins.
+    open: bool,
+    /// The shard's worker exits when its queue is empty and this is set.
+    draining: bool,
+}
+
+/// One per-core shard: a bounded deque plus its condvars.
+struct Shard {
+    state: Mutex<ShardState>,
+    /// Signaled when a job lands on this shard (its worker waits here).
+    not_empty: Condvar,
+    /// Signaled when a job leaves this shard (blocking submitters wait
+    /// here).
+    not_full: Condvar,
+}
+
+impl Shard {
+    fn new(depth: usize) -> Shard {
+        Shard {
+            state: Mutex::new(ShardState {
+                jobs: VecDeque::with_capacity(depth.min(4096)),
+                open: true,
+                draining: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+}
+
+/// Everything the submitters and shard workers share.
+struct Pool {
+    shards: Vec<Shard>,
+    /// Per-shard queue depth (`queue_depth / shards`, at least 1).
+    depth: usize,
+    overload: OverloadPolicy,
+    steal: StealPolicy,
+    batch_threshold: usize,
+    /// One ladder for the whole pool (same recovery dynamics as the
+    /// single-queue service — see [`LadderState`]).
+    ladder: LadderState,
+    /// Pool-global dequeue sequence number: the deterministic clock the
+    /// chaos fault plans key on, assigned under the owning shard's lock.
+    seq: AtomicU64,
+}
+
+impl Pool {
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Post-completion ladder recovery, fed this shard's queue pressure
+    /// (see `LadderState::calm_completion`).
+    fn maybe_recover(&self, me: usize) {
+        if !self.ladder.is_degraded() {
+            return;
+        }
+        let queued = self.shards[me].state.lock().expect("shard lock").jobs.len();
+        self.ladder.calm_completion(queued, self.depth);
+    }
+}
+
+/// A dequeued job plus its fault-plan sequence number and whether it
+/// was stolen from a sibling shard.
+struct Member {
+    job: Job,
+    #[cfg_attr(not(feature = "chaos"), allow(dead_code))]
+    seq: u64,
+    stolen: bool,
+}
+
+/// The coalescing key: requests batch only with neighbors of the same
+/// class (same direction, strict, small enough).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BatchClass {
+    /// Strict UTF-8 → UTF-16 via per-segment `chunk16_strict`.
+    Utf8Strict,
+    /// Strict UTF-16 → UTF-8 via per-segment `chunk8_strict`.
+    Utf16Strict,
+    /// Latin-1 → UTF-8: one kernel call over the whole gather.
+    Latin1,
+}
+
+/// The batch class of a request, or `None` if it must run one-shot
+/// (lossy, UTF-8→Latin-1, oversized, or batching disabled).
+fn batch_class(request: &Request, threshold: usize) -> Option<BatchClass> {
+    if threshold == 0 || request.input_bytes() > threshold {
+        return None;
+    }
+    match &request.payload {
+        Payload::Utf8(_) if !request.lossy => Some(BatchClass::Utf8Strict),
+        Payload::Utf16(_) if !request.lossy => Some(BatchClass::Utf16Strict),
+        // Latin-1 is total; the lossy flag is irrelevant.
+        Payload::Latin1(_) => Some(BatchClass::Latin1),
+        _ => None,
+    }
+}
+
+/// Ascending prefix bounds over member lengths: `[0, l0, l0+l1, ...]`.
+/// Member `i` owns the half-open range `[bounds[i], bounds[i + 1])` of
+/// the concatenated arena.
+fn prefix_bounds(lens: impl Iterator<Item = usize>) -> Vec<usize> {
+    let mut bounds = vec![0usize];
+    let mut acc = 0usize;
+    for l in lens {
+        acc += l;
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Re-localize an arena coordinate to `(member index, request-local
+/// position)`. Zero-length members own no positions (they cannot
+/// report errors), so a position on a shared boundary belongs to the
+/// first member whose range actually contains it.
+pub(crate) fn localize(bounds: &[usize], pos: usize) -> (usize, usize) {
+    debug_assert!(bounds.len() >= 2, "bounds must cover at least one member");
+    debug_assert!(pos < *bounds.last().expect("non-empty bounds"), "position inside the arena");
+    let owner = bounds.partition_point(|&b| b <= pos) - 1;
+    (owner, pos - bounds[owner])
+}
+
+/// A batch member's conversion failure, already re-localized from
+/// arena coordinates to the member's own input coordinates.
+struct MemberError {
+    /// Index into the batch's member list.
+    #[cfg_attr(not(test), allow(dead_code))]
+    member: usize,
+    /// The error with `position` in the member's input units.
+    #[cfg_attr(not(test), allow(dead_code))]
+    error: TranscodeError,
+}
+
+/// Demultiplex the arena into per-member owned outputs (the one copy
+/// out, mirroring the one gather copy in).
+fn demux<T: Copy>(arena: &[T], sizes: &[usize]) -> Vec<Vec<T>> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut lo = 0usize;
+    for &s in sizes {
+        out.push(arena[lo..lo + s].to_vec());
+        lo += s;
+    }
+    out
+}
+
+/// Convert one coalesced batch: gather the inputs, size the outputs
+/// exactly, fill one uninit arena segment-by-segment, and demux. On a
+/// member's encoding error, returns it re-localized; the caller falls
+/// back to one-shot execution for every member.
+fn convert_batch(
+    class: BatchClass,
+    engine: &WorkerEngine,
+    requests: &[&Request],
+) -> Result<Vec<Output>, MemberError> {
+    let WorkerEngine::Native { to16, to8, latin1 } = engine else {
+        unreachable!("batch eligibility requires a native engine");
+    };
+    match class {
+        BatchClass::Utf8Strict => {
+            let inputs: Vec<&[u8]> = requests
+                .iter()
+                .map(|r| match &r.payload {
+                    Payload::Utf8(b) => b.as_slice(),
+                    _ => unreachable!("coalescing groups by class"),
+                })
+                .collect();
+            let in_bounds = prefix_bounds(inputs.iter().map(|s| s.len()));
+            let mut gather = Vec::with_capacity(*in_bounds.last().expect("bounds"));
+            for s in &inputs {
+                gather.extend_from_slice(s);
+            }
+            let sizes: Vec<usize> =
+                inputs.iter().map(|s| crate::count::utf16_len_from_utf8(s)).collect();
+            let total: usize = sizes.iter().sum();
+            let arena = fill_uninit(total, |dst: &mut [u16]| {
+                for (i, part) in partition(dst, &sizes).into_iter().enumerate() {
+                    chunk16_strict(to16.as_ref(), &gather[in_bounds[i]..in_bounds[i + 1]], part)
+                        .map_err(|e| e.offset(in_bounds[i]))?;
+                }
+                Ok(total)
+            });
+            match arena {
+                Ok((arena, _)) => {
+                    Ok(demux(&arena, &sizes).into_iter().map(Output::Utf16).collect())
+                }
+                Err(e) => {
+                    let (member, local) = localize(&in_bounds, e.position);
+                    Err(MemberError { member, error: TranscodeError::new(e.kind, local) })
+                }
+            }
+        }
+        BatchClass::Utf16Strict => {
+            let inputs: Vec<&[u16]> = requests
+                .iter()
+                .map(|r| match &r.payload {
+                    Payload::Utf16(w) => w.as_slice(),
+                    _ => unreachable!("coalescing groups by class"),
+                })
+                .collect();
+            let in_bounds = prefix_bounds(inputs.iter().map(|s| s.len()));
+            let mut gather = Vec::with_capacity(*in_bounds.last().expect("bounds"));
+            for s in &inputs {
+                gather.extend_from_slice(s);
+            }
+            let sizes: Vec<usize> =
+                inputs.iter().map(|s| crate::count::utf8_len_from_utf16(s)).collect();
+            let total: usize = sizes.iter().sum();
+            let arena = fill_uninit(total, |dst: &mut [u8]| {
+                for (i, part) in partition(dst, &sizes).into_iter().enumerate() {
+                    chunk8_strict(to8.as_ref(), &gather[in_bounds[i]..in_bounds[i + 1]], part)
+                        .map_err(|e| e.offset(in_bounds[i]))?;
+                }
+                Ok(total)
+            });
+            match arena {
+                Ok((arena, _)) => {
+                    Ok(demux(&arena, &sizes).into_iter().map(Output::Utf8).collect())
+                }
+                Err(e) => {
+                    let (member, local) = localize(&in_bounds, e.position);
+                    Err(MemberError { member, error: TranscodeError::new(e.kind, local) })
+                }
+            }
+        }
+        BatchClass::Latin1 => {
+            let inputs: Vec<&[u8]> = requests
+                .iter()
+                .map(|r| match &r.payload {
+                    Payload::Latin1(b) => b.as_slice(),
+                    _ => unreachable!("coalescing groups by class"),
+                })
+                .collect();
+            let in_bounds = prefix_bounds(inputs.iter().map(|s| s.len()));
+            let mut gather = Vec::with_capacity(*in_bounds.last().expect("bounds"));
+            for s in &inputs {
+                gather.extend_from_slice(s);
+            }
+            let sizes: Vec<usize> =
+                inputs.iter().map(|s| (latin1.utf8_len_from_latin1)(s)).collect();
+            let total: usize = sizes.iter().sum();
+            // Latin-1 expansion is stateless per input byte, so one
+            // kernel pass over the whole gather writes exactly the
+            // concatenation of the per-member outputs — the genuine
+            // single-SIMD-pass case.
+            let arena = fill_uninit(total, |dst: &mut [u8]| {
+                chunk_latin1(latin1, &gather, dst)?;
+                Ok(total)
+            });
+            match arena {
+                Ok((arena, _)) => {
+                    Ok(demux(&arena, &sizes).into_iter().map(Output::Utf8).collect())
+                }
+                Err(e) => {
+                    // Unreachable on content (Latin-1 is total); kept
+                    // for the defensive OutputBuffer arm.
+                    let (member, local) = localize(&in_bounds, e.position);
+                    Err(MemberError { member, error: TranscodeError::new(e.kind, local) })
+                }
+            }
+        }
+    }
+}
+
+/// One shard worker: drain the local deque front-first (coalescing
+/// batchable runs), steal from siblings when idle, exit when draining
+/// and empty.
+fn shard_worker(pool: Arc<Pool>, me: usize, stats: Arc<ServiceStats>, config: ServiceConfig) {
+    let Some(rungs) = RungEngines::resolve(&config) else {
+        return;
+    };
+    let mut panic_streak = 0u32;
+    loop {
+        let members = acquire(&pool, me, &config);
+        if members.is_empty() {
+            return;
+        }
+        if members.len() == 1 && members[0].stolen {
+            stats.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        #[cfg(feature = "chaos")]
+        config.faults.stall_dequeue();
+        if members.len() == 1 {
+            let member = members.into_iter().next().expect("len checked");
+            execute_solo(&pool, me, &rungs, &stats, &config, member, &mut panic_streak);
+        } else {
+            execute_batch(&pool, me, &rungs, &stats, &config, members, &mut panic_streak);
+        }
+    }
+}
+
+/// Block until work is available: pop (and coalesce) from the local
+/// deque, else steal one job, else park briefly. Returns an empty
+/// vector exactly when the shard is draining and its queue is empty —
+/// the worker's exit signal.
+#[cfg_attr(not(feature = "chaos"), allow(unused_variables))]
+fn acquire(pool: &Pool, me: usize, config: &ServiceConfig) -> Vec<Member> {
+    let shard = &pool.shards[me];
+    loop {
+        // The stalled-shard chaos knob sleeps *outside* the lock, so
+        // sibling thieves can drain this shard's queue meanwhile.
+        #[cfg(feature = "chaos")]
+        config.faults.stall_shard(me);
+        {
+            let mut state = shard.state.lock().expect("shard lock");
+            if let Some(job) = state.jobs.pop_front() {
+                // Sequence numbers are assigned under the shard lock so
+                // chaos fault plans see a deterministic order per queue.
+                let mut members = vec![Member { seq: pool.next_seq(), stolen: false, job }];
+                if let Some(class) = batch_class(&members[0].job.request, pool.batch_threshold) {
+                    while members.len() < BATCH_MAX {
+                        let same = state.jobs.front().is_some_and(|j| {
+                            batch_class(&j.request, pool.batch_threshold) == Some(class)
+                        });
+                        if !same {
+                            break;
+                        }
+                        let job = state.jobs.pop_front().expect("front was just checked");
+                        members.push(Member { seq: pool.next_seq(), stolen: false, job });
+                    }
+                }
+                drop(state);
+                if members.len() > 1 {
+                    shard.not_full.notify_all();
+                } else {
+                    shard.not_full.notify_one();
+                }
+                return members;
+            }
+            if state.draining {
+                return Vec::new();
+            }
+        }
+        if pool.steal == StealPolicy::UrgentFirst {
+            if let Some(member) = try_steal(pool, me) {
+                return vec![member];
+            }
+        }
+        let state = shard.state.lock().expect("shard lock");
+        if state.jobs.is_empty() && !state.draining {
+            // Timed wait: pushes only signal the home shard, so steals
+            // and drain-of-siblings are discovered by polling.
+            let _ = shard.not_empty.wait_timeout(state, IDLE_POLL).expect("shard lock");
+        }
+    }
+}
+
+/// Scan the sibling shards round-robin (starting after `me`) and take
+/// **one** job: the highest-priority, oldest-within-priority queued
+/// request — the mirror image of the shed rule, which evicts the
+/// lowest-priority oldest. The stolen job runs one-shot on the thief,
+/// through the identical execution path, so the exactly-one-`Fate`
+/// invariant is untouched by migration.
+fn try_steal(pool: &Pool, me: usize) -> Option<Member> {
+    let n = pool.shards.len();
+    for step in 1..n {
+        let victim = (me + step) % n;
+        let shard = &pool.shards[victim];
+        let mut state = shard.state.lock().expect("shard lock");
+        let best = state
+            .jobs
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, j)| (j.request.priority, std::cmp::Reverse(*i)))
+            .map(|(i, _)| i);
+        if let Some(i) = best {
+            let job = state.jobs.remove(i).expect("victim index in range");
+            let member = Member { seq: pool.next_seq(), stolen: true, job };
+            drop(state);
+            shard.not_full.notify_one();
+            return Some(member);
+        }
+    }
+    None
+}
+
+/// Run one member through the single-queue service's exact per-job
+/// path (deadline at dequeue, ladder rung, alloc preflight, panic
+/// isolation, mid-conversion timeout reclassification, stats) — kept
+/// in lockstep with `worker_loop` in `service.rs` so a solo request is
+/// bit-identical on either pool.
+fn execute_solo(
+    pool: &Pool,
+    me: usize,
+    rungs: &RungEngines,
+    stats: &ServiceStats,
+    config: &ServiceConfig,
+    member: Member,
+    panic_streak: &mut u32,
+) {
+    let Member { job, seq, stolen } = member;
+    #[cfg(not(feature = "chaos"))]
+    let _ = (seq, stolen);
+    let Job { request, reply } = job;
+
+    // Deadline at dequeue: an expired job is answered, never silently
+    // dropped.
+    if request.deadline.expired() {
+        stats.timeouts.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Response::failure(request.id, Fate::TimedOut, Rung::Configured));
+        return;
+    }
+
+    let rung = pool.ladder.rung();
+    let engine = rungs.engine(rung);
+    // Degraded rungs force the one-shot path, exactly like the
+    // single-queue pool.
+    let threshold = if rung == Rung::Configured { config.parallel_threshold } else { usize::MAX };
+    let mut par = config.parallel.clone();
+    par.cancel = request.deadline.instant().map(CancelToken::with_deadline);
+
+    let alloc_refused = {
+        let pressured = config.fallible_alloc && !preflight_alloc(&request);
+        #[cfg(feature = "chaos")]
+        let pressured = pressured || config.faults.alloc_fails(seq);
+        pressured
+    };
+    if alloc_refused {
+        pool.ladder.raise();
+        let _ = reply.send(Response {
+            id: request.id,
+            result: Err(TranscodeError::new(ErrorKind::OutputBuffer, 0)),
+            replacements: 0,
+            rung,
+            fate: Fate::Completed,
+        });
+        return;
+    }
+
+    let start = Instant::now();
+    let input_bytes = request.input_bytes();
+
+    #[cfg(feature = "chaos")]
+    config.faults.slow_conversion(seq);
+
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        #[cfg(feature = "chaos")]
+        {
+            config.faults.maybe_panic(seq);
+            if stolen {
+                config.faults.panic_mid_steal(seq);
+            }
+        }
+        run_one(engine, &request, threshold, par)
+    }));
+    let mut response = match outcome {
+        Ok(response) => response,
+        Err(_) => {
+            stats.panics.fetch_add(1, Ordering::Relaxed);
+            *panic_streak += 1;
+            if *panic_streak >= PANIC_ESCALATE {
+                pool.ladder.raise();
+                *panic_streak = 0;
+            }
+            let _ = reply.send(Response::failure(request.id, Fate::Panicked, rung));
+            return;
+        }
+    };
+    *panic_streak = 0;
+
+    if matches!(&response.result, Err(e) if e.kind == ErrorKind::Other)
+        && request.deadline.expired()
+    {
+        stats.timeouts.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Response::failure(request.id, Fate::TimedOut, rung));
+        return;
+    }
+
+    response.rung = rung;
+    if rung != Rung::Configured {
+        stats.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+    let (out_bytes, chars) = match &response.result {
+        Ok(Output::Utf16(w)) => (w.len() * 2, crate::count::count_utf16_code_points(w)),
+        Ok(Output::Utf8(b)) => (b.len(), crate::count::count_utf8_code_points(b)),
+        Ok(Output::Latin1(b)) => (b.len(), b.len()),
+        Err(_) => (0, 0),
+    };
+    if response.ok() {
+        stats.record_completion(input_bytes, out_bytes, chars, start.elapsed());
+        stats.record_replacements(response.replacements);
+        pool.maybe_recover(me);
+    } else {
+        stats.invalid.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = reply.send(response);
+}
+
+/// Run a coalesced batch: answer expired members, divert members with
+/// per-sequence chaos faults (their fault semantics stay exact), gate
+/// on a validating native engine at the current rung, then one arena
+/// pass — falling back to per-member one-shot execution on arena
+/// refusal or any member error.
+fn execute_batch(
+    pool: &Pool,
+    me: usize,
+    rungs: &RungEngines,
+    stats: &ServiceStats,
+    config: &ServiceConfig,
+    members: Vec<Member>,
+    panic_streak: &mut u32,
+) {
+    // Deadline at dequeue, per member.
+    let mut live = Vec::with_capacity(members.len());
+    for m in members {
+        if m.job.request.deadline.expired() {
+            stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            let _ = m
+                .job
+                .reply
+                .send(Response::failure(m.job.request.id, Fate::TimedOut, Rung::Configured));
+        } else {
+            live.push(m);
+        }
+    }
+
+    // Members with any per-sequence fault scheduled run solo so the
+    // injected fault's semantics (panic isolation, slow conversion,
+    // alloc refusal) hit exactly one request, as planned.
+    #[cfg(feature = "chaos")]
+    let live = {
+        let f = &config.faults;
+        let (clean, diverted): (Vec<Member>, Vec<Member>) = live.into_iter().partition(|m| {
+            !(f.panic_on.contains(&m.seq)
+                || f.alloc_fail_on.contains(&m.seq)
+                || f.abort_worker_on.contains(&m.seq)
+                || f.slow_on.iter().any(|(s, _)| *s == m.seq))
+        });
+        for m in diverted {
+            execute_solo(pool, me, rungs, stats, config, m, panic_streak);
+        }
+        clean
+    };
+
+    let rung = pool.ladder.rung();
+    let engine = rungs.engine(rung);
+    let eligible = live.len() >= 2
+        && match (batch_class(&live[0].job.request, pool.batch_threshold), engine) {
+            (Some(BatchClass::Utf8Strict), WorkerEngine::Native { to16, .. }) => to16.validating(),
+            (Some(BatchClass::Utf16Strict), WorkerEngine::Native { to8, .. }) => to8.validating(),
+            (Some(BatchClass::Latin1), WorkerEngine::Native { .. }) => true,
+            _ => false,
+        };
+    if !eligible {
+        for m in live {
+            execute_solo(pool, me, rungs, stats, config, m, panic_streak);
+        }
+        return;
+    }
+    let class = batch_class(&live[0].job.request, pool.batch_threshold).expect("checked eligible");
+
+    // Arena admission: the chaos batch knob and (under fallible_alloc)
+    // a try_reserve probe of the gather's worst case. A refused arena
+    // diverts the *batch*, not the jobs: the ladder steps down and
+    // every member still completes one-shot.
+    let arena_refused = {
+        #[cfg(feature = "chaos")]
+        let chaos_refused = {
+            let seqs: Vec<u64> = live.iter().map(|m| m.seq).collect();
+            config.faults.batch_alloc_fails(&seqs)
+        };
+        #[cfg(not(feature = "chaos"))]
+        let chaos_refused = false;
+        let pressure_refused = config.fallible_alloc && {
+            let total: usize = live.iter().map(|m| m.job.request.input_bytes()).sum();
+            let mut probe = Vec::<u8>::new();
+            // Worst case across the three batchable classes: UTF-8 →
+            // UTF-16 at one word (two bytes) per input byte, twice over
+            // for gather + arena.
+            probe.try_reserve(total.saturating_mul(4)).is_err()
+        };
+        chaos_refused || pressure_refused
+    };
+    if arena_refused {
+        pool.ladder.raise();
+        stats.batch_fallbacks.fetch_add(1, Ordering::Relaxed);
+        for m in live {
+            execute_solo(pool, me, rungs, stats, config, m, panic_streak);
+        }
+        return;
+    }
+
+    let start = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let requests: Vec<&Request> = live.iter().map(|m| &m.job.request).collect();
+        convert_batch(class, engine, &requests)
+    }));
+    match outcome {
+        Err(_) => {
+            // Panic isolation at batch granularity: every member gets
+            // exactly one Panicked response; one streak step for the
+            // batch (one conversion pass panicked, not k).
+            stats.panics.fetch_add(live.len() as u64, Ordering::Relaxed);
+            *panic_streak += 1;
+            if *panic_streak >= PANIC_ESCALATE {
+                pool.ladder.raise();
+                *panic_streak = 0;
+            }
+            for m in live {
+                let _ = m.job.reply.send(Response::failure(m.job.request.id, Fate::Panicked, rung));
+            }
+        }
+        Ok(Err(_member_error)) => {
+            // A member failed validation. Its error is already
+            // re-localized to request coordinates, but for bit-exact
+            // error kinds every member re-runs the one-shot path (the
+            // differential suite holds batched ≡ one-shot across this
+            // fallback too).
+            stats.batch_fallbacks.fetch_add(1, Ordering::Relaxed);
+            for m in live {
+                execute_solo(pool, me, rungs, stats, config, m, panic_streak);
+            }
+        }
+        Ok(Ok(outputs)) => {
+            *panic_streak = 0;
+            let elapsed = start.elapsed();
+            let n = live.len() as u64;
+            if rung != Rung::Configured {
+                stats.degraded.fetch_add(n, Ordering::Relaxed);
+            }
+            for (m, output) in live.into_iter().zip(outputs) {
+                let (out_bytes, chars) = match &output {
+                    Output::Utf16(w) => (w.len() * 2, crate::count::count_utf16_code_points(w)),
+                    Output::Utf8(b) => (b.len(), crate::count::count_utf8_code_points(b)),
+                    Output::Latin1(b) => (b.len(), b.len()),
+                };
+                stats.record_completion(m.job.request.input_bytes(), out_bytes, chars, elapsed);
+                let _ = m.job.reply.send(Response {
+                    id: m.job.request.id,
+                    result: Ok(output),
+                    replacements: 0,
+                    rung,
+                    fate: Fate::Completed,
+                });
+            }
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats.batched_requests.fetch_add(n, Ordering::Relaxed);
+            pool.maybe_recover(me);
+        }
+    }
+}
+
+/// The sharded, batching transcoding service: one worker thread per
+/// shard (`ServiceConfig::shards`, clamped to at least 1; the
+/// `workers` field is ignored — shard count *is* the worker count),
+/// each owning a bounded deque of `queue_depth / shards` slots.
+/// Admission hashes the request id to its home shard ([`shard_for`]);
+/// idle workers steal under [`StealPolicy::UrgentFirst`]; consecutive
+/// small strict requests coalesce into arena batches (see the module
+/// docs). The API mirrors
+/// [`TranscodeService`](super::TranscodeService) call for call.
+pub struct ShardedService {
+    pool: Arc<Pool>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<ServiceStats>,
+}
+
+impl ShardedService {
+    /// Start the sharded pool. Engine validation is identical to
+    /// [`TranscodeService::start`](super::TranscodeService::start): a
+    /// `Named` key must exist in the registry, `Xla` artifacts must
+    /// load.
+    pub fn start(config: ServiceConfig) -> Result<ShardedService, ServiceError> {
+        validate_engine_choice(&config.engine)?;
+        let shards = config.shards.max(1);
+        let depth = (config.queue_depth / shards).max(1);
+        let pool = Arc::new(Pool {
+            shards: (0..shards).map(|_| Shard::new(depth)).collect(),
+            depth,
+            overload: config.overload,
+            steal: config.steal,
+            batch_threshold: config.batch_threshold,
+            ladder: LadderState::new(),
+            seq: AtomicU64::new(0),
+        });
+        let stats = Arc::new(ServiceStats::default());
+        let mut workers = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let spawn = std::thread::Builder::new().name(format!("transcode-shard-{i}")).spawn({
+                let pool = Arc::clone(&pool);
+                let stats = Arc::clone(&stats);
+                let config = config.clone();
+                move || shard_worker(pool, i, stats, config)
+            });
+            match spawn {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    // Unwind the part-started pool before reporting.
+                    for shard in &pool.shards {
+                        let mut state = shard.state.lock().expect("shard lock");
+                        state.open = false;
+                        state.draining = true;
+                    }
+                    for shard in &pool.shards {
+                        shard.not_empty.notify_all();
+                    }
+                    for handle in workers {
+                        let _ = handle.join();
+                    }
+                    return Err(ServiceError(format!("spawn shard worker: {e}")));
+                }
+            }
+        }
+        Ok(ShardedService { pool, workers, stats })
+    }
+
+    /// The single admission path: deadline check, then the classic
+    /// enqueue / wait / overload-policy dance **scoped to the home
+    /// shard** — shed victims are evicted from the same shard the
+    /// newcomer hashes to, so priorities are compared among requests
+    /// actually competing for the same queue slots.
+    fn admit(&self, request: Request, block: bool) -> Result<Receiver<Response>, SubmitError> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        if request.deadline.expired() {
+            self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Timeout(request));
+        }
+        let home = shard_for(request.id, self.pool.shards.len());
+        let shard = &self.pool.shards[home];
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut state = shard.state.lock().expect("shard lock");
+        loop {
+            if !state.open {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Shutdown(request));
+            }
+            if request.deadline.expired() {
+                self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Timeout(request));
+            }
+            if state.jobs.len() < self.pool.depth {
+                state.jobs.push_back(Job { request, reply: tx });
+                drop(state);
+                shard.not_empty.notify_one();
+                return Ok(rx);
+            }
+            match self.pool.overload {
+                OverloadPolicy::Reject if block => {
+                    state = match request.deadline.instant() {
+                        Some(at) => {
+                            let wait = at.saturating_duration_since(Instant::now());
+                            shard.not_full.wait_timeout(state, wait).expect("shard lock").0
+                        }
+                        None => shard.not_full.wait(state).expect("shard lock"),
+                    };
+                }
+                OverloadPolicy::Reject => {
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(SubmitError::Full(request));
+                }
+                policy @ (OverloadPolicy::ShedOldest | OverloadPolicy::Degrade) => {
+                    if policy == OverloadPolicy::Degrade {
+                        self.pool.ladder.raise();
+                    }
+                    let victim_at = state
+                        .jobs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, j)| j.request.priority <= request.priority)
+                        .min_by_key(|(i, j)| (j.request.priority, *i))
+                        .map(|(i, _)| i);
+                    match victim_at {
+                        Some(i) => {
+                            let victim = state.jobs.remove(i).expect("victim index in range");
+                            state.jobs.push_back(Job { request, reply: tx });
+                            drop(state);
+                            shard.not_empty.notify_one();
+                            self.stats.sheds.fetch_add(1, Ordering::Relaxed);
+                            let _ = victim.reply.send(Response::failure(
+                                victim.request.id,
+                                Fate::Shed,
+                                Rung::Configured,
+                            ));
+                            return Ok(rx);
+                        }
+                        None => {
+                            self.stats.sheds.fetch_add(1, Ordering::Relaxed);
+                            return Err(SubmitError::Shed(request));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Submit a request, blocking while its home shard is full
+    /// (backpressure), at most until the request's deadline.
+    pub fn submit(&self, request: Request) -> Result<Receiver<Response>, SubmitError> {
+        self.admit(request, true)
+    }
+
+    /// Submit without blocking; refusals come back typed with the
+    /// request, exactly like the single-queue service.
+    pub fn try_submit(&self, request: Request) -> Result<Receiver<Response>, SubmitError> {
+        self.admit(request, false)
+    }
+
+    /// Convenience: submit and wait. Admission refusals and worker
+    /// deaths come back as synthesized failure responses.
+    pub fn transcode(&self, request: Request) -> Response {
+        let id = request.id;
+        match self.submit(request) {
+            Ok(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| Response::failure(id, Fate::Panicked, Rung::Configured)),
+            Err(SubmitError::Full(_)) | Err(SubmitError::Shutdown(_)) => {
+                Response::failure(id, Fate::Rejected, Rung::Configured)
+            }
+            Err(SubmitError::Timeout(_)) => {
+                Response::failure(id, Fate::TimedOut, Rung::Configured)
+            }
+            Err(SubmitError::Shed(_)) => Response::failure(id, Fate::Shed, Rung::Configured),
+        }
+    }
+
+    /// The rung new conversions run on right now (one ladder for the
+    /// whole pool).
+    pub fn degrade_rung(&self) -> Rung {
+        self.pool.ladder.rung()
+    }
+
+    /// Pin the degradation ladder at `rung` (operational override; the
+    /// recovery window still decays it back).
+    pub fn force_degrade(&self, rung: Rung) {
+        self.pool.ladder.force(rung);
+    }
+
+    /// A snapshot of the service counters (including the sharded
+    /// pool's `steals` / `batches` / `batched_requests` /
+    /// `batch_fallbacks`).
+    pub fn stats(&self) -> super::StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Stop admissions, drain every shard, and join the workers: every
+    /// already-queued request still gets its response.
+    pub fn shutdown(mut self) {
+        self.teardown(true);
+    }
+
+    /// Stop admissions and drop every queue **with notification**
+    /// (dropped reply senders error the callers' `recv()` promptly).
+    pub fn abort(mut self) {
+        self.teardown(false);
+    }
+
+    /// Idempotent shutdown core shared by [`ShardedService::shutdown`],
+    /// [`ShardedService::abort`] and `Drop`.
+    fn teardown(&mut self, graceful: bool) {
+        for shard in &self.pool.shards {
+            let mut state = shard.state.lock().expect("shard lock");
+            state.open = false;
+            state.draining = true;
+            if !graceful {
+                state.jobs.clear();
+            }
+        }
+        for shard in &self.pool.shards {
+            shard.not_empty.notify_all();
+            shard.not_full.notify_all();
+        }
+        for handle in std::mem::take(&mut self.workers) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ShardedService {
+    /// Dropping without an explicit [`ShardedService::shutdown`]
+    /// aborts (queued jobs dropped with notification) — a no-op after
+    /// an explicit shutdown/abort.
+    fn drop(&mut self) {
+        self.teardown(false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineChoice, Priority};
+    use crate::engine::Registry;
+
+    #[test]
+    fn shard_for_is_deterministic_uniform_and_in_range() {
+        let shards = 8;
+        let mut counts = vec![0usize; shards];
+        for id in 0..1000u64 {
+            let s = shard_for(id, shards);
+            assert!(s < shards);
+            assert_eq!(s, shard_for(id, shards), "pure function of the id");
+            counts[s] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 0, "shard {s} never chosen over 1000 sequential ids");
+            assert!(c < 500, "shard {s} absorbed {c}/1000 ids — hash is lopsided");
+        }
+        // Degenerate shard counts clamp instead of dividing by zero.
+        assert_eq!(shard_for(42, 0), 0);
+        assert_eq!(shard_for(42, 1), 0);
+    }
+
+    #[test]
+    fn localize_maps_arena_positions_to_request_coordinates() {
+        // Members of lengths 5, 0, 4: the zero-length member owns no
+        // positions.
+        let bounds = [0, 5, 5, 9];
+        assert_eq!(localize(&bounds, 0), (0, 0));
+        assert_eq!(localize(&bounds, 4), (0, 4));
+        assert_eq!(localize(&bounds, 5), (2, 0));
+        assert_eq!(localize(&bounds, 8), (2, 3));
+        // Single member: identity on the position.
+        assert_eq!(localize(&[0, 7], 3), (0, 3));
+        // Leading zero-length members never own position 0.
+        assert_eq!(localize(&[0, 0, 0, 3], 0), (2, 0));
+    }
+
+    #[test]
+    fn prefix_bounds_and_demux_agree() {
+        let bounds = prefix_bounds([3usize, 0, 2].into_iter());
+        assert_eq!(bounds, [0, 3, 3, 5]);
+        let arena = [10u16, 11, 12, 13, 14];
+        let parts = demux(&arena, &[3, 0, 2]);
+        assert_eq!(parts, vec![vec![10, 11, 12], vec![], vec![13, 14]]);
+    }
+
+    /// The EXACT_SLACK regression test for satellite 4: a conversion
+    /// into an exactly-sized segment of a shared arena must not store
+    /// even one unit past its segment end (a whole-register overshoot
+    /// would corrupt the next request's output). Convert only the
+    /// middle member and assert both poison fences around it.
+    #[test]
+    fn chunk_workers_never_overshoot_their_arena_segment() {
+        let texts =
+            ["héllo wörld", "", "漢字テスト🙂 with a mixed ascii tail", "plain ascii run"];
+        let inputs: Vec<Vec<u8>> = texts.iter().map(|t| t.as_bytes().to_vec()).collect();
+        let sizes: Vec<usize> =
+            inputs.iter().map(|s| crate::count::utf16_len_from_utf8(s)).collect();
+        let bounds = prefix_bounds(sizes.iter().copied());
+        let total = *bounds.last().unwrap();
+        for e in Registry::global().utf8_entries().iter().filter(|e| e.engine.validating()) {
+            let mut arena = vec![0xA5A5u16; total];
+            {
+                let parts = partition(&mut arena, &sizes);
+                chunk16_strict(e.engine.as_ref(), &inputs[2], parts[2])
+                    .unwrap_or_else(|err| panic!("{}: clean input rejected: {err}", e.key));
+            }
+            assert!(
+                arena[..bounds[2]].iter().all(|&u| u == 0xA5A5),
+                "{}: stored before its segment",
+                e.key
+            );
+            assert!(
+                arena[bounds[3]..].iter().all(|&u| u == 0xA5A5),
+                "{}: overshot its segment into the neighbor",
+                e.key
+            );
+            let oracle: Vec<u16> = texts[2].encode_utf16().collect();
+            assert_eq!(&arena[bounds[2]..bounds[3]], &oracle[..], "{}: segment content", e.key);
+        }
+        // Same fence for the UTF-16 → UTF-8 worker.
+        let words: Vec<Vec<u16>> = texts.iter().map(|t| t.encode_utf16().collect()).collect();
+        let sizes8: Vec<usize> =
+            words.iter().map(|w| crate::count::utf8_len_from_utf16(w)).collect();
+        let bounds8 = prefix_bounds(sizes8.iter().copied());
+        let total8 = *bounds8.last().unwrap();
+        for e in Registry::global().utf16_entries().iter().filter(|e| e.engine.validating()) {
+            let mut arena = vec![0xA5u8; total8];
+            {
+                let parts = partition(&mut arena, &sizes8);
+                chunk8_strict(e.engine.as_ref(), &words[2], parts[2])
+                    .unwrap_or_else(|err| panic!("{}: clean input rejected: {err}", e.key));
+            }
+            assert!(
+                arena[..bounds8[2]].iter().all(|&b| b == 0xA5),
+                "{}: stored before its segment",
+                e.key
+            );
+            assert!(
+                arena[bounds8[3]..].iter().all(|&b| b == 0xA5),
+                "{}: overshot its segment into the neighbor",
+                e.key
+            );
+            assert_eq!(&arena[bounds8[2]..bounds8[3]], texts[2].as_bytes(), "{}", e.key);
+        }
+    }
+
+    fn native_best() -> RungEngines {
+        RungEngines::resolve(&ServiceConfig::default()).expect("native engines always resolve")
+    }
+
+    /// Direct equivalence of the arena pipeline against the one-shot
+    /// oracle, member sizes straddling every interesting boundary
+    /// (0, 1, register width ± 1, and a multi-register run).
+    #[test]
+    fn convert_batch_matches_one_shot_oracle_at_boundary_sizes() {
+        let rungs = native_best();
+        let engine = rungs.engine(Rung::Configured);
+        let base = "boundary βätçh 漢字🙂 ";
+        let mut texts: Vec<String> = Vec::new();
+        for target in [0usize, 1, 63, 64, 65, 127, 128, 129, 1000] {
+            let mut t = String::new();
+            while t.len() < target {
+                t.push_str(base);
+            }
+            t.truncate(target);
+            while !t.is_char_boundary(t.len()) {
+                t.pop();
+            }
+            texts.push(t);
+        }
+        let requests: Vec<Request> =
+            texts.iter().enumerate().map(|(i, t)| Request::utf8(i as u64, t.clone().into_bytes())).collect();
+        let refs: Vec<&Request> = requests.iter().collect();
+        let outputs = convert_batch(BatchClass::Utf8Strict, engine, &refs)
+            .unwrap_or_else(|_| panic!("clean batch must convert"));
+        for (t, out) in texts.iter().zip(&outputs) {
+            let oracle: Vec<u16> = t.encode_utf16().collect();
+            assert_eq!(out, &Output::Utf16(oracle));
+        }
+
+        // UTF-16 direction over the same texts.
+        let requests16: Vec<Request> = texts
+            .iter()
+            .enumerate()
+            .map(|(i, t)| Request::utf16(i as u64, t.encode_utf16().collect()))
+            .collect();
+        let refs16: Vec<&Request> = requests16.iter().collect();
+        let outputs16 = convert_batch(BatchClass::Utf16Strict, engine, &refs16)
+            .unwrap_or_else(|_| panic!("clean batch must convert"));
+        for (t, out) in texts.iter().zip(&outputs16) {
+            assert_eq!(out, &Output::Utf8(t.as_bytes().to_vec()));
+        }
+
+        // Latin-1: every byte value is valid, single pass over the lot.
+        let latin: Vec<Vec<u8>> =
+            vec![vec![], (0u8..=255).collect(), b"plain".to_vec(), vec![0xE9; 65]];
+        let requestsl: Vec<Request> =
+            latin.iter().enumerate().map(|(i, b)| Request::latin1(i as u64, b.clone())).collect();
+        let refsl: Vec<&Request> = requestsl.iter().collect();
+        let outputsl = convert_batch(BatchClass::Latin1, engine, &refsl)
+            .unwrap_or_else(|_| panic!("latin-1 batch is total"));
+        for (src, out) in latin.iter().zip(&outputsl) {
+            let oracle: String = src.iter().map(|&b| b as char).collect();
+            assert_eq!(out, &Output::Utf8(oracle.into_bytes()));
+        }
+    }
+
+    /// A dirty member's error comes back re-localized: member index and
+    /// request-local position, not arena coordinates.
+    #[test]
+    fn convert_batch_localizes_a_member_error() {
+        let rungs = native_best();
+        let engine = rungs.engine(Rung::Configured);
+        let clean_prefix = "first member, long enough to shift the arena offsets well past zero";
+        let mut dirty = b"ok:".to_vec();
+        dirty.push(0xFF);
+        dirty.extend_from_slice(b"rest");
+        let requests = [
+            Request::utf8(0, clean_prefix.as_bytes().to_vec()),
+            Request::utf8(1, dirty),
+            Request::utf8(2, b"trailing member".to_vec()),
+        ];
+        let refs: Vec<&Request> = requests.iter().collect();
+        let err = convert_batch(BatchClass::Utf8Strict, engine, &refs)
+            .err()
+            .expect("dirty member must fail");
+        assert_eq!(err.member, 1, "the dirty member, not an arena-global index");
+        assert_eq!(err.error.position, 3, "request-local position of the bad byte");
+    }
+
+    /// A payload big enough that the icu scalar engine chews on it for
+    /// tens of milliseconds — the pacer that holds a shard's worker
+    /// busy while small requests pile up behind it deterministically.
+    fn slow_payload() -> Vec<u8> {
+        "slow işçi 漢字 ".repeat(1 << 20).into_bytes()
+    }
+
+    #[test]
+    fn sharded_round_trip_all_directions() {
+        let config = ServiceConfig {
+            shards: 4,
+            queue_depth: 256,
+            engine: EngineChoice::Simd { validate: true },
+            ..Default::default()
+        };
+        let svc = ShardedService::start(config).expect("service");
+        let text = "sharded service: héllo 漢字 🙂 ".repeat(20);
+        let n = 25u64;
+        for i in 0..n {
+            let resp = match i % 5 {
+                0 => svc.transcode(Request::utf8(i, text.clone().into_bytes())),
+                1 => svc.transcode(Request::utf16(i, text.encode_utf16().collect())),
+                2 => svc.transcode(Request::latin1(i, vec![0xE9u8; 300])),
+                3 => svc.transcode(Request::utf8_lossy(i, text.clone().into_bytes())),
+                _ => svc.transcode(Request::utf8_to_latin1(i, "tête-à-tête".as_bytes().to_vec())),
+            };
+            assert_eq!(resp.fate, Fate::Completed, "request {i}");
+            assert_eq!(resp.id, i);
+            match i % 5 {
+                0 | 3 => assert_eq!(
+                    resp.utf16().unwrap(),
+                    &text.encode_utf16().collect::<Vec<_>>()[..]
+                ),
+                1 => assert_eq!(resp.utf8().unwrap(), text.as_bytes()),
+                2 => assert_eq!(resp.utf8().unwrap(), "é".repeat(300).as_bytes()),
+                _ => assert_eq!(
+                    resp.latin1().unwrap(),
+                    &[0x74, 0xEA, 0x74, 0x65, 0x2D, 0xE0, 0x2D, 0x74, 0xEA, 0x74, 0x65]
+                ),
+            }
+        }
+        let snap = svc.stats();
+        assert_eq!(snap.requests, n);
+        assert_eq!(snap.completed, n);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn small_requests_coalesce_into_batches_behind_a_pacer() {
+        let config = ServiceConfig {
+            shards: 1,
+            queue_depth: 64,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            batch_threshold: 4096,
+            ..Default::default()
+        };
+        let svc = ShardedService::start(config).expect("service");
+        // The pacer is far above batch_threshold: it runs one-shot and
+        // holds the single shard's worker while the smalls queue up.
+        let pacer = svc.submit(Request::utf8(0, slow_payload())).expect("pacer admitted");
+        let texts: Vec<String> =
+            (0..16).map(|i| format!("small batched payload {i} — çöälèsce 漢字")).collect();
+        let pending: Vec<_> = texts
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                svc.submit(Request::utf8(i as u64 + 1, t.clone().into_bytes()))
+                    .expect("small admitted")
+            })
+            .collect();
+        assert!(pacer.recv().expect("pacer answered").ok());
+        for (t, rx) in texts.iter().zip(pending) {
+            let resp = rx.recv().expect("answered");
+            assert_eq!(resp.fate, Fate::Completed);
+            assert_eq!(
+                resp.utf16().unwrap(),
+                &t.encode_utf16().collect::<Vec<_>>()[..],
+                "batched output must be bit-identical to the oracle"
+            );
+        }
+        let snap = svc.stats();
+        assert!(snap.batches >= 1, "no arena pass ran: {snap}");
+        assert!(snap.batched_requests >= 2, "nothing coalesced: {snap}");
+        assert!(
+            snap.batched_requests >= 2 * snap.batches,
+            "mean batch occupancy below 2: {snap}"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn idle_shards_steal_from_a_busy_sibling() {
+        let shards = 4;
+        // Ids that all hash to the same home shard: every job lands on
+        // one deque while three workers sit idle — they must steal.
+        let home = shard_for(9000, shards);
+        let colliding: Vec<u64> =
+            (9000..).filter(|&id| shard_for(id, shards) == home).take(9).collect();
+        let config = ServiceConfig {
+            shards,
+            queue_depth: 256,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            batch_threshold: 0, // solo jobs only: steals move them one by one
+            steal: StealPolicy::UrgentFirst,
+            ..Default::default()
+        };
+        let svc = ShardedService::start(config).expect("service");
+        let pacer = svc.submit(Request::utf8(colliding[0], slow_payload())).expect("admitted");
+        let text = "stolen but bit-identical ✓ 漢字";
+        let pending: Vec<_> = colliding[1..]
+            .iter()
+            .map(|&id| {
+                svc.submit(Request::utf8(id, text.as_bytes().to_vec())).expect("admitted")
+            })
+            .collect();
+        assert!(pacer.recv().expect("pacer answered").ok());
+        for rx in pending {
+            let resp = rx.recv().expect("answered");
+            assert_eq!(resp.fate, Fate::Completed);
+            assert_eq!(resp.utf16().unwrap(), &text.encode_utf16().collect::<Vec<_>>()[..]);
+        }
+        let snap = svc.stats();
+        assert!(snap.steals >= 1, "idle siblings never stole: {snap}");
+        assert_eq!(snap.completed, colliding.len() as u64);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn steal_prefers_highest_priority_then_oldest() {
+        // A hand-built pool: no workers, so the queue contents are
+        // exactly what the test placed there.
+        let pool = Pool {
+            shards: (0..2).map(|_| Shard::new(8)).collect(),
+            depth: 8,
+            overload: OverloadPolicy::Reject,
+            steal: StealPolicy::UrgentFirst,
+            batch_threshold: 0,
+            ladder: LadderState::new(),
+            seq: AtomicU64::new(0),
+        };
+        let mut receivers = Vec::new();
+        {
+            let mut state = pool.shards[1].state.lock().unwrap();
+            for (id, priority) in
+                [(1u64, Priority::Low), (2, Priority::High), (3, Priority::Normal), (4, Priority::High)]
+            {
+                let (tx, rx) = std::sync::mpsc::channel();
+                receivers.push(rx);
+                state.jobs.push_back(Job {
+                    request: Request::utf8(id, vec![b'x']).with_priority(priority),
+                    reply: tx,
+                });
+            }
+        }
+        let order: Vec<u64> = (0..4)
+            .map(|_| {
+                let m = try_steal(&pool, 0).expect("jobs remain");
+                assert!(m.stolen);
+                m.job.request.id
+            })
+            .collect();
+        // High before Normal before Low; the two Highs oldest-first.
+        assert_eq!(order, [2, 4, 3, 1]);
+        assert!(try_steal(&pool, 0).is_none(), "queue drained");
+    }
+
+    #[test]
+    fn full_shard_rejects_and_sheds_within_the_home_shard() {
+        let config = ServiceConfig {
+            shards: 1,
+            queue_depth: 2,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            batch_threshold: 0,
+            overload: OverloadPolicy::ShedOldest,
+            ..Default::default()
+        };
+        let svc = ShardedService::start(config).expect("service");
+        let _pacer = svc.submit(Request::utf8(0, slow_payload())).expect("admitted");
+        // Fill the depth-2 queue behind the pacer.
+        let low = svc
+            .try_submit(Request::utf8(1, b"low victim".to_vec()).with_priority(Priority::Low))
+            .expect("queued");
+        let _mid = svc
+            .try_submit(Request::utf8(2, b"normal survivor".to_vec()))
+            .expect("queued");
+        // A High newcomer evicts the Low oldest from the same shard.
+        let high = svc
+            .try_submit(Request::utf8(3, b"high newcomer".to_vec()).with_priority(Priority::High))
+            .expect("admitted by eviction");
+        let victim = low.recv().expect("victim notified");
+        assert_eq!(victim.fate, Fate::Shed);
+        assert!(high.recv().expect("answered").ok());
+        assert_eq!(svc.stats().sheds, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reject_policy_returns_full_and_zero_shards_clamps() {
+        let config = ServiceConfig {
+            shards: 0, // clamps to 1
+            queue_depth: 1,
+            engine: EngineChoice::Scalar,
+            parallel_threshold: usize::MAX,
+            batch_threshold: 0,
+            overload: OverloadPolicy::Reject,
+            ..Default::default()
+        };
+        let svc = ShardedService::start(config).expect("service");
+        let _pacer = svc.submit(Request::utf8(0, slow_payload())).expect("admitted");
+        let _queued = svc.try_submit(Request::utf8(1, b"fills the slot".to_vec())).expect("queued");
+        match svc.try_submit(Request::utf8(2, b"bounced".to_vec())) {
+            Err(SubmitError::Full(r)) => assert_eq!(r.id, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(svc.stats().rejected, 1);
+        svc.shutdown();
+    }
+}

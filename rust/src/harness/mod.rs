@@ -30,6 +30,7 @@
 //! throughput, and say so where they print.
 
 pub mod bench;
+pub mod loadgen;
 
 use crate::corpus::{generate_collection, Collection, Corpus, Language};
 use crate::counters::Counters;
@@ -1222,8 +1223,21 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
     let svc_shed_rate = burst_stats.sheds as f64 / burst_total;
     let svc_timeout_rate = burst_stats.timeouts as f64 / burst_total;
 
+    // v8: the sharded saturation sweep — every overload policy crossed
+    // with a shard ladder, driven by the deterministic load generator.
+    // `SIMDUTF_SHARDS_MAX` truncates the ladder (CI legs on small
+    // runners set it so one cell cannot dominate the wall clock).
+    let shard_requests: u64 = if budget.as_millis() >= 1000 { 1 << 17 } else { 256 };
+    let mut shard_ladder: Vec<usize> = vec![1, 2, 4, 8];
+    if let Ok(cap) = std::env::var("SIMDUTF_SHARDS_MAX") {
+        if let Ok(cap) = cap.trim().parse::<usize>() {
+            shard_ladder.retain(|&s| s <= cap.max(1));
+        }
+    }
+    let shard_rows = loadgen::sweep(shard_requests, &shard_ladder);
+
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"simdutf-rs-bench-v7\",\n");
+    out.push_str("  \"schema\": \"simdutf-rs-bench-v8\",\n");
     out.push_str("  \"unit\": \"input MB/s (min-of-iterations)\",\n");
     out.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
     out.push_str(&format!("  \"best\": \"{}\",\n", crate::simd::best_key()));
@@ -1254,6 +1268,27 @@ pub fn bench_json_with(budget: std::time::Duration) -> String {
     out.push_str(&format!("    \"shed_rate\": {svc_shed_rate:.4},\n"));
     out.push_str(&format!("    \"timeout_rate\": {svc_timeout_rate:.4},\n"));
     out.push_str(&format!("    \"throughput_mbps\": {svc_throughput_mbps:.1}\n"));
+    out.push_str("  },\n");
+    out.push_str("  \"shards\": {\n");
+    out.push_str(&format!("    \"requests_per_cell\": {shard_requests},\n"));
+    out.push_str(&format!(
+        "    \"batch_threshold\": {},\n",
+        crate::coordinator::ServiceConfig::default().batch_threshold
+    ));
+    let emit_shard_map =
+        |out: &mut String, name: &str, digits: usize, cell: &dyn Fn(&loadgen::LoadReport) -> f64, last: bool| {
+            out.push_str(&format!("    \"{name}\": {{\n"));
+            for (i, (key, report)) in shard_rows.iter().enumerate() {
+                let sep = if i + 1 < shard_rows.len() { "," } else { "" };
+                out.push_str(&format!("      \"{key}\": {:.digits$}{sep}\n", cell(report)));
+            }
+            out.push_str(if last { "    }\n" } else { "    },\n" });
+        };
+    emit_shard_map(&mut out, "throughput_mbps", 1, &|r| r.throughput_mbps, false);
+    emit_shard_map(&mut out, "steal_rate", 4, &|r| r.steal_rate, false);
+    emit_shard_map(&mut out, "batch_occupancy", 2, &|r| r.batch_occupancy, false);
+    emit_shard_map(&mut out, "p50_us", 1, &|r| r.p50_us, false);
+    emit_shard_map(&mut out, "p99_us", 1, &|r| r.p99_us, true);
     out.push_str("  }\n");
     out.push_str("}\n");
     out
@@ -1323,7 +1358,7 @@ mod tests {
         );
         assert!(json.contains("+dirty10"), "missing dirty cells:\n{json}");
         // v3: counting kernels and alloc-strategy head-to-head.
-        assert!(json.contains("\"simdutf-rs-bench-v7\""), "schema must be v7:\n{json}");
+        assert!(json.contains("\"simdutf-rs-bench-v8\""), "schema must be v8:\n{json}");
         // v6: the detected-ISA backend field.
         assert!(json.contains("\"backend\""), "missing backend field:\n{json}");
         assert!(
@@ -1376,6 +1411,23 @@ mod tests {
             assert!(json.contains(field), "missing service.{field}:\n{json}");
         }
         assert!(json.contains("\"shed-oldest\""), "burst phase must record its policy:\n{json}");
+        // v8: the sharded saturation sweep — five metric maps, every
+        // overload policy crossed with the shard ladder.
+        assert!(json.contains("\"shards\""), "missing shards section:\n{json}");
+        for field in ["\"requests_per_cell\"", "\"batch_threshold\""] {
+            assert!(json.contains(field), "missing shards.{field}:\n{json}");
+        }
+        for map in
+            ["\"throughput_mbps\"", "\"steal_rate\"", "\"batch_occupancy\"", "\"p50_us\"", "\"p99_us\""]
+        {
+            assert!(json.contains(map), "missing shards map {map}:\n{json}");
+        }
+        for policy in ["reject", "shed-oldest", "degrade"] {
+            assert!(
+                json.contains(&format!("\"{policy}@1\"")),
+                "missing shards row {policy}@1:\n{json}"
+            );
+        }
     }
 
     #[test]

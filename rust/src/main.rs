@@ -21,6 +21,7 @@
 //!     global coordinates — see the `parallel` module).
 //! simdutf-cli serve [--workers N] [--requests N] [--engine simd|scalar|xla|KEY] [--lossy]
 //!                   [--deadline-ms N] [--overload-policy reject|shed|degrade]
+//!                   [--shards N] [--batch-threshold B] [--steal disabled|urgent-first]
 //!     Run the streaming service against a synthetic workload and print
 //!     throughput/latency stats. KEY is any registry engine (see `engines`).
 //!     With --lossy the workload is 1%-corrupted and requests use the
@@ -30,6 +31,13 @@
 //!     --overload-policy picks what a full queue does: reject the
 //!     newcomer (default), shed the oldest lower-priority request, or
 //!     shed and step the service down the degradation ladder.
+//!     --shards N switches to the sharded, batching service: requests
+//!     hash to per-core shards, idle shards steal work (--steal picks
+//!     the policy), and queued small payloads below --batch-threshold
+//!     bytes coalesce into single-arena SIMD passes. The workload is
+//!     then the deterministic load-generator mix (sizes, directions,
+//!     priorities, deadlines) and the stats line adds steal rate and
+//!     batch occupancy.
 //! simdutf-cli engines
 //!     List every registered engine (key, name, validation, directions),
 //!     including the width-explicit `simd128`/`simd256`/`simd512`
@@ -37,8 +45,9 @@
 //! simdutf-cli bench-json [--out FILE] [--threads N]
 //!     Emit the machine-readable engine × corpus throughput matrix
 //!     (input MB/s for every registry key; see harness::bench_json),
-//!     including the v5 `parallel` thread-sweep section and the v7
-//!     `service` resilience profile, on a tiled
+//!     including the v5 `parallel` thread-sweep section, the v7
+//!     `service` resilience profile and the v8 `shards` saturation
+//!     sweep (`SIMDUTF_SHARDS_MAX` truncates its ladder), on a tiled
 //!     GB-scale corpus (smoke runs shrink it; override with
 //!     SIMDUTF_PAR_BENCH_BYTES). --threads N caps the sweep's thread
 //!     ladder. CI runs this in smoke mode (SIMDUTF_BENCH_BUDGET_MS=5)
@@ -425,6 +434,57 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         },
     };
+
+    // --shards N routes through the sharded, batching service driven by
+    // the deterministic load generator (the same runner the bench-json
+    // v8 `shards` section uses); without it the classic single-queue
+    // service below handles the workload.
+    if let Some(shards) = flag_value(args, "--shards").and_then(|v| v.parse::<usize>().ok()) {
+        let steal = match flag_value(args, "--steal") {
+            None => simdutf_rs::coordinator::StealPolicy::default(),
+            Some(p) => match p.parse() {
+                Ok(policy) => policy,
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    return 2;
+                }
+            },
+        };
+        let spec = simdutf_rs::harness::loadgen::LoadSpec {
+            requests: requests as u64,
+            shards,
+            batch_threshold: flag_value(args, "--batch-threshold")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(4096),
+            overload,
+            steal,
+            lossy_permille: if lossy { 1000 } else { 0 },
+            dirty_permille: if lossy { 1000 } else { 100 },
+            deadline_permille: if deadline.is_some() { 1000 } else { 50 },
+            deadline_ms: deadline.map(|d| d.as_millis() as u64).unwrap_or(250),
+            ..Default::default()
+        };
+        println!(
+            "starting sharded service: shards={shards} batch_threshold={} steal={steal} \
+             overload={overload} requests={requests}",
+            spec.batch_threshold
+        );
+        let report = simdutf_rs::harness::loadgen::run(&spec);
+        println!(
+            "completed {}/{} requests ({} failed/refused), {:.1} MB/s in, \
+             p50 {:.0} us, p99 {:.0} us, steal rate {:.4}, batch occupancy {:.2}",
+            report.completed,
+            report.submitted,
+            report.failed,
+            report.throughput_mbps,
+            report.p50_us,
+            report.p99_us,
+            report.steal_rate,
+            report.batch_occupancy
+        );
+        println!("{}", report.snapshot);
+        return 0;
+    }
 
     println!(
         "starting service: workers={workers} engine={engine:?} requests={requests} \

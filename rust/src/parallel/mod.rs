@@ -296,8 +296,10 @@ fn par_map<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
 }
 
 /// Partition `dst` into consecutive sub-slices of the planned sizes
-/// (which sum to `dst.len()` by construction).
-fn partition<'a, T>(mut dst: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
+/// (which sum to `dst.len()` by construction). Crate-visible: the
+/// coordinator's batching layer reuses it to carve per-request segments
+/// out of a shared output arena.
+pub(crate) fn partition<'a, T>(mut dst: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
     let mut parts = Vec::with_capacity(sizes.len());
     for &sz in sizes {
         let (head, rest) = std::mem::take(&mut dst).split_at_mut(sz);
@@ -468,8 +470,11 @@ fn finish16_strict(
 
 /// Strict chunk worker: engine over the bulk, scalar over the tail,
 /// frontier recovery if the engine's guard trips anyway. On success the
-/// chunk's exact output fills `out` completely.
-fn chunk16_strict<T: Utf8ToUtf16 + ?Sized>(
+/// chunk's exact output fills `out` completely. Crate-visible: the
+/// coordinator's batching layer runs it per request segment — the
+/// held-back scalar tail is what makes adjacent exactly-sized segments
+/// safe (no whole-register store past the segment end).
+pub(crate) fn chunk16_strict<T: Utf8ToUtf16 + ?Sized>(
     engine: &T,
     chunk: &[u8],
     out: &mut [u16],
@@ -619,8 +624,9 @@ fn finish8_strict(
 /// Strict chunk worker, UTF-16 → UTF-8 (see [`chunk16_strict`]). The
 /// planner's predictor is at-least-one-byte-per-word, so with the tail
 /// held back the engine's guard cannot trip even on garbage — the
-/// recovery arm is purely defensive here.
-fn chunk8_strict<T: Utf16ToUtf8 + ?Sized>(
+/// recovery arm is purely defensive here. Crate-visible for the
+/// coordinator's batching layer, like [`chunk16_strict`].
+pub(crate) fn chunk8_strict<T: Utf16ToUtf8 + ?Sized>(
     engine: &T,
     chunk: &[u16],
     out: &mut [u8],
@@ -947,8 +953,14 @@ impl<T: Utf16ToUtf8 + ?Sized> ParallelUtf16ToUtf8 for T {}
 /// keeps at least `EXACT_SLACK` bytes of tail headroom, matching the
 /// `*_vec` helpers' contract, so it cannot spuriously run out), exact
 /// scalar expansion over the tail. Latin-1 is fixed-width: no snapping,
-/// no encoding errors.
-fn chunk_latin1(k: &Latin1Kernels, chunk: &[u8], out: &mut [u8]) -> Result<(), TranscodeError> {
+/// no encoding errors. Crate-visible: the coordinator's batching layer
+/// runs one call over a whole concatenated gather (Latin-1 is stateless
+/// per byte, so concatenation is exactly equivalent to per-member runs).
+pub(crate) fn chunk_latin1(
+    k: &Latin1Kernels,
+    chunk: &[u8],
+    out: &mut [u8],
+) -> Result<(), TranscodeError> {
     let bulk_end = chunk.len().saturating_sub(PAR_TAIL_LATIN1);
     let (mut q, mut p) = match (k.latin1_to_utf8)(&chunk[..bulk_end], out) {
         Ok(n) => (n, bulk_end),

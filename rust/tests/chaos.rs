@@ -17,8 +17,8 @@
 //! deterministic tests below are built exactly that way.
 
 use simdutf_rs::coordinator::{
-    EngineChoice, Fate, FaultPlan, OverloadPolicy, Request, Response, Rung, ServiceConfig,
-    TranscodeService,
+    shard_for, EngineChoice, Fate, FaultPlan, OverloadPolicy, Request, Response, Rung,
+    ServiceConfig, ShardedService, StealPolicy, TranscodeService,
 };
 use simdutf_rs::prelude::*;
 use std::sync::mpsc::RecvTimeoutError;
@@ -271,5 +271,222 @@ fn degraded_rungs_are_bit_identical_to_one_shot_best() {
         let err = r.error().expect("invalid on every rung");
         assert_eq!((err.kind, err.position), (ErrorKind::Surrogate, 1), "error differs on {rung}");
     }
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Sharded-pool fault plans: the same invariants (exactly one outcome,
+// counter reconciliation, bit-identity) must survive work stealing and
+// arena batching. Requests here are aimed at a chosen home shard via
+// `shard_for`, so steal scenarios are deterministic by construction.
+// ---------------------------------------------------------------------
+
+/// Ids that all hash to shard `home` of an `n`-shard pool.
+fn colliding_ids(home: usize, n: usize, count: usize) -> Vec<u64> {
+    (0u64..).filter(|&id| shard_for(id, n) == home).take(count).collect()
+}
+
+/// The service-core ledger under sharding: every admitted request is
+/// accounted for by exactly one terminal counter.
+fn assert_reconciled(snap: &simdutf_rs::coordinator::StatsSnapshot) {
+    assert_eq!(
+        snap.requests,
+        snap.completed + snap.invalid + snap.rejected + snap.sheds + snap.timeouts + snap.panics,
+        "sharded ledger must reconcile: {snap}"
+    );
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "multi-hundred-ms stall schedule; miri_sharded_smoke covers the pool")]
+fn stalled_shard_forces_steals_and_every_request_resolves() {
+    // Shard 0's worker sleeps 150 ms at the top of every acquire loop,
+    // before its queue lock: jobs aimed at it sit unowned while the
+    // idle siblings come stealing.
+    let shards = 4;
+    let svc = ShardedService::start(ServiceConfig {
+        shards,
+        queue_depth: 64,
+        batch_threshold: 0, // solo jobs: this test is about stealing
+        steal: StealPolicy::UrgentFirst,
+        engine: EngineChoice::Simd { validate: true },
+        faults: FaultPlan { stall_shard: vec![(0, 150)], ..FaultPlan::default() },
+        ..Default::default()
+    })
+    .expect("service");
+    let rxs: Vec<_> = colliding_ids(0, shards, 10)
+        .into_iter()
+        .map(|id| svc.submit(Request::utf8(id, text_payload(id))).expect("admitted"))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().expect("exactly one response");
+        assert_eq!(resp.fate, Fate::Completed);
+        assert!(resp.ok(), "stolen or not, the payload is clean");
+    }
+    let snap = svc.stats();
+    assert_eq!(snap.requests, 10);
+    assert_eq!(snap.completed, 10);
+    assert!(snap.steals >= 1, "the stalled shard's jobs must have been stolen: {snap}");
+    assert_reconciled(&snap);
+    svc.shutdown();
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "stall-driven steal schedule; miri_sharded_smoke covers the pool")]
+fn panic_mid_steal_is_isolated_and_counted() {
+    // Every sequence number is on the mid-steal panic schedule, but the
+    // injection point only exists on the stolen path — so exactly the
+    // stolen jobs panic, and each panicking thief still answers the
+    // original submitter (who hashed to a different shard).
+    let shards = 3;
+    let svc = ShardedService::start(ServiceConfig {
+        shards,
+        queue_depth: 64,
+        batch_threshold: 0,
+        steal: StealPolicy::UrgentFirst,
+        engine: EngineChoice::Simd { validate: true },
+        faults: FaultPlan {
+            stall_shard: vec![(0, 150)],
+            panic_on_steal: (1..=32).collect(),
+            ..FaultPlan::default()
+        },
+        ..Default::default()
+    })
+    .expect("service");
+    let rxs: Vec<_> = colliding_ids(0, shards, 8)
+        .into_iter()
+        .map(|id| svc.submit(Request::utf8(id, text_payload(id))).expect("admitted"))
+        .collect();
+    let mut completed = 0u64;
+    let mut panicked = 0u64;
+    for rx in rxs {
+        match rx.recv().expect("exactly one response — panics are isolated") {
+            Response { fate: Fate::Completed, result: Ok(_), .. } => completed += 1,
+            Response { fate: Fate::Panicked, .. } => panicked += 1,
+            Response { fate, .. } => panic!("unexpected fate {fate} in this plan"),
+        }
+    }
+    assert_eq!(completed + panicked, 8, "every request resolves exactly once");
+    let snap = svc.stats();
+    assert!(snap.steals >= 1, "the stall must have provoked at least one steal: {snap}");
+    assert_eq!(snap.panics, panicked, "panic counter reconciles with observed fates");
+    assert_eq!(
+        snap.steals, panicked,
+        "the all-sequences schedule panics exactly the stolen jobs: {snap}"
+    );
+    assert_reconciled(&snap);
+    svc.shutdown();
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "paced batch schedule; miri_batch_smoke covers the arena path")]
+fn batch_arena_alloc_refusal_falls_back_and_degrades() {
+    // Job 1 (batch-ineligible: oversized) sleeps 100 ms in conversion
+    // while seven small strict requests queue behind it; they coalesce
+    // into one batch carrying dequeue sequences 2.., and sequence 2 is
+    // on the arena-refusal schedule. The batch must step the ladder
+    // down, fall back, and still serve every member bit-identically.
+    let svc = ShardedService::start(ServiceConfig {
+        shards: 1,
+        queue_depth: 64,
+        batch_threshold: 4096,
+        engine: EngineChoice::Simd { validate: true },
+        parallel_threshold: usize::MAX,
+        faults: FaultPlan {
+            slow_on: vec![(1, 100)],
+            batch_alloc_fail_on: vec![2],
+            ..FaultPlan::default()
+        },
+        ..Default::default()
+    })
+    .expect("service");
+    let pacer = text_payload(0).repeat(200); // > batch_threshold: ineligible
+    let pacer_rx = svc.submit(Request::utf8(1, pacer)).expect("pacer admitted");
+    let smalls: Vec<Vec<u8>> = (0..7).map(text_payload).collect();
+    let rxs: Vec<_> = smalls
+        .iter()
+        .enumerate()
+        .map(|(i, data)| {
+            svc.submit(Request::utf8(2 + i as u64, data.clone())).expect("small admitted")
+        })
+        .collect();
+    assert!(pacer_rx.recv().expect("pacer response").ok());
+    let best = Registry::global().get_utf8("best").expect("best");
+    for (rx, data) in rxs.into_iter().zip(&smalls) {
+        let resp = rx.recv().expect("exactly one response despite the refusal");
+        assert_eq!(resp.fate, Fate::Completed);
+        let reference = best.convert_to_vec(data).expect("payload is clean");
+        assert_eq!(resp.utf16().expect("served"), &reference[..], "fallback must be bit-identical");
+    }
+    let snap = svc.stats();
+    assert_eq!(snap.completed, 8);
+    assert!(
+        snap.batch_fallbacks >= 1,
+        "the scheduled arena refusal must have fired: {snap}"
+    );
+    assert!(snap.degraded >= 1, "memory pressure steps the ladder down: {snap}");
+    assert!(svc.degrade_rung() != Rung::Configured, "7 completions < recovery window");
+    assert_reconciled(&snap);
+    svc.shutdown();
+}
+
+#[test]
+fn miri_sharded_smoke() {
+    // Tiny sharded run for the Miri leg: hash admission, per-shard
+    // workers, condvar handoff and teardown under the interpreter.
+    let svc = ShardedService::start(ServiceConfig {
+        shards: 2,
+        queue_depth: 8,
+        batch_threshold: 0,
+        engine: EngineChoice::Scalar,
+        faults: FaultPlan::none(),
+        ..Default::default()
+    })
+    .expect("service");
+    for id in 0..4u64 {
+        let resp = svc.transcode(Request::utf8(id, format!("miri #{id} héllo").into_bytes()));
+        assert_eq!(resp.fate, Fate::Completed);
+        assert!(resp.ok());
+    }
+    let snap = svc.stats();
+    assert_eq!(snap.completed, 4);
+    assert_reconciled(&snap);
+    svc.shutdown();
+}
+
+#[test]
+fn miri_batch_smoke() {
+    // The arena path under Miri: a slowed first job lets the remaining
+    // small requests queue so the coalescer has material; whether a
+    // batch forms is timing-dependent, but the outputs and the ledger
+    // must be exact either way (the arena's fill_uninit skips its
+    // poison pre-fill under Miri, so initialization is tracked for
+    // real).
+    let svc = ShardedService::start(ServiceConfig {
+        shards: 1,
+        queue_depth: 8,
+        batch_threshold: 4096,
+        engine: EngineChoice::Scalar,
+        parallel_threshold: usize::MAX,
+        faults: FaultPlan { slow_on: vec![(1, 50)], ..FaultPlan::default() },
+        ..Default::default()
+    })
+    .expect("service");
+    let pacer_rx = svc.submit(Request::utf8(1, text_payload(1))).expect("pacer admitted");
+    let rxs: Vec<_> = (2..=4u64)
+        .map(|id| {
+            svc.submit(Request::utf8(id, format!("batch member {id} é漢").into_bytes()))
+                .expect("admitted")
+        })
+        .collect();
+    assert!(pacer_rx.recv().expect("pacer").ok());
+    for (id, rx) in (2..=4u64).zip(rxs) {
+        let resp = rx.recv().expect("exactly one response");
+        assert!(resp.ok(), "member {id} must be served");
+        let expected: Vec<u16> = format!("batch member {id} é漢").encode_utf16().collect();
+        assert_eq!(resp.utf16().expect("served"), &expected[..]);
+    }
+    let snap = svc.stats();
+    assert_eq!(snap.completed, 4);
+    assert_reconciled(&snap);
     svc.shutdown();
 }

@@ -1,0 +1,286 @@
+//! Differential suite for the sharded, batching service: everything it
+//! serves — batched through the coalesced arena or solo, stolen or
+//! home-run — must be **bit-identical** to the one-at-a-time oracle
+//! (the classic single-queue service on the `best` one-shot engines):
+//!
+//! 1. ∀ validating engines × clean + every `DIRT_PROFILES` profile ×
+//!    boundary payload sizes (0, 1, register-width ± 1,
+//!    `batch_threshold` ± 1): identical outputs on success, identical
+//!    error *kinds* and **request-local** error positions on strict
+//!    failure (the batch path converts inside a shared arena, so a
+//!    wrong re-localization shows up here as an arena-coordinate
+//!    position).
+//! 2. 400 seeded randomized batches of mixed direction / dirt / lossy /
+//!    priority requests, each compared member-for-member against the
+//!    per-request oracle.
+//! 3. A paced coverage run proving the batching layer actually engaged
+//!    (`batches ≥ 1`, `batched_requests ≥ 2`) while staying identical.
+
+use simdutf_rs::coordinator::{
+    EngineChoice, Fate, Request, Response, ServiceConfig, ShardedService, TranscodeService,
+};
+use simdutf_rs::corpus::{
+    corrupt_utf16, corrupt_utf8, Collection, Corpus, Language, SplitMix64, DIRT_PROFILES,
+};
+use simdutf_rs::engine::Registry;
+
+const BATCH_THRESHOLD: usize = 4096;
+
+/// Boundary-hunting payload sizes in input *bytes*: empty, single unit,
+/// 128/256/512-bit register edges, and the batching threshold edges.
+const UTF8_SIZES: &[usize] = &[0, 1, 15, 16, 17, 31, 32, 33, 63, 64, 65, 4095, 4096, 4097];
+/// The same edges in UTF-16 *words* (threshold is in input bytes, so
+/// 2047/2048/2049 words straddle the 4096-byte batching edge).
+const UTF16_SIZES: &[usize] = &[0, 1, 7, 8, 9, 31, 32, 33, 2047, 2048, 2049];
+
+fn sharded(engine: EngineChoice, shards: usize) -> ShardedService {
+    ShardedService::start(ServiceConfig {
+        shards,
+        queue_depth: 4096,
+        batch_threshold: BATCH_THRESHOLD,
+        engine,
+        // Keep even the pacer payloads on the one-shot path so worker
+        // occupancy (and therefore coalescing) is predictable.
+        parallel_threshold: usize::MAX,
+        ..Default::default()
+    })
+    .expect("sharded service")
+}
+
+fn oracle() -> TranscodeService {
+    TranscodeService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 4096,
+        engine: EngineChoice::Simd { validate: true },
+        parallel_threshold: usize::MAX,
+        ..Default::default()
+    })
+    .expect("oracle service")
+}
+
+/// The suite's definition of "bit-identical": same fate, same success,
+/// same output payload, same replacement count, and on strict failure
+/// the same error kind at the same request-local position.
+fn assert_identical(got: &Response, want: &Response, ctx: &str) {
+    assert_eq!(got.fate, want.fate, "{ctx}: fate");
+    assert_eq!(got.ok(), want.ok(), "{ctx}: success");
+    if got.ok() {
+        assert_eq!(got.utf16(), want.utf16(), "{ctx}: utf16 output");
+        assert_eq!(got.utf8(), want.utf8(), "{ctx}: utf8 output");
+        assert_eq!(got.latin1(), want.latin1(), "{ctx}: latin1 output");
+        assert_eq!(got.replacements, want.replacements, "{ctx}: replacements");
+    } else {
+        let (g, w) = (got.error().expect(ctx), want.error().expect(ctx));
+        assert_eq!(g.kind, w.kind, "{ctx}: error kind");
+        assert_eq!(
+            g.position, w.position,
+            "{ctx}: error position must be request-local, not arena-local"
+        );
+    }
+}
+
+/// Submit the whole set, then drain: with one shard this queues the
+/// requests behind each other, giving the batching layer consecutive
+/// runs to coalesce; correctness must not depend on whether it did.
+fn drain(svc: &ShardedService, requests: Vec<Request>) -> Vec<Response> {
+    let rxs: Vec<_> = requests
+        .into_iter()
+        .map(|r| svc.submit(r).expect("admission (queue_depth covers the suite)"))
+        .collect();
+    rxs.into_iter().map(|rx| rx.recv().expect("exactly one response")).collect()
+}
+
+#[test]
+fn utf8_payloads_match_oracle_for_every_validating_engine() {
+    let corpus = Corpus::generate(Language::Czech, Collection::Lipsum);
+    let oracle = oracle();
+    for entry in Registry::global().utf8_entries().iter().filter(|e| e.engine.validating()) {
+        let svc = sharded(EngineChoice::Named(entry.key.to_string()), 1);
+        let mut id = 0u64;
+        let mut cases: Vec<(String, Vec<u8>)> = Vec::new();
+        for &size in UTF8_SIZES {
+            let clean = corpus.utf8_prefix(size).to_vec();
+            for profile in DIRT_PROFILES {
+                let dirty = corrupt_utf8(&clean, profile.permille, size as u64);
+                cases.push((format!("{}/{size}/{}", entry.key, profile.label), dirty));
+            }
+            cases.push((format!("{}/{size}/clean", entry.key), clean));
+        }
+        let requests = cases
+            .iter()
+            .map(|(_, data)| {
+                id += 1;
+                Request::utf8(id, data.clone())
+            })
+            .collect();
+        let responses = drain(&svc, requests);
+        for ((ctx, data), got) in cases.iter().zip(&responses) {
+            let want = oracle.transcode(Request::utf8(0, data.clone()));
+            assert_identical(got, &want, ctx);
+        }
+        svc.shutdown();
+    }
+    oracle.shutdown();
+}
+
+#[test]
+fn utf16_payloads_match_oracle_for_every_validating_engine() {
+    let corpus = Corpus::generate(Language::Greek, Collection::Lipsum);
+    let oracle = oracle();
+    for entry in Registry::global().utf16_entries().iter().filter(|e| e.engine.validating()) {
+        let svc = sharded(EngineChoice::Named(entry.key.to_string()), 1);
+        let mut id = 0u64;
+        let mut cases: Vec<(String, Vec<u16>)> = Vec::new();
+        for &words in UTF16_SIZES {
+            let clean = corpus.utf16_prefix(words).to_vec();
+            for profile in DIRT_PROFILES {
+                let dirty = corrupt_utf16(&clean, profile.permille, words as u64);
+                cases.push((format!("{}/{words}w/{}", entry.key, profile.label), dirty));
+            }
+            cases.push((format!("{}/{words}w/clean", entry.key), clean));
+        }
+        let requests = cases
+            .iter()
+            .map(|(_, data)| {
+                id += 1;
+                Request::utf16(id, data.clone())
+            })
+            .collect();
+        let responses = drain(&svc, requests);
+        for ((ctx, data), got) in cases.iter().zip(&responses) {
+            let want = oracle.transcode(Request::utf16(0, data.clone()));
+            assert_identical(got, &want, ctx);
+        }
+        svc.shutdown();
+    }
+    oracle.shutdown();
+}
+
+#[test]
+fn latin1_payloads_match_oracle_at_every_boundary_size() {
+    // Every byte is valid Latin-1, so adversarial payloads are just
+    // high-bit-dense random bytes at the boundary sizes.
+    let mut rng = SplitMix64::new(0x1a71);
+    let oracle = oracle();
+    let svc = sharded(EngineChoice::Simd { validate: true }, 1);
+    let mut id = 0u64;
+    let cases: Vec<(String, Vec<u8>)> = UTF8_SIZES
+        .iter()
+        .map(|&size| {
+            let data: Vec<u8> = (0..size).map(|_| rng.next_u64() as u8 | 0x80).collect();
+            (format!("latin1/{size}"), data)
+        })
+        .collect();
+    let requests = cases
+        .iter()
+        .map(|(_, data)| {
+            id += 1;
+            Request::latin1(id, data.clone())
+        })
+        .collect();
+    let responses = drain(&svc, requests);
+    for ((ctx, data), got) in cases.iter().zip(&responses) {
+        let want = oracle.transcode(Request::latin1(0, data.clone()));
+        assert_identical(got, &want, ctx);
+    }
+    svc.shutdown();
+    oracle.shutdown();
+}
+
+#[test]
+fn randomized_mixed_batches_match_oracle_over_400_seeds() {
+    let utf8_corpus = Corpus::generate(Language::Japanese, Collection::Lipsum);
+    let utf16_corpus = Corpus::generate(Language::Hebrew, Collection::Lipsum);
+    let oracle = oracle();
+    let svc = sharded(EngineChoice::Simd { validate: true }, 2);
+    let mut id = 0u64;
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(seed);
+        let n = 2 + rng.below(7) as usize;
+        // Requests are not Clone: build each member's payload once and
+        // construct the sharded and oracle requests from the same data.
+        let mut batch: Vec<Request> = Vec::with_capacity(n);
+        let mut oracle_reqs: Vec<Request> = Vec::with_capacity(n);
+        for _ in 0..n {
+            id += 1;
+            let size = 1 + rng.below(BATCH_THRESHOLD as u64 - 1) as usize;
+            let lossy = rng.below(4) == 0;
+            let dirty = rng.below(3) == 0;
+            match rng.below(3) {
+                0 => {
+                    let mut data = utf16_corpus.utf16_prefix(size / 2).to_vec();
+                    if dirty {
+                        data = corrupt_utf16(&data, 20, rng.next_u64());
+                    }
+                    if lossy {
+                        batch.push(Request::utf16_lossy(id, data.clone()));
+                        oracle_reqs.push(Request::utf16_lossy(id, data));
+                    } else {
+                        batch.push(Request::utf16(id, data.clone()));
+                        oracle_reqs.push(Request::utf16(id, data));
+                    }
+                }
+                1 => {
+                    let data: Vec<u8> = (0..size).map(|_| rng.next_u64() as u8).collect();
+                    batch.push(Request::latin1(id, data.clone()));
+                    oracle_reqs.push(Request::latin1(id, data));
+                }
+                _ => {
+                    let mut data = utf8_corpus.utf8_prefix(size).to_vec();
+                    if dirty {
+                        data = corrupt_utf8(&data, 20, rng.next_u64());
+                    }
+                    if lossy {
+                        batch.push(Request::utf8_lossy(id, data.clone()));
+                        oracle_reqs.push(Request::utf8_lossy(id, data));
+                    } else {
+                        batch.push(Request::utf8(id, data.clone()));
+                        oracle_reqs.push(Request::utf8(id, data));
+                    }
+                }
+            }
+        }
+        let responses = drain(&svc, batch);
+        for (i, (got, req)) in responses.iter().zip(oracle_reqs).enumerate() {
+            let want = oracle.transcode(req);
+            assert_identical(got, &want, &format!("seed {seed} member {i}"));
+        }
+    }
+    svc.shutdown();
+    oracle.shutdown();
+}
+
+#[test]
+fn batching_engages_behind_a_pacer_and_stays_identical() {
+    // Scalar configured engines are slow enough that a ~21 MB one-shot
+    // pacer reliably holds the single shard's worker while the small
+    // requests queue up behind it and coalesce.
+    let svc = sharded(EngineChoice::Scalar, 1);
+    let oracle = oracle();
+    let pacer = "pace işçi 漢字 🙂 ".repeat(1 << 20).into_bytes();
+    let pacer_rx = svc.submit(Request::utf8(1, pacer)).expect("pacer admitted");
+    let corpus = Corpus::generate(Language::French, Collection::Lipsum);
+    let smalls: Vec<Vec<u8>> =
+        (0..16).map(|i| corpus.utf8_prefix(64 + i * 96).to_vec()).collect();
+    let rxs: Vec<_> = smalls
+        .iter()
+        .enumerate()
+        .map(|(i, data)| {
+            svc.submit(Request::utf8(2 + i as u64, data.clone())).expect("small admitted")
+        })
+        .collect();
+    assert!(pacer_rx.recv().expect("pacer response").ok());
+    for (i, (rx, data)) in rxs.into_iter().zip(&smalls).enumerate() {
+        let got = rx.recv().expect("exactly one response");
+        assert_eq!(got.fate, Fate::Completed);
+        let want = oracle.transcode(Request::utf8(0, data.clone()));
+        assert_identical(&got, &want, &format!("paced small {i}"));
+    }
+    let snap = svc.stats();
+    assert!(snap.batches >= 1, "the batching layer never engaged: {snap}");
+    assert!(snap.batched_requests >= 2, "batches must carry ≥ 2 members: {snap}");
+    assert_eq!(snap.requests, 17);
+    assert_eq!(snap.completed, 17);
+    svc.shutdown();
+    oracle.shutdown();
+}

@@ -26,11 +26,13 @@
 //!    a `// xtask: allow-no-portable-mirror (reason)` waiver.
 //! 4. **BENCH artifact schema** — every checked-in
 //!    `artifacts/BENCH_*.json` parses (hand-rolled JSON reader) and
-//!    validates against the documented schema v7
+//!    validates against the documented schema v8
 //!    (`docs/BENCHMARKING.md`), with its engine/kernel/parallel row
 //!    sets tied to the keys parsed from `engine.rs` in rule 2 — the
-//!    artifacts cannot drift from the registry. v7 adds the `service`
-//!    resilience section (latency percentiles, shed/timeout rates).
+//!    artifacts cannot drift from the registry. v7 added the `service`
+//!    resilience section (latency percentiles, shed/timeout rates);
+//!    v8 adds the `shards` saturation sweep (`<policy>@<shards>` rows
+//!    of throughput, steal rate, batch occupancy and percentiles).
 //!
 //! Usage:
 //!
@@ -594,6 +596,7 @@ const REQUIRED_ACCESSORS: &[(&str, &[&str])] = &[
         "utf16_entries()",
         "latin1_entries()",
     ]),
+    ("rust/tests/shard_differential.rs", &["utf8_entries()", "utf16_entries()"]),
     ("benches/utf8_to_utf16.rs", &["utf8_entries()"]),
     ("benches/utf16_to_utf8.rs", &["utf16_entries()"]),
     ("benches/lossy.rs", &["utf8_lossy_entries()", "utf16_lossy_entries()"]),
@@ -902,10 +905,10 @@ impl JsonParser<'_> {
 }
 
 // ---------------------------------------------------------------------------
-// Rule 4: BENCH artifact schema v7
+// Rule 4: BENCH artifact schema v8
 // ---------------------------------------------------------------------------
 
-const SCHEMA_V7: &str = "simdutf-rs-bench-v7";
+const SCHEMA_V8: &str = "simdutf-rs-bench-v8";
 
 fn check_bench_artifacts(root: &Path, keys: &RegistryKeys, diags: &mut Vec<String>) {
     let dir = root.join("artifacts");
@@ -982,7 +985,7 @@ fn check_section(
     }
 }
 
-/// Validate one BENCH json document against schema v7
+/// Validate one BENCH json document against schema v8
 /// (`docs/BENCHMARKING.md`), with the row sets tied to the engine keys
 /// parsed from `engine.rs`.
 fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut Vec<String>) {
@@ -994,9 +997,9 @@ fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut V
         }
     };
     match doc.get("schema") {
-        Some(Json::Str(s)) if s == SCHEMA_V7 => {}
+        Some(Json::Str(s)) if s == SCHEMA_V8 => {}
         other => {
-            diags.push(format!("{label}: schema must be \"{SCHEMA_V7}\", got {other:?}"));
+            diags.push(format!("{label}: schema must be \"{SCHEMA_V8}\", got {other:?}"));
             return;
         }
     }
@@ -1118,6 +1121,8 @@ fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut V
         _ => diags.push(format!("{label}: missing or non-object section \"service\" (v7)")),
     }
 
+    check_shards_section(label, doc.get("shards"), diags);
+
     // Parallel section: <engine>@<threads> rows over the fixed ladder.
     let Some(par) = doc.get("parallel") else {
         diags.push(format!("{label}: missing section \"parallel\""));
@@ -1154,6 +1159,78 @@ fn check_bench_schema(label: &str, src: &str, keys: &RegistryKeys, diags: &mut V
         }
         for (k, row) in pairs {
             check_row(label, &format!("parallel.{dir}"), k, row, diags);
+        }
+    }
+}
+
+/// The sharded saturation sweep (v8): exactly the five metric maps plus
+/// the two header fields; every row is `<policy>@<shards>` over the
+/// fixed policy set and shard ladder; the five maps carry identical row
+/// sets (a sweep that dropped a metric for one cell is a schema bug,
+/// not a smaller run); every policy appears even when the ladder is
+/// truncated; cells are numbers or null (placeholder artifacts).
+fn check_shards_section(label: &str, v: Option<&Json>, diags: &mut Vec<String>) {
+    const METRICS: [&str; 5] =
+        ["throughput_mbps", "steal_rate", "batch_occupancy", "p50_us", "p99_us"];
+    const POLICIES: [&str; 3] = ["reject", "shed-oldest", "degrade"];
+    let Some(obj @ Json::Obj(_)) = v else {
+        diags.push(format!("{label}: missing or non-object section \"shards\" (v8)"));
+        return;
+    };
+    let want: BTreeSet<&str> = ["requests_per_cell", "batch_threshold"]
+        .into_iter()
+        .chain(METRICS)
+        .collect();
+    let got = obj.keys();
+    if got != want {
+        diags.push(format!("{label}: shards subsections {got:?} != {want:?}"));
+    }
+    for field in ["requests_per_cell", "batch_threshold"] {
+        if !matches!(obj.get(field), Some(Json::Num(_) | Json::Null)) {
+            diags.push(format!("{label}: shards.{field} must be a number or null"));
+        }
+    }
+    let mut first_rows: Option<(&str, BTreeSet<&str>)> = None;
+    for metric in METRICS {
+        let Some(map @ Json::Obj(cells)) = obj.get(metric) else {
+            diags.push(format!("{label}: shards.{metric} missing or not an object"));
+            continue;
+        };
+        let mut policies_seen: BTreeSet<&str> = BTreeSet::new();
+        for k in map.keys() {
+            match k.split_once('@') {
+                Some((policy, shards))
+                    if POLICIES.contains(&policy)
+                        && matches!(shards, "1" | "2" | "4" | "8") =>
+                {
+                    policies_seen.insert(policy);
+                }
+                _ => diags.push(format!(
+                    "{label}: shards.{metric} row \"{k}\" is not \
+                     <reject|shed-oldest|degrade>@<1|2|4|8>"
+                )),
+            }
+        }
+        // The shard ladder may be truncated (SIMDUTF_SHARDS_MAX) but
+        // every policy must appear...
+        for p in POLICIES {
+            if !policies_seen.contains(p) {
+                diags.push(format!("{label}: shards.{metric} has no rows for policy \"{p}\""));
+            }
+        }
+        // ...and the five metric maps must agree on the exact row set.
+        let rows = map.keys();
+        match &first_rows {
+            None => first_rows = Some((metric, rows)),
+            Some((first, expected)) if *expected != rows => diags.push(format!(
+                "{label}: shards.{metric} rows {rows:?} differ from shards.{first} {expected:?}"
+            )),
+            Some(_) => {}
+        }
+        for (k, cell) in cells {
+            if !matches!(cell, Json::Num(_) | Json::Null) {
+                diags.push(format!("{label}: shards.{metric}.{k} must be a number or null"));
+            }
         }
     }
 }
@@ -1356,6 +1433,15 @@ mod tests {
     "utf8_to_utf16": {{{parallel_rows}}},
     "utf16_to_utf8": {{{parallel_rows}}}
   }},
+  "shards": {{
+    "requests_per_cell": null,
+    "batch_threshold": null,
+    "throughput_mbps": {{"reject@1": null, "shed-oldest@1": null, "degrade@1": null}},
+    "steal_rate": {{"reject@1": null, "shed-oldest@1": null, "degrade@1": null}},
+    "batch_occupancy": {{"reject@1": null, "shed-oldest@1": null, "degrade@1": null}},
+    "p50_us": {{"reject@1": null, "shed-oldest@1": null, "degrade@1": null}},
+    "p99_us": {{"reject@1": null, "shed-oldest@1": null, "degrade@1": null}}
+  }},
   "service": {{
     "requests": null,
     "workers": null,
@@ -1373,15 +1459,16 @@ mod tests {
     }
 
     #[test]
-    fn well_formed_v7_bench_passes() {
-        let src = minimal_bench(SCHEMA_V7, "\"simd128@1\": null, \"best@4\": null");
+    fn well_formed_v8_bench_passes() {
+        let src = minimal_bench(SCHEMA_V8, "\"simd128@1\": null, \"best@4\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert!(d.is_empty(), "{d:?}");
     }
 
     #[test]
     fn wrong_schema_version_is_rejected() {
-        let src = minimal_bench("simdutf-rs-bench-v6", "\"simd128@1\": null, \"best@1\": null");
+        // Yesterday's schema is a violation, not a grandfather case.
+        let src = minimal_bench("simdutf-rs-bench-v7", "\"simd128@1\": null, \"best@1\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert_eq!(d.len(), 1, "{d:?}");
         assert!(d[0].contains("schema must be"), "{d:?}");
@@ -1390,7 +1477,7 @@ mod tests {
     #[test]
     fn missing_or_malformed_service_section_is_rejected() {
         // Missing entirely…
-        let src = minimal_bench(SCHEMA_V7, "\"simd128@1\": null, \"best@1\": null");
+        let src = minimal_bench(SCHEMA_V8, "\"simd128@1\": null, \"best@1\": null");
         let start = src.find("  \"service\"").unwrap();
         let end = src[start..].find("}\n").unwrap() + start + 2;
         let gutted = format!("{}{}", &src[..start - 2], &src[end..]); // also eat the ",\n"
@@ -1404,7 +1491,7 @@ mod tests {
 
     #[test]
     fn unknown_engine_row_is_rejected() {
-        let src = minimal_bench(SCHEMA_V7, "\"simd128@1\": null, \"best@1\": null")
+        let src = minimal_bench(SCHEMA_V8, "\"simd128@1\": null, \"best@1\": null")
             .replace("\"icu\": null, \"simd128\": null", "\"typo\": null, \"simd128\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert!(d.iter().any(|m| m.contains("unknown row \"typo\"")), "{d:?}");
@@ -1412,8 +1499,39 @@ mod tests {
     }
 
     #[test]
+    fn missing_or_malformed_shards_section_is_rejected() {
+        let good = minimal_bench(SCHEMA_V8, "\"simd128@1\": null, \"best@1\": null");
+        // Missing entirely…
+        let start = good.find("  \"shards\"").unwrap();
+        let end = good[start..].find("\n  },\n").unwrap() + start + 6;
+        let gutted = format!("{}{}", &good[..start], &good[end..]);
+        let d = diags_of(|d| check_bench_schema("b.json", &gutted, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("\"shards\"")), "{d:?}");
+        // …with a row key outside the policy set…
+        let bad = good.replace("\"degrade@1\": null", "\"drop@1\": null");
+        let d = diags_of(|d| check_bench_schema("b.json", &bad, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("row \"drop@1\"")), "{d:?}");
+        assert!(d.iter().any(|m| m.contains("no rows for policy \"degrade\"")), "{d:?}");
+        // …with a shard count off the ladder…
+        let bad = good.replace("\"reject@1\": null", "\"reject@3\": null");
+        let d = diags_of(|d| check_bench_schema("b.json", &bad, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("row \"reject@3\"")), "{d:?}");
+        // …with the five metric maps disagreeing on the row set…
+        let bad = good.replacen("\"steal_rate\": {\"reject@1\": null, ", "\"steal_rate\": {", 1);
+        let d = diags_of(|d| check_bench_schema("b.json", &bad, &fake_keys(), d));
+        assert!(
+            d.iter().any(|m| m.contains("differ from shards.throughput_mbps")),
+            "{d:?}"
+        );
+        // …and with a non-numeric cell.
+        let bad = good.replace("\"p99_us\": {\"reject@1\": null", "\"p99_us\": {\"reject@1\": \"fast\"");
+        let d = diags_of(|d| check_bench_schema("b.json", &bad, &fake_keys(), d));
+        assert!(d.iter().any(|m| m.contains("p99_us.reject@1")), "{d:?}");
+    }
+
+    #[test]
     fn malformed_parallel_cell_is_rejected() {
-        let src = minimal_bench(SCHEMA_V7, "\"simd128@3\": null, \"best@1\": null");
+        let src = minimal_bench(SCHEMA_V8, "\"simd128@3\": null, \"best@1\": null");
         let d = diags_of(|d| check_bench_schema("b.json", &src, &fake_keys(), d));
         assert!(d.iter().any(|m| m.contains("simd128@3")), "{d:?}");
         assert!(
